@@ -1,0 +1,4 @@
+//! Bench: design-choice ablations (x-parameter, 2N realisation, MCF λ).
+fn main() {
+    println!("{}", ees::experiments::ablations::run());
+}

@@ -1,0 +1,11 @@
+//! Bench: Figure 1 / Table 15 — memory on T^7 vs step count.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let steps: Vec<usize> = if full {
+        vec![5, 10, 20, 50, 100, 200, 400, 800, 2000, 5000, 10000]
+    } else {
+        vec![5, 20, 100, 400]
+    };
+    let batch = if full { 64 } else { 4 };
+    println!("{}", ees::experiments::fig1::run(batch, &steps));
+}

@@ -1,0 +1,4 @@
+//! Bench: Figure 2 — absolute stability domains (with ASCII rendering).
+fn main() {
+    println!("{}", ees::experiments::fig2::run(true));
+}

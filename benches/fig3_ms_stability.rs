@@ -1,0 +1,5 @@
+//! Bench: Figure 3 — mean-square stability cross-sections.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    println!("{}", ees::experiments::fig3::run(if full { 20000 } else { 2000 }));
+}

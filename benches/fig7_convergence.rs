@@ -1,0 +1,6 @@
+//! Bench: Figure 7 — EES convergence under fBm drivers.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    println!("{}", ees::experiments::fig7::run(scale));
+}

@@ -1,0 +1,6 @@
+//! Bench: Figure 8 — CF-EES convergence on the SO(3) RDE.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    println!("{}", ees::experiments::fig8::run(scale));
+}

@@ -1,0 +1,6 @@
+//! Bench: Figure 9 — EES(2,7) vs EES(2,5) under non-smooth fields.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    println!("{}", ees::experiments::fig9::run(scale));
+}

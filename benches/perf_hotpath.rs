@@ -1,0 +1,113 @@
+//! Perf bench: the L3 hot paths — batched EES(2,5) stepping and the
+//! reversible-adjoint forward+backward sweep — timed with the in-crate
+//! harness. This is the target of the EXPERIMENTS.md §Perf iteration log.
+
+use ees::adjoint::AdjointMethod;
+use ees::bench::bench;
+use ees::coordinator::batch_grad_euclidean;
+use ees::lie::TTorus;
+use ees::losses::MomentMatch;
+use ees::nn::neural_sde::{NeuralSde, TorusNeuralSde};
+use ees::rng::{BrownianPath, Pcg64};
+use ees::solvers::{CfEes, LowStorageStepper, ManifoldStepper, Stepper};
+use ees::vf::DiffVectorField;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let iters = if full { 30 } else { 10 };
+
+    // --- hot path 1: batched Euclidean EES(2,5) forward stepping ---------
+    {
+        let mut rng = Pcg64::new(1);
+        let dim = 32;
+        let model = NeuralSde::lsde(dim, 64, 2, false, &mut rng);
+        let st = LowStorageStepper::ees25();
+        let steps = 100;
+        let h = 0.01;
+        let path = BrownianPath::sample(&mut rng, dim, steps, h);
+        let mut state = vec![0.1; dim];
+        let s = bench("euclidean_ees25_forward_100steps_d32", 2, iters, || {
+            let mut y = state.clone();
+            for n in 0..steps {
+                st.step(&model, n as f64 * h, h, path.increment(n), &mut y);
+            }
+            state[0] = state[0].max(-1e308); // keep side effect
+            std::hint::black_box(&y);
+        });
+        println!("{}", s.report());
+        let evals = steps * 3;
+        println!(
+            "  -> {:.2} us/vf-eval (dim {dim}, width 64)",
+            s.mean_secs * 1e6 / evals as f64
+        );
+    }
+
+    // --- hot path 2: reversible adjoint fwd+bwd (training inner loop) ----
+    {
+        let mut rng = Pcg64::new(2);
+        let dim = 8;
+        let model = NeuralSde::lsde(dim, 32, 2, false, &mut rng);
+        let st = LowStorageStepper::ees25();
+        let steps = 50;
+        let h = 0.02;
+        let batch = 16;
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.1; dim]).collect();
+        let paths: Vec<BrownianPath> = (0..batch)
+            .map(|_| BrownianPath::sample(&mut rng, dim, steps, h))
+            .collect();
+        let obs = vec![steps];
+        let loss = MomentMatch {
+            target_mean: vec![0.0; dim],
+            target_m2: vec![1.0; dim],
+        };
+        let s = bench("reversible_adjoint_fwd_bwd_b16_s50_d8", 1, iters, || {
+            let out = batch_grad_euclidean(
+                &st,
+                AdjointMethod::Reversible,
+                &model,
+                &y0s,
+                &paths,
+                &obs,
+                &loss,
+            );
+            std::hint::black_box(&out);
+        });
+        println!("{}", s.report());
+        println!(
+            "  -> {:.2} us/step incl. backprop ({} params)",
+            s.mean_secs * 1e6 / (batch * steps) as f64,
+            model.num_params()
+        );
+    }
+
+    // --- hot path 3: CF-EES stepping on T T^N (geometric hot loop) -------
+    {
+        let n_osc = if full { 1000 } else { 100 };
+        let mut rng = Pcg64::new(3);
+        let model = TorusNeuralSde::new(n_osc, 128, &mut rng);
+        let sp = TTorus::new(n_osc);
+        let st = CfEes::ees25();
+        let steps = 20;
+        let h = 0.01;
+        let path = BrownianPath::sample(&mut rng, n_osc, steps, h);
+        let y0 = vec![0.1; 2 * n_osc];
+        let s = bench(
+            &format!("cfees25_forward_20steps_TT{n_osc}_w128"),
+            1,
+            iters.min(10),
+            || {
+                let mut y = y0.clone();
+                for n in 0..steps {
+                    st.step(&sp, &model, n as f64 * h, h, path.increment(n), &mut y);
+                }
+                std::hint::black_box(&y);
+            },
+        );
+        println!("{}", s.report());
+        println!(
+            "  -> {:.1} us/step ({} oscillators, 3 evals + 3 exps per step)",
+            s.mean_secs * 1e6 / steps as f64,
+            n_osc
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Bench: Table 12 — adjoint gradient fidelity.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    println!("{}", ees::experiments::tab12::run(scale));
+}

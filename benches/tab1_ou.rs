@@ -1,0 +1,6 @@
+//! Bench: Table 1 / Figure 4 — OU dynamics at fixed eval budget.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    println!("{}", ees::experiments::tab1::run(scale));
+}

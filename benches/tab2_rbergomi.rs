@@ -1,0 +1,7 @@
+//! Bench: Table 2 — rough Bergomi at fixed eval budget.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    use ees::models::stochvol::VolModel;
+    println!("{}", ees::experiments::tab2::run(scale, &[VolModel::RoughBergomi]));
+}

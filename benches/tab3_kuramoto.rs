@@ -1,0 +1,12 @@
+//! Bench: Table 3 / Figure 5b / Table 13 — stochastic Kuramoto on T T^N.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    println!("{}", ees::experiments::tab3::run(scale));
+    let (n, steps): (usize, Vec<usize>) = if std::env::args().any(|a| a == "--full") {
+        (1000, vec![50, 100, 200, 500, 1000, 2000, 5000])
+    } else {
+        (16, vec![50, 100, 200, 500])
+    };
+    println!("{}", ees::experiments::tab3::run_memory(n, &steps));
+}

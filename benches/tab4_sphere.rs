@@ -1,0 +1,12 @@
+//! Bench: Table 4 / Figure 6 / Table 14 — latent SDE on the sphere.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    println!("{}", ees::experiments::tab4::run(scale));
+    let (n, steps): (usize, Vec<usize>) = if std::env::args().any(|a| a == "--full") {
+        (16, vec![50, 200, 800, 2000, 5000])
+    } else {
+        (6, vec![50, 200, 800])
+    };
+    println!("{}", ees::experiments::tab4::run_memory(n, &steps));
+}

@@ -1,0 +1,6 @@
+//! Bench: Table 7 / Figures 10-11 — stiff GBM.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    println!("{}", ees::experiments::tab7::run(scale));
+}

@@ -1,0 +1,12 @@
+//! Bench: Table 8 — the remaining stochastic-volatility models.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    use ees::models::stochvol::VolModel;
+    let models: Vec<VolModel> = VolModel::all()
+        .into_iter()
+        .filter(|m| *m != VolModel::RoughBergomi)
+        .collect();
+    let models = if std::env::args().any(|a| a == "--full") { models } else { models[..2].to_vec() };
+    println!("{}", ees::experiments::tab2::run(scale, &models));
+}

@@ -1,0 +1,6 @@
+//! Bench: Table 9 / Figure 13 — Langevin MD proxy.
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = if full { ees::experiments::Scale::Full } else { ees::experiments::Scale::Smoke };
+    println!("{}", ees::experiments::tab9::run(scale));
+}

@@ -1,0 +1,146 @@
+//! End-to-end three-layer driver: train a neural SDE for a few hundred
+//! steps where the ENTIRE training step (EES(2,5) 2N solve + loss +
+//! gradients) is the AOT-compiled JAX/Pallas artifact executed via PJRT,
+//! while Rust owns the data (exact OU targets), the Brownian drivers, the
+//! Adam optimiser state, and the training loop. Python never runs.
+//!
+//! Build the artifacts first: `make artifacts`.
+//! Run: `cargo run --release --example e2e_nsde_training [train_steps]`
+
+use ees::models::ou::OuParams;
+use ees::nn::optim::Optimizer;
+use ees::rng::Pcg64;
+use ees::runtime::CompiledModule;
+use std::path::PathBuf;
+
+fn main() -> anyhow::Result<()> {
+    let train_steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let dir = PathBuf::from(std::env::var("EES_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
+    let meta_path = dir.join("nsde_train_step.meta");
+    let hlo_path = dir.join("nsde_train_step.hlo.txt");
+    if !hlo_path.exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    // Parse the artifact's parameter layout.
+    let meta = std::fs::read_to_string(&meta_path)?;
+    let cfg = ees::config::Config::parse(&meta).map_err(|e| anyhow::anyhow!(e))?;
+    let batch = cfg.usize_or("batch", 8);
+    let dim = cfg.usize_or("dim", 4);
+    let sde_steps = cfg.usize_or("steps", 16);
+    let n_leaves = cfg.usize_or("n_leaves", 0);
+    let leaf_shapes: Vec<Vec<usize>> = (0..n_leaves)
+        .map(|i| match cfg.get(&format!("leaf{i}")) {
+            Some(ees::config::Value::Array(a)) => a.iter().map(|&x| x as usize).collect(),
+            _ => vec![],
+        })
+        .collect();
+    println!(
+        "artifact: batch {batch} x dim {dim}, {sde_steps} EES steps, {n_leaves} parameter leaves"
+    );
+
+    let module = CompiledModule::load_cpu(&hlo_path)?;
+    println!("compiled {} on PJRT CPU", module.name);
+
+    // He-initialised parameters matching the leaf layout (weights are 2-D,
+    // biases 1-D and zero).
+    let mut rng = Pcg64::new(7);
+    let mut leaves: Vec<Vec<f32>> = leaf_shapes
+        .iter()
+        .map(|shape| {
+            let n: usize = shape.iter().product();
+            if shape.len() == 2 {
+                let std = (2.0 / shape[1] as f64).sqrt();
+                (0..n).map(|_| (std * rng.normal()) as f32).collect()
+            } else {
+                vec![0.0f32; n]
+            }
+        })
+        .collect();
+    let total_params: usize = leaves.iter().map(|l| l.len()).sum();
+    let mut flat = vec![0.0f64; total_params];
+    let mut opt = Optimizer::adam(1e-2, total_params);
+
+    // Targets: exact OU moments at the horizon T = steps*h from y0 = 0.
+    let ou = OuParams::default();
+    let h_step = 0.05f32;
+    let t_end = sde_steps as f64 * h_step as f64;
+    let decay = (-ou.nu * t_end).exp();
+    let mean_t = ou.mu * (1.0 - decay);
+    let var_t = ou.sigma * ou.sigma / (2.0 * ou.nu) * (1.0 - (-2.0 * ou.nu * t_end).exp());
+    let tm = vec![mean_t as f32; dim];
+    let t2 = vec![(var_t + mean_t * mean_t) as f32; dim];
+    println!("OU targets at T = {t_end:.2}: mean {mean_t:.4}, m2 {:.4}", var_t + mean_t * mean_t);
+
+    let mut first_loss = None;
+    let mut last_loss = 0.0f32;
+    let t0 = std::time::Instant::now();
+    for step in 0..train_steps {
+        // Fresh Brownian drivers sampled by the Rust coordinator.
+        let mut dws = vec![0.0f32; sde_steps * batch * dim];
+        let s = (h_step as f64).sqrt();
+        for v in dws.iter_mut() {
+            *v = (s * rng.normal()) as f32;
+        }
+        // Assemble inputs: leaves..., dws, h, tm, t2.
+        let mut inputs: Vec<(&[f32], Vec<usize>)> = Vec::with_capacity(n_leaves + 4);
+        for (leaf, shape) in leaves.iter().zip(leaf_shapes.iter()) {
+            inputs.push((leaf, shape.clone()));
+        }
+        inputs.push((&dws, vec![sde_steps, batch, dim]));
+        let h_arr = [h_step];
+        inputs.push((&h_arr, vec![]));
+        inputs.push((&tm, vec![dim]));
+        inputs.push((&t2, vec![dim]));
+        let input_refs: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+        let out = module.run_f32(&input_refs)?;
+        let loss = out[0][0];
+        if first_loss.is_none() {
+            first_loss = Some(loss);
+        }
+        last_loss = loss;
+        // Adam update in Rust over the flat gradient.
+        let mut grads = vec![0.0f64; total_params];
+        let mut off = 0;
+        for g in &out[1..] {
+            for (k, &v) in g.iter().enumerate() {
+                grads[off + k] = v as f64;
+            }
+            off += g.len();
+        }
+        off = 0;
+        for leaf in &leaves {
+            for (k, &v) in leaf.iter().enumerate() {
+                flat[off + k] = v as f64;
+            }
+            off += leaf.len();
+        }
+        opt.step(&mut flat, &grads);
+        off = 0;
+        for leaf in leaves.iter_mut() {
+            for (k, v) in leaf.iter_mut().enumerate() {
+                *v = flat[off + k] as f32;
+            }
+            off += leaf.len();
+        }
+        if step % 50 == 0 {
+            println!("step {step:>4}: loss {loss:.6}");
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "trained {train_steps} PJRT steps in {secs:.1}s ({:.1} steps/s): loss {:.6} -> {last_loss:.6}",
+        train_steps as f64 / secs,
+        first_loss.unwrap()
+    );
+    assert!(
+        last_loss < first_loss.unwrap(),
+        "training must reduce the loss"
+    );
+    println!("e2e_nsde_training OK — all three layers compose");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Figure 1 reproduction: memory requirement of one forward+backward solve
+//! of a batch of SDEs on the 7-torus 𝕋⁷, as a function of the number of
+//! solver steps — CF-EES(2,5)+Reversible (flat) vs CG2/CG4 with Full
+//! (linear) and Recursive (√n) adjoints.
+//!
+//! Run: `cargo run --release --example memory_scaling [batch]`
+
+use ees::experiments::fig1;
+
+fn main() {
+    let batch: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let steps = [5usize, 10, 20, 50, 100, 200, 400, 800, 2000];
+    println!("{}", fig1::run(batch, &steps));
+
+    // Summarise slopes.
+    let rows = fig1::measure(7, batch, &steps);
+    let first = &rows[0];
+    let last = &rows[rows.len() - 1];
+    let labels = [
+        "CF-EES (Reversible)",
+        "CG2 (Full)",
+        "CG2 (Recursive)",
+        "CG4 (Full)",
+        "CG4 (Recursive)",
+    ];
+    println!("growth from {} to {} steps:", first.0, last.0);
+    for (i, l) in labels.iter().enumerate() {
+        println!(
+            "  {:<22} {:>8} -> {:>9} bytes  ({:.1}x)",
+            l,
+            first.1[i],
+            last.1[i],
+            last.1[i] as f64 / first.1[i] as f64
+        );
+    }
+    println!("memory_scaling OK");
+}

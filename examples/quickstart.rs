@@ -1,0 +1,86 @@
+//! Quickstart: integrate an SDE with EES(2,5), check near-reversibility,
+//! then train a tiny neural SDE on Ornstein–Uhlenbeck data with the O(1)
+//! memory reversible adjoint.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ees::adjoint::AdjointMethod;
+use ees::coordinator::train_euclidean;
+use ees::losses::MomentMatch;
+use ees::models::ou::OuParams;
+use ees::nn::neural_sde::NeuralSde;
+use ees::nn::optim::Optimizer;
+use ees::rng::{BrownianPath, Pcg64};
+use ees::solvers::{LowStorageStepper, Stepper};
+use ees::vf::{ClosureField, DiffVectorField};
+
+fn main() {
+    // --- 1. Integrate an SDE with the low-storage EES(2,5) scheme. -------
+    let vf = ClosureField {
+        dim: 1,
+        noise_dim: 1,
+        drift: |_t, y: &[f64], out: &mut [f64]| out[0] = 0.2 * (0.1 - y[0]),
+        diffusion: |_t, _y: &[f64], dw: &[f64], out: &mut [f64]| out[0] = 2.0 * dw[0],
+    };
+    let stepper = LowStorageStepper::ees25();
+    let mut rng = Pcg64::new(42);
+    let path = BrownianPath::sample(&mut rng, 1, 200, 0.05);
+    let traj = ees::solvers::integrate(&stepper, &vf, 0.0, &[0.0], &path);
+    println!("integrated 200 EES(2,5) steps; y(10) = {:.4}", traj[200]);
+
+    // --- 2. Effective symmetry: run the whole path backwards. ------------
+    let mut state = vec![traj[200]];
+    for n in (0..200).rev() {
+        stepper.step_back(&vf, n as f64 * 0.05, 0.05, path.increment(n), &mut state);
+    }
+    println!(
+        "reconstructed y(0) by reverse steps: {:.2e} (true 0; machine-level \
+         reconstruction is what powers the O(1)-memory adjoint)",
+        state[0].abs()
+    );
+
+    // --- 3. Train a neural SDE on OU data with the reversible adjoint. ---
+    let ou = OuParams::default();
+    let steps = 20;
+    let h = 0.1;
+    let obs: Vec<usize> = (5..=steps).step_by(5).collect();
+    let (mean_all, m2_all) = ou.moment_targets(0.0, steps, h, 5000, &mut rng);
+    let loss = MomentMatch {
+        target_mean: obs.iter().map(|&i| mean_all[i]).collect(),
+        target_m2: obs.iter().map(|&i| m2_all[i]).collect(),
+    };
+    let mut model = NeuralSde::lsde(1, 16, 2, true, &mut rng);
+    let mut opt = Optimizer::adam(1e-2, model.num_params());
+    let batch = 128;
+    let mut sampler = move |rng: &mut Pcg64| {
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
+        let paths: Vec<BrownianPath> = (0..batch)
+            .map(|_| BrownianPath::sample(rng, 1, steps, h))
+            .collect();
+        (y0s, paths)
+    };
+    let log = train_euclidean(
+        &mut model,
+        |m: &NeuralSde| m.params(),
+        |m: &mut NeuralSde, p: &[f64]| m.set_params(p),
+        &stepper,
+        AdjointMethod::Reversible,
+        &mut sampler,
+        &obs,
+        &loss,
+        &mut opt,
+        60,
+        Some(1.0),
+        &mut rng,
+    );
+    println!(
+        "trained {} epochs with the Reversible adjoint: loss {:.4} -> {:.4} \
+         (peak adjoint memory {} f64s, constant in the step count)",
+        log.history.len(),
+        log.history[0].loss,
+        log.terminal_loss(),
+        log.peak_mem(),
+    );
+    assert!(log.terminal_loss() < log.history[0].loss);
+    println!("quickstart OK");
+}

@@ -1,0 +1,111 @@
+"""AOT export: lower the L2/L1 functions to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all f32, fixed example shapes — one compiled executable per model
+variant, as the runtime expects):
+
+- ``ees_step.hlo.txt``      — fused OU EES(2,5) step, batch 8 x dim 4
+                              (Pallas kernel, interpret=True lowering);
+- ``nsde_step.hlo.txt``     — one neural-SDE EES(2,5) step, batch 8 x dim 4;
+- ``nsde_train_step.hlo.txt`` — loss + parameter gradients through a
+                              16-step scan (discretise-then-optimise).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (see Makefile).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as m
+from .kernels.ees_step import ou_ees25_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=16)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    b, d, steps = args.batch, args.dim, args.steps
+
+    f32 = jnp.float32
+    y = jax.ShapeDtypeStruct((b, d), f32)
+    dw = jax.ShapeDtypeStruct((b, d), f32)
+    h = jax.ShapeDtypeStruct((), f32)
+
+    # 1. Fused OU EES(2,5) Pallas step.
+    export(
+        lambda y, dw, h: (ou_ees25_step(y, dw, h),),
+        (y, dw, h),
+        os.path.join(args.out_dir, "ees_step.hlo.txt"),
+    )
+
+    # 2/3. Neural SDE step and training step with concrete init params.
+    params = m.init_nsde(jax.random.PRNGKey(0), d, width=16, depth=2)
+    params = jax.tree_util.tree_map(lambda x: x.astype(f32), params)
+
+    export(
+        lambda y, dw, h: (m.nsde_ees25_step(params, y, dw, h),),
+        (y, dw, h),
+        os.path.join(args.out_dir, "nsde_step.hlo.txt"),
+    )
+
+    # Reverse-mode autodiff through an interpret-mode pallas_call is not
+    # supported by jax; the training artifact differentiates the identical
+    # pure-jnp register update instead (bitwise-equal numerics — asserted by
+    # python/tests/test_model.py::test_step_pallas_equals_jnp_path).
+    # Parameters are runtime *inputs* (flat leaves, fixed order) so the Rust
+    # optimiser owns them across steps.
+    flat, treedef = m.param_leaves(params)
+    leaf_specs = [jax.ShapeDtypeStruct(x.shape, f32) for x in flat]
+    dws = jax.ShapeDtypeStruct((steps, b, d), f32)
+    tgt = jax.ShapeDtypeStruct((d,), f32)
+    export(
+        lambda *inputs: m.loss_and_grad_flat(
+            list(inputs[: len(flat)]),
+            treedef,
+            jnp.zeros((b, d), f32),
+            inputs[len(flat)],
+            inputs[len(flat) + 1],
+            inputs[len(flat) + 2],
+            inputs[len(flat) + 3],
+        ),
+        (*leaf_specs, dws, h, tgt, tgt),
+        os.path.join(args.out_dir, "nsde_train_step.hlo.txt"),
+    )
+    # Record the artifact's parameter layout for the Rust side.
+    with open(os.path.join(args.out_dir, "nsde_train_step.meta"), "w") as f:
+        f.write(f"batch = {b}\ndim = {d}\nsteps = {steps}\n")
+        f.write(f"n_leaves = {len(flat)}\n")
+        for i, x in enumerate(flat):
+            f.write(f"leaf{i} = {list(x.shape)}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernels: the Williamson 2N EES hot path.
+
+Two kernels:
+
+- ``fused_2n_update``: the fused two-register stage update
+  ``delta' = A*delta + k;  y' = y + B*delta'`` over a batch — the inner
+  operation of every 2N/CF-EES stage. Fusing it avoids materialising the
+  intermediate ``A*delta + k`` in HBM (one read+write per operand instead of
+  two round trips).
+
+- ``ou_ees25_step``: a complete EES(2,5;1/10) step for the OU-family SDE
+  ``dy = nu*(mu - y) dt + sigma dW`` computed entirely inside one kernel —
+  three stage evaluations and the 2N recurrence fused over the batch tile.
+
+TPU notes (DESIGN.md §Hardware-Adaptation): both kernels are elementwise
+over (batch, dim) and tile the batch dimension through VMEM via BlockSpec;
+``interpret=True`` is mandatory on CPU-PJRT (real TPU lowering emits a
+Mosaic custom-call the CPU plugin cannot execute). The MXU-facing matmuls of
+the neural drift live at Layer 2 (model.py) so XLA can fuse them with these
+elementwise kernels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# EES(2,5; x=1/10) Williamson 2N coefficients (paper Appendix D).
+EES25_A = (0.0, -7.0 / 15.0, -35.0 / 32.0)
+EES25_B = (1.0 / 3.0, 15.0 / 16.0, 2.0 / 5.0)
+# Stage abscissae c_l for time offsets.
+EES25_C = (0.0, 1.0 / 3.0, 5.0 / 6.0)
+
+DEFAULT_BLOCK = 128
+
+
+def _fused_2n_kernel(delta_ref, k_ref, y_ref, dout_ref, yout_ref, *, a, b):
+    delta = a * delta_ref[...] + k_ref[...]
+    dout_ref[...] = delta
+    yout_ref[...] = y_ref[...] + b * delta
+
+
+def fused_2n_update(delta, k, y, a, b, *, block=DEFAULT_BLOCK, interpret=True):
+    """One 2N stage update: returns (delta', y').
+
+    delta, k, y: (batch, dim) arrays; a, b: python floats (A_l, B_l).
+    """
+    batch, dim = y.shape
+    grid = (pl.cdiv(batch, block),)
+    spec = pl.BlockSpec((block, dim), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct(y.shape, y.dtype),
+        jax.ShapeDtypeStruct(y.shape, y.dtype),
+    ]
+    return pl.pallas_call(
+        functools.partial(_fused_2n_kernel, a=float(a), b=float(b)),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(delta, k, y)
+
+
+def _ou_step_kernel(y_ref, dw_ref, h_ref, out_ref, *, nu, mu, sigma):
+    y = y_ref[...]
+    h = h_ref[0]
+    dw = dw_ref[...]
+    delta = jnp.zeros_like(y)
+    for a_l, b_l in zip(EES25_A, EES25_B):
+        k = nu * (mu - y) * h + sigma * dw
+        delta = a_l * delta + k
+        y = y + b_l * delta
+    out_ref[...] = y
+
+
+def ou_ees25_step(y, dw, h, *, nu=0.2, mu=0.1, sigma=2.0, block=DEFAULT_BLOCK, interpret=True):
+    """Full EES(2,5) step of the OU SDE, fused in one kernel.
+
+    y, dw: (batch, dim); h: scalar array shape ().
+    """
+    batch, dim = y.shape
+    grid = (pl.cdiv(batch, block),)
+    spec = pl.BlockSpec((block, dim), lambda i: (i, 0))
+    h_spec = pl.BlockSpec(memory_space=pl.ANY) if False else None  # h passed whole
+    return pl.pallas_call(
+        functools.partial(
+            _ou_step_kernel, nu=float(nu), mu=float(mu), sigma=float(sigma)
+        ),
+        grid=grid,
+        in_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(y.shape, y.dtype),
+        interpret=interpret,
+    )(y, dw, jnp.reshape(h, (1,)))
+
+
+def vmem_footprint_bytes(block, dim, dtype_bytes=4, n_buffers=5):
+    """Estimated VMEM bytes for one grid step of fused_2n_update
+    (3 inputs + 2 outputs double-buffered is n_buffers*2)."""
+    return block * dim * dtype_bytes * n_buffers * 2

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in :mod:`compile.kernels.ees_step` has a reference here written
+with plain jax.numpy; pytest asserts allclose across shapes and dtypes
+(hypothesis sweeps the shape/dtype space).
+"""
+
+import jax.numpy as jnp
+
+from .ees_step import EES25_A, EES25_B
+
+
+def fused_2n_update_ref(delta, k, y, a, b):
+    delta = a * delta + k
+    return delta, y + b * delta
+
+
+def ou_ees25_step_ref(y, dw, h, *, nu=0.2, mu=0.1, sigma=2.0):
+    delta = jnp.zeros_like(y)
+    for a_l, b_l in zip(EES25_A, EES25_B):
+        kk = nu * (mu - y) * h + sigma * dw
+        delta = a_l * delta + kk
+        y = y + b_l * delta
+    return y
+
+
+def ees25_step_generic_ref(f, y, dw, h):
+    """Generic EES(2,5) 2N step for a combined-increment function
+    f(y, h, dw) -> increment (the simplified-RK evaluation of eq. 7)."""
+    delta = jnp.zeros_like(y)
+    for a_l, b_l in zip(EES25_A, EES25_B):
+        k = f(y, h, dw)
+        delta = a_l * delta + k
+        y = y + b_l * delta
+    return y

@@ -1,0 +1,117 @@
+"""Layer-2 JAX model: neural SDE forward/backward built on the L1 kernels.
+
+The model mirrors the Rust-native NSDE (rust/src/nn/neural_sde.rs): MLP
+drift + softplus-scaled diagonal MLP diffusion, advanced by the EES(2,5)
+Williamson 2N step whose register update is the Pallas kernel
+``fused_2n_update``. The full solve is a single ``lax.scan`` so the whole
+trajectory lowers into one HLO while-loop; ``loss_and_grad`` differentiates
+it end-to-end (discretise-then-optimise inside XLA).
+
+Everything here is build-time only: ``aot.py`` lowers these functions to
+HLO text once, and the Rust coordinator executes the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ees_step import EES25_A, EES25_B, fused_2n_update
+
+
+def init_mlp(key, sizes):
+    """He-initialised MLP parameter pytree."""
+    params = []
+    for fan_in, fan_out in zip(sizes[:-1], sizes[1:]):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (fan_out, fan_in)) * jnp.sqrt(2.0 / fan_in)
+        params.append((w, jnp.zeros((fan_out,))))
+    return params
+
+
+def mlp_apply(params, x, final_softplus=False, out_scale=1.0):
+    """LipSwish MLP (matches the Rust implementation)."""
+    for i, (w, b) in enumerate(params):
+        x = x @ w.T + b
+        if i + 1 < len(params):
+            x = 0.909 * x * jax.nn.sigmoid(x)
+        elif final_softplus:
+            x = jax.nn.softplus(x)
+    return x * out_scale
+
+
+def init_nsde(key, dim, width=32, depth=2):
+    k1, k2 = jax.random.split(key)
+    drift_sizes = [dim] + [width] * depth + [dim]
+    diff_sizes = [dim] + [width] * depth + [dim]
+    return {
+        "drift": init_mlp(k1, drift_sizes),
+        "diffusion": init_mlp(k2, diff_sizes),
+    }
+
+
+def combined_increment(params, y, h, dw):
+    """Simplified-RK combined increment F(y; h, dW) = f(y)h + sigma(y)*dW."""
+    f = mlp_apply(params["drift"], y)
+    sigma = mlp_apply(params["diffusion"], y, final_softplus=True, out_scale=0.2)
+    return f * h + sigma * dw
+
+
+def nsde_ees25_step(params, y, dw, h, *, interpret=True, use_pallas=True):
+    """One EES(2,5) 2N step of the neural SDE over a batch.
+
+    The MLP evaluations stay at L2 (XLA-fused matmuls); the two-register
+    recurrence goes through the Pallas kernel.
+    """
+    delta = jnp.zeros_like(y)
+    for a_l, b_l in zip(EES25_A, EES25_B):
+        k = combined_increment(params, y, h, dw)
+        if use_pallas:
+            delta, y = fused_2n_update(delta, k, y, a_l, b_l, interpret=interpret)
+        else:
+            delta = a_l * delta + k
+            y = y + b_l * delta
+    return y
+
+
+def nsde_solve(params, y0, dws, h, *, use_pallas=True):
+    """Integrate over all steps with lax.scan; returns the final state.
+
+    dws: (steps, batch, dim).
+    """
+
+    def body(y, dw):
+        return nsde_ees25_step(params, y, dw, h, use_pallas=use_pallas), None
+
+    y_final, _ = jax.lax.scan(body, y0, dws)
+    return y_final
+
+
+def moment_loss(params, y0, dws, h, target_mean, target_m2, *, use_pallas=True):
+    """Terminal moment-matching loss (the OU/GBM objective)."""
+    y = nsde_solve(params, y0, dws, h, use_pallas=use_pallas)
+    mean = jnp.mean(y, axis=0)
+    m2 = jnp.mean(y * y, axis=0)
+    return jnp.mean((mean - target_mean) ** 2 + (m2 - target_m2) ** 2)
+
+
+def loss_and_grad(params, y0, dws, h, target_mean, target_m2, *, use_pallas=True):
+    """(loss, flat gradient list) — the artifact the Rust trainer executes."""
+    loss, grads = jax.value_and_grad(moment_loss)(
+        params, y0, dws, h, target_mean, target_m2, use_pallas=use_pallas
+    )
+    flat, _ = jax.tree_util.tree_flatten(grads)
+    return (loss, *flat)
+
+
+def param_leaves(params):
+    """Flatten the parameter pytree (fixed order used by the artifacts)."""
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    return flat, treedef
+
+
+def loss_and_grad_flat(flat_params, treedef, y0, dws, h, target_mean, target_m2):
+    """Training step over *flat* parameter inputs so the AOT artifact takes
+    the parameters as runtime buffers (the Rust optimiser owns them)."""
+    params = jax.tree_util.tree_unflatten(treedef, flat_params)
+    return loss_and_grad(
+        params, y0, dws, h, target_mean, target_m2, use_pallas=False
+    )

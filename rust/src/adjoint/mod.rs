@@ -1,0 +1,537 @@
+//! Adjoint methods: Full (discretise-then-optimise), Recursive
+//! (checkpointing, O(√n) memory) and Reversible (Algorithm 1/2, O(1)
+//! memory) — the three columns the paper compares throughout Section 4.
+//!
+//! Losses observe the trajectory at a set of observation indices; the
+//! backward sweep injects the per-observation cotangents as it walks the
+//! steps in reverse. Where the state at a step start comes from is the only
+//! difference between the methods:
+//!
+//! - **Full**: read from a tape of every solver state (O(n));
+//! - **Recursive**: recompute each √n-sized segment from its checkpoint
+//!   (O(√n) storage, one extra forward pass);
+//! - **Reversible**: reconstruct by the solver's algebraic inverse
+//!   `step_back` (O(1); exact for Reversible Heun/MCF, order-m for EES).
+//!
+//! All storage passes through [`crate::memory::MemMeter`], so the paper's
+//! memory curves are measured, not asserted.
+
+use crate::lie::HomogeneousSpace;
+use crate::memory::{MemMeter, MeteredTape};
+use crate::rng::BrownianPath;
+use crate::solvers::{ManifoldStepper, Stepper};
+use crate::vf::{DiffManifoldVectorField, DiffVectorField};
+
+/// Which adjoint realisation to use for the backward pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdjointMethod {
+    Full,
+    Recursive,
+    Reversible,
+}
+
+impl AdjointMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdjointMethod::Full => "Full",
+            AdjointMethod::Recursive => "Recursive",
+            AdjointMethod::Reversible => "Reversible",
+        }
+    }
+}
+
+/// Loss over observed states. `obs_states` is `(n_obs, dim)` flattened in
+/// observation order.
+pub trait ObservationLoss: Send + Sync {
+    fn eval(&self, obs_states: &[f64], dim: usize) -> f64;
+    /// Cotangents dL/d(obs state), same layout as `obs_states`.
+    fn grad(&self, obs_states: &[f64], dim: usize) -> Vec<f64>;
+}
+
+/// Squared distance to per-observation targets: Σ ‖y_obs − target‖² / n_obs.
+pub struct MseToTargets {
+    pub targets: Vec<f64>,
+}
+
+impl ObservationLoss for MseToTargets {
+    fn eval(&self, obs_states: &[f64], _dim: usize) -> f64 {
+        let n = self.targets.len();
+        obs_states
+            .iter()
+            .zip(self.targets.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / n as f64
+    }
+    fn grad(&self, obs_states: &[f64], _dim: usize) -> Vec<f64> {
+        let n = self.targets.len();
+        obs_states
+            .iter()
+            .zip(self.targets.iter())
+            .map(|(a, b)| 2.0 * (a - b) / n as f64)
+            .collect()
+    }
+}
+
+/// Result of one forward+backward solve.
+#[derive(Clone, Debug)]
+pub struct GradResult {
+    pub loss: f64,
+    /// Cotangent with respect to the full initial solver state
+    /// (primary y₀ in the first `dim` slots).
+    pub d_state0: Vec<f64>,
+    pub d_theta: Vec<f64>,
+    /// Peak adjoint-machinery memory (f64 slots).
+    pub peak_f64s: usize,
+}
+
+/// Forward + backward through a Euclidean SDE solve.
+///
+/// `obs` must be sorted ascending step indices in 1..=steps (observation
+/// after that many steps). The loss sees the primary states at those
+/// indices.
+pub fn grad_euclidean(
+    stepper: &dyn Stepper,
+    method: AdjointMethod,
+    vf: &dyn DiffVectorField,
+    t0: f64,
+    y0: &[f64],
+    path: &BrownianPath,
+    obs: &[usize],
+    loss: &dyn ObservationLoss,
+) -> GradResult {
+    let dim = vf.dim();
+    let steps = path.steps();
+    let h = path.h;
+    let state_size = stepper.state_size(dim);
+    let mut meter = MemMeter::new();
+    // Constant-cost registers: current state + cotangent.
+    meter.alloc(2 * state_size);
+
+    let seg = if method == AdjointMethod::Recursive {
+        (steps as f64).sqrt().ceil() as usize
+    } else {
+        0
+    };
+
+    let mut state = stepper.init_state(vf, t0, y0);
+    let mut tape = MeteredTape::new(); // Full: every state; Recursive: checkpoints.
+    let mut obs_states = vec![0.0; obs.len() * dim];
+
+    // ---- forward ----
+    let mut obs_i = 0;
+    if method == AdjointMethod::Full || method == AdjointMethod::Recursive {
+        tape.push(&state, &mut meter); // state at step 0
+    }
+    for n in 0..steps {
+        let t = t0 + n as f64 * h;
+        stepper.step(vf, t, h, path.increment(n), &mut state);
+        match method {
+            AdjointMethod::Full => tape.push(&state, &mut meter),
+            AdjointMethod::Recursive => {
+                if (n + 1) % seg == 0 {
+                    tape.push(&state, &mut meter);
+                }
+            }
+            AdjointMethod::Reversible => {}
+        }
+        while obs_i < obs.len() && obs[obs_i] == n + 1 {
+            obs_states[obs_i * dim..(obs_i + 1) * dim].copy_from_slice(&state[..dim]);
+            obs_i += 1;
+        }
+    }
+    debug_assert_eq!(obs_i, obs.len(), "observation indices must be in 1..=steps");
+
+    let loss_val = loss.eval(&obs_states, dim);
+    let cots = loss.grad(&obs_states, dim);
+
+    // ---- backward ----
+    let mut lambda = vec![0.0; state_size];
+    let mut d_theta = vec![0.0; vf.num_params()];
+    meter.alloc(d_theta.len());
+    let mut obs_i = obs.len();
+    // Recursive: segment buffer of recomputed states.
+    let mut seg_buf = MeteredTape::new();
+    for n in (0..steps).rev() {
+        while obs_i > 0 && obs[obs_i - 1] == n + 1 {
+            obs_i -= 1;
+            for d in 0..dim {
+                lambda[d] += cots[obs_i * dim + d];
+            }
+        }
+        let t = t0 + n as f64 * h;
+        let dw = path.increment(n);
+        match method {
+            AdjointMethod::Full => {
+                stepper.backprop_step(vf, t, h, dw, tape.get(n), &mut lambda, &mut d_theta);
+            }
+            AdjointMethod::Reversible => {
+                stepper.step_back(vf, t, h, dw, &mut state);
+                stepper.backprop_step(vf, t, h, dw, &state, &mut lambda, &mut d_theta);
+            }
+            AdjointMethod::Recursive => {
+                if seg_buf.is_empty() {
+                    // Recompute states for the segment containing step n
+                    // from the checkpoint at segment start.
+                    let seg_start = (n / seg) * seg;
+                    let ckpt_idx = n / seg;
+                    let mut s = tape.get(ckpt_idx).to_vec();
+                    seg_buf.push(&s, &mut meter);
+                    for m in seg_start..n {
+                        let tm = t0 + m as f64 * h;
+                        stepper.step(vf, tm, h, path.increment(m), &mut s);
+                        seg_buf.push(&s, &mut meter);
+                    }
+                }
+                let prev = seg_buf.pop(&mut meter).expect("segment buffer underflow");
+                stepper.backprop_step(vf, t, h, dw, &prev, &mut lambda, &mut d_theta);
+            }
+        }
+    }
+    while obs_i > 0 && obs[obs_i - 1] == 0 {
+        obs_i -= 1;
+        for d in 0..dim {
+            lambda[d] += cots[obs_i * dim + d];
+        }
+    }
+    GradResult {
+        loss: loss_val,
+        d_state0: lambda,
+        d_theta,
+        peak_f64s: meter.peak_f64s(),
+    }
+}
+
+/// Forward + backward through a homogeneous-space SDE solve (Algorithm 2).
+pub fn grad_manifold(
+    stepper: &dyn ManifoldStepper,
+    method: AdjointMethod,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn DiffManifoldVectorField,
+    t0: f64,
+    y0: &[f64],
+    path: &BrownianPath,
+    obs: &[usize],
+    loss: &dyn ObservationLoss,
+) -> GradResult {
+    let dim = sp.point_dim();
+    let steps = path.steps();
+    let h = path.h;
+    let mut meter = MemMeter::new();
+    // Constant registers: state, cotangent, δ register, stage scratch.
+    meter.alloc(2 * dim + 2 * sp.algebra_dim());
+
+    let seg = if method == AdjointMethod::Recursive {
+        (steps as f64).sqrt().ceil() as usize
+    } else {
+        0
+    };
+    if method == AdjointMethod::Reversible {
+        assert!(
+            stepper.reversible(),
+            "{} does not support the reversible adjoint",
+            stepper.name()
+        );
+    }
+
+    let mut y = y0.to_vec();
+    let mut tape = MeteredTape::new();
+    let mut obs_states = vec![0.0; obs.len() * dim];
+    let mut obs_i = 0;
+    if method != AdjointMethod::Reversible {
+        tape.push(&y, &mut meter);
+    }
+    for n in 0..steps {
+        let t = t0 + n as f64 * h;
+        stepper.step(sp, vf, t, h, path.increment(n), &mut y);
+        match method {
+            AdjointMethod::Full => tape.push(&y, &mut meter),
+            AdjointMethod::Recursive => {
+                if (n + 1) % seg == 0 {
+                    tape.push(&y, &mut meter);
+                }
+            }
+            AdjointMethod::Reversible => {}
+        }
+        while obs_i < obs.len() && obs[obs_i] == n + 1 {
+            obs_states[obs_i * dim..(obs_i + 1) * dim].copy_from_slice(&y);
+            obs_i += 1;
+        }
+    }
+    let loss_val = loss.eval(&obs_states, dim);
+    let cots = loss.grad(&obs_states, dim);
+
+    let mut lambda = vec![0.0; dim];
+    let mut d_theta = vec![0.0; vf.num_params()];
+    meter.alloc(d_theta.len());
+    let mut obs_i = obs.len();
+    let mut seg_buf = MeteredTape::new();
+    for n in (0..steps).rev() {
+        while obs_i > 0 && obs[obs_i - 1] == n + 1 {
+            obs_i -= 1;
+            for d in 0..dim {
+                lambda[d] += cots[obs_i * dim + d];
+            }
+        }
+        let t = t0 + n as f64 * h;
+        let dw = path.increment(n);
+        match method {
+            AdjointMethod::Full => {
+                stepper.backprop_step(sp, vf, t, h, dw, tape.get(n), &mut lambda, &mut d_theta);
+            }
+            AdjointMethod::Reversible => {
+                stepper.step_back(sp, vf, t, h, dw, &mut y);
+                stepper.backprop_step(sp, vf, t, h, dw, &y, &mut lambda, &mut d_theta);
+            }
+            AdjointMethod::Recursive => {
+                if seg_buf.is_empty() {
+                    let seg_start = (n / seg) * seg;
+                    let ckpt_idx = n / seg;
+                    let mut s = tape.get(ckpt_idx).to_vec();
+                    seg_buf.push(&s, &mut meter);
+                    for m in seg_start..n {
+                        let tm = t0 + m as f64 * h;
+                        stepper.step(sp, vf, tm, h, path.increment(m), &mut s);
+                        seg_buf.push(&s, &mut meter);
+                    }
+                }
+                let prev = seg_buf.pop(&mut meter).expect("segment buffer underflow");
+                stepper.backprop_step(sp, vf, t, h, dw, &prev, &mut lambda, &mut d_theta);
+            }
+        }
+    }
+    while obs_i > 0 && obs[obs_i - 1] == 0 {
+        obs_i -= 1;
+        for d in 0..dim {
+            lambda[d] += cots[obs_i * dim + d];
+        }
+    }
+    GradResult {
+        loss: loss_val,
+        d_state0: lambda,
+        d_theta,
+        peak_f64s: meter.peak_f64s(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::solvers::{LowStorageStepper, Mcf, ReversibleHeun, RkStepper};
+    use crate::vf::VectorField;
+
+    /// Tiny parametric field for exactness checks.
+    struct PF {
+        theta: Vec<f64>,
+    }
+    impl VectorField for PF {
+        fn dim(&self) -> usize {
+            2
+        }
+        fn noise_dim(&self) -> usize {
+            1
+        }
+        fn combined(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+            out[0] = (self.theta[0] * y[1] - y[0]) * h + self.theta[2] * dw[0];
+            out[1] = (self.theta[1] * y[0].tanh()) * h + 0.2 * y[1] * dw[0];
+        }
+    }
+    impl DiffVectorField for PF {
+        fn num_params(&self) -> usize {
+            3
+        }
+        fn vjp(
+            &self,
+            _t: f64,
+            y: &[f64],
+            h: f64,
+            dw: &[f64],
+            cot: &[f64],
+            d_y: &mut [f64],
+            d_theta: &mut [f64],
+        ) {
+            d_y[0] += -cot[0] * h + cot[1] * self.theta[1] * (1.0 - y[0].tanh().powi(2)) * h;
+            d_y[1] += cot[0] * self.theta[0] * h + cot[1] * 0.2 * dw[0];
+            d_theta[0] += cot[0] * y[1] * h;
+            d_theta[1] += cot[1] * y[0].tanh() * h;
+            d_theta[2] += cot[0] * dw[0];
+        }
+    }
+
+    fn setup() -> (PF, BrownianPath, Vec<usize>, MseToTargets) {
+        let vf = PF {
+            theta: vec![0.6, -0.9, 0.3],
+        };
+        let mut rng = Pcg64::new(42);
+        let path = BrownianPath::sample(&mut rng, 1, 64, 1.0 / 64.0);
+        let obs: Vec<usize> = vec![16, 32, 48, 64];
+        let targets = vec![0.1; 4 * 2];
+        (vf, path, obs, MseToTargets { targets })
+    }
+
+    /// Table 12 in miniature: the three adjoints return the same gradient
+    /// (up to the EES reconstruction defect, which is ~1e-9 here).
+    #[test]
+    fn adjoints_agree_euclidean() {
+        let (vf, path, obs, loss) = setup();
+        let st = LowStorageStepper::ees25();
+        let y0 = [0.4, -0.2];
+        let g_full = grad_euclidean(
+            &st,
+            AdjointMethod::Full,
+            &vf,
+            0.0,
+            &y0,
+            &path,
+            &obs,
+            &loss,
+        );
+        for m in [AdjointMethod::Recursive, AdjointMethod::Reversible] {
+            let g = grad_euclidean(&st, m, &vf, 0.0, &y0, &path, &obs, &loss);
+            assert!((g.loss - g_full.loss).abs() < 1e-9);
+            for (a, b) in g.d_theta.iter().zip(g_full.d_theta.iter()) {
+                assert!((a - b).abs() < 1e-7, "{}: {a} vs {b}", m.name());
+            }
+            for (a, b) in g.d_state0.iter().zip(g_full.d_state0.iter()) {
+                assert!((a - b).abs() < 1e-7, "{}: {a} vs {b}", m.name());
+            }
+        }
+    }
+
+    /// Full-adjoint gradient matches finite differences end-to-end.
+    #[test]
+    fn full_adjoint_matches_fd() {
+        let (vf, path, obs, loss) = setup();
+        let st = RkStepper::ees25();
+        let y0 = [0.4, -0.2];
+        let g = grad_euclidean(
+            &st,
+            AdjointMethod::Full,
+            &vf,
+            0.0,
+            &y0,
+            &path,
+            &obs,
+            &loss,
+        );
+        let run_loss = |theta: &[f64], y0: &[f64]| -> f64 {
+            let vf = PF {
+                theta: theta.to_vec(),
+            };
+            let traj = crate::solvers::integrate(&st, &vf, 0.0, y0, &path);
+            let mut obs_states = vec![0.0; obs.len() * 2];
+            for (i, &n) in obs.iter().enumerate() {
+                obs_states[i * 2..(i + 1) * 2].copy_from_slice(&traj[n * 2..(n + 1) * 2]);
+            }
+            loss.eval(&obs_states, 2)
+        };
+        let eps = 1e-6;
+        for k in 0..3 {
+            let mut tp = vf.theta.clone();
+            tp[k] += eps;
+            let mut tm = vf.theta.clone();
+            tm[k] -= eps;
+            let fd = (run_loss(&tp, &y0) - run_loss(&tm, &y0)) / (2.0 * eps);
+            assert!(
+                (fd - g.d_theta[k]).abs() < 1e-6,
+                "theta {k}: {fd} vs {}",
+                g.d_theta[k]
+            );
+        }
+        for k in 0..2 {
+            let mut yp = y0;
+            yp[k] += eps;
+            let mut ym = y0;
+            ym[k] -= eps;
+            let fd = (run_loss(&vf.theta, &yp) - run_loss(&vf.theta, &ym)) / (2.0 * eps);
+            assert!(
+                (fd - g.d_state0[k]).abs() < 1e-6,
+                "y0 {k}: {fd} vs {}",
+                g.d_state0[k]
+            );
+        }
+    }
+
+    /// Reversible adjoint on exactly reversible schemes equals Full exactly.
+    #[test]
+    fn reversible_adjoint_exact_for_algebraic_schemes() {
+        let (vf, path, obs, loss) = setup();
+        for st in [
+            Box::new(ReversibleHeun::new()) as Box<dyn Stepper>,
+            Box::new(Mcf::euler()),
+            Box::new(Mcf::midpoint()),
+        ] {
+            let y0 = [0.4, -0.2];
+            let g_full = grad_euclidean(
+                st.as_ref(),
+                AdjointMethod::Full,
+                &vf,
+                0.0,
+                &y0,
+                &path,
+                &obs,
+                &loss,
+            );
+            let g_rev = grad_euclidean(
+                st.as_ref(),
+                AdjointMethod::Reversible,
+                &vf,
+                0.0,
+                &y0,
+                &path,
+                &obs,
+                &loss,
+            );
+            for (a, b) in g_rev.d_theta.iter().zip(g_full.d_theta.iter()) {
+                assert!(
+                    (a - b).abs() < 1e-10 * (1.0 + b.abs()),
+                    "{}: {a} vs {b}",
+                    st.props().name
+                );
+            }
+        }
+    }
+
+    /// Memory complexity: Full grows linearly, Recursive ~√n, Reversible flat.
+    #[test]
+    fn memory_complexity_scaling() {
+        let vf = PF {
+            theta: vec![0.6, -0.9, 0.3],
+        };
+        let st = LowStorageStepper::ees25();
+        let y0 = [0.4, -0.2];
+        let mut rng = Pcg64::new(1);
+        let peak = |method: AdjointMethod, steps: usize, rng: &mut Pcg64| -> usize {
+            let path = BrownianPath::sample(rng, 1, steps, 1.0 / steps as f64);
+            let obs = vec![steps];
+            let loss = MseToTargets {
+                targets: vec![0.0; 2],
+            };
+            grad_euclidean(&st, method, &vf, 0.0, &y0, &path, &obs, &loss).peak_f64s
+        };
+        let (f1, f4) = (
+            peak(AdjointMethod::Full, 256, &mut rng),
+            peak(AdjointMethod::Full, 1024, &mut rng),
+        );
+        assert!(
+            (f4 as f64 / f1 as f64) > 3.0,
+            "Full must scale ~linearly: {f1} -> {f4}"
+        );
+        let (r1, r4) = (
+            peak(AdjointMethod::Recursive, 256, &mut rng),
+            peak(AdjointMethod::Recursive, 1024, &mut rng),
+        );
+        let ratio = r4 as f64 / r1 as f64;
+        assert!(
+            ratio > 1.5 && ratio < 3.0,
+            "Recursive must scale ~√n: {r1} -> {r4}"
+        );
+        let (v1, v4) = (
+            peak(AdjointMethod::Reversible, 256, &mut rng),
+            peak(AdjointMethod::Reversible, 1024, &mut rng),
+        );
+        assert_eq!(v1, v4, "Reversible must be O(1): {v1} -> {v4}");
+        assert!(v4 < r4 && r4 < f4);
+    }
+}

@@ -1,0 +1,142 @@
+//! In-crate benchmark harness (criterion is not available in the offline
+//! build). Provides warmup + repeated timing with mean/std/min reporting and
+//! simple table formatting used by every `benches/*.rs` target.
+
+use std::time::Instant;
+
+/// Timing statistics over repetitions.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub min_secs: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10.4} ms ± {:>8.4} (min {:>8.4}, n={})",
+            self.name,
+            self.mean_secs * 1e3,
+            self.std_secs * 1e3,
+            self.min_secs * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` with `warmup` discarded iterations and `iters` timed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / iters as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_secs: mean,
+        std_secs: var.sqrt(),
+        min_secs: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Simple fixed-width table printer for bench outputs.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths.iter()) {
+                s.push_str(&format!(" {:<width$} |", c, width = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<width$}|", "", width = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Format a float compactly for table cells.
+pub fn fmt(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1e4 || x.abs() < 1e-3 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0;
+        let s = bench("noop", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.min_secs <= s.mean_secs + 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Method", "Value"]);
+        t.row(&["EES(2,5)".into(), "0.05".into()]);
+        t.row(&["Reversible Heun".into(), "1.02".into()]);
+        let r = t.render();
+        assert!(r.contains("EES(2,5)"));
+        assert!(r.lines().count() == 4);
+        let widths: Vec<usize> = r.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{r}");
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert!(fmt(12345.0).contains('e'));
+        assert!(fmt(0.25).starts_with("0.25"));
+    }
+}

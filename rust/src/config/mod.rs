@@ -1,0 +1,195 @@
+//! Minimal configuration system (no external crates are available in the
+//! offline build, so this implements the TOML subset the experiment configs
+//! use: `[sections]`, `key = value` with strings, bools, integers, floats
+//! and flat numeric arrays, plus `#` comments).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Array(Vec<f64>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: `section.key` → value (top-level keys use section "").
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, parse_value(v.trim(), lineno + 1)?);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str, lineno: usize) -> Result<Value, String> {
+    if v.starts_with('"') && v.ends_with('"') && v.len() >= 2 {
+        return Ok(Value::Str(v[1..v.len() - 1].to_string()));
+    }
+    if v == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if v == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if v.starts_with('[') && v.ends_with(']') {
+        let inner = &v[1..v.len() - 1];
+        let mut arr = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            arr.push(
+                p.parse::<f64>()
+                    .map_err(|_| format!("line {lineno}: bad number '{p}'"))?,
+            );
+        }
+        return Ok(Value::Array(arr));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("line {lineno}: cannot parse value '{v}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let text = r#"
+# experiment config
+name = "ou"
+epochs = 250
+lr = 1e-3
+stiff = false
+
+[solver]
+scheme = "ees25"   # the good one
+step = 0.25
+obs = [4, 8, 12]
+"#;
+        let c = Config::parse(text).unwrap();
+        assert_eq!(c.str_or("name", ""), "ou");
+        assert_eq!(c.usize_or("epochs", 0), 250);
+        assert!((c.f64_or("lr", 0.0) - 1e-3).abs() < 1e-15);
+        assert!(!c.bool_or("stiff", true));
+        assert_eq!(c.str_or("solver.scheme", ""), "ees25");
+        assert!((c.f64_or("solver.step", 0.0) - 0.25).abs() < 1e-15);
+        match c.get("solver.obs").unwrap() {
+            Value::Array(a) => assert_eq!(a, &vec![4.0, 8.0, 12.0]),
+            _ => panic!("expected array"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let c = Config::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(c.str_or("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Config::parse("nonsense without equals").is_err());
+        assert!(Config::parse("x = @@").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("missing", 7), 7);
+    }
+}

@@ -1,0 +1,197 @@
+//! Figure 1 / Table 15: memory growth of one forward+backward solve of a
+//! batch of SDEs on the 7-torus 𝕋⁷ — CF-EES(2,5)+Reversible vs CG2/CG4 with
+//! Full and Recursive adjoints.
+//!
+//! Reproduced property: CF-EES stays flat in the number of steps while the
+//! Full adjoints grow linearly and the Recursive adjoints grow like √n with
+//! a higher constant.
+
+use crate::adjoint::AdjointMethod;
+use crate::bench::Table;
+use crate::coordinator::batch_grad_manifold;
+use crate::lie::Torus;
+use crate::losses::{BatchLoss, EnergyScore};
+use crate::nn::{Activation, Mlp, Workspace};
+use crate::rng::{BrownianPath, Pcg64};
+use crate::solvers::{CfEes, CrouchGrossman, ManifoldStepper};
+use crate::vf::{DiffManifoldVectorField, ManifoldVectorField};
+use std::sync::Mutex;
+
+/// Small neural field on 𝕋ⁿ (hidden width configurable) with additive noise.
+pub struct TorusField {
+    pub n: usize,
+    pub net: Mlp,
+    ws: Mutex<Workspace>,
+}
+
+impl TorusField {
+    pub fn new(n: usize, width: usize, rng: &mut Pcg64) -> Self {
+        Self {
+            n,
+            net: Mlp::new(
+                vec![2 * n, width, n],
+                Activation::Silu,
+                Activation::Identity,
+                rng,
+            ),
+            ws: Mutex::new(Workspace::default()),
+        }
+    }
+    fn encode(&self, y: &[f64]) -> Vec<f64> {
+        let mut e = vec![0.0; 2 * self.n];
+        for i in 0..self.n {
+            e[i] = y[i].sin();
+            e[self.n + i] = y[i].cos();
+        }
+        e
+    }
+}
+
+impl ManifoldVectorField for TorusField {
+    fn point_dim(&self) -> usize {
+        self.n
+    }
+    fn algebra_dim(&self) -> usize {
+        self.n
+    }
+    fn noise_dim(&self) -> usize {
+        self.n
+    }
+    fn generator(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        let ws = &mut *self.ws.lock().unwrap();
+        let e = self.encode(y);
+        self.net.forward(&e, out, ws);
+        for (o, w) in out.iter_mut().zip(dw.iter()) {
+            *o = *o * h + 0.2 * w;
+        }
+    }
+}
+
+impl DiffManifoldVectorField for TorusField {
+    fn num_params(&self) -> usize {
+        self.net.num_params()
+    }
+    fn vjp(
+        &self,
+        _t: f64,
+        y: &[f64],
+        h: f64,
+        _dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+    ) {
+        let ws = &mut *self.ws.lock().unwrap();
+        let e = self.encode(y);
+        let mut out = vec![0.0; self.n];
+        self.net.forward(&e, &mut out, ws);
+        let cot_h: Vec<f64> = cot.iter().map(|c| c * h).collect();
+        let mut d_e = vec![0.0; 2 * self.n];
+        self.net.vjp(&e, &cot_h, &mut d_e, d_theta, ws);
+        for i in 0..self.n {
+            d_y[i] += d_e[i] * y[i].cos() - d_e[self.n + i] * y[i].sin();
+        }
+    }
+}
+
+/// Peak adjoint memory (bytes) per (method, adjoint) and step count.
+pub fn measure(n_torus: usize, batch: usize, steps_list: &[usize]) -> Vec<(usize, Vec<usize>)> {
+    let sp = Torus::new(n_torus);
+    let field = TorusField::new(n_torus, 16, &mut Pcg64::new(5));
+    let loss = EnergyScore {
+        data: vec![0.0; n_torus],
+        data_count: 1,
+        wrap_dims: n_torus,
+    };
+    let roster: Vec<(Box<dyn ManifoldStepper>, AdjointMethod)> = vec![
+        (Box::new(CfEes::ees25()), AdjointMethod::Reversible),
+        (Box::new(CrouchGrossman::cg2()), AdjointMethod::Full),
+        (Box::new(CrouchGrossman::cg2()), AdjointMethod::Recursive),
+        (Box::new(CrouchGrossman::cg4_cost_profile()), AdjointMethod::Full),
+        (
+            Box::new(CrouchGrossman::cg4_cost_profile()),
+            AdjointMethod::Recursive,
+        ),
+    ];
+    let mut out = Vec::new();
+    for &steps in steps_list {
+        let mut rng = Pcg64::new(17);
+        let h = 1.0 / steps as f64;
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.1; n_torus]).collect();
+        let paths: Vec<BrownianPath> = (0..batch)
+            .map(|_| BrownianPath::sample(&mut rng, n_torus, steps, h))
+            .collect();
+        let obs = vec![steps];
+        let mut mems = Vec::new();
+        for (st, adj) in &roster {
+            let (_, _, mem) = batch_grad_manifold(
+                st.as_ref(),
+                *adj,
+                &sp,
+                &field,
+                &y0s,
+                &paths,
+                &obs,
+                &loss as &dyn BatchLoss,
+            );
+            mems.push(mem * 8);
+        }
+        out.push((steps, mems));
+    }
+    out
+}
+
+pub fn run(batch: usize, steps_list: &[usize]) -> String {
+    let rows = measure(7, batch, steps_list);
+    let mut t = Table::new(&[
+        "n_steps",
+        "CF-EES (Reversible)",
+        "CG2 (Full)",
+        "CG2 (Recursive)",
+        "CG4 (Full)",
+        "CG4 (Recursive)",
+    ]);
+    for (steps, mems) in &rows {
+        let mut cells = vec![steps.to_string()];
+        cells.extend(mems.iter().map(|m| m.to_string()));
+        t.row(&cells);
+    }
+    format!(
+        "== Figure 1 / Table 15: peak adjoint memory (bytes), batch {} SDEs on T^7 ==\n{}",
+        batch,
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The Figure-1 shape: CF-EES flat; Full adjoints linear; Recursive in
+    /// between; CG4 ≥ CG2 (more stages).
+    #[test]
+    fn fig1_scaling_shape() {
+        let rows = measure(7, 2, &[10, 40, 160]);
+        let (m0, m1, m2) = (&rows[0].1, &rows[1].1, &rows[2].1);
+        assert_eq!(m0[0], m2[0], "CF-EES reversible memory must be flat");
+        // Growth analysis on *differences* (constant parameter-gradient
+        // storage is shared by every method): linear adjoints have
+        // d(40->160)/d(10->40) = 120/30 = 4, sqrt adjoints ~2.
+        let d1_full = (m1[1] - m0[1]) as f64;
+        let d2_full = (m2[1] - m1[1]) as f64;
+        let full_ratio = d2_full / d1_full;
+        assert!(
+            (full_ratio - 4.0).abs() < 0.8,
+            "CG2 Full growth must be linear: ratio {full_ratio}"
+        );
+        let d1_rec = (m1[2] - m0[2]).max(1) as f64;
+        let d2_rec = (m2[2] - m1[2]).max(1) as f64;
+        let rec_ratio = d2_rec / d1_rec;
+        assert!(
+            rec_ratio < 3.2,
+            "CG2 Recursive must grow sublinearly: ratio {rec_ratio}"
+        );
+        // At the largest step count: Reversible < Recursive < Full.
+        assert!(m2[0] < m2[2] && m2[2] < m2[1]);
+    }
+}

@@ -1,0 +1,75 @@
+//! Figure 2: absolute stability domains of EES(2,5), EES(2,7), RK4,
+//! MCF Euler and Reversible Heun. Emits an ASCII rendering of each region
+//! plus scalar summaries (area over [−4,1]×[−4,4], real/imaginary-axis
+//! extents) — the comparison the figure makes visually.
+
+use crate::bench::Table;
+use crate::stability::{
+    real_axis_stability_limit, stability_region_area, stability_region_grid, C64,
+    StabilityScheme,
+};
+use crate::tableau::Tableau;
+
+fn imag_axis_limit(s: &StabilityScheme) -> f64 {
+    let n = 2000;
+    let mut limit = 0.0;
+    for i in 1..=n {
+        let y = 4.0 * i as f64 / n as f64;
+        if s.amplification(C64::new(0.0, y)) <= 1.0 + 1e-9 {
+            limit = y;
+        } else {
+            break;
+        }
+    }
+    limit
+}
+
+fn ascii_region(s: &StabilityScheme, w: usize, h: usize) -> String {
+    let grid = stability_region_grid(s, (-4.0, 1.0), (-2.5, 2.5), w, h);
+    let mut out = String::new();
+    for j in (0..h).rev() {
+        for i in 0..w {
+            out.push(if grid[j * w + i] { '#' } else { '.' });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn run(render: bool) -> String {
+    let schemes = vec![
+        StabilityScheme::Rk(Tableau::ees25_default()),
+        StabilityScheme::Rk(Tableau::ees27_default()),
+        StabilityScheme::Rk(Tableau::rk4()),
+        StabilityScheme::McfEuler { lambda: 0.999 },
+        StabilityScheme::ReversibleHeun,
+    ];
+    let mut t = Table::new(&["Scheme", "Area [-4,1]x[-4,4]", "Real-axis", "Imag-axis"]);
+    let mut out = String::from("== Figure 2: absolute stability domains ==\n");
+    for s in &schemes {
+        t.row(&[
+            s.name(),
+            format!("{:.2}", stability_region_area(s)),
+            format!("{:.3}", real_axis_stability_limit(s, 6.0, 1e-9)),
+            format!("{:.3}", imag_axis_limit(s)),
+        ]);
+    }
+    out.push_str(&t.render());
+    if render {
+        for s in &schemes {
+            out.push_str(&format!("\n--- {} ---\n", s.name()));
+            out.push_str(&ascii_region(s, 56, 24));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig2_runs_and_orders_schemes() {
+        let out = super::run(false);
+        assert!(out.contains("EES(2,5)"));
+        assert!(out.contains("Reversible Heun"));
+    }
+}

@@ -1,0 +1,45 @@
+//! Figure 3: cross-sections of the mean-square stability domains of
+//! EES(2,5) vs RK3 and RK4 on dy = λy dt + μy dW. For each real λh on a
+//! grid we report the largest noise level μ√h that keeps E|R(ρ)|² < 1.
+
+use crate::bench::Table;
+use crate::rng::Pcg64;
+use crate::stability::{ms_stability_boundary, StabilityScheme};
+use crate::tableau::Tableau;
+
+pub fn run(mc: usize) -> String {
+    let grid: Vec<f64> = (0..=10).map(|i| -3.0 + 0.3 * i as f64).collect();
+    let mut rng = Pcg64::new(2024);
+    let schemes = [
+        StabilityScheme::Rk(Tableau::ees25_default()),
+        StabilityScheme::Rk(Tableau::rk3()),
+        StabilityScheme::Rk(Tableau::rk4()),
+    ];
+    let bounds: Vec<Vec<f64>> = schemes
+        .iter()
+        .map(|s| ms_stability_boundary(s, &grid, 4.0, &mut rng, mc))
+        .collect();
+    let mut t = Table::new(&["lambda*h", "EES(2,5) mu_max", "RK3 mu_max", "RK4 mu_max"]);
+    for (i, &lh) in grid.iter().enumerate() {
+        t.row(&[
+            format!("{lh:.1}"),
+            format!("{:.3}", bounds[0][i]),
+            format!("{:.3}", bounds[1][i]),
+            format!("{:.3}", bounds[2][i]),
+        ]);
+    }
+    format!(
+        "== Figure 3: mean-square stability boundary (real cross-section) ==\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig3_runs() {
+        let out = super::run(500);
+        assert!(out.contains("mu_max"));
+        assert!(out.lines().count() > 10);
+    }
+}

@@ -1,0 +1,166 @@
+//! Figure 7 (Appendix G): convergence rates of EES(2,5) and EES(2,7) on the
+//! fBm-driven RDE  dy = cos(y) dX¹ + sin(y) dX² , y₀ = 1, t ∈ [0,1],
+//! for Hurst H ∈ {0.4, 0.5, 0.6}.
+//!
+//! Two error curves per scheme (Appendix G):
+//!  - E(h): mean max discretisation error vs a fine-grid reference
+//!    (expected global rate η₁ ≈ 2H − 1/2 from Theorem B.3);
+//!  - Ẽ(h): mean error recovering the initial condition by running the
+//!    scheme backwards (η₂ ≈ 6H − 1 for EES(2,5), 8H − 1 for EES(2,7)).
+
+use super::Scale;
+use crate::bench::Table;
+use crate::rng::{fbm::fgn_davies_harte, BrownianPath, Pcg64};
+use crate::solvers::{RkStepper, Stepper};
+use crate::vf::{ClosureField, VectorField};
+
+fn rde_field() -> impl VectorField {
+    ClosureField {
+        dim: 1,
+        noise_dim: 2,
+        drift: |_t, _y: &[f64], out: &mut [f64]| out[0] = 0.0,
+        diffusion: |_t, y: &[f64], dw: &[f64], out: &mut [f64]| {
+            out[0] = y[0].cos() * dw[0] + y[0].sin() * dw[1];
+        },
+    }
+}
+
+/// Sample a 2-d fBm driver as a BrownianPath-shaped increment sequence.
+pub fn fbm_driver(rng: &mut Pcg64, hurst: f64, steps: usize, h: f64) -> BrownianPath {
+    let x1 = fgn_davies_harte(rng, hurst, steps, h);
+    let x2 = fgn_davies_harte(rng, hurst, steps, h);
+    let mut dw = vec![0.0; steps * 2];
+    for n in 0..steps {
+        dw[2 * n] = x1[n];
+        dw[2 * n + 1] = x2[n];
+    }
+    BrownianPath { h, dim: 2, dw }
+}
+
+pub struct ConvergenceResult {
+    pub hurst: f64,
+    pub scheme: String,
+    /// (h, forward error, backward-recovery error) triples.
+    pub points: Vec<(f64, f64, f64)>,
+    pub forward_slope: f64,
+    pub backward_slope: f64,
+}
+
+pub fn run_scheme(
+    st: &dyn Stepper,
+    name: &str,
+    hurst: f64,
+    scale: Scale,
+) -> ConvergenceResult {
+    let vf = rde_field();
+    let reps = scale.pick(5, 10);
+    let fine = 1024usize;
+    let coarsenings = [32usize, 16, 8, 4];
+    let mut err_fwd = vec![0.0; coarsenings.len()];
+    let mut err_bwd = vec![0.0; coarsenings.len()];
+    let mut rng = Pcg64::new((hurst * 1000.0) as u64 + 7);
+    for _ in 0..reps {
+        let path = fbm_driver(&mut rng, hurst, fine, 1.0 / fine as f64);
+        let ref_traj = crate::solvers::integrate(st, &vf, 0.0, &[1.0], &path);
+        for (ci, &k) in coarsenings.iter().enumerate() {
+            let coarse = path.coarsen(k);
+            let traj = crate::solvers::integrate(st, &vf, 0.0, &[1.0], &coarse);
+            // Max error over the coarse grid vs the fine reference.
+            let mut maxe: f64 = 0.0;
+            for n in 0..=coarse.steps() {
+                maxe = maxe.max((traj[n] - ref_traj[n * k]).abs());
+            }
+            err_fwd[ci] += maxe / reps as f64;
+            // Backward recovery of the initial condition.
+            let mut y = vec![traj[coarse.steps()]];
+            for n in (0..coarse.steps()).rev() {
+                st.step_back(&vf, n as f64 * coarse.h, coarse.h, coarse.increment(n), &mut y);
+            }
+            err_bwd[ci] += (y[0] - 1.0).abs() / reps as f64;
+        }
+    }
+    let hs: Vec<f64> = coarsenings.iter().map(|&k| k as f64 / fine as f64).collect();
+    let slope = |errs: &[f64]| -> f64 {
+        // Least-squares slope of log err vs log h.
+        let n = errs.len() as f64;
+        let lx: Vec<f64> = hs.iter().map(|h| h.ln()).collect();
+        let ly: Vec<f64> = errs.iter().map(|e| e.max(1e-300).ln()).collect();
+        let mx = lx.iter().sum::<f64>() / n;
+        let my = ly.iter().sum::<f64>() / n;
+        let num: f64 = lx.iter().zip(ly.iter()).map(|(x, y)| (x - mx) * (y - my)).sum();
+        let den: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+        num / den
+    };
+    ConvergenceResult {
+        hurst,
+        scheme: name.to_string(),
+        points: hs
+            .iter()
+            .zip(err_fwd.iter().zip(err_bwd.iter()))
+            .map(|(&h, (&f, &b))| (h, f, b))
+            .collect(),
+        forward_slope: slope(&err_fwd),
+        backward_slope: slope(&err_bwd),
+    }
+}
+
+pub fn run(scale: Scale) -> String {
+    let mut t = Table::new(&[
+        "H",
+        "Scheme",
+        "fwd slope (want ~2H-1/2)",
+        "bwd slope (want ~mH-1)",
+    ]);
+    for &hurst in &[0.4, 0.5, 0.6] {
+        for (st, name, m) in [
+            (RkStepper::ees25(), "EES(2,5)", 6.0),
+            (RkStepper::ees27(), "EES(2,7)", 8.0),
+        ] {
+            let r = run_scheme(&st, name, hurst, scale);
+            t.row(&[
+                format!("{hurst}"),
+                name.into(),
+                format!("{:.2} (want {:.2})", r.forward_slope, 2.0 * hurst - 0.5),
+                format!("{:.2} (want {:.2})", r.backward_slope, m * hurst - 1.0),
+            ]);
+        }
+    }
+    format!("== Figure 7: EES convergence under fBm ==\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Convergence shape at H = 0.5 (Brownian): the forward error decreases
+    /// with h and the backward-recovery error has a much steeper slope
+    /// (near-reversibility), the Figure-7 signature.
+    #[test]
+    fn fig7_slopes_brownian() {
+        let r = run_scheme(&RkStepper::ees25(), "EES(2,5)", 0.5, Scale::Smoke);
+        assert!(
+            r.forward_slope > 0.3,
+            "forward slope {} must be positive",
+            r.forward_slope
+        );
+        assert!(
+            r.backward_slope > r.forward_slope + 0.8,
+            "backward slope {} must far exceed forward {}",
+            r.backward_slope,
+            r.forward_slope
+        );
+    }
+
+    /// Rougher driver ⇒ slower forward convergence (H = 0.4 vs 0.6).
+    #[test]
+    fn rougher_is_slower() {
+        let lo = run_scheme(&RkStepper::ees25(), "EES(2,5)", 0.4, Scale::Smoke);
+        let hi = run_scheme(&RkStepper::ees25(), "EES(2,5)", 0.6, Scale::Smoke);
+        assert!(
+            lo.forward_slope < hi.forward_slope + 0.4,
+            "H=0.4 slope {} should not exceed H=0.6 slope {} by much",
+            lo.forward_slope,
+            hi.forward_slope
+        );
+    }
+}

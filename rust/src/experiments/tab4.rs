@@ -1,0 +1,338 @@
+//! Table 4 / Figure 6 / Table 14: latent SDE on the sphere S^{n−1} for
+//! activity classification (synthetic UCI-HAR stand-in, see DESIGN.md).
+//!
+//! Pipeline per trajectory: an affine context encoder maps the first
+//! observations to an initial latent point on Sⁿ⁻¹; the neural drift evolves
+//! it with the chosen geometric solver; a linear head classifies each latent
+//! state; training backpropagates the per-timepoint cross-entropy through
+//! the solver with the chosen adjoint (classifier/encoder trained directly).
+
+use super::Scale;
+use crate::adjoint::AdjointMethod;
+use crate::bench::Table;
+use crate::lie::{HomogeneousSpace, Sphere};
+use crate::memory::{MemMeter, MeteredTape};
+use crate::models::sphere_lsde::{Classifier, SphereDataset, SphereNeuralField};
+use crate::nn::optim::{clip_global_norm, Optimizer};
+use crate::rng::{BrownianPath, Pcg64};
+use crate::solvers::{CfEes, CrouchGrossman, GeoEulerMaruyama, ManifoldStepper, Rkmk};
+use crate::vf::DiffManifoldVectorField;
+use std::time::Instant;
+
+pub struct SphereRow {
+    pub method: String,
+    pub adjoint: String,
+    pub evals_per_step: usize,
+    pub steps: usize,
+    pub test_accuracy: f64,
+    pub runtime_secs: f64,
+    pub peak_mem: usize,
+}
+
+fn roster() -> Vec<(Box<dyn ManifoldStepper>, AdjointMethod)> {
+    vec![
+        (Box::new(GeoEulerMaruyama::new()), AdjointMethod::Full),
+        (Box::new(CrouchGrossman::cg2()), AdjointMethod::Full),
+        (Box::new(CfEes::ees25()), AdjointMethod::Reversible),
+        (Box::new(Rkmk::srkmk3()), AdjointMethod::Full),
+    ]
+}
+
+/// Encode the mean of the first few observations into an initial latent
+/// point (affine encoder with parameters `enc`: (n_latent × (obs_dim+1))).
+fn encode(enc: &[f64], obs0: &[f64], obs_dim: usize, n_latent: usize, sp: &Sphere) -> Vec<f64> {
+    let mut z = vec![0.0; n_latent];
+    for i in 0..n_latent {
+        let row = &enc[i * (obs_dim + 1)..(i + 1) * (obs_dim + 1)];
+        z[i] = row[obs_dim]
+            + row[..obs_dim]
+                .iter()
+                .zip(obs0.iter())
+                .map(|(a, b)| a * b)
+                .sum::<f64>();
+    }
+    sp.project(&mut z);
+    z
+}
+
+/// One training/eval run for a given (stepper, adjoint). Returns
+/// (test accuracy, runtime, peak adjoint mem).
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    st: &dyn ManifoldStepper,
+    adj: AdjointMethod,
+    scale: Scale,
+    n_latent: usize,
+    budget: usize,
+) -> SphereRow {
+    let mut rng = Pcg64::new(2718);
+    let obs_dim = 12;
+    let n_classes = 7;
+    let ds = SphereDataset::new(n_latent, obs_dim, n_classes, &mut Pcg64::new(42));
+    let epochs = scale.pick(6, 30);
+    let batch = scale.pick(8, 64);
+    let n_obs_data = scale.pick(10, 30);
+    let evals = st.evals_per_step();
+    let steps = super::steps_for_budget(budget, evals);
+    let h = 1.0 / steps as f64;
+    let sp = Sphere::new(n_latent);
+    let mut field = SphereNeuralField::new(n_latent, scale.pick(16, 64), 0.05, &mut Pcg64::new(7));
+    let mut classifier = Classifier::new(n_classes, n_latent, &mut Pcg64::new(8));
+    let mut enc = vec![0.0; n_latent * (obs_dim + 1)];
+    Pcg64::new(9).fill_normal_scaled(0.1, &mut enc);
+    let mut opt_f = Optimizer::adam(3e-3, field.num_params());
+    let mut opt_c = Optimizer::adam(1e-2, classifier.w.len());
+    let t0 = Instant::now();
+    let mut peak_mem = 0usize;
+    // Observation steps inside the latent solve: classify at each quarter.
+    let class_obs: Vec<usize> = (1..=4).map(|k| k * steps / 4).collect();
+    for _ in 0..epochs {
+        let mut d_field = vec![0.0; field.num_params()];
+        let mut d_cls = vec![0.0; classifier.w.len()];
+        for _ in 0..batch {
+            let (obs, label) = ds.sample(n_obs_data, 1.0 / n_obs_data as f64, &mut rng);
+            let z0 = encode(&enc, &obs[..obs_dim], obs_dim, n_latent, &sp);
+            let path = BrownianPath::sample(&mut rng, n_latent, steps, h);
+            // Forward with taping per adjoint.
+            let mut meter = MemMeter::new();
+            meter.alloc(2 * n_latent + sp.algebra_dim());
+            let seg = (steps as f64).sqrt().ceil() as usize;
+            let mut tape = MeteredTape::new();
+            let mut z = z0.clone();
+            let mut class_states: Vec<Vec<f64>> = Vec::new();
+            if adj != AdjointMethod::Reversible {
+                tape.push(&z, &mut meter);
+            }
+            for n in 0..steps {
+                st.step(&sp, &field, n as f64 * h, h, path.increment(n), &mut z);
+                match adj {
+                    AdjointMethod::Full => tape.push(&z, &mut meter),
+                    AdjointMethod::Recursive => {
+                        if (n + 1) % seg == 0 {
+                            tape.push(&z, &mut meter);
+                        }
+                    }
+                    AdjointMethod::Reversible => {}
+                }
+                if class_obs.contains(&(n + 1)) {
+                    class_states.push(z.clone());
+                }
+            }
+            // Loss + cotangents at classification points.
+            let mut cots: Vec<Vec<f64>> = Vec::new();
+            for zs in &class_states {
+                let mut d_z = vec![0.0; n_latent];
+                classifier.ce_grad(zs, label, &mut d_z, &mut d_cls);
+                cots.push(d_z);
+            }
+            // Backward sweep.
+            let mut lambda = vec![0.0; n_latent];
+            let mut seg_buf = MeteredTape::new();
+            let mut ci = class_states.len();
+            for n in (0..steps).rev() {
+                if class_obs.contains(&(n + 1)) {
+                    ci -= 1;
+                    for d in 0..n_latent {
+                        lambda[d] += cots[ci][d];
+                    }
+                }
+                let t = n as f64 * h;
+                let dw = path.increment(n);
+                let prev: Vec<f64> = match adj {
+                    AdjointMethod::Full => tape.get(n).to_vec(),
+                    AdjointMethod::Reversible => {
+                        st.step_back(&sp, &field, t, h, dw, &mut z);
+                        z.clone()
+                    }
+                    AdjointMethod::Recursive => {
+                        if seg_buf.is_empty() {
+                            let seg_start = (n / seg) * seg;
+                            let mut s = tape.get(n / seg).to_vec();
+                            seg_buf.push(&s, &mut meter);
+                            for m in seg_start..n {
+                                st.step(&sp, &field, m as f64 * h, h, path.increment(m), &mut s);
+                                seg_buf.push(&s, &mut meter);
+                            }
+                        }
+                        seg_buf.pop(&mut meter).unwrap()
+                    }
+                };
+                st.backprop_step(&sp, &field, t, h, dw, &prev, &mut lambda, &mut d_field);
+            }
+            peak_mem = peak_mem.max(meter.peak_f64s());
+        }
+        clip_global_norm(&mut d_field, 1.0);
+        let mut pf = field.params();
+        opt_f.step(&mut pf, &d_field);
+        field.set_params(&pf);
+        opt_c.step(&mut classifier.w, &d_cls);
+    }
+    // Test accuracy: per-timepoint classification at the 4 horizons.
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let test_n = scale.pick(32, 256);
+    for _ in 0..test_n {
+        let (obs, label) = ds.sample(n_obs_data, 1.0 / n_obs_data as f64, &mut rng);
+        let mut z = encode(&enc, &obs[..obs_dim], obs_dim, n_latent, &sp);
+        let path = BrownianPath::sample(&mut rng, n_latent, steps, h);
+        for n in 0..steps {
+            st.step(&sp, &field, n as f64 * h, h, path.increment(n), &mut z);
+            if class_obs.contains(&(n + 1)) {
+                if classifier.predict(&z) == label {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+    }
+    SphereRow {
+        method: st.name(),
+        adjoint: adj.name().into(),
+        evals_per_step: evals,
+        steps,
+        test_accuracy: 100.0 * correct as f64 / total as f64,
+        runtime_secs: t0.elapsed().as_secs_f64(),
+        peak_mem,
+    }
+}
+
+pub fn run_rows(scale: Scale) -> Vec<SphereRow> {
+    let n_latent = scale.pick(6, 16);
+    let budget = scale.pick(24, 30);
+    roster()
+        .into_iter()
+        .map(|(st, adj)| run_one(st.as_ref(), adj, scale, n_latent, budget))
+        .collect()
+}
+
+/// Figure 6 / Table 14: memory of one forward+backward latent solve vs
+/// number of steps, CF-EES+Reversible vs Geo E-M+Full.
+pub fn run_memory(n_latent: usize, steps_list: &[usize]) -> String {
+    let sp = Sphere::new(n_latent);
+    let field = SphereNeuralField::new(n_latent, 16, 0.05, &mut Pcg64::new(7));
+    let mut t = Table::new(&["n_steps", "CF-EES(2,5) (Reversible)", "Geo E-M (Full)"]);
+    for &steps in steps_list {
+        let mut cells = vec![steps.to_string()];
+        let order: Vec<(Box<dyn ManifoldStepper>, AdjointMethod)> = vec![
+            (Box::new(CfEes::ees25()), AdjointMethod::Reversible),
+            (Box::new(GeoEulerMaruyama::new()), AdjointMethod::Full),
+        ];
+        for (st, adj) in order {
+            let mut rng = Pcg64::new(3);
+            let h = 1.0 / steps as f64;
+            let mut z = vec![0.0; n_latent];
+            z[0] = 1.0;
+            let path = BrownianPath::sample(&mut rng, n_latent, steps, h);
+            let mut meter = MemMeter::new();
+            meter.alloc(2 * n_latent + sp.algebra_dim());
+            let mut tape = MeteredTape::new();
+            if adj == AdjointMethod::Full {
+                tape.push(&z, &mut meter);
+            }
+            for n in 0..steps {
+                st.step(&sp, &field, n as f64 * h, h, path.increment(n), &mut z);
+                if adj == AdjointMethod::Full {
+                    tape.push(&z, &mut meter);
+                }
+            }
+            let mut lambda = vec![1.0; n_latent];
+            let mut d_theta = vec![0.0; field.num_params()];
+            meter.alloc(d_theta.len());
+            for n in (0..steps).rev() {
+                let tcur = n as f64 * h;
+                let dw = path.increment(n);
+                let prev = match adj {
+                    AdjointMethod::Full => tape.get(n).to_vec(),
+                    _ => {
+                        st.step_back(&sp, &field, tcur, h, dw, &mut z);
+                        z.clone()
+                    }
+                };
+                st.backprop_step(&sp, &field, tcur, h, dw, &prev, &mut lambda, &mut d_theta);
+            }
+            cells.push((meter.peak_f64s() * 8).to_string());
+        }
+        t.row(&cells);
+    }
+    format!(
+        "== Figure 6 / Table 14: peak adjoint memory (bytes), latent SDE on S^{} ==\n{}",
+        n_latent - 1,
+        t.render()
+    )
+}
+
+pub fn run(scale: Scale) -> String {
+    let rows = run_rows(scale);
+    let mut t = Table::new(&[
+        "Method",
+        "Adjoint",
+        "#Eval./Step",
+        "Step Size",
+        "Test accuracy (%)",
+        "Runtime (s)",
+        "Peak mem (f64s)",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.method.clone(),
+            r.adjoint.clone(),
+            r.evals_per_step.to_string(),
+            format!("1/{}", r.steps),
+            format!("{:.2}", r.test_accuracy),
+            format!("{:.1}", r.runtime_secs),
+            r.peak_mem.to_string(),
+        ]);
+    }
+    format!("== Table 4: latent SDE on the sphere ==\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table-4 shape: all methods beat chance (100/7 ≈ 14.3%) and the
+    /// reversible CF-EES run uses the least adjoint memory.
+    #[test]
+    fn tab4_shape() {
+        let rows = run_rows(Scale::Smoke);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(
+                r.test_accuracy > 100.0 / 7.0,
+                "{} acc {}",
+                r.method,
+                r.test_accuracy
+            );
+        }
+        let rev = rows.iter().find(|r| r.adjoint == "Reversible").unwrap();
+        for r in rows.iter().filter(|r| r.adjoint == "Full") {
+            assert!(
+                rev.peak_mem < r.peak_mem,
+                "reversible {} vs {} {}",
+                rev.peak_mem,
+                r.method,
+                r.peak_mem
+            );
+        }
+    }
+
+    #[test]
+    fn fig6_memory_flat_vs_linear() {
+        let out = run_memory(4, &[10, 40, 160]);
+        let nums: Vec<Vec<usize>> = out
+            .lines()
+            .filter(|l| l.starts_with("| 1") || l.starts_with("| 4"))
+            .map(|l| {
+                l.split('|')
+                    .filter_map(|c| c.trim().parse::<usize>().ok())
+                    .collect()
+            })
+            .collect();
+        assert_eq!(nums.len(), 3);
+        assert_eq!(nums[0][1], nums[2][1], "CF-EES memory constant");
+        // Linear growth of the Full tape: increment ratio (40->160)/(10->40) = 4.
+        let d1 = (nums[1][2] - nums[0][2]) as f64;
+        let d2 = (nums[2][2] - nums[1][2]) as f64;
+        assert!((d2 / d1 - 4.0).abs() < 0.8, "Geo E-M growth ratio {}", d2 / d1);
+    }
+}

@@ -1,0 +1,168 @@
+//! Table 9 / Figure 13: Langevin molecular-dynamics proxy — train the
+//! water-like force field through long rollouts under a fixed evaluation
+//! budget, minimising the dipole-velocity proxy (eq. 22), with every solver
+//! using the Reversible adjoint (baselines via the MCF wrapper, as in I.7).
+
+use super::{euclidean_roster, steps_for_budget, Scale};
+use crate::adjoint::AdjointMethod;
+use crate::bench::{fmt, Table};
+use crate::losses::BatchLoss;
+use crate::memory::MemMeter;
+use crate::models::md::WaterSystem;
+use crate::nn::optim::Optimizer;
+use crate::rng::{BrownianPath, Pcg64};
+use crate::vf::VectorField;
+use std::time::Instant;
+
+/// Dipole-velocity proxy loss: mean over batch and steps of |μ̇|²/n_mol,
+/// observed at every recorded state (velocities live in the second half).
+struct DipoleLoss {
+    n_mol: usize,
+    charge: Vec<f64>,
+}
+
+impl BatchLoss for DipoleLoss {
+    fn eval_grad(&self, obs: &[f64], batch: usize, n_obs: usize, dim: usize) -> (f64, Vec<f64>) {
+        let natoms = dim / 6;
+        let mut loss = 0.0;
+        let mut grad = vec![0.0; obs.len()];
+        let norm = 1.0 / (batch * n_obs * self.n_mol) as f64;
+        for b in 0..batch {
+            for o in 0..n_obs {
+                let base = (b * n_obs + o) * dim + 3 * natoms; // velocity block
+                let mut mu = [0.0f64; 3];
+                for a in 0..natoms {
+                    for d in 0..3 {
+                        mu[d] += self.charge[a] * obs[base + a * 3 + d];
+                    }
+                }
+                loss += (mu[0] * mu[0] + mu[1] * mu[1] + mu[2] * mu[2]) * norm;
+                for a in 0..natoms {
+                    for d in 0..3 {
+                        grad[base + a * 3 + d] += 2.0 * mu[d] * self.charge[a] * norm;
+                    }
+                }
+            }
+        }
+        (loss, grad)
+    }
+}
+
+pub struct MdRow {
+    pub method: String,
+    pub evals_per_step: usize,
+    pub steps: usize,
+    pub terminal_loss: Option<f64>,
+    pub runtime_secs: f64,
+    pub peak_mem: usize,
+}
+
+pub fn run_rows(scale: Scale) -> Vec<MdRow> {
+    let n_mol = scale.pick(2, 8);
+    let epochs = scale.pick(6, 40);
+    let batch = scale.pick(2, 6);
+    let budget = scale.pick(48, 252);
+    let t_end = 0.05;
+    let mut rows = Vec::new();
+    for st in euclidean_roster() {
+        let mut rng = Pcg64::new(606);
+        let mut sys = WaterSystem::new(n_mol);
+        let loss = DipoleLoss {
+            n_mol,
+            charge: sys.charge.clone(),
+        };
+        let evals = st.props().evals_per_step;
+        let steps = steps_for_budget(budget, evals);
+        let h = t_end / steps as f64;
+        let n_obs = 4;
+        let stride = (steps / n_obs).max(1);
+        let obs: Vec<usize> = (1..=n_obs).map(|k| (k * stride).min(steps)).collect();
+        let mut opt = Optimizer::adam(5e-4, 4);
+        let t0 = Instant::now();
+        let mut diverged = false;
+        let mut last = f64::NAN;
+        let mut peak = 0usize;
+        for _ in 0..epochs {
+            let field = sys.as_field();
+            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| sys.init_state(&mut rng)).collect();
+            let paths: Vec<BrownianPath> = (0..batch)
+                .map(|_| BrownianPath::sample(&mut rng, field.noise_dim(), steps, h))
+                .collect();
+            let (l, grad, mem) = crate::coordinator::batch_grad_euclidean(
+                st.as_ref(),
+                AdjointMethod::Reversible,
+                &field,
+                &y0s,
+                &paths,
+                &obs,
+                &loss,
+            );
+            peak = peak.max(mem);
+            if !l.is_finite() || grad.iter().any(|g| !g.is_finite()) {
+                diverged = true;
+                break;
+            }
+            let mut g = grad;
+            crate::nn::optim::clip_global_norm(&mut g, 1.0);
+            opt.step(&mut sys.theta, &g);
+            last = l;
+        }
+        let _ = MemMeter::new();
+        rows.push(MdRow {
+            method: st.props().name,
+            evals_per_step: evals,
+            steps,
+            terminal_loss: if diverged { None } else { Some(last) },
+            runtime_secs: t0.elapsed().as_secs_f64(),
+            peak_mem: peak,
+        });
+    }
+    rows
+}
+
+pub fn run(scale: Scale) -> String {
+    let rows = run_rows(scale);
+    let mut t = Table::new(&[
+        "Method",
+        "# Eval. / Step",
+        "Step Size",
+        "Terminal proxy loss",
+        "Runtime (s)",
+    ]);
+    for r in &rows {
+        t.row(&[
+            r.method.clone(),
+            r.evals_per_step.to_string(),
+            format!("1/{}", r.steps),
+            r.terminal_loss.map(fmt).unwrap_or_else(|| "-".into()),
+            format!("{:.1}", r.runtime_secs),
+        ]);
+    }
+    format!("== Table 9: Langevin MD proxy ==\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table-9 shape: EES(2,5) finishes with a finite proxy loss and the
+    /// lowest (or tied) runtime among the solvers that survive.
+    #[test]
+    fn tab9_shape() {
+        let rows = run_rows(Scale::Smoke);
+        let ees = rows.iter().find(|r| r.method.contains("EES")).unwrap();
+        assert!(ees.terminal_loss.is_some(), "EES must not diverge");
+        let survivors: Vec<_> = rows.iter().filter(|r| r.terminal_loss.is_some()).collect();
+        assert!(survivors.len() >= 2, "at least EES + one baseline survive");
+        let min_rt = survivors
+            .iter()
+            .map(|r| r.runtime_secs)
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            ees.runtime_secs <= min_rt * 1.6,
+            "EES runtime {} vs min {}",
+            ees.runtime_secs,
+            min_rt
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! # ees — Explicit and Effectively Symmetric schemes for Neural SDEs on Lie groups
+//!
+//! Reproduction of Shmelev, Thompson & Salvi (2025), *"Explicit and Effectively
+//! Symmetric Schemes for Neural SDEs on Lie Groups"*.
+//!
+//! The crate is organised in layers:
+//!
+//! - **Substrates**: [`rng`] (Brownian / fractional-Brownian drivers), [`linalg`]
+//!   (small dense matrices, matrix exponentials, Fréchet derivatives), [`lie`]
+//!   (homogeneous spaces: ℝⁿ, 𝕋ⁿ, T𝕋ⁿ, SO(3), SO(n), Sⁿ⁻¹), [`nn`] (MLP vector
+//!   fields with hand-written reverse mode), [`sig`] (truncated path signatures).
+//! - **Contribution**: [`tableau`] (EES(2,5;x) / EES(2,7;x) Butcher tableaux and
+//!   their Williamson 2N reductions), [`solvers`] (the scheme zoo: EES, 2N-EES,
+//!   CF-EES, Reversible Heun, McCallum–Foster, Crouch–Grossman, geometric
+//!   Euler–Maruyama, RKMK/SRKMK), [`adjoint`] (Full / Recursive / Reversible
+//!   backpropagation with byte-accurate memory accounting).
+//! - **Evaluation**: [`stability`] (absolute & mean-square stability domains),
+//!   [`models`] (every data-generating system of the paper's evaluation),
+//!   [`losses`], [`experiments`] (one harness per paper table/figure),
+//!   [`coordinator`] (training orchestration) and [`runtime`] (PJRT execution of
+//!   JAX/Pallas-AOT artifacts — Python never on the training path).
+
+pub mod adjoint;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod lie;
+pub mod linalg;
+pub mod losses;
+pub mod memory;
+pub mod models;
+pub mod nn;
+pub mod rng;
+pub mod runtime;
+pub mod sig;
+pub mod solvers;
+pub mod stability;
+pub mod tableau;
+pub mod vf;
+
+pub mod bench;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

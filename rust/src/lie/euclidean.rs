@@ -1,0 +1,57 @@
+//! Flat space ℝⁿ as a (degenerate) homogeneous space: the group is the
+//! translation group, exp is the identity and the action is vector addition.
+//! On this space every CF integrator collapses to its classical Euclidean
+//! form — the paper's "flat manifold collapse" sanity condition, which the
+//! tests of `solvers::cfees` exercise.
+
+use super::{ExpCounter, HomogeneousSpace};
+
+#[derive(Clone, Debug)]
+pub struct Euclidean {
+    n: usize,
+    exps: ExpCounter,
+}
+
+impl Euclidean {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            exps: ExpCounter::default(),
+        }
+    }
+}
+
+impl HomogeneousSpace for Euclidean {
+    fn point_dim(&self) -> usize {
+        self.n
+    }
+    fn algebra_dim(&self) -> usize {
+        self.n
+    }
+
+    fn exp_action(&self, v: &[f64], y: &mut [f64]) {
+        self.exps.bump();
+        for (yi, vi) in y.iter_mut().zip(v.iter()) {
+            *yi += vi;
+        }
+    }
+
+    fn action_pullback(
+        &self,
+        _v: &[f64],
+        _y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+    ) {
+        lam_y.copy_from_slice(lam_out);
+        lam_v.copy_from_slice(lam_out);
+    }
+
+    fn exp_calls(&self) -> u64 {
+        self.exps.get()
+    }
+    fn reset_exp_calls(&self) {
+        self.exps.reset()
+    }
+}

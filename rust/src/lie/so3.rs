@@ -1,0 +1,153 @@
+//! SO(3) with the Rodrigues closed-form exponential — the group used by the
+//! CF-EES convergence experiment on the SO(3) RDE (Appendix G, Figure 8).
+//!
+//! Points are rotation matrices R (row-major 3×3, 9 floats); the algebra
+//! 𝔰𝔬(3) is identified with ℝ³ through the hat map. The action is left
+//! multiplication, Λ(exp(v̂), R) = exp(v̂)·R.
+
+use super::{ExpCounter, HomogeneousSpace};
+use crate::linalg::{
+    expm_frechet_adjoint, mat3mul, matmul, orthogonality_defect, so3_exp, so3_hat,
+};
+
+#[derive(Clone, Debug)]
+pub struct So3 {
+    exps: ExpCounter,
+}
+
+impl So3 {
+    pub fn new() -> Self {
+        Self {
+            exps: ExpCounter::default(),
+        }
+    }
+}
+
+impl Default for So3 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HomogeneousSpace for So3 {
+    fn point_dim(&self) -> usize {
+        9
+    }
+    fn algebra_dim(&self) -> usize {
+        3
+    }
+
+    fn exp_action(&self, v: &[f64], y: &mut [f64]) {
+        self.exps.bump();
+        let e = so3_exp(v);
+        let out = mat3mul(&e, y);
+        y.copy_from_slice(&out);
+    }
+
+    fn project(&self, y: &mut [f64]) {
+        // One Newton step of the polar projection: R ← R(3I − RᵀR)/2.
+        let rt = crate::linalg::transpose(y, 3, 3);
+        let mut rtr = [0.0f64; 9];
+        matmul(&rt, y, &mut rtr, 3, 3, 3);
+        let mut corr = [0.0f64; 9];
+        for i in 0..3 {
+            for j in 0..3 {
+                corr[i * 3 + j] = -0.5 * rtr[i * 3 + j];
+            }
+            corr[i * 3 + i] += 1.5;
+        }
+        let mut out = [0.0f64; 9];
+        matmul(y, &corr, &mut out, 3, 3, 3);
+        y.copy_from_slice(&out);
+    }
+
+    fn constraint_defect(&self, y: &[f64]) -> f64 {
+        orthogonality_defect(y, 3)
+    }
+
+    fn action_pullback(
+        &self,
+        v: &[f64],
+        y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+    ) {
+        // Output = E(v)·Y with E = exp(v̂).
+        // λ_Y = Eᵀ λ_out (matrix cotangent contracted through left mult):
+        //   ⟨λ_out, E dY⟩_F = ⟨Eᵀ λ_out, dY⟩_F.
+        let e = so3_exp(v);
+        let et = crate::linalg::transpose(&e, 3, 3);
+        let mut tmp = [0.0f64; 9];
+        matmul(&et, lam_out, &mut tmp, 3, 3, 3);
+        lam_y.copy_from_slice(&tmp);
+        // λ_v: ⟨λ_out, dE·Y⟩ = ⟨λ_out Yᵀ, dE⟩ with dE = L_{v̂}(hat(dv)).
+        let yt = crate::linalg::transpose(y, 3, 3);
+        let mut w = [0.0f64; 9];
+        matmul(lam_out, &yt, &mut w, 3, 3, 3);
+        let lstar = expm_frechet_adjoint(&so3_hat(v), &w, 3);
+        // Contract against the hat basis: ⟨M, hat(e_k)⟩_F.
+        lam_v[0] = lstar[7] - lstar[5]; // M32 - M23
+        lam_v[1] = lstar[2] - lstar[6]; // M13 - M31
+        lam_v[2] = lstar[3] - lstar[1]; // M21 - M12
+    }
+
+    /// 𝔰𝔬(3) bracket is the cross product under the hat identification.
+    fn bracket(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        out[0] = a[1] * b[2] - a[2] * b[1];
+        out[1] = a[2] * b[0] - a[0] * b[2];
+        out[2] = a[0] * b[1] - a[1] * b[0];
+    }
+
+    fn exp_calls(&self) -> u64 {
+        self.exps.get()
+    }
+    fn reset_exp_calls(&self) {
+        self.exps.reset()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eye;
+
+    #[test]
+    fn action_from_identity_is_exp() {
+        let g = So3::new();
+        let mut y = eye(3);
+        let v = [0.2, -0.1, 0.4];
+        g.exp_action(&v, &mut y);
+        let e = so3_exp(&v);
+        for i in 0..9 {
+            assert!((y[i] - e[i]).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn project_restores_orthogonality() {
+        let g = So3::new();
+        let mut y = eye(3);
+        // Perturb off the manifold.
+        y[1] += 1e-4;
+        y[5] -= 2e-4;
+        let before = g.constraint_defect(&y);
+        g.project(&mut y);
+        let after = g.constraint_defect(&y);
+        assert!(after < before * 1e-2, "before {before} after {after}");
+    }
+
+    #[test]
+    fn composition_matches_bch_first_order() {
+        // exp(u)exp(v) ≈ exp(u+v) for small non-commuting u, v.
+        let g = So3::new();
+        let mut y = eye(3);
+        let (u, v) = ([1e-4, 0.0, 0.0], [0.0, 1e-4, 0.0]);
+        g.exp_action(&v, &mut y);
+        g.exp_action(&u, &mut y);
+        let direct = so3_exp(&[1e-4, 1e-4, 0.0]);
+        for i in 0..9 {
+            assert!((y[i] - direct[i]).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! SO(n) with scaling-and-squaring exponential — substrate for the sphere
+//! Sⁿ⁻¹ ≅ SO(n)/SO(n−1) and for general rotation-valued problems.
+//!
+//! Algebra basis: skew matrices E_{ij} = e_i e_jᵀ − e_j e_iᵀ for i < j in
+//! lexicographic order, so `algebra_dim = n(n−1)/2`.
+
+use super::{ExpCounter, HomogeneousSpace};
+use crate::linalg::{expm, expm_frechet_adjoint, matmul, orthogonality_defect, transpose};
+
+#[derive(Clone, Debug)]
+pub struct SOn {
+    n: usize,
+    exps: ExpCounter,
+}
+
+impl SOn {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2);
+        Self {
+            n,
+            exps: ExpCounter::default(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Coefficients → skew matrix.
+    pub fn hat(&self, v: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        out.fill(0.0);
+        let mut k = 0;
+        for i in 0..n {
+            for j in i + 1..n {
+                out[i * n + j] = v[k];
+                out[j * n + i] = -v[k];
+                k += 1;
+            }
+        }
+    }
+
+    /// Skew matrix → coefficients (reads the upper triangle).
+    pub fn vee(&self, m: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        let mut k = 0;
+        for i in 0..n {
+            for j in i + 1..n {
+                out[k] = m[i * n + j];
+                k += 1;
+            }
+        }
+    }
+
+    /// Contraction of a general matrix M against the basis:
+    /// ⟨M, E_{ij}⟩_F = M_ij − M_ji.
+    pub fn basis_contract(&self, m: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        let mut k = 0;
+        for i in 0..n {
+            for j in i + 1..n {
+                out[k] = m[i * n + j] - m[j * n + i];
+                k += 1;
+            }
+        }
+    }
+}
+
+impl HomogeneousSpace for SOn {
+    fn point_dim(&self) -> usize {
+        self.n * self.n
+    }
+    fn algebra_dim(&self) -> usize {
+        self.n * (self.n - 1) / 2
+    }
+
+    fn exp_action(&self, v: &[f64], y: &mut [f64]) {
+        self.exps.bump();
+        let n = self.n;
+        let mut vh = vec![0.0; n * n];
+        self.hat(v, &mut vh);
+        let e = expm(&vh, n);
+        let mut out = vec![0.0; n * n];
+        matmul(&e, y, &mut out, n, n, n);
+        y.copy_from_slice(&out);
+    }
+
+    fn project(&self, y: &mut [f64]) {
+        let n = self.n;
+        // Newton polar iteration: R ← R(3I − RᵀR)/2, twice.
+        for _ in 0..2 {
+            let rt = transpose(y, n, n);
+            let mut rtr = vec![0.0; n * n];
+            matmul(&rt, y, &mut rtr, n, n, n);
+            let mut corr = vec![0.0; n * n];
+            for i in 0..n {
+                for j in 0..n {
+                    corr[i * n + j] = -0.5 * rtr[i * n + j];
+                }
+                corr[i * n + i] += 1.5;
+            }
+            let mut out = vec![0.0; n * n];
+            matmul(y, &corr, &mut out, n, n, n);
+            y.copy_from_slice(&out);
+        }
+    }
+
+    fn constraint_defect(&self, y: &[f64]) -> f64 {
+        orthogonality_defect(y, self.n)
+    }
+
+    fn action_pullback(
+        &self,
+        v: &[f64],
+        y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+    ) {
+        let n = self.n;
+        let mut vh = vec![0.0; n * n];
+        self.hat(v, &mut vh);
+        let e = expm(&vh, n);
+        let et = transpose(&e, n, n);
+        matmul(&et, lam_out, lam_y, n, n, n);
+        // ⟨λ, dE·Y⟩ = ⟨λYᵀ, dE⟩, dE = L_{v̂}(hat(dv)).
+        let yt = transpose(y, n, n);
+        let mut w = vec![0.0; n * n];
+        matmul(lam_out, &yt, &mut w, n, n, n);
+        let lstar = expm_frechet_adjoint(&vh, &w, n);
+        self.basis_contract(&lstar, lam_v);
+    }
+
+    /// Matrix commutator in the E_{ij} basis.
+    fn bracket(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        let mut ah = vec![0.0; n * n];
+        let mut bh = vec![0.0; n * n];
+        self.hat(a, &mut ah);
+        self.hat(b, &mut bh);
+        let mut ab = vec![0.0; n * n];
+        let mut ba = vec![0.0; n * n];
+        matmul(&ah, &bh, &mut ab, n, n, n);
+        matmul(&bh, &ah, &mut ba, n, n, n);
+        for (x, y) in ab.iter_mut().zip(ba.iter()) {
+            *x -= y;
+        }
+        self.vee(&ab, out);
+    }
+
+    fn exp_calls(&self) -> u64 {
+        self.exps.get()
+    }
+    fn reset_exp_calls(&self) {
+        self.exps.reset()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eye;
+
+    #[test]
+    fn hat_vee_round_trip() {
+        let g = SOn::new(4);
+        let v: Vec<f64> = (0..6).map(|i| i as f64 * 0.1 - 0.25).collect();
+        let mut m = vec![0.0; 16];
+        g.hat(&v, &mut m);
+        // Skew check.
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((m[i * 4 + j] + m[j * 4 + i]).abs() < 1e-15);
+            }
+        }
+        let mut v2 = vec![0.0; 6];
+        g.vee(&m, &mut v2);
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn so3_embedding_consistency() {
+        // SO(3) via SOn must agree with the Rodrigues path up to basis relabel:
+        // basis (E01, E02, E12) corresponds to hat coefficients (−w3, w2, −w1).
+        let g = SOn::new(3);
+        let w = [0.3, -0.2, 0.5]; // Rodrigues vector
+        let v = [-w[2], w[1], -w[0]];
+        let mut y = eye(3);
+        g.exp_action(&v, &mut y);
+        let e = crate::linalg::so3_exp(&w);
+        for i in 0..9 {
+            assert!((y[i] - e[i]).abs() < 1e-12, "{i}");
+        }
+    }
+
+    #[test]
+    fn exp_action_orthogonal_n6() {
+        let g = SOn::new(6);
+        let mut rng = crate::rng::Pcg64::new(1);
+        let mut y = eye(6);
+        for _ in 0..10 {
+            let mut v = vec![0.0; g.algebra_dim()];
+            rng.fill_normal_scaled(0.5, &mut v);
+            g.exp_action(&v, &mut y);
+        }
+        assert!(g.constraint_defect(&y) < 1e-10);
+    }
+}

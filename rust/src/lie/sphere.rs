@@ -1,0 +1,196 @@
+//! The unit sphere Sⁿ⁻¹ ≅ SO(n)/SO(n−1) — state space of the latent SDE
+//! experiment (Section 4, "Latent SDE on the sphere", S¹⁵ with n = 16).
+//!
+//! Points are unit vectors y ∈ ℝⁿ; the group SO(n) acts by matrix
+//! multiplication, so the frozen flow is y ← exp(V)·y with V ∈ 𝔰𝔬(n).
+//! Note the isotropy degeneracy of Example C.1: generators differing by an
+//! element of 𝔰𝔬(n−1)_y act identically at y — the generator maps in
+//! `models::sphere_lsde` fix the rank-2 representative V = a yᵀ − y aᵀ.
+
+use super::{ExpCounter, HomogeneousSpace};
+use crate::linalg::{expm, expm_frechet_adjoint, matvec, matvec_t, norm2};
+
+#[derive(Clone, Debug)]
+pub struct Sphere {
+    /// Ambient dimension n (the sphere is Sⁿ⁻¹).
+    n: usize,
+    exps: ExpCounter,
+}
+
+impl Sphere {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 2);
+        Self {
+            n,
+            exps: ExpCounter::default(),
+        }
+    }
+
+    pub fn ambient_dim(&self) -> usize {
+        self.n
+    }
+
+    /// Rank-2 generator for the tangent direction `a` at `y` (a ⊥ y):
+    /// coefficients of V = a yᵀ − y aᵀ in the E_{ij} basis.
+    pub fn tangent_generator(&self, a: &[f64], y: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        let mut k = 0;
+        for i in 0..n {
+            for j in i + 1..n {
+                out[k] = a[i] * y[j] - y[i] * a[j];
+                k += 1;
+            }
+        }
+    }
+
+    fn hat(&self, v: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        out.fill(0.0);
+        let mut k = 0;
+        for i in 0..n {
+            for j in i + 1..n {
+                out[i * n + j] = v[k];
+                out[j * n + i] = -v[k];
+                k += 1;
+            }
+        }
+    }
+}
+
+impl HomogeneousSpace for Sphere {
+    fn point_dim(&self) -> usize {
+        self.n
+    }
+    fn algebra_dim(&self) -> usize {
+        self.n * (self.n - 1) / 2
+    }
+
+    fn exp_action(&self, v: &[f64], y: &mut [f64]) {
+        self.exps.bump();
+        let n = self.n;
+        let mut vh = vec![0.0; n * n];
+        self.hat(v, &mut vh);
+        let e = expm(&vh, n);
+        let mut out = vec![0.0; n];
+        matvec(&e, y, &mut out, n, n);
+        y.copy_from_slice(&out);
+    }
+
+    fn project(&self, y: &mut [f64]) {
+        let nrm = norm2(y);
+        if nrm > 0.0 {
+            for yi in y.iter_mut() {
+                *yi /= nrm;
+            }
+        }
+    }
+
+    fn constraint_defect(&self, y: &[f64]) -> f64 {
+        (norm2(y) - 1.0).abs()
+    }
+
+    fn action_pullback(
+        &self,
+        v: &[f64],
+        y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+    ) {
+        let n = self.n;
+        let mut vh = vec![0.0; n * n];
+        self.hat(v, &mut vh);
+        let e = expm(&vh, n);
+        // λ_y = Eᵀ λ_out.
+        matvec_t(&e, lam_out, lam_y, n, n);
+        // ⟨λ, dE·y⟩ = ⟨λ yᵀ, dE⟩ with λ yᵀ an n×n rank-1 cotangent.
+        let mut w = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                w[i * n + j] = lam_out[i] * y[j];
+            }
+        }
+        let lstar = expm_frechet_adjoint(&vh, &w, n);
+        let mut k = 0;
+        for i in 0..n {
+            for j in i + 1..n {
+                lam_v[k] = lstar[i * n + j] - lstar[j * n + i];
+                k += 1;
+            }
+        }
+    }
+
+    /// 𝔰𝔬(n) matrix commutator in the E_{ij} basis.
+    fn bracket(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        let mut ah = vec![0.0; n * n];
+        let mut bh = vec![0.0; n * n];
+        self.hat(a, &mut ah);
+        self.hat(b, &mut bh);
+        let mut ab = vec![0.0; n * n];
+        let mut ba = vec![0.0; n * n];
+        crate::linalg::matmul(&ah, &bh, &mut ab, n, n, n);
+        crate::linalg::matmul(&bh, &ah, &mut ba, n, n, n);
+        let mut k = 0;
+        for i in 0..n {
+            for j in i + 1..n {
+                out[k] = ab[i * n + j] - ba[i * n + j];
+                k += 1;
+            }
+        }
+    }
+
+    fn exp_calls(&self) -> u64 {
+        self.exps.get()
+    }
+    fn reset_exp_calls(&self) {
+        self.exps.reset()
+    }
+
+    /// Great-circle distance.
+    fn distance(&self, a: &[f64], b: &[f64]) -> f64 {
+        let dot: f64 = a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+        dot.clamp(-1.0, 1.0).acos()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_on_sphere() {
+        let sp = Sphere::new(4);
+        let mut y = vec![1.0, 0.0, 0.0, 0.0];
+        let mut rng = crate::rng::Pcg64::new(1);
+        for _ in 0..30 {
+            let mut v = vec![0.0; sp.algebra_dim()];
+            rng.fill_normal_scaled(0.4, &mut v);
+            sp.exp_action(&v, &mut y);
+        }
+        assert!(sp.constraint_defect(&y) < 1e-11);
+    }
+
+    #[test]
+    fn tangent_generator_moves_along_tangent() {
+        // For a ⊥ y with ‖y‖=1: V y = a (first-order motion along a).
+        let sp = Sphere::new(3);
+        let y = vec![1.0, 0.0, 0.0];
+        let a = vec![0.0, 1e-5, -2e-5];
+        let mut v = vec![0.0; 3];
+        sp.tangent_generator(&a, &y, &mut v);
+        let mut y2 = y.clone();
+        sp.exp_action(&v, &mut y2);
+        for i in 0..3 {
+            assert!((y2[i] - (y[i] + a[i])).abs() < 1e-9, "{i}");
+        }
+    }
+
+    #[test]
+    fn great_circle_distance() {
+        let sp = Sphere::new(3);
+        let a = vec![1.0, 0.0, 0.0];
+        let b = vec![0.0, 1.0, 0.0];
+        assert!((sp.distance(&a, &b) - std::f64::consts::FRAC_PI_2).abs() < 1e-12);
+    }
+}

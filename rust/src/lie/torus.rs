@@ -1,0 +1,204 @@
+//! The n-torus 𝕋ⁿ (angles in (−π, π]) and its tangent bundle
+//! T𝕋ᴺ ≅ 𝕋ᴺ × ℝᴺ — the state space of the stochastic Kuramoto experiment
+//! (Section 4) and the Figure-1 memory benchmark (𝕋⁷).
+//!
+//! The group is the torus itself (abelian); exp is the identity on the
+//! algebra ℝⁿ and the action is angle addition followed by wrapping. The
+//! wrapped representation never leaves the manifold, which is exactly why a
+//! Lie-group integrator is required: a Euclidean solver on lifted angles
+//! drifts arbitrarily far from the fundamental domain and breaks the
+//! periodic encodings downstream.
+
+use super::{wrap_angle, ExpCounter, HomogeneousSpace};
+
+/// 𝕋ⁿ with angle representation.
+#[derive(Clone, Debug)]
+pub struct Torus {
+    n: usize,
+    exps: ExpCounter,
+}
+
+impl Torus {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            exps: ExpCounter::default(),
+        }
+    }
+}
+
+impl HomogeneousSpace for Torus {
+    fn point_dim(&self) -> usize {
+        self.n
+    }
+    fn algebra_dim(&self) -> usize {
+        self.n
+    }
+
+    fn exp_action(&self, v: &[f64], y: &mut [f64]) {
+        self.exps.bump();
+        for (yi, vi) in y.iter_mut().zip(v.iter()) {
+            *yi = wrap_angle(*yi + vi);
+        }
+    }
+
+    fn project(&self, y: &mut [f64]) {
+        for yi in y.iter_mut() {
+            *yi = wrap_angle(*yi);
+        }
+    }
+
+    fn action_pullback(
+        &self,
+        _v: &[f64],
+        _y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+    ) {
+        // Wrapping is locally the identity chart.
+        lam_y.copy_from_slice(lam_out);
+        lam_v.copy_from_slice(lam_out);
+    }
+
+    fn exp_calls(&self) -> u64 {
+        self.exps.get()
+    }
+    fn reset_exp_calls(&self) {
+        self.exps.reset()
+    }
+
+    fn distance(&self, a: &[f64], b: &[f64]) -> f64 {
+        a.iter()
+            .zip(b.iter())
+            .map(|(x, y)| {
+                let d = wrap_angle(x - y);
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// T𝕋ᴺ = 𝕋ᴺ × ℝᴺ: first `n` coordinates are angles θ, last `n` are
+/// velocities ω. Points are `[θ; ω]`, algebra elements `[dθ; dω]`.
+#[derive(Clone, Debug)]
+pub struct TTorus {
+    n: usize,
+    exps: ExpCounter,
+}
+
+impl TTorus {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            exps: ExpCounter::default(),
+        }
+    }
+    /// Number of oscillators N (point dim is 2N).
+    pub fn oscillators(&self) -> usize {
+        self.n
+    }
+}
+
+impl HomogeneousSpace for TTorus {
+    fn point_dim(&self) -> usize {
+        2 * self.n
+    }
+    fn algebra_dim(&self) -> usize {
+        2 * self.n
+    }
+
+    fn exp_action(&self, v: &[f64], y: &mut [f64]) {
+        self.exps.bump();
+        for i in 0..self.n {
+            y[i] = wrap_angle(y[i] + v[i]);
+        }
+        for i in self.n..2 * self.n {
+            y[i] += v[i];
+        }
+    }
+
+    fn project(&self, y: &mut [f64]) {
+        for yi in y.iter_mut().take(self.n) {
+            *yi = wrap_angle(*yi);
+        }
+    }
+
+    fn action_pullback(
+        &self,
+        _v: &[f64],
+        _y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+    ) {
+        lam_y.copy_from_slice(lam_out);
+        lam_v.copy_from_slice(lam_out);
+    }
+
+    fn exp_calls(&self) -> u64 {
+        self.exps.get()
+    }
+    fn reset_exp_calls(&self) {
+        self.exps.reset()
+    }
+
+    fn distance(&self, a: &[f64], b: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.n {
+            let d = wrap_angle(a[i] - b[i]);
+            s += d * d;
+        }
+        for i in self.n..2 * self.n {
+            let d = a[i] - b[i];
+            s += d * d;
+        }
+        s.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn torus_wraps() {
+        let t = Torus::new(2);
+        let mut y = vec![3.0, -3.0];
+        t.exp_action(&[0.5, -0.5], &mut y);
+        assert!(y[0] > -std::f64::consts::PI && y[0] <= std::f64::consts::PI);
+        // 3.5 wraps to 3.5 - 2π ≈ -2.783.
+        assert!((y[0] - (3.5 - 2.0 * std::f64::consts::PI)).abs() < 1e-12);
+        assert!((y[1] - (-3.5 + 2.0 * std::f64::consts::PI)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ttorus_splits_wrap() {
+        let t = TTorus::new(1);
+        let mut y = vec![3.0, 3.0];
+        t.exp_action(&[0.5, 0.5], &mut y);
+        assert!((y[0] - (3.5 - 2.0 * std::f64::consts::PI)).abs() < 1e-12); // wrapped
+        assert!((y[1] - 3.5).abs() < 1e-12); // not wrapped
+    }
+
+    #[test]
+    fn wrapped_distance_shorter_way_round() {
+        let t = Torus::new(1);
+        let a = [std::f64::consts::PI - 0.1];
+        let b = [-std::f64::consts::PI + 0.1];
+        assert!((t.distance(&a, &b) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exp_counter_counts() {
+        let t = Torus::new(1);
+        let mut y = vec![0.0];
+        for _ in 0..5 {
+            t.exp_action(&[0.1], &mut y);
+        }
+        assert_eq!(t.exp_calls(), 5);
+        t.reset_exp_calls();
+        assert_eq!(t.exp_calls(), 0);
+    }
+}

@@ -1,0 +1,363 @@
+//! Small dense linear algebra: matrix products, matrix exponentials
+//! (scaling-and-squaring), Fréchet derivatives of `exp` (Van Loan block
+//! trick), QR-based random orthogonal matrices, and SO(3)/so(3) closed forms.
+//!
+//! Everything is row-major `&[f64]` with explicit dimensions — state vectors
+//! in the solver hot loop never allocate.
+
+/// C = A·B for row-major (m×k)·(k×n).
+pub fn matmul(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                *cj += aip * bj;
+            }
+        }
+    }
+}
+
+/// y = A·x for row-major (m×n)·(n).
+pub fn matvec(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(y.len(), m);
+    for i in 0..m {
+        let row = &a[i * n..(i + 1) * n];
+        y[i] = row.iter().zip(x.iter()).map(|(a, b)| a * b).sum();
+    }
+}
+
+/// y = Aᵀ·x for row-major A (m×n), x length m, y length n.
+pub fn matvec_t(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    y.fill(0.0);
+    for i in 0..m {
+        let xi = x[i];
+        let row = &a[i * n..(i + 1) * n];
+        for (yj, aij) in y.iter_mut().zip(row.iter()) {
+            *yj += aij * xi;
+        }
+    }
+}
+
+/// Transpose (m×n) → (n×m).
+pub fn transpose(a: &[f64], m: usize, n: usize) -> Vec<f64> {
+    let mut t = vec![0.0; n * m];
+    for i in 0..m {
+        for j in 0..n {
+            t[j * m + i] = a[i * n + j];
+        }
+    }
+    t
+}
+
+/// n×n identity.
+pub fn eye(n: usize) -> Vec<f64> {
+    let mut a = vec![0.0; n * n];
+    for i in 0..n {
+        a[i * n + i] = 1.0;
+    }
+    a
+}
+
+/// Max-abs norm.
+pub fn norm_inf(a: &[f64]) -> f64 {
+    a.iter().fold(0.0, |m, &x| m.max(x.abs()))
+}
+
+/// Frobenius / ℓ2 norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Matrix exponential of an n×n matrix by scaling-and-squaring on a
+/// degree-13 Taylor polynomial. Accurate to ~1e-14 for the modest norms
+/// arising in one integrator step (‖A‖ ≲ a few).
+pub fn expm(a: &[f64], n: usize) -> Vec<f64> {
+    let nrm = norm_inf(a);
+    let mut s = 0u32;
+    let mut scaled = a.to_vec();
+    if nrm > 0.5 {
+        s = (nrm / 0.5).log2().ceil() as u32;
+        let f = 0.5f64.powi(s as i32);
+        for x in scaled.iter_mut() {
+            *x *= f;
+        }
+    }
+    // Taylor series: E = I + A + A²/2! + ... + A^13/13!
+    let mut e = eye(n);
+    let mut term = eye(n);
+    let mut tmp = vec![0.0; n * n];
+    for k in 1..=13usize {
+        matmul(&term, &scaled, &mut tmp, n, n, n);
+        let inv = 1.0 / k as f64;
+        for (t, &v) in term.iter_mut().zip(tmp.iter()) {
+            *t = v * inv;
+        }
+        for (ei, ti) in e.iter_mut().zip(term.iter()) {
+            *ei += ti;
+        }
+    }
+    // Repeated squaring.
+    for _ in 0..s {
+        matmul(&e, &e, &mut tmp, n, n, n);
+        e.copy_from_slice(&tmp);
+    }
+    e
+}
+
+/// Fréchet derivative of the matrix exponential: returns
+/// (exp(A), L_A(E)) where L_A(E) = d/dt exp(A + tE)|_{t=0},
+/// via Van Loan's block trick: exp([[A, E], [0, A]]) = [[eᴬ, L],[0, eᴬ]].
+pub fn expm_frechet(a: &[f64], e: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    let n2 = 2 * n;
+    let mut blk = vec![0.0; n2 * n2];
+    for i in 0..n {
+        for j in 0..n {
+            blk[i * n2 + j] = a[i * n + j];
+            blk[i * n2 + n + j] = e[i * n + j];
+            blk[(n + i) * n2 + n + j] = a[i * n + j];
+        }
+    }
+    let big = expm(&blk, n2);
+    let mut ea = vec![0.0; n * n];
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            ea[i * n + j] = big[i * n2 + j];
+            l[i * n + j] = big[i * n2 + n + j];
+        }
+    }
+    (ea, l)
+}
+
+/// Adjoint of the Fréchet derivative: given a cotangent W (n×n), returns
+/// L_A*(W) such that ⟨W, L_A(E)⟩_F = ⟨L_A*(W), E⟩_F for all E.
+/// Identity: L_A*(W) = L_{Aᵀ}(W).
+pub fn expm_frechet_adjoint(a: &[f64], w: &[f64], n: usize) -> Vec<f64> {
+    let at = transpose(a, n, n);
+    let (_, l) = expm_frechet(&at, w, n);
+    l
+}
+
+/// Random orthogonal matrix (Haar via QR of a Gaussian matrix with sign fix).
+pub fn random_orthogonal(rng: &mut crate::rng::Pcg64, n: usize) -> Vec<f64> {
+    let mut g = vec![0.0; n * n];
+    rng.fill_normal(&mut g);
+    // Gram-Schmidt on columns.
+    let mut q = vec![0.0; n * n];
+    for j in 0..n {
+        let mut v: Vec<f64> = (0..n).map(|i| g[i * n + j]).collect();
+        for k in 0..j {
+            let dot: f64 = (0..n).map(|i| q[i * n + k] * v[i]).sum();
+            for (i, vi) in v.iter_mut().enumerate() {
+                *vi -= dot * q[i * n + k];
+            }
+        }
+        let nrm = norm2(&v);
+        for i in 0..n {
+            q[i * n + j] = v[i] / nrm;
+        }
+    }
+    q
+}
+
+// ---------------------------------------------------------------------------
+// so(3) closed forms (Rodrigues).
+// ---------------------------------------------------------------------------
+
+/// Hat map: ω ∈ ℝ³ → 3×3 skew matrix.
+pub fn so3_hat(w: &[f64]) -> [f64; 9] {
+    [0.0, -w[2], w[1], w[2], 0.0, -w[0], -w[1], w[0], 0.0]
+}
+
+/// Inverse hat map.
+pub fn so3_vee(m: &[f64]) -> [f64; 3] {
+    [m[7], m[2], m[3]]
+}
+
+/// Rodrigues: exp of the skew matrix of ω.
+pub fn so3_exp(w: &[f64]) -> [f64; 9] {
+    let th2 = w[0] * w[0] + w[1] * w[1] + w[2] * w[2];
+    let th = th2.sqrt();
+    let (a, b) = if th < 1e-8 {
+        (1.0 - th2 / 6.0, 0.5 - th2 / 24.0)
+    } else {
+        (th.sin() / th, (1.0 - th.cos()) / th2)
+    };
+    let k = so3_hat(w);
+    let mut k2 = [0.0f64; 9];
+    matmul(&k, &k, &mut k2, 3, 3, 3);
+    let mut e = [0.0f64; 9];
+    for i in 0..3 {
+        e[i * 3 + i] = 1.0;
+    }
+    for i in 0..9 {
+        e[i] += a * k[i] + b * k2[i];
+    }
+    e
+}
+
+/// 3×3 product convenience.
+pub fn mat3mul(a: &[f64], b: &[f64]) -> [f64; 9] {
+    let mut c = [0.0f64; 9];
+    matmul(a, b, &mut c, 3, 3, 3);
+    c
+}
+
+/// ‖RᵀR − I‖_∞: orthogonality defect of a 3×3 (or n×n) matrix.
+pub fn orthogonality_defect(r: &[f64], n: usize) -> f64 {
+    let rt = transpose(r, n, n);
+    let mut p = vec![0.0; n * n];
+    matmul(&rt, r, &mut p, n, n, n);
+    for i in 0..n {
+        p[i * n + i] -= 1.0;
+    }
+    norm_inf(&p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matmul_small() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let mut c = [0.0; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matvec_transpose_consistency() {
+        let mut rng = Pcg64::new(1);
+        let (m, n) = (4, 3);
+        let mut a = vec![0.0; m * n];
+        rng.fill_normal(&mut a);
+        let x: Vec<f64> = (0..m).map(|i| i as f64 + 1.0).collect();
+        let mut y1 = vec![0.0; n];
+        matvec_t(&a, &x, &mut y1, m, n);
+        let at = transpose(&a, m, n);
+        let mut y2 = vec![0.0; n];
+        matvec(&at, &x, &mut y2, n, m);
+        for (u, v) in y1.iter().zip(y2.iter()) {
+            assert!((u - v).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn expm_diagonal() {
+        let a = [1.0, 0.0, 0.0, 2.0];
+        let e = expm(&a, 2);
+        assert!((e[0] - 1f64.exp()).abs() < 1e-12);
+        assert!((e[3] - 2f64.exp()).abs() < 1e-12);
+        assert!(e[1].abs() < 1e-14 && e[2].abs() < 1e-14);
+    }
+
+    #[test]
+    fn expm_rotation_2d() {
+        // exp([[0,-t],[t,0]]) = rotation by t.
+        let t = 0.7;
+        let a = [0.0, -t, t, 0.0];
+        let e = expm(&a, 2);
+        assert!((e[0] - t.cos()).abs() < 1e-12);
+        assert!((e[1] + t.sin()).abs() < 1e-12);
+        assert!((e[2] - t.sin()).abs() < 1e-12);
+        assert!((e[3] - t.cos()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expm_large_norm_scaling() {
+        // Known: exp(diag(10, -10)).
+        let a = [10.0, 0.0, 0.0, -10.0];
+        let e = expm(&a, 2);
+        assert!((e[0] - 10f64.exp()).abs() / 10f64.exp() < 1e-10);
+        assert!((e[3] - (-10f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn so3_exp_matches_expm() {
+        let w = [0.3, -0.5, 0.2];
+        let r1 = so3_exp(&w);
+        let r2 = expm(&so3_hat(&w), 3);
+        for i in 0..9 {
+            assert!((r1[i] - r2[i]).abs() < 1e-12);
+        }
+        assert!(orthogonality_defect(&r1, 3) < 1e-12);
+    }
+
+    #[test]
+    fn so3_hat_vee_round_trip() {
+        let w = [0.1, 0.2, 0.3];
+        let v = so3_vee(&so3_hat(&w));
+        assert_eq!(v, [0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn frechet_matches_finite_difference() {
+        let mut rng = Pcg64::new(3);
+        let n = 4;
+        let mut a = vec![0.0; n * n];
+        let mut e = vec![0.0; n * n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut e);
+        for x in a.iter_mut() {
+            *x *= 0.3;
+        }
+        let (ea, l) = expm_frechet(&a, &e, n);
+        let ea2 = expm(&a, n);
+        for (u, v) in ea.iter().zip(ea2.iter()) {
+            assert!((u - v).abs() < 1e-11);
+        }
+        // Finite difference check.
+        let eps = 1e-6;
+        let ap: Vec<f64> = a.iter().zip(e.iter()).map(|(x, y)| x + eps * y).collect();
+        let am: Vec<f64> = a.iter().zip(e.iter()).map(|(x, y)| x - eps * y).collect();
+        let (ep, em) = (expm(&ap, n), expm(&am, n));
+        for i in 0..n * n {
+            let fd = (ep[i] - em[i]) / (2.0 * eps);
+            assert!((fd - l[i]).abs() < 1e-7, "entry {i}: fd {fd} vs L {}", l[i]);
+        }
+    }
+
+    #[test]
+    fn frechet_adjoint_identity() {
+        let mut rng = Pcg64::new(4);
+        let n = 3;
+        let mut a = vec![0.0; n * n];
+        let mut e = vec![0.0; n * n];
+        let mut w = vec![0.0; n * n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut e);
+        rng.fill_normal(&mut w);
+        for x in a.iter_mut() {
+            *x *= 0.2;
+        }
+        let (_, l) = expm_frechet(&a, &e, n);
+        let lstar = expm_frechet_adjoint(&a, &w, n);
+        let lhs: f64 = w.iter().zip(l.iter()).map(|(x, y)| x * y).sum();
+        let rhs: f64 = lstar.iter().zip(e.iter()).map(|(x, y)| x * y).sum();
+        assert!((lhs - rhs).abs() < 1e-10, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Pcg64::new(5);
+        for n in [2, 5, 16] {
+            let q = random_orthogonal(&mut rng, n);
+            assert!(orthogonality_defect(&q, n) < 1e-10, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! `ees` — command-line launcher for the EES Neural-SDE framework.
+//!
+//! Subcommands map one-to-one onto the paper's tables and figures (see
+//! DESIGN.md §4 for the index). `--full` switches from the smoke
+//! configuration to paper scale; `--out FILE` tees the report to a file.
+//!
+//! ```text
+//! ees stability            # Figure 2 (+ --render for ASCII domains)
+//! ees ms-stability         # Figure 3
+//! ees ou                   # Table 1 / Figure 4
+//! ees stochvol [--model M] # Tables 2 & 8
+//! ees kuramoto             # Table 3
+//! ees kuramoto-memory      # Figure 5b / Table 13
+//! ees sphere               # Table 4
+//! ees sphere-memory        # Figure 6 / Table 14
+//! ees gbm                  # Table 7 / Figures 10-11
+//! ees md                   # Table 9 / Figure 13
+//! ees adjoint-fidelity     # Table 12
+//! ees memory-t7            # Figure 1 / Table 15
+//! ees convergence          # Figure 7
+//! ees cf-convergence       # Figure 8
+//! ees ees27                # Figure 9
+//! ees runtime-smoke        # PJRT artifact load/execute check
+//! ees all                  # everything (smoke scale)
+//! ```
+
+use ees::experiments::{self, Scale};
+use ees::models::stochvol::VolModel;
+
+struct Args {
+    cmd: String,
+    full: bool,
+    render: bool,
+    out: Option<String>,
+    model: Option<String>,
+    steps: Vec<usize>,
+}
+
+fn parse_args() -> Args {
+    let mut args = Args {
+        cmd: String::new(),
+        full: false,
+        render: false,
+        out: None,
+        model: None,
+        steps: vec![],
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--full" => args.full = true,
+            "--render" => args.render = true,
+            "--out" => args.out = it.next(),
+            "--model" => args.model = it.next(),
+            "--steps" => {
+                if let Some(s) = it.next() {
+                    args.steps = s
+                        .split(',')
+                        .filter_map(|x| x.trim().parse().ok())
+                        .collect();
+                }
+            }
+            other if args.cmd.is_empty() && !other.starts_with('-') => {
+                args.cmd = other.to_string();
+            }
+            other => {
+                eprintln!("unknown argument: {other}");
+                std::process::exit(2);
+            }
+        }
+    }
+    args
+}
+
+fn vol_model(name: &str) -> Option<VolModel> {
+    VolModel::all()
+        .into_iter()
+        .find(|m| m.name().to_lowercase().contains(&name.to_lowercase()))
+}
+
+fn main() {
+    let args = parse_args();
+    let scale = if args.full { Scale::Full } else { Scale::Smoke };
+    let default_steps = |smoke: &[usize], full: &[usize]| -> Vec<usize> {
+        if !args.steps.is_empty() {
+            args.steps.clone()
+        } else if args.full {
+            full.to_vec()
+        } else {
+            smoke.to_vec()
+        }
+    };
+    let report = match args.cmd.as_str() {
+        "stability" => experiments::fig2::run(args.render),
+        "ms-stability" => experiments::fig3::run(if args.full { 20000 } else { 2000 }),
+        "ou" => experiments::tab1::run(scale),
+        "stochvol" => {
+            let models: Vec<VolModel> = match &args.model {
+                Some(m) => vec![vol_model(m).unwrap_or_else(|| {
+                    eprintln!("unknown model {m}");
+                    std::process::exit(2)
+                })],
+                None => {
+                    if args.full {
+                        VolModel::all().to_vec()
+                    } else {
+                        vec![VolModel::RoughBergomi, VolModel::BlackScholes]
+                    }
+                }
+            };
+            experiments::tab2::run(scale, &models)
+        }
+        "kuramoto" => experiments::tab3::run(scale),
+        "kuramoto-memory" => {
+            let steps = default_steps(&[50, 100, 200, 500], &[50, 100, 200, 500, 1000, 2000, 5000]);
+            experiments::tab3::run_memory(if args.full { 1000 } else { 16 }, &steps)
+        }
+        "sphere" => experiments::tab4::run(scale),
+        "sphere-memory" => {
+            let steps = default_steps(&[50, 200, 800], &[50, 200, 800, 2000, 5000]);
+            experiments::tab4::run_memory(if args.full { 16 } else { 6 }, &steps)
+        }
+        "gbm" => experiments::tab7::run(scale),
+        "md" => experiments::tab9::run(scale),
+        "adjoint-fidelity" => experiments::tab12::run(scale),
+        "memory-t7" => {
+            let steps = default_steps(
+                &[5, 20, 100, 400],
+                &[5, 10, 20, 50, 100, 200, 400, 800, 2000, 5000, 10000],
+            );
+            experiments::fig1::run(if args.full { 64 } else { 4 }, &steps)
+        }
+        "convergence" => experiments::fig7::run(scale),
+        "cf-convergence" => experiments::fig8::run(scale),
+        "ees27" => experiments::fig9::run(scale),
+        "runtime-smoke" => runtime_smoke(),
+        "all" => {
+            let mut all = String::new();
+            all.push_str(&experiments::fig2::run(false));
+            all.push('\n');
+            all.push_str(&experiments::fig3::run(2000));
+            all.push('\n');
+            all.push_str(&experiments::fig1::run(4, &[5, 20, 100, 400]));
+            all.push('\n');
+            all.push_str(&experiments::tab1::run(scale));
+            all.push('\n');
+            all.push_str(&experiments::tab2::run(scale, &[VolModel::RoughBergomi]));
+            all.push('\n');
+            all.push_str(&experiments::tab3::run(scale));
+            all.push('\n');
+            all.push_str(&experiments::tab4::run(scale));
+            all.push('\n');
+            all.push_str(&experiments::tab7::run(scale));
+            all.push('\n');
+            all.push_str(&experiments::tab9::run(scale));
+            all.push('\n');
+            all.push_str(&experiments::tab12::run(scale));
+            all.push('\n');
+            all.push_str(&experiments::fig7::run(scale));
+            all.push('\n');
+            all.push_str(&experiments::fig8::run(scale));
+            all.push('\n');
+            all.push_str(&experiments::fig9::run(scale));
+            all
+        }
+        "" | "help" | "--help" | "-h" => {
+            eprintln!("usage: ees <command> [--full] [--render] [--out FILE] [--model NAME] [--steps a,b,c]");
+            eprintln!("commands: stability ms-stability ou stochvol kuramoto kuramoto-memory");
+            eprintln!("          sphere sphere-memory gbm md adjoint-fidelity memory-t7");
+            eprintln!("          convergence cf-convergence ees27 runtime-smoke all");
+            std::process::exit(0);
+        }
+        other => {
+            eprintln!("unknown command: {other} (try `ees help`)");
+            std::process::exit(2);
+        }
+    };
+    println!("{report}");
+    if let Some(path) = args.out {
+        if let Err(e) = std::fs::write(&path, &report) {
+            eprintln!("failed to write {path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("report written to {path}");
+    }
+}
+
+/// PJRT smoke: load the AOT EES-step artifact and run one batch step.
+fn runtime_smoke() -> String {
+    use ees::runtime::CompiledModule;
+    let dir = std::path::PathBuf::from(
+        std::env::var("EES_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let path = dir.join("ees_step.hlo.txt");
+    if !path.exists() {
+        return format!(
+            "artifact {path:?} not found — run `make artifacts` first (python build path)"
+        );
+    }
+    let m = match CompiledModule::load_cpu(&path) {
+        Ok(m) => m,
+        Err(e) => return format!("PJRT load failed: {e:#}"),
+    };
+    let (b, d) = (8usize, 4usize);
+    let y: Vec<f32> = (0..b * d).map(|i| i as f32 * 0.01).collect();
+    let dw = vec![0.0f32; b * d];
+    let h = [0.05f32];
+    match m.run_f32(&[(&y, &[b, d]), (&dw, &[b, d]), (&h, &[])]) {
+        Ok(out) => format!(
+            "PJRT OK: {} -> {} outputs, first row {:?}",
+            m.name,
+            out.len(),
+            &out[0][..d]
+        ),
+        Err(e) => format!("PJRT execute failed: {e:#}"),
+    }
+}

@@ -1,0 +1,155 @@
+//! High-dimensional GBM with stiff drift (Appendix H.1, Table 7):
+//! dy = A y dt + σ y dW,  A = Q·diag(λ_i)·Qᵀ, λ_i = −20(1 + i/d), scalar
+//! Brownian noise acting multiplicatively on every coordinate.
+//!
+//! Stiffness: |λ_max·h| = 40·h/… drives the fixed-budget baselines unstable
+//! (Reversible Heun's stability segment excludes the entire real axis),
+//! which is exactly the Table-7 phenomenon.
+
+use crate::linalg::{matvec, random_orthogonal};
+use crate::rng::{BrownianPath, Pcg64};
+use crate::vf::VectorField;
+
+#[derive(Clone, Debug)]
+pub struct StiffGbm {
+    pub d: usize,
+    pub sigma: f64,
+    /// Row-major drift matrix A.
+    pub a: Vec<f64>,
+}
+
+impl StiffGbm {
+    pub fn new(d: usize, sigma: f64, stiffness: f64, rng: &mut Pcg64) -> Self {
+        let q = random_orthogonal(rng, d);
+        // A = Q D Qᵀ with D = diag(−stiffness (1 + i/d)).
+        let mut a = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                let mut acc = 0.0;
+                for k in 0..d {
+                    let lam = -stiffness * (1.0 + k as f64 / d as f64);
+                    acc += q[i * d + k] * lam * q[j * d + k];
+                }
+                a[i * d + j] = acc;
+            }
+        }
+        Self { d, sigma, a }
+    }
+
+    /// Paper configuration: d = 25, σ = 0.1, λ_i = −20(1 + i/d).
+    pub fn paper(rng: &mut Pcg64) -> Self {
+        Self::new(25, 0.1, 20.0, rng)
+    }
+
+    /// Simulate with a fine-grid Euler–Maruyama reference.
+    pub fn simulate(&self, y0: &[f64], path: &BrownianPath) -> Vec<f64> {
+        crate::solvers::integrate(
+            &crate::solvers::RkStepper::euler(),
+            &self.as_field(),
+            0.0,
+            y0,
+            path,
+        )
+    }
+
+    pub fn as_field(&self) -> StiffGbmField<'_> {
+        StiffGbmField { m: self }
+    }
+}
+
+/// VectorField view of the GBM dynamics (for simulation and stability
+/// probes — the *learned* model is a [`crate::nn::neural_sde::NeuralSde`]).
+pub struct StiffGbmField<'a> {
+    m: &'a StiffGbm,
+}
+
+impl VectorField for StiffGbmField<'_> {
+    fn dim(&self) -> usize {
+        self.m.d
+    }
+    fn noise_dim(&self) -> usize {
+        1
+    }
+    fn combined(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        matvec(&self.m.a, y, out, self.m.d, self.m.d);
+        for (o, yi) in out.iter_mut().zip(y.iter()) {
+            *o = *o * h + self.m.sigma * yi * dw[0];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drift_spectrum_is_stiff() {
+        let mut rng = Pcg64::new(2);
+        let m = StiffGbm::new(8, 0.1, 20.0, &mut rng);
+        // Power iteration on −A (dominant eigenvalue = stiffness·(2 − 1/d)).
+        let d = m.d;
+        let mut v = vec![1.0; d];
+        let mut w = vec![0.0; d];
+        for _ in 0..400 {
+            matvec(&m.a, &v, &mut w, d, d);
+            let n = crate::linalg::norm2(&w);
+            for (vi, wi) in v.iter_mut().zip(w.iter()) {
+                *vi = -wi / n;
+            }
+        }
+        matvec(&m.a, &v, &mut w, d, d);
+        let lam: f64 = v.iter().zip(w.iter()).map(|(a, b)| a * b).sum();
+        let want = 20.0 * (2.0 - 1.0 / d as f64);
+        assert!(
+            (-lam - want).abs() < 1.0,
+            "dominant |λ| should be ≈ {want}, got {}",
+            -lam
+        );
+    }
+
+    #[test]
+    fn deterministic_decay() {
+        // With σ = 0, ‖y(t)‖ decays (all eigenvalues negative).
+        let mut rng = Pcg64::new(3);
+        let m = StiffGbm::new(6, 0.0, 5.0, &mut rng);
+        let path = BrownianPath::sample(&mut rng, 1, 2000, 1e-3);
+        let y0 = vec![1.0; 6];
+        let traj = m.simulate(&y0, &path);
+        let n0 = crate::linalg::norm2(&traj[..6]);
+        let n1 = crate::linalg::norm2(&traj[2000 * 6..]);
+        assert!(n1 < 0.1 * n0, "{n0} -> {n1}");
+    }
+
+    /// The Table-7 phenomenon in miniature: at the paper's fixed-budget step
+    /// sizes, Reversible Heun diverges on the stiff drift while EES(2,5)
+    /// stays bounded.
+    #[test]
+    fn revheun_diverges_ees_survives() {
+        use crate::solvers::{ReversibleHeun, RkStepper, Stepper};
+        let mut rng = Pcg64::new(9);
+        let m = StiffGbm::new(10, 0.1, 20.0, &mut rng);
+        let f = m.as_field();
+        let steps = 60; // h = 1/60 ⇒ λ_max h ≈ 0.67, outside [−i,i]
+        let h = 1.0 / steps as f64;
+        let path = BrownianPath::sample(&mut rng, 1, steps, h);
+        let y0 = vec![1.0; 10];
+
+        let rh = ReversibleHeun::new();
+        let mut s = rh.init_state(&f, 0.0, &y0);
+        for n in 0..steps {
+            rh.step(&f, n as f64 * h, h, path.increment(n), &mut s);
+        }
+        let rh_norm = crate::linalg::norm2(&s[..10]);
+
+        let ees = RkStepper::ees25();
+        let path3 = BrownianPath::sample(&mut rng, 1, 20, 1.0 / 20.0); // same budget: 3 evals/step
+        let traj = crate::solvers::integrate(&ees, &f, 0.0, &y0, &path3);
+        let ees_norm = crate::linalg::norm2(&traj[20 * 10..]);
+
+        assert!(
+            rh_norm > 1e3 || rh_norm.is_nan(),
+            "Reversible Heun should diverge, ‖y‖ = {rh_norm}"
+        );
+        assert!(ees_norm < 10.0, "EES should stay bounded, ‖y‖ = {ees_norm}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Second-order stochastic Kuramoto network on T𝕋ᴺ (Section 4, eq. 5):
+//!
+//!   m θ̈_i = −θ̇_i + Ω_i + (K/N) Σ_j sin(θ_j − θ_i) + ξ_i,
+//!   ⟨ξ_i(t) ξ_j(s)⟩ = 2D δ_ij δ(t−s),
+//!
+//! with bimodal natural frequencies Ω_i ∈ {+P, −P} (power-grid
+//! generator/consumer split). State (θ, ω) ∈ T𝕋ᴺ; defaults are the paper's
+//! partial-synchronisation regime m = 1, K = 2, P = 0.5, D = 0.05.
+//!
+//! Simulator verification follows Appendix I.5: the deterministic N = 2
+//! subsystem locks at Δθ_∞ = arcsin(2P/K), and the stochastic order
+//! parameter r(t) saturates in (0, 1).
+
+use crate::lie::TTorus;
+use crate::rng::{BrownianPath, Pcg64};
+use crate::vf::ManifoldVectorField;
+
+#[derive(Clone, Debug)]
+pub struct KuramotoParams {
+    pub n: usize,
+    pub mass: f64,
+    pub coupling: f64,
+    /// Bimodal frequency magnitude P.
+    pub p: f64,
+    /// Noise strength D (diffusion √(2D)).
+    pub d: f64,
+    /// Natural frequencies Ω_i.
+    pub omega: Vec<f64>,
+}
+
+impl KuramotoParams {
+    pub fn paper(n: usize) -> Self {
+        // Generator/consumer split: +P for even, −P for odd oscillators.
+        let p = 0.5;
+        let omega = (0..n)
+            .map(|i| if i % 2 == 0 { p } else { -p })
+            .collect();
+        Self {
+            n,
+            mass: 1.0,
+            coupling: 2.0,
+            p,
+            d: 0.05,
+            omega,
+        }
+    }
+
+    /// Analytic phase-locked equilibrium of the deterministic N = 2 system.
+    pub fn lock_angle(&self) -> f64 {
+        (2.0 * self.p / self.coupling).asin()
+    }
+
+    /// Order parameter r = |N⁻¹ Σ e^{iθ_j}|.
+    pub fn order_parameter(theta: &[f64]) -> f64 {
+        let n = theta.len() as f64;
+        let (mut c, mut s) = (0.0, 0.0);
+        for &t in theta {
+            c += t.cos();
+            s += t.sin();
+        }
+        (c / n).hypot(s / n)
+    }
+
+    pub fn as_field(&self) -> KuramotoField<'_> {
+        KuramotoField { p: self }
+    }
+
+    /// Simulate with fine-grid Heun on T𝕋ᴺ; returns the `(steps+1)·2N`
+    /// trajectory (wrapped angles, velocities).
+    pub fn simulate(
+        &self,
+        theta0: &[f64],
+        omega0: &[f64],
+        steps: usize,
+        h: f64,
+        rng: &mut Pcg64,
+    ) -> Vec<f64> {
+        let sp = TTorus::new(self.n);
+        let vf = self.as_field();
+        let path = BrownianPath::sample(rng, self.n, steps, h);
+        let mut y0 = theta0.to_vec();
+        y0.extend_from_slice(omega0);
+        // Heun on the manifold = CF lift of the 2-stage trapezoidal tableau.
+        let heun = crate::solvers::CfEes::ees25(); // order-2 geometric scheme
+        crate::solvers::integrate_manifold(&heun, &sp, &vf, 0.0, &y0, &path)
+    }
+
+    /// Sample a dataset of `count` trajectories at `n_obs` observation times
+    /// (sub-sampled from a fine grid), random initial conditions.
+    /// Returns `(count, n_obs, 2N)` flattened.
+    pub fn sample_dataset(
+        &self,
+        count: usize,
+        t_end: f64,
+        n_fine: usize,
+        n_obs: usize,
+        rng: &mut Pcg64,
+    ) -> Vec<f64> {
+        let h = t_end / n_fine as f64;
+        let stride = n_fine / n_obs;
+        let dim = 2 * self.n;
+        let mut out = Vec::with_capacity(count * n_obs * dim);
+        for _ in 0..count {
+            let theta0: Vec<f64> =
+                (0..self.n).map(|_| rng.uniform_range(-std::f64::consts::PI, std::f64::consts::PI)).collect();
+            let omega0: Vec<f64> = (0..self.n).map(|_| 0.5 * rng.normal()).collect();
+            let traj = self.simulate(&theta0, &omega0, n_fine, h, rng);
+            for k in 1..=n_obs {
+                let idx = k * stride;
+                out.extend_from_slice(&traj[idx * dim..(idx + 1) * dim]);
+            }
+        }
+        out
+    }
+}
+
+/// Manifold vector field of (5) as a first-order system on T𝕋ᴺ.
+pub struct KuramotoField<'a> {
+    p: &'a KuramotoParams,
+}
+
+impl ManifoldVectorField for KuramotoField<'_> {
+    fn point_dim(&self) -> usize {
+        2 * self.p.n
+    }
+    fn algebra_dim(&self) -> usize {
+        2 * self.p.n
+    }
+    fn noise_dim(&self) -> usize {
+        self.p.n
+    }
+    fn generator(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        let n = self.p.n;
+        let (theta, omega) = y.split_at(n);
+        let kn = self.p.coupling / n as f64;
+        let inv_m = 1.0 / self.p.mass;
+        let sig = (2.0 * self.p.d).sqrt() * inv_m;
+        // Mean-field coupling via the order-parameter trick: Σ_j sin(θ_j−θ_i)
+        // = S cosθ_i − C sinθ_i with C = Σ cosθ_j, S = Σ sinθ_j (O(N) total).
+        let (mut c, mut s) = (0.0, 0.0);
+        for &t in theta {
+            c += t.cos();
+            s += t.sin();
+        }
+        for i in 0..n {
+            out[i] = omega[i] * h;
+            let coupling = kn * (s * theta[i].cos() - c * theta[i].sin());
+            out[n + i] =
+                (inv_m * (-omega[i] + self.p.omega[i]) + inv_m * coupling) * h + sig * dw[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Appendix I.5 verification anchor: deterministic N = 2 locks near
+    /// Δθ_∞ = arcsin(2P/K) = π/6 for K = 2, P = 0.5.
+    #[test]
+    fn two_oscillator_phase_lock() {
+        let mut p = KuramotoParams::paper(2);
+        p.d = 0.0; // deterministic
+        let mut rng = Pcg64::new(3);
+        let traj = p.simulate(&[0.3, -0.1], &[0.0, 0.0], 8192, 20.0 / 8192.0, &mut rng);
+        let dim = 4;
+        let last = &traj[8192 * dim..];
+        let dtheta = crate::lie::wrap_angle(last[0] - last[1]);
+        let want = p.lock_angle(); // arcsin(0.5) = π/6
+        assert!(
+            (dtheta.abs() - want).abs() < 0.05,
+            "Δθ = {dtheta}, want ±{want}"
+        );
+        // Velocities decay to 0 at lock.
+        assert!(last[2].abs() < 0.02 && last[3].abs() < 0.02);
+    }
+
+    /// Grid-independence of the deterministic solve (I.5): halving h moves
+    /// the terminal phase difference by < 1e-4 relative.
+    #[test]
+    fn simulator_grid_convergence() {
+        let mut p = KuramotoParams::paper(2);
+        p.d = 0.0;
+        let mut run = |n_fine: usize| -> f64 {
+            let mut rng = Pcg64::new(5);
+            let traj = p.simulate(&[0.4, -0.2], &[0.1, -0.1], n_fine, 5.0 / n_fine as f64, &mut rng);
+            let last = &traj[n_fine * 4..];
+            crate::lie::wrap_angle(last[0] - last[1])
+        };
+        let (a, b) = (run(2048), run(4096));
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+
+    /// Partial synchronisation: stochastic order parameter saturates in a
+    /// band 0.3 < r̄ < 0.98 for the paper's regime.
+    #[test]
+    fn partial_synchronisation_regime() {
+        let p = KuramotoParams::paper(16);
+        let mut rng = Pcg64::new(7);
+        let mut acc = 0.0;
+        let reps = 16;
+        for _ in 0..reps {
+            let theta0: Vec<f64> = (0..16)
+                .map(|_| rng.uniform_range(-std::f64::consts::PI, std::f64::consts::PI))
+                .collect();
+            let omega0 = vec![0.0; 16];
+            let traj = p.simulate(&theta0, &omega0, 2048, 10.0 / 2048.0, &mut rng);
+            let last_theta = &traj[2048 * 32..2048 * 32 + 16];
+            acc += KuramotoParams::order_parameter(last_theta);
+        }
+        let r = acc / reps as f64;
+        assert!(r > 0.3 && r < 0.98, "mean order parameter {r}");
+    }
+
+    #[test]
+    fn coupling_mean_field_identity() {
+        // S cosθ_i − C sinθ_i must equal Σ_j sin(θ_j − θ_i).
+        let p = KuramotoParams::paper(5);
+        let f = p.as_field();
+        let theta = [0.2, -1.0, 2.2, 0.7, -0.4];
+        let y: Vec<f64> = theta.iter().cloned().chain([0.0; 5]).collect();
+        let mut out = vec![0.0; 10];
+        f.generator(0.0, &y, 1.0, &[0.0; 5], &mut out);
+        for i in 0..5 {
+            let direct: f64 = theta.iter().map(|tj| (tj - theta[i]).sin()).sum();
+            let got = out[5 + i] - (-y[5 + i] + p.omega[i]); // strip −ω + Ω
+            let want = p.coupling / 5.0 * direct;
+            assert!((got - want).abs() < 1e-12, "{i}: {got} vs {want}");
+        }
+    }
+}

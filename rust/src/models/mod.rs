@@ -1,0 +1,21 @@
+//! Data-generating systems — every workload the paper's evaluation trains
+//! against, implemented as exact/fine-grid simulators:
+//!
+//! - [`ou`] high-volatility Ornstein–Uhlenbeck (Table 1, Fig. 4);
+//! - [`gbm`] high-dimensional geometric Brownian motion with stiff drift
+//!   (Table 7, Figs. 10–11);
+//! - [`stochvol`] seven stochastic-volatility models from Black–Scholes to
+//!   rough Bergomi via the Riemann–Liouville lift (Tables 2 and 8);
+//! - [`kuramoto`] second-order stochastic Kuramoto network on T𝕋ᴺ
+//!   (Table 3, Figs. 5a/5b);
+//! - [`sphere_lsde`] latent SDE on Sⁿ⁻¹ with a synthetic activity-
+//!   classification dataset standing in for UCI-HAR (Table 4, Fig. 6);
+//! - [`md`] Langevin molecular-dynamics proxy with a differentiable force
+//!   field and dipole-velocity objective (Table 9, Fig. 13).
+
+pub mod gbm;
+pub mod kuramoto;
+pub mod md;
+pub mod ou;
+pub mod sphere_lsde;
+pub mod stochvol;

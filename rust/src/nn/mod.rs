@@ -1,0 +1,453 @@
+//! Minimal neural-network substrate with hand-written reverse mode.
+//!
+//! Provides the MLP vector fields used by every Neural-SDE experiment in the
+//! paper (LipSwish networks for the Euclidean benchmarks, SiLU for Kuramoto),
+//! their exact VJPs (the `backprop_f` callback of Algorithm 1/2), and the
+//! optimisers (SGD, Adam, AdamW with gradient clipping).
+//!
+//! Everything is f64 and allocation-free on the forward/backward hot path
+//! once a [`Workspace`] is attached.
+
+pub mod neural_sde;
+pub mod optim;
+
+use crate::rng::Pcg64;
+
+/// Supported activations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Identity,
+    Tanh,
+    /// LipSwish(x) = 0.909 · x · sigmoid(x) (1-Lipschitz swish, Kidger et al.)
+    LipSwish,
+    /// SiLU / swish: x·sigmoid(x).
+    Silu,
+    /// softplus(x) = ln(1 + eˣ).
+    Softplus,
+}
+
+#[inline]
+fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// 4-way unrolled dot product — splits the reduction into independent
+/// accumulators so LLVM can vectorise it (a single serial accumulator pins
+/// the f64 addition order and blocks SIMD).
+#[inline]
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+impl Activation {
+    #[inline]
+    pub fn apply(self, x: f64) -> f64 {
+        match self {
+            Activation::Identity => x,
+            Activation::Tanh => x.tanh(),
+            Activation::LipSwish => 0.909 * x * sigmoid(x),
+            Activation::Silu => x * sigmoid(x),
+            Activation::Softplus => {
+                if x > 30.0 {
+                    x
+                } else {
+                    (1.0 + x.exp()).ln()
+                }
+            }
+        }
+    }
+
+    /// Derivative at pre-activation x.
+    #[inline]
+    pub fn deriv(self, x: f64) -> f64 {
+        match self {
+            Activation::Identity => 1.0,
+            Activation::Tanh => {
+                let t = x.tanh();
+                1.0 - t * t
+            }
+            Activation::LipSwish => {
+                let s = sigmoid(x);
+                0.909 * (s + x * s * (1.0 - s))
+            }
+            Activation::Silu => {
+                let s = sigmoid(x);
+                s + x * s * (1.0 - s)
+            }
+            Activation::Softplus => sigmoid(x),
+        }
+    }
+}
+
+/// Dense MLP with a flat parameter vector: layers `sizes[0] → … → sizes[L]`,
+/// hidden activation `act`, output activation `final_act`, optional output
+/// scale (the paper's `softplus output scaled by 0.2` diffusion heads).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub sizes: Vec<usize>,
+    pub act: Activation,
+    pub final_act: Activation,
+    pub out_scale: f64,
+    pub params: Vec<f64>,
+}
+
+/// Scratch buffers so forward/backward never allocate.
+#[derive(Clone, Debug, Default)]
+pub struct Workspace {
+    /// Pre-activations per layer (z_l), flattened back-to-back.
+    pre: Vec<f64>,
+    /// Post-activations per layer including input (a_0 = x).
+    post: Vec<f64>,
+    /// Backward delta buffer (max layer width ×2).
+    delta: Vec<f64>,
+}
+
+impl Mlp {
+    /// Number of parameters for the given layer sizes.
+    pub fn param_count(sizes: &[usize]) -> usize {
+        sizes
+            .windows(2)
+            .map(|w| w[1] * w[0] + w[1])
+            .sum()
+    }
+
+    /// He-initialised MLP.
+    pub fn new(
+        sizes: Vec<usize>,
+        act: Activation,
+        final_act: Activation,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let n = Self::param_count(&sizes);
+        let mut params = vec![0.0; n];
+        let mut off = 0;
+        for w in sizes.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let std = (2.0 / fan_in as f64).sqrt();
+            for p in params[off..off + fan_out * fan_in].iter_mut() {
+                *p = std * rng.normal();
+            }
+            off += fan_out * fan_in + fan_out; // biases stay zero
+        }
+        Self {
+            sizes,
+            act,
+            final_act,
+            out_scale: 1.0,
+            params,
+        }
+    }
+
+    pub fn with_out_scale(mut self, s: f64) -> Self {
+        self.out_scale = s;
+        self
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.sizes[0]
+    }
+    pub fn out_dim(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    fn layer_count(&self) -> usize {
+        self.sizes.len() - 1
+    }
+
+    fn ensure_ws(&self, ws: &mut Workspace) {
+        let total_pre: usize = self.sizes[1..].iter().sum();
+        let total_post: usize = self.sizes.iter().sum();
+        let maxw = *self.sizes.iter().max().unwrap();
+        if ws.pre.len() < total_pre {
+            ws.pre.resize(total_pre, 0.0);
+        }
+        if ws.post.len() < total_post {
+            ws.post.resize(total_post, 0.0);
+        }
+        if ws.delta.len() < 2 * maxw {
+            ws.delta.resize(2 * maxw, 0.0);
+        }
+    }
+
+    /// Forward pass; writes output into `out`.
+    pub fn forward(&self, x: &[f64], out: &mut [f64], ws: &mut Workspace) {
+        self.ensure_ws(ws);
+        debug_assert_eq!(x.len(), self.in_dim());
+        debug_assert_eq!(out.len(), self.out_dim());
+        let l_count = self.layer_count();
+        ws.post[..x.len()].copy_from_slice(x);
+        let mut p_off = 0; // param offset
+        let mut a_off = 0; // offset of a_{l-1} in post
+        let mut z_off = 0; // offset of z_l in pre
+        for l in 0..l_count {
+            let (nin, nout) = (self.sizes[l], self.sizes[l + 1]);
+            let w = &self.params[p_off..p_off + nout * nin];
+            let b = &self.params[p_off + nout * nin..p_off + nout * nin + nout];
+            let act = if l + 1 == l_count {
+                self.final_act
+            } else {
+                self.act
+            };
+            for i in 0..nout {
+                let row = &w[i * nin..(i + 1) * nin];
+                let a_in = &ws.post[a_off..a_off + nin];
+                let acc = b[i] + dot(row, a_in);
+                ws.pre[z_off + i] = acc;
+                ws.post[a_off + nin + i] = act.apply(acc);
+            }
+            p_off += nout * nin + nout;
+            a_off += nin;
+            z_off += nout;
+        }
+        let last = &ws.post[a_off..a_off + self.out_dim()];
+        for (o, v) in out.iter_mut().zip(last.iter()) {
+            *o = v * self.out_scale;
+        }
+    }
+
+    /// Reverse mode: assumes `forward` was just called with the same `x`/`ws`.
+    /// Accumulates input cotangent into `d_x` and parameter cotangent into
+    /// `d_params` (both `+=`).
+    pub fn vjp(
+        &self,
+        x: &[f64],
+        cot: &[f64],
+        d_x: &mut [f64],
+        d_params: &mut [f64],
+        ws: &mut Workspace,
+    ) {
+        let l_count = self.layer_count();
+        debug_assert_eq!(d_params.len(), self.params.len());
+        // Offsets of the *last* layer.
+        let mut p_offs = Vec::with_capacity(l_count);
+        let mut a_offs = Vec::with_capacity(l_count);
+        let mut z_offs = Vec::with_capacity(l_count);
+        {
+            let (mut p, mut a, mut z) = (0, 0, 0);
+            for l in 0..l_count {
+                p_offs.push(p);
+                a_offs.push(a);
+                z_offs.push(z);
+                p += self.sizes[l + 1] * self.sizes[l] + self.sizes[l + 1];
+                a += self.sizes[l];
+                z += self.sizes[l + 1];
+            }
+        }
+        let maxw = *self.sizes.iter().max().unwrap();
+        // delta holds dL/dz_l; next_delta holds dL/da_{l-1}.
+        let (delta_buf, next_buf) = ws.delta.split_at_mut(maxw);
+        let nout_last = self.out_dim();
+        for i in 0..nout_last {
+            let z = ws.pre[z_offs[l_count - 1] + i];
+            let act = if l_count >= 1 {
+                self.final_act
+            } else {
+                self.act
+            };
+            delta_buf[i] = cot[i] * self.out_scale * act.deriv(z);
+        }
+        for l in (0..l_count).rev() {
+            let (nin, nout) = (self.sizes[l], self.sizes[l + 1]);
+            let p_off = p_offs[l];
+            let a_off = a_offs[l];
+            let w = &self.params[p_off..p_off + nout * nin];
+            // Parameter grads.
+            {
+                let a_in = &ws.post[a_off..a_off + nin];
+                let dw = &mut d_params[p_off..p_off + nout * nin];
+                for i in 0..nout {
+                    let di = delta_buf[i];
+                    if di == 0.0 {
+                        continue;
+                    }
+                    let row = &mut dw[i * nin..(i + 1) * nin];
+                    for (g, aj) in row.iter_mut().zip(a_in.iter()) {
+                        *g += di * aj;
+                    }
+                }
+                let db = &mut d_params[p_off + nout * nin..p_off + nout * nin + nout];
+                for (g, di) in db.iter_mut().zip(delta_buf.iter()) {
+                    *g += di;
+                }
+            }
+            // Input cotangent of this layer: Wᵀ delta.
+            for nj in next_buf.iter_mut().take(nin) {
+                *nj = 0.0;
+            }
+            for i in 0..nout {
+                let di = delta_buf[i];
+                if di == 0.0 {
+                    continue;
+                }
+                let row = &w[i * nin..(i + 1) * nin];
+                for (nj, wij) in next_buf.iter_mut().zip(row.iter()) {
+                    *nj += wij * di;
+                }
+            }
+            if l == 0 {
+                for (dxj, nj) in d_x.iter_mut().zip(next_buf.iter()) {
+                    *dxj += nj;
+                }
+            } else {
+                // Convert dL/da_{l-1} to dL/dz_{l-1}.
+                let act = if l - 1 + 1 == l_count {
+                    self.final_act
+                } else {
+                    self.act
+                };
+                let nprev = self.sizes[l];
+                for j in 0..nprev {
+                    let z = ws.pre[z_offs[l - 1] + j];
+                    delta_buf[j] = next_buf[j] * act.deriv(z);
+                }
+            }
+        }
+        let _ = x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activations_match_finite_difference() {
+        let eps = 1e-6;
+        for act in [
+            Activation::Tanh,
+            Activation::LipSwish,
+            Activation::Silu,
+            Activation::Softplus,
+        ] {
+            for &x in &[-2.0, -0.3, 0.0, 0.7, 3.0] {
+                let fd = (act.apply(x + eps) - act.apply(x - eps)) / (2.0 * eps);
+                assert!(
+                    (fd - act.deriv(x)).abs() < 1e-8,
+                    "{act:?} at {x}: {fd} vs {}",
+                    act.deriv(x)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn param_count() {
+        assert_eq!(Mlp::param_count(&[3, 5, 2]), 3 * 5 + 5 + 5 * 2 + 2);
+    }
+
+    #[test]
+    fn forward_identity_net() {
+        // Zero weights => output = final_act(bias)=0 scaled.
+        let mut rng = Pcg64::new(1);
+        let mut mlp = Mlp::new(vec![2, 3, 2], Activation::Tanh, Activation::Identity, &mut rng);
+        mlp.params.iter_mut().for_each(|p| *p = 0.0);
+        let mut out = [9.0, 9.0];
+        let mut ws = Workspace::default();
+        mlp.forward(&[1.0, -1.0], &mut out, &mut ws);
+        assert_eq!(out, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn vjp_matches_finite_difference() {
+        let mut rng = Pcg64::new(7);
+        let mlp = Mlp::new(
+            vec![3, 8, 8, 2],
+            Activation::LipSwish,
+            Activation::Identity,
+            &mut rng,
+        )
+        .with_out_scale(0.5);
+        let x = [0.3, -0.7, 1.1];
+        let cot = [0.9, -0.4];
+        let mut ws = Workspace::default();
+        let mut out = [0.0; 2];
+        mlp.forward(&x, &mut out, &mut ws);
+        let mut d_x = [0.0; 3];
+        let mut d_p = vec![0.0; mlp.num_params()];
+        mlp.vjp(&x, &cot, &mut d_x, &mut d_p, &mut ws);
+
+        let f = |mlp: &Mlp, x: &[f64]| -> f64 {
+            let mut ws = Workspace::default();
+            let mut out = [0.0; 2];
+            mlp.forward(x, &mut out, &mut ws);
+            out.iter().zip(cot.iter()).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-6;
+        for k in 0..3 {
+            let mut xp = x;
+            xp[k] += eps;
+            let mut xm = x;
+            xm[k] -= eps;
+            let fd = (f(&mlp, &xp) - f(&mlp, &xm)) / (2.0 * eps);
+            assert!((fd - d_x[k]).abs() < 1e-6, "input {k}: {fd} vs {}", d_x[k]);
+        }
+        // Spot-check 20 random parameter entries.
+        let mut idx_rng = Pcg64::new(9);
+        for _ in 0..20 {
+            let k = idx_rng.below(mlp.num_params());
+            let mut mp = mlp.clone();
+            mp.params[k] += eps;
+            let mut mm = mlp.clone();
+            mm.params[k] -= eps;
+            let fd = (f(&mp, &x) - f(&mm, &x)) / (2.0 * eps);
+            assert!(
+                (fd - d_p[k]).abs() < 1e-6,
+                "param {k}: fd {fd} vs {}",
+                d_p[k]
+            );
+        }
+    }
+
+    #[test]
+    fn vjp_softplus_head() {
+        let mut rng = Pcg64::new(11);
+        let mlp = Mlp::new(vec![2, 4, 1], Activation::Silu, Activation::Softplus, &mut rng)
+            .with_out_scale(0.2);
+        let x = [0.5, -0.2];
+        let cot = [1.0];
+        let mut ws = Workspace::default();
+        let mut out = [0.0];
+        mlp.forward(&x, &mut out, &mut ws);
+        assert!(out[0] > 0.0, "softplus output must be positive");
+        let mut d_x = [0.0; 2];
+        let mut d_p = vec![0.0; mlp.num_params()];
+        mlp.vjp(&x, &cot, &mut d_x, &mut d_p, &mut ws);
+        let f = |x: &[f64]| -> f64 {
+            let mut ws = Workspace::default();
+            let mut out = [0.0];
+            mlp.forward(x, &mut out, &mut ws);
+            out[0]
+        };
+        let eps = 1e-6;
+        for k in 0..2 {
+            let mut xp = x;
+            xp[k] += eps;
+            let mut xm = x;
+            xm[k] -= eps;
+            let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!((fd - d_x[k]).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! Neural SDE vector fields.
+//!
+//! [`NeuralSde`] is the Euclidean Langevin-type model of the paper's OU/GBM/
+//! volatility experiments: dz = g(z;θ_g)dt + f(·;θ_f)∘dW with MLP drift and
+//! diagonal MLP diffusion (optionally time-only, as in the OU experiment
+//! where f = f(t;θ_f)).
+//!
+//! [`TorusNeuralSde`] is the Kuramoto model on T𝕋ᴺ: MLP drift/diffusion
+//! fields over the periodic encoding (sinθ, cosθ, ω) ∈ ℝ³ᴺ with outputs in
+//! the Lie algebra ℝ²ᴺ and additive noise on the ω block only (Appendix I.5).
+
+use super::{Activation, Mlp, Workspace};
+use crate::rng::Pcg64;
+use crate::vf::{DiffManifoldVectorField, DiffVectorField, ManifoldVectorField, VectorField};
+use std::sync::Mutex;
+
+/// Reusable hot-path buffers (guarded by one mutex per model so the fields
+/// stay `Sync`; the lock is uncontended in the single-threaded solver loop).
+#[derive(Default)]
+struct Scratch {
+    ws: Workspace,
+    a: Vec<f64>,
+    b: Vec<f64>,
+    c: Vec<f64>,
+}
+
+impl Scratch {
+    fn ensure(&mut self, n: usize) {
+        if self.a.len() < n {
+            self.a.resize(n, 0.0);
+            self.b.resize(n, 0.0);
+            self.c.resize(n, 0.0);
+        }
+    }
+}
+
+/// Euclidean neural SDE with diagonal diffusion.
+pub struct NeuralSde {
+    pub drift: Mlp,
+    pub diffusion: Mlp,
+    /// If true the diffusion net takes only (scaled) time as input.
+    pub time_only_diffusion: bool,
+    pub dim: usize,
+    ws: Mutex<Scratch>,
+}
+
+impl NeuralSde {
+    /// Paper's OU architecture: 2-layer width-32 LipSwish nets, latent dim d.
+    pub fn lsde(dim: usize, width: usize, depth: usize, time_only_diffusion: bool, rng: &mut Pcg64) -> Self {
+        let mut dsizes = vec![dim];
+        for _ in 0..depth {
+            dsizes.push(width);
+        }
+        dsizes.push(dim);
+        let drift = Mlp::new(dsizes, Activation::LipSwish, Activation::Identity, rng);
+        let din = if time_only_diffusion { 1 } else { dim };
+        let mut fsizes = vec![din];
+        for _ in 0..depth {
+            fsizes.push(width);
+        }
+        fsizes.push(dim);
+        let diffusion = Mlp::new(fsizes, Activation::LipSwish, Activation::Softplus, rng)
+            .with_out_scale(0.2);
+        Self {
+            drift,
+            diffusion,
+            time_only_diffusion,
+            dim,
+            ws: Mutex::new(Scratch::default()),
+        }
+    }
+
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.drift.params.clone();
+        p.extend_from_slice(&self.diffusion.params);
+        p
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        let nd = self.drift.params.len();
+        self.drift.params.copy_from_slice(&p[..nd]);
+        self.diffusion.params.copy_from_slice(&p[nd..]);
+    }
+
+}
+
+impl VectorField for NeuralSde {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn noise_dim(&self) -> usize {
+        self.dim
+    }
+    fn combined(&self, t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        let sc = &mut *self.ws.lock().unwrap();
+        sc.ensure(self.dim + 1);
+        self.drift.forward(y, out, &mut sc.ws);
+        for o in out.iter_mut() {
+            *o *= h;
+        }
+        let din_len = if self.time_only_diffusion {
+            sc.a[0] = t;
+            1
+        } else {
+            sc.a[..self.dim].copy_from_slice(y);
+            self.dim
+        };
+        let (din, sigma, ws) = (&sc.a[..din_len], &mut sc.b[..self.dim], &mut sc.ws);
+        self.diffusion.forward(din, sigma, ws);
+        for i in 0..self.dim {
+            out[i] += sigma[i] * dw[i];
+        }
+    }
+}
+
+impl DiffVectorField for NeuralSde {
+    fn num_params(&self) -> usize {
+        self.drift.num_params() + self.diffusion.num_params()
+    }
+    fn vjp(
+        &self,
+        t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+    ) {
+        let sc = &mut *self.ws.lock().unwrap();
+        sc.ensure(self.dim + 1);
+        let nd = self.drift.num_params();
+        // Drift part: cot·h through the drift net.
+        for i in 0..self.dim {
+            sc.c[i] = cot[i] * h;
+        }
+        {
+            let (cot_h, out, ws) = (&sc.c[..self.dim], &mut sc.b[..self.dim], &mut sc.ws);
+            self.drift.forward(y, out, ws);
+            self.drift.vjp(y, cot_h, d_y, &mut d_theta[..nd], ws);
+        }
+        // Diffusion part: cot_i · dw_i through the diffusion net.
+        let din_len = if self.time_only_diffusion {
+            sc.a[0] = t;
+            1
+        } else {
+            sc.a[..self.dim].copy_from_slice(y);
+            self.dim
+        };
+        for i in 0..self.dim {
+            sc.c[i] = cot[i] * dw[i];
+        }
+        {
+            let (din, sigma, ws) = (&sc.a[..din_len], &mut sc.b[..self.dim], &mut sc.ws);
+            self.diffusion.forward(din, sigma, ws);
+        }
+        if self.time_only_diffusion {
+            let mut d_t = [0.0];
+            let (din, cot_dw, ws) = (&sc.a[..1], &sc.c[..self.dim], &mut sc.ws);
+            self.diffusion.vjp(din, cot_dw, &mut d_t, &mut d_theta[nd..], ws);
+        } else {
+            let (din, cot_dw, ws) = (&sc.a[..self.dim], &sc.c[..self.dim], &mut sc.ws);
+            self.diffusion.vjp(din, cot_dw, d_y, &mut d_theta[nd..], ws);
+        }
+    }
+}
+
+/// Neural SDE on T𝕋ᴺ with periodic input encoding.
+pub struct TorusNeuralSde {
+    pub n_osc: usize,
+    pub drift: Mlp,     // input 3N → output 2N (algebra)
+    pub diffusion: Mlp, // input 3N → output N (noise on ω only), softplus·0.1
+    ws: Mutex<Workspace>,
+}
+
+impl TorusNeuralSde {
+    pub fn new(n_osc: usize, width: usize, rng: &mut Pcg64) -> Self {
+        let n = n_osc;
+        let drift = Mlp::new(
+            vec![3 * n, width, width, width, 2 * n],
+            Activation::Silu,
+            Activation::Identity,
+            rng,
+        );
+        let diffusion = Mlp::new(
+            vec![3 * n, width, width, n],
+            Activation::Silu,
+            Activation::Softplus,
+            rng,
+        )
+        .with_out_scale(0.1);
+        Self {
+            n_osc,
+            drift,
+            diffusion,
+            ws: Mutex::new(Workspace::default()),
+        }
+    }
+
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.drift.params.clone();
+        p.extend_from_slice(&self.diffusion.params);
+        p
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        let nd = self.drift.params.len();
+        self.drift.params.copy_from_slice(&p[..nd]);
+        self.diffusion.params.copy_from_slice(&p[nd..]);
+    }
+
+    /// Periodic encoding (sinθ, cosθ, ω).
+    fn encode(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.n_osc;
+        let mut e = vec![0.0; 3 * n];
+        for i in 0..n {
+            e[i] = y[i].sin();
+            e[n + i] = y[i].cos();
+            e[2 * n + i] = y[n + i];
+        }
+        e
+    }
+
+    /// VJP of the encoding: d_y += (∂e/∂y)ᵀ d_e.
+    fn encode_vjp(&self, y: &[f64], d_e: &[f64], d_y: &mut [f64]) {
+        let n = self.n_osc;
+        for i in 0..n {
+            d_y[i] += d_e[i] * y[i].cos() - d_e[n + i] * y[i].sin();
+            d_y[n + i] += d_e[2 * n + i];
+        }
+    }
+}
+
+impl ManifoldVectorField for TorusNeuralSde {
+    fn point_dim(&self) -> usize {
+        2 * self.n_osc
+    }
+    fn algebra_dim(&self) -> usize {
+        2 * self.n_osc
+    }
+    fn noise_dim(&self) -> usize {
+        self.n_osc
+    }
+    fn generator(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        let n = self.n_osc;
+        let ws = &mut *self.ws.lock().unwrap();
+        let e = self.encode(y);
+        self.drift.forward(&e, out, ws);
+        for o in out.iter_mut() {
+            *o *= h;
+        }
+        let mut sigma = vec![0.0; n];
+        self.diffusion.forward(&e, &mut sigma, ws);
+        // Additive noise on the ω block only (decoupled diffusion).
+        for i in 0..n {
+            out[n + i] += sigma[i] * dw[i];
+        }
+    }
+}
+
+impl DiffManifoldVectorField for TorusNeuralSde {
+    fn num_params(&self) -> usize {
+        self.drift.num_params() + self.diffusion.num_params()
+    }
+    fn vjp(
+        &self,
+        _t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+    ) {
+        let n = self.n_osc;
+        let ws = &mut *self.ws.lock().unwrap();
+        let nd = self.drift.num_params();
+        let e = self.encode(y);
+        let mut d_e = vec![0.0; 3 * n];
+        // Drift: cot·h.
+        let cot_h: Vec<f64> = cot.iter().map(|c| c * h).collect();
+        let mut out = vec![0.0; 2 * n];
+        self.drift.forward(&e, &mut out, ws);
+        self.drift.vjp(&e, &cot_h, &mut d_e, &mut d_theta[..nd], ws);
+        // Diffusion: cot on ω block times dw.
+        let cot_dw: Vec<f64> = (0..n).map(|i| cot[n + i] * dw[i]).collect();
+        let mut sigma = vec![0.0; n];
+        self.diffusion.forward(&e, &mut sigma, ws);
+        self.diffusion
+            .vjp(&e, &cot_dw, &mut d_e, &mut d_theta[nd..], ws);
+        self.encode_vjp(y, &d_e, d_y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neural_sde_vjp_matches_fd() {
+        let mut rng = Pcg64::new(3);
+        let model = NeuralSde::lsde(2, 8, 2, false, &mut rng);
+        let y = [0.3, -0.5];
+        let (t, h, dw) = (0.4, 0.1, [0.2, -0.1]);
+        let cot = [1.0, -0.7];
+        let mut d_y = [0.0; 2];
+        let mut d_theta = vec![0.0; model.num_params()];
+        model.vjp(t, &y, h, &dw, &cot, &mut d_y, &mut d_theta);
+        let f = |m: &NeuralSde, y: &[f64]| -> f64 {
+            let mut out = [0.0; 2];
+            m.combined(t, y, h, &dw, &mut out);
+            out.iter().zip(cot.iter()).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-6;
+        for k in 0..2 {
+            let mut yp = y;
+            yp[k] += eps;
+            let mut ym = y;
+            ym[k] -= eps;
+            let fd = (f(&model, &yp) - f(&model, &ym)) / (2.0 * eps);
+            assert!((fd - d_y[k]).abs() < 1e-6, "y {k}: {fd} vs {}", d_y[k]);
+        }
+        let mut idx = Pcg64::new(5);
+        let p0 = model.params();
+        for _ in 0..12 {
+            let k = idx.below(p0.len());
+            let mut mp = NeuralSde::lsde(2, 8, 2, false, &mut Pcg64::new(3));
+            let mut pp = p0.clone();
+            pp[k] += eps;
+            mp.set_params(&pp);
+            let mut mm = NeuralSde::lsde(2, 8, 2, false, &mut Pcg64::new(3));
+            let mut pm = p0.clone();
+            pm[k] -= eps;
+            mm.set_params(&pm);
+            let fd = (f(&mp, &y) - f(&mm, &y)) / (2.0 * eps);
+            assert!(
+                (fd - d_theta[k]).abs() < 1e-6,
+                "theta {k}: {fd} vs {}",
+                d_theta[k]
+            );
+        }
+    }
+
+    #[test]
+    fn time_only_diffusion_ignores_state() {
+        let mut rng = Pcg64::new(7);
+        let model = NeuralSde::lsde(2, 8, 2, true, &mut rng);
+        let (t, h, dw) = (0.3, 0.0, [1.0, 1.0]); // isolate diffusion term
+        let mut o1 = [0.0; 2];
+        let mut o2 = [0.0; 2];
+        model.combined(t, &[0.1, 0.2], h, &dw, &mut o1);
+        model.combined(t, &[-2.0, 5.0], h, &dw, &mut o2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn torus_nsde_vjp_matches_fd() {
+        let mut rng = Pcg64::new(9);
+        let model = TorusNeuralSde::new(2, 8, &mut rng);
+        let y = [0.5, -1.1, 0.3, 0.2]; // θ1 θ2 ω1 ω2
+        let (t, h, dw) = (0.0, 0.1, [0.15, -0.05]);
+        let cot = [0.8, -0.3, 0.5, 1.0];
+        let mut d_y = [0.0; 4];
+        let mut d_theta = vec![0.0; model.num_params()];
+        model.vjp(t, &y, h, &dw, &cot, &mut d_y, &mut d_theta);
+        let f = |m: &TorusNeuralSde, y: &[f64]| -> f64 {
+            let mut out = [0.0; 4];
+            m.generator(t, y, h, &dw, &mut out);
+            out.iter().zip(cot.iter()).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-6;
+        for k in 0..4 {
+            let mut yp = y;
+            yp[k] += eps;
+            let mut ym = y;
+            ym[k] -= eps;
+            let fd = (f(&model, &yp) - f(&model, &ym)) / (2.0 * eps);
+            assert!((fd - d_y[k]).abs() < 1e-6, "y {k}: {fd} vs {}", d_y[k]);
+        }
+        let p0 = model.params();
+        let mut idx = Pcg64::new(11);
+        for _ in 0..10 {
+            let k = idx.below(p0.len());
+            let mut mp = TorusNeuralSde::new(2, 8, &mut Pcg64::new(9));
+            let mut pp = p0.clone();
+            pp[k] += eps;
+            mp.set_params(&pp);
+            let mut mm = TorusNeuralSde::new(2, 8, &mut Pcg64::new(9));
+            let mut pm = p0.clone();
+            pm[k] -= eps;
+            mm.set_params(&pm);
+            let fd = (f(&mp, &y) - f(&mm, &y)) / (2.0 * eps);
+            assert!(
+                (fd - d_theta[k]).abs() < 1e-6,
+                "theta {k}: {fd} vs {}",
+                d_theta[k]
+            );
+        }
+    }
+
+    #[test]
+    fn diffusion_positive() {
+        let mut rng = Pcg64::new(13);
+        let model = NeuralSde::lsde(3, 8, 2, false, &mut rng);
+        // With zero drift contribution (h=0), out_i = σ_i dw_i; σ > 0.
+        let mut out = [0.0; 3];
+        model.combined(0.0, &[0.4, 0.1, -0.2], 0.0, &[1.0, 1.0, 1.0], &mut out);
+        for o in out {
+            assert!(o > 0.0, "softplus diffusion must be positive: {o}");
+        }
+    }
+}

@@ -1,0 +1,155 @@
+//! First-order optimisers over flat parameter vectors: SGD, Adam, AdamW,
+//! with optional global-norm gradient clipping — the training configurations
+//! used across the paper's experiments (Adam for OU/GBM, AdamW + clip-1.0
+//! for Kuramoto, SGD for the stochastic-volatility benchmarks).
+
+/// Optimiser state + hyperparameters.
+#[derive(Clone, Debug)]
+pub enum Optimizer {
+    Sgd {
+        lr: f64,
+    },
+    Adam {
+        lr: f64,
+        beta1: f64,
+        beta2: f64,
+        eps: f64,
+        /// Decoupled weight decay (0 ⇒ plain Adam, >0 ⇒ AdamW).
+        weight_decay: f64,
+        m: Vec<f64>,
+        v: Vec<f64>,
+        t: u64,
+    },
+}
+
+impl Optimizer {
+    pub fn sgd(lr: f64) -> Self {
+        Optimizer::Sgd { lr }
+    }
+
+    pub fn adam(lr: f64, n_params: usize) -> Self {
+        Optimizer::Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            t: 0,
+        }
+    }
+
+    pub fn adamw(lr: f64, weight_decay: f64, n_params: usize) -> Self {
+        let mut o = Self::adam(lr, n_params);
+        if let Optimizer::Adam {
+            weight_decay: wd, ..
+        } = &mut o
+        {
+            *wd = weight_decay;
+        }
+        o
+    }
+
+    /// Apply one update: params ← params − direction(grads).
+    pub fn step(&mut self, params: &mut [f64], grads: &[f64]) {
+        match self {
+            Optimizer::Sgd { lr } => {
+                for (p, g) in params.iter_mut().zip(grads.iter()) {
+                    *p -= *lr * g;
+                }
+            }
+            Optimizer::Adam {
+                lr,
+                beta1,
+                beta2,
+                eps,
+                weight_decay,
+                m,
+                v,
+                t,
+            } => {
+                *t += 1;
+                let b1t = 1.0 - beta1.powi(*t as i32);
+                let b2t = 1.0 - beta2.powi(*t as i32);
+                for i in 0..params.len() {
+                    m[i] = *beta1 * m[i] + (1.0 - *beta1) * grads[i];
+                    v[i] = *beta2 * v[i] + (1.0 - *beta2) * grads[i] * grads[i];
+                    let mhat = m[i] / b1t;
+                    let vhat = v[i] / b2t;
+                    params[i] -= *lr * (mhat / (vhat.sqrt() + *eps) + *weight_decay * params[i]);
+                }
+            }
+        }
+    }
+}
+
+/// Clip a gradient vector to a maximum global ℓ2 norm (in place); returns
+/// the pre-clip norm.
+pub fn clip_global_norm(grads: &mut [f64], max_norm: f64) -> f64 {
+    let norm = grads.iter().map(|g| g * g).sum::<f64>().sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adam on a quadratic converges to the minimum.
+    #[test]
+    fn adam_minimises_quadratic() {
+        let mut params = vec![5.0, -3.0];
+        let mut opt = Optimizer::adam(0.1, 2);
+        for _ in 0..500 {
+            let grads: Vec<f64> = params.iter().map(|p| 2.0 * (p - 1.0)).collect();
+            opt.step(&mut params, &grads);
+        }
+        for p in &params {
+            assert!((p - 1.0).abs() < 1e-3, "{p}");
+        }
+    }
+
+    #[test]
+    fn sgd_step_direction() {
+        let mut params = vec![1.0];
+        let mut opt = Optimizer::sgd(0.5);
+        opt.step(&mut params, &[2.0]);
+        assert!((params[0] - 0.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn adamw_decays_weights() {
+        let mut p_adam = vec![10.0];
+        let mut p_adamw = vec![10.0];
+        let mut a = Optimizer::adam(0.01, 1);
+        let mut aw = Optimizer::adamw(0.01, 0.1, 1);
+        for _ in 0..100 {
+            a.step(&mut p_adam, &[0.0]);
+            aw.step(&mut p_adamw, &[0.0]);
+        }
+        assert!((p_adam[0] - 10.0).abs() < 1e-12, "plain Adam must not move");
+        assert!(p_adamw[0] < 10.0, "AdamW must decay");
+    }
+
+    #[test]
+    fn clip_reduces_norm() {
+        let mut g = vec![3.0, 4.0];
+        let pre = clip_global_norm(&mut g, 1.0);
+        assert!((pre - 5.0).abs() < 1e-12);
+        let post = (g[0] * g[0] + g[1] * g[1]).sqrt();
+        assert!((post - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clip_noop_under_threshold() {
+        let mut g = vec![0.3, 0.4];
+        clip_global_norm(&mut g, 1.0);
+        assert_eq!(g, vec![0.3, 0.4]);
+    }
+}

@@ -1,0 +1,337 @@
+//! Fractional Brownian motion and rough-volatility drivers.
+//!
+//! Two exact samplers for fractional Gaussian noise (fGn):
+//! - **Davies–Harte** circulant embedding (O(n log n), needs a power-of-two
+//!   padded grid and a nonnegative circulant spectrum — holds for all
+//!   H ∈ (0,1) in practice);
+//! - **Cholesky** factorisation of the fGn covariance (O(n³), any grid) used
+//!   as the correctness oracle in tests.
+//!
+//! Also provides the Riemann–Liouville kernel sampler used by the rough
+//! Bergomi / rough Heston models (a discrete convolution analogue of the
+//! Bennedsen–Lunde–Pakkanen hybrid scheme).
+
+use super::Pcg64;
+
+/// Autocovariance of fGn with Hurst `h` at lag `k` for unit step:
+/// γ(k) = ½(|k+1|^{2H} − 2|k|^{2H} + |k−1|^{2H}).
+pub fn fgn_autocov(hurst: f64, k: usize) -> f64 {
+    let k = k as f64;
+    let two_h = 2.0 * hurst;
+    0.5 * ((k + 1.0).powf(two_h) - 2.0 * k.powf(two_h) + (k - 1.0).abs().powf(two_h))
+}
+
+/// In-place iterative radix-2 complex FFT (`inverse=false`) / inverse FFT.
+///
+/// `re`/`im` must have power-of-two length. The inverse includes the 1/n
+/// normalisation.
+pub fn fft(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    assert_eq!(n, im.len());
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr0, vi0) = (re[i + k + len / 2], im[i + k + len / 2]);
+                let vr = vr0 * cr - vi0 * ci;
+                let vi = vr0 * ci + vi0 * cr;
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv = 1.0 / n as f64;
+        for x in re.iter_mut() {
+            *x *= inv;
+        }
+        for x in im.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Sample `n` increments of fBm with Hurst `hurst` over steps of size `dt`
+/// using Davies–Harte circulant embedding. Returns fGn scaled by dt^H.
+pub fn fgn_davies_harte(rng: &mut Pcg64, hurst: f64, n: usize, dt: f64) -> Vec<f64> {
+    assert!(n >= 1);
+    if (hurst - 0.5).abs() < 1e-12 {
+        // Plain Brownian increments.
+        let mut out = vec![0.0; n];
+        rng.fill_normal_scaled(dt.sqrt(), &mut out);
+        return out;
+    }
+    // Circulant of size m = 2^k >= 2n.
+    let mut m = 1usize;
+    while m < 2 * n {
+        m <<= 1;
+    }
+    // First row of the circulant covariance.
+    let mut re = vec![0.0; m];
+    let mut im = vec![0.0; m];
+    for (k, r) in re.iter_mut().enumerate().take(m / 2 + 1) {
+        *r = fgn_autocov(hurst, k);
+    }
+    for k in m / 2 + 1..m {
+        re[k] = re[m - k];
+    }
+    fft(&mut re, &mut im, false);
+    // Eigenvalues of the circulant; clamp tiny negatives from round-off.
+    let lambda: Vec<f64> = re.iter().map(|&x| x.max(0.0)).collect();
+
+    // Generate complex Gaussian vector with the required symmetry.
+    let mut ar = vec![0.0; m];
+    let mut ai = vec![0.0; m];
+    let scale = 1.0 / (m as f64);
+    ar[0] = (lambda[0] * scale).sqrt() * rng.normal() * (m as f64).sqrt();
+    ai[0] = 0.0;
+    ar[m / 2] = (lambda[m / 2] * scale).sqrt() * rng.normal() * (m as f64).sqrt();
+    ai[m / 2] = 0.0;
+    for k in 1..m / 2 {
+        let s = (lambda[k] * scale * 0.5).sqrt() * (m as f64).sqrt();
+        let (g1, g2) = (rng.normal(), rng.normal());
+        ar[k] = s * g1;
+        ai[k] = s * g2;
+        ar[m - k] = ar[k];
+        ai[m - k] = -ai[k];
+    }
+    // Inverse transform; real part gives stationary Gaussian sequence with
+    // the fGn covariance on the first n entries. Using forward FFT with the
+    // conjugate-symmetric input yields a real sequence up to round-off.
+    fft(&mut ar, &mut ai, false);
+    let norm = 1.0 / (m as f64).sqrt();
+    let h_scale = dt.powf(hurst);
+    ar.truncate(n);
+    ar.iter().map(|&x| x * norm * h_scale).collect()
+}
+
+/// Cholesky-based fGn sampler (O(n³)); oracle for tests and small n.
+pub fn fgn_cholesky(rng: &mut Pcg64, hurst: f64, n: usize, dt: f64) -> Vec<f64> {
+    let mut cov = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            cov[i * n + j] = fgn_autocov(hurst, i.abs_diff(j));
+        }
+    }
+    let l = cholesky(&cov, n).expect("fGn covariance must be SPD");
+    let mut z = vec![0.0; n];
+    rng.fill_normal(&mut z);
+    let h_scale = dt.powf(hurst);
+    let mut out = vec![0.0; n];
+    for i in 0..n {
+        let mut acc = 0.0;
+        for j in 0..=i {
+            acc += l[i * n + j] * z[j];
+        }
+        out[i] = acc * h_scale;
+    }
+    out
+}
+
+/// Dense Cholesky factorisation, returning lower-triangular L (row-major).
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Riemann–Liouville fractional process V_t = √(2H) ∫₀ᵗ (t−s)^{H−1/2} dW_s,
+/// sampled on a uniform grid by left-point discrete convolution with an exact
+/// cell-integrated kernel (the `kappa = 0` variant of the hybrid scheme of
+/// Bennedsen–Lunde–Pakkanen). `dw` are the Brownian increments of the driving
+/// motion (length n), returns V at grid points t_1..t_n.
+pub fn riemann_liouville(hurst: f64, dt: f64, dw: &[f64]) -> Vec<f64> {
+    let n = dw.len();
+    let alpha = hurst - 0.5;
+    let c = (2.0 * hurst).sqrt();
+    // Kernel weights: b_k = ((k+1)^{α+1} − k^{α+1})/(α+1) · dt^α  approximates
+    // ∫ over one cell of (t−s)^α / dt ; exact cell average power.
+    let mut b = vec![0.0; n];
+    for (k, bk) in b.iter_mut().enumerate() {
+        *bk = ((k as f64 + 1.0).powf(alpha + 1.0) - (k as f64).powf(alpha + 1.0)) / (alpha + 1.0)
+            * dt.powf(alpha);
+    }
+    let mut v = vec![0.0; n];
+    for (i, vi) in v.iter_mut().enumerate() {
+        let mut acc = 0.0;
+        for k in 0..=i {
+            acc += b[i - k] * dw[k];
+        }
+        *vi = c * acc;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_round_trip() {
+        let mut rng = Pcg64::new(1);
+        let n = 64;
+        let mut re = vec![0.0; n];
+        let mut im = vec![0.0; n];
+        rng.fill_normal(&mut re);
+        rng.fill_normal(&mut im);
+        let (r0, i0) = (re.clone(), im.clone());
+        fft(&mut re, &mut im, false);
+        fft(&mut re, &mut im, true);
+        for k in 0..n {
+            assert!((re[k] - r0[k]).abs() < 1e-10);
+            assert!((im[k] - i0[k]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fft_matches_dft_small() {
+        let mut re = vec![1.0, 2.0, 3.0, 4.0];
+        let mut im = vec![0.0; 4];
+        fft(&mut re, &mut im, false);
+        // DFT of [1,2,3,4]: [10, -2+2i, -2, -2-2i]
+        assert!((re[0] - 10.0).abs() < 1e-12);
+        assert!((re[1] + 2.0).abs() < 1e-12 && (im[1] - 2.0).abs() < 1e-12);
+        assert!((re[2] + 2.0).abs() < 1e-12);
+        assert!((re[3] + 2.0).abs() < 1e-12 && (im[3] + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn autocov_h_half_is_delta() {
+        assert!((fgn_autocov(0.5, 0) - 1.0).abs() < 1e-14);
+        for k in 1..10 {
+            assert!(fgn_autocov(0.5, k).abs() < 1e-14);
+        }
+    }
+
+    /// Davies–Harte sample autocovariance matches the analytic fGn covariance.
+    #[test]
+    fn davies_harte_covariance() {
+        let hurst = 0.3;
+        let n = 256;
+        let reps = 400;
+        let mut rng = Pcg64::new(17);
+        let mut acc = vec![0.0f64; 4]; // lags 0..3
+        for _ in 0..reps {
+            let x = fgn_davies_harte(&mut rng, hurst, n, 1.0);
+            for lag in 0..4 {
+                let mut c = 0.0;
+                for i in 0..n - lag {
+                    c += x[i] * x[i + lag];
+                }
+                acc[lag] += c / (n - lag) as f64;
+            }
+        }
+        for (lag, a) in acc.iter().enumerate() {
+            let est = a / reps as f64;
+            let want = fgn_autocov(hurst, lag);
+            assert!(
+                (est - want).abs() < 0.05,
+                "lag {lag}: est {est} want {want}"
+            );
+        }
+    }
+
+    /// Cholesky oracle agrees with Davies–Harte in distribution (variance of
+    /// the terminal value of the fBm).
+    #[test]
+    fn terminal_variance_matches_fbm_law() {
+        let hurst = 0.7;
+        let n = 64;
+        let dt = 1.0 / n as f64;
+        let reps = 3000;
+        let mut rng = Pcg64::new(23);
+        let mut var_dh = 0.0;
+        let mut var_ch = 0.0;
+        for _ in 0..reps {
+            let x = fgn_davies_harte(&mut rng, hurst, n, dt);
+            let s: f64 = x.iter().sum();
+            var_dh += s * s;
+            let y = fgn_cholesky(&mut rng, hurst, n, dt);
+            let s2: f64 = y.iter().sum();
+            var_ch += s2 * s2;
+        }
+        var_dh /= reps as f64;
+        var_ch /= reps as f64;
+        // Var[B_H(1)] = 1 for fBm at t=1.
+        assert!((var_dh - 1.0).abs() < 0.12, "DH terminal var {var_dh}");
+        assert!((var_ch - 1.0).abs() < 0.12, "Chol terminal var {var_ch}");
+    }
+
+    #[test]
+    fn riemann_liouville_variance() {
+        // Var V_t = 2H ∫_0^t (t-s)^{2H-1} ds = t^{2H}.
+        let hurst = 0.25;
+        let n = 512;
+        let dt = 1.0 / n as f64;
+        let reps = 2000;
+        let mut rng = Pcg64::new(31);
+        let mut var_end = 0.0;
+        for _ in 0..reps {
+            let mut dw = vec![0.0; n];
+            rng.fill_normal_scaled(dt.sqrt(), &mut dw);
+            let v = riemann_liouville(hurst, dt, &dw);
+            var_end += v[n - 1] * v[n - 1];
+        }
+        var_end /= reps as f64;
+        assert!(
+            (var_end - 1.0).abs() < 0.1,
+            "RL terminal variance {var_end} (want ~1)"
+        );
+    }
+
+    #[test]
+    fn cholesky_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let l = cholesky(&a, 2).unwrap();
+        assert!((l[0] - 1.0).abs() < 1e-15 && (l[3] - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0];
+        assert!(cholesky(&a, 2).is_none());
+    }
+}

@@ -1,0 +1,309 @@
+//! Random number generation and stochastic drivers.
+//!
+//! Provides a fast, seedable, splittable PRNG ([`Pcg64`]), Gaussian sampling,
+//! Brownian path generation, and fractional Brownian motion ([`fbm`]) used by
+//! the rough-volatility and convergence experiments.
+
+pub mod fbm;
+
+/// PCG-XSH-RR-like 64-bit generator (splitmix-seeded xoshiro256++).
+///
+/// Deterministic across platforms; no external dependencies. Streams can be
+/// `split` for independent per-trajectory noise, mirroring JAX PRNG keys so
+/// the Rust coordinator and the AOT-compiled artifacts can share seeds.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    s: [u64; 4],
+    /// Cached second Gaussian from Box–Muller.
+    cached: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s, cached: None }
+    }
+
+    /// Derive an independent stream (for per-trajectory noise).
+    pub fn split(&mut self, index: u64) -> Self {
+        let mut sm = self.next_u64() ^ index.wrapping_mul(0xA24BAED4963EE407);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s, cached: None }
+    }
+
+    /// Next raw 64-bit output (xoshiro256++).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    #[inline]
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached.take() {
+            return z;
+        }
+        // Avoid u == 0 for the log.
+        let u = loop {
+            let u = self.uniform();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let v = self.uniform();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.cached = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Fill a slice with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for x in out.iter_mut() {
+            *x = self.normal();
+        }
+    }
+
+    /// Fill a slice with N(0, sigma^2) samples.
+    pub fn fill_normal_scaled(&mut self, sigma: f64, out: &mut [f64]) {
+        for x in out.iter_mut() {
+            *x = sigma * self.normal();
+        }
+    }
+
+    /// Random index in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+/// A sampled Brownian path: increments over a uniform grid.
+///
+/// `dw[n]` holds the `dim` components of W(t_{n+1}) − W(t_n) with
+/// t_n = t0 + n·h. This is the driver object every SDE solver consumes —
+/// simplified Runge–Kutta schemes (Redmann–Riedel) weight tableau entries by
+/// these increments.
+#[derive(Clone, Debug)]
+pub struct BrownianPath {
+    /// Step size of the generation grid.
+    pub h: f64,
+    /// Driver dimension.
+    pub dim: usize,
+    /// Flattened increments, `steps * dim`.
+    pub dw: Vec<f64>,
+}
+
+impl BrownianPath {
+    /// Sample a `dim`-dimensional Brownian path with `steps` increments of size `h`.
+    pub fn sample(rng: &mut Pcg64, dim: usize, steps: usize, h: f64) -> Self {
+        let mut dw = vec![0.0; steps * dim];
+        let s = h.sqrt();
+        rng.fill_normal_scaled(s, &mut dw);
+        Self { h, dim, dw }
+    }
+
+    /// Number of increments.
+    pub fn steps(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.dw.len() / self.dim
+        }
+    }
+
+    /// Increment slice for step `n`.
+    #[inline]
+    pub fn increment(&self, n: usize) -> &[f64] {
+        &self.dw[n * self.dim..(n + 1) * self.dim]
+    }
+
+    /// Coarsen by summing groups of `k` consecutive increments (exact Brownian
+    /// refinement consistency: the coarse path is the same Brownian motion).
+    pub fn coarsen(&self, k: usize) -> Self {
+        assert!(self.steps() % k == 0, "steps must divide");
+        let steps_c = self.steps() / k;
+        let mut dw = vec![0.0; steps_c * self.dim];
+        for n in 0..steps_c {
+            for j in 0..k {
+                let src = (n * k + j) * self.dim;
+                for d in 0..self.dim {
+                    dw[n * self.dim + d] += self.dw[src + d];
+                }
+            }
+        }
+        Self {
+            h: self.h * k as f64,
+            dim: self.dim,
+            dw,
+        }
+    }
+
+    /// Path values W(t_n) (prepends W(t_0)=0), flattened `(steps+1) * dim`.
+    pub fn cumulative(&self) -> Vec<f64> {
+        let steps = self.steps();
+        let mut w = vec![0.0; (steps + 1) * self.dim];
+        for n in 0..steps {
+            for d in 0..self.dim {
+                w[(n + 1) * self.dim + d] = w[n * self.dim + d] + self.dw[n * self.dim + d];
+            }
+        }
+        w
+    }
+
+    /// Time-reversed driver: increments negated and order reversed, so that
+    /// running a solver forwards over the reversed path undoes the original
+    /// (used by reversible adjoints).
+    pub fn reversed(&self) -> Self {
+        let steps = self.steps();
+        let mut dw = vec![0.0; self.dw.len()];
+        for n in 0..steps {
+            for d in 0..self.dim {
+                dw[n * self.dim + d] = -self.dw[(steps - 1 - n) * self.dim + d];
+            }
+        }
+        Self {
+            h: self.h,
+            dim: self.dim,
+            dw,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut root = Pcg64::new(7);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(3);
+        let n = 200_000;
+        let (mut m1, mut m2, mut m4) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            m1 += z;
+            m2 += z * z;
+            m4 += z * z * z * z;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        m4 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+        assert!((m4 - 3.0).abs() < 0.15, "kurtosis {m4}");
+    }
+
+    #[test]
+    fn brownian_variance_scales_with_h() {
+        let mut rng = Pcg64::new(5);
+        let h = 0.01;
+        let bp = BrownianPath::sample(&mut rng, 1, 100_000, h);
+        let var: f64 = bp.dw.iter().map(|x| x * x).sum::<f64>() / bp.dw.len() as f64;
+        assert!((var - h).abs() < 1e-3, "var {var}");
+    }
+
+    #[test]
+    fn coarsen_preserves_total_displacement() {
+        let mut rng = Pcg64::new(9);
+        let bp = BrownianPath::sample(&mut rng, 3, 64, 0.01);
+        let c = bp.coarsen(8);
+        let sum = |p: &BrownianPath, d: usize| -> f64 {
+            (0..p.steps()).map(|n| p.increment(n)[d]).sum()
+        };
+        for d in 0..3 {
+            assert!((sum(&bp, d) - sum(&c, d)).abs() < 1e-12);
+        }
+        assert_eq!(c.steps(), 8);
+        assert!((c.h - 0.08).abs() < 1e-15);
+    }
+
+    #[test]
+    fn reversed_path_round_trip() {
+        let mut rng = Pcg64::new(11);
+        let bp = BrownianPath::sample(&mut rng, 2, 10, 0.1);
+        let rr = bp.reversed().reversed();
+        for (a, b) in bp.dw.iter().zip(rr.dw.iter()) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn cumulative_endpoints() {
+        let mut rng = Pcg64::new(13);
+        let bp = BrownianPath::sample(&mut rng, 1, 50, 0.02);
+        let w = bp.cumulative();
+        assert_eq!(w.len(), 51);
+        assert_eq!(w[0], 0.0);
+        let total: f64 = bp.dw.iter().sum();
+        assert!((w[50] - total).abs() < 1e-12);
+    }
+}

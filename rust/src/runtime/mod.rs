@@ -1,0 +1,112 @@
+//! PJRT runtime: loads AOT-compiled JAX/Pallas artifacts (HLO text emitted
+//! by `python/compile/aot.py`) and executes them from the Rust training
+//! loop. Python runs once at build time (`make artifacts`); this module is
+//! the only consumer of its output.
+//!
+//! Interchange is HLO *text* (not serialized HloModuleProto): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled executable plus its client.
+pub struct CompiledModule {
+    pub client: xla::PjRtClient,
+    pub exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl CompiledModule {
+    /// Load an HLO-text artifact and compile it on the CPU PJRT client.
+    pub fn load_cpu(path: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile HLO")?;
+        Ok(Self {
+            client,
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Execute on f32 buffers: inputs are (data, shape) pairs; outputs are
+    /// flattened f32 vectors (the artifact returns a tuple).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .context("reshape input literal")?;
+            lits.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .context("execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = result.to_tuple().context("untuple result")?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>().context("read output")?);
+        }
+        Ok(out)
+    }
+}
+
+/// Check whether the artifacts directory is populated.
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("ees_step.hlo.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration smoke (skips when artifacts have not been built — CI for
+    /// the Rust side alone must not require the Python toolchain).
+    #[test]
+    fn load_and_run_ees_step_artifact() {
+        let dir = std::path::PathBuf::from(
+            std::env::var("EES_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        );
+        if !artifacts_available(&dir) {
+            eprintln!("artifacts not built; skipping PJRT smoke test");
+            return;
+        }
+        let m = CompiledModule::load_cpu(&dir.join("ees_step.hlo.txt")).unwrap();
+        // The artifact advances a batch of OU states one EES(2,5) step:
+        // inputs y (B,D), dw (B,D), h () — see python/compile/aot.py.
+        let b = 8usize;
+        let d = 4usize;
+        let y: Vec<f32> = (0..b * d).map(|i| (i as f32) * 0.01).collect();
+        let dw = vec![0.0f32; b * d];
+        let h = [0.05f32];
+        let out = m
+            .run_f32(&[(&y, &[b, d]), (&dw, &[b, d]), (&h, &[])])
+            .unwrap();
+        assert_eq!(out[0].len(), b * d);
+        // OU drift ν(μ − y) with ν=0.2, μ=0.1 pulls toward 0.1.
+        for (i, (&y0, &y1)) in y.iter().zip(out[0].iter()).enumerate() {
+            assert!(y1.is_finite(), "output {i} not finite");
+            let drift_dir = (0.1 - y0 as f64).signum();
+            let moved = (y1 - y0) as f64;
+            if (y0 as f64 - 0.1).abs() > 1e-3 {
+                assert!(
+                    moved * drift_dir > 0.0,
+                    "state {i} moved against the drift: {y0} -> {y1}"
+                );
+            }
+        }
+    }
+}

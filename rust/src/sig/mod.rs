@@ -1,0 +1,346 @@
+//! Truncated path signatures and signature-kernel MMD losses.
+//!
+//! The paper trains its stochastic-volatility models with a "truncated
+//! (time-augmented) path-signature MMD²" objective (Appendix I.4) and its
+//! rough-Bergomi model with a signature-kernel score. We implement the
+//! truncated signature of a piecewise-linear path up to a chosen depth via
+//! Chen's relation, the induced linear-kernel MMD², and its gradient with
+//! respect to the path values (needed to backpropagate into the NSDE
+//! trajectory).
+
+/// Number of signature coefficients of depth ≤ `depth` in dimension `d`
+/// (excluding the constant 1): d + d² + … + d^depth.
+pub fn sig_len(d: usize, depth: usize) -> usize {
+    let mut total = 0usize;
+    let mut p = 1usize;
+    for _ in 0..depth {
+        p *= d;
+        total += p;
+    }
+    total
+}
+
+/// Truncated signature of a piecewise-linear path.
+///
+/// `path` is `(n_points, d)` flattened row-major. Returns coefficients of
+/// words of length 1..=depth, grouped by level: [level1 (d), level2 (d²), …].
+/// Computed by iterating Chen's identity with the closed-form signature of a
+/// straight-line segment, exp(Δ) (tensor exponential of the increment).
+pub fn signature(path: &[f64], n: usize, d: usize, depth: usize) -> Vec<f64> {
+    assert!(n >= 1);
+    let len = sig_len(d, depth);
+    // sig levels: level k has d^k entries.
+    let mut sig = vec![0.0; len];
+    let mut seg = vec![0.0; len];
+    let mut tmp = vec![0.0; len];
+    let mut delta = vec![0.0; d];
+    let level_off: Vec<usize> = {
+        let mut offs = vec![0usize];
+        let mut p = 1usize;
+        for _ in 0..depth {
+            p *= d;
+            offs.push(offs.last().unwrap() + p);
+        }
+        offs
+    };
+    let mut first = true;
+    for seg_i in 0..n - 1 {
+        for k in 0..d {
+            delta[k] = path[(seg_i + 1) * d + k] - path[seg_i * d + k];
+        }
+        // seg = exp⊗(delta): level k = delta^{⊗k}/k!.
+        seg[..d].copy_from_slice(&delta);
+        for lvl in 2..=depth {
+            let (prev_lo, prev_hi) = (level_off[lvl - 2], level_off[lvl - 1]);
+            let cur_lo = level_off[lvl - 1];
+            let prev_len = prev_hi - prev_lo;
+            let inv = 1.0 / lvl as f64;
+            // split borrow: prev block comes before cur block
+            let (head, tail) = seg.split_at_mut(cur_lo);
+            let prev = &head[prev_lo..prev_hi];
+            for i in 0..prev_len {
+                for k in 0..d {
+                    tail[i * d + k] = prev[i] * delta[k] * inv;
+                }
+            }
+        }
+        if first {
+            sig.copy_from_slice(&seg);
+            first = false;
+            continue;
+        }
+        // Chen: sig ← sig ⊗ seg (truncated), with implicit unit terms.
+        tmp.copy_from_slice(&sig);
+        for (t, s) in tmp.iter_mut().zip(seg.iter()) {
+            *t += s; // unit ⊗ seg and sig ⊗ unit contributions
+        }
+        for lvl in 2..=depth {
+            // cross terms: level lvl += Σ_{a+b=lvl, a,b>=1} sig_a ⊗ seg_b
+            let cur_lo = level_off[lvl - 1];
+            for a in 1..lvl {
+                let b = lvl - a;
+                let (a_lo, a_hi) = (level_off[a - 1], level_off[a]);
+                let (b_lo, b_hi) = (level_off[b - 1], level_off[b]);
+                let b_len = b_hi - b_lo;
+                for ia in 0..(a_hi - a_lo) {
+                    let sa = sig[a_lo + ia];
+                    if sa == 0.0 {
+                        continue;
+                    }
+                    let base = cur_lo + ia * b_len;
+                    for ib in 0..b_len {
+                        tmp[base + ib] += sa * seg[b_lo + ib];
+                    }
+                }
+            }
+        }
+        sig.copy_from_slice(&tmp);
+    }
+    sig
+}
+
+/// Time-augmented signature: prepends the (scaled) time channel so that the
+/// signature separates paths up to reparametrisation.
+pub fn signature_time_augmented(
+    values: &[f64],
+    n: usize,
+    d: usize,
+    dt: f64,
+    depth: usize,
+) -> Vec<f64> {
+    let mut aug = vec![0.0; n * (d + 1)];
+    for i in 0..n {
+        aug[i * (d + 1)] = i as f64 * dt;
+        aug[i * (d + 1) + 1..(i + 1) * (d + 1)].copy_from_slice(&values[i * d..(i + 1) * d]);
+    }
+    signature(&aug, n, d + 1, depth)
+}
+
+/// Unbiased linear-kernel MMD² between two samples of signature features:
+/// MMD² = ‖mean(X) − mean(Y)‖² with the unbiased within-sample corrections.
+pub fn mmd2_linear(xs: &[Vec<f64>], ys: &[Vec<f64>]) -> f64 {
+    let (m, n) = (xs.len(), ys.len());
+    assert!(m >= 2 && n >= 2);
+    let dim = xs[0].len();
+    let dot = |a: &[f64], b: &[f64]| a.iter().zip(b.iter()).map(|(x, y)| x * y).sum::<f64>();
+    let mut mean_x = vec![0.0; dim];
+    let mut mean_y = vec![0.0; dim];
+    for x in xs {
+        for (mi, xi) in mean_x.iter_mut().zip(x.iter()) {
+            *mi += xi;
+        }
+    }
+    for y in ys {
+        for (mi, yi) in mean_y.iter_mut().zip(y.iter()) {
+            *mi += yi;
+        }
+    }
+    // Unbiased estimates: E k(x,x') over distinct pairs.
+    let sum_xx: f64 = dot(&mean_x, &mean_x) - xs.iter().map(|x| dot(x, x)).sum::<f64>();
+    let sum_yy: f64 = dot(&mean_y, &mean_y) - ys.iter().map(|y| dot(y, y)).sum::<f64>();
+    let sum_xy: f64 = dot(&mean_x, &mean_y);
+    sum_xx / (m * (m - 1)) as f64 + sum_yy / (n * (n - 1)) as f64
+        - 2.0 * sum_xy / (m * n) as f64
+}
+
+/// Biased linear-kernel MMD²: ‖mean φ(X) − mean φ(Y)‖² (zero for identical
+/// samples; the differentiable objective used during training).
+pub fn mmd2_linear_biased(xs: &[Vec<f64>], ys: &[Vec<f64>]) -> f64 {
+    let dim = xs[0].len();
+    let (m, n) = (xs.len() as f64, ys.len() as f64);
+    let mut diff = vec![0.0; dim];
+    for x in xs {
+        for (d, xi) in diff.iter_mut().zip(x.iter()) {
+            *d += xi / m;
+        }
+    }
+    for y in ys {
+        for (d, yi) in diff.iter_mut().zip(y.iter()) {
+            *d -= yi / n;
+        }
+    }
+    diff.iter().map(|d| d * d).sum()
+}
+
+/// Gradient of the *biased* linear MMD² (‖mean φ(X) − mean φ(Y)‖²) with
+/// respect to each x-feature vector: 2(mean φ(X) − mean φ(Y))/m. Returned as
+/// a single vector to be applied to every generated sample's feature
+/// cotangent (the feature Jacobian is handled by the caller through the
+/// signature VJP or finite differences).
+pub fn mmd2_feature_cotangent(xs: &[Vec<f64>], ys: &[Vec<f64>]) -> Vec<f64> {
+    let dim = xs[0].len();
+    let m = xs.len() as f64;
+    let n = ys.len() as f64;
+    let mut g = vec![0.0; dim];
+    for x in xs {
+        for (gi, xi) in g.iter_mut().zip(x.iter()) {
+            *gi += xi / m;
+        }
+    }
+    for y in ys {
+        for (gi, yi) in g.iter_mut().zip(y.iter()) {
+            *gi -= yi / n;
+        }
+    }
+    for gi in g.iter_mut() {
+        *gi *= 2.0 / m;
+    }
+    g
+}
+
+/// VJP of [`signature`] with respect to the path values, by forward-mode
+/// finite differences batched over path entries (paths here are short — the
+/// loss-bearing coarse grid — so n·d extra signatures are affordable).
+pub fn signature_vjp_fd(
+    path: &[f64],
+    n: usize,
+    d: usize,
+    depth: usize,
+    cot: &[f64],
+) -> Vec<f64> {
+    let mut grad = vec![0.0; n * d];
+    let eps = 1e-6;
+    let mut p = path.to_vec();
+    for k in 0..n * d {
+        let orig = p[k];
+        p[k] = orig + eps;
+        let sp = signature(&p, n, d, depth);
+        p[k] = orig - eps;
+        let sm = signature(&p, n, d, depth);
+        p[k] = orig;
+        let mut acc = 0.0;
+        for (i, c) in cot.iter().enumerate() {
+            acc += c * (sp[i] - sm[i]) / (2.0 * eps);
+        }
+        grad[k] = acc;
+    }
+    grad
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sig_len_counts() {
+        assert_eq!(sig_len(2, 3), 2 + 4 + 8);
+        assert_eq!(sig_len(3, 2), 3 + 9);
+    }
+
+    /// Signature of a straight line is exp(Δ): level k = Δ^{⊗k}/k!.
+    #[test]
+    fn straight_line_signature() {
+        let path = [0.0, 0.0, 1.0, 2.0]; // 2 points in R²
+        let s = signature(&path, 2, 2, 3);
+        assert!((s[0] - 1.0).abs() < 1e-14);
+        assert!((s[1] - 2.0).abs() < 1e-14);
+        // Level 2: (1/2)·[1,2]⊗[1,2] = [0.5, 1, 1, 2].
+        assert!((s[2] - 0.5).abs() < 1e-14);
+        assert!((s[3] - 1.0).abs() < 1e-14);
+        assert!((s[4] - 1.0).abs() < 1e-14);
+        assert!((s[5] - 2.0).abs() < 1e-14);
+        // Level 3: (1/6)Δ⊗Δ⊗Δ; entry (1,1,1) = 1/6.
+        assert!((s[6] - 1.0 / 6.0).abs() < 1e-14);
+    }
+
+    /// Chen's identity: signature of concatenation = tensor product.
+    /// Check via the shuffle-free scalar identity: level-1 adds, and the
+    /// (1,2)+(2,1) antisymmetric part equals the Lévy area.
+    #[test]
+    fn chen_level1_additivity_and_levy_area() {
+        let path = [0.0, 0.0, 1.0, 0.0, 1.0, 1.0]; // L-shaped path
+        let s = signature(&path, 3, 2, 2);
+        assert!((s[0] - 1.0).abs() < 1e-14);
+        assert!((s[1] - 1.0).abs() < 1e-14);
+        // S^{12} = ∫ dx1 dx2 over x1 then x2 = 1·1 = 1; S^{21} = 0.
+        assert!((s[3] - 1.0).abs() < 1e-14, "S12 {}", s[3]);
+        assert!((s[4] - 0.0).abs() < 1e-14, "S21 {}", s[4]);
+        // Symmetric parts: S11 = 1/2, S22 = 1/2.
+        assert!((s[2] - 0.5).abs() < 1e-14);
+        assert!((s[5] - 0.5).abs() < 1e-14);
+    }
+
+    /// Signature is invariant under adding a collinear midpoint.
+    #[test]
+    fn reparametrisation_invariance() {
+        let p1 = [0.0, 0.0, 2.0, 4.0];
+        let p2 = [0.0, 0.0, 1.0, 2.0, 2.0, 4.0];
+        let s1 = signature(&p1, 2, 2, 4);
+        let s2 = signature(&p2, 3, 2, 4);
+        for (a, b) in s1.iter().zip(s2.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn biased_mmd_zero_for_identical_samples() {
+        let xs: Vec<Vec<f64>> = (0..4).map(|i| vec![i as f64, 1.0]).collect();
+        let m = mmd2_linear_biased(&xs, &xs);
+        assert!(m.abs() < 1e-12, "{m}");
+    }
+
+    /// The unbiased estimator is ≈0 in expectation for equal distributions.
+    #[test]
+    fn unbiased_mmd_near_zero_same_distribution() {
+        let mut rng = crate::rng::Pcg64::new(2);
+        let mut acc = 0.0;
+        let reps = 200;
+        for _ in 0..reps {
+            let xs: Vec<Vec<f64>> = (0..16).map(|_| vec![rng.normal(), rng.normal()]).collect();
+            let ys: Vec<Vec<f64>> = (0..16).map(|_| vec![rng.normal(), rng.normal()]).collect();
+            acc += mmd2_linear(&xs, &ys);
+        }
+        let mean = acc / reps as f64;
+        assert!(mean.abs() < 0.05, "unbiased MMD mean {mean}");
+    }
+
+    #[test]
+    fn mmd_positive_for_shifted_samples() {
+        let xs: Vec<Vec<f64>> = (0..8).map(|i| vec![(i % 3) as f64 * 0.1]).collect();
+        let ys: Vec<Vec<f64>> = (0..8).map(|i| vec![(i % 3) as f64 * 0.1 + 5.0]).collect();
+        assert!(mmd2_linear(&xs, &ys) > 1.0);
+    }
+
+    #[test]
+    fn signature_vjp_matches_loss_fd() {
+        // d/dpath of <cot, sig(path)> via our FD helper vs direct FD of the
+        // scalar — sanity of indexing.
+        let path = [0.0, 0.0, 0.5, 1.0, 1.5, 0.5];
+        let depth = 2;
+        let s = signature(&path, 3, 2, depth);
+        let cot: Vec<f64> = (0..s.len()).map(|i| (i as f64 * 0.37).sin()).collect();
+        let g = signature_vjp_fd(&path, 3, 2, depth, &cot);
+        let f = |p: &[f64]| -> f64 {
+            signature(p, 3, 2, depth)
+                .iter()
+                .zip(cot.iter())
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let eps = 1e-5;
+        for k in 0..6 {
+            let mut pp = path;
+            pp[k] += eps;
+            let mut pm = path;
+            pm[k] -= eps;
+            let fd = (f(&pp) - f(&pm)) / (2.0 * eps);
+            assert!((fd - g[k]).abs() < 1e-6, "{k}: {fd} vs {}", g[k]);
+        }
+    }
+
+    #[test]
+    fn time_augmentation_separates_speed() {
+        // Same geometric image traversed at different speeds must differ
+        // once time-augmented.
+        let v1 = [0.0, 1.0, 2.0]; // linear
+        let v2 = [0.0, 1.9, 2.0]; // fast then slow
+        let s1 = signature_time_augmented(&v1, 3, 1, 0.5, 2);
+        let s2 = signature_time_augmented(&v2, 3, 1, 0.5, 2);
+        let diff: f64 = s1
+            .iter()
+            .zip(s2.iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 0.1, "time augmentation failed to separate: {diff}");
+    }
+}

@@ -1,0 +1,502 @@
+//! CF-EES: Bazavov's 2N commutator-free lift of the EES schemes to
+//! homogeneous spaces (eq. 4 / 16 of the paper) — to our knowledge the first
+//! explicit near-reversible integrator in this setting.
+//!
+//! One step from yₙ with Williamson coefficients (A_l, B_l):
+//!
+//! ```text
+//! Y₀ = yₙ, δ₀ = 0
+//! K_l = ξ(Y_{l−1}; h, dW) ∈ 𝔤
+//! δ_l = A_l δ_{l−1} + K_l
+//! Y_l = Λ(exp(B_l δ_l), Y_{l−1}),   l = 1..s
+//! ```
+//!
+//! Exactly s exponentials and two registers per step (Table 5's 2N-CF row).
+//! The reverse step runs the same recurrence with negated driver increments;
+//! by Theorems 3.2/E.1 the defect is O(h⁶) for CF-EES(2,5) and O(h⁸) for
+//! CF-EES(2,7). Backpropagation is Algorithm 2 (cotangent sweep on T*M).
+
+use super::ManifoldStepper;
+use crate::lie::HomogeneousSpace;
+use crate::tableau::{Tableau, Williamson2N};
+use crate::vf::{DiffManifoldVectorField, ManifoldVectorField};
+
+#[derive(Clone, Debug)]
+pub struct CfEes {
+    pub coeffs: Williamson2N,
+    pub c: Vec<f64>,
+    name: String,
+    anti_order: usize,
+}
+
+impl CfEes {
+    pub fn new(tab: Tableau) -> Self {
+        let coeffs = tab.williamson_2n();
+        Self {
+            c: tab.c.clone(),
+            name: format!("CF-{}", tab.name),
+            anti_order: tab.antisymmetric_order,
+            coeffs,
+        }
+    }
+
+    /// CF-EES(2,5;1/10).
+    pub fn ees25() -> Self {
+        Self::new(Tableau::ees25_default())
+    }
+    pub fn ees25_x(x: f64) -> Self {
+        Self::new(Tableau::ees25(x))
+    }
+    /// CF-EES(2,7) at the recommended parameter.
+    pub fn ees27() -> Self {
+        Self::new(Tableau::ees27_default())
+    }
+
+    pub fn stages(&self) -> usize {
+        self.coeffs.a.len()
+    }
+
+    pub fn antisymmetric_order(&self) -> usize {
+        self.anti_order
+    }
+
+    fn apply(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+    ) {
+        let g = sp.algebra_dim();
+        let s = self.stages();
+        // The two registers: current state `y` (in place) + increment δ.
+        let mut delta = vec![0.0; g];
+        let mut k = vec![0.0; g];
+        let mut v = vec![0.0; g];
+        for l in 0..s {
+            let tl = t + self.c[l] * h;
+            vf.generator(tl, y, h, dw, &mut k);
+            let al = self.coeffs.a[l];
+            for (d, kd) in delta.iter_mut().zip(k.iter()) {
+                *d = al * *d + kd;
+            }
+            let bl = self.coeffs.b[l];
+            for (vd, d) in v.iter_mut().zip(delta.iter()) {
+                *vd = bl * d;
+            }
+            sp.exp_action(&v, y);
+        }
+    }
+}
+
+impl ManifoldStepper for CfEes {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+    fn evals_per_step(&self) -> usize {
+        self.stages()
+    }
+    fn exps_per_step(&self) -> usize {
+        self.stages()
+    }
+    fn reversible(&self) -> bool {
+        true
+    }
+
+    fn step(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+    ) {
+        self.apply(sp, vf, t, h, dw, y);
+    }
+
+    fn step_back(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+    ) {
+        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
+        self.apply(sp, vf, t + h, -h, &neg, y);
+    }
+
+    fn backprop_step(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn DiffManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+    ) {
+        let g = sp.algebra_dim();
+        let n = sp.point_dim();
+        let s = self.stages();
+        // Recompute the internal stage quantities from the step-start state.
+        let mut ys = vec![0.0; (s + 1) * n]; // Y_0..Y_s
+        let mut deltas = vec![0.0; (s + 1) * g]; // δ_0..δ_s
+        ys[..n].copy_from_slice(y_prev);
+        {
+            let mut k = vec![0.0; g];
+            for l in 0..s {
+                let tl = t + self.c[l] * h;
+                let (prev, cur) = ys.split_at_mut((l + 1) * n);
+                let yl = &prev[l * n..(l + 1) * n];
+                vf.generator(tl, yl, h, dw, &mut k);
+                for d in 0..g {
+                    deltas[(l + 1) * g + d] = self.coeffs.a[l] * deltas[l * g + d] + k[d];
+                }
+                let v: Vec<f64> = (0..g)
+                    .map(|d| self.coeffs.b[l] * deltas[(l + 1) * g + d])
+                    .collect();
+                let ynext = &mut cur[..n];
+                ynext.copy_from_slice(yl);
+                sp.exp_action(&v, ynext);
+            }
+        }
+        // Algorithm 2: reverse sweep over stages on T*M.
+        let mut lam_y = lambda.to_vec(); // λ_{Y_s}
+        let mut lam_delta = vec![0.0; g]; // λ_{δ_s} accumulator
+        for l in (0..s).rev() {
+            let yl = &ys[l * n..(l + 1) * n]; // Y_{l-1} in paper indexing
+            let v: Vec<f64> = (0..g)
+                .map(|d| self.coeffs.b[l] * deltas[(l + 1) * g + d])
+                .collect();
+            // Pullback through Ψ_l(Y, δ) = Λ(exp(B_l δ), Y).
+            let mut lam_y_in = vec![0.0; n];
+            let mut lam_v = vec![0.0; g];
+            sp.action_pullback(&v, yl, &lam_y, &mut lam_y_in, &mut lam_v);
+            // λ_{δ_l} += B_l · λ_v.
+            for d in 0..g {
+                lam_delta[d] += self.coeffs.b[l] * lam_v[d];
+            }
+            // λ_{K_l} = λ_{δ_l}; backprop through ξ at Y_{l−1}.
+            let tl = t + self.c[l] * h;
+            vf.vjp(tl, yl, h, dw, &lam_delta, &mut lam_y_in, d_theta);
+            // λ_{δ_{l−1}} = A_l λ_{δ_l}.
+            let al = self.coeffs.a[l];
+            for d in lam_delta.iter_mut() {
+                *d *= al;
+            }
+            lam_y = lam_y_in;
+        }
+        lambda.copy_from_slice(&lam_y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lie::{Euclidean, So3, Sphere, Torus};
+    use crate::linalg::eye;
+    use crate::rng::{BrownianPath, Pcg64};
+    use crate::solvers::LowStorageStepper;
+    use crate::solvers::Stepper;
+    use crate::vf::{ClosureField, ClosureManifoldField};
+
+    /// Flat-manifold collapse (Prop. D.1): CF-EES on ℝⁿ equals Euclidean
+    /// EES(2,5) exactly.
+    #[test]
+    fn flat_collapse_to_euclidean_ees() {
+        let dim = 3;
+        let sp = Euclidean::new(dim);
+        let mvf = ClosureManifoldField {
+            point_dim: dim,
+            algebra_dim: dim,
+            noise_dim: 2,
+            gen: |_t, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]| {
+                out[0] = (-y[0] + y[1] * y[2]) * h + 0.2 * y[0] * dw[0];
+                out[1] = (y[0]).sin() * h + 0.1 * dw[1];
+                out[2] = (0.3 * y[1] - y[2]) * h + 0.15 * y[2] * dw[0];
+            },
+        };
+        let evf = ClosureField {
+            dim,
+            noise_dim: 2,
+            drift: |_t, y: &[f64], out: &mut [f64]| {
+                out[0] = -y[0] + y[1] * y[2];
+                out[1] = (y[0]).sin();
+                out[2] = 0.3 * y[1] - y[2];
+            },
+            diffusion: |_t, y: &[f64], dw: &[f64], out: &mut [f64]| {
+                out[0] = 0.2 * y[0] * dw[0];
+                out[1] = 0.1 * dw[1];
+                out[2] = 0.15 * y[2] * dw[0];
+            },
+        };
+        let cf = CfEes::ees25();
+        let low = LowStorageStepper::ees25();
+        let mut rng = Pcg64::new(3);
+        let path = BrownianPath::sample(&mut rng, 2, 40, 0.02);
+        let y0 = [1.0, 0.5, -0.3];
+        let t1 = crate::solvers::integrate_manifold(&cf, &sp, &mvf, 0.0, &y0, &path);
+        let mut state = low.init_state(&evf, 0.0, &y0);
+        for n in 0..40 {
+            low.step(&evf, n as f64 * 0.02, 0.02, path.increment(n), &mut state);
+        }
+        for (a, b) in t1[40 * dim..].iter().zip(state.iter()) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    fn so3_field() -> ClosureManifoldField<
+        impl Fn(f64, &[f64], f64, &[f64], &mut [f64]) + Send + Sync,
+    > {
+        // The affine-in-entries ξ of Appendix G (SO(3) RDE).
+        ClosureManifoldField {
+            point_dim: 9,
+            algebra_dim: 3,
+            noise_dim: 2,
+            gen: |_t, x: &[f64], h: f64, dw: &[f64], out: &mut [f64]| {
+                // ξ1, ξ2 as Rodrigues vectors (w1, w2, w3) matching the
+                // skew matrices in the paper.
+                let x11 = x[0];
+                let x12 = x[1];
+                let x22 = x[4];
+                let x23 = x[5];
+                let x31 = x[6];
+                let x33 = x[8];
+                let xi1 = [
+                    0.9 + 0.2 * x11,
+                    0.25 + 0.2 * x23,
+                    0.1 + 0.3 * x31,
+                ];
+                let xi2 = [
+                    0.15 + 0.25 * x12,
+                    -0.35 + 0.2 * x22,
+                    0.8 + 0.15 * x33,
+                ];
+                for i in 0..3 {
+                    out[i] = xi1[i] * (h + dw[0]) * 0.0 + xi1[i] * dw[0] + xi2[i] * dw[1];
+                }
+                let _ = h;
+            },
+        }
+    }
+
+    /// CF-EES stays on SO(3) and is near-reversible with defect O(h⁶).
+    #[test]
+    fn so3_reversibility_defect_order() {
+        let sp = So3::new();
+        let vf = so3_field();
+        let cf = CfEes::ees25();
+        let defect = |h: f64| -> f64 {
+            let mut y = eye(3);
+            let dw = [0.6 * h, -0.4 * h]; // deterministic driver scaled with h
+            cf.step(&sp, &vf, 0.0, h, &dw, &mut y);
+            cf.step_back(&sp, &vf, 0.0, h, &dw, &mut y);
+            let e = eye(3);
+            y.iter()
+                .zip(e.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max)
+        };
+        let (d1, d2) = (defect(0.4), defect(0.2));
+        let slope = (d1 / d2).log2();
+        // Driver scales ∝ h, so defect order m+1 = 6.
+        assert!(slope > 4.8, "CF-EES(2,5) defect slope {slope}, want ≈6");
+        // Manifold preservation over many steps.
+        let mut y = eye(3);
+        let mut rng = Pcg64::new(10);
+        let path = BrownianPath::sample(&mut rng, 2, 200, 0.01);
+        for n in 0..200 {
+            cf.step(&sp, &vf, 0.0, 0.01, path.increment(n), &mut y);
+        }
+        assert!(sp.constraint_defect(&y) < 1e-8);
+    }
+
+    /// CF-EES order 2 on a torus ODE with known solution.
+    #[test]
+    fn torus_ode_order2() {
+        let sp = Torus::new(1);
+        // dθ = sin(θ) dt; solution via separation: θ(t) = 2·atan(tan(θ0/2)eᵗ).
+        let vf = ClosureManifoldField {
+            point_dim: 1,
+            algebra_dim: 1,
+            noise_dim: 1,
+            gen: |_t, y: &[f64], h: f64, _dw: &[f64], out: &mut [f64]| {
+                out[0] = (y[0]).sin() * h;
+            },
+        };
+        let cf = CfEes::ees25();
+        let theta0: f64 = 0.9;
+        let exact = 2.0 * ((theta0 / 2.0).tan() * 1.0f64.exp()).atan();
+        let run = |steps: usize| -> f64 {
+            let h = 1.0 / steps as f64;
+            let mut y = vec![theta0];
+            for n in 0..steps {
+                cf.step(&sp, &vf, n as f64 * h, h, &[0.0], &mut y);
+            }
+            (y[0] - exact).abs()
+        };
+        let slope = (run(32) / run(64)).log2();
+        assert!((slope - 2.0).abs() < 0.35, "slope {slope}");
+    }
+
+    /// Algorithm 2 backprop matches finite differences on the sphere.
+    #[test]
+    fn sphere_backprop_matches_fd() {
+        struct SphereField {
+            theta: Vec<f64>,
+            sp: Sphere,
+        }
+        impl crate::vf::ManifoldVectorField for SphereField {
+            fn point_dim(&self) -> usize {
+                3
+            }
+            fn algebra_dim(&self) -> usize {
+                3
+            }
+            fn noise_dim(&self) -> usize {
+                1
+            }
+            fn generator(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+                // Tangent direction a(y) = θ0·(e1 − (e1·y)y) + θ1·(e2 − ...)
+                // projected; generator = a yᵀ − y aᵀ.
+                let mut a = [self.theta[0], self.theta[1], 0.3 * dw[0] / h.max(1e-12) * 0.0];
+                let dot: f64 = a.iter().zip(y.iter()).map(|(p, q)| p * q).sum();
+                for (ai, yi) in a.iter_mut().zip(y.iter()) {
+                    *ai -= dot * yi;
+                }
+                let scale = h + 0.5 * dw[0];
+                let mut ascale = [0.0; 3];
+                for i in 0..3 {
+                    ascale[i] = a[i] * scale;
+                }
+                self.sp.tangent_generator(&ascale, y, out);
+            }
+        }
+        impl crate::vf::DiffManifoldVectorField for SphereField {
+            fn num_params(&self) -> usize {
+                2
+            }
+            fn vjp(
+                &self,
+                t: f64,
+                y: &[f64],
+                h: f64,
+                dw: &[f64],
+                cot: &[f64],
+                d_y: &mut [f64],
+                d_theta: &mut [f64],
+            ) {
+                // Finite-difference VJP (analytic not needed for this test).
+                let eps = 1e-7;
+                let mut out_p = vec![0.0; 3];
+                let mut out_m = vec![0.0; 3];
+                for k in 0..3 {
+                    let mut yp = y.to_vec();
+                    yp[k] += eps;
+                    let mut ym = y.to_vec();
+                    ym[k] -= eps;
+                    self.generator(t, &yp, h, dw, &mut out_p);
+                    self.generator(t, &ym, h, dw, &mut out_m);
+                    for d in 0..3 {
+                        d_y[k] += cot[d] * (out_p[d] - out_m[d]) / (2.0 * eps);
+                    }
+                }
+                for k in 0..2 {
+                    let mut fp = SphereField {
+                        theta: self.theta.clone(),
+                        sp: Sphere::new(3),
+                    };
+                    fp.theta[k] += eps;
+                    let mut fm = SphereField {
+                        theta: self.theta.clone(),
+                        sp: Sphere::new(3),
+                    };
+                    fm.theta[k] -= eps;
+                    fp.generator(t, y, h, dw, &mut out_p);
+                    fm.generator(t, y, h, dw, &mut out_m);
+                    for d in 0..3 {
+                        d_theta[k] += cot[d] * (out_p[d] - out_m[d]) / (2.0 * eps);
+                    }
+                }
+            }
+        }
+        let sp = Sphere::new(3);
+        let vf = SphereField {
+            theta: vec![0.8, -0.5],
+            sp: Sphere::new(3),
+        };
+        let cf = CfEes::ees25();
+        let y0 = {
+            let mut y = vec![1.0, 0.0, 0.0];
+            sp.exp_action(&[0.3, -0.2, 0.5], &mut y);
+            y
+        };
+        let (t, h, dw) = (0.0, 0.1, [0.07]);
+        let c = [0.4, -1.0, 0.6];
+        let obj = |vf: &SphereField, y0: &[f64]| -> f64 {
+            let mut y = y0.to_vec();
+            cf.step(&sp, vf, t, h, &dw, &mut y);
+            y.iter().zip(c.iter()).map(|(a, b)| a * b).sum()
+        };
+        let mut lambda = c.to_vec();
+        let mut d_theta = vec![0.0; 2];
+        cf.backprop_step(&sp, &vf, t, h, &dw, &y0, &mut lambda, &mut d_theta);
+        let eps = 1e-6;
+        for k in 0..2 {
+            let mut vp = SphereField {
+                theta: vf.theta.clone(),
+                sp: Sphere::new(3),
+            };
+            vp.theta[k] += eps;
+            let mut vm = SphereField {
+                theta: vf.theta.clone(),
+                sp: Sphere::new(3),
+            };
+            vm.theta[k] -= eps;
+            let fd = (obj(&vp, &y0) - obj(&vm, &y0)) / (2.0 * eps);
+            assert!(
+                (fd - d_theta[k]).abs() < 1e-5,
+                "theta {k}: {fd} vs {}",
+                d_theta[k]
+            );
+        }
+        // Ambient state cotangent.
+        for k in 0..3 {
+            let mut yp = y0.clone();
+            yp[k] += eps;
+            let mut ym = y0.clone();
+            ym[k] -= eps;
+            let fd = (obj(&vf, &yp) - obj(&vf, &ym)) / (2.0 * eps);
+            assert!((fd - lambda[k]).abs() < 1e-5, "y {k}: {fd} vs {}", lambda[k]);
+        }
+    }
+
+    /// Exponential count: exactly s per step (2N-CF row of Table 5).
+    #[test]
+    fn exp_count_is_s_per_step() {
+        let sp = Torus::new(2);
+        let vf = ClosureManifoldField {
+            point_dim: 2,
+            algebra_dim: 2,
+            noise_dim: 1,
+            gen: |_t, _y: &[f64], h: f64, _dw: &[f64], out: &mut [f64]| {
+                out[0] = h;
+                out[1] = -h;
+            },
+        };
+        for (cf, s) in [(CfEes::ees25(), 3u64), (CfEes::ees27(), 4u64)] {
+            sp.reset_exp_calls();
+            let mut y = vec![0.0, 0.0];
+            for _ in 0..10 {
+                cf.step(&sp, &vf, 0.0, 0.1, &[0.0], &mut y);
+            }
+            assert_eq!(sp.exp_calls(), 10 * s, "{}", cf.name());
+        }
+    }
+}

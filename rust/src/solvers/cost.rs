@@ -1,0 +1,104 @@
+//! Theoretical compute/memory cost model of Lie-group integrators
+//! (Appendix C.6, Table 5) and its empirical verification hooks.
+//!
+//! Per-step cost: C = s·C_eval + N_exp·C_exp. The table's rows:
+//! - CG: N_exp = s(s+1)/2, O(s) stage registers;
+//! - CMO CF: N_exp = Σ L_i + L (linear in s), O(s) registers;
+//! - 2N-CF: N_exp = s, exactly 2 registers.
+
+/// Exponential count of a dense s-stage Crouch–Grossman method.
+pub fn cg_exp_count(s: usize) -> usize {
+    s * (s + 1) / 2
+}
+
+/// Exponential count of the Celledoni–Marthinsen–Owren CF methods
+/// (best-case published counts: 3 stages → 3 exps, 4 stages → 5 exps).
+pub fn cmo_cf_exp_count(s: usize) -> usize {
+    match s {
+        0..=3 => s,
+        4 => 5,
+        // Linear-in-s extrapolation of the published family.
+        _ => s + (s - 3),
+    }
+}
+
+/// Exponential count of a 2N commutator-free method (Bazavov): exactly s.
+pub fn two_n_cf_exp_count(s: usize) -> usize {
+    s
+}
+
+/// Forward stage registers held simultaneously.
+pub fn stage_registers(method: &str, s: usize) -> usize {
+    match method {
+        "CG" | "CMO-CF" | "RKMK" => s + 1,
+        "2N-CF" => 2,
+        _ => s + 1,
+    }
+}
+
+/// Per-step cost in arbitrary units given C_eval and C_exp.
+pub fn step_cost(s: usize, n_exp: usize, c_eval: f64, c_exp: f64) -> f64 {
+    s as f64 * c_eval + n_exp as f64 * c_exp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lie::{HomogeneousSpace, Torus};
+    use crate::solvers::{CfEes, CrouchGrossman, ManifoldStepper};
+    use crate::vf::ClosureManifoldField;
+
+    #[test]
+    fn table5_counts() {
+        assert_eq!(cg_exp_count(2), 3);
+        assert_eq!(cg_exp_count(3), 6);
+        assert_eq!(cg_exp_count(4), 10);
+        assert_eq!(cmo_cf_exp_count(3), 3);
+        assert_eq!(cmo_cf_exp_count(4), 5);
+        assert_eq!(two_n_cf_exp_count(3), 3);
+        assert_eq!(two_n_cf_exp_count(4), 4);
+        assert_eq!(stage_registers("2N-CF", 4), 2);
+        assert!(stage_registers("CG", 4) > stage_registers("2N-CF", 4));
+    }
+
+    /// The instrumented exponential counters reproduce the model: a dense
+    /// 3-stage CG costs 6 exps, CF-EES(2,5) costs 3, per step.
+    #[test]
+    fn cost_model_matches_instrumentation() {
+        let sp = Torus::new(1);
+        let vf = ClosureManifoldField {
+            point_dim: 1,
+            algebra_dim: 1,
+            noise_dim: 1,
+            gen: |_t, y: &[f64], h: f64, _dw: &[f64], out: &mut [f64]| {
+                out[0] = (1.0 + y[0] * y[0]) * h
+            },
+        };
+        let mut y = vec![0.1];
+        sp.reset_exp_calls();
+        CrouchGrossman::cg3().step(&sp, &vf, 0.0, 0.01, &[0.0], &mut y);
+        assert_eq!(sp.exp_calls() as usize, cg_exp_count(3));
+        sp.reset_exp_calls();
+        CfEes::ees25().step(&sp, &vf, 0.0, 0.01, &[0.0], &mut y);
+        assert_eq!(sp.exp_calls() as usize, two_n_cf_exp_count(3));
+        sp.reset_exp_calls();
+        CfEes::ees27().step(&sp, &vf, 0.0, 0.01, &[0.0], &mut y);
+        assert_eq!(sp.exp_calls() as usize, two_n_cf_exp_count(4));
+    }
+
+    #[test]
+    fn quadratic_vs_linear_scaling() {
+        for s in 2..8 {
+            assert!(cg_exp_count(s) >= two_n_cf_exp_count(s));
+        }
+        // CG grows quadratically: second difference is constant 1.
+        for s in 2..6 {
+            let (f0, f1, f2) = (
+                cg_exp_count(s) as i64,
+                cg_exp_count(s + 1) as i64,
+                cg_exp_count(s + 2) as i64,
+            );
+            assert_eq!(f2 - 2 * f1 + f0, 1);
+        }
+    }
+}

@@ -1,0 +1,350 @@
+//! McCallum–Foster reversible coupling (McCallum & Foster 2024), adapted to
+//! SDEs as in Section 4 of the paper: any base one-step increment map
+//! Ψ_{h,ΔW} is lifted to the exactly reversible two-state scheme
+//!
+//! ```text
+//! y' = λ y + (1−λ) z + Ψ_{h,ΔW}(z)
+//! z' = z − Ψ_{−h,−ΔW}(y')
+//! ```
+//!
+//! with coupling parameter λ ≲ 1 (the paper uses λ = 0.999 for MD; we
+//! default to the same). The inverse is algebraic:
+//! z = z' + Ψ_{−h,−ΔW}(y'), y = (y' − (1−λ)z − Ψ_{h,ΔW}(z))/λ.
+//!
+//! Base methods: Euler (2 evals/step) and explicit midpoint (4 evals/step) —
+//! the MCF baselines of Tables 1, 2, 7–9.
+
+use super::{Stepper, StepperProps};
+use crate::vf::{DiffVectorField, VectorField};
+
+/// Base one-step increment map Ψ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaseMethod {
+    Euler,
+    Midpoint,
+}
+
+#[derive(Clone, Debug)]
+pub struct Mcf {
+    pub base: BaseMethod,
+    /// Coupling parameter λ (0 < λ ≤ 1).
+    pub lambda: f64,
+}
+
+impl Mcf {
+    pub fn euler() -> Self {
+        Self {
+            base: BaseMethod::Euler,
+            lambda: 0.999,
+        }
+    }
+
+    pub fn midpoint() -> Self {
+        Self {
+            base: BaseMethod::Midpoint,
+            lambda: 0.999,
+        }
+    }
+
+    pub fn with_lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Ψ_{h,dw}(y) (writes the increment into `out`).
+    fn psi(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], y: &[f64], out: &mut [f64]) {
+        match self.base {
+            BaseMethod::Euler => vf.combined(t, y, h, dw, out),
+            BaseMethod::Midpoint => {
+                let dim = vf.dim();
+                let mut f0 = vec![0.0; dim];
+                vf.combined(t, y, h, dw, &mut f0);
+                let mid: Vec<f64> = y.iter().zip(f0.iter()).map(|(a, b)| a + 0.5 * b).collect();
+                vf.combined(t + 0.5 * h, &mid, h, dw, out);
+            }
+        }
+    }
+
+    /// VJP through Ψ: given cotangent of the increment, accumulate d_y and
+    /// d_theta.
+    fn psi_vjp(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+    ) {
+        match self.base {
+            BaseMethod::Euler => vf.vjp(t, y, h, dw, cot, d_y, d_theta),
+            BaseMethod::Midpoint => {
+                let dim = vf.dim();
+                let mut f0 = vec![0.0; dim];
+                vf.combined(t, y, h, dw, &mut f0);
+                let mid: Vec<f64> = y.iter().zip(f0.iter()).map(|(a, b)| a + 0.5 * b).collect();
+                // out = F(mid): d_mid = J_F(mid)ᵀ cot.
+                let mut d_mid = vec![0.0; dim];
+                vf.vjp(t + 0.5 * h, &mid, h, dw, cot, &mut d_mid, d_theta);
+                // mid = y + ½F(y): d_y += d_mid + ½ J_F(y)ᵀ d_mid.
+                for (dy, dm) in d_y.iter_mut().zip(d_mid.iter()) {
+                    *dy += dm;
+                }
+                let half: Vec<f64> = d_mid.iter().map(|x| 0.5 * x).collect();
+                vf.vjp(t, y, h, dw, &half, d_y, d_theta);
+            }
+        }
+    }
+}
+
+impl Stepper for Mcf {
+    fn props(&self) -> StepperProps {
+        let (name, evals) = match self.base {
+            BaseMethod::Euler => ("MCF Euler", 2),
+            BaseMethod::Midpoint => ("MCF Midpoint", 4),
+        };
+        StepperProps {
+            name: name.into(),
+            evals_per_step: evals,
+            aux_mult: 2,
+            algebraically_reversible: true,
+            effectively_reversible: true,
+        }
+    }
+
+    fn init_state(&self, _vf: &dyn VectorField, _t0: f64, y0: &[f64]) -> Vec<f64> {
+        let mut s = Vec::with_capacity(2 * y0.len());
+        s.extend_from_slice(y0);
+        s.extend_from_slice(y0); // z₀ = y₀
+        s
+    }
+
+    fn step(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
+        let dim = vf.dim();
+        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
+        let (y, z) = state.split_at_mut(dim);
+        let mut psi_z = vec![0.0; dim];
+        self.psi(vf, t, h, dw, z, &mut psi_z);
+        for i in 0..dim {
+            y[i] = self.lambda * y[i] + (1.0 - self.lambda) * z[i] + psi_z[i];
+        }
+        let mut psi_y1 = vec![0.0; dim];
+        self.psi(vf, t + h, -h, &neg, y, &mut psi_y1);
+        for i in 0..dim {
+            z[i] -= psi_y1[i];
+        }
+    }
+
+    fn step_back(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
+        let dim = vf.dim();
+        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
+        let (y, z) = state.split_at_mut(dim);
+        // z = z' + Ψ_{−h,−dw}(y').
+        let mut psi_y1 = vec![0.0; dim];
+        self.psi(vf, t + h, -h, &neg, y, &mut psi_y1);
+        for i in 0..dim {
+            z[i] += psi_y1[i];
+        }
+        // y = (y' − (1−λ)z − Ψ_{h,dw}(z))/λ.
+        let mut psi_z = vec![0.0; dim];
+        self.psi(vf, t, h, dw, z, &mut psi_z);
+        for i in 0..dim {
+            y[i] = (y[i] - (1.0 - self.lambda) * z[i] - psi_z[i]) / self.lambda;
+        }
+    }
+
+    fn backprop_step(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+    ) {
+        let dim = vf.dim();
+        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
+        let (y, z) = state_prev.split_at(dim);
+        // Recompute y' (VJP site for Ψ⁻).
+        let mut psi_z = vec![0.0; dim];
+        self.psi(vf, t, h, dw, z, &mut psi_z);
+        let mut y1 = vec![0.0; dim];
+        for i in 0..dim {
+            y1[i] = self.lambda * y[i] + (1.0 - self.lambda) * z[i] + psi_z[i];
+        }
+        let (lam_y1, lam_z1) = {
+            let (a, b) = lambda.split_at(dim);
+            (a.to_vec(), b.to_vec())
+        };
+        // Total cotangent into the y' node:
+        //   λ_{y'}^tot = λ_{y'} − J_{Ψ⁻}(y')ᵀ λ_{z'}.
+        let mut y1_tot = lam_y1.clone();
+        {
+            let neg_lam: Vec<f64> = lam_z1.iter().map(|x| -x).collect();
+            self.psi_vjp(vf, t + h, -h, &neg, &y1, &neg_lam, &mut y1_tot, d_theta);
+        }
+        // λ_y = λ_c · λ_{y'}^tot.
+        for i in 0..dim {
+            lambda[i] = self.lambda * y1_tot[i];
+        }
+        // λ_z = λ_{z'} + (1−λ_c) λ_{y'}^tot + J_Ψ(z)ᵀ λ_{y'}^tot.
+        let mut lam_z = lam_z1.clone();
+        for i in 0..dim {
+            lam_z[i] += (1.0 - self.lambda) * y1_tot[i];
+        }
+        self.psi_vjp(vf, t, h, dw, z, &y1_tot, &mut lam_z, d_theta);
+        lambda[dim..].copy_from_slice(&lam_z);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{BrownianPath, Pcg64};
+    use crate::vf::ClosureField;
+
+    fn field() -> impl VectorField {
+        ClosureField {
+            dim: 2,
+            noise_dim: 2,
+            drift: |_t, y: &[f64], out: &mut [f64]| {
+                out[0] = -y[0] + (y[1]).tanh();
+                out[1] = 0.3 * y[0] - 0.7 * y[1];
+            },
+            diffusion: |_t, y: &[f64], dw: &[f64], out: &mut [f64]| {
+                out[0] = 0.2 * dw[0];
+                out[1] = 0.1 * y[0] * dw[1];
+            },
+        }
+    }
+
+    #[test]
+    fn exact_reversibility_both_bases() {
+        let vf = field();
+        let mut rng = Pcg64::new(8);
+        let path = BrownianPath::sample(&mut rng, 2, 60, 0.02);
+        for mcf in [Mcf::euler(), Mcf::midpoint()] {
+            let mut s = mcf.init_state(&vf, 0.0, &[0.9, -0.4]);
+            let s0 = s.clone();
+            for n in 0..60 {
+                mcf.step(&vf, n as f64 * 0.02, 0.02, path.increment(n), &mut s);
+            }
+            for n in (0..60).rev() {
+                mcf.step_back(&vf, n as f64 * 0.02, 0.02, path.increment(n), &mut s);
+            }
+            for (a, b) in s.iter().zip(s0.iter()) {
+                assert!((a - b).abs() < 1e-9, "{:?}: {a} vs {b}", mcf.base);
+            }
+        }
+    }
+
+    #[test]
+    fn ode_orders() {
+        let vf = ClosureField {
+            dim: 1,
+            noise_dim: 1,
+            drift: |_t, y: &[f64], out: &mut [f64]| out[0] = -1.1 * y[0],
+            diffusion: |_t, _y: &[f64], _dw: &[f64], out: &mut [f64]| out[0] = 0.0,
+        };
+        let run = |mcf: &Mcf, steps: usize| -> f64 {
+            let h = 1.0 / steps as f64;
+            let mut s = mcf.init_state(&vf, 0.0, &[1.0]);
+            for n in 0..steps {
+                mcf.step(&vf, n as f64 * h, h, &[0.0], &mut s);
+            }
+            (s[0] - (-1.1f64).exp()).abs()
+        };
+        // MCF Euler is first order, MCF midpoint second order.
+        let se = (run(&Mcf::euler(), 64) / run(&Mcf::euler(), 128)).log2();
+        assert!((se - 1.0).abs() < 0.4, "MCF-Euler slope {se}");
+        let sm = (run(&Mcf::midpoint(), 64) / run(&Mcf::midpoint(), 128)).log2();
+        assert!(sm > 1.5, "MCF-Midpoint slope {sm}");
+    }
+
+    #[test]
+    fn backprop_matches_fd() {
+        struct PF {
+            theta: Vec<f64>,
+        }
+        impl VectorField for PF {
+            fn dim(&self) -> usize {
+                1
+            }
+            fn noise_dim(&self) -> usize {
+                1
+            }
+            fn combined(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+                out[0] = self.theta[0] * (y[0]).sin() * h + self.theta[1] * y[0] * dw[0];
+            }
+        }
+        impl DiffVectorField for PF {
+            fn num_params(&self) -> usize {
+                2
+            }
+            fn vjp(
+                &self,
+                _t: f64,
+                y: &[f64],
+                h: f64,
+                dw: &[f64],
+                cot: &[f64],
+                d_y: &mut [f64],
+                d_theta: &mut [f64],
+            ) {
+                d_y[0] += cot[0] * (self.theta[0] * (y[0]).cos() * h + self.theta[1] * dw[0]);
+                d_theta[0] += cot[0] * (y[0]).sin() * h;
+                d_theta[1] += cot[0] * y[0] * dw[0];
+            }
+        }
+        let vf = PF {
+            theta: vec![0.9, 0.4],
+        };
+        let (t, h, dw) = (0.0, 0.1, [0.2]);
+        for mcf in [Mcf::euler(), Mcf::midpoint()] {
+            let state0 = vec![0.8, 0.75];
+            let c = [1.0, -0.6];
+            let obj = |vf: &PF, s0: &[f64]| -> f64 {
+                let mut s = s0.to_vec();
+                mcf.step(vf, t, h, &dw, &mut s);
+                s.iter().zip(c.iter()).map(|(a, b)| a * b).sum()
+            };
+            let mut lambda = c.to_vec();
+            let mut d_theta = vec![0.0; 2];
+            mcf.backprop_step(&vf, t, h, &dw, &state0, &mut lambda, &mut d_theta);
+            let eps = 1e-6;
+            for k in 0..2 {
+                let mut sp = state0.clone();
+                sp[k] += eps;
+                let mut sm = state0.clone();
+                sm[k] -= eps;
+                let fd = (obj(&vf, &sp) - obj(&vf, &sm)) / (2.0 * eps);
+                assert!(
+                    (fd - lambda[k]).abs() < 1e-7,
+                    "{:?} state {k}: {fd} vs {}",
+                    mcf.base,
+                    lambda[k]
+                );
+            }
+            for k in 0..2 {
+                let mut vp = PF {
+                    theta: vf.theta.clone(),
+                };
+                vp.theta[k] += eps;
+                let mut vm = PF {
+                    theta: vf.theta.clone(),
+                };
+                vm.theta[k] -= eps;
+                let fd = (obj(&vp, &state0) - obj(&vm, &state0)) / (2.0 * eps);
+                assert!(
+                    (fd - d_theta[k]).abs() < 1e-7,
+                    "{:?} theta {k}: {fd} vs {}",
+                    mcf.base,
+                    d_theta[k]
+                );
+            }
+        }
+    }
+}

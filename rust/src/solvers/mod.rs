@@ -1,0 +1,183 @@
+//! The scheme zoo.
+//!
+//! Euclidean steppers (trait [`Stepper`]): generic explicit Runge–Kutta in
+//! simplified-RDE form ([`rk::RkStepper`]) covering Euler/Heun/Midpoint/RK3/
+//! RK4/EES(2,5;x)/EES(2,7), the Williamson low-storage realisation
+//! ([`lowstorage::LowStorageStepper`]), the algebraically reversible
+//! baselines [`reversible_heun::ReversibleHeun`] and [`mcf::Mcf`]
+//! (McCallum–Foster coupling of any base one-step method).
+//!
+//! Manifold steppers (trait [`ManifoldStepper`]): the paper's CF-EES family
+//! ([`cfees::CfEes`], Bazavov's 2N commutator-free lift, eq. 4/16), the
+//! Crouch–Grossman baselines ([`cg::CrouchGrossman`]), geometric
+//! Euler–Maruyama ([`cg::GeoEulerMaruyama`]) and Runge–Kutta–Munthe-Kaas
+//! methods ([`rkmk::Rkmk`]).
+//!
+//! Every stepper exposes:
+//! - `step`        — advance over (t, t+h) with driver increments `dw`;
+//! - `step_back`   — algebraic inverse (exact for Reversible Heun / MCF,
+//!                   order-m accurate for the effectively symmetric EES);
+//! - `backprop_step` — the per-step reverse sweep of Algorithm 1
+//!   (Euclidean) / Algorithm 2 (homogeneous spaces), given the state at the
+//!   step start (reconstructed or taped — the adjoint chooses).
+
+pub mod adaptive;
+pub mod cfees;
+pub mod cg;
+pub mod cost;
+pub mod lowstorage;
+pub mod mcf;
+pub mod reversible_heun;
+pub mod rk;
+pub mod rkmk;
+
+pub use adaptive::{integrate_adaptive, AdaptiveController, EmbeddedEes25};
+pub use cfees::CfEes;
+pub use cg::{CrouchGrossman, GeoEulerMaruyama};
+pub use lowstorage::LowStorageStepper;
+pub use mcf::{BaseMethod, Mcf};
+pub use reversible_heun::ReversibleHeun;
+pub use rk::RkStepper;
+pub use rkmk::Rkmk;
+
+use crate::lie::HomogeneousSpace;
+use crate::vf::{DiffManifoldVectorField, DiffVectorField, ManifoldVectorField, VectorField};
+
+/// Static properties of a Euclidean stepper.
+#[derive(Clone, Debug)]
+pub struct StepperProps {
+    pub name: String,
+    /// Vector-field evaluations per step as counted by the paper's
+    /// fixed-budget experiments (amortised: Reversible Heun counts 1).
+    pub evals_per_step: usize,
+    /// State size multiplier (auxiliary-state schemes carry y plus extras).
+    pub aux_mult: usize,
+    /// Exact algebraic reversibility (Reversible Heun, MCF).
+    pub algebraically_reversible: bool,
+    /// Effective symmetry: Φ₋ₕ∘Φₕ = id + O(h^{m+1}) with m > order (EES).
+    pub effectively_reversible: bool,
+}
+
+/// One-step method for Euclidean SDE/RDEs in simplified-RK form.
+pub trait Stepper: Send + Sync {
+    fn props(&self) -> StepperProps;
+
+    /// Size of the full solver state for a `dim`-dimensional problem.
+    fn state_size(&self, dim: usize) -> usize {
+        self.props().aux_mult * dim
+    }
+
+    /// Build the initial solver state from y0 (copies y0 into the primary
+    /// slot and initialises any auxiliary slots).
+    fn init_state(&self, vf: &dyn VectorField, t0: f64, y0: &[f64]) -> Vec<f64>;
+
+    /// Advance the state over [t, t+h] with driver increments dw.
+    fn step(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]);
+
+    /// Inverse step: from the state at t+h recover the state at t.
+    fn step_back(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]);
+
+    /// Algorithm 1: given the state at the step start and the loss cotangent
+    /// with respect to the state at the step end (`lambda`), overwrite
+    /// `lambda` with the cotangent with respect to the start state and
+    /// accumulate parameter gradients into `d_theta`.
+    fn backprop_step(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+    );
+}
+
+/// One-step method on a homogeneous space.
+pub trait ManifoldStepper: Send + Sync {
+    fn name(&self) -> String;
+    /// Vector-field evaluations per step.
+    fn evals_per_step(&self) -> usize;
+    /// Group exponentials per step (cost model of Table 5).
+    fn exps_per_step(&self) -> usize;
+    /// Whether `step_back` is a valid (near-)inverse.
+    fn reversible(&self) -> bool;
+
+    fn step(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+    );
+
+    fn step_back(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+    );
+
+    /// Algorithm 2: cotangent sweep on T*M. `lambda` is the ambient-space
+    /// cotangent of the end state on entry, of the start state on exit.
+    fn backprop_step(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn DiffManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+    );
+}
+
+/// Integrate a Euclidean SDE over a sampled driver, recording the primary
+/// state after every step. Returns `(steps+1) * dim` flattened trajectory.
+pub fn integrate(
+    stepper: &dyn Stepper,
+    vf: &dyn VectorField,
+    t0: f64,
+    y0: &[f64],
+    path: &crate::rng::BrownianPath,
+) -> Vec<f64> {
+    let dim = vf.dim();
+    let steps = path.steps();
+    let mut state = stepper.init_state(vf, t0, y0);
+    let mut traj = vec![0.0; (steps + 1) * dim];
+    traj[..dim].copy_from_slice(y0);
+    for n in 0..steps {
+        let t = t0 + n as f64 * path.h;
+        stepper.step(vf, t, path.h, path.increment(n), &mut state);
+        traj[(n + 1) * dim..(n + 2) * dim].copy_from_slice(&state[..dim]);
+    }
+    traj
+}
+
+/// Integrate on a homogeneous space, recording every state.
+pub fn integrate_manifold(
+    stepper: &dyn ManifoldStepper,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn ManifoldVectorField,
+    t0: f64,
+    y0: &[f64],
+    path: &crate::rng::BrownianPath,
+) -> Vec<f64> {
+    let dim = sp.point_dim();
+    let steps = path.steps();
+    let mut y = y0.to_vec();
+    let mut traj = vec![0.0; (steps + 1) * dim];
+    traj[..dim].copy_from_slice(y0);
+    for n in 0..steps {
+        let t = t0 + n as f64 * path.h;
+        stepper.step(sp, vf, t, path.h, path.increment(n), &mut y);
+        traj[(n + 1) * dim..(n + 2) * dim].copy_from_slice(&y);
+    }
+    traj
+}

@@ -1,0 +1,302 @@
+//! Reversible Heun (Kidger et al. 2021) — the algebraically reversible
+//! auxiliary-state baseline. State is (y, ŷ); forward map
+//!
+//! ```text
+//! ŷ' = 2y − ŷ + F(ŷ)          F(·) = f(·)h + g(·)ΔW
+//! y' = y + ½(F(ŷ) + F(ŷ'))
+//! ```
+//!
+//! is exactly invertible by running the same map with negated increments.
+//! Its absolute stability region is the segment λh ∈ [−i, i] (Theorem 2.1),
+//! which is what the paper's stiff experiments exploit against it.
+//!
+//! The scheme costs one *new* vector-field evaluation per step (F(ŷ') —
+//! F(ŷ) is the previous step's value); this implementation is stateless and
+//! re-evaluates F(ŷ), but `evals_per_step` reports the amortised count 1 as
+//! in the paper's fixed-budget tables.
+
+use super::{Stepper, StepperProps};
+use crate::vf::{DiffVectorField, VectorField};
+
+#[derive(Clone, Debug, Default)]
+pub struct ReversibleHeun;
+
+impl ReversibleHeun {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Shared forward map with signed increments.
+    fn apply(vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
+        let dim = vf.dim();
+        let (y, yh) = state.split_at_mut(dim);
+        let mut f_yh = vec![0.0; dim];
+        vf.combined(t, yh, h, dw, &mut f_yh);
+        // ŷ' = 2y − ŷ + F(ŷ)
+        for i in 0..dim {
+            yh[i] = 2.0 * y[i] - yh[i] + f_yh[i];
+        }
+        let mut f_yh2 = vec![0.0; dim];
+        vf.combined(t + h, yh, h, dw, &mut f_yh2);
+        // y' = y + ½(F(ŷ) + F(ŷ'))
+        for i in 0..dim {
+            y[i] += 0.5 * (f_yh[i] + f_yh2[i]);
+        }
+    }
+}
+
+impl Stepper for ReversibleHeun {
+    fn props(&self) -> StepperProps {
+        StepperProps {
+            name: "Reversible Heun".into(),
+            evals_per_step: 1,
+            aux_mult: 2,
+            algebraically_reversible: true,
+            effectively_reversible: true,
+        }
+    }
+
+    fn init_state(&self, _vf: &dyn VectorField, _t0: f64, y0: &[f64]) -> Vec<f64> {
+        let mut s = Vec::with_capacity(2 * y0.len());
+        s.extend_from_slice(y0);
+        s.extend_from_slice(y0); // ŷ₀ = y₀
+        s
+    }
+
+    fn step(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
+        Self::apply(vf, t, h, dw, state);
+    }
+
+    fn step_back(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
+        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
+        Self::apply(vf, t + h, -h, &neg, state);
+    }
+
+    fn backprop_step(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+    ) {
+        let dim = vf.dim();
+        let (y, yh) = state_prev.split_at(dim);
+        // Recompute ŷ' (needed for the F(ŷ') VJP site).
+        let mut f_yh = vec![0.0; dim];
+        vf.combined(t, yh, h, dw, &mut f_yh);
+        let mut yh_next = vec![0.0; dim];
+        for i in 0..dim {
+            yh_next[i] = 2.0 * y[i] - yh[i] + f_yh[i];
+        }
+        let (lam_y1, lam_yh1) = {
+            let (a, b) = lambda.split_at(dim);
+            (a.to_vec(), b.to_vec())
+        };
+        // u = λ_{ŷ'} + ½ J_F(ŷ')ᵀ λ_{y'}  (cotangent entering the ŷ' node).
+        let mut u = lam_yh1.clone();
+        {
+            let half_lam: Vec<f64> = lam_y1.iter().map(|x| 0.5 * x).collect();
+            let mut d_dummy = vec![0.0; 0];
+            // VJP at ŷ' with cotangent ½λ_{y'} contributes to u and θ.
+            let mut d_yh_next = vec![0.0; dim];
+            vf.vjp(t + h, &yh_next, h, dw, &half_lam, &mut d_yh_next, d_theta);
+            for i in 0..dim {
+                u[i] += d_yh_next[i];
+            }
+            let _ = &mut d_dummy;
+        }
+        // λ_y = λ_{y'} + 2u.
+        for i in 0..dim {
+            lambda[i] = lam_y1[i] + 2.0 * u[i];
+        }
+        // λ_ŷ = −u + J_F(ŷ)ᵀ (u + ½ λ_{y'}).
+        let mut cot: Vec<f64> = u
+            .iter()
+            .zip(lam_y1.iter())
+            .map(|(ui, li)| ui + 0.5 * li)
+            .collect();
+        let mut d_yh = vec![0.0; dim];
+        vf.vjp(t, yh, h, dw, &cot, &mut d_yh, d_theta);
+        for i in 0..dim {
+            lambda[dim + i] = -u[i] + d_yh[i];
+        }
+        cot.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{BrownianPath, Pcg64};
+    use crate::vf::ClosureField;
+
+    fn field() -> impl VectorField {
+        ClosureField {
+            dim: 2,
+            noise_dim: 1,
+            drift: |_t, y: &[f64], out: &mut [f64]| {
+                out[0] = -y[0] + 0.5 * y[1];
+                out[1] = (y[0] * 1.3).cos() - y[1];
+            },
+            diffusion: |_t, y: &[f64], dw: &[f64], out: &mut [f64]| {
+                out[0] = 0.3 * y[1] * dw[0];
+                out[1] = 0.2 * dw[0];
+            },
+        }
+    }
+
+    /// Exact algebraic reversibility: step_back ∘ step = identity to
+    /// machine precision over many steps.
+    #[test]
+    fn exact_reversibility() {
+        let vf = field();
+        let st = ReversibleHeun::new();
+        let mut rng = Pcg64::new(5);
+        let path = BrownianPath::sample(&mut rng, 1, 100, 0.01);
+        let mut state = st.init_state(&vf, 0.0, &[1.0, -0.5]);
+        let s0 = state.clone();
+        for n in 0..100 {
+            st.step(&vf, n as f64 * 0.01, 0.01, path.increment(n), &mut state);
+        }
+        for n in (0..100).rev() {
+            st.step_back(&vf, n as f64 * 0.01, 0.01, path.increment(n), &mut state);
+        }
+        for (a, b) in state.iter().zip(s0.iter()) {
+            assert!((a - b).abs() < 1e-10, "{a} vs {b}");
+        }
+    }
+
+    /// Order-2 weak/ODE convergence sanity on a linear problem.
+    #[test]
+    fn ode_second_order() {
+        let vf = ClosureField {
+            dim: 1,
+            noise_dim: 1,
+            drift: |_t, y: &[f64], out: &mut [f64]| out[0] = -1.3 * y[0],
+            diffusion: |_t, _y: &[f64], _dw: &[f64], out: &mut [f64]| out[0] = 0.0,
+        };
+        let st = ReversibleHeun::new();
+        let run = |steps: usize| -> f64 {
+            let h = 1.0 / steps as f64;
+            let mut s = st.init_state(&vf, 0.0, &[1.0]);
+            for n in 0..steps {
+                st.step(&vf, n as f64 * h, h, &[0.0], &mut s);
+            }
+            (s[0] - (-1.3f64).exp()).abs()
+        };
+        let slope = (run(32) / run(64)).log2();
+        assert!((slope - 2.0).abs() < 0.4, "slope {slope}");
+    }
+
+    /// Theorem 2.1: unbounded for real λh outside [−i, i] — blows up on a
+    /// modest real-stiff problem where EES stays bounded.
+    #[test]
+    fn instability_on_real_axis() {
+        let vf = ClosureField {
+            dim: 1,
+            noise_dim: 1,
+            drift: |_t, y: &[f64], out: &mut [f64]| out[0] = -2.0 * y[0],
+            diffusion: |_t, _y: &[f64], _dw: &[f64], out: &mut [f64]| out[0] = 0.0,
+        };
+        let st = ReversibleHeun::new();
+        let h = 0.5; // λh = −1, outside [−i,i]
+        let mut s = st.init_state(&vf, 0.0, &[1.0]);
+        for n in 0..200 {
+            st.step(&vf, n as f64 * h, h, &[0.0], &mut s);
+        }
+        assert!(
+            s[0].abs() > 10.0,
+            "Reversible Heun should be unstable here, got {}",
+            s[0]
+        );
+        // EES(2,5) on the same problem stays bounded (λh = −1 is inside its
+        // stability region).
+        let ees = crate::solvers::RkStepper::ees25();
+        let mut y = vec![1.0];
+        for n in 0..200 {
+            ees.step(&vf, n as f64 * h, h, &[0.0], &mut y);
+        }
+        assert!(y[0].abs() < 1.0, "EES must be stable here, got {}", y[0]);
+    }
+
+    /// backprop_step matches finite differences (state and params).
+    #[test]
+    fn backprop_matches_fd() {
+        struct PF {
+            theta: Vec<f64>,
+        }
+        impl VectorField for PF {
+            fn dim(&self) -> usize {
+                1
+            }
+            fn noise_dim(&self) -> usize {
+                1
+            }
+            fn combined(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+                out[0] = self.theta[0] * y[0] * h + self.theta[1] * dw[0];
+            }
+        }
+        impl DiffVectorField for PF {
+            fn num_params(&self) -> usize {
+                2
+            }
+            fn vjp(
+                &self,
+                _t: f64,
+                y: &[f64],
+                h: f64,
+                dw: &[f64],
+                cot: &[f64],
+                d_y: &mut [f64],
+                d_theta: &mut [f64],
+            ) {
+                d_y[0] += cot[0] * self.theta[0] * h;
+                d_theta[0] += cot[0] * y[0] * h;
+                d_theta[1] += cot[0] * dw[0];
+            }
+        }
+        let vf = PF {
+            theta: vec![-0.8, 0.5],
+        };
+        let st = ReversibleHeun::new();
+        let (t, h, dw) = (0.0, 0.1, [0.3]);
+        let state0 = vec![0.7, 0.65]; // y, ŷ distinct to exercise both paths
+        let c = [1.0, -0.4]; // cotangent over (y', ŷ')
+        let obj = |vf: &PF, s0: &[f64]| -> f64 {
+            let mut s = s0.to_vec();
+            st.step(vf, t, h, &dw, &mut s);
+            s.iter().zip(c.iter()).map(|(a, b)| a * b).sum()
+        };
+        let mut lambda = c.to_vec();
+        let mut d_theta = vec![0.0; 2];
+        st.backprop_step(&vf, t, h, &dw, &state0, &mut lambda, &mut d_theta);
+        let eps = 1e-6;
+        for k in 0..2 {
+            let mut sp = state0.clone();
+            sp[k] += eps;
+            let mut sm = state0.clone();
+            sm[k] -= eps;
+            let fd = (obj(&vf, &sp) - obj(&vf, &sm)) / (2.0 * eps);
+            assert!((fd - lambda[k]).abs() < 1e-8, "state {k}: {fd} vs {}", lambda[k]);
+        }
+        for k in 0..2 {
+            let mut vp = PF {
+                theta: vf.theta.clone(),
+            };
+            vp.theta[k] += eps;
+            let mut vm = PF {
+                theta: vf.theta.clone(),
+            };
+            vm.theta[k] -= eps;
+            let fd = (obj(&vp, &state0) - obj(&vm, &state0)) / (2.0 * eps);
+            assert!(
+                (fd - d_theta[k]).abs() < 1e-8,
+                "theta {k}: {fd} vs {}",
+                d_theta[k]
+            );
+        }
+    }
+}

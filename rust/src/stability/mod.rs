@@ -1,0 +1,355 @@
+//! Stability analysis (Section 2, Figures 2 and 3).
+//!
+//! - Absolute stability: |R(ρ)| < 1 for RK tableaux (closed-form stability
+//!   polynomial) and spectral radius < 1 of the 2×2 companion maps of the
+//!   auxiliary-state schemes (Reversible Heun, MCF) on dy = λy dt.
+//! - Mean-square stability on dy = λy dt + μy dW: E|R(ρ)|² < 1 with
+//!   ρ ~ N(λh, μ²h), estimated by Monte Carlo.
+
+use crate::tableau::Tableau;
+
+/// Minimal complex arithmetic (no external crates available offline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    pub const ZERO: C64 = C64 { re: 0.0, im: 0.0 };
+    pub const ONE: C64 = C64 { re: 1.0, im: 0.0 };
+
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+    pub fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+    pub fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+    pub fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+    pub fn scale(self, s: f64) -> C64 {
+        C64::new(self.re * s, self.im * s)
+    }
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+    pub fn abs2(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+    /// Principal square root.
+    pub fn sqrt(self) -> C64 {
+        let r = self.abs();
+        let re = ((r + self.re) / 2.0).max(0.0).sqrt();
+        let im_mag = ((r - self.re) / 2.0).max(0.0).sqrt();
+        C64::new(re, if self.im >= 0.0 { im_mag } else { -im_mag })
+    }
+}
+
+/// Which scheme's stability map to evaluate.
+#[derive(Clone, Debug)]
+pub enum StabilityScheme {
+    /// Classical RK: scalar amplification R(ρ).
+    Rk(Tableau),
+    /// Reversible Heun companion map [[1+ρ, ρ²/2], [2, ρ−1]].
+    ReversibleHeun,
+    /// MCF coupling of the Euler increment with parameter λ_c.
+    McfEuler { lambda: f64 },
+    /// MCF coupling of the explicit-midpoint increment.
+    McfMidpoint { lambda: f64 },
+}
+
+impl StabilityScheme {
+    pub fn name(&self) -> String {
+        match self {
+            StabilityScheme::Rk(t) => t.name.clone(),
+            StabilityScheme::ReversibleHeun => "Reversible Heun".into(),
+            StabilityScheme::McfEuler { .. } => "MCF Euler".into(),
+            StabilityScheme::McfMidpoint { .. } => "MCF Midpoint".into(),
+        }
+    }
+
+    /// Amplification factor: |R(ρ)| for RK, spectral radius for companion
+    /// maps. The iteration is stable iff this is < 1 (bounded for = 1).
+    pub fn amplification(&self, rho: C64) -> f64 {
+        match self {
+            StabilityScheme::Rk(tab) => {
+                let (re, im) = tab.stability_function(rho.re, rho.im);
+                C64::new(re, im).abs()
+            }
+            StabilityScheme::ReversibleHeun => {
+                // ŷ' = 2y + (ρ−1)ŷ; y' = (1+ρ)y + (ρ²/2)ŷ.
+                let m11 = C64::ONE.add(rho);
+                let m12 = rho.mul(rho).scale(0.5);
+                let m21 = C64::new(2.0, 0.0);
+                let m22 = rho.sub(C64::ONE);
+                spectral_radius_2x2(m11, m12, m21, m22)
+            }
+            StabilityScheme::McfEuler { lambda } => mcf_radius(rho, *lambda, |r| r),
+            StabilityScheme::McfMidpoint { lambda } => {
+                mcf_radius(rho, *lambda, |r| r.add(r.mul(r).scale(0.5)))
+            }
+        }
+    }
+
+    /// Mean-square amplification E|R(ρ)|² on the stochastic test equation
+    /// with ρ = λh + μ√h·Z, Z ~ N(0,1), via Monte Carlo over `n` samples.
+    pub fn mean_square_amplification(
+        &self,
+        lambda_h: C64,
+        mu_sqrt_h: C64,
+        rng: &mut crate::rng::Pcg64,
+        n: usize,
+    ) -> f64 {
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let z = rng.normal();
+            let rho = lambda_h.add(mu_sqrt_h.scale(z));
+            let a = self.amplification(rho);
+            acc += a * a;
+        }
+        acc / n as f64
+    }
+}
+
+/// Spectral radius of a complex 2×2 matrix.
+pub fn spectral_radius_2x2(a: C64, b: C64, c: C64, d: C64) -> f64 {
+    let tr = a.add(d);
+    let det = a.mul(d).sub(b.mul(c));
+    let disc = tr.mul(tr).sub(det.scale(4.0)).sqrt();
+    let l1 = tr.add(disc).scale(0.5);
+    let l2 = tr.sub(disc).scale(0.5);
+    l1.abs().max(l2.abs())
+}
+
+/// MCF companion map for increment polynomial p:
+/// y' = λc y + (1−λc+p(ρ)) z;  z' = −λc p(−ρ) y + (1 − p(−ρ)((1−λc)+p(ρ))) z.
+fn mcf_radius(rho: C64, lambda: f64, p: impl Fn(C64) -> C64) -> f64 {
+    let p_pos = p(rho);
+    let p_neg = p(rho.scale(-1.0));
+    let a = C64::new(lambda, 0.0);
+    let b = C64::new(1.0 - lambda, 0.0).add(p_pos);
+    let c = p_neg.scale(-lambda);
+    let d = C64::ONE.sub(p_neg.mul(b));
+    spectral_radius_2x2(a, b, c, d)
+}
+
+/// Scan the real-axis stability interval [−x_max, 0]: returns the most
+/// negative λh for which the scheme is stable (amplification ≤ 1 + tol).
+pub fn real_axis_stability_limit(scheme: &StabilityScheme, x_max: f64, tol: f64) -> f64 {
+    let n = 4000;
+    let mut limit = 0.0;
+    for i in 1..=n {
+        let x = -x_max * i as f64 / n as f64;
+        if scheme.amplification(C64::new(x, 0.0)) <= 1.0 + tol {
+            limit = x;
+        } else {
+            break;
+        }
+    }
+    limit
+}
+
+/// Rasterise the stability region over a grid (for Figure 2): returns
+/// (width*height) booleans row-major over [re_min, re_max]×[im_min, im_max].
+pub fn stability_region_grid(
+    scheme: &StabilityScheme,
+    re_range: (f64, f64),
+    im_range: (f64, f64),
+    width: usize,
+    height: usize,
+) -> Vec<bool> {
+    let mut grid = vec![false; width * height];
+    for j in 0..height {
+        let im = im_range.0 + (im_range.1 - im_range.0) * j as f64 / (height - 1) as f64;
+        for i in 0..width {
+            let re = re_range.0 + (re_range.1 - re_range.0) * i as f64 / (width - 1) as f64;
+            grid[j * width + i] = scheme.amplification(C64::new(re, im)) <= 1.0;
+        }
+    }
+    grid
+}
+
+/// Area of the stability region over [−4,1]×[−4,4] — the scalar summary the
+/// Figure-2 bench prints per scheme.
+pub fn stability_region_area(scheme: &StabilityScheme) -> f64 {
+    let (w, h) = (160, 160);
+    let grid = stability_region_grid(scheme, (-4.0, 1.0), (-4.0, 4.0), w, h);
+    let cell = (5.0 / (w - 1) as f64) * (8.0 / (h - 1) as f64);
+    grid.iter().filter(|&&b| b).count() as f64 * cell
+}
+
+/// Mean-square stability boundary along a cross-section (Figure 3): for each
+/// real λh return the largest μ√h keeping E|R|² < 1 (bisection).
+pub fn ms_stability_boundary(
+    scheme: &StabilityScheme,
+    lambda_h_grid: &[f64],
+    mu_max: f64,
+    rng: &mut crate::rng::Pcg64,
+    mc: usize,
+) -> Vec<f64> {
+    lambda_h_grid
+        .iter()
+        .map(|&lh| {
+            let mut lo = 0.0;
+            let mut hi = mu_max;
+            for _ in 0..20 {
+                let mid = 0.5 * (lo + hi);
+                let ms = scheme.mean_square_amplification(
+                    C64::new(lh, 0.0),
+                    C64::new(mid, 0.0),
+                    rng,
+                    mc,
+                );
+                if ms < 1.0 {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            lo
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Theorem 2.2 on the real axis: R(−2) = 0 so λh = −2 is well inside;
+    /// the boundary sits between −2.4 and −3.
+    #[test]
+    fn ees25_real_axis_limit() {
+        let s = StabilityScheme::Rk(Tableau::ees25_default());
+        let lim = real_axis_stability_limit(&s, 6.0, 1e-9);
+        assert!(lim < -2.4, "EES(2,5) real-axis limit {lim}");
+        assert!(lim > -3.3, "EES(2,5) real-axis limit {lim}");
+    }
+
+    /// Theorem 2.1: Reversible Heun is stable only on λh ∈ [−i, i].
+    #[test]
+    fn reversible_heun_segment() {
+        let s = StabilityScheme::ReversibleHeun;
+        for im in [0.2, 0.6, 0.99] {
+            let a = s.amplification(C64::new(0.0, im));
+            assert!(a <= 1.0 + 1e-9, "|im|={im}: {a}");
+        }
+        assert!(s.amplification(C64::new(0.0, 1.2)) > 1.0);
+        assert!(s.amplification(C64::new(-0.2, 0.0)) > 1.0);
+        assert!(s.amplification(C64::new(-0.5, 0.3)) > 1.0);
+    }
+
+    /// Figure 2's qualitative conclusion: area(EES25) comparable to RK4,
+    /// much larger than MCF Euler and Reversible Heun.
+    #[test]
+    fn stability_region_ordering() {
+        let ees = stability_region_area(&StabilityScheme::Rk(Tableau::ees25_default()));
+        let ees7 = stability_region_area(&StabilityScheme::Rk(Tableau::ees27_default()));
+        let rk4 = stability_region_area(&StabilityScheme::Rk(Tableau::rk4()));
+        let mcf = stability_region_area(&StabilityScheme::McfEuler { lambda: 0.999 });
+        let rh = stability_region_area(&StabilityScheme::ReversibleHeun);
+        assert!(ees > 0.5 * rk4, "EES area {ees} vs RK4 {rk4}");
+        assert!(ees7 > 0.0);
+        assert!(mcf < 0.5 * ees, "MCF area {mcf} vs EES {ees}");
+        assert!(rh < 0.2 * ees, "Rev Heun area {rh} vs EES {ees}");
+    }
+
+    /// Deterministic limit of mean-square stability: at μ = 0 it reduces to
+    /// |R(λh)|².
+    #[test]
+    fn ms_reduces_to_deterministic() {
+        let s = StabilityScheme::Rk(Tableau::ees25_default());
+        let mut rng = Pcg64::new(1);
+        let ms = s.mean_square_amplification(C64::new(-1.0, 0.0), C64::ZERO, &mut rng, 10);
+        let det = s.amplification(C64::new(-1.0, 0.0)).powi(2);
+        assert!((ms - det).abs() < 1e-12);
+    }
+
+    /// Figure 3's qualitative shape: EES(2,5) tolerates at least as much
+    /// noise as RK3 along the real cross-section.
+    #[test]
+    fn ms_boundary_ees_vs_rk3() {
+        let mut rng = Pcg64::new(7);
+        let grid: Vec<f64> = vec![-2.0, -1.5, -1.0, -0.5];
+        let b_ees = ms_stability_boundary(
+            &StabilityScheme::Rk(Tableau::ees25_default()),
+            &grid,
+            3.0,
+            &mut rng,
+            4000,
+        );
+        let b_rk3 = ms_stability_boundary(
+            &StabilityScheme::Rk(Tableau::rk3()),
+            &grid,
+            3.0,
+            &mut rng,
+            4000,
+        );
+        for (i, (e, r)) in b_ees.iter().zip(b_rk3.iter()).enumerate() {
+            assert!(e + 0.15 >= *r, "λh={}: EES {e} vs RK3 {r}", grid[i]);
+        }
+        assert!(b_ees.iter().any(|&x| x > 0.3));
+    }
+
+    #[test]
+    fn complex_sqrt_branch() {
+        let z = C64::new(-1.0, 0.0).sqrt();
+        assert!((z.re - 0.0).abs() < 1e-12 && (z.im - 1.0).abs() < 1e-12);
+        let w = C64::new(3.0, 4.0).sqrt();
+        assert!((w.mul(w).re - 3.0).abs() < 1e-12 && (w.mul(w).im - 4.0).abs() < 1e-12);
+    }
+
+    /// Companion-map stability agrees with direct iteration of the solver on
+    /// the scalar test ODE (cross-validation of the algebra).
+    #[test]
+    fn companion_map_matches_direct_iteration() {
+        use crate::solvers::{Mcf, ReversibleHeun, Stepper};
+        use crate::vf::ClosureField;
+        let check = |scheme: &StabilityScheme, st: &dyn Stepper, lh: f64, h: f64| {
+            let lam = lh / h;
+            let vf = ClosureField {
+                dim: 1,
+                noise_dim: 1,
+                drift: move |_t, y: &[f64], out: &mut [f64]| out[0] = lam * y[0],
+                diffusion: |_t, _y: &[f64], _dw: &[f64], out: &mut [f64]| out[0] = 0.0,
+            };
+            let mut s = st.init_state(&vf, 0.0, &[1.0]);
+            for n in 0..400 {
+                st.step(&vf, n as f64 * h, h, &[0.0], &mut s);
+            }
+            let grew = s.iter().any(|x| !x.is_finite() || x.abs() > 10.0);
+            let radius = scheme.amplification(C64::new(lh, 0.0));
+            if radius < 0.98 {
+                assert!(!grew, "{}: λh={lh} predicted stable", scheme.name());
+            }
+            if radius > 1.05 {
+                assert!(grew, "{}: λh={lh} predicted unstable", scheme.name());
+            }
+        };
+        check(
+            &StabilityScheme::ReversibleHeun,
+            &ReversibleHeun::new(),
+            -0.5,
+            0.1,
+        );
+        check(
+            &StabilityScheme::McfEuler { lambda: 0.99 },
+            &Mcf::euler().with_lambda(0.99),
+            -0.5,
+            0.1,
+        );
+        check(
+            &StabilityScheme::McfEuler { lambda: 0.99 },
+            &Mcf::euler().with_lambda(0.99),
+            -3.5,
+            0.7,
+        );
+    }
+}

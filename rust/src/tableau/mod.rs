@@ -1,0 +1,456 @@
+//! Butcher tableaux and their Williamson 2N low-storage reductions.
+//!
+//! The paper's primary objects: the one-parameter EES(2,5;x) family
+//! (Proposition 2.1) and EES(2,7;x) at its recommended parameter
+//! x = (5 − 3√2)/14, plus the classical comparators (Euler, Heun, explicit
+//! midpoint, RK3, RK4). [`Tableau::williamson_2n`] derives 2N coefficients
+//! and [`Tableau::bazavov_condition_residual`] checks Bazavov's condition (3)
+//! of Theorem 3.1 — the certificate that a scheme lifts to a commutator-free
+//! homogeneous-space integrator (Proposition 3.1).
+
+/// Dense explicit Butcher tableau (row-major lower-triangular `a`).
+#[derive(Clone, Debug)]
+pub struct Tableau {
+    /// Number of stages.
+    pub s: usize,
+    /// Stage matrix, `s*s` row-major, strictly lower triangular for explicit schemes.
+    pub a: Vec<f64>,
+    /// Weights, length `s`.
+    pub b: Vec<f64>,
+    /// Abscissae, length `s` (c_i = Σ_j a_ij for internally consistent schemes).
+    pub c: Vec<f64>,
+    /// Classical order of the scheme.
+    pub order: usize,
+    /// Antisymmetric order m: Φ₋ₕ∘Φₕ = id + O(h^{m+1}); equals `order` for
+    /// generic schemes, 5 or 7 for the EES family.
+    pub antisymmetric_order: usize,
+    /// Human-readable name.
+    pub name: String,
+}
+
+/// Williamson 2N coefficients: dY_i = A_i dY_{i−1} + h f(Y_{i−1});
+/// Y_i = Y_{i−1} + B_i dY_i (A_1 = 0).
+#[derive(Clone, Debug)]
+pub struct Williamson2N {
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+}
+
+impl Tableau {
+    fn finish(s: usize, a: Vec<f64>, b: Vec<f64>, order: usize, anti: usize, name: &str) -> Self {
+        let c = (0..s)
+            .map(|i| (0..s).map(|j| a[i * s + j]).sum())
+            .collect();
+        Self {
+            s,
+            a,
+            b,
+            c,
+            order,
+            antisymmetric_order: anti,
+            name: name.to_string(),
+        }
+    }
+
+    /// Explicit Euler.
+    pub fn euler() -> Self {
+        Self::finish(1, vec![0.0], vec![1.0], 1, 1, "Euler")
+    }
+
+    /// Heun's order-2 trapezoidal method.
+    pub fn heun2() -> Self {
+        Self::finish(
+            2,
+            vec![0.0, 0.0, 1.0, 0.0],
+            vec![0.5, 0.5],
+            2,
+            2,
+            "Heun2",
+        )
+    }
+
+    /// Explicit midpoint.
+    pub fn midpoint() -> Self {
+        Self::finish(
+            2,
+            vec![0.0, 0.0, 0.5, 0.0],
+            vec![0.0, 1.0],
+            2,
+            2,
+            "Midpoint",
+        )
+    }
+
+    /// Kutta's third-order method.
+    pub fn rk3() -> Self {
+        let a = vec![
+            0.0, 0.0, 0.0, //
+            0.5, 0.0, 0.0, //
+            -1.0, 2.0, 0.0,
+        ];
+        Self::finish(3, a, vec![1.0 / 6.0, 2.0 / 3.0, 1.0 / 6.0], 3, 3, "RK3")
+    }
+
+    /// Classical RK4.
+    pub fn rk4() -> Self {
+        let a = vec![
+            0.0, 0.0, 0.0, 0.0, //
+            0.5, 0.0, 0.0, 0.0, //
+            0.0, 0.5, 0.0, 0.0, //
+            0.0, 0.0, 1.0, 0.0,
+        ];
+        Self::finish(
+            4,
+            a,
+            vec![1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0],
+            4,
+            4,
+            "RK4",
+        )
+    }
+
+    /// EES(2,5;x) — Proposition 2.1. Order 2, antisymmetric order 5.
+    /// Valid for x ∉ {1, ±1/2}.
+    pub fn ees25(x: f64) -> Self {
+        assert!(
+            (x - 1.0).abs() > 1e-9 && (x.abs() - 0.5).abs() > 1e-9,
+            "x must avoid {{1, ±1/2}}"
+        );
+        let a21 = (1.0 + 2.0 * x) / (4.0 * (1.0 - x));
+        let a31 = (4.0 * x - 1.0).powi(2) / (4.0 * (x - 1.0) * (1.0 - 4.0 * x * x));
+        let a32 = (1.0 - x) / (1.0 - 4.0 * x * x);
+        let a = vec![
+            0.0, 0.0, 0.0, //
+            a21, 0.0, 0.0, //
+            a31, a32, 0.0,
+        ];
+        let b = vec![x, 0.5, 0.5 - x];
+        Self::finish(3, a, b, 2, 5, &format!("EES(2,5;{x})"))
+    }
+
+    /// EES(2,5) at the paper's recommended x = 1/10 (minimal leading error).
+    pub fn ees25_default() -> Self {
+        let mut t = Self::ees25(0.1);
+        t.name = "EES(2,5)".into();
+        t
+    }
+
+    /// EES(2,7) at x = (5 − 3√2)/14, +√2 branch (Appendix D). The tableau is
+    /// reconstructed from the closed-form Williamson 2N coefficients via the
+    /// flat-manifold unrolling (the two representations are equivalent).
+    pub fn ees27_default() -> Self {
+        let w = Self::ees27_2n_coeffs();
+        let s = 4;
+        // Stage value after stage l (Euclidean collapse):
+        //   Y_l = y0 + h Σ_{i<=l} β_{l,i} K_i,  β_{l,i} = B_l·A_l···A_{i+1}, β_{l,l} = B_l.
+        // Stage l+1 evaluates f at Y_l ⇒ a_{l+1,i} = cumulative column sums.
+        let beta = unroll_2n(&w);
+        let mut a = vec![0.0; s * s];
+        // a_{i,j} for stage i (1-based) is the coefficient of K_j in Y_{i-1}:
+        // cumulative sum of β rows 1..i-1.
+        for i in 1..s {
+            for j in 0..s {
+                let mut acc = 0.0;
+                for l in 0..i {
+                    acc += beta[l * s + j];
+                }
+                a[i * s + j] = acc;
+            }
+        }
+        let b = (0..s)
+            .map(|j| (0..s).map(|l| beta[l * s + j]).sum())
+            .collect();
+        let mut t = Self::finish(s, a, b, 2, 7, "EES(2,7)");
+        t.order = 2;
+        t
+    }
+
+    /// Closed-form Williamson 2N coefficients of EES(2,7) at
+    /// x = (5−3√2)/14, +√2 branch (Appendix D).
+    pub fn ees27_2n_coeffs() -> Williamson2N {
+        let r2 = std::f64::consts::SQRT_2;
+        Williamson2N {
+            a: vec![
+                0.0,
+                (-7.0 + 4.0 * r2) / 3.0,
+                -(4.0 + 5.0 * r2) / 12.0,
+                3.0 * (-31.0 + 8.0 * r2) / 49.0,
+            ],
+            b: vec![
+                (2.0 - r2) / 3.0,
+                (4.0 + r2) / 8.0,
+                3.0 * (3.0 - r2) / 7.0,
+                (9.0 - 4.0 * r2) / 14.0,
+            ],
+        }
+    }
+
+    /// Residual of Bazavov's 2N-representability condition (Theorem 3.1):
+    /// max over i=3..s, j=2..i−1 of |a_ij(b_{j−1} − a_{j,j−1}) − (a_{i,j−1} − a_{j,j−1}) b_j|.
+    /// Zero ⟺ the scheme admits a Williamson 2N form.
+    pub fn bazavov_condition_residual(&self) -> f64 {
+        let s = self.s;
+        let mut worst: f64 = 0.0;
+        for i in 2..s {
+            // i is 0-based stage index ≥ 2 ⇒ paper's i = 3..s
+            for j in 1..i {
+                // paper's j = 2..i−1 (1-based), 0-based j = 1..i-1
+                let aij = self.a[i * s + j];
+                let ajm = self.a[j * s + (j - 1)];
+                let aim = self.a[i * s + (j - 1)];
+                let lhs = aij * (self.b[j - 1] - ajm);
+                let rhs = (aim - ajm) * self.b[j];
+                worst = worst.max((lhs - rhs).abs());
+            }
+        }
+        worst
+    }
+
+    /// Derive Williamson 2N coefficients from the tableau (requires the
+    /// Bazavov condition to hold). For an explicit s-stage tableau:
+    ///   B_l = a_{l+1,l} (l < s), B_s = b_s,
+    ///   A_{l} = (a_{l+1,l−1} − a_{l,l−1})/a_{l+1,l} for l < s,
+    ///   A_s = (b_{s−1} − a_{s,s−1})/b_s.
+    pub fn williamson_2n(&self) -> Williamson2N {
+        let s = self.s;
+        assert!(
+            self.bazavov_condition_residual() < 1e-10,
+            "{} does not satisfy the Bazavov 2N condition",
+            self.name
+        );
+        let mut bb = vec![0.0; s];
+        let mut aa = vec![0.0; s];
+        for l in 1..s {
+            bb[l - 1] = self.a[l * s + (l - 1)];
+        }
+        bb[s - 1] = self.b[s - 1];
+        aa[0] = 0.0;
+        for l in 1..s - 1 {
+            // A_{l+1} in 1-based = (a_{l+2, l} − a_{l+1, l}) / a_{l+2, l+1}
+            let num = self.a[(l + 1) * s + (l - 1)] - self.a[l * s + (l - 1)];
+            let den = self.a[(l + 1) * s + l];
+            aa[l] = num / den;
+        }
+        if s >= 2 {
+            aa[s - 1] = (self.b[s - 2] - self.a[(s - 1) * s + (s - 2)]) / self.b[s - 1];
+        }
+        Williamson2N { a: aa, b: bb }
+    }
+
+    /// Linear stability polynomial R(ρ) = 1 + ρ·bᵀ(I − ρA)⁻¹𝟙 evaluated by
+    /// forward substitution (explicit schemes ⇒ finite Neumann series).
+    pub fn stability_function(&self, rho_re: f64, rho_im: f64) -> (f64, f64) {
+        let s = self.s;
+        // k_i = 1 + ρ Σ_j a_ij k_j (complex), R = 1 + ρ Σ b_i k_i.
+        let mut kr = vec![0.0; s];
+        let mut ki = vec![0.0; s];
+        for i in 0..s {
+            let (mut sr, mut si) = (0.0, 0.0);
+            for j in 0..i {
+                sr += self.a[i * s + j] * kr[j];
+                si += self.a[i * s + j] * ki[j];
+            }
+            // k_i = 1 + ρ * (sr + i si)
+            kr[i] = 1.0 + rho_re * sr - rho_im * si;
+            ki[i] = rho_re * si + rho_im * sr;
+        }
+        let (mut sr, mut si) = (0.0, 0.0);
+        for i in 0..s {
+            sr += self.b[i] * kr[i];
+            si += self.b[i] * ki[i];
+        }
+        (
+            1.0 + rho_re * sr - rho_im * si,
+            rho_re * si + rho_im * sr,
+        )
+    }
+}
+
+/// Unroll 2N coefficients into the weight matrix β (s×s, row-major):
+/// β_{l,i} = B_l·A_l·A_{l−1}···A_{i+1} (i < l), β_{l,l} = B_l, 0 above.
+/// Rows are exponential arguments of the CF lift (Prop. D.1); column sums
+/// recover the Butcher weights b_i.
+pub fn unroll_2n(w: &Williamson2N) -> Vec<f64> {
+    let s = w.a.len();
+    let mut beta = vec![0.0; s * s];
+    for l in 0..s {
+        beta[l * s + l] = w.b[l];
+        for i in (0..l).rev() {
+            beta[l * s + i] = beta[l * s + i + 1] * w.a[i + 1];
+        }
+    }
+    beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f64, b: f64, tol: f64, msg: &str) {
+        assert!((a - b).abs() < tol, "{msg}: {a} vs {b}");
+    }
+
+    #[test]
+    fn ees25_default_matches_paper_values() {
+        let t = Tableau::ees25_default();
+        // b = (1/10, 1/2, 2/5), c3 = 5/6.
+        assert_close(t.b[0], 0.1, 1e-14, "b1");
+        assert_close(t.b[1], 0.5, 1e-14, "b2");
+        assert_close(t.b[2], 0.4, 1e-14, "b3");
+        assert_close(t.c[2], 5.0 / 6.0, 1e-14, "c3");
+    }
+
+    #[test]
+    fn ees25_order2_conditions_hold_for_many_x() {
+        for &x in &[-0.3, 0.05, 0.1, 0.2, 0.4, 0.7, 2.0] {
+            let t = Tableau::ees25(x);
+            let sum_b: f64 = t.b.iter().sum();
+            assert_close(sum_b, 1.0, 1e-12, "Σb");
+            let sum_bc: f64 = t.b.iter().zip(t.c.iter()).map(|(b, c)| b * c).sum();
+            assert_close(sum_bc, 0.5, 1e-12, "Σbc");
+        }
+    }
+
+    #[test]
+    fn ees27_order2_conditions() {
+        let t = Tableau::ees27_default();
+        let sum_b: f64 = t.b.iter().sum();
+        assert_close(sum_b, 1.0, 1e-12, "Σb");
+        let sum_bc: f64 = t.b.iter().zip(t.c.iter()).map(|(b, c)| b * c).sum();
+        assert_close(sum_bc, 0.5, 1e-12, "Σbc");
+        // c4 = (4+√2)/6 per Appendix D.
+        assert_close(t.c[3], (4.0 + std::f64::consts::SQRT_2) / 6.0, 1e-12, "c4");
+        // b1 = x.
+        let x = (5.0 - 3.0 * std::f64::consts::SQRT_2) / 14.0;
+        assert_close(t.b[0], x, 1e-12, "b1 = x");
+    }
+
+    /// Proposition 3.1: EES(2,5;x) satisfies Bazavov's condition for all x.
+    #[test]
+    fn ees_family_is_2n_representable() {
+        for &x in &[-0.3, 0.05, 0.1, 0.2, 0.4, 0.7, 2.0] {
+            let t = Tableau::ees25(x);
+            assert!(
+                t.bazavov_condition_residual() < 1e-13,
+                "x={x}: residual {}",
+                t.bazavov_condition_residual()
+            );
+        }
+        assert!(Tableau::ees27_default().bazavov_condition_residual() < 1e-12);
+        // RK4 is also classically known to admit low-storage variants only
+        // approximately — the plain tableau does NOT satisfy the condition.
+        assert!(Tableau::rk4().bazavov_condition_residual() > 1e-3);
+    }
+
+    /// Appendix D closed forms: 2N coefficients of EES(2,5;x) at x = 1/10.
+    #[test]
+    fn ees25_2n_closed_form() {
+        let t = Tableau::ees25_default();
+        let w = t.williamson_2n();
+        assert_close(w.b[0], 1.0 / 3.0, 1e-13, "B1");
+        assert_close(w.b[1], 15.0 / 16.0, 1e-13, "B2");
+        assert_close(w.b[2], 2.0 / 5.0, 1e-13, "B3");
+        assert_close(w.a[1], -7.0 / 15.0, 1e-13, "A2");
+        assert_close(w.a[2], -35.0 / 32.0, 1e-13, "A3");
+    }
+
+    /// General-x closed form of Appendix E.1 vs the tableau-derived 2N.
+    #[test]
+    fn ees25_2n_general_x() {
+        for &x in &[-0.3, 0.05, 0.2, 0.4, 0.7] {
+            let t = Tableau::ees25(x);
+            let w = t.williamson_2n();
+            let b1 = (2.0 * x + 1.0) / (4.0 * (1.0 - x));
+            let b2 = (1.0 - x) / (1.0 - 4.0 * x * x);
+            let b3 = (1.0 - 2.0 * x) / 2.0;
+            let a2 = (4.0 * x * x - 2.0 * x + 1.0) / (2.0 * (x - 1.0));
+            let a3 = -(4.0 * x * x - 2.0 * x + 1.0)
+                / ((2.0 * x - 1.0).powi(2) * (2.0 * x + 1.0));
+            assert_close(w.b[0], b1, 1e-12, "B1");
+            assert_close(w.b[1], b2, 1e-12, "B2");
+            assert_close(w.b[2], b3, 1e-12, "B3");
+            assert_close(w.a[1], a2, 1e-12, "A2");
+            assert_close(w.a[2], a3, 1e-12, "A3");
+        }
+    }
+
+    /// Prop D.1 weight matrix at x = 1/10 and the telescoping identity
+    /// Σ_l β_{l,i} = b_i.
+    #[test]
+    fn unrolled_weights_telescope_to_butcher() {
+        let t = Tableau::ees25_default();
+        let w = t.williamson_2n();
+        let beta = unroll_2n(&w);
+        let s = 3;
+        assert_close(beta[0], 1.0 / 3.0, 1e-13, "β11");
+        assert_close(beta[s + 0], -7.0 / 16.0, 1e-13, "β21");
+        assert_close(beta[s + 1], 15.0 / 16.0, 1e-13, "β22");
+        assert_close(beta[2 * s + 0], 49.0 / 240.0, 1e-13, "β31");
+        assert_close(beta[2 * s + 1], -7.0 / 16.0, 1e-13, "β32");
+        assert_close(beta[2 * s + 2], 2.0 / 5.0, 1e-13, "β33");
+        for i in 0..s {
+            let col: f64 = (0..s).map(|l| beta[l * s + i]).sum();
+            assert_close(col, t.b[i], 1e-13, "column sum");
+        }
+    }
+
+    #[test]
+    fn ees27_2n_round_trip() {
+        // Rebuilding the tableau from the 2N coefficients and re-deriving the
+        // 2N coefficients must be a fixed point.
+        let t = Tableau::ees27_default();
+        let w0 = Tableau::ees27_2n_coeffs();
+        let w1 = t.williamson_2n();
+        for (a, b) in w0.a.iter().zip(w1.a.iter()) {
+            assert_close(*a, *b, 1e-12, "A round trip");
+        }
+        for (a, b) in w0.b.iter().zip(w1.b.iter()) {
+            assert_close(*a, *b, 1e-12, "B round trip");
+        }
+    }
+
+    /// Theorem 2.2: R(ρ) = 1 + ρ + ρ²/2 + ρ³/8 for EES(2,5;x), independent of x.
+    #[test]
+    fn ees25_stability_function_independent_of_x() {
+        let probe = [(0.3, 0.4), (-1.0, 0.5), (-2.0, 1.0), (0.0, 2.0)];
+        for &(re, im) in &probe {
+            let want_re = 1.0 + re + 0.5 * (re * re - im * im)
+                + (re * re * re - 3.0 * re * im * im) / 8.0;
+            let want_im =
+                im + re * im + (3.0 * re * re * im - im * im * im) / 8.0;
+            for &x in &[-0.3, 0.1, 0.4, 0.7] {
+                let t = Tableau::ees25(x);
+                let (rr, ri) = t.stability_function(re, im);
+                assert_close(rr, want_re, 1e-12, "Re R");
+                assert_close(ri, want_im, 1e-12, "Im R");
+            }
+        }
+    }
+
+    #[test]
+    fn rk4_stability_function() {
+        let t = Tableau::rk4();
+        let (r, i) = t.stability_function(-1.0, 0.0);
+        // 1 - 1 + 1/2 - 1/6 + 1/24 = 0.375
+        assert_close(r, 0.375, 1e-13, "RK4 R(-1)");
+        assert_close(i, 0.0, 1e-13, "imag");
+    }
+
+    #[test]
+    fn classical_tableaux_consistency() {
+        for t in [
+            Tableau::euler(),
+            Tableau::heun2(),
+            Tableau::midpoint(),
+            Tableau::rk3(),
+            Tableau::rk4(),
+        ] {
+            let sum_b: f64 = t.b.iter().sum();
+            assert_close(sum_b, 1.0, 1e-12, &t.name);
+            if t.order >= 2 {
+                let sum_bc: f64 = t.b.iter().zip(t.c.iter()).map(|(b, c)| b * c).sum();
+                assert_close(sum_bc, 0.5, 1e-12, &t.name);
+            }
+        }
+    }
+}

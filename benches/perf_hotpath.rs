@@ -1,10 +1,13 @@
-//! Perf bench: the L3 hot paths — batched EES(2,5) stepping and the
-//! reversible-adjoint forward+backward sweep — timed with the in-crate
-//! harness. This is the target of the EXPERIMENTS.md §Perf iteration log.
+//! Perf bench: the L3 hot paths — batched EES(2,5) stepping, the
+//! reversible-adjoint forward+backward sweep, and the parallel batch engine
+//! against its sequential path — timed with the in-crate harness. This is
+//! the target of the EXPERIMENTS.md §Perf iteration log.
 
 use ees::adjoint::AdjointMethod;
-use ees::bench::bench;
-use ees::coordinator::batch_grad_euclidean;
+use ees::bench::{bench, speedup};
+use ees::coordinator::{
+    batch_grad_euclidean, batch_grad_euclidean_par, batch_integrate_par, sample_paths_par,
+};
 use ees::lie::TTorus;
 use ees::losses::MomentMatch;
 use ees::nn::neural_sde::{NeuralSde, TorusNeuralSde};
@@ -109,5 +112,111 @@ fn main() {
             s.mean_secs * 1e6 / steps as f64,
             n_osc
         );
+    }
+
+    // --- hot path 4: parallel batch engine vs the sequential path --------
+    // Batch simulation + reversible fwd+bwd at parallelism 1 vs 4. The
+    // engine's contract is bitwise-identical outputs at any worker count;
+    // the acceptance bar is >= 2x wall-clock at parallelism 4.
+    {
+        let mut rng = Pcg64::new(4);
+        let dim = 16;
+        let model = NeuralSde::lsde(dim, 64, 2, false, &mut rng);
+        let st = LowStorageStepper::ees25();
+        let steps = 100;
+        let h = 0.01;
+        let batch = 32;
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.1; dim]).collect();
+        // Per-sample Pcg64 split streams: the batch is a pure function of
+        // the parent seed, independent of worker count and schedule.
+        let paths = sample_paths_par(&mut rng, batch, dim, steps, h, 4);
+        let obs = vec![steps];
+        let loss = MomentMatch {
+            target_mean: vec![0.0; dim],
+            target_m2: vec![1.0; dim],
+        };
+
+        // Batch trajectory generation.
+        let sim_seq = bench("batch_integrate_b32_s100_d16 (P=1)", 1, iters, || {
+            let t = batch_integrate_par(&st, &model, 0.0, &y0s, &paths, 1);
+            std::hint::black_box(&t);
+        });
+        let sim_par = bench("batch_integrate_b32_s100_d16 (P=4)", 1, iters, || {
+            let t = batch_integrate_par(&st, &model, 0.0, &y0s, &paths, 4);
+            std::hint::black_box(&t);
+        });
+        let sim_same = batch_integrate_par(&st, &model, 0.0, &y0s, &paths, 1)
+            .iter()
+            .zip(batch_integrate_par(&st, &model, 0.0, &y0s, &paths, 4).iter())
+            .all(|(a, b)| a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()));
+        println!("{}", sim_seq.report());
+        println!("{}", sim_par.report());
+        println!(
+            "  -> batch simulation speedup at P=4: {:.2}x (outputs bitwise-identical: {})",
+            speedup(&sim_seq, &sim_par),
+            sim_same
+        );
+
+        // Reversible-adjoint forward+backward.
+        let grad_seq = bench("batch_grad_reversible_b32_s100_d16 (P=1)", 1, iters, || {
+            let out = batch_grad_euclidean_par(
+                &st,
+                AdjointMethod::Reversible,
+                &model,
+                &y0s,
+                &paths,
+                &obs,
+                &loss,
+                1,
+            );
+            std::hint::black_box(&out);
+        });
+        let grad_par = bench("batch_grad_reversible_b32_s100_d16 (P=4)", 1, iters, || {
+            let out = batch_grad_euclidean_par(
+                &st,
+                AdjointMethod::Reversible,
+                &model,
+                &y0s,
+                &paths,
+                &obs,
+                &loss,
+                4,
+            );
+            std::hint::black_box(&out);
+        });
+        let (l1, g1, m1) = batch_grad_euclidean_par(
+            &st,
+            AdjointMethod::Reversible,
+            &model,
+            &y0s,
+            &paths,
+            &obs,
+            &loss,
+            1,
+        );
+        let (l4, g4, m4) = batch_grad_euclidean_par(
+            &st,
+            AdjointMethod::Reversible,
+            &model,
+            &y0s,
+            &paths,
+            &obs,
+            &loss,
+            4,
+        );
+        let grad_same = l1.to_bits() == l4.to_bits()
+            && m1 == m4
+            && g1
+                .iter()
+                .zip(g4.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        println!("{}", grad_seq.report());
+        println!("{}", grad_par.report());
+        println!(
+            "  -> fwd+bwd speedup at P=4: {:.2}x (outputs bitwise-identical: {})",
+            speedup(&grad_seq, &grad_par),
+            grad_same
+        );
+        assert!(grad_same && sim_same, "parallel engine must be bitwise-deterministic");
     }
 }

@@ -13,7 +13,7 @@ use ees::rng::Pcg64;
 use ees::runtime::CompiledModule;
 use std::path::PathBuf;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ees::Result<()> {
     let train_steps: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     }
     // Parse the artifact's parameter layout.
     let meta = std::fs::read_to_string(&meta_path)?;
-    let cfg = ees::config::Config::parse(&meta).map_err(|e| anyhow::anyhow!(e))?;
+    let cfg = ees::config::Config::parse(&meta).map_err(ees::error::Error::msg)?;
     let batch = cfg.usize_or("batch", 8);
     let dim = cfg.usize_or("dim", 4);
     let sde_steps = cfg.usize_or("steps", 16);

@@ -25,12 +25,16 @@ use crate::vf::{DiffManifoldVectorField, DiffVectorField};
 /// Which adjoint realisation to use for the backward pass.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdjointMethod {
+    /// Discretise-then-optimise with a full tape: O(n) memory.
     Full,
+    /// √n checkpointing with per-segment recomputation: O(√n) memory.
     Recursive,
+    /// Algebraic reconstruction by `step_back` (Algorithm 1/2): O(1) memory.
     Reversible,
 }
 
 impl AdjointMethod {
+    /// Human-readable name as used in the paper's table columns.
     pub fn name(&self) -> &'static str {
         match self {
             AdjointMethod::Full => "Full",
@@ -43,6 +47,7 @@ impl AdjointMethod {
 /// Loss over observed states. `obs_states` is `(n_obs, dim)` flattened in
 /// observation order.
 pub trait ObservationLoss: Send + Sync {
+    /// Loss value at the observed states.
     fn eval(&self, obs_states: &[f64], dim: usize) -> f64;
     /// Cotangents dL/d(obs state), same layout as `obs_states`.
     fn grad(&self, obs_states: &[f64], dim: usize) -> Vec<f64>;
@@ -50,6 +55,7 @@ pub trait ObservationLoss: Send + Sync {
 
 /// Squared distance to per-observation targets: Σ ‖y_obs − target‖² / n_obs.
 pub struct MseToTargets {
+    /// Flattened `(n_obs, dim)` targets.
     pub targets: Vec<f64>,
 }
 
@@ -76,10 +82,12 @@ impl ObservationLoss for MseToTargets {
 /// Result of one forward+backward solve.
 #[derive(Clone, Debug)]
 pub struct GradResult {
+    /// Loss value at the observed states.
     pub loss: f64,
     /// Cotangent with respect to the full initial solver state
     /// (primary y₀ in the first `dim` slots).
     pub d_state0: Vec<f64>,
+    /// Parameter gradient (flat θ layout of the vector field).
     pub d_theta: Vec<f64>,
     /// Peak adjoint-machinery memory (f64 slots).
     pub peak_f64s: usize,

@@ -49,6 +49,13 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
 }
 
+/// Speedup of `candidate` over `baseline` on best-observed (min) times —
+/// the figure the parallel-engine benches report. Min is used rather than
+/// mean so background-load noise inflates neither side.
+pub fn speedup(baseline: &BenchStats, candidate: &BenchStats) -> f64 {
+    baseline.min_secs / candidate.min_secs.max(1e-12)
+}
+
 /// Simple fixed-width table printer for bench outputs.
 pub struct Table {
     pub header: Vec<String>,
@@ -138,5 +145,18 @@ mod tests {
         assert_eq!(fmt(0.0), "0");
         assert!(fmt(12345.0).contains('e'));
         assert!(fmt(0.25).starts_with("0.25"));
+    }
+
+    #[test]
+    fn speedup_uses_min_times() {
+        let mk = |min: f64| BenchStats {
+            name: "x".into(),
+            iters: 1,
+            mean_secs: min * 2.0,
+            std_secs: 0.0,
+            min_secs: min,
+        };
+        let s = speedup(&mk(0.4), &mk(0.1));
+        assert!((s - 4.0).abs() < 1e-12);
     }
 }

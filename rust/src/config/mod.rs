@@ -1,9 +1,36 @@
 //! Minimal configuration system (no external crates are available in the
 //! offline build, so this implements the TOML subset the experiment configs
 //! use: `[sections]`, `key = value` with strings, bools, integers, floats
-//! and flat numeric arrays, plus `#` comments).
+//! and flat numeric arrays, plus `#` comments), plus the process-wide
+//! execution knobs ([`default_parallelism`]).
 
 use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+/// Default worker count for the parallel batch engine
+/// ([`crate::coordinator::parallel`]).
+///
+/// Resolution order, cached for the process lifetime:
+/// 1. the `EES_PARALLELISM` environment variable (clamped to ≥ 1);
+/// 2. [`std::thread::available_parallelism`];
+/// 3. `1` (sequential) when neither is available.
+///
+/// Per-call overrides go through the coordinator's `*_par` entry points;
+/// [`Config::parallelism`] reads the `[exec] parallelism` key for harnesses
+/// that want to pass a config-file value there.
+pub fn default_parallelism() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Ok(v) = std::env::var("EES_PARALLELISM") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
@@ -94,6 +121,16 @@ impl Config {
     pub fn from_file(path: &str) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         Self::parse(&text)
+    }
+
+    /// Worker count for the parallel batch engine: the `[exec] parallelism`
+    /// key when present, otherwise the process default
+    /// ([`default_parallelism`]). A value of 0 or 1 means sequential. The
+    /// value takes effect when handed to one of the coordinator's `*_par`
+    /// entry points — the plain-named wrappers only consult the process
+    /// default.
+    pub fn parallelism(&self) -> usize {
+        self.usize_or("exec.parallelism", default_parallelism())
     }
 }
 
@@ -191,5 +228,14 @@ obs = [4, 8, 12]
     fn defaults_apply() {
         let c = Config::parse("").unwrap();
         assert_eq!(c.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn parallelism_knob() {
+        let c = Config::parse("[exec]\nparallelism = 3").unwrap();
+        assert_eq!(c.parallelism(), 3);
+        let d = Config::parse("").unwrap();
+        assert_eq!(d.parallelism(), default_parallelism());
+        assert!(default_parallelism() >= 1);
     }
 }

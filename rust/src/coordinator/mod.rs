@@ -7,6 +7,42 @@
 //! never on this path; the compiled-artifact mode executes the AOT JAX/
 //! Pallas step function through [`crate::runtime`] instead of the native
 //! field.
+//!
+//! # Parallel batch engine
+//!
+//! Batch samples are embarrassingly parallel: each trajectory owns its
+//! driver, tape and cotangent. The forward sweep and the backward sweep each
+//! fan out over samples through [`parallel::parallel_map`]; the batch loss
+//! (which genuinely couples samples) is the only sequential barrier between
+//! them. Results are **bitwise-deterministic in the worker count**:
+//!
+//! - per-sample state never crosses threads mid-computation;
+//! - the parameter gradient is reduced per sample first, then summed in
+//!   fixed batch order;
+//! - per-sample noise comes from independent [`Pcg64::split`] streams (see
+//!   [`sample_paths_par`]), not from interleaved draws on a shared stream.
+//!
+//! The worker count comes from the call site (`*_par` variants) or, for the
+//! plain-named wrappers, from [`crate::config::default_parallelism`] (the
+//! `EES_PARALLELISM` env var, else all available cores). A config-driven
+//! harness that parses an `[exec] parallelism` key
+//! ([`crate::config::Config::parallelism`]) must hand the value to a
+//! `*_par` entry point explicitly.
+//!
+//! # Memory accounting
+//!
+//! The adjoint-memory model meters the same quantities as a sequential
+//! sweep would: `peak = shared registers + Σ_b retained tape + max_b
+//! backward transient` — all tapes coexist after the forward pass, while
+//! backward segment buffers are transient per sample. The formula is
+//! deterministic in the worker count; per-sample gradient scratch (an
+//! artifact of the parallel reduction, `min(workers, batch) · |θ|`) is
+//! deliberately excluded, exactly as the sequential meter excluded its
+//! single shared accumulator's duplicates.
+
+pub mod parallel;
+
+pub use parallel::parallel_map;
 
 use crate::adjoint::AdjointMethod;
 use crate::lie::HomogeneousSpace;
@@ -15,30 +51,40 @@ use crate::memory::{MemMeter, MeteredTape};
 use crate::nn::optim::{clip_global_norm, Optimizer};
 use crate::rng::{BrownianPath, Pcg64};
 use crate::solvers::{ManifoldStepper, Stepper};
-use crate::vf::{DiffManifoldVectorField, DiffVectorField};
+use crate::vf::{DiffManifoldVectorField, DiffVectorField, VectorField};
 use std::time::Instant;
 
 /// One epoch's metrics.
 #[derive(Clone, Debug)]
 pub struct EpochMetrics {
+    /// Epoch index (0-based).
     pub epoch: usize,
+    /// Batch loss at this epoch.
     pub loss: f64,
+    /// Pre-clip global gradient norm.
     pub grad_norm: f64,
+    /// Peak adjoint-machinery memory (f64 slots) of the epoch's solve.
     pub peak_mem_f64s: usize,
+    /// Wall-clock time of the epoch.
     pub wall_secs: f64,
 }
 
 /// Result of a training run.
 #[derive(Clone, Debug, Default)]
 pub struct TrainLog {
+    /// Per-epoch metrics in order.
     pub history: Vec<EpochMetrics>,
+    /// Total wall-clock time of the run.
     pub total_secs: f64,
 }
 
 impl TrainLog {
+    /// Loss of the final epoch (`NaN` when no epoch ran).
     pub fn terminal_loss(&self) -> f64 {
         self.history.last().map(|m| m.loss).unwrap_or(f64::NAN)
     }
+
+    /// Maximum per-epoch peak adjoint memory over the run.
     pub fn peak_mem(&self) -> usize {
         self.history
             .iter()
@@ -48,10 +94,116 @@ impl TrainLog {
     }
 }
 
-/// Batch forward+backward for a Euclidean neural SDE under a batch loss.
+/// Per-sample output of the forward sweep (tape + observations + terminal
+/// solver state), kept alive until the sample's backward sweep consumes it.
+struct ForwardOut {
+    final_state: Vec<f64>,
+    tape: MeteredTape,
+    obs_states: Vec<f64>,
+    /// f64 slots retained by the tape after the forward pass.
+    retained: usize,
+}
+
+/// Assemble the batch observation matrix from per-sample forward outputs,
+/// in fixed batch order (part of the determinism contract).
+fn gather_obs(fwd: &[ForwardOut], n_obs: usize, dim: usize) -> Vec<f64> {
+    let mut obs_all = vec![0.0; fwd.len() * n_obs * dim];
+    for (b, f) in fwd.iter().enumerate() {
+        obs_all[b * n_obs * dim..(b + 1) * n_obs * dim].copy_from_slice(&f.obs_states);
+    }
+    obs_all
+}
+
+/// Reduce per-sample (gradient, backward transient peak) pairs in fixed
+/// batch order and apply the shared memory model
+/// `base + Σ retained + max transient` — the single source of truth for
+/// both the Euclidean and manifold engines (see the module docs).
+fn reduce_per_sample(
+    per_sample: &[(Vec<f64>, usize)],
+    num_params: usize,
+    base_mem: usize,
+    tape_retained: usize,
+) -> (Vec<f64>, usize) {
+    let mut d_theta = vec![0.0; num_params];
+    let mut backward_peak = 0usize;
+    for (g, peak) in per_sample {
+        for (acc, v) in d_theta.iter_mut().zip(g.iter()) {
+            *acc += v;
+        }
+        backward_peak = backward_peak.max(*peak);
+    }
+    (d_theta, base_mem + tape_retained + backward_peak)
+}
+
+/// Sample `batch` independent Brownian drivers from per-sample
+/// [`Pcg64::split`] streams, generating paths in parallel.
+///
+/// The per-sample streams are derived **sequentially, in index order, on
+/// the calling thread** before any parallel work starts (`split` advances
+/// the parent generator, so split order matters — a stream is a function of
+/// the parent state *at the time of the split*, not of the index alone).
+/// Only the path generation from the already-derived streams fans out,
+/// which is why the batch is identical for every `parallelism`.
+pub fn sample_paths_par(
+    rng: &mut Pcg64,
+    batch: usize,
+    dim: usize,
+    steps: usize,
+    h: f64,
+    parallelism: usize,
+) -> Vec<BrownianPath> {
+    let streams: Vec<Pcg64> = (0..batch).map(|b| rng.split(b as u64)).collect();
+    parallel_map(parallelism, batch, |b| {
+        let mut s = streams[b].clone();
+        BrownianPath::sample(&mut s, dim, steps, h)
+    })
+}
+
+/// [`sample_paths_par`] at the configured default parallelism.
+pub fn sample_paths(
+    rng: &mut Pcg64,
+    batch: usize,
+    dim: usize,
+    steps: usize,
+    h: f64,
+) -> Vec<BrownianPath> {
+    sample_paths_par(rng, batch, dim, steps, h, crate::config::default_parallelism())
+}
+
+/// Integrate a batch of Euclidean SDEs in parallel, one trajectory per
+/// sample, each `(steps+1) * dim` flattened (see [`crate::solvers::integrate`]).
+pub fn batch_integrate_par(
+    stepper: &dyn Stepper,
+    vf: &dyn VectorField,
+    t0: f64,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    parallelism: usize,
+) -> Vec<Vec<f64>> {
+    parallel_map(parallelism, y0s.len(), |b| {
+        crate::solvers::integrate(stepper, vf, t0, &y0s[b], &paths[b])
+    })
+}
+
+/// [`batch_integrate_par`] at the configured default parallelism.
+pub fn batch_integrate(
+    stepper: &dyn Stepper,
+    vf: &dyn VectorField,
+    t0: f64,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+) -> Vec<Vec<f64>> {
+    batch_integrate_par(stepper, vf, t0, y0s, paths, crate::config::default_parallelism())
+}
+
+/// Batch forward+backward for a Euclidean neural SDE under a batch loss,
+/// fanned out over `parallelism` workers.
 /// Returns (loss, d_theta, peak adjoint memory).
+///
+/// Outputs are bitwise-identical for every `parallelism` (see the module
+/// docs for the determinism argument).
 #[allow(clippy::too_many_arguments)]
-pub fn batch_grad_euclidean(
+pub fn batch_grad_euclidean_par(
     stepper: &dyn Stepper,
     method: AdjointMethod,
     vf: &dyn DiffVectorField,
@@ -59,6 +211,7 @@ pub fn batch_grad_euclidean(
     paths: &[BrownianPath],
     obs: &[usize],
     loss: &dyn BatchLoss,
+    parallelism: usize,
 ) -> (f64, Vec<f64>, usize) {
     let batch = y0s.len();
     let dim = vf.dim();
@@ -66,62 +219,74 @@ pub fn batch_grad_euclidean(
     let steps = paths[0].steps();
     let h = paths[0].h;
     let state_size = stepper.state_size(dim);
-    let mut meter = MemMeter::new();
-    meter.alloc(2 * state_size + batch * n_obs * dim);
-
     let seg = (steps as f64).sqrt().ceil() as usize;
-    // Forward all samples, keeping per-sample terminal state (Reversible),
-    // checkpoints (Recursive) or full tapes (Full).
-    let mut finals: Vec<Vec<f64>> = Vec::with_capacity(batch);
-    let mut tapes: Vec<MeteredTape> = (0..batch).map(|_| MeteredTape::new()).collect();
-    let mut obs_states = vec![0.0; batch * n_obs * dim];
-    for b in 0..batch {
+    // Shared registers: current state + cotangent, the observation matrix,
+    // and the aggregated parameter gradient.
+    let base_mem = 2 * state_size + batch * n_obs * dim + vf.num_params();
+
+    // ---- forward: all samples independent -------------------------------
+    let fwd: Vec<ForwardOut> = parallel_map(parallelism, batch, |b| {
+        let mut meter = MemMeter::new();
+        let mut tape = MeteredTape::new();
+        let mut obs_states = vec![0.0; n_obs * dim];
         let mut state = stepper.init_state(vf, 0.0, &y0s[b]);
         if method != AdjointMethod::Reversible {
-            tapes[b].push(&state, &mut meter);
+            tape.push(&state, &mut meter);
         }
         let mut oi = 0;
         for n in 0..steps {
             let t = n as f64 * h;
             stepper.step(vf, t, h, paths[b].increment(n), &mut state);
             match method {
-                AdjointMethod::Full => tapes[b].push(&state, &mut meter),
+                AdjointMethod::Full => tape.push(&state, &mut meter),
                 AdjointMethod::Recursive => {
                     if (n + 1) % seg == 0 {
-                        tapes[b].push(&state, &mut meter);
+                        tape.push(&state, &mut meter);
                     }
                 }
                 AdjointMethod::Reversible => {}
             }
             while oi < n_obs && obs[oi] == n + 1 {
-                obs_states[(b * n_obs + oi) * dim..(b * n_obs + oi + 1) * dim]
-                    .copy_from_slice(&state[..dim]);
+                obs_states[oi * dim..(oi + 1) * dim].copy_from_slice(&state[..dim]);
                 oi += 1;
             }
         }
-        finals.push(state);
-    }
-    let (loss_val, cots) = loss.eval_grad(&obs_states, batch, n_obs, dim);
+        ForwardOut {
+            final_state: state,
+            tape,
+            obs_states,
+            retained: meter.current(),
+        }
+    });
 
-    let mut d_theta = vec![0.0; vf.num_params()];
-    meter.alloc(d_theta.len());
-    for b in 0..batch {
+    // ---- barrier: the batch loss couples samples ------------------------
+    let obs_all = gather_obs(&fwd, n_obs, dim);
+    let (loss_val, cots) = loss.eval_grad(&obs_all, batch, n_obs, dim);
+    let tape_retained: usize = fwd.iter().map(|f| f.retained).sum();
+
+    // ---- backward: per-sample gradients, reduced in batch order ---------
+    let fwd_ref = &fwd;
+    let cots_ref = &cots;
+    let per_sample: Vec<(Vec<f64>, usize)> = parallel_map(parallelism, batch, |b| {
+        let fw = &fwd_ref[b];
+        let mut d_theta = vec![0.0; vf.num_params()];
+        let mut meter = MemMeter::new(); // backward transients only
         let mut lambda = vec![0.0; state_size];
-        let mut state = finals[b].clone();
+        let mut state = fw.final_state.clone();
         let mut oi = n_obs;
         let mut seg_buf = MeteredTape::new();
         for n in (0..steps).rev() {
             while oi > 0 && obs[oi - 1] == n + 1 {
                 oi -= 1;
                 for d in 0..dim {
-                    lambda[d] += cots[(b * n_obs + oi) * dim + d];
+                    lambda[d] += cots_ref[(b * n_obs + oi) * dim + d];
                 }
             }
             let t = n as f64 * h;
             let dw = paths[b].increment(n);
             match method {
                 AdjointMethod::Full => {
-                    stepper.backprop_step(vf, t, h, dw, tapes[b].get(n), &mut lambda, &mut d_theta);
+                    stepper.backprop_step(vf, t, h, dw, fw.tape.get(n), &mut lambda, &mut d_theta);
                 }
                 AdjointMethod::Reversible => {
                     stepper.step_back(vf, t, h, dw, &mut state);
@@ -131,7 +296,7 @@ pub fn batch_grad_euclidean(
                     if seg_buf.is_empty() {
                         let seg_start = (n / seg) * seg;
                         let ckpt_idx = n / seg;
-                        let mut s = tapes[b].get(ckpt_idx).to_vec();
+                        let mut s = fw.tape.get(ckpt_idx).to_vec();
                         seg_buf.push(&s, &mut meter);
                         for m in seg_start..n {
                             stepper.step(vf, m as f64 * h, h, paths[b].increment(m), &mut s);
@@ -143,14 +308,42 @@ pub fn batch_grad_euclidean(
                 }
             }
         }
-        tapes[b].clear(&mut meter);
-    }
-    (loss_val, d_theta, meter.peak_f64s())
+        (d_theta, meter.peak_f64s())
+    });
+
+    let (d_theta, peak) = reduce_per_sample(&per_sample, vf.num_params(), base_mem, tape_retained);
+    (loss_val, d_theta, peak)
 }
 
-/// Batch forward+backward on a homogeneous space (Algorithm 2 per sample).
+/// [`batch_grad_euclidean_par`] at the configured default parallelism.
 #[allow(clippy::too_many_arguments)]
-pub fn batch_grad_manifold(
+pub fn batch_grad_euclidean(
+    stepper: &dyn Stepper,
+    method: AdjointMethod,
+    vf: &dyn DiffVectorField,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    obs: &[usize],
+    loss: &dyn BatchLoss,
+) -> (f64, Vec<f64>, usize) {
+    batch_grad_euclidean_par(
+        stepper,
+        method,
+        vf,
+        y0s,
+        paths,
+        obs,
+        loss,
+        crate::config::default_parallelism(),
+    )
+}
+
+/// Batch forward+backward on a homogeneous space (Algorithm 2 per sample),
+/// fanned out over `parallelism` workers.
+/// Returns (loss, d_theta, peak adjoint memory); outputs are
+/// bitwise-identical for every `parallelism`.
+#[allow(clippy::too_many_arguments)]
+pub fn batch_grad_manifold_par(
     stepper: &dyn ManifoldStepper,
     method: AdjointMethod,
     sp: &dyn HomogeneousSpace,
@@ -159,65 +352,84 @@ pub fn batch_grad_manifold(
     paths: &[BrownianPath],
     obs: &[usize],
     loss: &dyn BatchLoss,
+    parallelism: usize,
 ) -> (f64, Vec<f64>, usize) {
     let batch = y0s.len();
     let dim = sp.point_dim();
     let n_obs = obs.len();
     let steps = paths[0].steps();
     let h = paths[0].h;
-    let mut meter = MemMeter::new();
-    meter.alloc(2 * dim + 2 * sp.algebra_dim() + batch * n_obs * dim);
     let seg = (steps as f64).sqrt().ceil() as usize;
+    let base_mem = 2 * dim + 2 * sp.algebra_dim() + batch * n_obs * dim + vf.num_params();
 
-    let mut finals: Vec<Vec<f64>> = Vec::with_capacity(batch);
-    let mut tapes: Vec<MeteredTape> = (0..batch).map(|_| MeteredTape::new()).collect();
-    let mut obs_states = vec![0.0; batch * n_obs * dim];
-    for b in 0..batch {
+    let fwd: Vec<ForwardOut> = parallel_map(parallelism, batch, |b| {
+        let mut meter = MemMeter::new();
+        let mut tape = MeteredTape::new();
+        let mut obs_states = vec![0.0; n_obs * dim];
         let mut y = y0s[b].clone();
         if method != AdjointMethod::Reversible {
-            tapes[b].push(&y, &mut meter);
+            tape.push(&y, &mut meter);
         }
         let mut oi = 0;
         for n in 0..steps {
             stepper.step(sp, vf, n as f64 * h, h, paths[b].increment(n), &mut y);
             match method {
-                AdjointMethod::Full => tapes[b].push(&y, &mut meter),
+                AdjointMethod::Full => tape.push(&y, &mut meter),
                 AdjointMethod::Recursive => {
                     if (n + 1) % seg == 0 {
-                        tapes[b].push(&y, &mut meter);
+                        tape.push(&y, &mut meter);
                     }
                 }
                 AdjointMethod::Reversible => {}
             }
             while oi < n_obs && obs[oi] == n + 1 {
-                obs_states[(b * n_obs + oi) * dim..(b * n_obs + oi + 1) * dim]
-                    .copy_from_slice(&y);
+                obs_states[oi * dim..(oi + 1) * dim].copy_from_slice(&y);
                 oi += 1;
             }
         }
-        finals.push(y);
-    }
-    let (loss_val, cots) = loss.eval_grad(&obs_states, batch, n_obs, dim);
+        ForwardOut {
+            final_state: y,
+            tape,
+            obs_states,
+            retained: meter.current(),
+        }
+    });
 
-    let mut d_theta = vec![0.0; vf.num_params()];
-    meter.alloc(d_theta.len());
-    for b in 0..batch {
+    let obs_all = gather_obs(&fwd, n_obs, dim);
+    let (loss_val, cots) = loss.eval_grad(&obs_all, batch, n_obs, dim);
+    let tape_retained: usize = fwd.iter().map(|f| f.retained).sum();
+
+    let fwd_ref = &fwd;
+    let cots_ref = &cots;
+    let per_sample: Vec<(Vec<f64>, usize)> = parallel_map(parallelism, batch, |b| {
+        let fw = &fwd_ref[b];
+        let mut d_theta = vec![0.0; vf.num_params()];
+        let mut meter = MemMeter::new();
         let mut lambda = vec![0.0; dim];
-        let mut y = finals[b].clone();
+        let mut y = fw.final_state.clone();
         let mut oi = n_obs;
         let mut seg_buf = MeteredTape::new();
         for n in (0..steps).rev() {
             while oi > 0 && obs[oi - 1] == n + 1 {
                 oi -= 1;
                 for d in 0..dim {
-                    lambda[d] += cots[(b * n_obs + oi) * dim + d];
+                    lambda[d] += cots_ref[(b * n_obs + oi) * dim + d];
                 }
             }
             let t = n as f64 * h;
             let dw = paths[b].increment(n);
             match method {
                 AdjointMethod::Full => {
-                    stepper.backprop_step(sp, vf, t, h, dw, tapes[b].get(n), &mut lambda, &mut d_theta);
+                    stepper.backprop_step(
+                        sp,
+                        vf,
+                        t,
+                        h,
+                        dw,
+                        fw.tape.get(n),
+                        &mut lambda,
+                        &mut d_theta,
+                    );
                 }
                 AdjointMethod::Reversible => {
                     stepper.step_back(sp, vf, t, h, dw, &mut y);
@@ -227,7 +439,7 @@ pub fn batch_grad_manifold(
                     if seg_buf.is_empty() {
                         let seg_start = (n / seg) * seg;
                         let ckpt_idx = n / seg;
-                        let mut s = tapes[b].get(ckpt_idx).to_vec();
+                        let mut s = fw.tape.get(ckpt_idx).to_vec();
                         seg_buf.push(&s, &mut meter);
                         for m in seg_start..n {
                             stepper.step(sp, vf, m as f64 * h, h, paths[b].increment(m), &mut s);
@@ -239,13 +451,41 @@ pub fn batch_grad_manifold(
                 }
             }
         }
-        tapes[b].clear(&mut meter);
-    }
-    (loss_val, d_theta, meter.peak_f64s())
+        (d_theta, meter.peak_f64s())
+    });
+
+    let (d_theta, peak) = reduce_per_sample(&per_sample, vf.num_params(), base_mem, tape_retained);
+    (loss_val, d_theta, peak)
+}
+
+/// [`batch_grad_manifold_par`] at the configured default parallelism.
+#[allow(clippy::too_many_arguments)]
+pub fn batch_grad_manifold(
+    stepper: &dyn ManifoldStepper,
+    method: AdjointMethod,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn DiffManifoldVectorField,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    obs: &[usize],
+    loss: &dyn BatchLoss,
+) -> (f64, Vec<f64>, usize) {
+    batch_grad_manifold_par(
+        stepper,
+        method,
+        sp,
+        vf,
+        y0s,
+        paths,
+        obs,
+        loss,
+        crate::config::default_parallelism(),
+    )
 }
 
 /// Generic Euclidean training loop: params live in `get/set` closures so the
-/// coordinator stays model-agnostic.
+/// coordinator stays model-agnostic. Each epoch's batch solve runs on the
+/// parallel engine at the configured default parallelism.
 #[allow(clippy::too_many_arguments)]
 pub fn train_euclidean<M, FGet, FSet>(
     model: &mut M,
@@ -386,5 +626,57 @@ mod tests {
             }
             assert!(m < m_full, "{} must use less memory", method.name());
         }
+    }
+
+    /// The engine's central contract: every worker count yields bit-equal
+    /// losses, gradients and memory figures.
+    #[test]
+    fn parallelism_is_bitwise_invisible() {
+        let mut rng = Pcg64::new(33);
+        let model = NeuralSde::lsde(3, 8, 1, false, &mut rng);
+        let st = LowStorageStepper::ees25();
+        let (steps, h, batch) = (12, 0.05, 7);
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.2, 0.0, -0.1]).collect();
+        let paths = sample_paths_par(&mut rng, batch, 3, steps, h, 3);
+        let obs = vec![6, 12];
+        let mut data = vec![0.0; batch * 2 * 3];
+        rng.fill_normal(&mut data);
+        let loss = MomentMatch::from_data(&data, batch, 2, 3);
+        for method in [
+            AdjointMethod::Full,
+            AdjointMethod::Recursive,
+            AdjointMethod::Reversible,
+        ] {
+            let (l1, g1, m1) = batch_grad_euclidean_par(
+                &st, method, &model, &y0s, &paths, &obs, &loss, 1,
+            );
+            for p in [2, 4, 16] {
+                let (lp, gp, mp) = batch_grad_euclidean_par(
+                    &st, method, &model, &y0s, &paths, &obs, &loss, p,
+                );
+                assert_eq!(l1.to_bits(), lp.to_bits(), "{} p={p}", method.name());
+                assert_eq!(m1, mp, "{} p={p}", method.name());
+                for (a, b) in g1.iter().zip(gp.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} p={p}", method.name());
+                }
+            }
+        }
+    }
+
+    /// Split-stream path sampling is parallelism-invariant and per-sample
+    /// independent.
+    #[test]
+    fn sample_paths_split_streams_deterministic() {
+        let paths_at = |p: usize| {
+            let mut rng = Pcg64::new(77);
+            sample_paths_par(&mut rng, 5, 2, 8, 0.1, p)
+        };
+        let a = paths_at(1);
+        let b = paths_at(4);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.dw, y.dw);
+        }
+        // Distinct samples see distinct noise.
+        assert_ne!(a[0].dw, a[1].dw);
     }
 }

@@ -1,0 +1,124 @@
+//! Deterministic parallel map over batch samples — the engine under the
+//! coordinator's batch forward/backward sweeps.
+//!
+//! Design constraints (in priority order):
+//!
+//! 1. **Bitwise determinism**: the output of any computation built on
+//!    [`parallel_map`] must be identical for every worker count, including 1.
+//!    This is achieved by keying every result to its sample index and doing
+//!    all floating-point *reductions* in fixed index order at the call site —
+//!    the map itself never combines two samples' numbers.
+//! 2. **Zero dependencies**: the offline build has no rayon, so the engine
+//!    is built on `std::thread::scope` (see the dependency policy in
+//!    `Cargo.toml`). The API is shaped so a rayon backend can be swapped in
+//!    behind the same function without touching call sites.
+//! 3. **Load balance**: samples are handed out through a shared atomic
+//!    counter (work stealing), so a slow sample does not idle the other
+//!    workers the way static chunking would.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Map `f` over `0..n` with up to `parallelism` worker threads, returning
+/// the results in index order.
+///
+/// The result is **independent of the worker count**: each index's value is
+/// computed by exactly one worker and placed back by index. `parallelism`
+/// values of 0 or 1 (or `n <= 1`) run inline on the calling thread with no
+/// spawn overhead.
+///
+/// Worker panics are propagated to the caller.
+pub fn parallel_map<T, F>(parallelism: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = parallelism.max(1).min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let per_worker: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut acc = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        acc.push((i, f(i)));
+                    }
+                    acc
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                // Re-raise the original payload so a worker's panic message
+                // and location survive to the caller's backtrace.
+                h.join()
+                    .unwrap_or_else(|e| std::panic::resume_unwind(e))
+            })
+            .collect()
+    });
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for chunk in per_worker {
+        for (i, v) in chunk {
+            debug_assert!(slots[i].is_none(), "index {i} produced twice");
+            slots[i] = Some(v);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("parallel_map slot unfilled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order() {
+        for p in [0, 1, 2, 4, 16] {
+            let out = parallel_map(p, 100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn handles_n_smaller_than_workers() {
+        assert_eq!(parallel_map(8, 2, |i| i + 1), vec![1, 2]);
+        assert_eq!(parallel_map(8, 0, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn results_identical_across_worker_counts() {
+        // A numeric workload whose per-index result must not depend on
+        // scheduling: each index runs its own deterministic RNG stream.
+        let run = |p: usize| -> Vec<u64> {
+            parallel_map(p, 32, |i| {
+                let mut rng = crate::rng::Pcg64::new(1000 + i as u64);
+                (0..50).map(|_| rng.next_u64()).fold(0u64, u64::wrapping_add)
+            })
+        };
+        let seq = run(1);
+        for p in [2, 3, 8] {
+            assert_eq!(run(p), seq, "p={p}");
+        }
+    }
+
+    #[test]
+    fn actually_uses_multiple_threads() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let ids: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        parallel_map(4, 64, |_| {
+            ids.lock().unwrap().insert(std::thread::current().id());
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        });
+        assert!(ids.lock().unwrap().len() > 1, "expected >1 worker thread");
+    }
+}

@@ -1,0 +1,154 @@
+//! Minimal error type with context chaining — the in-crate stand-in for
+//! `anyhow` (the offline build carries no external dependencies; see the
+//! dependency policy note in `Cargo.toml`).
+//!
+//! The API mirrors the `anyhow` subset the crate uses:
+//! [`Error`] (an opaque, message-carrying error), the [`Context`] extension
+//! trait on `Result`, the crate-wide [`crate::Result`] alias, and the
+//! [`format_err!`](crate::format_err) macro for ad-hoc errors.
+
+use std::fmt;
+
+/// Opaque error: a root cause plus a stack of human-readable context frames
+/// (outermost first when displayed, like `anyhow`'s `{:#}` chain).
+pub struct Error {
+    /// Context frames in attachment order (innermost first); Display walks
+    /// them in reverse so the outermost frame prints first.
+    context: Vec<String>,
+    /// Root cause. Either a boxed source error or a plain message.
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+    message: String,
+}
+
+impl Error {
+    /// Create an error from a plain message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            context: Vec::new(),
+            source: None,
+            message: message.to_string(),
+        }
+    }
+
+    /// Attach a context frame (what was being attempted when this failed).
+    pub fn context<C: fmt::Display>(mut self, ctx: C) -> Self {
+        self.context.push(ctx.to_string());
+        self
+    }
+
+    /// The root-cause message (without context frames).
+    pub fn root_cause(&self) -> &str {
+        &self.message
+    }
+}
+
+// NB: like `anyhow::Error`, this type deliberately does NOT implement
+// `std::error::Error` — that is what allows the blanket `From` below without
+// a conflicting reflexive impl.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self {
+            context: Vec::new(),
+            message: e.to_string(),
+            source: Some(Box::new(e)),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for ctx in self.context.iter().rev() {
+            write!(f, "{ctx}: ")?;
+        }
+        write!(f, "{}", self.message)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")?;
+        if let Some(src) = &self.source {
+            let mut cur: Option<&(dyn std::error::Error + 'static)> = src.source();
+            while let Some(c) = cur {
+                write!(f, "\ncaused by: {c}")?;
+                cur = c.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Extension trait adding `anyhow`-style `.context(...)` /
+/// `.with_context(...)` to any `Result` whose error converts into [`Error`].
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (the in-crate `anyhow!`).
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String, std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: Error = io_fail()
+            .context("read config")
+            .context("load experiment")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "load experiment: read config: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let n: Option<usize> = None;
+        let e = n.context("missing value").unwrap_err();
+        assert_eq!(e.root_cause(), "missing value");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<(), Error> {
+            io_fail()?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn format_err_macro() {
+        let e = format_err!("bad value {}", 7);
+        assert_eq!(e.root_cause(), "bad value 7");
+    }
+}

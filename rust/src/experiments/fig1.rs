@@ -11,17 +11,16 @@ use crate::bench::Table;
 use crate::coordinator::batch_grad_manifold;
 use crate::lie::Torus;
 use crate::losses::{BatchLoss, EnergyScore};
-use crate::nn::{Activation, Mlp, Workspace};
+use crate::nn::{Activation, Mlp, Pool, Workspace};
 use crate::rng::{BrownianPath, Pcg64};
 use crate::solvers::{CfEes, CrouchGrossman, ManifoldStepper};
 use crate::vf::{DiffManifoldVectorField, ManifoldVectorField};
-use std::sync::Mutex;
 
 /// Small neural field on 𝕋ⁿ (hidden width configurable) with additive noise.
 pub struct TorusField {
     pub n: usize,
     pub net: Mlp,
-    ws: Mutex<Workspace>,
+    ws: Pool<Workspace>,
 }
 
 impl TorusField {
@@ -34,7 +33,7 @@ impl TorusField {
                 Activation::Identity,
                 rng,
             ),
-            ws: Mutex::new(Workspace::default()),
+            ws: Pool::new(),
         }
     }
     fn encode(&self, y: &[f64]) -> Vec<f64> {
@@ -58,9 +57,8 @@ impl ManifoldVectorField for TorusField {
         self.n
     }
     fn generator(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
-        let ws = &mut *self.ws.lock().unwrap();
         let e = self.encode(y);
-        self.net.forward(&e, out, ws);
+        self.ws.with(|ws| self.net.forward(&e, out, ws));
         for (o, w) in out.iter_mut().zip(dw.iter()) {
             *o = *o * h + 0.2 * w;
         }
@@ -81,13 +79,16 @@ impl DiffManifoldVectorField for TorusField {
         d_y: &mut [f64],
         d_theta: &mut [f64],
     ) {
-        let ws = &mut *self.ws.lock().unwrap();
+        // One workspace for the forward/vjp pair (vjp reads the activations
+        // the forward left behind).
+        let mut ws = self.ws.take();
         let e = self.encode(y);
         let mut out = vec![0.0; self.n];
-        self.net.forward(&e, &mut out, ws);
+        self.net.forward(&e, &mut out, &mut ws);
         let cot_h: Vec<f64> = cot.iter().map(|c| c * h).collect();
         let mut d_e = vec![0.0; 2 * self.n];
-        self.net.vjp(&e, &cot_h, &mut d_e, d_theta, ws);
+        self.net.vjp(&e, &cot_h, &mut d_e, d_theta, &mut ws);
+        self.ws.put(ws);
         for i in 0..self.n {
             d_y[i] += d_e[i] * y[i].cos() - d_e[self.n + i] * y[i].sin();
         }

@@ -96,13 +96,19 @@ pub fn run_model(model: VolModel, scale: Scale) -> Vec<VolRow> {
             &mut rng,
         );
         let runtime = t0.elapsed().as_secs_f64();
-        // KS statistic on terminal values: generated vs data.
-        let mut gen_term = Vec::with_capacity(batch);
-        for _ in 0..batch {
-            let path = BrownianPath::sample(&mut rng, 1, steps, h);
-            let traj = crate::solvers::integrate(st.as_ref(), &model_nn, 0.0, &[1.0], &path);
-            gen_term.push(traj[steps]);
-        }
+        // KS statistic on terminal values: generated vs data. Driver paths
+        // are drawn sequentially (so the evaluation noise is independent of
+        // the worker count); the rollouts fan out over the parallel batch
+        // engine.
+        let eval_paths: Vec<BrownianPath> = (0..batch)
+            .map(|_| BrownianPath::sample(&mut rng, 1, steps, h))
+            .collect();
+        let eval_y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![1.0]).collect();
+        let mut gen_term: Vec<f64> =
+            crate::coordinator::batch_integrate(st.as_ref(), &model_nn, 0.0, &eval_y0s, &eval_paths)
+                .iter()
+                .map(|traj| traj[steps])
+                .collect();
         let mut data_term: Vec<f64> = (0..data_count)
             .map(|b| data[(b + 1) * (n_obs + 1) - 1])
             .collect();

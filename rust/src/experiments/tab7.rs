@@ -32,20 +32,34 @@ pub fn run_rows(scale: Scale) -> Vec<GbmRow> {
     let batch = scale.pick(16, 128);
     let budget = scale.pick(60, 60);
     let gbm = StiffGbm::new(d, 0.1, 20.0, &mut Pcg64::new(123));
-    // Data: fine-grid simulation moments at observation times.
+    // Data: fine-grid simulation moments at observation times. Paths are
+    // drawn sequentially from one stream (deterministic data regardless of
+    // worker count); the fine-grid simulations fan out over the parallel
+    // batch engine, each worker reducing its trajectory to the observation
+    // block so the full fine grids never coexist in memory.
     let mut rng = Pcg64::new(321);
     let fine = 2048;
     let n_obs = 4;
     let data_batch = scale.pick(256, 4096);
+    let fine_paths: Vec<BrownianPath> = (0..data_batch)
+        .map(|_| BrownianPath::sample(&mut rng, 1, fine, 1.0 / fine as f64))
+        .collect();
+    let obs_blocks: Vec<Vec<f64>> = crate::coordinator::parallel_map(
+        crate::config::default_parallelism(),
+        data_batch,
+        |b| {
+            let traj = gbm.simulate(&vec![1.0; d], &fine_paths[b]);
+            let mut block = vec![0.0; n_obs * d];
+            for k in 1..=n_obs {
+                let idx = k * fine / n_obs;
+                block[(k - 1) * d..k * d].copy_from_slice(&traj[idx * d..(idx + 1) * d]);
+            }
+            block
+        },
+    );
     let mut data = vec![0.0; data_batch * n_obs * d];
-    for b in 0..data_batch {
-        let path = BrownianPath::sample(&mut rng, 1, fine, 1.0 / fine as f64);
-        let traj = gbm.simulate(&vec![1.0; d], &path);
-        for k in 1..=n_obs {
-            let idx = k * fine / n_obs;
-            data[(b * n_obs + k - 1) * d..(b * n_obs + k) * d]
-                .copy_from_slice(&traj[idx * d..(idx + 1) * d]);
-        }
+    for (b, block) in obs_blocks.iter().enumerate() {
+        data[b * n_obs * d..(b + 1) * n_obs * d].copy_from_slice(block);
     }
     let loss = MomentMatch::from_data(&data, data_batch, n_obs, d);
 

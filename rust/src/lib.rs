@@ -23,6 +23,7 @@
 pub mod adjoint;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod experiments;
 pub mod lie;
 pub mod linalg;
@@ -40,5 +41,6 @@ pub mod vf;
 
 pub mod bench;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result type (in-crate [`error::Error`]; see the dependency
+/// policy in `Cargo.toml` for why `anyhow` is not used).
+pub type Result<T> = std::result::Result<T, error::Error>;

@@ -11,10 +11,9 @@
 //! a linear head classifies each latent state.
 
 use crate::lie::{HomogeneousSpace, Sphere};
-use crate::nn::{Activation, Mlp, Workspace};
+use crate::nn::{Activation, Mlp, Pool, Workspace};
 use crate::rng::Pcg64;
 use crate::vf::{DiffManifoldVectorField, ManifoldVectorField};
-use std::sync::Mutex;
 
 /// Synthetic activity dataset on the sphere.
 pub struct SphereDataset {
@@ -95,7 +94,7 @@ pub struct SphereNeuralField {
     pub drift: Mlp,
     pub sigma: f64,
     sp: Sphere,
-    ws: Mutex<Workspace>,
+    ws: Pool<Workspace>,
 }
 
 impl SphereNeuralField {
@@ -111,7 +110,7 @@ impl SphereNeuralField {
             drift,
             sigma,
             sp: Sphere::new(n),
-            ws: Mutex::new(Workspace::default()),
+            ws: Pool::new(),
         }
     }
 
@@ -150,9 +149,8 @@ impl ManifoldVectorField for SphereNeuralField {
     }
     fn generator(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
         let n = self.n;
-        let ws = &mut *self.ws.lock().unwrap();
         let mut m = vec![0.0; n];
-        self.drift.forward(y, &mut m, ws);
+        self.ws.with(|ws| self.drift.forward(y, &mut m, ws));
         // a = P_y(m·h + σ·dW) (tangent combined increment).
         let mut a = vec![0.0; n];
         for i in 0..n {
@@ -186,9 +184,11 @@ impl DiffManifoldVectorField for SphereNeuralField {
         //   dL = duᵀ P_y Cy − (yᵀu)(Cy)ᵀdy − (Ca)ᵀdy
         // (terms with yᵀCy vanish by skewness).
         let n = self.n;
-        let ws = &mut *self.ws.lock().unwrap();
+        // One workspace checked out for the forward/vjp pair: `Mlp::vjp`
+        // reads the activations the preceding `forward` left in it.
+        let mut ws = self.ws.take();
         let mut m = vec![0.0; n];
-        self.drift.forward(y, &mut m, ws);
+        self.drift.forward(y, &mut m, &mut ws);
         let mut u = vec![0.0; n];
         for i in 0..n {
             u[i] = m[i] * h + self.sigma * dw[i];
@@ -209,7 +209,8 @@ impl DiffManifoldVectorField for SphereNeuralField {
             .collect();
         // Through the MLP: u = m·h ⇒ cot_m = d_u·h.
         let cot_m: Vec<f64> = d_u.iter().map(|x| x * h).collect();
-        self.drift.vjp(y, &cot_m, d_y, d_theta, ws);
+        self.drift.vjp(y, &cot_m, d_y, d_theta, &mut ws);
+        self.ws.put(ws);
         // Direct y terms. With yᵀCy = 0 the expansion collapses to
         //   dL_direct = −(yᵀu)(Cy)ᵀdy − (Ca)ᵀdy.
         let mut ca = vec![0.0; n];

@@ -12,6 +12,54 @@ pub mod neural_sde;
 pub mod optim;
 
 use crate::rng::Pcg64;
+use std::sync::Mutex;
+
+/// Checkout pool of scratch buffers shared by a `Sync` model.
+///
+/// The vector fields keep their forward/backward workspaces on the model so
+/// the solver hot loop never allocates; under the parallel batch engine
+/// ([`crate::coordinator::parallel`]) several worker threads evaluate the
+/// same model concurrently, so a single mutex-guarded workspace would
+/// serialise them for the whole MLP forward. The pool instead holds the lock
+/// only to check a buffer out or in (a `Vec::pop`/`push`), and lazily grows
+/// to one buffer per concurrent caller, after which the steady state is
+/// allocation-free again.
+pub struct Pool<T> {
+    items: Mutex<Vec<T>>,
+}
+
+impl<T: Default> Pool<T> {
+    /// Empty pool (buffers are created on first checkout).
+    pub fn new() -> Self {
+        Self {
+            items: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Check a buffer out (creating a fresh one if all are in use).
+    pub fn take(&self) -> T {
+        self.items.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&self, item: T) {
+        self.items.lock().unwrap().push(item);
+    }
+
+    /// Run `f` with a checked-out buffer, returning it afterwards.
+    pub fn with<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
+        let mut item = self.take();
+        let out = f(&mut item);
+        self.put(item);
+        out
+    }
+}
+
+impl<T: Default> Default for Pool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// Supported activations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

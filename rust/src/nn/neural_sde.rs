@@ -9,13 +9,13 @@
 //! fields over the periodic encoding (sinθ, cosθ, ω) ∈ ℝ³ᴺ with outputs in
 //! the Lie algebra ℝ²ᴺ and additive noise on the ω block only (Appendix I.5).
 
-use super::{Activation, Mlp, Workspace};
+use super::{Activation, Mlp, Pool, Workspace};
 use crate::rng::Pcg64;
 use crate::vf::{DiffManifoldVectorField, DiffVectorField, ManifoldVectorField, VectorField};
-use std::sync::Mutex;
 
-/// Reusable hot-path buffers (guarded by one mutex per model so the fields
-/// stay `Sync`; the lock is uncontended in the single-threaded solver loop).
+/// Reusable hot-path buffers, checked out of a [`Pool`] per call so the
+/// fields stay `Sync` and concurrent workers of the parallel batch engine
+/// never serialise on a long-held lock.
 #[derive(Default)]
 struct Scratch {
     ws: Workspace,
@@ -41,7 +41,7 @@ pub struct NeuralSde {
     /// If true the diffusion net takes only (scaled) time as input.
     pub time_only_diffusion: bool,
     pub dim: usize,
-    ws: Mutex<Scratch>,
+    ws: Pool<Scratch>,
 }
 
 impl NeuralSde {
@@ -66,7 +66,7 @@ impl NeuralSde {
             diffusion,
             time_only_diffusion,
             dim,
-            ws: Mutex::new(Scratch::default()),
+            ws: Pool::new(),
         }
     }
 
@@ -92,24 +92,25 @@ impl VectorField for NeuralSde {
         self.dim
     }
     fn combined(&self, t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
-        let sc = &mut *self.ws.lock().unwrap();
-        sc.ensure(self.dim + 1);
-        self.drift.forward(y, out, &mut sc.ws);
-        for o in out.iter_mut() {
-            *o *= h;
-        }
-        let din_len = if self.time_only_diffusion {
-            sc.a[0] = t;
-            1
-        } else {
-            sc.a[..self.dim].copy_from_slice(y);
-            self.dim
-        };
-        let (din, sigma, ws) = (&sc.a[..din_len], &mut sc.b[..self.dim], &mut sc.ws);
-        self.diffusion.forward(din, sigma, ws);
-        for i in 0..self.dim {
-            out[i] += sigma[i] * dw[i];
-        }
+        self.ws.with(|sc| {
+            sc.ensure(self.dim + 1);
+            self.drift.forward(y, out, &mut sc.ws);
+            for o in out.iter_mut() {
+                *o *= h;
+            }
+            let din_len = if self.time_only_diffusion {
+                sc.a[0] = t;
+                1
+            } else {
+                sc.a[..self.dim].copy_from_slice(y);
+                self.dim
+            };
+            let (din, sigma, ws) = (&sc.a[..din_len], &mut sc.b[..self.dim], &mut sc.ws);
+            self.diffusion.forward(din, sigma, ws);
+            for i in 0..self.dim {
+                out[i] += sigma[i] * dw[i];
+            }
+        })
     }
 }
 
@@ -127,41 +128,42 @@ impl DiffVectorField for NeuralSde {
         d_y: &mut [f64],
         d_theta: &mut [f64],
     ) {
-        let sc = &mut *self.ws.lock().unwrap();
-        sc.ensure(self.dim + 1);
-        let nd = self.drift.num_params();
-        // Drift part: cot·h through the drift net.
-        for i in 0..self.dim {
-            sc.c[i] = cot[i] * h;
-        }
-        {
-            let (cot_h, out, ws) = (&sc.c[..self.dim], &mut sc.b[..self.dim], &mut sc.ws);
-            self.drift.forward(y, out, ws);
-            self.drift.vjp(y, cot_h, d_y, &mut d_theta[..nd], ws);
-        }
-        // Diffusion part: cot_i · dw_i through the diffusion net.
-        let din_len = if self.time_only_diffusion {
-            sc.a[0] = t;
-            1
-        } else {
-            sc.a[..self.dim].copy_from_slice(y);
-            self.dim
-        };
-        for i in 0..self.dim {
-            sc.c[i] = cot[i] * dw[i];
-        }
-        {
-            let (din, sigma, ws) = (&sc.a[..din_len], &mut sc.b[..self.dim], &mut sc.ws);
-            self.diffusion.forward(din, sigma, ws);
-        }
-        if self.time_only_diffusion {
-            let mut d_t = [0.0];
-            let (din, cot_dw, ws) = (&sc.a[..1], &sc.c[..self.dim], &mut sc.ws);
-            self.diffusion.vjp(din, cot_dw, &mut d_t, &mut d_theta[nd..], ws);
-        } else {
-            let (din, cot_dw, ws) = (&sc.a[..self.dim], &sc.c[..self.dim], &mut sc.ws);
-            self.diffusion.vjp(din, cot_dw, d_y, &mut d_theta[nd..], ws);
-        }
+        self.ws.with(|sc| {
+            sc.ensure(self.dim + 1);
+            let nd = self.drift.num_params();
+            // Drift part: cot·h through the drift net.
+            for i in 0..self.dim {
+                sc.c[i] = cot[i] * h;
+            }
+            {
+                let (cot_h, out, ws) = (&sc.c[..self.dim], &mut sc.b[..self.dim], &mut sc.ws);
+                self.drift.forward(y, out, ws);
+                self.drift.vjp(y, cot_h, d_y, &mut d_theta[..nd], ws);
+            }
+            // Diffusion part: cot_i · dw_i through the diffusion net.
+            let din_len = if self.time_only_diffusion {
+                sc.a[0] = t;
+                1
+            } else {
+                sc.a[..self.dim].copy_from_slice(y);
+                self.dim
+            };
+            for i in 0..self.dim {
+                sc.c[i] = cot[i] * dw[i];
+            }
+            {
+                let (din, sigma, ws) = (&sc.a[..din_len], &mut sc.b[..self.dim], &mut sc.ws);
+                self.diffusion.forward(din, sigma, ws);
+            }
+            if self.time_only_diffusion {
+                let mut d_t = [0.0];
+                let (din, cot_dw, ws) = (&sc.a[..1], &sc.c[..self.dim], &mut sc.ws);
+                self.diffusion.vjp(din, cot_dw, &mut d_t, &mut d_theta[nd..], ws);
+            } else {
+                let (din, cot_dw, ws) = (&sc.a[..self.dim], &sc.c[..self.dim], &mut sc.ws);
+                self.diffusion.vjp(din, cot_dw, d_y, &mut d_theta[nd..], ws);
+            }
+        })
     }
 }
 
@@ -170,7 +172,7 @@ pub struct TorusNeuralSde {
     pub n_osc: usize,
     pub drift: Mlp,     // input 3N → output 2N (algebra)
     pub diffusion: Mlp, // input 3N → output N (noise on ω only), softplus·0.1
-    ws: Mutex<Workspace>,
+    ws: Pool<Workspace>,
 }
 
 impl TorusNeuralSde {
@@ -193,7 +195,7 @@ impl TorusNeuralSde {
             n_osc,
             drift,
             diffusion,
-            ws: Mutex::new(Workspace::default()),
+            ws: Pool::new(),
         }
     }
 
@@ -243,18 +245,19 @@ impl ManifoldVectorField for TorusNeuralSde {
     }
     fn generator(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
         let n = self.n_osc;
-        let ws = &mut *self.ws.lock().unwrap();
-        let e = self.encode(y);
-        self.drift.forward(&e, out, ws);
-        for o in out.iter_mut() {
-            *o *= h;
-        }
-        let mut sigma = vec![0.0; n];
-        self.diffusion.forward(&e, &mut sigma, ws);
-        // Additive noise on the ω block only (decoupled diffusion).
-        for i in 0..n {
-            out[n + i] += sigma[i] * dw[i];
-        }
+        self.ws.with(|ws| {
+            let e = self.encode(y);
+            self.drift.forward(&e, out, ws);
+            for o in out.iter_mut() {
+                *o *= h;
+            }
+            let mut sigma = vec![0.0; n];
+            self.diffusion.forward(&e, &mut sigma, ws);
+            // Additive noise on the ω block only (decoupled diffusion).
+            for i in 0..n {
+                out[n + i] += sigma[i] * dw[i];
+            }
+        })
     }
 }
 
@@ -273,22 +276,23 @@ impl DiffManifoldVectorField for TorusNeuralSde {
         d_theta: &mut [f64],
     ) {
         let n = self.n_osc;
-        let ws = &mut *self.ws.lock().unwrap();
-        let nd = self.drift.num_params();
-        let e = self.encode(y);
-        let mut d_e = vec![0.0; 3 * n];
-        // Drift: cot·h.
-        let cot_h: Vec<f64> = cot.iter().map(|c| c * h).collect();
-        let mut out = vec![0.0; 2 * n];
-        self.drift.forward(&e, &mut out, ws);
-        self.drift.vjp(&e, &cot_h, &mut d_e, &mut d_theta[..nd], ws);
-        // Diffusion: cot on ω block times dw.
-        let cot_dw: Vec<f64> = (0..n).map(|i| cot[n + i] * dw[i]).collect();
-        let mut sigma = vec![0.0; n];
-        self.diffusion.forward(&e, &mut sigma, ws);
-        self.diffusion
-            .vjp(&e, &cot_dw, &mut d_e, &mut d_theta[nd..], ws);
-        self.encode_vjp(y, &d_e, d_y);
+        self.ws.with(|ws| {
+            let nd = self.drift.num_params();
+            let e = self.encode(y);
+            let mut d_e = vec![0.0; 3 * n];
+            // Drift: cot·h.
+            let cot_h: Vec<f64> = cot.iter().map(|c| c * h).collect();
+            let mut out = vec![0.0; 2 * n];
+            self.drift.forward(&e, &mut out, ws);
+            self.drift.vjp(&e, &cot_h, &mut d_e, &mut d_theta[..nd], ws);
+            // Diffusion: cot on ω block times dw.
+            let cot_dw: Vec<f64> = (0..n).map(|i| cot[n + i] * dw[i]).collect();
+            let mut sigma = vec![0.0; n];
+            self.diffusion.forward(&e, &mut sigma, ws);
+            self.diffusion
+                .vjp(&e, &cot_dw, &mut d_e, &mut d_theta[nd..], ws);
+            self.encode_vjp(y, &d_e, d_y);
+        })
     }
 }
 

@@ -28,6 +28,7 @@ impl Default for EmbeddedEes25 {
 }
 
 impl EmbeddedEes25 {
+    /// The embedded scheme at the paper's x = 1/10.
     pub fn new() -> Self {
         let tab = Tableau::ees25_default();
         let w = tab.williamson_2n();
@@ -80,10 +81,15 @@ impl EmbeddedEes25 {
 
 /// Classic I-controller with safety factor for accept/reject stepping.
 pub struct AdaptiveController {
+    /// Relative tolerance.
     pub rtol: f64,
+    /// Absolute tolerance.
     pub atol: f64,
+    /// Safety factor applied to the optimal step-size estimate.
     pub safety: f64,
+    /// Lower clamp on the per-step size factor.
     pub min_factor: f64,
+    /// Upper clamp on the per-step size factor.
     pub max_factor: f64,
     /// Embedded order + 1 (error ~ h²: first-order estimate vs order-2).
     pub order: f64,
@@ -104,8 +110,11 @@ impl Default for AdaptiveController {
 
 /// Result of an adaptive ODE solve.
 pub struct AdaptiveResult {
+    /// Terminal state.
     pub y: Vec<f64>,
+    /// Number of accepted steps.
     pub steps_accepted: usize,
+    /// Number of rejected (re-tried) steps.
     pub steps_rejected: usize,
 }
 

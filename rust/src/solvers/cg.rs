@@ -18,13 +18,18 @@ use crate::lie::HomogeneousSpace;
 use crate::tableau::Tableau;
 use crate::vf::{DiffManifoldVectorField, ManifoldVectorField};
 
+/// Crouch–Grossman stepper: ordered products of single-slope exponentials,
+/// s(s+1)/2 of them per dense step — the non-reversible baseline family.
 #[derive(Clone, Debug)]
 pub struct CrouchGrossman {
+    /// The tableau whose α/β coefficients weight the exponential products.
     pub tab: Tableau,
     name: String,
 }
 
 impl CrouchGrossman {
+    /// CG method from a tableau (geometric order conditions are the
+    /// caller's responsibility; see [`Self::cg4_cost_profile`]).
     pub fn new(tab: Tableau, name: &str) -> Self {
         Self {
             tab,
@@ -259,6 +264,7 @@ impl ManifoldStepper for CrouchGrossman {
 pub struct GeoEulerMaruyama;
 
 impl GeoEulerMaruyama {
+    /// The scheme is parameter-free.
     pub fn new() -> Self {
         Self
     }

@@ -15,9 +15,14 @@ use super::{Stepper, StepperProps};
 use crate::tableau::{Tableau, Williamson2N};
 use crate::vf::{DiffVectorField, VectorField};
 
+/// Williamson 2N low-storage realisation of a Bazavov-representable tableau
+/// — numerically identical to [`super::RkStepper`] on the same tableau with
+/// only two live N-vectors per step.
 #[derive(Clone, Debug)]
 pub struct LowStorageStepper {
+    /// The Williamson (A_l, B_l) coefficients driving the two registers.
     pub coeffs: Williamson2N,
+    /// The underlying tableau (kept for abscissae and the backward sweep).
     pub tab: Tableau,
     name: String,
 }
@@ -30,12 +35,37 @@ impl LowStorageStepper {
         Self { coeffs, tab, name }
     }
 
+    /// 2N realisation of EES(2,5;1/10) — the paper's workhorse scheme.
+    ///
+    /// ```
+    /// use ees::rng::{BrownianPath, Pcg64};
+    /// use ees::solvers::{integrate, LowStorageStepper, RkStepper};
+    /// use ees::vf::ClosureField;
+    ///
+    /// let vf = ClosureField {
+    ///     dim: 1,
+    ///     noise_dim: 1,
+    ///     drift: |_t, y: &[f64], out: &mut [f64]| out[0] = -0.5 * y[0],
+    ///     diffusion: |_t, y: &[f64], dw: &[f64], out: &mut [f64]| out[0] = 0.3 * y[0] * dw[0],
+    /// };
+    /// let mut rng = Pcg64::new(2);
+    /// let path = BrownianPath::sample(&mut rng, 1, 20, 0.05);
+    /// // The 2N form is the same map as the standard form, two registers
+    /// // instead of s+1 (Proposition D.1's flat-manifold collapse).
+    /// let a = integrate(&LowStorageStepper::ees25(), &vf, 0.0, &[1.0], &path);
+    /// let b = integrate(&RkStepper::ees25(), &vf, 0.0, &[1.0], &path);
+    /// for (x, y) in a.iter().zip(b.iter()) {
+    ///     assert!((x - y).abs() < 1e-12);
+    /// }
+    /// ```
     pub fn ees25() -> Self {
         Self::new(Tableau::ees25_default())
     }
+    /// 2N realisation of EES(2,5;x) for an admissible x.
     pub fn ees25_x(x: f64) -> Self {
         Self::new(Tableau::ees25(x))
     }
+    /// 2N realisation of EES(2,7).
     pub fn ees27() -> Self {
         Self::new(Tableau::ees27_default())
     }

@@ -46,6 +46,7 @@ use crate::vf::{DiffManifoldVectorField, DiffVectorField, ManifoldVectorField, V
 /// Static properties of a Euclidean stepper.
 #[derive(Clone, Debug)]
 pub struct StepperProps {
+    /// Human-readable scheme name as used in the paper's tables.
     pub name: String,
     /// Vector-field evaluations per step as counted by the paper's
     /// fixed-budget experiments (amortised: Reversible Heun counts 1).
@@ -60,6 +61,7 @@ pub struct StepperProps {
 
 /// One-step method for Euclidean SDE/RDEs in simplified-RK form.
 pub trait Stepper: Send + Sync {
+    /// Static properties (name, cost, reversibility class) of the scheme.
     fn props(&self) -> StepperProps;
 
     /// Size of the full solver state for a `dim`-dimensional problem.
@@ -95,6 +97,7 @@ pub trait Stepper: Send + Sync {
 
 /// One-step method on a homogeneous space.
 pub trait ManifoldStepper: Send + Sync {
+    /// Human-readable scheme name as used in the paper's tables.
     fn name(&self) -> String;
     /// Vector-field evaluations per step.
     fn evals_per_step(&self) -> usize;
@@ -103,6 +106,7 @@ pub trait ManifoldStepper: Send + Sync {
     /// Whether `step_back` is a valid (near-)inverse.
     fn reversible(&self) -> bool;
 
+    /// Advance the point `y` over [t, t+h] with driver increments `dw`.
     fn step(
         &self,
         sp: &dyn HomogeneousSpace,
@@ -113,6 +117,8 @@ pub trait ManifoldStepper: Send + Sync {
         y: &mut [f64],
     );
 
+    /// Inverse step: from the point at t+h recover the point at t (panics
+    /// for schemes whose [`Self::reversible`] is false).
     fn step_back(
         &self,
         sp: &dyn HomogeneousSpace,
@@ -140,6 +146,25 @@ pub trait ManifoldStepper: Send + Sync {
 
 /// Integrate a Euclidean SDE over a sampled driver, recording the primary
 /// state after every step. Returns `(steps+1) * dim` flattened trajectory.
+///
+/// ```
+/// use ees::rng::{BrownianPath, Pcg64};
+/// use ees::solvers::{integrate, RkStepper};
+/// use ees::vf::ClosureField;
+///
+/// // Ornstein–Uhlenbeck: dy = 0.2(0.1 − y) dt + 0.5 dW.
+/// let vf = ClosureField {
+///     dim: 1,
+///     noise_dim: 1,
+///     drift: |_t, y: &[f64], out: &mut [f64]| out[0] = 0.2 * (0.1 - y[0]),
+///     diffusion: |_t, _y: &[f64], dw: &[f64], out: &mut [f64]| out[0] = 0.5 * dw[0],
+/// };
+/// let mut rng = Pcg64::new(1);
+/// let path = BrownianPath::sample(&mut rng, 1, 50, 0.02);
+/// let traj = integrate(&RkStepper::ees25(), &vf, 0.0, &[1.0], &path);
+/// assert_eq!(traj.len(), 51);
+/// assert!(traj.iter().all(|y| y.is_finite()));
+/// ```
 pub fn integrate(
     stepper: &dyn Stepper,
     vf: &dyn VectorField,

@@ -18,10 +18,13 @@
 use super::{Stepper, StepperProps};
 use crate::vf::{DiffVectorField, VectorField};
 
+/// The Reversible Heun scheme of Kidger et al. (2021): auxiliary state
+/// (y, ŷ), exact algebraic inverse, stability confined to λh ∈ [−i, i].
 #[derive(Clone, Debug, Default)]
 pub struct ReversibleHeun;
 
 impl ReversibleHeun {
+    /// The scheme is parameter-free.
     pub fn new() -> Self {
         Self
     }

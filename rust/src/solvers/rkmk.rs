@@ -18,14 +18,19 @@ use crate::lie::HomogeneousSpace;
 use crate::tableau::Tableau;
 use crate::vf::{DiffManifoldVectorField, ManifoldVectorField};
 
+/// Runge–Kutta–Munthe-Kaas stepper: integrates the pulled-back algebra
+/// equation with a classical tableau and a truncated dexp⁻¹.
 #[derive(Clone, Debug)]
 pub struct Rkmk {
+    /// The classical tableau applied in the algebra.
     pub tab: Tableau,
+    /// Bernoulli truncation order of dexp⁻¹ (0 ⇒ identity, order ≤ 2).
     pub dexpinv_order: usize,
     name: String,
 }
 
 impl Rkmk {
+    /// RKMK method from a tableau and a dexp⁻¹ truncation order.
     pub fn new(tab: Tableau, dexpinv_order: usize, name: &str) -> Self {
         Self {
             tab,

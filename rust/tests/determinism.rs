@@ -1,0 +1,192 @@
+//! Determinism regression suite for the parallel batch engine: a batch
+//! training epoch at `parallelism = 1` and `parallelism = N` must produce
+//! **bitwise-identical** losses, gradients, memory figures and optimiser
+//! trajectories. This is the contract that makes the worker count a pure
+//! performance knob (see `docs/ARCHITECTURE.md` §Parallel batch engine).
+
+use ees::adjoint::AdjointMethod;
+use ees::coordinator::{
+    batch_grad_euclidean_par, batch_grad_manifold_par, batch_integrate_par, sample_paths_par,
+};
+use ees::lie::TTorus;
+use ees::losses::{EnergyScore, MomentMatch};
+use ees::nn::neural_sde::{NeuralSde, TorusNeuralSde};
+use ees::nn::optim::{clip_global_norm, Optimizer};
+use ees::rng::{BrownianPath, Pcg64};
+use ees::solvers::{CfEes, LowStorageStepper, ReversibleHeun};
+use ees::vf::DiffVectorField;
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// One full Euclidean training epoch (sample → grad → clip → Adam step) at
+/// the given worker count; returns (losses, final params).
+fn euclidean_epochs(parallelism: usize, epochs: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::new(9001);
+    let (dim, steps, h, batch) = (3, 24, 0.04, 16);
+    let mut model = NeuralSde::lsde(dim, 12, 2, false, &mut Pcg64::new(7));
+    let st = LowStorageStepper::ees25();
+    let obs = vec![12, 24];
+    let mut data = vec![0.0; batch * 2 * dim];
+    rng.fill_normal(&mut data);
+    let loss = MomentMatch::from_data(&data, batch, 2, dim);
+    let mut opt = Optimizer::adam(1e-2, model.num_params());
+    let mut losses = Vec::new();
+    for _ in 0..epochs {
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.1; dim]).collect();
+        // Per-sample split streams: the batch is identical at any
+        // parallelism by construction.
+        let paths = sample_paths_par(&mut rng, batch, dim, steps, h, parallelism);
+        let (l, mut grad, _) = batch_grad_euclidean_par(
+            &st,
+            AdjointMethod::Reversible,
+            &model,
+            &y0s,
+            &paths,
+            &obs,
+            &loss,
+            parallelism,
+        );
+        clip_global_norm(&mut grad, 1.0);
+        let mut p = model.params();
+        opt.step(&mut p, &grad);
+        model.set_params(&p);
+        losses.push(l);
+    }
+    (losses, model.params())
+}
+
+#[test]
+fn euclidean_training_epoch_bitwise_invariant_in_parallelism() {
+    let (l1, p1) = euclidean_epochs(1, 3);
+    for par in [2, 4, 8] {
+        let (lp, pp) = euclidean_epochs(par, 3);
+        assert_bits_eq(&l1, &lp, &format!("losses at P={par}"));
+        assert_bits_eq(&p1, &pp, &format!("params at P={par}"));
+    }
+}
+
+#[test]
+fn euclidean_grad_bitwise_invariant_all_adjoints() {
+    let mut rng = Pcg64::new(42);
+    let (dim, steps, h, batch) = (2, 25, 0.03, 9);
+    let model = NeuralSde::lsde(dim, 10, 1, false, &mut rng);
+    let st = LowStorageStepper::ees25();
+    let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.2, -0.3]).collect();
+    let paths = sample_paths_par(&mut rng, batch, dim, steps, h, 1);
+    let obs = vec![5, 15, 25];
+    let mut data = vec![0.0; batch * 3 * dim];
+    rng.fill_normal(&mut data);
+    let loss = MomentMatch::from_data(&data, batch, 3, dim);
+    for method in [
+        AdjointMethod::Full,
+        AdjointMethod::Recursive,
+        AdjointMethod::Reversible,
+    ] {
+        let (l1, g1, m1) =
+            batch_grad_euclidean_par(&st, method, &model, &y0s, &paths, &obs, &loss, 1);
+        for par in [2, 3, 4, 32] {
+            let (lp, gp, mp) =
+                batch_grad_euclidean_par(&st, method, &model, &y0s, &paths, &obs, &loss, par);
+            assert_eq!(
+                l1.to_bits(),
+                lp.to_bits(),
+                "{} loss at P={par}",
+                method.name()
+            );
+            assert_eq!(m1, mp, "{} memory at P={par}", method.name());
+            assert_bits_eq(&g1, &gp, &format!("{} grad at P={par}", method.name()));
+        }
+    }
+}
+
+#[test]
+fn manifold_grad_bitwise_invariant_in_parallelism() {
+    let n_osc = 3;
+    let sp = TTorus::new(n_osc);
+    let model = TorusNeuralSde::new(n_osc, 10, &mut Pcg64::new(3));
+    let st = CfEes::ees25();
+    let (steps, h, batch) = (15, 0.05, 6);
+    let mut rng = Pcg64::new(4);
+    let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.3; 2 * n_osc]).collect();
+    let paths = sample_paths_par(&mut rng, batch, n_osc, steps, h, 1);
+    let obs = vec![15];
+    let mut data = vec![0.0; 5 * 2 * n_osc];
+    rng.fill_normal(&mut data);
+    let loss = EnergyScore {
+        data,
+        data_count: 5,
+        wrap_dims: n_osc,
+    };
+    let (l1, g1, m1) = batch_grad_manifold_par(
+        &st,
+        AdjointMethod::Reversible,
+        &sp,
+        &model,
+        &y0s,
+        &paths,
+        &obs,
+        &loss,
+        1,
+    );
+    for par in [2, 4, 8] {
+        let (lp, gp, mp) = batch_grad_manifold_par(
+            &st,
+            AdjointMethod::Reversible,
+            &sp,
+            &model,
+            &y0s,
+            &paths,
+            &obs,
+            &loss,
+            par,
+        );
+        assert_eq!(l1.to_bits(), lp.to_bits(), "loss at P={par}");
+        assert_eq!(m1, mp, "memory at P={par}");
+        assert_bits_eq(&g1, &gp, &format!("grad at P={par}"));
+    }
+}
+
+#[test]
+fn batch_integrate_bitwise_invariant_in_parallelism() {
+    let mut rng = Pcg64::new(5);
+    let (dim, steps, h, batch) = (4, 30, 0.02, 10);
+    let model = NeuralSde::lsde(dim, 8, 1, false, &mut rng);
+    // Auxiliary-state solver exercises init_state + the 2-register layout.
+    let st = ReversibleHeun::new();
+    let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.1; dim]).collect();
+    let paths: Vec<BrownianPath> = sample_paths_par(&mut rng, batch, dim, steps, h, 2);
+    let t1 = batch_integrate_par(&st, &model, 0.0, &y0s, &paths, 1);
+    for par in [2, 4] {
+        let tp = batch_integrate_par(&st, &model, 0.0, &y0s, &paths, par);
+        for (a, b) in t1.iter().zip(tp.iter()) {
+            assert_bits_eq(a, b, &format!("trajectory at P={par}"));
+        }
+    }
+}
+
+#[test]
+fn split_streams_are_schedule_independent() {
+    // sample_paths_par must give sample b the same path regardless of how
+    // many workers drew the batch — and distinct samples distinct noise.
+    let draw = |par: usize| {
+        let mut rng = Pcg64::new(123);
+        sample_paths_par(&mut rng, 8, 2, 12, 0.1, par)
+    };
+    let base = draw(1);
+    for par in [2, 5, 8] {
+        let p = draw(par);
+        for (a, b) in base.iter().zip(p.iter()) {
+            assert_bits_eq(&a.dw, &b.dw, &format!("paths at P={par}"));
+        }
+    }
+    for i in 0..base.len() {
+        for j in i + 1..base.len() {
+            assert_ne!(base[i].dw, base[j].dw, "samples {i},{j} share noise");
+        }
+    }
+}

@@ -1,0 +1,578 @@
+//! The benchmark ledger runner: times the solver-step, expm, batch-grad and
+//! forward/reverse-sweep hot paths on (a) the zero-allocation workspace path
+//! and (b) a live allocate-per-step baseline (`PerStepAlloc` adapters that
+//! reproduce the seed's per-step heap traffic), counts allocations per
+//! operation through the registered counting allocator, and emits
+//! `BENCH_hotpath.json`.
+//!
+//! Usage:
+//!   cargo bench --bench perf_ledger                   # quick mode, print only
+//!   cargo bench --bench perf_ledger -- --full         # more iterations
+//!   cargo bench --bench perf_ledger -- --update       # rewrite BENCH_hotpath.json
+
+use ees::adjoint::{grad_euclidean, AdjointMethod, MseToTargets};
+use ees::bench::ledger::{
+    allocs_per_op, median_ns, Ledger, LedgerEntry, PerStepAlloc, PerStepAllocManifold,
+};
+use ees::lie::{HomogeneousSpace, Sphere, TTorus};
+use ees::linalg::{expm, expm_frechet, expm_frechet_into, expm_into};
+use ees::memory::StepWorkspace;
+use ees::rng::{BrownianPath, Pcg64};
+use ees::solvers::{
+    CfEes, CrouchGrossman, EmbeddedEes25, GeoEulerMaruyama, LowStorageStepper, ManifoldStepper,
+    Mcf, ReversibleHeun, Rkmk, RkStepper, Stepper,
+};
+use ees::vf::{ClosureManifoldField, DiffVectorField, VectorField};
+
+#[global_allocator]
+static ALLOC: ees::bench::CountingAlloc = ees::bench::CountingAlloc;
+
+/// Allocation-free analytic SDE field (dim 16): the solver machinery, not
+/// the field, dominates — which is exactly what the ledger tracks.
+struct Analytic16;
+
+impl VectorField for Analytic16 {
+    fn dim(&self) -> usize {
+        16
+    }
+    fn noise_dim(&self) -> usize {
+        16
+    }
+    fn combined(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        for i in 0..16 {
+            let yn = y[(i + 1) % 16];
+            out[i] = (-0.5 * y[i] + 0.25 * yn * yn.tanh()) * h + 0.2 * y[i] * dw[i];
+        }
+    }
+}
+
+impl DiffVectorField for Analytic16 {
+    fn num_params(&self) -> usize {
+        0
+    }
+    fn vjp(
+        &self,
+        _t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        _d_theta: &mut [f64],
+    ) {
+        for i in 0..16 {
+            d_y[i] += cot[i] * (-0.5 * h + 0.2 * dw[i]);
+            let t = y[i].tanh();
+            let prev = (i + 15) % 16;
+            d_y[i] += cot[prev] * 0.25 * (t + y[i] * (1.0 - t * t)) * h;
+        }
+    }
+}
+
+fn sphere_field(n: usize) -> ClosureManifoldField<
+    impl Fn(f64, &[f64], f64, &[f64], &mut [f64]) + Send + Sync,
+> {
+    let g = n * (n - 1) / 2;
+    ClosureManifoldField {
+        point_dim: n,
+        algebra_dim: g,
+        noise_dim: 2,
+        gen: move |_t, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]| {
+            let mut k = 0;
+            for i in 0..n {
+                for j in i + 1..n {
+                    out[k] = (0.05 * y[i] - 0.03 * y[j]) * h + 0.02 * y[j] * dw[0]
+                        - 0.01 * y[i] * dw[1];
+                    k += 1;
+                }
+            }
+        },
+    }
+}
+
+fn torus_field(n: usize) -> ClosureManifoldField<
+    impl Fn(f64, &[f64], f64, &[f64], &mut [f64]) + Send + Sync,
+> {
+    ClosureManifoldField {
+        point_dim: 2 * n,
+        algebra_dim: 2 * n,
+        noise_dim: n,
+        gen: move |_t, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]| {
+            for i in 0..n {
+                out[i] = y[n + i] * h;
+                out[n + i] = (y[i].sin() - 0.1 * y[n + i]) * h + 0.3 * dw[i];
+            }
+        },
+    }
+}
+
+/// Time `steps` Euclidean steps per op on both arms.
+fn euclidean_step_entry(
+    name: &str,
+    ws_st: &dyn Stepper,
+    base_st: &dyn Stepper,
+    vf: &dyn VectorField,
+    path: &BrownianPath,
+    steps: usize,
+    warmup: usize,
+    iters: usize,
+) -> LedgerEntry {
+    let y0 = vec![0.1; vf.dim()];
+    let run = |st: &dyn Stepper, ws: &mut StepWorkspace| {
+        let mut state = st.init_state(vf, 0.0, &y0);
+        for n in 0..steps {
+            st.step_ws(vf, n as f64 * path.h, path.h, path.increment(n), &mut state, ws);
+        }
+        std::hint::black_box(&state);
+    };
+    let mut ws = StepWorkspace::new();
+    let median = median_ns(warmup, iters, || run(ws_st, &mut ws)) / steps as f64;
+    let allocs = {
+        // One trajectory's worth of steps, after warm-up; init_state's own
+        // allocation is excluded by measuring pure stepping.
+        let mut state = ws_st.init_state(vf, 0.0, &y0);
+        ws_st.step_ws(vf, 0.0, path.h, path.increment(0), &mut state, &mut ws);
+        allocs_per_op(steps, || {
+            for n in 0..steps {
+                ws_st.step_ws(vf, n as f64 * path.h, path.h, path.increment(n), &mut state, &mut ws);
+            }
+        })
+    };
+    let mut ws_b = StepWorkspace::new();
+    let base_median = median_ns(warmup, iters, || run(base_st, &mut ws_b)) / steps as f64;
+    let base_allocs = {
+        let mut state = base_st.init_state(vf, 0.0, &y0);
+        allocs_per_op(steps, || {
+            for n in 0..steps {
+                base_st.step_ws(
+                    vf,
+                    n as f64 * path.h,
+                    path.h,
+                    path.increment(n),
+                    &mut state,
+                    &mut ws_b,
+                );
+            }
+        })
+    };
+    LedgerEntry {
+        name: name.into(),
+        median_ns: median,
+        allocs_per_op: allocs,
+        baseline_median_ns: base_median,
+        baseline_allocs_per_op: base_allocs,
+    }
+}
+
+/// Time `steps` manifold steps per op on both arms.
+fn manifold_step_entry(
+    name: &str,
+    ws_st: &dyn ManifoldStepper,
+    base_st: &dyn ManifoldStepper,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn ees::vf::ManifoldVectorField,
+    y0: &[f64],
+    path: &BrownianPath,
+    steps: usize,
+    warmup: usize,
+    iters: usize,
+) -> LedgerEntry {
+    let run = |st: &dyn ManifoldStepper, ws: &mut StepWorkspace| {
+        let mut y = ws.take_copy(y0);
+        for n in 0..steps {
+            st.step_ws(sp, vf, n as f64 * path.h, path.h, path.increment(n), &mut y, ws);
+        }
+        std::hint::black_box(&y);
+        ws.put(y);
+    };
+    let mut ws = StepWorkspace::new();
+    let median = median_ns(warmup, iters, || run(ws_st, &mut ws)) / steps as f64;
+    let allocs = {
+        let mut y = ws.take_copy(y0);
+        ws_st.step_ws(sp, vf, 0.0, path.h, path.increment(0), &mut y, &mut ws);
+        let a = allocs_per_op(steps, || {
+            for n in 0..steps {
+                ws_st.step_ws(sp, vf, n as f64 * path.h, path.h, path.increment(n), &mut y, &mut ws);
+            }
+        });
+        ws.put(y);
+        a
+    };
+    let mut ws_b = StepWorkspace::new();
+    let base_median = median_ns(warmup, iters, || run(base_st, &mut ws_b)) / steps as f64;
+    let base_allocs = {
+        let mut y = ws_b.take_copy(y0);
+        let a = allocs_per_op(steps, || {
+            for n in 0..steps {
+                base_st.step_ws(
+                    sp,
+                    vf,
+                    n as f64 * path.h,
+                    path.h,
+                    path.increment(n),
+                    &mut y,
+                    &mut ws_b,
+                );
+            }
+        });
+        ws_b.put(y);
+        a
+    };
+    LedgerEntry {
+        name: name.into(),
+        median_ns: median,
+        allocs_per_op: allocs,
+        baseline_median_ns: base_median,
+        baseline_allocs_per_op: base_allocs,
+    }
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let update = std::env::args().any(|a| a == "--update");
+    let iters = if full { 60 } else { 15 };
+    let warmup = if full { 10 } else { 3 };
+    let mut ledger = Ledger::new(if full { "full" } else { "quick" });
+
+    let mut rng = Pcg64::new(7);
+    let steps = 64;
+    let h = 0.01;
+    let path16 = BrownianPath::sample(&mut rng, 16, steps, h);
+
+    // --- solver-step microbenches: all nine solver families --------------
+    let vf = Analytic16;
+    ledger.push(euclidean_step_entry(
+        "step/rk_ees25/d16",
+        &RkStepper::ees25(),
+        &PerStepAlloc(RkStepper::ees25()),
+        &vf,
+        &path16,
+        steps,
+        warmup,
+        iters,
+    ));
+    ledger.push(euclidean_step_entry(
+        "step/lowstorage_ees25/d16",
+        &LowStorageStepper::ees25(),
+        &PerStepAlloc(LowStorageStepper::ees25()),
+        &vf,
+        &path16,
+        steps,
+        warmup,
+        iters,
+    ));
+    ledger.push(euclidean_step_entry(
+        "step/reversible_heun/d16",
+        &ReversibleHeun::new(),
+        &PerStepAlloc(ReversibleHeun::new()),
+        &vf,
+        &path16,
+        steps,
+        warmup,
+        iters,
+    ));
+    ledger.push(euclidean_step_entry(
+        "step/mcf_midpoint/d16",
+        &Mcf::midpoint(),
+        &PerStepAlloc(Mcf::midpoint()),
+        &vf,
+        &path16,
+        steps,
+        warmup,
+        iters,
+    ));
+    // Embedded (adaptive) scheme: time step_embedded on both arms.
+    {
+        let sch = EmbeddedEes25::new();
+        let dw = vec![0.0; 16];
+        let mut ws = StepWorkspace::new();
+        let median = median_ns(warmup, iters, || {
+            let mut y = vec![0.1; 16];
+            for n in 0..steps {
+                sch.step_embedded_ws(&vf, n as f64 * h, h, &dw, &mut y, &mut ws);
+            }
+            std::hint::black_box(&y);
+        }) / steps as f64;
+        let allocs = {
+            let mut y = vec![0.1; 16];
+            sch.step_embedded_ws(&vf, 0.0, h, &dw, &mut y, &mut ws);
+            allocs_per_op(steps, || {
+                for n in 0..steps {
+                    sch.step_embedded_ws(&vf, n as f64 * h, h, &dw, &mut y, &mut ws);
+                }
+            })
+        };
+        let base_median = median_ns(warmup, iters, || {
+            let mut y = vec![0.1; 16];
+            for n in 0..steps {
+                sch.step_embedded(&vf, n as f64 * h, h, &dw, &mut y);
+            }
+            std::hint::black_box(&y);
+        }) / steps as f64;
+        let base_allocs = {
+            let mut y = vec![0.1; 16];
+            allocs_per_op(steps, || {
+                for n in 0..steps {
+                    sch.step_embedded(&vf, n as f64 * h, h, &dw, &mut y);
+                }
+            })
+        };
+        ledger.push(LedgerEntry {
+            name: "step/embedded_ees25/d16".into(),
+            median_ns: median,
+            allocs_per_op: allocs,
+            baseline_median_ns: base_median,
+            baseline_allocs_per_op: base_allocs,
+        });
+    }
+
+    // Manifold families. CF-EES on S^15 is the acceptance microbench: the
+    // step cost is dominated by expm/Fréchet panels, where the blocked
+    // kernels and workspace reuse land.
+    {
+        let n = 16;
+        let sp = Sphere::new(n);
+        let svf = sphere_field(n);
+        let mut y0 = vec![0.0; n];
+        y0[0] = 1.0;
+        let mpath = BrownianPath::sample(&mut rng, 2, steps, h);
+        ledger.push(manifold_step_entry(
+            "step/cfees25/sphere16",
+            &CfEes::ees25(),
+            &PerStepAllocManifold(CfEes::ees25()),
+            &sp,
+            &svf,
+            &y0,
+            &mpath,
+            steps,
+            warmup.min(3),
+            iters.min(20),
+        ));
+        ledger.push(manifold_step_entry(
+            "step/rkmk_srkmk3/sphere16",
+            &Rkmk::srkmk3(),
+            &PerStepAllocManifold(Rkmk::srkmk3()),
+            &sp,
+            &svf,
+            &y0,
+            &mpath,
+            steps,
+            warmup.min(3),
+            iters.min(20),
+        ));
+        ledger.push(manifold_step_entry(
+            "step/cg3/sphere16",
+            &CrouchGrossman::cg3(),
+            &PerStepAllocManifold(CrouchGrossman::cg3()),
+            &sp,
+            &svf,
+            &y0,
+            &mpath,
+            steps,
+            warmup.min(3),
+            iters.min(20),
+        ));
+        ledger.push(manifold_step_entry(
+            "step/geo_em/sphere16",
+            &GeoEulerMaruyama::new(),
+            &PerStepAllocManifold(GeoEulerMaruyama::new()),
+            &sp,
+            &svf,
+            &y0,
+            &mpath,
+            steps,
+            warmup.min(3),
+            iters.min(20),
+        ));
+    }
+    {
+        let n_osc = 64;
+        let sp = TTorus::new(n_osc);
+        let tvf = torus_field(n_osc);
+        let y0 = vec![0.1; 2 * n_osc];
+        let tpath = BrownianPath::sample(&mut rng, n_osc, steps, h);
+        ledger.push(manifold_step_entry(
+            "step/cfees25/ttorus64",
+            &CfEes::ees25(),
+            &PerStepAllocManifold(CfEes::ees25()),
+            &sp,
+            &tvf,
+            &y0,
+            &tpath,
+            steps,
+            warmup,
+            iters,
+        ));
+    }
+
+    // --- expm kernel benches ---------------------------------------------
+    for n in [4usize, 8, 16] {
+        let mut a = vec![0.0; n * n];
+        let mut r = Pcg64::new(100 + n as u64);
+        r.fill_normal(&mut a);
+        for x in a.iter_mut() {
+            *x *= 0.3;
+        }
+        let mut ws = StepWorkspace::new();
+        let mut out = vec![0.0; n * n];
+        let reps = 32;
+        let median = median_ns(warmup, iters, || {
+            for _ in 0..reps {
+                expm_into(&a, &mut out, n, &mut ws);
+                std::hint::black_box(&out);
+            }
+        }) / reps as f64;
+        let allocs = allocs_per_op(reps, || {
+            for _ in 0..reps {
+                expm_into(&a, &mut out, n, &mut ws);
+            }
+        });
+        let base_median = median_ns(warmup, iters, || {
+            for _ in 0..reps {
+                std::hint::black_box(expm(&a, n));
+            }
+        }) / reps as f64;
+        let base_allocs = allocs_per_op(reps, || {
+            for _ in 0..reps {
+                std::hint::black_box(expm(&a, n));
+            }
+        });
+        ledger.push(LedgerEntry {
+            name: format!("expm/{n}"),
+            median_ns: median,
+            allocs_per_op: allocs,
+            baseline_median_ns: base_median,
+            baseline_allocs_per_op: base_allocs,
+        });
+    }
+    {
+        let n = 8;
+        let mut r = Pcg64::new(42);
+        let mut a = vec![0.0; n * n];
+        let mut e = vec![0.0; n * n];
+        r.fill_normal(&mut a);
+        r.fill_normal(&mut e);
+        for x in a.iter_mut() {
+            *x *= 0.2;
+        }
+        let mut ws = StepWorkspace::new();
+        let (mut ea, mut l) = (vec![0.0; n * n], vec![0.0; n * n]);
+        let reps = 16;
+        let median = median_ns(warmup, iters, || {
+            for _ in 0..reps {
+                expm_frechet_into(&a, &e, &mut ea, &mut l, n, &mut ws);
+                std::hint::black_box(&l);
+            }
+        }) / reps as f64;
+        let allocs = allocs_per_op(reps, || {
+            for _ in 0..reps {
+                expm_frechet_into(&a, &e, &mut ea, &mut l, n, &mut ws);
+            }
+        });
+        let base_median = median_ns(warmup, iters, || {
+            for _ in 0..reps {
+                std::hint::black_box(expm_frechet(&a, &e, n));
+            }
+        }) / reps as f64;
+        let base_allocs = allocs_per_op(reps, || {
+            for _ in 0..reps {
+                std::hint::black_box(expm_frechet(&a, &e, n));
+            }
+        });
+        ledger.push(LedgerEntry {
+            name: format!("expm_frechet/{n}"),
+            median_ns: median,
+            allocs_per_op: allocs,
+            baseline_median_ns: base_median,
+            baseline_allocs_per_op: base_allocs,
+        });
+    }
+
+    // --- forward+reverse sweep and batch-grad ----------------------------
+    {
+        let dim = 16;
+        let sweep_steps = 50;
+        let path = BrownianPath::sample(&mut rng, dim, sweep_steps, 0.02);
+        let obs = vec![sweep_steps];
+        let loss = MseToTargets {
+            targets: vec![0.0; dim],
+        };
+        let st = LowStorageStepper::ees25();
+        let base = PerStepAlloc(LowStorageStepper::ees25());
+        let y0 = vec![0.1; dim];
+        let run = |stepper: &dyn Stepper| {
+            let g = grad_euclidean(
+                stepper,
+                AdjointMethod::Reversible,
+                &vf,
+                0.0,
+                &y0,
+                &path,
+                &obs,
+                &loss,
+            );
+            std::hint::black_box(&g);
+        };
+        let median = median_ns(warmup, iters, || run(&st)) / sweep_steps as f64;
+        let allocs = allocs_per_op(sweep_steps, || run(&st));
+        let base_median = median_ns(warmup, iters, || run(&base)) / sweep_steps as f64;
+        let base_allocs = allocs_per_op(sweep_steps, || run(&base));
+        ledger.push(LedgerEntry {
+            name: "sweep/reversible_fwd_bwd/d16_s50".into(),
+            median_ns: median,
+            allocs_per_op: allocs,
+            baseline_median_ns: base_median,
+            baseline_allocs_per_op: base_allocs,
+        });
+    }
+    {
+        use ees::coordinator::{batch_grad_euclidean_par, sample_paths_par};
+        use ees::losses::MomentMatch;
+        let dim = 16;
+        let (batch, bsteps) = (16, 50);
+        let mut brng = Pcg64::new(11);
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.1; dim]).collect();
+        let paths = sample_paths_par(&mut brng, batch, dim, bsteps, 0.02, 1);
+        let obs = vec![bsteps];
+        let loss = MomentMatch {
+            target_mean: vec![0.0; dim],
+            target_m2: vec![1.0; dim],
+        };
+        let st = LowStorageStepper::ees25();
+        let base = PerStepAlloc(LowStorageStepper::ees25());
+        let ops = batch * bsteps;
+        let run = |stepper: &dyn Stepper| {
+            let out = batch_grad_euclidean_par(
+                stepper,
+                AdjointMethod::Reversible,
+                &vf,
+                &y0s,
+                &paths,
+                &obs,
+                &loss,
+                1,
+            );
+            std::hint::black_box(&out);
+        };
+        let median = median_ns(warmup, iters, || run(&st)) / ops as f64;
+        let allocs = allocs_per_op(ops, || run(&st));
+        let base_median = median_ns(warmup, iters, || run(&base)) / ops as f64;
+        let base_allocs = allocs_per_op(ops, || run(&base));
+        ledger.push(LedgerEntry {
+            name: "batch_grad/reversible_ees25/b16_s50_d16".into(),
+            median_ns: median,
+            allocs_per_op: allocs,
+            baseline_median_ns: base_median,
+            baseline_allocs_per_op: base_allocs,
+        });
+    }
+
+    println!("{}", ledger.render_table());
+    let json = ledger.to_json();
+    if update {
+        std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+        println!("wrote BENCH_hotpath.json");
+    } else {
+        println!("{json}");
+    }
+}

@@ -17,7 +17,7 @@
 //! memory curves are measured, not asserted.
 
 use crate::lie::HomogeneousSpace;
-use crate::memory::{MemMeter, MeteredTape};
+use crate::memory::{MemMeter, MeteredTape, StepWorkspace};
 use crate::rng::BrownianPath;
 use crate::solvers::{ManifoldStepper, Stepper};
 use crate::vf::{DiffManifoldVectorField, DiffVectorField};
@@ -125,6 +125,9 @@ pub fn grad_euclidean(
     let mut state = stepper.init_state(vf, t0, y0);
     let mut tape = MeteredTape::new(); // Full: every state; Recursive: checkpoints.
     let mut obs_states = vec![0.0; obs.len() * dim];
+    // One scratch arena serves the whole forward+reverse trajectory: after
+    // the first step warms it, the sweep performs zero heap allocations.
+    let mut ws = StepWorkspace::new();
 
     // ---- forward ----
     let mut obs_i = 0;
@@ -133,7 +136,7 @@ pub fn grad_euclidean(
     }
     for n in 0..steps {
         let t = t0 + n as f64 * h;
-        stepper.step(vf, t, h, path.increment(n), &mut state);
+        stepper.step_ws(vf, t, h, path.increment(n), &mut state, &mut ws);
         match method {
             AdjointMethod::Full => tape.push(&state, &mut meter),
             AdjointMethod::Recursive => {
@@ -171,11 +174,13 @@ pub fn grad_euclidean(
         let dw = path.increment(n);
         match method {
             AdjointMethod::Full => {
-                stepper.backprop_step(vf, t, h, dw, tape.get(n), &mut lambda, &mut d_theta);
+                stepper.backprop_step_ws(
+                    vf, t, h, dw, tape.get(n), &mut lambda, &mut d_theta, &mut ws,
+                );
             }
             AdjointMethod::Reversible => {
-                stepper.step_back(vf, t, h, dw, &mut state);
-                stepper.backprop_step(vf, t, h, dw, &state, &mut lambda, &mut d_theta);
+                stepper.step_back_ws(vf, t, h, dw, &mut state, &mut ws);
+                stepper.backprop_step_ws(vf, t, h, dw, &state, &mut lambda, &mut d_theta, &mut ws);
             }
             AdjointMethod::Recursive => {
                 if seg_buf.is_empty() {
@@ -187,12 +192,12 @@ pub fn grad_euclidean(
                     seg_buf.push(&s, &mut meter);
                     for m in seg_start..n {
                         let tm = t0 + m as f64 * h;
-                        stepper.step(vf, tm, h, path.increment(m), &mut s);
+                        stepper.step_ws(vf, tm, h, path.increment(m), &mut s, &mut ws);
                         seg_buf.push(&s, &mut meter);
                     }
                 }
                 let prev = seg_buf.pop(&mut meter).expect("segment buffer underflow");
-                stepper.backprop_step(vf, t, h, dw, &prev, &mut lambda, &mut d_theta);
+                stepper.backprop_step_ws(vf, t, h, dw, &prev, &mut lambda, &mut d_theta, &mut ws);
             }
         }
     }
@@ -245,13 +250,14 @@ pub fn grad_manifold(
     let mut y = y0.to_vec();
     let mut tape = MeteredTape::new();
     let mut obs_states = vec![0.0; obs.len() * dim];
+    let mut ws = StepWorkspace::new();
     let mut obs_i = 0;
     if method != AdjointMethod::Reversible {
         tape.push(&y, &mut meter);
     }
     for n in 0..steps {
         let t = t0 + n as f64 * h;
-        stepper.step(sp, vf, t, h, path.increment(n), &mut y);
+        stepper.step_ws(sp, vf, t, h, path.increment(n), &mut y, &mut ws);
         match method {
             AdjointMethod::Full => tape.push(&y, &mut meter),
             AdjointMethod::Recursive => {
@@ -285,11 +291,15 @@ pub fn grad_manifold(
         let dw = path.increment(n);
         match method {
             AdjointMethod::Full => {
-                stepper.backprop_step(sp, vf, t, h, dw, tape.get(n), &mut lambda, &mut d_theta);
+                stepper.backprop_step_ws(
+                    sp, vf, t, h, dw, tape.get(n), &mut lambda, &mut d_theta, &mut ws,
+                );
             }
             AdjointMethod::Reversible => {
-                stepper.step_back(sp, vf, t, h, dw, &mut y);
-                stepper.backprop_step(sp, vf, t, h, dw, &y, &mut lambda, &mut d_theta);
+                stepper.step_back_ws(sp, vf, t, h, dw, &mut y, &mut ws);
+                stepper.backprop_step_ws(
+                    sp, vf, t, h, dw, &y, &mut lambda, &mut d_theta, &mut ws,
+                );
             }
             AdjointMethod::Recursive => {
                 if seg_buf.is_empty() {
@@ -299,12 +309,14 @@ pub fn grad_manifold(
                     seg_buf.push(&s, &mut meter);
                     for m in seg_start..n {
                         let tm = t0 + m as f64 * h;
-                        stepper.step(sp, vf, tm, h, path.increment(m), &mut s);
+                        stepper.step_ws(sp, vf, tm, h, path.increment(m), &mut s, &mut ws);
                         seg_buf.push(&s, &mut meter);
                     }
                 }
                 let prev = seg_buf.pop(&mut meter).expect("segment buffer underflow");
-                stepper.backprop_step(sp, vf, t, h, dw, &prev, &mut lambda, &mut d_theta);
+                stepper.backprop_step_ws(
+                    sp, vf, t, h, dw, &prev, &mut lambda, &mut d_theta, &mut ws,
+                );
             }
         }
     }

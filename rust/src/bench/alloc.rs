@@ -1,0 +1,73 @@
+//! Global allocation counting for the benchmark ledger and the
+//! allocation-regression tests.
+//!
+//! [`CountingAlloc`] wraps the system allocator with relaxed atomic
+//! counters. It only observes anything when a *binary* registers it:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: ees::bench::CountingAlloc = ees::bench::CountingAlloc;
+//! ```
+//!
+//! The ledger bench target and `rust/tests/alloc_regression.rs` both do;
+//! ordinary builds never route through it, so the counters sit at zero and
+//! cost nothing.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// System-allocator wrapper that counts every allocation, reallocation and
+/// free (process-wide, all threads).
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Total allocations (alloc + realloc + alloc_zeroed) observed so far.
+pub fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Total frees observed so far.
+pub fn dealloc_count() -> u64 {
+    DEALLOCS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested so far.
+pub fn alloc_bytes() -> u64 {
+    BYTES.load(Ordering::Relaxed)
+}
+
+/// Allocations performed by `f` (single-threaded measurement: the counters
+/// are process-wide, so keep concurrent work quiet while sampling).
+pub fn count_allocs<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = alloc_count();
+    let out = f();
+    (alloc_count() - before, out)
+}

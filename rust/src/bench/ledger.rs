@@ -1,0 +1,349 @@
+//! The benchmark ledger: a small subsystem that turns the hot-path
+//! microbenches into a tracked artifact (`BENCH_hotpath.json`), so this and
+//! every future perf PR has a before/after trajectory instead of prose
+//! claims.
+//!
+//! Each [`LedgerEntry`] pairs a *workspace* measurement (the zero-allocation
+//! `_ws` hot path) with a *baseline* measurement of the same workload run
+//! through [`PerStepAlloc`]/[`PerStepAllocManifold`], adapters that route
+//! every step through the transient-arena wrapper and thereby reproduce the
+//! seed's allocate-per-step behaviour. Both arms are re-measured on every
+//! run, so the committed JSON regenerates deterministically on any machine
+//! (`cargo bench --bench perf_ledger -- --update`).
+//!
+//! Timings are medians over repeated batches (robust to scheduler noise);
+//! allocation counts come from [`super::alloc`] when the bench binary
+//! registers the counting allocator.
+
+use super::alloc::{alloc_count, count_allocs};
+use crate::lie::HomogeneousSpace;
+use crate::memory::StepWorkspace;
+use crate::solvers::{ManifoldStepper, Stepper, StepperProps};
+use crate::vf::{DiffManifoldVectorField, DiffVectorField, ManifoldVectorField, VectorField};
+use std::time::Instant;
+
+/// One benchmark row: workspace arm vs allocate-per-step baseline arm.
+#[derive(Clone, Debug)]
+pub struct LedgerEntry {
+    /// Stable bench identifier, e.g. `step/cfees25/sphere16`.
+    pub name: String,
+    /// Median ns per operation on the workspace hot path.
+    pub median_ns: f64,
+    /// Heap allocations per operation on the workspace hot path (post
+    /// warm-up; 0 is the contract).
+    pub allocs_per_op: f64,
+    /// Median ns per operation through the allocate-per-step baseline.
+    pub baseline_median_ns: f64,
+    /// Heap allocations per operation through the baseline.
+    pub baseline_allocs_per_op: f64,
+}
+
+impl LedgerEntry {
+    /// Baseline/workspace speedup on medians.
+    pub fn speedup(&self) -> f64 {
+        self.baseline_median_ns / self.median_ns.max(1e-9)
+    }
+}
+
+/// The full ledger emitted as `BENCH_hotpath.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    /// `quick` (CI smoke) or `full`.
+    pub mode: String,
+    /// Where the numbers came from: `measured` for a live `--update` run;
+    /// anything else flags figures that still need a re-measurement.
+    pub provenance: String,
+    /// Whether the binary registered [`super::CountingAlloc`] (alloc
+    /// figures are only meaningful if so).
+    pub counting_allocator: bool,
+    pub entries: Vec<LedgerEntry>,
+}
+
+impl Ledger {
+    pub fn new(mode: &str) -> Self {
+        Self {
+            mode: mode.to_string(),
+            provenance: "measured".to_string(),
+            // Heuristic self-check: warm the detector with a throwaway box.
+            counting_allocator: {
+                let before = alloc_count();
+                let b = std::hint::black_box(Box::new(0u64));
+                drop(b);
+                alloc_count() > before
+            },
+            entries: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, e: LedgerEntry) {
+        self.entries.push(e);
+    }
+
+    /// Render as pretty-printed JSON (hand-rolled: the offline build carries
+    /// no serde — see the dependency policy in `Cargo.toml`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str("  \"schema\": \"ees-bench-ledger-v1\",\n");
+        s.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
+        s.push_str(&format!("  \"provenance\": \"{}\",\n", self.provenance));
+        s.push_str(&format!(
+            "  \"counting_allocator\": {},\n",
+            self.counting_allocator
+        ));
+        s.push_str(
+            "  \"regenerate\": \"cargo bench --bench perf_ledger -- --full --update\",\n",
+        );
+        s.push_str("  \"benches\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str("    {\n");
+            s.push_str(&format!("      \"name\": \"{}\",\n", e.name));
+            s.push_str(&format!("      \"median_ns\": {:.1},\n", e.median_ns));
+            s.push_str(&format!("      \"allocs_per_op\": {:.2},\n", e.allocs_per_op));
+            s.push_str(&format!(
+                "      \"baseline_median_ns\": {:.1},\n",
+                e.baseline_median_ns
+            ));
+            s.push_str(&format!(
+                "      \"baseline_allocs_per_op\": {:.2},\n",
+                e.baseline_allocs_per_op
+            ));
+            s.push_str(&format!("      \"speedup\": {:.2}\n", e.speedup()));
+            s.push_str(if i + 1 == self.entries.len() {
+                "    }\n"
+            } else {
+                "    },\n"
+            });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Fixed-width console table of the entries.
+    pub fn render_table(&self) -> String {
+        let mut t = super::Table::new(&[
+            "bench",
+            "ns/op (ws)",
+            "ns/op (alloc)",
+            "speedup",
+            "allocs/op (ws)",
+        ]);
+        for e in &self.entries {
+            t.row(&[
+                e.name.clone(),
+                format!("{:.0}", e.median_ns),
+                format!("{:.0}", e.baseline_median_ns),
+                format!("{:.2}x", e.speedup()),
+                format!("{:.2}", e.allocs_per_op),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Median wall-clock nanoseconds of one call to `f`, over `iters` timed
+/// calls after `warmup` discarded ones.
+pub fn median_ns<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut ns: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    ns.sort_by(|a, b| a.partial_cmp(b).expect("nan timing"));
+    let mid = ns.len() / 2;
+    if ns.len() % 2 == 1 {
+        ns[mid]
+    } else {
+        0.5 * (ns[mid - 1] + ns[mid])
+    }
+}
+
+/// Allocations per operation of `f` (which performs `ops` operations),
+/// measured once after the caller's warm-up.
+pub fn allocs_per_op<F: FnOnce()>(ops: usize, f: F) -> f64 {
+    let (n, ()) = count_allocs(f);
+    n as f64 / ops.max(1) as f64
+}
+
+/// Adapter reproducing the seed's allocation profile for [`Stepper`]s: every
+/// `_ws` call is routed through the transient-arena wrapper, so each step
+/// pays the per-step heap allocations the workspace refactor removed. This
+/// is the ledger's "before" arm — measured live, so the comparison tracks
+/// the current kernels rather than a stale committed number.
+pub struct PerStepAlloc<S>(pub S);
+
+impl<S: Stepper> Stepper for PerStepAlloc<S> {
+    fn props(&self) -> StepperProps {
+        self.0.props()
+    }
+
+    fn init_state(&self, vf: &dyn VectorField, t0: f64, y0: &[f64]) -> Vec<f64> {
+        self.0.init_state(vf, t0, y0)
+    }
+
+    fn step_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        _ws: &mut StepWorkspace,
+    ) {
+        self.0.step(vf, t, h, dw, state);
+    }
+
+    fn step_back_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        _ws: &mut StepWorkspace,
+    ) {
+        self.0.step_back(vf, t, h, dw, state);
+    }
+
+    fn backprop_step_ws(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        _ws: &mut StepWorkspace,
+    ) {
+        self.0.backprop_step(vf, t, h, dw, state_prev, lambda, d_theta);
+    }
+}
+
+/// [`PerStepAlloc`] for [`ManifoldStepper`]s.
+pub struct PerStepAllocManifold<S>(pub S);
+
+impl<S: ManifoldStepper> ManifoldStepper for PerStepAllocManifold<S> {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+    fn evals_per_step(&self) -> usize {
+        self.0.evals_per_step()
+    }
+    fn exps_per_step(&self) -> usize {
+        self.0.exps_per_step()
+    }
+    fn reversible(&self) -> bool {
+        self.0.reversible()
+    }
+
+    fn step_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        _ws: &mut StepWorkspace,
+    ) {
+        self.0.step(sp, vf, t, h, dw, y);
+    }
+
+    fn step_back_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        _ws: &mut StepWorkspace,
+    ) {
+        self.0.step_back(sp, vf, t, h, dw, y);
+    }
+
+    fn backprop_step_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn DiffManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        _ws: &mut StepWorkspace,
+    ) {
+        self.0
+            .backprop_step(sp, vf, t, h, dw, y_prev, lambda, d_theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_order_statistic() {
+        let mut xs = vec![5.0, 1.0, 3.0];
+        let mut i = 0;
+        let m = median_ns(0, 3, || {
+            // Timing noise makes exact values untestable; just exercise it.
+            std::hint::black_box(xs[i % 3]);
+            i += 1;
+        });
+        assert!(m >= 0.0);
+        xs.push(0.0);
+    }
+
+    #[test]
+    fn ledger_json_shape() {
+        let mut l = Ledger::new("quick");
+        l.push(LedgerEntry {
+            name: "step/demo".into(),
+            median_ns: 100.0,
+            allocs_per_op: 0.0,
+            baseline_median_ns: 250.0,
+            baseline_allocs_per_op: 7.0,
+        });
+        let j = l.to_json();
+        assert!(j.contains("\"schema\": \"ees-bench-ledger-v1\""));
+        assert!(j.contains("\"name\": \"step/demo\""));
+        assert!(j.contains("\"speedup\": 2.50"));
+        assert!(l.render_table().contains("2.50x"));
+    }
+
+    #[test]
+    fn per_step_alloc_is_numerically_identical() {
+        use crate::solvers::LowStorageStepper;
+        use crate::vf::ClosureField;
+        let vf = ClosureField {
+            dim: 2,
+            noise_dim: 1,
+            drift: |_t, y: &[f64], out: &mut [f64]| {
+                out[0] = -y[0] + y[1];
+                out[1] = 0.3 * y[0];
+            },
+            diffusion: |_t, y: &[f64], dw: &[f64], out: &mut [f64]| {
+                out[0] = 0.1 * dw[0];
+                out[1] = 0.2 * y[1] * dw[0];
+            },
+        };
+        let st = LowStorageStepper::ees25();
+        let wrapped = PerStepAlloc(LowStorageStepper::ees25());
+        let mut a = vec![0.4, -0.2];
+        let mut b = a.clone();
+        let mut ws = StepWorkspace::new();
+        for n in 0..20 {
+            st.step_ws(&vf, n as f64 * 0.05, 0.05, &[0.03], &mut a, &mut ws);
+            wrapped.step_ws(&vf, n as f64 * 0.05, 0.05, &[0.03], &mut b, &mut ws);
+        }
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

@@ -1,6 +1,13 @@
 //! In-crate benchmark harness (criterion is not available in the offline
 //! build). Provides warmup + repeated timing with mean/std/min reporting and
-//! simple table formatting used by every `benches/*.rs` target.
+//! simple table formatting used by every `benches/*.rs` target, plus the
+//! [`ledger`] subsystem that persists hot-path medians and allocation counts
+//! to `BENCH_hotpath.json` and the [`alloc`] counting allocator behind it.
+
+pub mod alloc;
+pub mod ledger;
+
+pub use alloc::CountingAlloc;
 
 use std::time::Instant;
 

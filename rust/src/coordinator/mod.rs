@@ -47,7 +47,7 @@ pub use parallel::parallel_map;
 use crate::adjoint::AdjointMethod;
 use crate::lie::HomogeneousSpace;
 use crate::losses::BatchLoss;
-use crate::memory::{MemMeter, MeteredTape};
+use crate::memory::{MemMeter, MeteredTape, WorkspacePool};
 use crate::nn::optim::{clip_global_norm, Optimizer};
 use crate::rng::{BrownianPath, Pcg64};
 use crate::solvers::{ManifoldStepper, Stepper};
@@ -180,8 +180,15 @@ pub fn batch_integrate_par(
     paths: &[BrownianPath],
     parallelism: usize,
 ) -> Vec<Vec<f64>> {
+    // One StepWorkspace per concurrent worker, checked out of a shared
+    // pool: the per-step scratch stays warm across every sample a worker
+    // integrates.
+    let ws_pool = WorkspacePool::new();
     parallel_map(parallelism, y0s.len(), |b| {
-        crate::solvers::integrate(stepper, vf, t0, &y0s[b], &paths[b])
+        let mut ws = ws_pool.take();
+        let traj = crate::solvers::integrate_ws(stepper, vf, t0, &y0s[b], &paths[b], &mut ws);
+        ws_pool.put(ws);
+        traj
     })
 }
 
@@ -202,7 +209,6 @@ pub fn batch_integrate(
 ///
 /// Outputs are bitwise-identical for every `parallelism` (see the module
 /// docs for the determinism argument).
-#[allow(clippy::too_many_arguments)]
 pub fn batch_grad_euclidean_par(
     stepper: &dyn Stepper,
     method: AdjointMethod,
@@ -225,7 +231,11 @@ pub fn batch_grad_euclidean_par(
     let base_mem = 2 * state_size + batch * n_obs * dim + vf.num_params();
 
     // ---- forward: all samples independent -------------------------------
+    // Per-worker solver scratch, shared between the forward and backward
+    // fan-outs so the warm buffers survive the loss barrier.
+    let ws_pool = WorkspacePool::new();
     let fwd: Vec<ForwardOut> = parallel_map(parallelism, batch, |b| {
+        let mut ws = ws_pool.take();
         let mut meter = MemMeter::new();
         let mut tape = MeteredTape::new();
         let mut obs_states = vec![0.0; n_obs * dim];
@@ -236,7 +246,7 @@ pub fn batch_grad_euclidean_par(
         let mut oi = 0;
         for n in 0..steps {
             let t = n as f64 * h;
-            stepper.step(vf, t, h, paths[b].increment(n), &mut state);
+            stepper.step_ws(vf, t, h, paths[b].increment(n), &mut state, &mut ws);
             match method {
                 AdjointMethod::Full => tape.push(&state, &mut meter),
                 AdjointMethod::Recursive => {
@@ -251,6 +261,7 @@ pub fn batch_grad_euclidean_par(
                 oi += 1;
             }
         }
+        ws_pool.put(ws);
         ForwardOut {
             final_state: state,
             tape,
@@ -269,6 +280,7 @@ pub fn batch_grad_euclidean_par(
     let cots_ref = &cots;
     let per_sample: Vec<(Vec<f64>, usize)> = parallel_map(parallelism, batch, |b| {
         let fw = &fwd_ref[b];
+        let mut ws = ws_pool.take();
         let mut d_theta = vec![0.0; vf.num_params()];
         let mut meter = MemMeter::new(); // backward transients only
         let mut lambda = vec![0.0; state_size];
@@ -286,11 +298,22 @@ pub fn batch_grad_euclidean_par(
             let dw = paths[b].increment(n);
             match method {
                 AdjointMethod::Full => {
-                    stepper.backprop_step(vf, t, h, dw, fw.tape.get(n), &mut lambda, &mut d_theta);
+                    stepper.backprop_step_ws(
+                        vf,
+                        t,
+                        h,
+                        dw,
+                        fw.tape.get(n),
+                        &mut lambda,
+                        &mut d_theta,
+                        &mut ws,
+                    );
                 }
                 AdjointMethod::Reversible => {
-                    stepper.step_back(vf, t, h, dw, &mut state);
-                    stepper.backprop_step(vf, t, h, dw, &state, &mut lambda, &mut d_theta);
+                    stepper.step_back_ws(vf, t, h, dw, &mut state, &mut ws);
+                    stepper.backprop_step_ws(
+                        vf, t, h, dw, &state, &mut lambda, &mut d_theta, &mut ws,
+                    );
                 }
                 AdjointMethod::Recursive => {
                     if seg_buf.is_empty() {
@@ -299,15 +322,25 @@ pub fn batch_grad_euclidean_par(
                         let mut s = fw.tape.get(ckpt_idx).to_vec();
                         seg_buf.push(&s, &mut meter);
                         for m in seg_start..n {
-                            stepper.step(vf, m as f64 * h, h, paths[b].increment(m), &mut s);
+                            stepper.step_ws(
+                                vf,
+                                m as f64 * h,
+                                h,
+                                paths[b].increment(m),
+                                &mut s,
+                                &mut ws,
+                            );
                             seg_buf.push(&s, &mut meter);
                         }
                     }
                     let prev = seg_buf.pop(&mut meter).expect("segment buffer underflow");
-                    stepper.backprop_step(vf, t, h, dw, &prev, &mut lambda, &mut d_theta);
+                    stepper.backprop_step_ws(
+                        vf, t, h, dw, &prev, &mut lambda, &mut d_theta, &mut ws,
+                    );
                 }
             }
         }
+        ws_pool.put(ws);
         (d_theta, meter.peak_f64s())
     });
 
@@ -316,7 +349,6 @@ pub fn batch_grad_euclidean_par(
 }
 
 /// [`batch_grad_euclidean_par`] at the configured default parallelism.
-#[allow(clippy::too_many_arguments)]
 pub fn batch_grad_euclidean(
     stepper: &dyn Stepper,
     method: AdjointMethod,
@@ -342,7 +374,6 @@ pub fn batch_grad_euclidean(
 /// fanned out over `parallelism` workers.
 /// Returns (loss, d_theta, peak adjoint memory); outputs are
 /// bitwise-identical for every `parallelism`.
-#[allow(clippy::too_many_arguments)]
 pub fn batch_grad_manifold_par(
     stepper: &dyn ManifoldStepper,
     method: AdjointMethod,
@@ -362,7 +393,9 @@ pub fn batch_grad_manifold_par(
     let seg = (steps as f64).sqrt().ceil() as usize;
     let base_mem = 2 * dim + 2 * sp.algebra_dim() + batch * n_obs * dim + vf.num_params();
 
+    let ws_pool = WorkspacePool::new();
     let fwd: Vec<ForwardOut> = parallel_map(parallelism, batch, |b| {
+        let mut ws = ws_pool.take();
         let mut meter = MemMeter::new();
         let mut tape = MeteredTape::new();
         let mut obs_states = vec![0.0; n_obs * dim];
@@ -372,7 +405,7 @@ pub fn batch_grad_manifold_par(
         }
         let mut oi = 0;
         for n in 0..steps {
-            stepper.step(sp, vf, n as f64 * h, h, paths[b].increment(n), &mut y);
+            stepper.step_ws(sp, vf, n as f64 * h, h, paths[b].increment(n), &mut y, &mut ws);
             match method {
                 AdjointMethod::Full => tape.push(&y, &mut meter),
                 AdjointMethod::Recursive => {
@@ -387,6 +420,7 @@ pub fn batch_grad_manifold_par(
                 oi += 1;
             }
         }
+        ws_pool.put(ws);
         ForwardOut {
             final_state: y,
             tape,
@@ -403,6 +437,7 @@ pub fn batch_grad_manifold_par(
     let cots_ref = &cots;
     let per_sample: Vec<(Vec<f64>, usize)> = parallel_map(parallelism, batch, |b| {
         let fw = &fwd_ref[b];
+        let mut ws = ws_pool.take();
         let mut d_theta = vec![0.0; vf.num_params()];
         let mut meter = MemMeter::new();
         let mut lambda = vec![0.0; dim];
@@ -420,7 +455,7 @@ pub fn batch_grad_manifold_par(
             let dw = paths[b].increment(n);
             match method {
                 AdjointMethod::Full => {
-                    stepper.backprop_step(
+                    stepper.backprop_step_ws(
                         sp,
                         vf,
                         t,
@@ -429,11 +464,14 @@ pub fn batch_grad_manifold_par(
                         fw.tape.get(n),
                         &mut lambda,
                         &mut d_theta,
+                        &mut ws,
                     );
                 }
                 AdjointMethod::Reversible => {
-                    stepper.step_back(sp, vf, t, h, dw, &mut y);
-                    stepper.backprop_step(sp, vf, t, h, dw, &y, &mut lambda, &mut d_theta);
+                    stepper.step_back_ws(sp, vf, t, h, dw, &mut y, &mut ws);
+                    stepper.backprop_step_ws(
+                        sp, vf, t, h, dw, &y, &mut lambda, &mut d_theta, &mut ws,
+                    );
                 }
                 AdjointMethod::Recursive => {
                     if seg_buf.is_empty() {
@@ -442,15 +480,26 @@ pub fn batch_grad_manifold_par(
                         let mut s = fw.tape.get(ckpt_idx).to_vec();
                         seg_buf.push(&s, &mut meter);
                         for m in seg_start..n {
-                            stepper.step(sp, vf, m as f64 * h, h, paths[b].increment(m), &mut s);
+                            stepper.step_ws(
+                                sp,
+                                vf,
+                                m as f64 * h,
+                                h,
+                                paths[b].increment(m),
+                                &mut s,
+                                &mut ws,
+                            );
                             seg_buf.push(&s, &mut meter);
                         }
                     }
                     let prev = seg_buf.pop(&mut meter).expect("segment buffer underflow");
-                    stepper.backprop_step(sp, vf, t, h, dw, &prev, &mut lambda, &mut d_theta);
+                    stepper.backprop_step_ws(
+                        sp, vf, t, h, dw, &prev, &mut lambda, &mut d_theta, &mut ws,
+                    );
                 }
             }
         }
+        ws_pool.put(ws);
         (d_theta, meter.peak_f64s())
     });
 
@@ -459,7 +508,6 @@ pub fn batch_grad_manifold_par(
 }
 
 /// [`batch_grad_manifold_par`] at the configured default parallelism.
-#[allow(clippy::too_many_arguments)]
 pub fn batch_grad_manifold(
     stepper: &dyn ManifoldStepper,
     method: AdjointMethod,
@@ -486,7 +534,6 @@ pub fn batch_grad_manifold(
 /// Generic Euclidean training loop: params live in `get/set` closures so the
 /// coordinator stays model-agnostic. Each epoch's batch solve runs on the
 /// parallel engine at the configured default parallelism.
-#[allow(clippy::too_many_arguments)]
 pub fn train_euclidean<M, FGet, FSet>(
     model: &mut M,
     get_params: FGet,

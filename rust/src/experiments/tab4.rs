@@ -57,7 +57,6 @@ fn encode(enc: &[f64], obs0: &[f64], obs_dim: usize, n_latent: usize, sp: &Spher
 
 /// One training/eval run for a given (stepper, adjoint). Returns
 /// (test accuracy, runtime, peak adjoint mem).
-#[allow(clippy::too_many_arguments)]
 fn run_one(
     st: &dyn ManifoldStepper,
     adj: AdjointMethod,

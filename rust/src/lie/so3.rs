@@ -7,18 +7,33 @@
 
 use super::{ExpCounter, HomogeneousSpace};
 use crate::linalg::{
-    expm_frechet_adjoint, mat3mul, matmul, orthogonality_defect, so3_exp, so3_hat,
+    expm_frechet_adjoint_into, mat3mul, matmul, orthogonality_defect, so3_exp, so3_hat,
+    transpose_into,
 };
+use crate::memory::{StepWorkspace, WorkspacePool};
 
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct So3 {
     exps: ExpCounter,
+    /// Per-caller scratch for the Fréchet-adjoint pullback, checked out per
+    /// call so the space stays `Sync` without serialising workers.
+    scratch: WorkspacePool,
 }
 
 impl So3 {
     pub fn new() -> Self {
         Self {
             exps: ExpCounter::default(),
+            scratch: WorkspacePool::new(),
+        }
+    }
+}
+
+impl Clone for So3 {
+    fn clone(&self) -> Self {
+        Self {
+            exps: self.exps.clone(),
+            scratch: WorkspacePool::new(),
         }
     }
 }
@@ -46,7 +61,8 @@ impl HomogeneousSpace for So3 {
 
     fn project(&self, y: &mut [f64]) {
         // One Newton step of the polar projection: R ← R(3I − RᵀR)/2.
-        let rt = crate::linalg::transpose(y, 3, 3);
+        let mut rt = [0.0f64; 9];
+        transpose_into(y, &mut rt, 3, 3);
         let mut rtr = [0.0f64; 9];
         matmul(&rt, y, &mut rtr, 3, 3, 3);
         let mut corr = [0.0f64; 9];
@@ -77,19 +93,25 @@ impl HomogeneousSpace for So3 {
         // λ_Y = Eᵀ λ_out (matrix cotangent contracted through left mult):
         //   ⟨λ_out, E dY⟩_F = ⟨Eᵀ λ_out, dY⟩_F.
         let e = so3_exp(v);
-        let et = crate::linalg::transpose(&e, 3, 3);
+        let mut et = [0.0f64; 9];
+        transpose_into(&e, &mut et, 3, 3);
         let mut tmp = [0.0f64; 9];
         matmul(&et, lam_out, &mut tmp, 3, 3, 3);
         lam_y.copy_from_slice(&tmp);
         // λ_v: ⟨λ_out, dE·Y⟩ = ⟨λ_out Yᵀ, dE⟩ with dE = L_{v̂}(hat(dv)).
-        let yt = crate::linalg::transpose(y, 3, 3);
+        let mut yt = [0.0f64; 9];
+        transpose_into(y, &mut yt, 3, 3);
         let mut w = [0.0f64; 9];
         matmul(lam_out, &yt, &mut w, 3, 3, 3);
-        let lstar = expm_frechet_adjoint(&so3_hat(v), &w, 3);
-        // Contract against the hat basis: ⟨M, hat(e_k)⟩_F.
-        lam_v[0] = lstar[7] - lstar[5]; // M32 - M23
-        lam_v[1] = lstar[2] - lstar[6]; // M13 - M31
-        lam_v[2] = lstar[3] - lstar[1]; // M21 - M12
+        self.scratch.with(|ws: &mut StepWorkspace| {
+            let mut lstar = ws.take(9);
+            expm_frechet_adjoint_into(&so3_hat(v), &w, &mut lstar, 3, ws);
+            // Contract against the hat basis: ⟨M, hat(e_k)⟩_F.
+            lam_v[0] = lstar[7] - lstar[5]; // M32 - M23
+            lam_v[1] = lstar[2] - lstar[6]; // M13 - M31
+            lam_v[2] = lstar[3] - lstar[1]; // M21 - M12
+            ws.put(lstar);
+        });
     }
 
     /// 𝔰𝔬(3) bracket is the cross product under the hat identification.

@@ -5,12 +5,28 @@
 //! lexicographic order, so `algebra_dim = n(n−1)/2`.
 
 use super::{ExpCounter, HomogeneousSpace};
-use crate::linalg::{expm, expm_frechet_adjoint, matmul, orthogonality_defect, transpose};
+use crate::linalg::{
+    expm_frechet_adjoint_into, expm_into, matmul, orthogonality_defect, transpose_into,
+};
+use crate::memory::{StepWorkspace, WorkspacePool};
 
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct SOn {
     n: usize,
     exps: ExpCounter,
+    /// Per-caller scratch (hat/exp/Fréchet panels) checked out per call so
+    /// the space stays `Sync` without serialising workers.
+    scratch: WorkspacePool,
+}
+
+impl Clone for SOn {
+    fn clone(&self) -> Self {
+        Self {
+            n: self.n,
+            exps: self.exps.clone(),
+            scratch: WorkspacePool::new(),
+        }
+    }
 }
 
 impl SOn {
@@ -19,6 +35,7 @@ impl SOn {
         Self {
             n,
             exps: ExpCounter::default(),
+            scratch: WorkspacePool::new(),
         }
     }
 
@@ -77,32 +94,45 @@ impl HomogeneousSpace for SOn {
     fn exp_action(&self, v: &[f64], y: &mut [f64]) {
         self.exps.bump();
         let n = self.n;
-        let mut vh = vec![0.0; n * n];
-        self.hat(v, &mut vh);
-        let e = expm(&vh, n);
-        let mut out = vec![0.0; n * n];
-        matmul(&e, y, &mut out, n, n, n);
-        y.copy_from_slice(&out);
+        self.scratch.with(|ws: &mut StepWorkspace| {
+            let mut vh = ws.take(n * n);
+            self.hat(v, &mut vh);
+            let mut e = ws.take(n * n);
+            expm_into(&vh, &mut e, n, ws);
+            let mut out = ws.take(n * n);
+            matmul(&e, y, &mut out, n, n, n);
+            y.copy_from_slice(&out);
+            ws.put(out);
+            ws.put(e);
+            ws.put(vh);
+        });
     }
 
     fn project(&self, y: &mut [f64]) {
         let n = self.n;
         // Newton polar iteration: R ← R(3I − RᵀR)/2, twice.
-        for _ in 0..2 {
-            let rt = transpose(y, n, n);
-            let mut rtr = vec![0.0; n * n];
-            matmul(&rt, y, &mut rtr, n, n, n);
-            let mut corr = vec![0.0; n * n];
-            for i in 0..n {
-                for j in 0..n {
-                    corr[i * n + j] = -0.5 * rtr[i * n + j];
+        self.scratch.with(|ws: &mut StepWorkspace| {
+            let mut rt = ws.take(n * n);
+            let mut rtr = ws.take(n * n);
+            let mut corr = ws.take(n * n);
+            let mut out = ws.take(n * n);
+            for _ in 0..2 {
+                transpose_into(y, &mut rt, n, n);
+                matmul(&rt, y, &mut rtr, n, n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        corr[i * n + j] = -0.5 * rtr[i * n + j];
+                    }
+                    corr[i * n + i] += 1.5;
                 }
-                corr[i * n + i] += 1.5;
+                matmul(y, &corr, &mut out, n, n, n);
+                y.copy_from_slice(&out);
             }
-            let mut out = vec![0.0; n * n];
-            matmul(y, &corr, &mut out, n, n, n);
-            y.copy_from_slice(&out);
-        }
+            ws.put(out);
+            ws.put(corr);
+            ws.put(rtr);
+            ws.put(rt);
+        });
     }
 
     fn constraint_defect(&self, y: &[f64]) -> f64 {
@@ -118,34 +148,52 @@ impl HomogeneousSpace for SOn {
         lam_v: &mut [f64],
     ) {
         let n = self.n;
-        let mut vh = vec![0.0; n * n];
-        self.hat(v, &mut vh);
-        let e = expm(&vh, n);
-        let et = transpose(&e, n, n);
-        matmul(&et, lam_out, lam_y, n, n, n);
-        // ⟨λ, dE·Y⟩ = ⟨λYᵀ, dE⟩, dE = L_{v̂}(hat(dv)).
-        let yt = transpose(y, n, n);
-        let mut w = vec![0.0; n * n];
-        matmul(lam_out, &yt, &mut w, n, n, n);
-        let lstar = expm_frechet_adjoint(&vh, &w, n);
-        self.basis_contract(&lstar, lam_v);
+        self.scratch.with(|ws: &mut StepWorkspace| {
+            let mut vh = ws.take(n * n);
+            self.hat(v, &mut vh);
+            let mut e = ws.take(n * n);
+            expm_into(&vh, &mut e, n, ws);
+            let mut et = ws.take(n * n);
+            transpose_into(&e, &mut et, n, n);
+            matmul(&et, lam_out, lam_y, n, n, n);
+            // ⟨λ, dE·Y⟩ = ⟨λYᵀ, dE⟩, dE = L_{v̂}(hat(dv)).
+            let mut yt = ws.take(n * n);
+            transpose_into(y, &mut yt, n, n);
+            let mut w = ws.take(n * n);
+            matmul(lam_out, &yt, &mut w, n, n, n);
+            let mut lstar = ws.take(n * n);
+            expm_frechet_adjoint_into(&vh, &w, &mut lstar, n, ws);
+            self.basis_contract(&lstar, lam_v);
+            ws.put(lstar);
+            ws.put(w);
+            ws.put(yt);
+            ws.put(et);
+            ws.put(e);
+            ws.put(vh);
+        });
     }
 
     /// Matrix commutator in the E_{ij} basis.
     fn bracket(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
         let n = self.n;
-        let mut ah = vec![0.0; n * n];
-        let mut bh = vec![0.0; n * n];
-        self.hat(a, &mut ah);
-        self.hat(b, &mut bh);
-        let mut ab = vec![0.0; n * n];
-        let mut ba = vec![0.0; n * n];
-        matmul(&ah, &bh, &mut ab, n, n, n);
-        matmul(&bh, &ah, &mut ba, n, n, n);
-        for (x, y) in ab.iter_mut().zip(ba.iter()) {
-            *x -= y;
-        }
-        self.vee(&ab, out);
+        self.scratch.with(|ws: &mut StepWorkspace| {
+            let mut ah = ws.take(n * n);
+            let mut bh = ws.take(n * n);
+            self.hat(a, &mut ah);
+            self.hat(b, &mut bh);
+            let mut ab = ws.take(n * n);
+            let mut ba = ws.take(n * n);
+            matmul(&ah, &bh, &mut ab, n, n, n);
+            matmul(&bh, &ah, &mut ba, n, n, n);
+            for (x, y) in ab.iter_mut().zip(ba.iter()) {
+                *x -= y;
+            }
+            self.vee(&ab, out);
+            ws.put(ba);
+            ws.put(ab);
+            ws.put(bh);
+            ws.put(ah);
+        });
     }
 
     fn exp_calls(&self) -> u64 {

@@ -8,13 +8,27 @@
 //! `models::sphere_lsde` fix the rank-2 representative V = a yᵀ − y aᵀ.
 
 use super::{ExpCounter, HomogeneousSpace};
-use crate::linalg::{expm, expm_frechet_adjoint, matvec, matvec_t, norm2};
+use crate::linalg::{expm_frechet_adjoint_into, expm_into, matvec, matvec_t, norm2};
+use crate::memory::{StepWorkspace, WorkspacePool};
 
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Sphere {
     /// Ambient dimension n (the sphere is Sⁿ⁻¹).
     n: usize,
     exps: ExpCounter,
+    /// Per-caller scratch (hat panel, exp panel, Fréchet blocks) checked out
+    /// per call so the space stays `Sync` without serialising workers.
+    scratch: WorkspacePool,
+}
+
+impl Clone for Sphere {
+    fn clone(&self) -> Self {
+        Self {
+            n: self.n,
+            exps: self.exps.clone(),
+            scratch: WorkspacePool::new(),
+        }
+    }
 }
 
 impl Sphere {
@@ -23,6 +37,7 @@ impl Sphere {
         Self {
             n,
             exps: ExpCounter::default(),
+            scratch: WorkspacePool::new(),
         }
     }
 
@@ -68,12 +83,18 @@ impl HomogeneousSpace for Sphere {
     fn exp_action(&self, v: &[f64], y: &mut [f64]) {
         self.exps.bump();
         let n = self.n;
-        let mut vh = vec![0.0; n * n];
-        self.hat(v, &mut vh);
-        let e = expm(&vh, n);
-        let mut out = vec![0.0; n];
-        matvec(&e, y, &mut out, n, n);
-        y.copy_from_slice(&out);
+        self.scratch.with(|ws: &mut StepWorkspace| {
+            let mut vh = ws.take(n * n);
+            self.hat(v, &mut vh);
+            let mut e = ws.take(n * n);
+            expm_into(&vh, &mut e, n, ws);
+            let mut out = ws.take(n);
+            matvec(&e, y, &mut out, n, n);
+            y.copy_from_slice(&out);
+            ws.put(out);
+            ws.put(e);
+            ws.put(vh);
+        });
     }
 
     fn project(&self, y: &mut [f64]) {
@@ -98,46 +119,60 @@ impl HomogeneousSpace for Sphere {
         lam_v: &mut [f64],
     ) {
         let n = self.n;
-        let mut vh = vec![0.0; n * n];
-        self.hat(v, &mut vh);
-        let e = expm(&vh, n);
-        // λ_y = Eᵀ λ_out.
-        matvec_t(&e, lam_out, lam_y, n, n);
-        // ⟨λ, dE·y⟩ = ⟨λ yᵀ, dE⟩ with λ yᵀ an n×n rank-1 cotangent.
-        let mut w = vec![0.0; n * n];
-        for i in 0..n {
-            for j in 0..n {
-                w[i * n + j] = lam_out[i] * y[j];
+        self.scratch.with(|ws: &mut StepWorkspace| {
+            let mut vh = ws.take(n * n);
+            self.hat(v, &mut vh);
+            let mut e = ws.take(n * n);
+            expm_into(&vh, &mut e, n, ws);
+            // λ_y = Eᵀ λ_out.
+            matvec_t(&e, lam_out, lam_y, n, n);
+            // ⟨λ, dE·y⟩ = ⟨λ yᵀ, dE⟩ with λ yᵀ an n×n rank-1 cotangent.
+            let mut w = ws.take(n * n);
+            for i in 0..n {
+                for j in 0..n {
+                    w[i * n + j] = lam_out[i] * y[j];
+                }
             }
-        }
-        let lstar = expm_frechet_adjoint(&vh, &w, n);
-        let mut k = 0;
-        for i in 0..n {
-            for j in i + 1..n {
-                lam_v[k] = lstar[i * n + j] - lstar[j * n + i];
-                k += 1;
+            let mut lstar = ws.take(n * n);
+            expm_frechet_adjoint_into(&vh, &w, &mut lstar, n, ws);
+            let mut k = 0;
+            for i in 0..n {
+                for j in i + 1..n {
+                    lam_v[k] = lstar[i * n + j] - lstar[j * n + i];
+                    k += 1;
+                }
             }
-        }
+            ws.put(lstar);
+            ws.put(w);
+            ws.put(e);
+            ws.put(vh);
+        });
     }
 
     /// 𝔰𝔬(n) matrix commutator in the E_{ij} basis.
     fn bracket(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
         let n = self.n;
-        let mut ah = vec![0.0; n * n];
-        let mut bh = vec![0.0; n * n];
-        self.hat(a, &mut ah);
-        self.hat(b, &mut bh);
-        let mut ab = vec![0.0; n * n];
-        let mut ba = vec![0.0; n * n];
-        crate::linalg::matmul(&ah, &bh, &mut ab, n, n, n);
-        crate::linalg::matmul(&bh, &ah, &mut ba, n, n, n);
-        let mut k = 0;
-        for i in 0..n {
-            for j in i + 1..n {
-                out[k] = ab[i * n + j] - ba[i * n + j];
-                k += 1;
+        self.scratch.with(|ws: &mut StepWorkspace| {
+            let mut ah = ws.take(n * n);
+            let mut bh = ws.take(n * n);
+            self.hat(a, &mut ah);
+            self.hat(b, &mut bh);
+            let mut ab = ws.take(n * n);
+            let mut ba = ws.take(n * n);
+            crate::linalg::matmul(&ah, &bh, &mut ab, n, n, n);
+            crate::linalg::matmul(&bh, &ah, &mut ba, n, n, n);
+            let mut k = 0;
+            for i in 0..n {
+                for j in i + 1..n {
+                    out[k] = ab[i * n + j] - ba[i * n + j];
+                    k += 1;
+                }
             }
-        }
+            ws.put(ba);
+            ws.put(ab);
+            ws.put(bh);
+            ws.put(ah);
+        });
     }
 
     fn exp_calls(&self) -> u64 {

@@ -2,38 +2,83 @@
 //! (scaling-and-squaring), Fréchet derivatives of `exp` (Van Loan block
 //! trick), QR-based random orthogonal matrices, and SO(3)/so(3) closed forms.
 //!
-//! Everything is row-major `&[f64]` with explicit dimensions — state vectors
-//! in the solver hot loop never allocate.
+//! Everything is row-major `&[f64]` with explicit dimensions. The hot
+//! kernels ([`matmul`], [`matvec`], [`expm_into`], [`expm_frechet_into`])
+//! are register-blocked/unrolled and write into caller-owned buffers; the
+//! `expm*_into` family draws its Padé/Taylor scratch panels from a
+//! [`StepWorkspace`] so a warm call performs zero heap allocations. The
+//! original allocating signatures ([`expm`], [`expm_frechet`],
+//! [`transpose`], …) survive as thin wrappers for cold call sites.
 
-/// C = A·B for row-major (m×k)·(k×n).
+use crate::memory::StepWorkspace;
+
+/// 4-way unrolled dot product — independent accumulators so LLVM can
+/// vectorise the reduction (a single serial accumulator pins the f64
+/// addition order and blocks SIMD). Shared by [`matvec`] and the MLP
+/// forward in [`crate::nn`].
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// C = A·B for row-major (m×k)·(k×n), register-blocked over 4 rows of B so
+/// each pass streams four B-rows against one resident C-row (4× less C
+/// traffic than the rank-1 update loop, and an unrolled FMA body).
 pub fn matmul(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    c.fill(0.0);
     for i in 0..m {
-        for p in 0..k {
-            let aip = a[i * k + p];
-            if aip == 0.0 {
-                continue;
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0.0);
+        let mut p = 0;
+        while p + 4 <= k {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            let b0 = &b[p * n..(p + 1) * n];
+            let b1 = &b[(p + 1) * n..(p + 2) * n];
+            let b2 = &b[(p + 2) * n..(p + 3) * n];
+            let b3 = &b[(p + 3) * n..(p + 4) * n];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                *cj += (a0 * b0[j] + a1 * b1[j]) + (a2 * b2[j] + a3 * b3[j]);
             }
-            let brow = &b[p * n..(p + 1) * n];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
-                *cj += aip * bj;
+            p += 4;
+        }
+        while p < k {
+            let ap = arow[p];
+            if ap != 0.0 {
+                let brow = &b[p * n..(p + 1) * n];
+                for (cj, bj) in crow.iter_mut().zip(brow.iter()) {
+                    *cj += ap * bj;
+                }
             }
+            p += 1;
         }
     }
 }
 
-/// y = A·x for row-major (m×n)·(n).
+/// y = A·x for row-major (m×n)·(n), each row reduced with the unrolled
+/// [`dot`] kernel.
 pub fn matvec(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(x.len(), n);
     debug_assert_eq!(y.len(), m);
-    for i in 0..m {
-        let row = &a[i * n..(i + 1) * n];
-        y[i] = row.iter().zip(x.iter()).map(|(a, b)| a * b).sum();
+    for (yi, row) in y.iter_mut().zip(a.chunks_exact(n)).take(m) {
+        *yi = dot(row, x);
     }
 }
 
@@ -50,23 +95,37 @@ pub fn matvec_t(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
     }
 }
 
-/// Transpose (m×n) → (n×m).
-pub fn transpose(a: &[f64], m: usize, n: usize) -> Vec<f64> {
-    let mut t = vec![0.0; n * m];
+/// Transpose (m×n) into a caller-owned (n×m) buffer.
+pub fn transpose_into(a: &[f64], out: &mut [f64], m: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(out.len(), n * m);
     for i in 0..m {
         for j in 0..n {
-            t[j * m + i] = a[i * n + j];
+            out[j * m + i] = a[i * n + j];
         }
     }
+}
+
+/// Transpose (m×n) → (n×m) (allocating wrapper over [`transpose_into`]).
+pub fn transpose(a: &[f64], m: usize, n: usize) -> Vec<f64> {
+    let mut t = vec![0.0; n * m];
+    transpose_into(a, &mut t, m, n);
     t
+}
+
+/// Overwrite a caller-owned n×n buffer with the identity.
+pub fn eye_into(out: &mut [f64], n: usize) {
+    debug_assert_eq!(out.len(), n * n);
+    out.fill(0.0);
+    for i in 0..n {
+        out[i * n + i] = 1.0;
+    }
 }
 
 /// n×n identity.
 pub fn eye(n: usize) -> Vec<f64> {
     let mut a = vec![0.0; n * n];
-    for i in 0..n {
-        a[i * n + i] = 1.0;
-    }
+    eye_into(&mut a, n);
     a
 }
 
@@ -80,13 +139,35 @@ pub fn norm2(a: &[f64]) -> f64 {
     a.iter().map(|x| x * x).sum::<f64>().sqrt()
 }
 
-/// Matrix exponential of an n×n matrix by scaling-and-squaring on a
-/// degree-13 Taylor polynomial. Accurate to ~1e-14 for the modest norms
-/// arising in one integrator step (‖A‖ ≲ a few).
-pub fn expm(a: &[f64], n: usize) -> Vec<f64> {
+/// True iff the 3×3 row-major matrix is exactly skew-symmetric — the shape
+/// every 𝔰𝔬(3) hat map produces, detected by exact comparison so the fast
+/// path never fires on merely-close matrices.
+#[inline]
+fn is_skew3(a: &[f64]) -> bool {
+    a[0] == 0.0
+        && a[4] == 0.0
+        && a[8] == 0.0
+        && a[1] == -a[3]
+        && a[2] == -a[6]
+        && a[5] == -a[7]
+}
+
+/// Matrix exponential of an n×n matrix into a caller-owned buffer, by
+/// scaling-and-squaring on a degree-13 Taylor polynomial (accurate to
+/// ~1e-14 for the modest norms arising in one integrator step, ‖A‖ ≲ a
+/// few). Scratch panels come from `ws`, so a warm call never allocates.
+/// Exactly skew 3×3 inputs short-circuit to the Rodrigues closed form
+/// ([`so3_exp`]) — the dominant case on SO(3), S², and their products.
+pub fn expm_into(a: &[f64], out: &mut [f64], n: usize, ws: &mut StepWorkspace) {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(out.len(), n * n);
+    if n == 3 && is_skew3(a) {
+        out.copy_from_slice(&so3_exp(&[a[7], a[2], a[3]]));
+        return;
+    }
     let nrm = norm_inf(a);
     let mut s = 0u32;
-    let mut scaled = a.to_vec();
+    let mut scaled = ws.take_copy(a);
     if nrm > 0.5 {
         s = (nrm / 0.5).log2().ceil() as u32;
         let f = 0.5f64.powi(s as i32);
@@ -95,33 +176,52 @@ pub fn expm(a: &[f64], n: usize) -> Vec<f64> {
         }
     }
     // Taylor series: E = I + A + A²/2! + ... + A^13/13!
-    let mut e = eye(n);
-    let mut term = eye(n);
-    let mut tmp = vec![0.0; n * n];
+    let mut term = ws.take(n * n);
+    let mut tmp = ws.take(n * n);
+    eye_into(out, n);
+    eye_into(&mut term, n);
     for k in 1..=13usize {
         matmul(&term, &scaled, &mut tmp, n, n, n);
         let inv = 1.0 / k as f64;
         for (t, &v) in term.iter_mut().zip(tmp.iter()) {
             *t = v * inv;
         }
-        for (ei, ti) in e.iter_mut().zip(term.iter()) {
+        for (ei, ti) in out.iter_mut().zip(term.iter()) {
             *ei += ti;
         }
     }
     // Repeated squaring.
     for _ in 0..s {
-        matmul(&e, &e, &mut tmp, n, n, n);
-        e.copy_from_slice(&tmp);
+        matmul(&*out, &*out, &mut tmp, n, n, n);
+        out.copy_from_slice(&tmp);
     }
+    ws.put(tmp);
+    ws.put(term);
+    ws.put(scaled);
+}
+
+/// Matrix exponential (allocating wrapper over [`expm_into`]).
+pub fn expm(a: &[f64], n: usize) -> Vec<f64> {
+    let mut ws = StepWorkspace::new();
+    let mut e = vec![0.0; n * n];
+    expm_into(a, &mut e, n, &mut ws);
     e
 }
 
-/// Fréchet derivative of the matrix exponential: returns
-/// (exp(A), L_A(E)) where L_A(E) = d/dt exp(A + tE)|_{t=0},
-/// via Van Loan's block trick: exp([[A, E], [0, A]]) = [[eᴬ, L],[0, eᴬ]].
-pub fn expm_frechet(a: &[f64], e: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+/// Fréchet derivative of the matrix exponential into caller-owned buffers:
+/// writes exp(A) to `ea` and L_A(E) = d/dt exp(A + tE)|_{t=0} to `l`, via
+/// Van Loan's block trick exp([[A, E], [0, A]]) = [[eᴬ, L],[0, eᴬ]]. The
+/// 2n×2n panel lives in `ws`.
+pub fn expm_frechet_into(
+    a: &[f64],
+    e: &[f64],
+    ea: &mut [f64],
+    l: &mut [f64],
+    n: usize,
+    ws: &mut StepWorkspace,
+) {
     let n2 = 2 * n;
-    let mut blk = vec![0.0; n2 * n2];
+    let mut blk = ws.take(n2 * n2);
     for i in 0..n {
         for j in 0..n {
             blk[i * n2 + j] = a[i * n + j];
@@ -129,24 +229,50 @@ pub fn expm_frechet(a: &[f64], e: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
             blk[(n + i) * n2 + n + j] = a[i * n + j];
         }
     }
-    let big = expm(&blk, n2);
-    let mut ea = vec![0.0; n * n];
-    let mut l = vec![0.0; n * n];
+    let mut big = ws.take(n2 * n2);
+    expm_into(&blk, &mut big, n2, ws);
     for i in 0..n {
         for j in 0..n {
             ea[i * n + j] = big[i * n2 + j];
             l[i * n + j] = big[i * n2 + n + j];
         }
     }
+    ws.put(big);
+    ws.put(blk);
+}
+
+/// Fréchet derivative (allocating wrapper over [`expm_frechet_into`]).
+pub fn expm_frechet(a: &[f64], e: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut ws = StepWorkspace::new();
+    let mut ea = vec![0.0; n * n];
+    let mut l = vec![0.0; n * n];
+    expm_frechet_into(a, e, &mut ea, &mut l, n, &mut ws);
     (ea, l)
 }
 
-/// Adjoint of the Fréchet derivative: given a cotangent W (n×n), returns
-/// L_A*(W) such that ⟨W, L_A(E)⟩_F = ⟨L_A*(W), E⟩_F for all E.
-/// Identity: L_A*(W) = L_{Aᵀ}(W).
+/// Adjoint of the Fréchet derivative into a caller-owned buffer: given a
+/// cotangent W (n×n), writes L_A*(W) with ⟨W, L_A(E)⟩_F = ⟨L_A*(W), E⟩_F
+/// for all E, via the identity L_A*(W) = L_{Aᵀ}(W).
+pub fn expm_frechet_adjoint_into(
+    a: &[f64],
+    w: &[f64],
+    out: &mut [f64],
+    n: usize,
+    ws: &mut StepWorkspace,
+) {
+    let mut at = ws.take(n * n);
+    transpose_into(a, &mut at, n, n);
+    let mut ea = ws.take(n * n);
+    expm_frechet_into(&at, w, &mut ea, out, n, ws);
+    ws.put(ea);
+    ws.put(at);
+}
+
+/// Fréchet adjoint (allocating wrapper over [`expm_frechet_adjoint_into`]).
 pub fn expm_frechet_adjoint(a: &[f64], w: &[f64], n: usize) -> Vec<f64> {
-    let at = transpose(a, n, n);
-    let (_, l) = expm_frechet(&at, w, n);
+    let mut ws = StepWorkspace::new();
+    let mut l = vec![0.0; n * n];
+    expm_frechet_adjoint_into(a, w, &mut l, n, &mut ws);
     l
 }
 
@@ -350,6 +476,83 @@ mod tests {
         let lhs: f64 = w.iter().zip(l.iter()).map(|(x, y)| x * y).sum();
         let rhs: f64 = lstar.iter().zip(e.iter()).map(|(x, y)| x * y).sum();
         assert!((lhs - rhs).abs() < 1e-10, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..11).map(|i| (i as f64 * 0.7).sin()).collect();
+        let b: Vec<f64> = (0..11).map(|i| (i as f64 * 0.3).cos()).collect();
+        let naive: f64 = a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-13);
+    }
+
+    #[test]
+    fn matmul_rectangular_odd_inner_dim() {
+        // k = 5 exercises both the 4-blocked body and the scalar tail.
+        let mut rng = Pcg64::new(17);
+        let (m, k, n) = (3, 5, 4);
+        let mut a = vec![0.0; m * k];
+        let mut b = vec![0.0; k * n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        let mut c = vec![0.0; m * n];
+        matmul(&a, &b, &mut c, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f64 = (0..k).map(|p| a[i * k + p] * b[p * n + j]).sum();
+                assert!((c[i * n + j] - want).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_into_matches_transpose() {
+        let a: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let t1 = transpose(&a, 3, 4);
+        let mut t2 = vec![0.0; 12];
+        transpose_into(&a, &mut t2, 3, 4);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn expm_into_reused_workspace_is_deterministic() {
+        let mut rng = Pcg64::new(8);
+        let mut ws = StepWorkspace::new();
+        for n in [2usize, 3, 5] {
+            let mut a = vec![0.0; n * n];
+            rng.fill_normal(&mut a);
+            for x in a.iter_mut() {
+                *x *= 0.4;
+            }
+            let fresh = expm(&a, n);
+            let mut reused = vec![0.0; n * n];
+            expm_into(&a, &mut reused, n, &mut ws);
+            for (u, v) in fresh.iter().zip(reused.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn expm_3x3_nonskew_takes_taylor_path() {
+        // Upper-triangular input: exp is upper-triangular with exp(diag) on
+        // the diagonal — and must not be misrouted to the Rodrigues path.
+        let a = [0.3, 0.1, 0.0, 0.0, -0.2, 0.05, 0.0, 0.0, 0.1];
+        let e = expm(&a, 3);
+        assert!((e[0] - 0.3f64.exp()).abs() < 1e-12);
+        assert!((e[4] - (-0.2f64).exp()).abs() < 1e-12);
+        assert!((e[8] - 0.1f64.exp()).abs() < 1e-12);
+        assert!(e[3].abs() < 1e-14 && e[6].abs() < 1e-14 && e[7].abs() < 1e-14);
+    }
+
+    #[test]
+    fn expm_skew3_fast_path_is_rodrigues() {
+        let w = [0.4, -0.7, 0.25];
+        let e = expm(&so3_hat(&w), 3);
+        let r = so3_exp(&w);
+        for i in 0..9 {
+            assert_eq!(e[i].to_bits(), r[i].to_bits(), "entry {i}");
+        }
     }
 
     #[test]

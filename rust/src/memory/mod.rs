@@ -1,4 +1,5 @@
-//! Byte-accurate memory accounting for adjoint methods.
+//! Byte-accurate memory accounting for adjoint methods, plus the solver
+//! scratch arena that keeps the stepping hot path allocation-free.
 //!
 //! The paper's memory figures (Fig. 1, 5b, 6; Tables 13–15) measure peak
 //! memory of one forward+backward solve. On our substrate the adjoint
@@ -7,6 +8,110 @@
 //! solver registers) goes through [`MemMeter`], which tracks current and
 //! peak totals. Algorithmic complexity — O(n) Full, O(√n) Recursive,
 //! O(1) Reversible — is then read off the measured curves.
+//!
+//! [`StepWorkspace`] is the other half of the story: where `MemMeter`
+//! *counts* the algorithmically required state, the workspace *recycles* the
+//! transient stage registers (RK stages, algebra increments, exp/Fréchet
+//! panels, adjoint cotangents) so that a warm solver step performs zero heap
+//! allocations. Every `Stepper`/`ManifoldStepper` `_ws` entry point takes
+//! one; the parallel batch engine checks one out per worker from a
+//! [`WorkspacePool`].
+
+/// Reusable scratch arena for solver and linalg hot loops.
+///
+/// `take(len)` checks out a zero-filled `Vec<f64>` of length `len`, reusing
+/// the capacity of a previously `put`-back buffer whenever one fits; after a
+/// warm-up pass every size class the caller needs has a resident buffer and
+/// `take`/`put` stop touching the allocator. Buffers are owned while checked
+/// out, so arbitrarily many can be live at once with no borrow gymnastics.
+///
+/// Ownership rules (see `docs/ARCHITECTURE.md` §Hot path & workspaces):
+/// every `take` must be matched by a `put` before the function returns, and
+/// a workspace must not be shared across threads — the batch engine gives
+/// each worker its own via [`WorkspacePool`].
+#[derive(Debug, Default)]
+pub struct StepWorkspace {
+    free: Vec<Vec<f64>>,
+}
+
+impl StepWorkspace {
+    /// Empty arena; buffers are created lazily on first checkout.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check out a zero-filled buffer of length `len`.
+    ///
+    /// Best-fit selection: the *smallest* parked buffer whose capacity
+    /// fits. Greedy best-fit never breaks a feasible buffer↔request
+    /// matching, so once one full pass over the caller's take sequence has
+    /// sized every buffer, no later pass allocates — regardless of the
+    /// order requests interleave (last-fit would let a small request steal
+    /// a large buffer and force a regrow downstream).
+    pub fn take(&mut self, len: usize) -> Vec<f64> {
+        let mut buf = self.take_empty(len);
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Best-fit checkout of a *cleared* buffer (length 0) with capacity
+    /// aimed at `min_capacity` — the shared engine under [`Self::take`],
+    /// [`Self::take_copy`] and [`Self::take_neg`], which each write their
+    /// own contents exactly once (no zero-fill-then-overwrite).
+    fn take_empty(&mut self, min_capacity: usize) -> Vec<f64> {
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, b) in self.free.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= min_capacity && best.map_or(true, |(_, c)| cap < c) {
+                best = Some((i, cap));
+            }
+        }
+        let mut buf = match best {
+            Some((i, _)) => self.free.swap_remove(i),
+            None => {
+                // Nothing fits: recycle the largest parked buffer (the
+                // closest to the demand — it grows once and that size
+                // class is warm too), or start fresh when empty.
+                let largest = (0..self.free.len()).max_by_key(|&i| self.free[i].capacity());
+                match largest {
+                    Some(i) => self.free.swap_remove(i),
+                    None => Vec::new(),
+                }
+            }
+        };
+        buf.clear();
+        buf
+    }
+
+    /// Check out a buffer initialised to a copy of `src`.
+    pub fn take_copy(&mut self, src: &[f64]) -> Vec<f64> {
+        let mut buf = self.take_empty(src.len());
+        buf.extend_from_slice(src);
+        buf
+    }
+
+    /// Check out a buffer holding the elementwise negation of `src` (the
+    /// negated driver increments every reverse step needs).
+    pub fn take_neg(&mut self, src: &[f64]) -> Vec<f64> {
+        let mut buf = self.take_empty(src.len());
+        buf.extend(src.iter().map(|&s| -s));
+        buf
+    }
+
+    /// Return a buffer to the arena for reuse.
+    pub fn put(&mut self, buf: Vec<f64>) {
+        self.free.push(buf);
+    }
+
+    /// Number of parked buffers (diagnostics/tests).
+    pub fn parked(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Checkout pool of [`StepWorkspace`]s for the parallel batch engine: one
+/// workspace per concurrent worker, lock held only for the pop/push.
+pub type WorkspacePool = crate::nn::Pool<StepWorkspace>;
 
 /// Tracks current and peak f64 counts for one forward+backward solve.
 #[derive(Clone, Debug, Default)]
@@ -106,6 +211,40 @@ mod tests {
         assert_eq!(m.peak_f64s(), 150);
         assert_eq!(m.current(), 40);
         assert_eq!(m.peak_bytes(), 1200);
+    }
+
+    #[test]
+    fn workspace_reuses_capacity() {
+        let mut ws = StepWorkspace::new();
+        let a = ws.take(16);
+        let b = ws.take(4);
+        assert_eq!(a.len(), 16);
+        assert_eq!(b.len(), 4);
+        ws.put(a);
+        ws.put(b);
+        assert_eq!(ws.parked(), 2);
+        // A re-take of both sizes must reuse the parked capacities, largest
+        // demand matched to the large buffer even when the order flips.
+        let c = ws.take(16);
+        assert!(c.capacity() >= 16);
+        assert!(c.iter().all(|&x| x == 0.0));
+        let d = ws.take(4);
+        assert_eq!(d.len(), 4);
+        ws.put(d);
+        ws.put(c);
+        assert_eq!(ws.parked(), 2);
+    }
+
+    #[test]
+    fn workspace_take_copy_and_neg() {
+        let mut ws = StepWorkspace::new();
+        let src = [1.0, -2.0, 3.5];
+        let c = ws.take_copy(&src);
+        assert_eq!(c, vec![1.0, -2.0, 3.5]);
+        let n = ws.take_neg(&src);
+        assert_eq!(n, vec![-1.0, 2.0, -3.5]);
+        ws.put(c);
+        ws.put(n);
     }
 
     #[test]

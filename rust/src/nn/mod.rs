@@ -61,6 +61,17 @@ impl<T: Default> Default for Pool<T> {
     }
 }
 
+// The parked buffers are interchangeable scratch — their contents carry no
+// information worth printing, so Debug shows only the pool's size. (Also
+// keeps `Debug` derivable for structs that embed a pool, e.g. the matrix
+// homogeneous spaces.)
+impl<T> std::fmt::Debug for Pool<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let parked = self.items.lock().map(|v| v.len()).unwrap_or(0);
+        f.debug_struct("Pool").field("parked", &parked).finish()
+    }
+}
+
 /// Supported activations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
@@ -84,27 +95,9 @@ fn sigmoid(x: f64) -> f64 {
     }
 }
 
-/// 4-way unrolled dot product — splits the reduction into independent
-/// accumulators so LLVM can vectorise it (a single serial accumulator pins
-/// the f64 addition order and blocks SIMD).
-#[inline]
-fn dot(a: &[f64], b: &[f64]) -> f64 {
-    let n = a.len().min(b.len());
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = 4 * c;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut acc = (s0 + s1) + (s2 + s3);
-    for i in 4 * chunks..n {
-        acc += a[i] * b[i];
-    }
-    acc
-}
+// The 4-way unrolled reduction kernel now lives in `linalg` (it is shared
+// with `matvec` and the blocked `matmul`); the MLP forward keeps using it.
+use crate::linalg::dot;
 
 impl Activation {
     #[inline]

@@ -10,6 +10,7 @@
 //! accept/reject loop for ODE integration (SDE paths are fixed-step in the
 //! paper; the controller is exercised on the drift-only problems).
 
+use crate::memory::StepWorkspace;
 use crate::tableau::Tableau;
 use crate::vf::VectorField;
 
@@ -40,7 +41,8 @@ impl EmbeddedEes25 {
     }
 
     /// One step: returns the ∞-norm of the embedded error estimate.
-    /// Registers: y (in place), δ, plus the stored stage ŷ — 3S*.
+    /// Registers: y (in place), δ, plus the stored stage ŷ — 3S*
+    /// (allocating wrapper over [`Self::step_embedded_ws`]).
     pub fn step_embedded(
         &self,
         vf: &dyn VectorField,
@@ -49,10 +51,24 @@ impl EmbeddedEes25 {
         dw: &[f64],
         y: &mut [f64],
     ) -> f64 {
+        self.step_embedded_ws(vf, t, h, dw, y, &mut StepWorkspace::new())
+    }
+
+    /// [`Self::step_embedded`] with caller-owned scratch: allocation-free
+    /// once `ws` is warm.
+    pub fn step_embedded_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) -> f64 {
         let dim = vf.dim();
-        let mut delta = vec![0.0; dim];
-        let mut k = vec![0.0; dim];
-        let mut stage3 = vec![0.0; dim]; // third register: Y₂ (stage at c₃)
+        let mut delta = ws.take(dim);
+        let mut k = ws.take(dim);
+        let mut stage3 = ws.take(dim); // third register: Y₂ (stage at c₃)
         for l in 0..3 {
             if l == 2 {
                 stage3.copy_from_slice(y);
@@ -75,6 +91,9 @@ impl EmbeddedEes25 {
             let yhat = stage3[d] + frac * k[d];
             err = err.max((y[d] - yhat).abs());
         }
+        ws.put(stage3);
+        ws.put(k);
+        ws.put(delta);
         err
     }
 }
@@ -130,16 +149,19 @@ pub fn integrate_adaptive(
     let scheme = EmbeddedEes25::new();
     let dim = vf.dim();
     let zero_dw = vec![0.0; vf.noise_dim()];
+    let mut ws = StepWorkspace::new();
     let mut y = y0.to_vec();
+    // Fourth register: yₙ saved for restart on rejection (reused across the
+    // accept/reject loop instead of cloning per trial step).
+    let mut y_save = ws.take(y.len());
     let mut t = t0;
     let mut h = h0;
     let mut accepted = 0;
     let mut rejected = 0;
     while t < t1 - 1e-14 {
         h = h.min(t1 - t);
-        // Fourth register: yₙ saved for restart on rejection.
-        let y_save: Vec<f64> = y.clone();
-        let err = scheme.step_embedded(vf, t, h, &zero_dw, &mut y);
+        y_save.copy_from_slice(&y);
+        let err = scheme.step_embedded_ws(vf, t, h, &zero_dw, &mut y, &mut ws);
         let scale = ctrl.atol
             + ctrl.rtol
                 * y.iter()
@@ -150,7 +172,7 @@ pub fn integrate_adaptive(
             t += h;
             accepted += 1;
         } else {
-            y = y_save;
+            y.copy_from_slice(&y_save);
             rejected += 1;
         }
         let factor = if ratio > 0.0 {
@@ -163,6 +185,7 @@ pub fn integrate_adaptive(
             break;
         }
     }
+    ws.put(y_save);
     AdaptiveResult {
         y,
         steps_accepted: accepted,

@@ -18,6 +18,7 @@
 
 use super::ManifoldStepper;
 use crate::lie::HomogeneousSpace;
+use crate::memory::StepWorkspace;
 use crate::tableau::{Tableau, Williamson2N};
 use crate::vf::{DiffManifoldVectorField, ManifoldVectorField};
 
@@ -38,9 +39,11 @@ impl CfEes {
     /// Lift any Bazavov-representable tableau to its commutator-free form.
     pub fn new(tab: Tableau) -> Self {
         let coeffs = tab.williamson_2n();
+        let name = format!("CF-{}", tab.name);
         Self {
-            c: tab.c.clone(),
-            name: format!("CF-{}", tab.name),
+            // The tableau is owned: move its abscissae instead of cloning.
+            c: tab.c,
+            name,
             anti_order: tab.antisymmetric_order,
             coeffs,
         }
@@ -104,13 +107,14 @@ impl CfEes {
         h: f64,
         dw: &[f64],
         y: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         let g = sp.algebra_dim();
         let s = self.stages();
         // The two registers: current state `y` (in place) + increment δ.
-        let mut delta = vec![0.0; g];
-        let mut k = vec![0.0; g];
-        let mut v = vec![0.0; g];
+        let mut delta = ws.take(g);
+        let mut k = ws.take(g);
+        let mut v = ws.take(g);
         for l in 0..s {
             let tl = t + self.c[l] * h;
             vf.generator(tl, y, h, dw, &mut k);
@@ -124,6 +128,9 @@ impl CfEes {
             }
             sp.exp_action(&v, y);
         }
+        ws.put(v);
+        ws.put(k);
+        ws.put(delta);
     }
 }
 
@@ -141,7 +148,7 @@ impl ManifoldStepper for CfEes {
         true
     }
 
-    fn step(
+    fn step_ws(
         &self,
         sp: &dyn HomogeneousSpace,
         vf: &dyn ManifoldVectorField,
@@ -149,11 +156,12 @@ impl ManifoldStepper for CfEes {
         h: f64,
         dw: &[f64],
         y: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
-        self.apply(sp, vf, t, h, dw, y);
+        self.apply(sp, vf, t, h, dw, y, ws);
     }
 
-    fn step_back(
+    fn step_back_ws(
         &self,
         sp: &dyn HomogeneousSpace,
         vf: &dyn ManifoldVectorField,
@@ -161,12 +169,14 @@ impl ManifoldStepper for CfEes {
         h: f64,
         dw: &[f64],
         y: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
-        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
-        self.apply(sp, vf, t + h, -h, &neg, y);
+        let neg = ws.take_neg(dw);
+        self.apply(sp, vf, t + h, -h, &neg, y, ws);
+        ws.put(neg);
     }
 
-    fn backprop_step(
+    fn backprop_step_ws(
         &self,
         sp: &dyn HomogeneousSpace,
         vf: &dyn DiffManifoldVectorField,
@@ -176,16 +186,18 @@ impl ManifoldStepper for CfEes {
         y_prev: &[f64],
         lambda: &mut [f64],
         d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         let g = sp.algebra_dim();
         let n = sp.point_dim();
         let s = self.stages();
         // Recompute the internal stage quantities from the step-start state.
-        let mut ys = vec![0.0; (s + 1) * n]; // Y_0..Y_s
-        let mut deltas = vec![0.0; (s + 1) * g]; // δ_0..δ_s
+        let mut ys = ws.take((s + 1) * n); // Y_0..Y_s
+        let mut deltas = ws.take((s + 1) * g); // δ_0..δ_s
+        let mut v = ws.take(g);
         ys[..n].copy_from_slice(y_prev);
         {
-            let mut k = vec![0.0; g];
+            let mut k = ws.take(g);
             for l in 0..s {
                 let tl = t + self.c[l] * h;
                 let (prev, cur) = ys.split_at_mut((l + 1) * n);
@@ -194,25 +206,28 @@ impl ManifoldStepper for CfEes {
                 for d in 0..g {
                     deltas[(l + 1) * g + d] = self.coeffs.a[l] * deltas[l * g + d] + k[d];
                 }
-                let v: Vec<f64> = (0..g)
-                    .map(|d| self.coeffs.b[l] * deltas[(l + 1) * g + d])
-                    .collect();
+                for d in 0..g {
+                    v[d] = self.coeffs.b[l] * deltas[(l + 1) * g + d];
+                }
                 let ynext = &mut cur[..n];
                 ynext.copy_from_slice(yl);
                 sp.exp_action(&v, ynext);
             }
+            ws.put(k);
         }
         // Algorithm 2: reverse sweep over stages on T*M.
-        let mut lam_y = lambda.to_vec(); // λ_{Y_s}
-        let mut lam_delta = vec![0.0; g]; // λ_{δ_s} accumulator
+        let mut lam_y = ws.take_copy(lambda); // λ_{Y_s}
+        let mut lam_y_in = ws.take(n);
+        let mut lam_v = ws.take(g);
+        let mut lam_delta = ws.take(g); // λ_{δ_s} accumulator
         for l in (0..s).rev() {
             let yl = &ys[l * n..(l + 1) * n]; // Y_{l-1} in paper indexing
-            let v: Vec<f64> = (0..g)
-                .map(|d| self.coeffs.b[l] * deltas[(l + 1) * g + d])
-                .collect();
+            for d in 0..g {
+                v[d] = self.coeffs.b[l] * deltas[(l + 1) * g + d];
+            }
             // Pullback through Ψ_l(Y, δ) = Λ(exp(B_l δ), Y).
-            let mut lam_y_in = vec![0.0; n];
-            let mut lam_v = vec![0.0; g];
+            lam_y_in.fill(0.0);
+            lam_v.fill(0.0);
             sp.action_pullback(&v, yl, &lam_y, &mut lam_y_in, &mut lam_v);
             // λ_{δ_l} += B_l · λ_v.
             for d in 0..g {
@@ -226,9 +241,16 @@ impl ManifoldStepper for CfEes {
             for d in lam_delta.iter_mut() {
                 *d *= al;
             }
-            lam_y = lam_y_in;
+            std::mem::swap(&mut lam_y, &mut lam_y_in);
         }
         lambda.copy_from_slice(&lam_y);
+        ws.put(lam_delta);
+        ws.put(lam_v);
+        ws.put(lam_y_in);
+        ws.put(lam_y);
+        ws.put(v);
+        ws.put(deltas);
+        ws.put(ys);
     }
 }
 

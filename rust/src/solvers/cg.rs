@@ -15,6 +15,7 @@
 
 use super::ManifoldStepper;
 use crate::lie::HomogeneousSpace;
+use crate::memory::StepWorkspace;
 use crate::tableau::Tableau;
 use crate::vf::{DiffManifoldVectorField, ManifoldVectorField};
 
@@ -87,8 +88,9 @@ impl CrouchGrossman {
         ks: &[f64],
         g: usize,
         y: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
-        let mut v = vec![0.0; g];
+        let mut v = ws.take(g);
         for (j, &c) in coeffs.iter().enumerate() {
             if c == 0.0 {
                 continue;
@@ -98,9 +100,16 @@ impl CrouchGrossman {
             }
             sp.exp_action(&v, y);
         }
+        ws.put(v);
     }
 
-    /// Recompute all stage slopes K_j from the step-start state.
+    /// The `a`-row of stage `i`: the coefficients weighting slopes K_j,
+    /// j < i (the strictly-lower-triangular prefix of the row).
+    fn a_row(&self, i: usize) -> &[f64] {
+        &self.tab.a[i * self.tab.s..i * self.tab.s + i]
+    }
+
+    /// Recompute all stage slopes K_j from the step-start state into `ks`.
     fn stage_slopes(
         &self,
         sp: &dyn HomogeneousSpace,
@@ -109,21 +118,85 @@ impl CrouchGrossman {
         h: f64,
         dw: &[f64],
         y0: &[f64],
-    ) -> Vec<f64> {
+        ks: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
         let s = self.tab.s;
         let g = sp.algebra_dim();
-        let mut ks = vec![0.0; s * g];
-        let mut yi = vec![0.0; y0.len()];
+        let mut yi = ws.take(y0.len());
         for i in 0..s {
             yi.copy_from_slice(y0);
-            let row: Vec<f64> = (0..i).map(|j| self.tab.a[i * self.tab.s + j]).collect();
-            self.apply_product(sp, &row, &ks, g, &mut yi);
+            self.apply_product(sp, self.a_row(i), ks, g, &mut yi, ws);
             let ti = t + self.tab.c[i] * h;
-            let (head, tail) = ks.split_at_mut(i * g);
-            let _ = head;
-            vf.generator(ti, &yi, h, dw, &mut tail[..g]);
+            vf.generator(ti, &yi, h, dw, &mut ks[i * g..(i + 1) * g]);
         }
-        ks
+        ws.put(yi);
+    }
+
+    /// Backprop through an ordered product chain applied to `base`:
+    /// accumulates λ_K into `lam_k` and writes λ_base into `lam_base`.
+    fn chain_pullback(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        coeffs: &[f64],
+        ks: &[f64],
+        g: usize,
+        n: usize,
+        base: &[f64],
+        lam_out: &[f64],
+        lam_k: &mut [f64],
+        lam_base: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
+        let active = coeffs.iter().filter(|&&c| c != 0.0).count();
+        // Recompute the intermediate points P_0..P_active of the chain.
+        let mut points = ws.take((active + 1) * n);
+        points[..n].copy_from_slice(base);
+        let mut v = ws.take(g);
+        let mut idx = 0;
+        for (j, &c) in coeffs.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            let (prev, cur) = points.split_at_mut((idx + 1) * n);
+            let p_in = &prev[idx * n..];
+            for d in 0..g {
+                v[d] = c * ks[j * g + d];
+            }
+            let p = &mut cur[..n];
+            p.copy_from_slice(p_in);
+            sp.exp_action(&v, p);
+            idx += 1;
+        }
+        // Walk the chain in reverse, pulling the cotangent back through each
+        // single-slope exponential.
+        let mut lam = ws.take_copy(lam_out);
+        let mut lam_in = ws.take(n);
+        let mut lam_v = ws.take(g);
+        let mut idx = active;
+        for (j, &c) in coeffs.iter().enumerate().rev() {
+            if c == 0.0 {
+                continue;
+            }
+            idx -= 1;
+            let p_in = &points[idx * n..(idx + 1) * n];
+            for d in 0..g {
+                v[d] = c * ks[j * g + d];
+            }
+            lam_in.fill(0.0);
+            lam_v.fill(0.0);
+            sp.action_pullback(&v, p_in, &lam, &mut lam_in, &mut lam_v);
+            for d in 0..g {
+                lam_k[j * g + d] += c * lam_v[d];
+            }
+            std::mem::swap(&mut lam, &mut lam_in);
+        }
+        lam_base.copy_from_slice(&lam);
+        ws.put(lam_v);
+        ws.put(lam_in);
+        ws.put(lam);
+        ws.put(v);
+        ws.put(points);
     }
 }
 
@@ -148,7 +221,7 @@ impl ManifoldStepper for CrouchGrossman {
         false
     }
 
-    fn step(
+    fn step_ws(
         &self,
         sp: &dyn HomogeneousSpace,
         vf: &dyn ManifoldVectorField,
@@ -156,13 +229,16 @@ impl ManifoldStepper for CrouchGrossman {
         h: f64,
         dw: &[f64],
         y: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         let g = sp.algebra_dim();
-        let ks = self.stage_slopes(sp, vf, t, h, dw, y);
-        self.apply_product(sp, &self.tab.b, &ks, g, y);
+        let mut ks = ws.take(self.tab.s * g);
+        self.stage_slopes(sp, vf, t, h, dw, y, &mut ks, ws);
+        self.apply_product(sp, &self.tab.b, &ks, g, y, ws);
+        ws.put(ks);
     }
 
-    fn step_back(
+    fn step_back_ws(
         &self,
         _sp: &dyn HomogeneousSpace,
         _vf: &dyn ManifoldVectorField,
@@ -170,11 +246,12 @@ impl ManifoldStepper for CrouchGrossman {
         _h: f64,
         _dw: &[f64],
         _y: &mut [f64],
+        _ws: &mut StepWorkspace,
     ) {
         panic!("Crouch–Grossman methods are not algebraically reversible; use the Full or Recursive adjoint")
     }
 
-    fn backprop_step(
+    fn backprop_step_ws(
         &self,
         sp: &dyn HomogeneousSpace,
         vf: &dyn DiffManifoldVectorField,
@@ -184,77 +261,69 @@ impl ManifoldStepper for CrouchGrossman {
         y_prev: &[f64],
         lambda: &mut [f64],
         d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         let s = self.tab.s;
         let g = sp.algebra_dim();
         let n = sp.point_dim();
-        let ks = self.stage_slopes(sp, vf, t, h, dw, y_prev);
+        let mut ks = ws.take(s * g);
+        self.stage_slopes(sp, vf, t, h, dw, y_prev, &mut ks, ws);
         // Stage states Y_i (for the ξ VJP sites).
-        let mut stage_states = vec![0.0; s * n];
-        for i in 0..s {
-            let mut yi = y_prev.to_vec();
-            let row: Vec<f64> = (0..i).map(|j| self.tab.a[i * s + j]).collect();
-            self.apply_product(sp, &row, &ks, g, &mut yi);
-            stage_states[i * n..(i + 1) * n].copy_from_slice(&yi);
+        let mut stage_states = ws.take(s * n);
+        {
+            let mut yi = ws.take(n);
+            for i in 0..s {
+                yi.copy_from_slice(y_prev);
+                self.apply_product(sp, self.a_row(i), &ks, g, &mut yi, ws);
+                stage_states[i * n..(i + 1) * n].copy_from_slice(&yi);
+            }
+            ws.put(yi);
         }
-        // Backprop through an ordered product chain applied to base point
-        // `base`; accumulates λ_K[j] and returns λ_base.
-        let chain_pullback = |coeffs: &[f64],
-                              base: &[f64],
-                              lam_out: &[f64],
-                              lam_k: &mut [f64]|
-         -> Vec<f64> {
-            // Recompute intermediate points P_0..P_m.
-            let active: Vec<usize> = (0..coeffs.len()).filter(|&j| coeffs[j] != 0.0).collect();
-            let mut points = vec![base.to_vec()];
-            let mut v = vec![0.0; g];
-            for &j in &active {
-                let mut p = points.last().unwrap().clone();
-                for d in 0..g {
-                    v[d] = coeffs[j] * ks[j * g + d];
-                }
-                sp.exp_action(&v, &mut p);
-                points.push(p);
-            }
-            let mut lam = lam_out.to_vec();
-            for (idx, &j) in active.iter().enumerate().rev() {
-                let p_in = &points[idx];
-                for d in 0..g {
-                    v[d] = coeffs[j] * ks[j * g + d];
-                }
-                let mut lam_in = vec![0.0; n];
-                let mut lam_v = vec![0.0; g];
-                sp.action_pullback(&v, p_in, &lam, &mut lam_in, &mut lam_v);
-                for d in 0..g {
-                    lam_k[j * g + d] += coeffs[j] * lam_v[d];
-                }
-                lam = lam_in;
-            }
-            lam
-        };
-
-        let mut lam_k = vec![0.0; s * g];
-        let mut lam_y0 = chain_pullback(&self.tab.b, y_prev, lambda, &mut lam_k);
+        let mut lam_k = ws.take(s * g);
+        let mut lam_y0 = ws.take(n);
+        self.chain_pullback(
+            sp, &self.tab.b, &ks, g, n, y_prev, lambda, &mut lam_k, &mut lam_y0, ws,
+        );
         // Stages in reverse: K_i = ξ(Y_i), Y_i from its own chain.
+        let mut lam_yi = ws.take(n);
+        let mut lam_base = ws.take(n);
+        let mut cot = ws.take(g);
         for i in (0..s).rev() {
             let ti = t + self.tab.c[i] * h;
             let yi = &stage_states[i * n..(i + 1) * n];
-            let mut lam_yi = vec![0.0; n];
-            let cot: Vec<f64> = lam_k[i * g..(i + 1) * g].to_vec();
+            lam_yi.fill(0.0);
+            cot.copy_from_slice(&lam_k[i * g..(i + 1) * g]);
             vf.vjp(ti, yi, h, dw, &cot, &mut lam_yi, d_theta);
             if i == 0 {
                 for d in 0..n {
                     lam_y0[d] += lam_yi[d];
                 }
             } else {
-                let row: Vec<f64> = (0..i).map(|j| self.tab.a[i * s + j]).collect();
-                let lam_base = chain_pullback(&row, y_prev, &lam_yi, &mut lam_k);
+                self.chain_pullback(
+                    sp,
+                    self.a_row(i),
+                    &ks,
+                    g,
+                    n,
+                    y_prev,
+                    &lam_yi,
+                    &mut lam_k,
+                    &mut lam_base,
+                    ws,
+                );
                 for d in 0..n {
                     lam_y0[d] += lam_base[d];
                 }
             }
         }
         lambda.copy_from_slice(&lam_y0);
+        ws.put(cot);
+        ws.put(lam_base);
+        ws.put(lam_yi);
+        ws.put(lam_y0);
+        ws.put(lam_k);
+        ws.put(stage_states);
+        ws.put(ks);
     }
 }
 
@@ -284,7 +353,7 @@ impl ManifoldStepper for GeoEulerMaruyama {
         false
     }
 
-    fn step(
+    fn step_ws(
         &self,
         sp: &dyn HomogeneousSpace,
         vf: &dyn ManifoldVectorField,
@@ -292,13 +361,15 @@ impl ManifoldStepper for GeoEulerMaruyama {
         h: f64,
         dw: &[f64],
         y: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
-        let mut k = vec![0.0; sp.algebra_dim()];
+        let mut k = ws.take(sp.algebra_dim());
         vf.generator(t, y, h, dw, &mut k);
         sp.exp_action(&k, y);
+        ws.put(k);
     }
 
-    fn step_back(
+    fn step_back_ws(
         &self,
         _sp: &dyn HomogeneousSpace,
         _vf: &dyn ManifoldVectorField,
@@ -306,11 +377,12 @@ impl ManifoldStepper for GeoEulerMaruyama {
         _h: f64,
         _dw: &[f64],
         _y: &mut [f64],
+        _ws: &mut StepWorkspace,
     ) {
         panic!("geometric Euler–Maruyama is not algebraically reversible")
     }
 
-    fn backprop_step(
+    fn backprop_step_ws(
         &self,
         sp: &dyn HomogeneousSpace,
         vf: &dyn DiffManifoldVectorField,
@@ -320,16 +392,20 @@ impl ManifoldStepper for GeoEulerMaruyama {
         y_prev: &[f64],
         lambda: &mut [f64],
         d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         let g = sp.algebra_dim();
         let n = sp.point_dim();
-        let mut k = vec![0.0; g];
+        let mut k = ws.take(g);
         vf.generator(t, y_prev, h, dw, &mut k);
-        let mut lam_y = vec![0.0; n];
-        let mut lam_v = vec![0.0; g];
+        let mut lam_y = ws.take(n);
+        let mut lam_v = ws.take(g);
         sp.action_pullback(&k, y_prev, lambda, &mut lam_y, &mut lam_v);
         vf.vjp(t, y_prev, h, dw, &lam_v, &mut lam_y, d_theta);
         lambda.copy_from_slice(&lam_y);
+        ws.put(lam_v);
+        ws.put(lam_y);
+        ws.put(k);
     }
 }
 

@@ -12,6 +12,7 @@
 //! Proposition D.1.
 
 use super::{Stepper, StepperProps};
+use crate::memory::StepWorkspace;
 use crate::tableau::{Tableau, Williamson2N};
 use crate::vf::{DiffVectorField, VectorField};
 
@@ -70,12 +71,20 @@ impl LowStorageStepper {
         Self::new(Tableau::ees27_default())
     }
 
-    fn apply(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], y: &mut [f64]) {
+    fn apply(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
         let dim = vf.dim();
         let s = self.coeffs.a.len();
         // The two registers.
-        let mut delta = vec![0.0; dim];
-        let mut k = vec![0.0; dim];
+        let mut delta = ws.take(dim);
+        let mut k = ws.take(dim);
         for l in 0..s {
             let tl = t + self.tab.c[l] * h;
             vf.combined(tl, y, h, dw, &mut k);
@@ -88,6 +97,8 @@ impl LowStorageStepper {
                 *yd += bl * d;
             }
         }
+        ws.put(k);
+        ws.put(delta);
     }
 }
 
@@ -106,16 +117,33 @@ impl Stepper for LowStorageStepper {
         y0.to_vec()
     }
 
-    fn step(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
-        self.apply(vf, t, h, dw, state);
+    fn step_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
+        self.apply(vf, t, h, dw, state, ws);
     }
 
-    fn step_back(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
-        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
-        self.apply(vf, t + h, -h, &neg, state);
+    fn step_back_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
+        let neg = ws.take_neg(dw);
+        self.apply(vf, t + h, -h, &neg, state, ws);
+        ws.put(neg);
     }
 
-    fn backprop_step(
+    fn backprop_step_ws(
         &self,
         vf: &dyn DiffVectorField,
         t: f64,
@@ -124,13 +152,13 @@ impl Stepper for LowStorageStepper {
         state_prev: &[f64],
         lambda: &mut [f64],
         d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         // The 2N form is algebraically the same RK map; reuse Algorithm 1
         // with the underlying tableau (stage states recomputed from
         // state_prev). Gradient identity with the 2N forward map is
         // guaranteed by the unrolling identity (tested).
-        let rk = super::RkStepper::new(self.tab.clone());
-        rk.backprop_step(vf, t, h, dw, state_prev, lambda, d_theta);
+        super::rk::rk_backprop_step_ws(&self.tab, vf, t, h, dw, state_prev, lambda, d_theta, ws);
     }
 }
 

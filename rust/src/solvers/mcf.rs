@@ -15,6 +15,7 @@
 //! the MCF baselines of Tables 1, 2, 7–9.
 
 use super::{Stepper, StepperProps};
+use crate::memory::StepWorkspace;
 use crate::vf::{DiffVectorField, VectorField};
 
 /// Base one-step increment map Ψ.
@@ -60,15 +61,27 @@ impl Mcf {
     }
 
     /// Ψ_{h,dw}(y) (writes the increment into `out`).
-    fn psi(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], y: &[f64], out: &mut [f64]) {
+    fn psi(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &[f64],
+        out: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
         match self.base {
             BaseMethod::Euler => vf.combined(t, y, h, dw, out),
             BaseMethod::Midpoint => {
                 let dim = vf.dim();
-                let mut f0 = vec![0.0; dim];
-                vf.combined(t, y, h, dw, &mut f0);
-                let mid: Vec<f64> = y.iter().zip(f0.iter()).map(|(a, b)| a + 0.5 * b).collect();
+                let mut mid = ws.take(dim);
+                vf.combined(t, y, h, dw, &mut mid);
+                for (m, &yi) in mid.iter_mut().zip(y.iter()) {
+                    *m = yi + 0.5 * *m;
+                }
                 vf.combined(t + 0.5 * h, &mid, h, dw, out);
+                ws.put(mid);
             }
         }
     }
@@ -85,23 +98,30 @@ impl Mcf {
         cot: &[f64],
         d_y: &mut [f64],
         d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         match self.base {
             BaseMethod::Euler => vf.vjp(t, y, h, dw, cot, d_y, d_theta),
             BaseMethod::Midpoint => {
                 let dim = vf.dim();
-                let mut f0 = vec![0.0; dim];
-                vf.combined(t, y, h, dw, &mut f0);
-                let mid: Vec<f64> = y.iter().zip(f0.iter()).map(|(a, b)| a + 0.5 * b).collect();
+                let mut mid = ws.take(dim);
+                vf.combined(t, y, h, dw, &mut mid);
+                for (m, &yi) in mid.iter_mut().zip(y.iter()) {
+                    *m = yi + 0.5 * *m;
+                }
                 // out = F(mid): d_mid = J_F(mid)ᵀ cot.
-                let mut d_mid = vec![0.0; dim];
+                let mut d_mid = ws.take(dim);
                 vf.vjp(t + 0.5 * h, &mid, h, dw, cot, &mut d_mid, d_theta);
                 // mid = y + ½F(y): d_y += d_mid + ½ J_F(y)ᵀ d_mid.
                 for (dy, dm) in d_y.iter_mut().zip(d_mid.iter()) {
                     *dy += dm;
                 }
-                let half: Vec<f64> = d_mid.iter().map(|x| 0.5 * x).collect();
-                vf.vjp(t, y, h, dw, &half, d_y, d_theta);
+                for dm in d_mid.iter_mut() {
+                    *dm *= 0.5;
+                }
+                vf.vjp(t, y, h, dw, &d_mid, d_y, d_theta);
+                ws.put(d_mid);
+                ws.put(mid);
             }
         }
     }
@@ -129,41 +149,63 @@ impl Stepper for Mcf {
         s
     }
 
-    fn step(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
+    fn step_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
         let dim = vf.dim();
-        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
+        let neg = ws.take_neg(dw);
         let (y, z) = state.split_at_mut(dim);
-        let mut psi_z = vec![0.0; dim];
-        self.psi(vf, t, h, dw, z, &mut psi_z);
+        let mut psi_z = ws.take(dim);
+        self.psi(vf, t, h, dw, z, &mut psi_z, ws);
         for i in 0..dim {
             y[i] = self.lambda * y[i] + (1.0 - self.lambda) * z[i] + psi_z[i];
         }
-        let mut psi_y1 = vec![0.0; dim];
-        self.psi(vf, t + h, -h, &neg, y, &mut psi_y1);
+        let mut psi_y1 = ws.take(dim);
+        self.psi(vf, t + h, -h, &neg, y, &mut psi_y1, ws);
         for i in 0..dim {
             z[i] -= psi_y1[i];
         }
+        ws.put(psi_y1);
+        ws.put(psi_z);
+        ws.put(neg);
     }
 
-    fn step_back(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
+    fn step_back_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
         let dim = vf.dim();
-        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
+        let neg = ws.take_neg(dw);
         let (y, z) = state.split_at_mut(dim);
         // z = z' + Ψ_{−h,−dw}(y').
-        let mut psi_y1 = vec![0.0; dim];
-        self.psi(vf, t + h, -h, &neg, y, &mut psi_y1);
+        let mut psi_y1 = ws.take(dim);
+        self.psi(vf, t + h, -h, &neg, y, &mut psi_y1, ws);
         for i in 0..dim {
             z[i] += psi_y1[i];
         }
         // y = (y' − (1−λ)z − Ψ_{h,dw}(z))/λ.
-        let mut psi_z = vec![0.0; dim];
-        self.psi(vf, t, h, dw, z, &mut psi_z);
+        let mut psi_z = ws.take(dim);
+        self.psi(vf, t, h, dw, z, &mut psi_z, ws);
         for i in 0..dim {
             y[i] = (y[i] - (1.0 - self.lambda) * z[i] - psi_z[i]) / self.lambda;
         }
+        ws.put(psi_z);
+        ws.put(psi_y1);
+        ws.put(neg);
     }
 
-    fn backprop_step(
+    fn backprop_step_ws(
         &self,
         vf: &dyn DiffVectorField,
         t: f64,
@@ -172,39 +214,46 @@ impl Stepper for Mcf {
         state_prev: &[f64],
         lambda: &mut [f64],
         d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         let dim = vf.dim();
-        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
+        let neg = ws.take_neg(dw);
         let (y, z) = state_prev.split_at(dim);
         // Recompute y' (VJP site for Ψ⁻).
-        let mut psi_z = vec![0.0; dim];
-        self.psi(vf, t, h, dw, z, &mut psi_z);
-        let mut y1 = vec![0.0; dim];
+        let mut psi_z = ws.take(dim);
+        self.psi(vf, t, h, dw, z, &mut psi_z, ws);
+        let mut y1 = ws.take(dim);
         for i in 0..dim {
             y1[i] = self.lambda * y[i] + (1.0 - self.lambda) * z[i] + psi_z[i];
         }
-        let (lam_y1, lam_z1) = {
-            let (a, b) = lambda.split_at(dim);
-            (a.to_vec(), b.to_vec())
-        };
+        let lam_y1 = ws.take_copy(&lambda[..dim]);
+        let lam_z1 = ws.take_copy(&lambda[dim..]);
         // Total cotangent into the y' node:
         //   λ_{y'}^tot = λ_{y'} − J_{Ψ⁻}(y')ᵀ λ_{z'}.
-        let mut y1_tot = lam_y1.clone();
+        let mut y1_tot = ws.take_copy(&lam_y1);
         {
-            let neg_lam: Vec<f64> = lam_z1.iter().map(|x| -x).collect();
-            self.psi_vjp(vf, t + h, -h, &neg, &y1, &neg_lam, &mut y1_tot, d_theta);
+            let neg_lam = ws.take_neg(&lam_z1);
+            self.psi_vjp(vf, t + h, -h, &neg, &y1, &neg_lam, &mut y1_tot, d_theta, ws);
+            ws.put(neg_lam);
         }
         // λ_y = λ_c · λ_{y'}^tot.
         for i in 0..dim {
             lambda[i] = self.lambda * y1_tot[i];
         }
         // λ_z = λ_{z'} + (1−λ_c) λ_{y'}^tot + J_Ψ(z)ᵀ λ_{y'}^tot.
-        let mut lam_z = lam_z1.clone();
+        let mut lam_z = ws.take_copy(&lam_z1);
         for i in 0..dim {
             lam_z[i] += (1.0 - self.lambda) * y1_tot[i];
         }
-        self.psi_vjp(vf, t, h, dw, z, &y1_tot, &mut lam_z, d_theta);
+        self.psi_vjp(vf, t, h, dw, z, &y1_tot, &mut lam_z, d_theta, ws);
         lambda[dim..].copy_from_slice(&lam_z);
+        ws.put(lam_z);
+        ws.put(y1_tot);
+        ws.put(lam_z1);
+        ws.put(lam_y1);
+        ws.put(y1);
+        ws.put(psi_z);
+        ws.put(neg);
     }
 }
 

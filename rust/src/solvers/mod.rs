@@ -41,6 +41,7 @@ pub use rk::RkStepper;
 pub use rkmk::Rkmk;
 
 use crate::lie::HomogeneousSpace;
+use crate::memory::StepWorkspace;
 use crate::vf::{DiffManifoldVectorField, DiffVectorField, ManifoldVectorField, VectorField};
 
 /// Static properties of a Euclidean stepper.
@@ -60,6 +61,13 @@ pub struct StepperProps {
 }
 
 /// One-step method for Euclidean SDE/RDEs in simplified-RK form.
+///
+/// The `_ws` entry points are the hot path: they draw every stage register
+/// from the caller's [`StepWorkspace`] and perform zero heap allocations
+/// once the workspace is warm. The workspace-free methods are convenience
+/// wrappers that spin up a transient arena per call — identical numerics,
+/// one warm-up's worth of allocations — so cold call sites (experiments,
+/// tests, doc examples) compile and behave unchanged.
 pub trait Stepper: Send + Sync {
     /// Static properties (name, cost, reversibility class) of the scheme.
     fn props(&self) -> StepperProps;
@@ -74,10 +82,14 @@ pub trait Stepper: Send + Sync {
     fn init_state(&self, vf: &dyn VectorField, t0: f64, y0: &[f64]) -> Vec<f64>;
 
     /// Advance the state over [t, t+h] with driver increments dw.
-    fn step(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]);
+    fn step(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
+        self.step_ws(vf, t, h, dw, state, &mut StepWorkspace::new());
+    }
 
     /// Inverse step: from the state at t+h recover the state at t.
-    fn step_back(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]);
+    fn step_back(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
+        self.step_back_ws(vf, t, h, dw, state, &mut StepWorkspace::new());
+    }
 
     /// Algorithm 1: given the state at the step start and the loss cotangent
     /// with respect to the state at the step end (`lambda`), overwrite
@@ -92,10 +104,61 @@ pub trait Stepper: Send + Sync {
         state_prev: &[f64],
         lambda: &mut [f64],
         d_theta: &mut [f64],
+    ) {
+        self.backprop_step_ws(
+            vf,
+            t,
+            h,
+            dw,
+            state_prev,
+            lambda,
+            d_theta,
+            &mut StepWorkspace::new(),
+        );
+    }
+
+    /// [`Self::step`] with caller-owned scratch: allocation-free once `ws`
+    /// is warm.
+    fn step_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    );
+
+    /// [`Self::step_back`] with caller-owned scratch.
+    fn step_back_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    );
+
+    /// [`Self::backprop_step`] with caller-owned scratch.
+    fn backprop_step_ws(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     );
 }
 
 /// One-step method on a homogeneous space.
+///
+/// Mirrors [`Stepper`]: the `_ws` methods are the allocation-free hot path,
+/// the workspace-free names are transient-arena wrappers kept for cold call
+/// sites.
 pub trait ManifoldStepper: Send + Sync {
     /// Human-readable scheme name as used in the paper's tables.
     fn name(&self) -> String;
@@ -115,7 +178,9 @@ pub trait ManifoldStepper: Send + Sync {
         h: f64,
         dw: &[f64],
         y: &mut [f64],
-    );
+    ) {
+        self.step_ws(sp, vf, t, h, dw, y, &mut StepWorkspace::new());
+    }
 
     /// Inverse step: from the point at t+h recover the point at t (panics
     /// for schemes whose [`Self::reversible`] is false).
@@ -127,7 +192,9 @@ pub trait ManifoldStepper: Send + Sync {
         h: f64,
         dw: &[f64],
         y: &mut [f64],
-    );
+    ) {
+        self.step_back_ws(sp, vf, t, h, dw, y, &mut StepWorkspace::new());
+    }
 
     /// Algorithm 2: cotangent sweep on T*M. `lambda` is the ambient-space
     /// cotangent of the end state on entry, of the start state on exit.
@@ -141,6 +208,57 @@ pub trait ManifoldStepper: Send + Sync {
         y_prev: &[f64],
         lambda: &mut [f64],
         d_theta: &mut [f64],
+    ) {
+        self.backprop_step_ws(
+            sp,
+            vf,
+            t,
+            h,
+            dw,
+            y_prev,
+            lambda,
+            d_theta,
+            &mut StepWorkspace::new(),
+        );
+    }
+
+    /// [`Self::step`] with caller-owned scratch: allocation-free once `ws`
+    /// is warm.
+    fn step_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        ws: &mut StepWorkspace,
+    );
+
+    /// [`Self::step_back`] with caller-owned scratch.
+    fn step_back_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        ws: &mut StepWorkspace,
+    );
+
+    /// [`Self::backprop_step`] with caller-owned scratch.
+    fn backprop_step_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn DiffManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     );
 }
 
@@ -172,6 +290,19 @@ pub fn integrate(
     y0: &[f64],
     path: &crate::rng::BrownianPath,
 ) -> Vec<f64> {
+    integrate_ws(stepper, vf, t0, y0, path, &mut StepWorkspace::new())
+}
+
+/// [`integrate`] with a caller-owned workspace — the batch engine hands
+/// each worker a pooled one so repeated trajectories share warm scratch.
+pub fn integrate_ws(
+    stepper: &dyn Stepper,
+    vf: &dyn VectorField,
+    t0: f64,
+    y0: &[f64],
+    path: &crate::rng::BrownianPath,
+    ws: &mut StepWorkspace,
+) -> Vec<f64> {
     let dim = vf.dim();
     let steps = path.steps();
     let mut state = stepper.init_state(vf, t0, y0);
@@ -179,7 +310,7 @@ pub fn integrate(
     traj[..dim].copy_from_slice(y0);
     for n in 0..steps {
         let t = t0 + n as f64 * path.h;
-        stepper.step(vf, t, path.h, path.increment(n), &mut state);
+        stepper.step_ws(vf, t, path.h, path.increment(n), &mut state, ws);
         traj[(n + 1) * dim..(n + 2) * dim].copy_from_slice(&state[..dim]);
     }
     traj
@@ -194,15 +325,30 @@ pub fn integrate_manifold(
     y0: &[f64],
     path: &crate::rng::BrownianPath,
 ) -> Vec<f64> {
+    integrate_manifold_ws(stepper, sp, vf, t0, y0, path, &mut StepWorkspace::new())
+}
+
+/// [`integrate_manifold`] with a caller-owned workspace.
+pub fn integrate_manifold_ws(
+    stepper: &dyn ManifoldStepper,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn ManifoldVectorField,
+    t0: f64,
+    y0: &[f64],
+    path: &crate::rng::BrownianPath,
+    ws: &mut StepWorkspace,
+) -> Vec<f64> {
     let dim = sp.point_dim();
     let steps = path.steps();
-    let mut y = y0.to_vec();
     let mut traj = vec![0.0; (steps + 1) * dim];
     traj[..dim].copy_from_slice(y0);
+    // The current point lives in workspace scratch, not a per-call Vec.
+    let mut y = ws.take_copy(y0);
     for n in 0..steps {
         let t = t0 + n as f64 * path.h;
-        stepper.step(sp, vf, t, path.h, path.increment(n), &mut y);
+        stepper.step_ws(sp, vf, t, path.h, path.increment(n), &mut y, ws);
         traj[(n + 1) * dim..(n + 2) * dim].copy_from_slice(&y);
     }
+    ws.put(y);
     traj
 }

@@ -16,6 +16,7 @@
 //! in the paper's fixed-budget tables.
 
 use super::{Stepper, StepperProps};
+use crate::memory::StepWorkspace;
 use crate::vf::{DiffVectorField, VectorField};
 
 /// The Reversible Heun scheme of Kidger et al. (2021): auxiliary state
@@ -30,21 +31,30 @@ impl ReversibleHeun {
     }
 
     /// Shared forward map with signed increments.
-    fn apply(vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
+    fn apply(
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
         let dim = vf.dim();
         let (y, yh) = state.split_at_mut(dim);
-        let mut f_yh = vec![0.0; dim];
+        let mut f_yh = ws.take(dim);
         vf.combined(t, yh, h, dw, &mut f_yh);
         // ŷ' = 2y − ŷ + F(ŷ)
         for i in 0..dim {
             yh[i] = 2.0 * y[i] - yh[i] + f_yh[i];
         }
-        let mut f_yh2 = vec![0.0; dim];
+        let mut f_yh2 = ws.take(dim);
         vf.combined(t + h, yh, h, dw, &mut f_yh2);
         // y' = y + ½(F(ŷ) + F(ŷ'))
         for i in 0..dim {
             y[i] += 0.5 * (f_yh[i] + f_yh2[i]);
         }
+        ws.put(f_yh2);
+        ws.put(f_yh);
     }
 }
 
@@ -66,16 +76,33 @@ impl Stepper for ReversibleHeun {
         s
     }
 
-    fn step(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
-        Self::apply(vf, t, h, dw, state);
+    fn step_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
+        Self::apply(vf, t, h, dw, state, ws);
     }
 
-    fn step_back(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
-        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
-        Self::apply(vf, t + h, -h, &neg, state);
+    fn step_back_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
+        let neg = ws.take_neg(dw);
+        Self::apply(vf, t + h, -h, &neg, state, ws);
+        ws.put(neg);
     }
 
-    fn backprop_step(
+    fn backprop_step_ws(
         &self,
         vf: &dyn DiffVectorField,
         t: f64,
@@ -84,49 +111,56 @@ impl Stepper for ReversibleHeun {
         state_prev: &[f64],
         lambda: &mut [f64],
         d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         let dim = vf.dim();
         let (y, yh) = state_prev.split_at(dim);
         // Recompute ŷ' (needed for the F(ŷ') VJP site).
-        let mut f_yh = vec![0.0; dim];
+        let mut f_yh = ws.take(dim);
         vf.combined(t, yh, h, dw, &mut f_yh);
-        let mut yh_next = vec![0.0; dim];
+        let mut yh_next = ws.take(dim);
         for i in 0..dim {
             yh_next[i] = 2.0 * y[i] - yh[i] + f_yh[i];
         }
-        let (lam_y1, lam_yh1) = {
-            let (a, b) = lambda.split_at(dim);
-            (a.to_vec(), b.to_vec())
-        };
+        let lam_y1 = ws.take_copy(&lambda[..dim]);
+        let lam_yh1 = ws.take_copy(&lambda[dim..]);
         // u = λ_{ŷ'} + ½ J_F(ŷ')ᵀ λ_{y'}  (cotangent entering the ŷ' node).
-        let mut u = lam_yh1.clone();
+        let mut u = ws.take_copy(&lam_yh1);
         {
-            let half_lam: Vec<f64> = lam_y1.iter().map(|x| 0.5 * x).collect();
-            let mut d_dummy = vec![0.0; 0];
+            let mut half_lam = ws.take(dim);
+            for (hl, &l) in half_lam.iter_mut().zip(lam_y1.iter()) {
+                *hl = 0.5 * l;
+            }
             // VJP at ŷ' with cotangent ½λ_{y'} contributes to u and θ.
-            let mut d_yh_next = vec![0.0; dim];
+            let mut d_yh_next = ws.take(dim);
             vf.vjp(t + h, &yh_next, h, dw, &half_lam, &mut d_yh_next, d_theta);
             for i in 0..dim {
                 u[i] += d_yh_next[i];
             }
-            let _ = &mut d_dummy;
+            ws.put(d_yh_next);
+            ws.put(half_lam);
         }
         // λ_y = λ_{y'} + 2u.
         for i in 0..dim {
             lambda[i] = lam_y1[i] + 2.0 * u[i];
         }
         // λ_ŷ = −u + J_F(ŷ)ᵀ (u + ½ λ_{y'}).
-        let mut cot: Vec<f64> = u
-            .iter()
-            .zip(lam_y1.iter())
-            .map(|(ui, li)| ui + 0.5 * li)
-            .collect();
-        let mut d_yh = vec![0.0; dim];
+        let mut cot = ws.take(dim);
+        for i in 0..dim {
+            cot[i] = u[i] + 0.5 * lam_y1[i];
+        }
+        let mut d_yh = ws.take(dim);
         vf.vjp(t, yh, h, dw, &cot, &mut d_yh, d_theta);
         for i in 0..dim {
             lambda[dim + i] = -u[i] + d_yh[i];
         }
-        cot.clear();
+        ws.put(d_yh);
+        ws.put(cot);
+        ws.put(u);
+        ws.put(lam_yh1);
+        ws.put(lam_y1);
+        ws.put(yh_next);
+        ws.put(f_yh);
     }
 }
 

@@ -8,6 +8,7 @@
 //! generic (non-reversible) behaviour for classical tableaux.
 
 use super::{Stepper, StepperProps};
+use crate::memory::StepWorkspace;
 use crate::tableau::Tableau;
 use crate::vf::{DiffVectorField, VectorField};
 
@@ -78,12 +79,21 @@ impl RkStepper {
         Self::new(Tableau::ees27_default())
     }
 
-    /// One RK application with signed increments (h, dw).
-    fn apply(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], y: &mut [f64]) {
+    /// One RK application with signed increments (h, dw); stage registers
+    /// come from `ws`.
+    fn apply(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
         let s = self.tab.s;
         let dim = vf.dim();
-        let mut k = vec![0.0; dim]; // current stage state
-        let mut z = vec![0.0; s * dim]; // combined increments F(k_i)
+        let mut k = ws.take(dim); // current stage state
+        let mut z = ws.take(s * dim); // combined increments F(k_i)
         for i in 0..s {
             k.copy_from_slice(y);
             for j in 0..i {
@@ -107,7 +117,87 @@ impl RkStepper {
                 *yd += b * zd;
             }
         }
+        ws.put(z);
+        ws.put(k);
     }
+}
+
+/// Algorithm 1 for an explicit tableau, shared by [`RkStepper`] and the 2N
+/// low-storage realisation (which is the same algebraic map, so the reverse
+/// sweep over recomputed standard-form stages is identical — this free
+/// function replaces the per-step `RkStepper` + tableau clone the 2N
+/// stepper used to construct).
+pub(crate) fn rk_backprop_step_ws(
+    tab: &Tableau,
+    vf: &dyn DiffVectorField,
+    t: f64,
+    h: f64,
+    dw: &[f64],
+    state_prev: &[f64],
+    lambda: &mut [f64],
+    d_theta: &mut [f64],
+    ws: &mut StepWorkspace,
+) {
+    let s = tab.s;
+    let dim = vf.dim();
+    // Recompute stages from the step-start state.
+    let mut k = ws.take(s * dim);
+    let mut z = ws.take(s * dim);
+    for i in 0..s {
+        let (kk, _) = k.split_at_mut((i + 1) * dim);
+        let ki = &mut kk[i * dim..];
+        ki.copy_from_slice(state_prev);
+        for j in 0..i {
+            let a = tab.a[i * s + j];
+            if a == 0.0 {
+                continue;
+            }
+            for (kd, zd) in ki.iter_mut().zip(z[j * dim..(j + 1) * dim].iter()) {
+                *kd += a * zd;
+            }
+        }
+        let ti = t + tab.c[i] * h;
+        vf.combined(ti, &k[i * dim..(i + 1) * dim], h, dw, &mut z[i * dim..(i + 1) * dim]);
+    }
+    // Reverse sweep (Algorithm 1):
+    //   ∂L/∂z_i = b_i λ + Σ_{j>i} a_{ji} ∂L/∂k_j
+    //   (d_θ, ∂L/∂k_i) = vjp_F(k_i, ∂L/∂z_i)
+    //   λ ← λ + Σ_i ∂L/∂k_i
+    let mut dk = ws.take(s * dim);
+    let mut dz = ws.take(dim);
+    for i in (0..s).rev() {
+        for d in 0..dim {
+            let mut acc = tab.b[i] * lambda[d];
+            for j in i + 1..s {
+                let a = tab.a[j * s + i];
+                if a != 0.0 {
+                    acc += a * dk[j * dim + d];
+                }
+            }
+            dz[d] = acc;
+        }
+        let ti = t + tab.c[i] * h;
+        vf.vjp(
+            ti,
+            &k[i * dim..(i + 1) * dim],
+            h,
+            dw,
+            &dz,
+            &mut dk[i * dim..(i + 1) * dim],
+            d_theta,
+        );
+    }
+    for d in 0..dim {
+        let mut acc = 0.0;
+        for i in 0..s {
+            acc += dk[i * dim + d];
+        }
+        lambda[d] += acc;
+    }
+    ws.put(dz);
+    ws.put(dk);
+    ws.put(z);
+    ws.put(k);
 }
 
 impl Stepper for RkStepper {
@@ -125,16 +215,33 @@ impl Stepper for RkStepper {
         y0.to_vec()
     }
 
-    fn step(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
-        self.apply(vf, t, h, dw, state);
+    fn step_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
+        self.apply(vf, t, h, dw, state, ws);
     }
 
-    fn step_back(&self, vf: &dyn VectorField, t: f64, h: f64, dw: &[f64], state: &mut [f64]) {
-        let neg: Vec<f64> = dw.iter().map(|x| -x).collect();
-        self.apply(vf, t + h, -h, &neg, state);
+    fn step_back_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
+        let neg = ws.take_neg(dw);
+        self.apply(vf, t + h, -h, &neg, state, ws);
+        ws.put(neg);
     }
 
-    fn backprop_step(
+    fn backprop_step_ws(
         &self,
         vf: &dyn DiffVectorField,
         t: f64,
@@ -143,63 +250,9 @@ impl Stepper for RkStepper {
         state_prev: &[f64],
         lambda: &mut [f64],
         d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
-        let s = self.tab.s;
-        let dim = vf.dim();
-        // Recompute stages from the step-start state.
-        let mut k = vec![0.0; s * dim];
-        let mut z = vec![0.0; s * dim];
-        for i in 0..s {
-            let (kk, _) = k.split_at_mut((i + 1) * dim);
-            let ki = &mut kk[i * dim..];
-            ki.copy_from_slice(state_prev);
-            for j in 0..i {
-                let a = self.tab.a[i * s + j];
-                if a == 0.0 {
-                    continue;
-                }
-                for (kd, zd) in ki.iter_mut().zip(z[j * dim..(j + 1) * dim].iter()) {
-                    *kd += a * zd;
-                }
-            }
-            let ti = t + self.tab.c[i] * h;
-            vf.combined(ti, &k[i * dim..(i + 1) * dim], h, dw, &mut z[i * dim..(i + 1) * dim]);
-        }
-        // Reverse sweep (Algorithm 1):
-        //   ∂L/∂z_i = b_i λ + Σ_{j>i} a_{ji} ∂L/∂k_j
-        //   (d_θ, ∂L/∂k_i) = vjp_F(k_i, ∂L/∂z_i)
-        //   λ ← λ + Σ_i ∂L/∂k_i
-        let mut dk = vec![0.0; s * dim];
-        let mut dz = vec![0.0; dim];
-        for i in (0..s).rev() {
-            for d in 0..dim {
-                let mut acc = self.tab.b[i] * lambda[d];
-                for j in i + 1..s {
-                    let a = self.tab.a[j * s + i];
-                    if a != 0.0 {
-                        acc += a * dk[j * dim + d];
-                    }
-                }
-                dz[d] = acc;
-            }
-            let ti = t + self.tab.c[i] * h;
-            vf.vjp(
-                ti,
-                &k[i * dim..(i + 1) * dim],
-                h,
-                dw,
-                &dz,
-                &mut dk[i * dim..(i + 1) * dim],
-                d_theta,
-            );
-        }
-        for d in 0..dim {
-            let mut acc = 0.0;
-            for i in 0..s {
-                acc += dk[i * dim + d];
-            }
-            lambda[d] += acc;
-        }
+        rk_backprop_step_ws(&self.tab, vf, t, h, dw, state_prev, lambda, d_theta, ws);
     }
 }
 

@@ -15,6 +15,7 @@
 
 use super::ManifoldStepper;
 use crate::lie::HomogeneousSpace;
+use crate::memory::StepWorkspace;
 use crate::tableau::Tableau;
 use crate::vf::{DiffManifoldVectorField, ManifoldVectorField};
 
@@ -62,22 +63,25 @@ impl Rkmk {
         u: &[f64],
         v: &[f64],
         out: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         out.copy_from_slice(v);
         if self.dexpinv_order >= 1 {
             let g = u.len();
-            let mut br = vec![0.0; g];
+            let mut br = ws.take(g);
             sp.bracket(u, v, &mut br);
             for (o, b) in out.iter_mut().zip(br.iter()) {
                 *o -= 0.5 * b;
             }
             if self.dexpinv_order >= 2 {
-                let mut br2 = vec![0.0; g];
+                let mut br2 = ws.take(g);
                 sp.bracket(u, &br, &mut br2);
                 for (o, b) in out.iter_mut().zip(br2.iter()) {
                     *o += b / 12.0;
                 }
+                ws.put(br2);
             }
+            ws.put(br);
         }
     }
 }
@@ -97,7 +101,7 @@ impl ManifoldStepper for Rkmk {
         false
     }
 
-    fn step(
+    fn step_ws(
         &self,
         sp: &dyn HomogeneousSpace,
         vf: &dyn ManifoldVectorField,
@@ -105,12 +109,14 @@ impl ManifoldStepper for Rkmk {
         h: f64,
         dw: &[f64],
         y: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         let s = self.tab.s;
         let g = sp.algebra_dim();
-        let mut k = vec![0.0; s * g];
-        let mut u = vec![0.0; g];
-        let mut xi = vec![0.0; g];
+        let mut k = ws.take(s * g);
+        let mut u = ws.take(g);
+        let mut xi = ws.take(g);
+        let mut yi = ws.take(y.len());
         for i in 0..s {
             u.fill(0.0);
             for j in 0..i {
@@ -122,7 +128,7 @@ impl ManifoldStepper for Rkmk {
                     u[d] += a * k[j * g + d];
                 }
             }
-            let mut yi = y.to_vec();
+            yi.copy_from_slice(y);
             if i > 0 {
                 sp.exp_action(&u, &mut yi);
             }
@@ -130,7 +136,7 @@ impl ManifoldStepper for Rkmk {
             vf.generator(ti, &yi, h, dw, &mut xi);
             let (head, tail) = k.split_at_mut(i * g);
             let _ = head;
-            self.dexpinv(sp, &u, &xi, &mut tail[..g]);
+            self.dexpinv(sp, &u, &xi, &mut tail[..g], ws);
         }
         u.fill(0.0);
         for i in 0..s {
@@ -140,9 +146,13 @@ impl ManifoldStepper for Rkmk {
             }
         }
         sp.exp_action(&u, y);
+        ws.put(yi);
+        ws.put(xi);
+        ws.put(u);
+        ws.put(k);
     }
 
-    fn step_back(
+    fn step_back_ws(
         &self,
         _sp: &dyn HomogeneousSpace,
         _vf: &dyn ManifoldVectorField,
@@ -150,11 +160,12 @@ impl ManifoldStepper for Rkmk {
         _h: f64,
         _dw: &[f64],
         _y: &mut [f64],
+        _ws: &mut StepWorkspace,
     ) {
         panic!("RKMK methods are not algebraically reversible")
     }
 
-    fn backprop_step(
+    fn backprop_step_ws(
         &self,
         sp: &dyn HomogeneousSpace,
         vf: &dyn DiffManifoldVectorField,
@@ -164,6 +175,7 @@ impl ManifoldStepper for Rkmk {
         y_prev: &[f64],
         lambda: &mut [f64],
         d_theta: &mut [f64],
+        ws: &mut StepWorkspace,
     ) {
         assert_eq!(
             self.dexpinv_order, 0,
@@ -173,51 +185,61 @@ impl ManifoldStepper for Rkmk {
         let g = sp.algebra_dim();
         let n = sp.point_dim();
         // Forward recompute: k_i = ξ(Λ(exp(u_i), y)), u_i = Σ a_ij k_j.
-        let mut k = vec![0.0; s * g];
-        let mut us = vec![0.0; s * g];
-        let mut stage_states = vec![0.0; s * n];
-        for i in 0..s {
-            let mut u = vec![0.0; g];
-            for j in 0..i {
-                let a = self.tab.a[i * s + j];
-                for d in 0..g {
-                    u[d] += a * k[j * g + d];
+        let mut k = ws.take(s * g);
+        let mut us = ws.take(s * g);
+        let mut stage_states = ws.take(s * n);
+        {
+            let mut u = ws.take(g);
+            let mut yi = ws.take(n);
+            for i in 0..s {
+                u.fill(0.0);
+                for j in 0..i {
+                    let a = self.tab.a[i * s + j];
+                    for d in 0..g {
+                        u[d] += a * k[j * g + d];
+                    }
                 }
+                yi.copy_from_slice(y_prev);
+                if i > 0 {
+                    sp.exp_action(&u, &mut yi);
+                }
+                let ti = t + self.tab.c[i] * h;
+                let (head, tail) = k.split_at_mut(i * g);
+                let _ = head;
+                vf.generator(ti, &yi, h, dw, &mut tail[..g]);
+                us[i * g..(i + 1) * g].copy_from_slice(&u);
+                stage_states[i * n..(i + 1) * n].copy_from_slice(&yi);
             }
-            let mut yi = y_prev.to_vec();
-            if i > 0 {
-                sp.exp_action(&u, &mut yi);
-            }
-            let ti = t + self.tab.c[i] * h;
-            let (head, tail) = k.split_at_mut(i * g);
-            let _ = head;
-            vf.generator(ti, &yi, h, dw, &mut tail[..g]);
-            us[i * g..(i + 1) * g].copy_from_slice(&u);
-            stage_states[i * n..(i + 1) * n].copy_from_slice(&yi);
+            ws.put(yi);
+            ws.put(u);
         }
-        let mut u_fin = vec![0.0; g];
+        let mut u_fin = ws.take(g);
         for i in 0..s {
             for d in 0..g {
                 u_fin[d] += self.tab.b[i] * k[i * g + d];
             }
         }
         // Backward: y' = Λ(exp(u_fin), y).
-        let mut lam_y0 = vec![0.0; n];
-        let mut lam_u = vec![0.0; g];
+        let mut lam_y0 = ws.take(n);
+        let mut lam_u = ws.take(g);
         sp.action_pullback(&u_fin, y_prev, lambda, &mut lam_y0, &mut lam_u);
         // λ_k[i] += b_i λ_u.
-        let mut lam_k = vec![0.0; s * g];
+        let mut lam_k = ws.take(s * g);
         for i in 0..s {
             for d in 0..g {
                 lam_k[i * g + d] += self.tab.b[i] * lam_u[d];
             }
         }
+        let mut lam_yi = ws.take(n);
+        let mut lam_base = ws.take(n);
+        let mut lam_ui = ws.take(g);
+        let mut cot = ws.take(g);
         for i in (0..s).rev() {
             // k_i = ξ(Y_i); Y_i = Λ(exp(u_i), y0) (or y0 for i = 0).
             let ti = t + self.tab.c[i] * h;
             let yi = &stage_states[i * n..(i + 1) * n];
-            let mut lam_yi = vec![0.0; n];
-            let cot: Vec<f64> = lam_k[i * g..(i + 1) * g].to_vec();
+            lam_yi.fill(0.0);
+            cot.copy_from_slice(&lam_k[i * g..(i + 1) * g]);
             vf.vjp(ti, yi, h, dw, &cot, &mut lam_yi, d_theta);
             if i == 0 {
                 for d in 0..n {
@@ -225,8 +247,8 @@ impl ManifoldStepper for Rkmk {
                 }
             } else {
                 let u = &us[i * g..(i + 1) * g];
-                let mut lam_base = vec![0.0; n];
-                let mut lam_ui = vec![0.0; g];
+                lam_base.fill(0.0);
+                lam_ui.fill(0.0);
                 sp.action_pullback(u, y_prev, &lam_yi, &mut lam_base, &mut lam_ui);
                 for d in 0..n {
                     lam_y0[d] += lam_base[d];
@@ -244,6 +266,17 @@ impl ManifoldStepper for Rkmk {
             }
         }
         lambda.copy_from_slice(&lam_y0);
+        ws.put(cot);
+        ws.put(lam_ui);
+        ws.put(lam_base);
+        ws.put(lam_yi);
+        ws.put(lam_k);
+        ws.put(lam_u);
+        ws.put(lam_y0);
+        ws.put(u_fin);
+        ws.put(us);
+        ws.put(stage_states);
+        ws.put(k);
     }
 }
 

@@ -1,0 +1,366 @@
+//! Allocation-regression suite: after a one-step warm-up, the `_ws` stepping
+//! entry points of every solver must perform ZERO heap allocations per step
+//! — forward, reverse (where supported) and backprop. This is the contract
+//! the `StepWorkspace` refactor establishes; any new `vec![..]`/`clone()` on
+//! the hot path fails here before it can regress throughput.
+//!
+//! The counting global allocator is process-wide, so this binary holds a
+//! single `#[test]` that walks every solver sequentially — no concurrent
+//! test thread can pollute a measurement window.
+
+use ees::bench::alloc::alloc_count;
+use ees::lie::{Euclidean, HomogeneousSpace, So3, Sphere, TTorus, Torus};
+use ees::memory::StepWorkspace;
+use ees::rng::{BrownianPath, Pcg64};
+use ees::solvers::{
+    CfEes, CrouchGrossman, EmbeddedEes25, GeoEulerMaruyama, LowStorageStepper, ManifoldStepper,
+    Mcf, ReversibleHeun, Rkmk, RkStepper, Stepper,
+};
+use ees::vf::{DiffManifoldVectorField, DiffVectorField, ManifoldVectorField, VectorField};
+
+#[global_allocator]
+static ALLOC: ees::bench::CountingAlloc = ees::bench::CountingAlloc;
+
+fn measure(f: impl FnOnce()) -> u64 {
+    let before = alloc_count();
+    f();
+    alloc_count() - before
+}
+
+/// Allocation-free analytic Euclidean field.
+struct Field8;
+
+impl VectorField for Field8 {
+    fn dim(&self) -> usize {
+        8
+    }
+    fn noise_dim(&self) -> usize {
+        8
+    }
+    fn combined(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        for i in 0..8 {
+            out[i] = (-0.4 * y[i] + 0.2 * y[(i + 1) % 8]) * h + 0.1 * y[i] * dw[i];
+        }
+    }
+}
+
+impl DiffVectorField for Field8 {
+    fn num_params(&self) -> usize {
+        0
+    }
+    fn vjp(
+        &self,
+        _t: f64,
+        _y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        _d_theta: &mut [f64],
+    ) {
+        for i in 0..8 {
+            d_y[i] += cot[i] * (-0.4 * h + 0.1 * dw[i]);
+            d_y[(i + 1) % 8] += cot[i] * 0.2 * h;
+        }
+    }
+}
+
+/// Allocation-free manifold field on T𝕋ⁿ / 𝕋ⁿ / ℝⁿ / SO(3) / Sⁿ⁻¹-sized
+/// algebras: writes a smooth function of the point into every algebra slot.
+struct GenField {
+    point_dim: usize,
+    algebra_dim: usize,
+}
+
+impl ManifoldVectorField for GenField {
+    fn point_dim(&self) -> usize {
+        self.point_dim
+    }
+    fn algebra_dim(&self) -> usize {
+        self.algebra_dim
+    }
+    fn noise_dim(&self) -> usize {
+        2
+    }
+    fn generator(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        for (k, o) in out.iter_mut().enumerate() {
+            let yk = y[k % y.len()];
+            *o = (0.3 * yk + 0.05) * h + 0.1 * yk * dw[0] - 0.02 * dw[1];
+        }
+    }
+}
+
+impl DiffManifoldVectorField for GenField {
+    fn num_params(&self) -> usize {
+        0
+    }
+    fn vjp(
+        &self,
+        _t: f64,
+        _y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        _d_theta: &mut [f64],
+    ) {
+        let n = d_y.len();
+        for (k, c) in cot.iter().enumerate() {
+            d_y[k % n] += c * (0.3 * h + 0.1 * dw[0]);
+        }
+    }
+}
+
+/// Warm-up + measured steps for a Euclidean stepper: forward, reverse (if
+/// algebraically/effectively reversible) and backprop must all be 0 allocs
+/// per step once the workspace is warm.
+fn assert_euclidean_zero_alloc(name: &str, st: &dyn Stepper, check_back: bool) {
+    let vf = Field8;
+    let mut rng = Pcg64::new(5);
+    let path = BrownianPath::sample(&mut rng, 8, 32, 0.01);
+    let mut ws = StepWorkspace::new();
+    let mut state = st.init_state(&vf, 0.0, &[0.1; 8]);
+    let mut lambda = vec![0.0; state.len()];
+    let mut d_theta = vec![0.0; 1];
+    // Warm-up: one of each entry point populates every workspace size class.
+    st.step_ws(&vf, 0.0, 0.01, path.increment(0), &mut state, &mut ws);
+    if check_back {
+        st.step_back_ws(&vf, 0.0, 0.01, path.increment(0), &mut state, &mut ws);
+    }
+    lambda[0] = 1.0;
+    st.backprop_step_ws(
+        &vf,
+        0.0,
+        0.01,
+        path.increment(0),
+        &state,
+        &mut lambda,
+        &mut d_theta,
+        &mut ws,
+    );
+    let n = measure(|| {
+        for k in 1..32 {
+            st.step_ws(&vf, k as f64 * 0.01, 0.01, path.increment(k), &mut state, &mut ws);
+            if check_back {
+                st.step_back_ws(&vf, k as f64 * 0.01, 0.01, path.increment(k), &mut state, &mut ws);
+            }
+            st.backprop_step_ws(
+                &vf,
+                k as f64 * 0.01,
+                0.01,
+                path.increment(k),
+                &state,
+                &mut lambda,
+                &mut d_theta,
+                &mut ws,
+            );
+        }
+    });
+    assert_eq!(n, 0, "{name}: {n} allocations in 31 warm steps");
+}
+
+fn assert_manifold_zero_alloc(
+    name: &str,
+    st: &dyn ManifoldStepper,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn DiffManifoldVectorField,
+    y0: &[f64],
+    check_back: bool,
+    check_backprop: bool,
+) {
+    let mut rng = Pcg64::new(6);
+    let path = BrownianPath::sample(&mut rng, 2, 32, 0.01);
+    let mut ws = StepWorkspace::new();
+    let mut y = y0.to_vec();
+    let mut lambda = vec![0.0; sp.point_dim()];
+    let mut d_theta = vec![0.0; 1];
+    st.step_ws(sp, vf, 0.0, 0.01, path.increment(0), &mut y, &mut ws);
+    if check_back {
+        st.step_back_ws(sp, vf, 0.0, 0.01, path.increment(0), &mut y, &mut ws);
+    }
+    if check_backprop {
+        lambda[0] = 1.0;
+        st.backprop_step_ws(
+            sp,
+            vf,
+            0.0,
+            0.01,
+            path.increment(0),
+            &y,
+            &mut lambda,
+            &mut d_theta,
+            &mut ws,
+        );
+    }
+    // Second warm-up round: pooled space scratch (Sphere/SO(n)) stabilises
+    // after its first checkout per entry point.
+    st.step_ws(sp, vf, 0.0, 0.01, path.increment(0), &mut y, &mut ws);
+    let n = measure(|| {
+        for k in 1..32 {
+            st.step_ws(sp, vf, k as f64 * 0.01, 0.01, path.increment(k), &mut y, &mut ws);
+            if check_back {
+                st.step_back_ws(sp, vf, k as f64 * 0.01, 0.01, path.increment(k), &mut y, &mut ws);
+            }
+            if check_backprop {
+                st.backprop_step_ws(
+                    sp,
+                    vf,
+                    k as f64 * 0.01,
+                    0.01,
+                    path.increment(k),
+                    &y,
+                    &mut lambda,
+                    &mut d_theta,
+                    &mut ws,
+                );
+            }
+        }
+    });
+    assert_eq!(n, 0, "{name}: {n} allocations in 31 warm steps");
+}
+
+/// All nine solver families plus the linalg kernels, one test so the global
+/// counters never race.
+#[test]
+fn all_nine_solvers_zero_allocs_per_step_after_warmup() {
+    // 1. Standard-form RK (EES(2,5)).
+    assert_euclidean_zero_alloc("rk_ees25", &RkStepper::ees25(), true);
+    // 2. Williamson 2N low-storage.
+    assert_euclidean_zero_alloc("lowstorage_ees25", &LowStorageStepper::ees25(), true);
+    // 3. Reversible Heun.
+    assert_euclidean_zero_alloc("reversible_heun", &ReversibleHeun::new(), true);
+    // 4. MCF coupling (both base maps).
+    assert_euclidean_zero_alloc("mcf_euler", &Mcf::euler(), true);
+    assert_euclidean_zero_alloc("mcf_midpoint", &Mcf::midpoint(), true);
+
+    // 5. Embedded/adaptive EES (3S* registers + error estimate).
+    {
+        let vf = Field8;
+        let sch = EmbeddedEes25::new();
+        let dw = [0.0; 8];
+        let mut ws = StepWorkspace::new();
+        let mut y = vec![0.1; 8];
+        sch.step_embedded_ws(&vf, 0.0, 0.01, &dw, &mut y, &mut ws);
+        let n = measure(|| {
+            for k in 1..32 {
+                sch.step_embedded_ws(&vf, k as f64 * 0.01, 0.01, &dw, &mut y, &mut ws);
+            }
+        });
+        assert_eq!(n, 0, "embedded_ees25: {n} allocations in 31 warm steps");
+    }
+
+    // 6. CF-EES on flat, torus, tangent-torus, SO(3) and sphere substrates.
+    let cf = CfEes::ees25();
+    assert_manifold_zero_alloc(
+        "cfees25/euclidean",
+        &cf,
+        &Euclidean::new(5),
+        &GenField { point_dim: 5, algebra_dim: 5 },
+        &[0.1; 5],
+        true,
+        true,
+    );
+    assert_manifold_zero_alloc(
+        "cfees25/torus",
+        &cf,
+        &Torus::new(4),
+        &GenField { point_dim: 4, algebra_dim: 4 },
+        &[0.2; 4],
+        true,
+        true,
+    );
+    assert_manifold_zero_alloc(
+        "cfees25/ttorus",
+        &cf,
+        &TTorus::new(3),
+        &GenField { point_dim: 6, algebra_dim: 6 },
+        &[0.1; 6],
+        true,
+        true,
+    );
+    assert_manifold_zero_alloc(
+        "cfees25/so3",
+        &cf,
+        &So3::new(),
+        &GenField { point_dim: 9, algebra_dim: 3 },
+        &ees::linalg::eye(3),
+        true,
+        true,
+    );
+    {
+        let sp = Sphere::new(4);
+        let mut y0 = vec![0.0; 4];
+        y0[0] = 1.0;
+        assert_manifold_zero_alloc(
+            "cfees25/sphere4",
+            &cf,
+            &sp,
+            &GenField { point_dim: 4, algebra_dim: 6 },
+            &y0,
+            true,
+            true,
+        );
+    }
+
+    // 7. Crouch–Grossman (not reversible: forward + backprop only).
+    assert_manifold_zero_alloc(
+        "cg3/torus",
+        &CrouchGrossman::cg3(),
+        &Torus::new(4),
+        &GenField { point_dim: 4, algebra_dim: 4 },
+        &[0.2; 4],
+        false,
+        true,
+    );
+    // 8. Geometric Euler–Maruyama.
+    assert_manifold_zero_alloc(
+        "geo_em/so3",
+        &GeoEulerMaruyama::new(),
+        &So3::new(),
+        &GenField { point_dim: 9, algebra_dim: 3 },
+        &ees::linalg::eye(3),
+        false,
+        true,
+    );
+    // 9. RKMK (backprop supported at dexpinv_order = 0).
+    assert_manifold_zero_alloc(
+        "srkmk3/ttorus",
+        &Rkmk::srkmk3(),
+        &TTorus::new(3),
+        &GenField { point_dim: 6, algebra_dim: 6 },
+        &[0.1; 6],
+        false,
+        true,
+    );
+
+    // And the linalg `_into` kernels with a warm workspace.
+    linalg_into_kernels_zero_alloc();
+}
+
+/// The linalg `_into` kernels are allocation-free with a warm workspace.
+fn linalg_into_kernels_zero_alloc() {
+    use ees::linalg::{expm_frechet_adjoint_into, expm_frechet_into, expm_into};
+    let n = 6;
+    let mut rng = Pcg64::new(9);
+    let mut a = vec![0.0; n * n];
+    let mut e = vec![0.0; n * n];
+    rng.fill_normal(&mut a);
+    rng.fill_normal(&mut e);
+    for x in a.iter_mut() {
+        *x *= 0.3;
+    }
+    let mut ws = StepWorkspace::new();
+    let mut out = vec![0.0; n * n];
+    let (mut ea, mut l) = (vec![0.0; n * n], vec![0.0; n * n]);
+    expm_into(&a, &mut out, n, &mut ws);
+    expm_frechet_into(&a, &e, &mut ea, &mut l, n, &mut ws);
+    expm_frechet_adjoint_into(&a, &e, &mut out, n, &mut ws);
+    let count = measure(|| {
+        for _ in 0..16 {
+            expm_into(&a, &mut out, n, &mut ws);
+            expm_frechet_into(&a, &e, &mut ea, &mut l, n, &mut ws);
+            expm_frechet_adjoint_into(&a, &e, &mut out, n, &mut ws);
+        }
+    });
+    assert_eq!(count, 0, "{count} allocations in warm linalg kernels");
+}

@@ -169,6 +169,65 @@ fn batch_integrate_bitwise_invariant_in_parallelism() {
     }
 }
 
+/// Workspace-reuse correctness: a trajectory stepped with one long-lived
+/// `StepWorkspace` is bitwise-identical to the same trajectory stepped with
+/// a fresh workspace per step (the transient-arena wrapper), and the pooled
+/// per-worker workspaces of the batch engine reproduce both at P = 1 and
+/// P = 4. Scratch reuse must be numerically invisible.
+#[test]
+fn workspace_reuse_is_bitwise_invisible() {
+    use ees::memory::StepWorkspace;
+    use ees::solvers::Stepper;
+
+    let mut rng = Pcg64::new(2024);
+    let (dim, steps, h, batch) = (4, 40, 0.02, 6);
+    let model = NeuralSde::lsde(dim, 10, 2, false, &mut rng);
+    let st = LowStorageStepper::ees25();
+    let paths = sample_paths_par(&mut rng, batch, dim, steps, h, 1);
+    let y0 = vec![0.15; dim];
+
+    // Fresh workspace per step (the wrapper path) vs one reused workspace.
+    let mut fresh = st.init_state(&model, 0.0, &y0);
+    let mut reused = fresh.clone();
+    let mut ws = StepWorkspace::new();
+    for n in 0..steps {
+        let t = n as f64 * h;
+        st.step(&model, t, h, paths[0].increment(n), &mut fresh);
+        st.step_ws(&model, t, h, paths[0].increment(n), &mut reused, &mut ws);
+    }
+    assert_bits_eq(&fresh, &reused, "fresh vs reused workspace state");
+
+    // The pooled per-worker workspaces of the batch engine agree with the
+    // per-call path at P = 1 and P = 4.
+    let y0s: Vec<Vec<f64>> = (0..batch).map(|_| y0.clone()).collect();
+    let reference: Vec<Vec<f64>> = (0..batch)
+        .map(|b| ees::solvers::integrate(&st, &model, 0.0, &y0s[b], &paths[b]))
+        .collect();
+    for par in [1, 4] {
+        let batched = batch_integrate_par(&st, &model, 0.0, &y0s, &paths, par);
+        for (b, (r, t)) in reference.iter().zip(batched.iter()).enumerate() {
+            assert_bits_eq(r, t, &format!("pooled trajectory {b} at P={par}"));
+        }
+    }
+
+    // Manifold side: CF-EES on T𝕋ⁿ, fresh-per-step vs one reused arena.
+    let n_osc = 3;
+    let sp = TTorus::new(n_osc);
+    let mvf = TorusNeuralSde::new(n_osc, 8, &mut Pcg64::new(8));
+    let cf = CfEes::ees25();
+    let mpaths = sample_paths_par(&mut rng, 2, n_osc, steps, h, 1);
+    use ees::solvers::ManifoldStepper;
+    let mut yf = vec![0.2; 2 * n_osc];
+    let mut yr = yf.clone();
+    let mut mws = StepWorkspace::new();
+    for n in 0..steps {
+        let t = n as f64 * h;
+        cf.step(&sp, &mvf, t, h, mpaths[0].increment(n), &mut yf);
+        cf.step_ws(&sp, &mvf, t, h, mpaths[0].increment(n), &mut yr, &mut mws);
+    }
+    assert_bits_eq(&yf, &yr, "manifold fresh vs reused workspace");
+}
+
 #[test]
 fn split_streams_are_schedule_independent() {
     // sample_paths_par must give sample b the same path regardless of how

@@ -18,9 +18,41 @@
 
 use crate::lie::HomogeneousSpace;
 use crate::memory::{MemMeter, MeteredTape, StepWorkspace};
-use crate::rng::BrownianPath;
+use crate::rng::{BrownianPath, BrownianSource};
 use crate::solvers::{ManifoldStepper, Stepper};
 use crate::vf::{DiffManifoldVectorField, DiffVectorField};
+
+/// Per-step driver increments for a uniform grid, either borrowed from a
+/// pre-sampled [`BrownianPath`] or queried on the fly from a
+/// [`BrownianSource`] — the latter is what lets the reversible adjoint walk
+/// the steps backwards with O(1) noise memory (the tree is queried per
+/// step; no `reversed()` path is ever materialised).
+enum StepNoise<'a> {
+    /// Increments read straight from a sampled grid path.
+    Grid(&'a BrownianPath),
+    /// Increments queried from a source over [t0 + n·h, t0 + (n+1)·h].
+    Source {
+        src: &'a dyn BrownianSource,
+        t0: f64,
+        h: f64,
+        buf: Vec<f64>,
+    },
+}
+
+impl StepNoise<'_> {
+    /// Driver increment of step `n` (forward or backward sweeps query the
+    /// same interval — consistency is the source's contract).
+    fn inc(&mut self, n: usize, ws: &mut StepWorkspace) -> &[f64] {
+        match self {
+            StepNoise::Grid(p) => p.increment(n),
+            StepNoise::Source { src, t0, h, buf } => {
+                let a = *t0 + n as f64 * *h;
+                src.increment_ws(a, a + *h, buf, ws);
+                buf
+            }
+        }
+    }
+}
 
 /// Which adjoint realisation to use for the backward pass.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -108,9 +140,63 @@ pub fn grad_euclidean(
     obs: &[usize],
     loss: &dyn ObservationLoss,
 ) -> GradResult {
+    let mut noise = StepNoise::Grid(path);
+    grad_euclidean_noise(
+        stepper,
+        method,
+        vf,
+        t0,
+        y0,
+        path.h,
+        path.steps(),
+        &mut noise,
+        obs,
+        loss,
+    )
+}
+
+/// [`grad_euclidean`] over a query-anywhere noise source: a uniform grid of
+/// `steps` steps spanning [source.t0(), source.t1()], with every increment
+/// — forward *and* backward — queried from the source on the fly. With a
+/// [`crate::rng::VirtualBrownianTree`] the whole forward+backward solve
+/// under the Reversible method holds O(1) state *and* O(1) noise: nothing
+/// grid-shaped is ever materialised.
+pub fn grad_euclidean_source(
+    stepper: &dyn Stepper,
+    method: AdjointMethod,
+    vf: &dyn DiffVectorField,
+    y0: &[f64],
+    source: &dyn BrownianSource,
+    steps: usize,
+    obs: &[usize],
+    loss: &dyn ObservationLoss,
+) -> GradResult {
+    let t0 = source.t0();
+    let h = (source.t1() - t0) / steps as f64;
+    let mut noise = StepNoise::Source {
+        src: source,
+        t0,
+        h,
+        buf: vec![0.0; vf.noise_dim()],
+    };
+    grad_euclidean_noise(stepper, method, vf, t0, y0, h, steps, &mut noise, obs, loss)
+}
+
+/// Shared forward+backward sweep behind [`grad_euclidean`] and
+/// [`grad_euclidean_source`].
+fn grad_euclidean_noise(
+    stepper: &dyn Stepper,
+    method: AdjointMethod,
+    vf: &dyn DiffVectorField,
+    t0: f64,
+    y0: &[f64],
+    h: f64,
+    steps: usize,
+    noise: &mut StepNoise<'_>,
+    obs: &[usize],
+    loss: &dyn ObservationLoss,
+) -> GradResult {
     let dim = vf.dim();
-    let steps = path.steps();
-    let h = path.h;
     let state_size = stepper.state_size(dim);
     let mut meter = MemMeter::new();
     // Constant-cost registers: current state + cotangent.
@@ -136,7 +222,8 @@ pub fn grad_euclidean(
     }
     for n in 0..steps {
         let t = t0 + n as f64 * h;
-        stepper.step_ws(vf, t, h, path.increment(n), &mut state, &mut ws);
+        let dw = noise.inc(n, &mut ws);
+        stepper.step_ws(vf, t, h, dw, &mut state, &mut ws);
         match method {
             AdjointMethod::Full => tape.push(&state, &mut meter),
             AdjointMethod::Recursive => {
@@ -171,14 +258,17 @@ pub fn grad_euclidean(
             }
         }
         let t = t0 + n as f64 * h;
-        let dw = path.increment(n);
         match method {
             AdjointMethod::Full => {
+                let dw = noise.inc(n, &mut ws);
                 stepper.backprop_step_ws(
                     vf, t, h, dw, tape.get(n), &mut lambda, &mut d_theta, &mut ws,
                 );
             }
             AdjointMethod::Reversible => {
+                // The backward sweep re-queries the source per step (for a
+                // virtual tree: no reversed path is ever materialised).
+                let dw = noise.inc(n, &mut ws);
                 stepper.step_back_ws(vf, t, h, dw, &mut state, &mut ws);
                 stepper.backprop_step_ws(vf, t, h, dw, &state, &mut lambda, &mut d_theta, &mut ws);
             }
@@ -192,11 +282,13 @@ pub fn grad_euclidean(
                     seg_buf.push(&s, &mut meter);
                     for m in seg_start..n {
                         let tm = t0 + m as f64 * h;
-                        stepper.step_ws(vf, tm, h, path.increment(m), &mut s, &mut ws);
+                        let dwm = noise.inc(m, &mut ws);
+                        stepper.step_ws(vf, tm, h, dwm, &mut s, &mut ws);
                         seg_buf.push(&s, &mut meter);
                     }
                 }
                 let prev = seg_buf.pop(&mut meter).expect("segment buffer underflow");
+                let dw = noise.inc(n, &mut ws);
                 stepper.backprop_step_ws(vf, t, h, dw, &prev, &mut lambda, &mut d_theta, &mut ws);
             }
         }
@@ -227,9 +319,65 @@ pub fn grad_manifold(
     obs: &[usize],
     loss: &dyn ObservationLoss,
 ) -> GradResult {
+    let mut noise = StepNoise::Grid(path);
+    grad_manifold_noise(
+        stepper,
+        method,
+        sp,
+        vf,
+        t0,
+        y0,
+        path.h,
+        path.steps(),
+        &mut noise,
+        obs,
+        loss,
+    )
+}
+
+/// [`grad_manifold`] over a query-anywhere noise source (see
+/// [`grad_euclidean_source`] for the grid convention and the O(1)-noise
+/// property of the Reversible method).
+pub fn grad_manifold_source(
+    stepper: &dyn ManifoldStepper,
+    method: AdjointMethod,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn DiffManifoldVectorField,
+    y0: &[f64],
+    source: &dyn BrownianSource,
+    steps: usize,
+    obs: &[usize],
+    loss: &dyn ObservationLoss,
+) -> GradResult {
+    let t0 = source.t0();
+    let h = (source.t1() - t0) / steps as f64;
+    let mut noise = StepNoise::Source {
+        src: source,
+        t0,
+        h,
+        buf: vec![0.0; vf.noise_dim()],
+    };
+    grad_manifold_noise(
+        stepper, method, sp, vf, t0, y0, h, steps, &mut noise, obs, loss,
+    )
+}
+
+/// Shared forward+backward sweep behind [`grad_manifold`] and
+/// [`grad_manifold_source`].
+fn grad_manifold_noise(
+    stepper: &dyn ManifoldStepper,
+    method: AdjointMethod,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn DiffManifoldVectorField,
+    t0: f64,
+    y0: &[f64],
+    h: f64,
+    steps: usize,
+    noise: &mut StepNoise<'_>,
+    obs: &[usize],
+    loss: &dyn ObservationLoss,
+) -> GradResult {
     let dim = sp.point_dim();
-    let steps = path.steps();
-    let h = path.h;
     let mut meter = MemMeter::new();
     // Constant registers: state, cotangent, δ register, stage scratch.
     meter.alloc(2 * dim + 2 * sp.algebra_dim());
@@ -257,7 +405,8 @@ pub fn grad_manifold(
     }
     for n in 0..steps {
         let t = t0 + n as f64 * h;
-        stepper.step_ws(sp, vf, t, h, path.increment(n), &mut y, &mut ws);
+        let dw = noise.inc(n, &mut ws);
+        stepper.step_ws(sp, vf, t, h, dw, &mut y, &mut ws);
         match method {
             AdjointMethod::Full => tape.push(&y, &mut meter),
             AdjointMethod::Recursive => {
@@ -288,14 +437,15 @@ pub fn grad_manifold(
             }
         }
         let t = t0 + n as f64 * h;
-        let dw = path.increment(n);
         match method {
             AdjointMethod::Full => {
+                let dw = noise.inc(n, &mut ws);
                 stepper.backprop_step_ws(
                     sp, vf, t, h, dw, tape.get(n), &mut lambda, &mut d_theta, &mut ws,
                 );
             }
             AdjointMethod::Reversible => {
+                let dw = noise.inc(n, &mut ws);
                 stepper.step_back_ws(sp, vf, t, h, dw, &mut y, &mut ws);
                 stepper.backprop_step_ws(
                     sp, vf, t, h, dw, &y, &mut lambda, &mut d_theta, &mut ws,
@@ -309,11 +459,13 @@ pub fn grad_manifold(
                     seg_buf.push(&s, &mut meter);
                     for m in seg_start..n {
                         let tm = t0 + m as f64 * h;
-                        stepper.step_ws(sp, vf, tm, h, path.increment(m), &mut s, &mut ws);
+                        let dwm = noise.inc(m, &mut ws);
+                        stepper.step_ws(sp, vf, tm, h, dwm, &mut s, &mut ws);
                         seg_buf.push(&s, &mut meter);
                     }
                 }
                 let prev = seg_buf.pop(&mut meter).expect("segment buffer underflow");
+                let dw = noise.inc(n, &mut ws);
                 stepper.backprop_step_ws(
                     sp, vf, t, h, dw, &prev, &mut lambda, &mut d_theta, &mut ws,
                 );

@@ -49,8 +49,8 @@ use crate::lie::HomogeneousSpace;
 use crate::losses::BatchLoss;
 use crate::memory::{MemMeter, MeteredTape, WorkspacePool};
 use crate::nn::optim::{clip_global_norm, Optimizer};
-use crate::rng::{BrownianPath, Pcg64};
-use crate::solvers::{ManifoldStepper, Stepper};
+use crate::rng::{BrownianPath, BrownianSource, Pcg64, VirtualBrownianTree};
+use crate::solvers::{AdaptiveController, AdaptiveResult, ManifoldStepper, Stepper};
 use crate::vf::{DiffManifoldVectorField, DiffVectorField, VectorField};
 use std::time::Instant;
 
@@ -157,6 +157,82 @@ pub fn sample_paths_par(
         let mut s = streams[b].clone();
         BrownianPath::sample(&mut s, dim, steps, h)
     })
+}
+
+/// Derive `batch` independent [`VirtualBrownianTree`]s over [t0, t1] from
+/// per-sample [`Pcg64::split`] streams — the tree analogue of
+/// [`sample_paths_par`].
+///
+/// Seeds are derived **sequentially, in index order, on the calling
+/// thread** (the same contract as path sampling: `split` advances the
+/// parent generator, so split order is part of the determinism story). The
+/// trees themselves are stateless, so no parallel phase is needed at all:
+/// handing tree `b` to any worker yields bitwise-identical queries at any
+/// worker count.
+pub fn sample_trees(
+    rng: &mut Pcg64,
+    batch: usize,
+    dim: usize,
+    t0: f64,
+    t1: f64,
+    depth: u32,
+) -> Vec<VirtualBrownianTree> {
+    (0..batch)
+        .map(|b| {
+            let seed = rng.split(b as u64).next_u64();
+            VirtualBrownianTree::new(seed, dim, t0, t1, depth)
+        })
+        .collect()
+}
+
+/// Adaptively integrate a batch of Euclidean SDEs in parallel, one virtual
+/// Brownian tree per sample (see
+/// [`crate::solvers::integrate_adaptive_sde`]). Per-sample accept/reject
+/// histories are independent, so outputs are bitwise-identical at any
+/// `parallelism`.
+pub fn batch_integrate_adaptive_par(
+    vf: &dyn VectorField,
+    y0s: &[Vec<f64>],
+    trees: &[VirtualBrownianTree],
+    h0: f64,
+    ctrl: &AdaptiveController,
+    parallelism: usize,
+) -> Vec<AdaptiveResult> {
+    let ws_pool = WorkspacePool::new();
+    parallel_map(parallelism, y0s.len(), |b| {
+        let mut ws = ws_pool.take();
+        let tree = &trees[b];
+        let res = crate::solvers::integrate_adaptive_sde_ws(
+            vf,
+            tree,
+            tree.t0(),
+            tree.t1(),
+            &y0s[b],
+            h0,
+            ctrl,
+            &mut ws,
+        );
+        ws_pool.put(ws);
+        res
+    })
+}
+
+/// [`batch_integrate_adaptive_par`] at the configured default parallelism.
+pub fn batch_integrate_adaptive(
+    vf: &dyn VectorField,
+    y0s: &[Vec<f64>],
+    trees: &[VirtualBrownianTree],
+    h0: f64,
+    ctrl: &AdaptiveController,
+) -> Vec<AdaptiveResult> {
+    batch_integrate_adaptive_par(
+        vf,
+        y0s,
+        trees,
+        h0,
+        ctrl,
+        crate::config::default_parallelism(),
+    )
 }
 
 /// [`sample_paths_par`] at the configured default parallelism.
@@ -708,6 +784,35 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Adaptive batch solves over per-sample virtual Brownian trees are
+    /// bitwise worker-count-invariant, including the accept/reject
+    /// histories.
+    #[test]
+    fn adaptive_batch_bitwise_invariant_in_parallelism() {
+        let mut rng = Pcg64::new(55);
+        let model = NeuralSde::lsde(2, 6, 2, false, &mut rng);
+        let batch = 6;
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.2, -0.1]).collect();
+        let trees = {
+            let mut root = Pcg64::new(77);
+            sample_trees(&mut root, batch, 2, 0.0, 1.0, 16)
+        };
+        let ctrl = AdaptiveController::default();
+        let base = batch_integrate_adaptive_par(&model, &y0s, &trees, 0.1, &ctrl, 1);
+        for p in [2, 4, 8] {
+            let run = batch_integrate_adaptive_par(&model, &y0s, &trees, 0.1, &ctrl, p);
+            for (a, b) in base.iter().zip(run.iter()) {
+                assert_eq!(a.steps_accepted, b.steps_accepted, "P={p}");
+                assert_eq!(a.steps_rejected, b.steps_rejected, "P={p}");
+                for (x, y) in a.y.iter().zip(b.y.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "P={p}");
+                }
+            }
+        }
+        // Distinct samples see distinct noise: terminal states differ.
+        assert_ne!(base[0].y, base[1].y);
     }
 
     /// Split-stream path sampling is parallelism-invariant and per-sample

@@ -9,10 +9,18 @@
 //! 3. **MCF coupling λ** — the coupling parameter trades stability region
 //!    size against conditioning of the inverse map (the 1/λ amplification
 //!    in step_back).
+//! 4. **Fixed-step vs adaptive EES** — the adaptive-SDE stack (virtual
+//!    Brownian tree + embedded EES + PI controller) against fixed-step EES
+//!    at matched evaluation budgets on the stiff stochastic-volatility SDE
+//!    and the (chart-lifted) stochastic Kuramoto network.
 
 use crate::bench::{bench, fmt, Table};
-use crate::rng::{BrownianPath, Pcg64};
-use crate::solvers::{LowStorageStepper, Mcf, RkStepper, Stepper};
+use crate::models::kuramoto::KuramotoParams;
+use crate::models::stochvol::stiff_stochvol_field;
+use crate::rng::{BrownianPath, Pcg64, VirtualBrownianTree};
+use crate::solvers::{
+    integrate_adaptive_sde, AdaptiveController, LowStorageStepper, Mcf, RkStepper, Stepper,
+};
 use crate::stability::{real_axis_stability_limit, StabilityScheme};
 use crate::tableau::Tableau;
 use crate::vf::{ClosureField, VectorField};
@@ -167,12 +175,131 @@ pub fn ablate_mcf_lambda() -> String {
     format!("== Ablation: MCF coupling parameter ==\n{}", t.render())
 }
 
+/// The stochastic Kuramoto network of Section 4 lifted to the flat chart
+/// ℝ²ᴺ (angles unwrapped) so the Euclidean adaptive loop can drive it; the
+/// dynamics are 2π-periodic, so the chart lift is exact over moderate
+/// horizons.
+fn kuramoto_chart_field(n: usize) -> impl VectorField {
+    let p = KuramotoParams::paper(n);
+    let omega_nat = p.omega.clone();
+    let (kn, inv_m) = (p.coupling / n as f64, 1.0 / p.mass);
+    let sig = (2.0 * p.d).sqrt() * inv_m;
+    ClosureField {
+        dim: 2 * n,
+        noise_dim: n,
+        drift: move |_t, y: &[f64], out: &mut [f64]| {
+            let (theta, omega) = y.split_at(n);
+            let (mut c, mut s) = (0.0, 0.0);
+            for &t in theta {
+                c += t.cos();
+                s += t.sin();
+            }
+            for i in 0..n {
+                out[i] = omega[i];
+                let coupling = kn * (s * theta[i].cos() - c * theta[i].sin());
+                out[n + i] = inv_m * (-omega[i] + omega_nat[i] + coupling);
+            }
+        },
+        diffusion: move |_t, _y: &[f64], dw: &[f64], out: &mut [f64]| {
+            for o in out.iter_mut().take(n) {
+                *o = 0.0;
+            }
+            for i in 0..n {
+                out[n + i] = sig * dw[i];
+            }
+        },
+    }
+}
+
+/// One adaptive-vs-fixed comparison row set for a model: fixed-step EES at
+/// the budget-matched grid, then the adaptive loop at a tolerance ladder,
+/// all driven by the SAME virtual Brownian tree (so errors are path errors,
+/// not sampling noise).
+fn adaptive_rows(
+    t: &mut Table,
+    name: &str,
+    vf: &dyn VectorField,
+    y0: &[f64],
+    seed: u64,
+    t_end: f64,
+) {
+    let tree = VirtualBrownianTree::new(seed, vf.noise_dim(), 0.0, t_end, 22);
+    let st = LowStorageStepper::ees25();
+    // Fine fixed-step reference on the same path (2^11 dyadic steps).
+    let fine = tree.sample_path(2048);
+    let ref_traj = crate::solvers::integrate(&st, vf, 0.0, y0, &fine);
+    let y_ref = &ref_traj[2048 * vf.dim()..];
+    let err_vs_ref = |y: &[f64]| -> f64 {
+        y.iter()
+            .zip(y_ref.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max)
+    };
+    // Budget-matched fixed grid: 64 steps × 3 evals.
+    let coarse = tree.sample_path(64);
+    let traj = crate::solvers::integrate(&st, vf, 0.0, y0, &coarse);
+    let y_fix = &traj[64 * vf.dim()..];
+    t.row(&[
+        name.into(),
+        "fixed h=T/64".into(),
+        "64".into(),
+        "0".into(),
+        format!("{}", 64 * 3),
+        fmt(err_vs_ref(y_fix)),
+    ]);
+    for &rtol in &[1e-2, 1e-3, 1e-4] {
+        let ctrl = AdaptiveController {
+            rtol,
+            atol: 1e-6,
+            ..Default::default()
+        };
+        let res = integrate_adaptive_sde(vf, &tree, 0.0, t_end, y0, t_end / 4.0, &ctrl);
+        let trials = res.steps_accepted + res.steps_rejected;
+        t.row(&[
+            name.into(),
+            format!("rtol {rtol:.0e}"),
+            res.steps_accepted.to_string(),
+            res.steps_rejected.to_string(),
+            format!("{}", trials * 4),
+            fmt(err_vs_ref(&res.y)),
+        ]);
+    }
+}
+
+/// Ablation 4: fixed-step vs adaptive EES on the stiff stochvol SDE and the
+/// Kuramoto network, one virtual Brownian tree per model.
+pub fn ablate_adaptive() -> String {
+    let mut t = Table::new(&[
+        "model",
+        "mode",
+        "accepted",
+        "rejected",
+        "VF evals",
+        "err vs fine",
+    ]);
+    let sv = stiff_stochvol_field();
+    adaptive_rows(&mut t, "stiff stochvol", &sv, &[0.0, 0.04], 101, 1.0);
+    let n = 4;
+    let ku = kuramoto_chart_field(n);
+    let mut y0 = vec![0.0; 2 * n];
+    for (i, v) in y0.iter_mut().enumerate().take(n) {
+        *v = 0.4 * (i as f64) - 0.6;
+    }
+    adaptive_rows(&mut t, "Kuramoto N=4 (chart)", &ku, &y0, 202, 2.0);
+    format!(
+        "== Ablation: fixed-step vs adaptive EES (virtual Brownian tree) ==\n{}",
+        t.render()
+    )
+}
+
 pub fn run() -> String {
     let mut out = ablate_x();
     out.push('\n');
     out.push_str(&ablate_2n(512));
     out.push('\n');
     out.push_str(&ablate_mcf_lambda());
+    out.push('\n');
+    out.push_str(&ablate_adaptive());
     out
 }
 
@@ -196,6 +323,70 @@ mod tests {
         assert!(
             limits.iter().all(|&l| l == limits[0]),
             "stability limit must be x-independent: {limits:?}"
+        );
+    }
+
+    /// The chart lift used by the adaptive ablation is exact: the flat
+    /// `ClosureField` reproduces the T𝕋ᴺ generator of the Kuramoto model
+    /// coordinate-by-coordinate.
+    #[test]
+    fn kuramoto_chart_matches_manifold_generator() {
+        use crate::vf::ManifoldVectorField;
+        let n = 5;
+        let p = KuramotoParams::paper(n);
+        let mf = p.as_field();
+        let cf = kuramoto_chart_field(n);
+        let y: Vec<f64> = vec![0.2, -1.0, 2.2, 0.7, -0.4, 0.1, -0.3, 0.5, 0.0, 0.2];
+        let dw = [0.1, -0.2, 0.3, 0.0, -0.1];
+        let (h, t) = (0.05, 0.3);
+        let mut a = vec![0.0; 2 * n];
+        let mut b = vec![0.0; 2 * n];
+        mf.generator(t, &y, h, &dw, &mut a);
+        cf.combined(t, &y, h, &dw, &mut b);
+        for (i, (x, z)) in a.iter().zip(b.iter()).enumerate() {
+            assert!((x - z).abs() < 1e-12, "coord {i}: {x} vs {z}");
+        }
+    }
+
+    /// The adaptive arm really exercises the controller on the stiff
+    /// stochvol SDE: a coarse h₀ is rejected at least once, and tightening
+    /// rtol buys more steps and a smaller path error.
+    #[test]
+    fn adaptive_arm_exercises_controller() {
+        let vf = stiff_stochvol_field();
+        let tree = VirtualBrownianTree::new(101, 2, 0.0, 1.0, 22);
+        let y0 = [0.0, 0.04];
+        let run = |rtol: f64| {
+            let ctrl = AdaptiveController {
+                rtol,
+                atol: 1e-6,
+                ..Default::default()
+            };
+            integrate_adaptive_sde(&vf, &tree, 0.0, 1.0, &y0, 0.25, &ctrl)
+        };
+        let loose = run(1e-2);
+        let tight = run(1e-4);
+        assert!(loose.steps_rejected >= 1, "stiff h0 must reject");
+        assert!(
+            tight.steps_accepted > loose.steps_accepted,
+            "{} vs {}",
+            tight.steps_accepted,
+            loose.steps_accepted
+        );
+        let st = LowStorageStepper::ees25();
+        let fine = tree.sample_path(2048);
+        let ref_traj = crate::solvers::integrate(&st, &vf, 0.0, &y0, &fine);
+        let y_ref = &ref_traj[2048 * 2..];
+        let err = |y: &[f64]| {
+            y.iter()
+                .zip(y_ref.iter())
+                .map(|(p, q)| (p - q).abs())
+                .fold(0.0f64, f64::max)
+        };
+        assert!(
+            err(&tight.y) < 5e-2,
+            "tight-tolerance path error too large: {}",
+            err(&tight.y)
         );
     }
 

@@ -63,7 +63,7 @@ pub fn run_scheme(
         let path = fbm_driver(&mut rng, hurst, fine, 1.0 / fine as f64);
         let ref_traj = crate::solvers::integrate(st, &vf, 0.0, &[1.0], &path);
         for (ci, &k) in coarsenings.iter().enumerate() {
-            let coarse = path.coarsen(k);
+            let coarse = path.coarsen(k).expect("coarsenings divide the fine grid");
             let traj = crate::solvers::integrate(st, &vf, 0.0, &[1.0], &coarse);
             // Max error over the coarse grid vs the fine reference.
             let mut maxe: f64 = 0.0;

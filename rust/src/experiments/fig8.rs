@@ -62,7 +62,7 @@ pub fn run_scheme(st: &CfEes, name: &str, hurst: f64, scale: Scale) -> CfConverg
         let ref_traj =
             crate::solvers::integrate_manifold(st, &sp, &vf, 0.0, &eye(3), &path);
         for (ci, &k) in coarsenings.iter().enumerate() {
-            let coarse = path.coarsen(k);
+            let coarse = path.coarsen(k).expect("coarsenings divide the fine grid");
             let traj =
                 crate::solvers::integrate_manifold(st, &sp, &vf, 0.0, &eye(3), &coarse);
             let mut maxe: f64 = 0.0;

@@ -51,8 +51,8 @@ pub fn run_points(scale: Scale) -> Vec<BudgetErr> {
             // EES(2,5): budget/3 steps; EES(2,7): budget/4 steps.
             let k25 = fine / (budget / 3);
             let k27 = fine / (budget / 4);
-            let c25 = path.coarsen(k25);
-            let c27 = path.coarsen(k27);
+            let c25 = path.coarsen(k25).expect("budget steps divide the fine grid");
+            let c27 = path.coarsen(k27).expect("budget steps divide the fine grid");
             let t25 = crate::solvers::integrate(&st25, &vf, 0.0, &[0.5], &c25);
             let t27 = crate::solvers::integrate(&st27, &vf, 0.0, &[0.5], &c27);
             e25 += (t25[c25.steps()] - y_ref).powi(2) / reps as f64;

@@ -78,7 +78,10 @@ pub fn run_rows(scale: Scale) -> Vec<FidelityRow> {
     let mut rows = Vec::new();
     for &steps in &steps_list {
         let k = steps_ref / steps;
-        let paths: Vec<BrownianPath> = fine_paths.iter().map(|p| p.coarsen(k)).collect();
+        let paths: Vec<BrownianPath> = fine_paths
+            .iter()
+            .map(|p| p.coarsen(k).expect("step ladder divides the fine grid"))
+            .collect();
         let obs = vec![steps];
         let mut grads: Vec<Vec<f64>> = Vec::new();
         for adj in [

@@ -10,6 +10,35 @@
 //! on a fine grid and recording at noise times.
 
 use crate::rng::{fbm::riemann_liouville, Pcg64};
+use crate::vf::{ClosureField, VectorField};
+
+/// The stiff stochastic-volatility SDE of the adaptive-stepping workload:
+/// log-price + fast mean-reverting CIR variance (λ = 20; partial
+/// truncation à la Lord et al. — the diffusion sees √v⁺, the drift raw v),
+///
+///   ds = −v/2 dt + √v⁺ dW¹,   dv = λ(v̄ − v) dt + ν √v⁺ dW².
+///
+/// Shared by the fixed-vs-adaptive ablation and the adaptive-solver
+/// acceptance tests so both exercise the SAME benchmark dynamics; the
+/// natural initial state is `[0.0, 0.04]` (log-price 0 at the stationary
+/// variance).
+pub fn stiff_stochvol_field() -> impl VectorField {
+    let (lam, vbar, nu) = (20.0, 0.04, 0.4);
+    ClosureField {
+        dim: 2,
+        noise_dim: 2,
+        drift: move |_t, y: &[f64], out: &mut [f64]| {
+            let v = y[1].max(0.0);
+            out[0] = -0.5 * v;
+            out[1] = lam * (vbar - y[1]);
+        },
+        diffusion: move |_t, y: &[f64], dw: &[f64], out: &mut [f64]| {
+            let sv = y[1].max(0.0).sqrt();
+            out[0] = sv * dw[0];
+            out[1] = nu * sv * dw[1];
+        },
+    }
+}
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum VolModel {

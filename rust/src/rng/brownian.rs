@@ -1,0 +1,552 @@
+//! Query-anywhere Brownian noise sources.
+//!
+//! Every solver in the crate consumes driver increments; a fixed-grid
+//! [`BrownianPath`] can only answer queries aligned with the grid it was
+//! sampled on, which forces fixed-step integration. [`BrownianSource`]
+//! abstracts the driver into "give me W(t) − W(s) for *any* interval", which
+//! is what true adaptive stepping needs: a rejected step re-queries a
+//! shorter prefix of the *same* Brownian path (bridge refinement), never
+//! fresh noise.
+//!
+//! Two implementations:
+//!
+//! - [`BrownianPath`] (adapter): linear interpolation of the sampled
+//!   cumulative path — exact on grid-aligned queries, O(cells-in-range) per
+//!   query, used to drive the new entry points from pre-sampled grids.
+//! - [`VirtualBrownianTree`]: the virtual Brownian tree of Li et al.
+//!   (*Scalable Gradients for Stochastic Differential Equations*), refined
+//!   by the Brownian Interval of Kidger et al.: a splittable, counter-seeded
+//!   dyadic tree that materialises **no** path. Each query descends from the
+//!   root interval by Brownian-bridge midpoint splitting, drawing every
+//!   midpoint normal from a PRNG keyed purely by the dyadic node id — so
+//!   `W(s,t)` is a pure function of `(seed, s, t)`: bitwise-identical
+//!   regardless of query order, thread, worker count, or interleaving with
+//!   rejected adaptive steps. Memory is O(1) per query (all scratch comes
+//!   from the caller's [`StepWorkspace`]), on the forward *and* the reversed
+//!   pass — the reversible adjoint queries the tree backwards instead of
+//!   materialising `BrownianPath::reversed`.
+
+use super::{splitmix64, BrownianPath, Pcg64};
+use crate::memory::StepWorkspace;
+
+/// A Brownian motion queryable over arbitrary intervals.
+///
+/// Implementations must be *consistent*: for s ≤ m ≤ t,
+/// `W(s,t) = W(s,m) + W(m,t)` up to floating-point rounding, and repeated
+/// queries of the same interval must return identical values — the contract
+/// that makes adaptive accept/reject loops well-defined (a rejected step
+/// shrinks `h` and re-queries a prefix of the same increment).
+pub trait BrownianSource: Send + Sync {
+    /// Driver dimension.
+    fn dim(&self) -> usize;
+    /// Start of the supported time interval.
+    fn t0(&self) -> f64;
+    /// End of the supported time interval.
+    fn t1(&self) -> f64;
+    /// Write W(t) − W(s) into `out` (length [`Self::dim`]), drawing any
+    /// scratch from `ws` — allocation-free once the workspace is warm.
+    fn increment_ws(&self, s: f64, t: f64, out: &mut [f64], ws: &mut StepWorkspace);
+
+    /// [`Self::increment_ws`] with a transient workspace (cold call sites).
+    fn increment_into(&self, s: f64, t: f64, out: &mut [f64]) {
+        self.increment_ws(s, t, out, &mut StepWorkspace::new());
+    }
+}
+
+/// Grid adapter: a pre-sampled [`BrownianPath`] answers arbitrary-interval
+/// queries by linear interpolation of its cumulative path (the path is
+/// anchored at t = 0). Queries aligned with the generation grid recover the
+/// stored increments; sub-cell queries interpolate, which is the correct
+/// conditional *mean* of the bridge but carries no sub-cell fluctuation —
+/// use [`VirtualBrownianTree`] when sub-grid resolution matters.
+impl BrownianSource for BrownianPath {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn t0(&self) -> f64 {
+        0.0
+    }
+    fn t1(&self) -> f64 {
+        self.h * self.steps() as f64
+    }
+    fn increment_ws(&self, s: f64, t: f64, out: &mut [f64], _ws: &mut StepWorkspace) {
+        out.fill(0.0);
+        let steps = self.steps();
+        if steps == 0 || self.dim == 0 {
+            return;
+        }
+        let end = self.h * steps as f64;
+        let (lo, hi, sign) = if t >= s { (s, t, 1.0) } else { (t, s, -1.0) };
+        let lo = lo.clamp(0.0, end);
+        let hi = hi.clamp(0.0, end);
+        let n0 = ((lo / self.h).floor() as usize).min(steps);
+        let n1 = ((hi / self.h).ceil() as usize).min(steps);
+        for n in n0..n1 {
+            let a = n as f64 * self.h;
+            let b = a + self.h;
+            let frac = ((hi.min(b) - lo.max(a)) / self.h).clamp(0.0, 1.0);
+            if frac <= 0.0 {
+                continue;
+            }
+            let dw = self.increment(n);
+            for (o, w) in out.iter_mut().zip(dw.iter()) {
+                *o += sign * frac * w;
+            }
+        }
+    }
+}
+
+/// The all-zeros driver: turns any SDE entry point into its ODE restriction
+/// (dW ≡ 0). Used by [`crate::solvers::integrate_adaptive`] so the adaptive
+/// ODE and SDE loops share one implementation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ZeroNoise {
+    /// Driver dimension (the length of every increment written).
+    pub dim: usize,
+}
+
+impl ZeroNoise {
+    /// Zero driver of the given dimension.
+    pub fn new(dim: usize) -> Self {
+        Self { dim }
+    }
+}
+
+impl BrownianSource for ZeroNoise {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn t0(&self) -> f64 {
+        f64::NEG_INFINITY
+    }
+    fn t1(&self) -> f64 {
+        f64::INFINITY
+    }
+    fn increment_ws(&self, _s: f64, _t: f64, out: &mut [f64], _ws: &mut StepWorkspace) {
+        out.fill(0.0);
+    }
+}
+
+/// Virtual Brownian tree: O(1)-memory, splittable, query-anywhere Brownian
+/// motion on [t0, t1].
+///
+/// Every dyadic node's midpoint normal comes from a fresh [`Pcg64`] seeded
+/// by a counter-based hash of `(seed, level, index)` — no node stores state,
+/// so the tree is `Clone + Send + Sync` for free and per-sample trees can be
+/// fanned out across workers without any coordination. Queries below the
+/// configured dyadic `depth` resolve by linear interpolation inside the leaf
+/// (the Li et al. scheme): the tolerance is `span() / 2^depth`.
+///
+/// ```
+/// use ees::memory::StepWorkspace;
+/// use ees::rng::{BrownianSource, VirtualBrownianTree};
+///
+/// let tree = VirtualBrownianTree::new(42, 2, 0.0, 1.0, 12);
+/// let mut ws = StepWorkspace::new();
+/// let (mut a, mut b, mut c) = ([0.0; 2], [0.0; 2], [0.0; 2]);
+/// // Consistency: W(0.2, 0.8) = W(0.2, 0.5) + W(0.5, 0.8).
+/// tree.increment_ws(0.2, 0.8, &mut a, &mut ws);
+/// tree.increment_ws(0.2, 0.5, &mut b, &mut ws);
+/// tree.increment_ws(0.5, 0.8, &mut c, &mut ws);
+/// for d in 0..2 {
+///     assert!((a[d] - (b[d] + c[d])).abs() < 1e-12);
+/// }
+/// // Determinism: re-querying (in any order) reproduces the same bits.
+/// let mut a2 = [0.0; 2];
+/// tree.increment_ws(0.2, 0.8, &mut a2, &mut ws);
+/// assert_eq!(a[0].to_bits(), a2[0].to_bits());
+/// ```
+#[derive(Clone, Debug)]
+pub struct VirtualBrownianTree {
+    seed: u64,
+    dim: usize,
+    t0: f64,
+    t1: f64,
+    depth: u32,
+}
+
+impl VirtualBrownianTree {
+    /// Tree over [t0, t1] resolving dyadic intervals down to
+    /// `(t1 − t0) / 2^depth`; queries below that are bridge-interpolated.
+    pub fn new(seed: u64, dim: usize, t0: f64, t1: f64, depth: u32) -> Self {
+        assert!(t1 > t0, "VirtualBrownianTree: t1 must exceed t0");
+        assert!(dim > 0, "VirtualBrownianTree: dim must be positive");
+        assert!(depth <= 52, "VirtualBrownianTree: depth capped at 52");
+        Self {
+            seed,
+            dim,
+            t0,
+            t1,
+            depth,
+        }
+    }
+
+    /// Tree whose dyadic resolution is at least as fine as `tol` (the leaf
+    /// length): depth = ⌈log2((t1 − t0) / tol)⌉, clamped to [0, 52].
+    pub fn with_tolerance(seed: u64, dim: usize, t0: f64, t1: f64, tol: f64) -> Self {
+        assert!(tol > 0.0, "VirtualBrownianTree: tolerance must be positive");
+        let depth = ((t1 - t0) / tol).log2().ceil().clamp(0.0, 52.0) as u32;
+        Self::new(seed, dim, t0, t1, depth)
+    }
+
+    /// Dyadic resolution depth.
+    pub fn depth(&self) -> u32 {
+        self.depth
+    }
+
+    /// Length of the covered time interval.
+    pub fn span(&self) -> f64 {
+        self.t1 - self.t0
+    }
+
+    /// Counter-based node seed: a pure hash of (seed, level, index) — the
+    /// stateless analogue of [`Pcg64::split`] keyed per dyadic node.
+    fn node_seed(&self, level: u32, index: u64) -> u64 {
+        let mut s = self
+            .seed
+            .wrapping_add((level as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mixed = splitmix64(&mut s) ^ index.wrapping_mul(0xA24BAED4963EE407);
+        let mut z = mixed;
+        splitmix64(&mut z)
+    }
+
+    /// Fill `out` with the standard normals of the given dyadic node.
+    fn node_normals(&self, level: u32, index: u64, out: &mut [f64]) {
+        let mut g = Pcg64::new(self.node_seed(level, index));
+        g.fill_normal(out);
+    }
+
+    /// Initialise the root interval state: W(t0) = 0,
+    /// W(t1) ~ N(0, (t1 − t0)·I) from node (0, 0).
+    fn root_state(&self, w_lo: &mut [f64], w_hi: &mut [f64], z: &mut [f64]) {
+        self.node_normals(0, 0, z);
+        let sqrt_len = (self.t1 - self.t0).sqrt();
+        for d in 0..self.dim {
+            w_lo[d] = 0.0;
+            w_hi[d] = sqrt_len * z[d];
+        }
+    }
+
+    /// Finish a bridge descent towards `tt` from the interval
+    /// (`level`, `index`) = [lo, hi] with endpoint values `w_lo0`/`w_hi0`,
+    /// writing W(tt) − W(t0) into `out`. Arithmetic is identical to a
+    /// descent from the root, so any split point yields bitwise-equal
+    /// results.
+    fn descend_from(
+        &self,
+        tt: f64,
+        mut level: u32,
+        mut index: u64,
+        mut lo: f64,
+        mut hi: f64,
+        w_lo0: &[f64],
+        w_hi0: &[f64],
+        out: &mut [f64],
+        z: &mut [f64],
+        ws: &mut StepWorkspace,
+    ) {
+        let dim = self.dim;
+        let mut w_lo = ws.take_copy(w_lo0);
+        let mut w_hi = ws.take_copy(w_hi0);
+        while level < self.depth {
+            let mid = 0.5 * (lo + hi);
+            // Bridge: W(mid) | W(lo), W(hi) ~ N((W(lo)+W(hi))/2, (hi−lo)/4).
+            // The midpoint of interval (level, index) is keyed (level+1,
+            // index) — dyadic points have a unique (level, odd-numerator)
+            // id, so no key collides with the root's (0, 0).
+            self.node_normals(level + 1, index, z);
+            let half_sd = 0.5 * (hi - lo).sqrt();
+            if tt < mid {
+                for d in 0..dim {
+                    w_hi[d] = 0.5 * (w_lo[d] + w_hi[d]) + half_sd * z[d];
+                }
+                hi = mid;
+                index *= 2;
+            } else {
+                for d in 0..dim {
+                    w_lo[d] = 0.5 * (w_lo[d] + w_hi[d]) + half_sd * z[d];
+                }
+                lo = mid;
+                index = 2 * index + 1;
+            }
+            level += 1;
+        }
+        // Leaf: linear (conditional-mean) interpolation.
+        let frac = if hi > lo { (tt - lo) / (hi - lo) } else { 0.0 };
+        for d in 0..dim {
+            out[d] = w_lo[d] + frac * (w_hi[d] - w_lo[d]);
+        }
+        ws.put(w_hi);
+        ws.put(w_lo);
+    }
+
+    /// Write W(t) − W(t0) into `out` by bridge descent from the root.
+    pub fn w_at_ws(&self, t: f64, out: &mut [f64], ws: &mut StepWorkspace) {
+        let dim = self.dim;
+        let tt = t.clamp(self.t0, self.t1);
+        let mut w_lo = ws.take(dim);
+        let mut w_hi = ws.take(dim);
+        let mut z = ws.take(dim);
+        self.root_state(&mut w_lo, &mut w_hi, &mut z);
+        self.descend_from(tt, 0, 0, self.t0, self.t1, &w_lo, &w_hi, out, &mut z, ws);
+        ws.put(z);
+        ws.put(w_hi);
+        ws.put(w_lo);
+    }
+
+    /// [`Self::w_at_ws`] with a transient workspace.
+    pub fn w_at(&self, t: f64, out: &mut [f64]) {
+        self.w_at_ws(t, out, &mut StepWorkspace::new());
+    }
+
+    /// Materialise a fixed grid of `steps` increments over [t0, t1] by
+    /// querying the tree — the bridge between the adaptive world and every
+    /// fixed-step `BrownianPath` consumer. When `steps` is a power of two
+    /// ≤ 2^depth the grid hits dyadic nodes exactly, so coarsening the
+    /// result is consistent with querying the tree at the coarse times.
+    pub fn sample_path(&self, steps: usize) -> BrownianPath {
+        assert!(steps > 0, "sample_path: steps must be positive");
+        let h = (self.t1 - self.t0) / steps as f64;
+        let mut dw = vec![0.0; steps * self.dim];
+        let mut ws = StepWorkspace::new();
+        for n in 0..steps {
+            let a = self.t0 + n as f64 * h;
+            let b = a + h;
+            self.increment_ws(a, b, &mut dw[n * self.dim..(n + 1) * self.dim], &mut ws);
+        }
+        BrownianPath { h, dim: self.dim, dw }
+    }
+}
+
+impl BrownianSource for VirtualBrownianTree {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn t0(&self) -> f64 {
+        self.t0
+    }
+    fn t1(&self) -> f64 {
+        self.t1
+    }
+    fn increment_ws(&self, s: f64, t: f64, out: &mut [f64], ws: &mut StepWorkspace) {
+        let dim = self.dim;
+        let sc = s.clamp(self.t0, self.t1);
+        let tc = t.clamp(self.t0, self.t1);
+        let mut w_lo = ws.take(dim);
+        let mut w_hi = ws.take(dim);
+        let mut z = ws.take(dim);
+        self.root_state(&mut w_lo, &mut w_hi, &mut z);
+        // Shared-prefix descent: while both endpoints fall in the same
+        // child, refine once for the pair — the node draws and arithmetic
+        // are identical to two solo descents, so the split is bitwise
+        // invisible, but the (usually long, for short steps) common prefix
+        // is walked once instead of twice.
+        let (mut lo, mut hi) = (self.t0, self.t1);
+        let mut index = 0u64;
+        let mut level = 0u32;
+        while level < self.depth {
+            let mid = 0.5 * (lo + hi);
+            if (sc < mid) != (tc < mid) {
+                break;
+            }
+            self.node_normals(level + 1, index, &mut z);
+            let half_sd = 0.5 * (hi - lo).sqrt();
+            if sc < mid {
+                for d in 0..dim {
+                    w_hi[d] = 0.5 * (w_lo[d] + w_hi[d]) + half_sd * z[d];
+                }
+                hi = mid;
+                index *= 2;
+            } else {
+                for d in 0..dim {
+                    w_lo[d] = 0.5 * (w_lo[d] + w_hi[d]) + half_sd * z[d];
+                }
+                lo = mid;
+                index = 2 * index + 1;
+            }
+            level += 1;
+        }
+        // Fork: finish each endpoint independently from the shared node.
+        let mut w_s = ws.take(dim);
+        self.descend_from(sc, level, index, lo, hi, &w_lo, &w_hi, &mut w_s, &mut z, ws);
+        self.descend_from(tc, level, index, lo, hi, &w_lo, &w_hi, out, &mut z, ws);
+        for (o, w) in out.iter_mut().zip(w_s.iter()) {
+            *o -= w;
+        }
+        ws.put(w_s);
+        ws.put(z);
+        ws.put(w_hi);
+        ws.put(w_lo);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_adapter_recovers_stored_increments() {
+        let mut rng = Pcg64::new(1);
+        let bp = BrownianPath::sample(&mut rng, 3, 16, 0.25);
+        let mut ws = StepWorkspace::new();
+        let mut out = [0.0; 3];
+        for n in 0..16 {
+            let a = n as f64 * 0.25;
+            bp.increment_ws(a, a + 0.25, &mut out, &mut ws);
+            for d in 0..3 {
+                assert!(
+                    (out[d] - bp.increment(n)[d]).abs() < 1e-12,
+                    "step {n} dim {d}"
+                );
+            }
+        }
+        // Multi-cell query = sum of increments.
+        bp.increment_ws(0.25, 1.0, &mut out, &mut ws);
+        for d in 0..3 {
+            let want: f64 = (1..4).map(|n| bp.increment(n)[d]).sum();
+            assert!((out[d] - want).abs() < 1e-12);
+        }
+        // Reversed endpoints negate; sub-cell queries interpolate linearly.
+        let mut rev = [0.0; 3];
+        bp.increment_ws(1.0, 0.25, &mut rev, &mut ws);
+        for d in 0..3 {
+            assert!((rev[d] + out[d]).abs() < 1e-12);
+        }
+        let mut half = [0.0; 3];
+        bp.increment_ws(0.0, 0.125, &mut half, &mut ws);
+        for d in 0..3 {
+            assert!((half[d] - 0.5 * bp.increment(0)[d]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn vbt_is_bitwise_deterministic_in_query_order() {
+        let tree = VirtualBrownianTree::new(7, 2, 0.0, 2.0, 16);
+        let mut ws = StepWorkspace::new();
+        let queries: Vec<(f64, f64)> = (0..40)
+            .map(|i| {
+                let s = 2.0 * (i as f64) / 40.0;
+                (s, s + 0.037)
+            })
+            .collect();
+        let ask = |order: &[usize], ws: &mut StepWorkspace| -> Vec<u64> {
+            let mut bits = vec![0u64; queries.len() * 2];
+            let mut out = [0.0; 2];
+            for &i in order {
+                let (s, t) = queries[i];
+                tree.increment_ws(s, t, &mut out, ws);
+                bits[2 * i] = out[0].to_bits();
+                bits[2 * i + 1] = out[1].to_bits();
+            }
+            bits
+        };
+        let fwd: Vec<usize> = (0..queries.len()).collect();
+        let rev: Vec<usize> = (0..queries.len()).rev().collect();
+        // Interleaved "rejected step" pattern: every query issued twice at
+        // different times plus shrunk re-queries in between.
+        let a = ask(&fwd, &mut ws);
+        let b = ask(&rev, &mut ws);
+        assert_eq!(a, b, "reverse-order queries must match bitwise");
+        let mut out = [0.0; 2];
+        for &(s, t) in &queries {
+            tree.increment_ws(s, 0.5 * (s + t), &mut out, &mut ws); // "rejected" retry
+        }
+        let c = ask(&fwd, &mut ws);
+        assert_eq!(a, c, "interleaved retries must not perturb queries");
+    }
+
+    #[test]
+    fn vbt_increments_are_additive() {
+        let tree = VirtualBrownianTree::new(11, 3, -1.0, 3.0, 20);
+        let mut ws = StepWorkspace::new();
+        let (mut full, mut left, mut right) = ([0.0; 3], [0.0; 3], [0.0; 3]);
+        for k in 0..25 {
+            let s = -1.0 + 0.15 * k as f64;
+            let m = s + 0.07;
+            let t = s + 0.11;
+            tree.increment_ws(s, t, &mut full, &mut ws);
+            tree.increment_ws(s, m, &mut left, &mut ws);
+            tree.increment_ws(m, t, &mut right, &mut ws);
+            for d in 0..3 {
+                assert!(
+                    (full[d] - (left[d] + right[d])).abs() < 1e-12,
+                    "k={k} d={d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vbt_has_brownian_statistics() {
+        // Across independent seeds, W(0, t) has mean 0 and variance t, and
+        // disjoint increments are uncorrelated.
+        let reps = 4000;
+        let mut ws = StepWorkspace::new();
+        let (mut m1, mut m2, mut cross) = (0.0, 0.0, 0.0);
+        let mut out = [0.0];
+        let mut out2 = [0.0];
+        for seed in 0..reps {
+            let tree = VirtualBrownianTree::new(1000 + seed, 1, 0.0, 1.0, 12);
+            tree.increment_ws(0.0, 0.64, &mut out, &mut ws);
+            tree.increment_ws(0.64, 1.0, &mut out2, &mut ws);
+            m1 += out[0];
+            m2 += out[0] * out[0];
+            cross += out[0] * out2[0];
+        }
+        let n = reps as f64;
+        m1 /= n;
+        m2 /= n;
+        cross /= n;
+        assert!(m1.abs() < 0.05, "mean {m1}");
+        assert!((m2 - 0.64).abs() < 0.06, "var {m2} want 0.64");
+        assert!(cross.abs() < 0.04, "disjoint increments correlate: {cross}");
+    }
+
+    #[test]
+    fn vbt_sample_path_matches_direct_queries() {
+        let tree = VirtualBrownianTree::new(5, 2, 0.0, 1.0, 10);
+        let path = tree.sample_path(64);
+        assert_eq!(path.steps(), 64);
+        let mut ws = StepWorkspace::new();
+        let mut out = [0.0; 2];
+        let h = 1.0 / 64.0;
+        for n in 0..64 {
+            let a = n as f64 * h;
+            tree.increment_ws(a, a + h, &mut out, &mut ws);
+            for d in 0..2 {
+                assert_eq!(
+                    out[d].to_bits(),
+                    path.increment(n)[d].to_bits(),
+                    "step {n} dim {d}"
+                );
+            }
+        }
+        // Coarsening the sampled grid is consistent with coarse queries.
+        let coarse = path.coarsen(8).expect("64 % 8 == 0");
+        for n in 0..8 {
+            let a = n as f64 * 8.0 * h;
+            tree.increment_ws(a, a + 8.0 * h, &mut out, &mut ws);
+            for d in 0..2 {
+                assert!(
+                    (out[d] - coarse.increment(n)[d]).abs() < 1e-12,
+                    "coarse step {n} dim {d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_give_distinct_paths() {
+        let a = VirtualBrownianTree::new(1, 1, 0.0, 1.0, 8).sample_path(16);
+        let b = VirtualBrownianTree::new(2, 1, 0.0, 1.0, 8).sample_path(16);
+        assert_ne!(a.dw, b.dw);
+    }
+
+    #[test]
+    fn zero_noise_writes_zeros() {
+        let z = ZeroNoise::new(3);
+        let mut out = [1.0; 3];
+        z.increment_into(0.0, 5.0, &mut out);
+        assert_eq!(out, [0.0; 3]);
+    }
+}

@@ -1,10 +1,15 @@
 //! Random number generation and stochastic drivers.
 //!
 //! Provides a fast, seedable, splittable PRNG ([`Pcg64`]), Gaussian sampling,
-//! Brownian path generation, and fractional Brownian motion ([`fbm`]) used by
-//! the rough-volatility and convergence experiments.
+//! Brownian path generation, fractional Brownian motion ([`fbm`]) used by
+//! the rough-volatility and convergence experiments, and the query-anywhere
+//! noise sources ([`brownian`]: the [`BrownianSource`] trait and the
+//! [`VirtualBrownianTree`]) that power adaptive SDE stepping.
 
+pub mod brownian;
 pub mod fbm;
+
+pub use brownian::{BrownianSource, VirtualBrownianTree, ZeroNoise};
 
 /// PCG-XSH-RR-like 64-bit generator (splitmix-seeded xoshiro256++).
 ///
@@ -18,7 +23,7 @@ pub struct Pcg64 {
     cached: Option<f64>,
 }
 
-fn splitmix64(state: &mut u64) -> u64 {
+pub(crate) fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
@@ -162,8 +167,23 @@ impl BrownianPath {
 
     /// Coarsen by summing groups of `k` consecutive increments (exact Brownian
     /// refinement consistency: the coarse path is the same Brownian motion).
-    pub fn coarsen(&self, k: usize) -> Self {
-        assert!(self.steps() % k == 0, "steps must divide");
+    ///
+    /// Errors when `k` is zero or does not divide the step count — the
+    /// coarse grid would not cover the path exactly (previously a panic;
+    /// callers with structurally guaranteed divisibility `expect` it).
+    pub fn coarsen(&self, k: usize) -> crate::Result<Self> {
+        if k == 0 {
+            return Err(crate::format_err!(
+                "cannot coarsen by 0: factor must be positive"
+            ));
+        }
+        if self.steps() % k != 0 {
+            return Err(crate::format_err!(
+                "cannot coarsen a {}-step path by {}: the factor must divide the step count",
+                self.steps(),
+                k
+            ));
+        }
         let steps_c = self.steps() / k;
         let mut dw = vec![0.0; steps_c * self.dim];
         for n in 0..steps_c {
@@ -174,11 +194,11 @@ impl BrownianPath {
                 }
             }
         }
-        Self {
+        Ok(Self {
             h: self.h * k as f64,
             dim: self.dim,
             dw,
-        }
+        })
     }
 
     /// Path values W(t_n) (prepends W(t_0)=0), flattened `(steps+1) * dim`.
@@ -272,10 +292,25 @@ mod tests {
     }
 
     #[test]
+    fn coarsen_rejects_bad_factors() {
+        let mut rng = Pcg64::new(8);
+        let bp = BrownianPath::sample(&mut rng, 2, 10, 0.1);
+        assert!(bp.coarsen(0).is_err(), "k = 0 must error");
+        let e = bp.coarsen(3).unwrap_err();
+        assert!(
+            format!("{e}").contains("10-step"),
+            "error should name the step count: {e}"
+        );
+        // k = 1 is the identity; k = steps collapses to one increment.
+        assert_eq!(bp.coarsen(1).unwrap().steps(), 10);
+        assert_eq!(bp.coarsen(10).unwrap().steps(), 1);
+    }
+
+    #[test]
     fn coarsen_preserves_total_displacement() {
         let mut rng = Pcg64::new(9);
         let bp = BrownianPath::sample(&mut rng, 3, 64, 0.01);
-        let c = bp.coarsen(8);
+        let c = bp.coarsen(8).expect("64 % 8 == 0");
         let sum = |p: &BrownianPath, d: usize| -> f64 {
             (0..p.steps()).map(|n| p.increment(n)[d]).sum()
         };

@@ -7,10 +7,21 @@
 //!
 //! This implements both: [`EmbeddedEes25`] produces (y_{n+1}, err) per step
 //! with three registers, and [`AdaptiveController`] is a standard PI
-//! accept/reject loop for ODE integration (SDE paths are fixed-step in the
-//! paper; the controller is exercised on the drift-only problems).
+//! accept/reject loop. The controller drives **true adaptive SDE
+//! integration** through [`integrate_adaptive_sde`]: the noise comes from a
+//! query-anywhere [`BrownianSource`] — use a
+//! [`crate::rng::VirtualBrownianTree`], which resolves genuine Brownian
+//! fluctuation at every scale down to its dyadic depth, so a rejected step
+//! re-queries a shorter prefix of the *same* Brownian increment (bridge
+//! refinement, never resampling). The grid adapter on
+//! [`crate::rng::BrownianPath`] only *interpolates* below its sampling
+//! grid (conditional mean, zero sub-cell fluctuation), so it is not a
+//! statistically faithful driver once the controller shrinks `h` below the
+//! grid spacing. The ODE loop [`integrate_adaptive`] is the same machinery
+//! driven by [`crate::rng::ZeroNoise`].
 
 use crate::memory::StepWorkspace;
+use crate::rng::{BrownianSource, ZeroNoise};
 use crate::tableau::Tableau;
 use crate::vf::VectorField;
 
@@ -127,17 +138,21 @@ impl Default for AdaptiveController {
     }
 }
 
-/// Result of an adaptive ODE solve.
+/// Result of an adaptive solve.
+#[derive(Clone, Debug)]
 pub struct AdaptiveResult {
     /// Terminal state.
     pub y: Vec<f64>,
+    /// Time actually reached (t1 unless the step size underflowed).
+    pub t_end: f64,
     /// Number of accepted steps.
     pub steps_accepted: usize,
     /// Number of rejected (re-tried) steps.
     pub steps_rejected: usize,
 }
 
-/// Integrate the ODE dy = f(y)dt (noise ignored) adaptively over [t0, t1].
+/// Integrate the ODE dy = f(y)dt (noise ignored) adaptively over [t0, t1]
+/// — [`integrate_adaptive_sde`] driven by the all-zeros noise source.
 pub fn integrate_adaptive(
     vf: &dyn VectorField,
     t0: f64,
@@ -146,22 +161,71 @@ pub fn integrate_adaptive(
     h0: f64,
     ctrl: &AdaptiveController,
 ) -> AdaptiveResult {
+    integrate_adaptive_sde(vf, &ZeroNoise::new(vf.noise_dim()), t0, t1, y0, h0, ctrl)
+}
+
+/// Integrate the SDE dy = f(y)dt + g(y)dW adaptively over [t0, t1], with
+/// driver increments queried from `source` per trial step.
+///
+/// The accept/reject loop is noise-consistent: a rejected step shrinks `h`
+/// and re-queries `source` over the shorter interval — for a
+/// [`crate::rng::VirtualBrownianTree`] that is a Brownian-bridge refinement
+/// of the *same* path (split consistently across the retry), so the
+/// realised solution is a deterministic function of the tree seed and the
+/// tolerances, independent of how many rejections occur along the way.
+pub fn integrate_adaptive_sde(
+    vf: &dyn VectorField,
+    source: &dyn BrownianSource,
+    t0: f64,
+    t1: f64,
+    y0: &[f64],
+    h0: f64,
+    ctrl: &AdaptiveController,
+) -> AdaptiveResult {
+    integrate_adaptive_sde_ws(vf, source, t0, t1, y0, h0, ctrl, &mut StepWorkspace::new())
+}
+
+/// [`integrate_adaptive_sde`] with caller-owned scratch: allocation-free
+/// per step once `ws` is warm (the batch engine hands each worker a pooled
+/// workspace).
+pub fn integrate_adaptive_sde_ws(
+    vf: &dyn VectorField,
+    source: &dyn BrownianSource,
+    t0: f64,
+    t1: f64,
+    y0: &[f64],
+    h0: f64,
+    ctrl: &AdaptiveController,
+    ws: &mut StepWorkspace,
+) -> AdaptiveResult {
+    // Both source impls clamp out-of-range queries (returning zero
+    // increments there), which would silently degenerate the SDE to its
+    // drift-only ODE — reject the configuration loudly instead.
+    assert!(
+        source.t0() <= t0 + 1e-12 && t1 <= source.t1() + 1e-12,
+        "integrate_adaptive_sde: [{t0}, {t1}] must lie within the noise source's span [{}, {}]",
+        source.t0(),
+        source.t1()
+    );
     let scheme = EmbeddedEes25::new();
     let dim = vf.dim();
-    let zero_dw = vec![0.0; vf.noise_dim()];
-    let mut ws = StepWorkspace::new();
     let mut y = y0.to_vec();
     // Fourth register: yₙ saved for restart on rejection (reused across the
     // accept/reject loop instead of cloning per trial step).
     let mut y_save = ws.take(y.len());
+    let mut dw = ws.take(vf.noise_dim());
     let mut t = t0;
     let mut h = h0;
     let mut accepted = 0;
     let mut rejected = 0;
     while t < t1 - 1e-14 {
         h = h.min(t1 - t);
+        // Query the SAME underlying path over [t, t+h]: on a retry with a
+        // smaller h this is a prefix of the rejected increment, refined by
+        // the source's bridge — not fresh noise.
+        source.increment_ws(t, t + h, &mut dw, ws);
         y_save.copy_from_slice(&y);
-        let err = scheme.step_embedded_ws(vf, t, h, &zero_dw, &mut y, &mut ws);
+        let err = scheme.step_embedded_ws(vf, t, h, &dw, &mut y, ws);
         let scale = ctrl.atol
             + ctrl.rtol
                 * y.iter()
@@ -185,9 +249,11 @@ pub fn integrate_adaptive(
             break;
         }
     }
+    ws.put(dw);
     ws.put(y_save);
     AdaptiveResult {
         y,
+        t_end: t,
         steps_accepted: accepted,
         steps_rejected: rejected,
     }
@@ -271,6 +337,103 @@ mod tests {
             "adaptive should be cheap: {} steps",
             res.steps_accepted
         );
+    }
+
+    /// The acceptance criterion of the adaptive-SDE tentpole: at a loose
+    /// tolerance the controller rejects at least one step (started at a
+    /// deliberately stiff h₀), and as rtol tightens the adaptive solution
+    /// converges to the fixed-step solution of the SAME Brownian path
+    /// (queried from the same tree on a fine dyadic grid).
+    #[test]
+    fn adaptive_sde_rejects_then_matches_fixed_step() {
+        use crate::rng::VirtualBrownianTree;
+        let vf = crate::models::stochvol::stiff_stochvol_field();
+        let tree = VirtualBrownianTree::new(2024, 2, 0.0, 1.0, 24);
+        let y0 = [0.0, 0.04];
+
+        // Fixed-step reference on the same path: 4096 = 2^12 steps hit
+        // dyadic nodes of the depth-24 tree exactly.
+        let fine = tree.sample_path(4096);
+        let scheme = EmbeddedEes25::new();
+        let mut ws = StepWorkspace::new();
+        let mut y_ref = y0.to_vec();
+        for n in 0..4096 {
+            scheme.step_embedded_ws(
+                &vf,
+                n as f64 * fine.h,
+                fine.h,
+                fine.increment(n),
+                &mut y_ref,
+                &mut ws,
+            );
+        }
+
+        let run = |rtol: f64| -> AdaptiveResult {
+            let ctrl = AdaptiveController {
+                rtol,
+                atol: 1e-6,
+                ..Default::default()
+            };
+            integrate_adaptive_sde(&vf, &tree, 0.0, 1.0, &y0, 0.5, &ctrl)
+        };
+        let loose = run(3e-3);
+        assert!(
+            loose.steps_rejected >= 1,
+            "h0 = 0.5 on a lam = 20 CIR must be rejected at least once"
+        );
+        assert!((loose.t_end - 1.0).abs() < 1e-10, "must reach t1");
+        let tight = run(3e-5);
+        assert!(
+            tight.steps_accepted > loose.steps_accepted,
+            "tighter rtol must take more steps: {} vs {}",
+            tight.steps_accepted,
+            loose.steps_accepted
+        );
+        let err = |r: &AdaptiveResult| -> f64 {
+            r.y.iter()
+                .zip(y_ref.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max)
+        };
+        assert!(
+            err(&loose) < 0.5,
+            "loose adaptive solve diverged from the path solution: {}",
+            err(&loose)
+        );
+        assert!(
+            err(&tight) < 5e-2,
+            "rtol -> 0 must reproduce the fixed-step solution: {}",
+            err(&tight)
+        );
+    }
+
+    /// A rejected trial step must not perturb the realised noise: the same
+    /// tree driven at a tolerance that forces rejections and one that
+    /// accepts everything from a tiny h₀ both solve the SAME path, so the
+    /// tight-tolerance runs land near each other regardless of the
+    /// rejection history.
+    #[test]
+    fn rejections_do_not_resample_noise() {
+        use crate::rng::VirtualBrownianTree;
+        let vf = crate::models::stochvol::stiff_stochvol_field();
+        let tree = VirtualBrownianTree::new(7, 2, 0.0, 0.5, 22);
+        let ctrl = AdaptiveController {
+            rtol: 1e-4,
+            atol: 1e-7,
+            ..Default::default()
+        };
+        let y0 = [0.0, 0.04];
+        // Stiff start: forces an immediate rejection cascade.
+        let a = integrate_adaptive_sde(&vf, &tree, 0.0, 0.5, &y0, 0.5, &ctrl);
+        // Gentle start: few or no rejections.
+        let b = integrate_adaptive_sde(&vf, &tree, 0.0, 0.5, &y0, 1e-3, &ctrl);
+        assert!(a.steps_rejected >= 1, "stiff start must reject");
+        for (x, y) in a.y.iter().zip(b.y.iter()) {
+            assert!(
+                (x - y).abs() < 5e-2,
+                "rejection history changed the path: {x} vs {y}"
+            );
+        }
     }
 
     /// Tolerance scaling: tighter rtol ⇒ more steps, smaller error.

@@ -31,7 +31,10 @@ pub mod reversible_heun;
 pub mod rk;
 pub mod rkmk;
 
-pub use adaptive::{integrate_adaptive, AdaptiveController, EmbeddedEes25};
+pub use adaptive::{
+    integrate_adaptive, integrate_adaptive_sde, integrate_adaptive_sde_ws, AdaptiveController,
+    AdaptiveResult, EmbeddedEes25,
+};
 pub use cfees::CfEes;
 pub use cg::{CrouchGrossman, GeoEulerMaruyama};
 pub use lowstorage::LowStorageStepper;
@@ -316,6 +319,49 @@ pub fn integrate_ws(
     traj
 }
 
+/// Integrate a Euclidean SDE over a query-anywhere noise source on a
+/// uniform grid of `steps` steps spanning [source.t0(), source.t1()],
+/// recording the primary state after every step. Returns the same
+/// `(steps+1) * dim` flattened trajectory as [`integrate`]; when the source
+/// is a [`crate::rng::VirtualBrownianTree`] and `steps` is a power of two
+/// within its depth, the result is bitwise-identical to integrating over
+/// [`crate::rng::VirtualBrownianTree::sample_path`] of the same grid.
+pub fn integrate_source(
+    stepper: &dyn Stepper,
+    vf: &dyn VectorField,
+    y0: &[f64],
+    source: &dyn crate::rng::BrownianSource,
+    steps: usize,
+) -> Vec<f64> {
+    integrate_source_ws(stepper, vf, y0, source, steps, &mut StepWorkspace::new())
+}
+
+/// [`integrate_source`] with a caller-owned workspace.
+pub fn integrate_source_ws(
+    stepper: &dyn Stepper,
+    vf: &dyn VectorField,
+    y0: &[f64],
+    source: &dyn crate::rng::BrownianSource,
+    steps: usize,
+    ws: &mut StepWorkspace,
+) -> Vec<f64> {
+    let dim = vf.dim();
+    let t0 = source.t0();
+    let h = (source.t1() - t0) / steps as f64;
+    let mut state = stepper.init_state(vf, t0, y0);
+    let mut traj = vec![0.0; (steps + 1) * dim];
+    traj[..dim].copy_from_slice(y0);
+    let mut dw = ws.take(vf.noise_dim());
+    for n in 0..steps {
+        let a = t0 + n as f64 * h;
+        source.increment_ws(a, a + h, &mut dw, ws);
+        stepper.step_ws(vf, a, h, &dw, &mut state, ws);
+        traj[(n + 1) * dim..(n + 2) * dim].copy_from_slice(&state[..dim]);
+    }
+    ws.put(dw);
+    traj
+}
+
 /// Integrate on a homogeneous space, recording every state.
 pub fn integrate_manifold(
     stepper: &dyn ManifoldStepper,
@@ -349,6 +395,47 @@ pub fn integrate_manifold_ws(
         stepper.step_ws(sp, vf, t, path.h, path.increment(n), &mut y, ws);
         traj[(n + 1) * dim..(n + 2) * dim].copy_from_slice(&y);
     }
+    ws.put(y);
+    traj
+}
+
+/// [`integrate_manifold`] over a query-anywhere noise source on a uniform
+/// grid of `steps` steps spanning [source.t0(), source.t1()].
+pub fn integrate_manifold_source(
+    stepper: &dyn ManifoldStepper,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn ManifoldVectorField,
+    y0: &[f64],
+    source: &dyn crate::rng::BrownianSource,
+    steps: usize,
+) -> Vec<f64> {
+    integrate_manifold_source_ws(stepper, sp, vf, y0, source, steps, &mut StepWorkspace::new())
+}
+
+/// [`integrate_manifold_source`] with a caller-owned workspace.
+pub fn integrate_manifold_source_ws(
+    stepper: &dyn ManifoldStepper,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn ManifoldVectorField,
+    y0: &[f64],
+    source: &dyn crate::rng::BrownianSource,
+    steps: usize,
+    ws: &mut StepWorkspace,
+) -> Vec<f64> {
+    let dim = sp.point_dim();
+    let t0 = source.t0();
+    let h = (source.t1() - t0) / steps as f64;
+    let mut traj = vec![0.0; (steps + 1) * dim];
+    traj[..dim].copy_from_slice(y0);
+    let mut y = ws.take_copy(y0);
+    let mut dw = ws.take(vf.noise_dim());
+    for n in 0..steps {
+        let a = t0 + n as f64 * h;
+        source.increment_ws(a, a + h, &mut dw, ws);
+        stepper.step_ws(sp, vf, a, h, &dw, &mut y, ws);
+        traj[(n + 1) * dim..(n + 2) * dim].copy_from_slice(&y);
+    }
+    ws.put(dw);
     ws.put(y);
     traj
 }

@@ -367,7 +367,7 @@ mod tests {
             let y_ref = crate::solvers::integrate(&st, &vf, 0.0, &[1.0], &fine);
             let y_ref_end = y_ref[fine_steps];
             for (k, err) in [(16usize, &mut err_coarse), (4usize, &mut err_mid)] {
-                let coarse = fine.coarsen(k);
+                let coarse = fine.coarsen(k).expect("k divides the fine step count");
                 let y = crate::solvers::integrate(&st, &vf, 0.0, &[1.0], &coarse);
                 *err += (y[coarse.steps()] - y_ref_end).powi(2);
             }

@@ -335,6 +335,51 @@ fn all_nine_solvers_zero_allocs_per_step_after_warmup() {
 
     // And the linalg `_into` kernels with a warm workspace.
     linalg_into_kernels_zero_alloc();
+
+    // Virtual Brownian tree queries are allocation-free once the workspace
+    // holds the descent registers.
+    vbt_queries_zero_alloc();
+}
+
+/// Warm [`ees::rng::VirtualBrownianTree`] queries perform zero heap
+/// allocations: every descent register comes from the workspace, and node
+/// generators live on the stack. This is what makes the tree legal inside
+/// the adaptive stepping hot loop.
+fn vbt_queries_zero_alloc() {
+    use ees::rng::{BrownianSource, VirtualBrownianTree};
+    let tree = VirtualBrownianTree::new(3, 8, 0.0, 1.0, 20);
+    let mut ws = StepWorkspace::new();
+    let mut out = [0.0; 8];
+    // Warm-up: one query populates every workspace size class.
+    tree.increment_ws(0.1, 0.2, &mut out, &mut ws);
+    let n = measure(|| {
+        for k in 0..64 {
+            let s = 0.013 * k as f64;
+            tree.increment_ws(s, s + 0.009, &mut out, &mut ws);
+        }
+    });
+    assert_eq!(n, 0, "virtual Brownian tree: {n} allocations in 64 warm queries");
+
+    // The adaptive SDE loop built on top allocates per *call* (result Vec,
+    // scheme construction), never per trial step: a warm solve over 4x the
+    // horizon — roughly 4x the accepted steps — must allocate exactly as
+    // much as a short one.
+    use ees::solvers::{integrate_adaptive_sde_ws, AdaptiveController};
+    let vf = Field8;
+    let ctrl = AdaptiveController::default();
+    let y0 = [0.1; 8];
+    let mut solver_ws = StepWorkspace::new();
+    integrate_adaptive_sde_ws(&vf, &tree, 0.0, 1.0, &y0, 0.05, &ctrl, &mut solver_ws);
+    let n_short = measure(|| {
+        integrate_adaptive_sde_ws(&vf, &tree, 0.0, 0.25, &y0, 0.05, &ctrl, &mut solver_ws);
+    });
+    let n_long = measure(|| {
+        integrate_adaptive_sde_ws(&vf, &tree, 0.0, 1.0, &y0, 0.05, &ctrl, &mut solver_ws);
+    });
+    assert_eq!(
+        n_long, n_short,
+        "adaptive SDE loop allocates per step: {n_short} (short) vs {n_long} (long)"
+    );
 }
 
 /// The linalg `_into` kernels are allocation-free with a warm workspace.

@@ -1,0 +1,213 @@
+//! Convergence-order regression suite: dyadic-refinement strong-order
+//! sweeps across all nine solver families, on coarsen-consistent sampled
+//! grids AND on virtual-Brownian-tree-queried grids.
+//!
+//! The driving field is the paper's Figure-7 rough test problem at H = 1/2
+//! (plus a weak linear drift): dy = −0.3y dt + cos(y) dW¹ + sin(y) dW²,
+//! a genuinely non-commutative 2-driver SDE, so the documented strong order
+//! for every one-increment scheme is **1/2** (Theorem B.3 at H = 1/2: the
+//! missing Lévy area caps the rate regardless of the deterministic order).
+//! Each family's measured slope must sit within a Monte-Carlo tolerance
+//! band around that documented order, and the error must shrink
+//! monotonically under refinement — a regression net for the whole scheme
+//! zoo on one page.
+
+use ees::lie::{wrap_angle, Torus};
+use ees::rng::{BrownianPath, Pcg64, VirtualBrownianTree};
+use ees::solvers::{
+    integrate, integrate_manifold, integrate_source, CfEes, CrouchGrossman, EmbeddedEes25,
+    GeoEulerMaruyama, LowStorageStepper, ManifoldStepper, Mcf, ReversibleHeun, Rkmk, RkStepper,
+    Stepper,
+};
+use ees::vf::{ClosureField, ClosureManifoldField, ManifoldVectorField, VectorField};
+
+const FINE: usize = 512;
+const COARSENINGS: [usize; 3] = [16, 8, 4];
+const REPS: usize = 48;
+/// Documented strong order on a non-commutative Brownian driver.
+const DOC_ORDER: f64 = 0.5;
+/// Monte-Carlo tolerance on a 3-point slope fit at REPS paths.
+const ORDER_TOL: f64 = 0.45;
+
+fn euclidean_field() -> impl VectorField {
+    ClosureField {
+        dim: 1,
+        noise_dim: 2,
+        drift: |_t, y: &[f64], out: &mut [f64]| out[0] = -0.3 * y[0],
+        diffusion: |_t, y: &[f64], dw: &[f64], out: &mut [f64]| {
+            out[0] = y[0].cos() * dw[0] + y[0].sin() * dw[1];
+        },
+    }
+}
+
+fn circle_field() -> impl ManifoldVectorField {
+    ClosureManifoldField {
+        point_dim: 1,
+        algebra_dim: 1,
+        noise_dim: 2,
+        gen: |_t, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]| {
+            out[0] = -0.1 * y[0].sin() * h + y[0].cos() * dw[0] + y[0].sin() * dw[1];
+        },
+    }
+}
+
+/// Shared fine paths: one ladder of coarsen-consistent refinements serves
+/// every scheme, so family-to-family comparisons see the same noise.
+fn fine_paths(seed: u64) -> Vec<BrownianPath> {
+    let mut rng = Pcg64::new(seed);
+    (0..REPS)
+        .map(|_| BrownianPath::sample(&mut rng, 2, FINE, 1.0 / FINE as f64))
+        .collect()
+}
+
+/// Least-squares slope of ln(RMSE) against ln(h) over the coarsening
+/// ladder, with `terminal` integrating a path to its terminal value and
+/// `diff` the (possibly wrap-aware) error metric.
+fn measured_order(
+    paths: &[BrownianPath],
+    terminal: &mut dyn FnMut(&BrownianPath) -> f64,
+    diff: &dyn Fn(f64, f64) -> f64,
+) -> (f64, Vec<f64>) {
+    let mut mse = vec![0.0; COARSENINGS.len()];
+    for path in paths {
+        let y_ref = terminal(path);
+        for (i, &k) in COARSENINGS.iter().enumerate() {
+            let coarse = path.coarsen(k).expect("FINE % k == 0");
+            let e = diff(terminal(&coarse), y_ref);
+            mse[i] += e * e / paths.len() as f64;
+        }
+    }
+    let rmse: Vec<f64> = mse.iter().map(|m| m.sqrt()).collect();
+    let lx: Vec<f64> = COARSENINGS
+        .iter()
+        .map(|&k| (k as f64 / FINE as f64).ln())
+        .collect();
+    let ly: Vec<f64> = rmse.iter().map(|e| e.max(1e-300).ln()).collect();
+    let n = lx.len() as f64;
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let num: f64 = lx.iter().zip(ly.iter()).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    (num / den, rmse)
+}
+
+fn assert_order(name: &str, slope: f64, rmse: &[f64]) {
+    assert!(
+        (slope - DOC_ORDER).abs() < ORDER_TOL,
+        "{name}: measured strong order {slope:.3} outside {DOC_ORDER} ± {ORDER_TOL} \
+         (rmse ladder {rmse:?})"
+    );
+    // Refinement must pay: the finest level beats the coarsest.
+    assert!(
+        rmse[COARSENINGS.len() - 1] < rmse[0],
+        "{name}: error did not shrink under refinement: {rmse:?}"
+    );
+}
+
+/// Families 1–4 (standard RK, Williamson 2N, Reversible Heun, MCF) plus
+/// family 5 (embedded EES) on coarsen-consistent sampled grids.
+#[test]
+fn euclidean_families_strong_order() {
+    let vf = euclidean_field();
+    let paths = fine_paths(41);
+    let flat = |a: f64, b: f64| a - b;
+    let steppers: Vec<(&str, Box<dyn Stepper>)> = vec![
+        ("rk/ees25", Box::new(RkStepper::ees25())),
+        ("lowstorage/ees25", Box::new(LowStorageStepper::ees25())),
+        ("reversible_heun", Box::new(ReversibleHeun::new())),
+        ("mcf/midpoint", Box::new(Mcf::midpoint())),
+    ];
+    for (name, st) in &steppers {
+        let mut terminal = |path: &BrownianPath| -> f64 {
+            let traj = integrate(st.as_ref(), &vf, 0.0, &[0.8], path);
+            traj[path.steps()]
+        };
+        let (slope, rmse) = measured_order(&paths, &mut terminal, &flat);
+        assert_order(name, slope, &rmse);
+    }
+    // Family 5: the embedded estimator's propagated solution (3S* loop).
+    let sch = EmbeddedEes25::new();
+    let mut terminal = |path: &BrownianPath| -> f64 {
+        let mut y = vec![0.8];
+        for n in 0..path.steps() {
+            sch.step_embedded(&vf, n as f64 * path.h, path.h, path.increment(n), &mut y);
+        }
+        y[0]
+    };
+    let (slope, rmse) = measured_order(&paths, &mut terminal, &flat);
+    assert_order("embedded/ees25", slope, &rmse);
+}
+
+/// Families 6–9 (CF-EES, Crouch–Grossman, geometric Euler–Maruyama, RKMK)
+/// on the circle, with a wrap-aware error metric.
+#[test]
+fn manifold_families_strong_order() {
+    let sp = Torus::new(1);
+    let vf = circle_field();
+    let paths = fine_paths(43);
+    let wrap = |a: f64, b: f64| wrap_angle(a - b);
+    let steppers: Vec<(&str, Box<dyn ManifoldStepper>)> = vec![
+        ("cfees/ees25", Box::new(CfEes::ees25())),
+        ("cg/cg3", Box::new(CrouchGrossman::cg3())),
+        ("geo_em", Box::new(GeoEulerMaruyama::new())),
+        ("rkmk/srkmk3", Box::new(Rkmk::srkmk3())),
+    ];
+    for (name, st) in &steppers {
+        let mut terminal = |path: &BrownianPath| -> f64 {
+            let traj = integrate_manifold(st.as_ref(), &sp, &vf, 0.0, &[0.3], path);
+            traj[path.steps()]
+        };
+        let (slope, rmse) = measured_order(&paths, &mut terminal, &wrap);
+        assert_order(name, slope, &rmse);
+    }
+}
+
+/// The same sweep driven by virtual-Brownian-tree grids: materialising a
+/// dyadic grid from per-rep trees must reproduce the documented order too
+/// (the tree is a legitimate drop-in noise source for fixed-step solvers).
+#[test]
+fn vbt_driven_strong_order() {
+    let vf = euclidean_field();
+    // depth 9 ⇒ 512 leaves: the FINE grid hits tree nodes exactly.
+    let paths: Vec<BrownianPath> = (0..REPS)
+        .map(|r| VirtualBrownianTree::new(5000 + r as u64, 2, 0.0, 1.0, 9).sample_path(FINE))
+        .collect();
+    let st = LowStorageStepper::ees25();
+    let mut terminal = |path: &BrownianPath| -> f64 {
+        let traj = integrate(&st, &vf, 0.0, &[0.8], path);
+        traj[path.steps()]
+    };
+    let (slope, rmse) = measured_order(&paths, &mut terminal, &|a, b| a - b);
+    assert_order("lowstorage/ees25 (VBT grid)", slope, &rmse);
+}
+
+/// Tree-grid consistency: coarsening a tree-sampled fine grid equals
+/// querying the tree directly on the coarse grid (dyadic refinement
+/// consistency), and the source-driven integrate entry point is
+/// bitwise-identical to integrating over the materialised path.
+#[test]
+fn vbt_grids_are_coarsen_consistent_and_source_exact() {
+    let tree = VirtualBrownianTree::new(99, 2, 0.0, 1.0, 9);
+    let fine = tree.sample_path(FINE);
+    for &k in &COARSENINGS {
+        let coarse = fine.coarsen(k).expect("FINE % k == 0");
+        let direct = tree.sample_path(FINE / k);
+        for n in 0..coarse.steps() {
+            for d in 0..2 {
+                assert!(
+                    (coarse.increment(n)[d] - direct.increment(n)[d]).abs() < 1e-12,
+                    "k={k} step {n} dim {d}"
+                );
+            }
+        }
+    }
+    let vf = euclidean_field();
+    let st = LowStorageStepper::ees25();
+    let steps = 64;
+    let via_source = integrate_source(&st, &vf, &[0.8], &tree, steps);
+    let via_path = integrate(&st, &vf, 0.0, &[0.8], &tree.sample_path(steps));
+    assert_eq!(via_source.len(), via_path.len());
+    for (a, b) in via_source.iter().zip(via_path.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "source-driven integrate must be exact");
+    }
+}

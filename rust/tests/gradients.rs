@@ -1,0 +1,311 @@
+//! Golden-gradient conformance suite: finite-difference cross-checks of
+//! `grad_euclidean` / `grad_manifold` (and their source-driven variants)
+//! under all three `AdjointMethod`s, on the OU benchmark field and the
+//! sphere latent SDE.
+//!
+//! Contract: for every adjoint method m and every parameter θ_k,
+//!   |∂L/∂θ_k (m) − ∂L/∂θ_k (FD)| ≤ tol   and   pairwise |m − Full| ≤ tol,
+//! where FD is a central difference through an independent forward solve.
+//! This is the net that keeps the reversible reconstruction, the recursive
+//! checkpoint replay and the noise-source threading honest.
+
+use ees::adjoint::{
+    grad_euclidean, grad_euclidean_source, grad_manifold, grad_manifold_source, AdjointMethod,
+    MseToTargets,
+};
+use ees::lie::{HomogeneousSpace, Sphere};
+use ees::models::sphere_lsde::SphereNeuralField;
+use ees::rng::{BrownianPath, Pcg64, VirtualBrownianTree};
+use ees::solvers::{
+    integrate, integrate_manifold, integrate_manifold_source, integrate_source, CfEes,
+    LowStorageStepper,
+};
+use ees::vf::{DiffVectorField, VectorField};
+
+const ALL_METHODS: [AdjointMethod; 3] = [
+    AdjointMethod::Full,
+    AdjointMethod::Recursive,
+    AdjointMethod::Reversible,
+];
+
+/// Parametric OU field, θ = (ν, μ, σ): dy = ν(μ − y)dt + σ dW.
+struct OuField {
+    theta: Vec<f64>,
+}
+
+impl VectorField for OuField {
+    fn dim(&self) -> usize {
+        1
+    }
+    fn noise_dim(&self) -> usize {
+        1
+    }
+    fn combined(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        out[0] = self.theta[0] * (self.theta[1] - y[0]) * h + self.theta[2] * dw[0];
+    }
+}
+
+impl DiffVectorField for OuField {
+    fn num_params(&self) -> usize {
+        3
+    }
+    fn vjp(
+        &self,
+        _t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+    ) {
+        d_y[0] += -cot[0] * self.theta[0] * h;
+        d_theta[0] += cot[0] * (self.theta[1] - y[0]) * h;
+        d_theta[1] += cot[0] * self.theta[0] * h;
+        d_theta[2] += cot[0] * dw[0];
+    }
+}
+
+fn ou_setup() -> (OuField, Vec<usize>, MseToTargets) {
+    let vf = OuField {
+        // The paper's high-volatility OU regime, σ scaled down so FD stays
+        // well-conditioned on the unit horizon.
+        theta: vec![0.2, 0.1, 0.8],
+    };
+    let obs = vec![8, 16, 24, 32];
+    let targets = vec![0.15; 4];
+    (vf, obs, MseToTargets { targets })
+}
+
+fn obs_loss(traj: &[f64], dim: usize, obs: &[usize], loss: &MseToTargets) -> f64 {
+    use ees::adjoint::ObservationLoss;
+    let mut obs_states = vec![0.0; obs.len() * dim];
+    for (i, &n) in obs.iter().enumerate() {
+        obs_states[i * dim..(i + 1) * dim].copy_from_slice(&traj[n * dim..(n + 1) * dim]);
+    }
+    loss.eval(&obs_states, dim)
+}
+
+/// OU on a sampled grid path: three-way adjoint agreement + FD golden check
+/// for both θ and y₀.
+#[test]
+fn ou_adjoints_agree_and_match_fd_on_grid_path() {
+    let (vf, obs, loss) = ou_setup();
+    let st = LowStorageStepper::ees25();
+    let mut rng = Pcg64::new(17);
+    let path = BrownianPath::sample(&mut rng, 1, 32, 1.0 / 32.0);
+    let y0 = [0.4];
+    let g_full = grad_euclidean(&st, AdjointMethod::Full, &vf, 0.0, &y0, &path, &obs, &loss);
+    for m in ALL_METHODS {
+        let g = grad_euclidean(&st, m, &vf, 0.0, &y0, &path, &obs, &loss);
+        assert!((g.loss - g_full.loss).abs() < 1e-10, "{} loss", m.name());
+        for (k, (a, b)) in g.d_theta.iter().zip(g_full.d_theta.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-8,
+                "{} theta {k}: {a} vs {b}",
+                m.name()
+            );
+        }
+        for (a, b) in g.d_state0.iter().zip(g_full.d_state0.iter()) {
+            assert!((a - b).abs() < 1e-8, "{} d_state0", m.name());
+        }
+    }
+    // FD golden check against the Full adjoint.
+    let run_loss = |theta: &[f64], y0: &[f64]| -> f64 {
+        let vf = OuField {
+            theta: theta.to_vec(),
+        };
+        let traj = integrate(&st, &vf, 0.0, y0, &path);
+        obs_loss(&traj, 1, &obs, &loss)
+    };
+    let eps = 1e-6;
+    for k in 0..3 {
+        let mut tp = vf.theta.clone();
+        tp[k] += eps;
+        let mut tm = vf.theta.clone();
+        tm[k] -= eps;
+        let fd = (run_loss(&tp, &y0) - run_loss(&tm, &y0)) / (2.0 * eps);
+        assert!(
+            (fd - g_full.d_theta[k]).abs() < 1e-6,
+            "theta {k}: FD {fd} vs adjoint {}",
+            g_full.d_theta[k]
+        );
+    }
+    let fd0 = (run_loss(&vf.theta, &[0.4 + eps]) - run_loss(&vf.theta, &[0.4 - eps])) / (2.0 * eps);
+    assert!(
+        (fd0 - g_full.d_state0[0]).abs() < 1e-6,
+        "y0: FD {fd0} vs adjoint {}",
+        g_full.d_state0[0]
+    );
+}
+
+/// OU driven by a virtual Brownian tree through `grad_euclidean_source`:
+/// the source-threaded sweep must satisfy the same golden checks (the
+/// backward pass re-queries the tree, so this exercises the O(1)-noise
+/// reversible path end to end).
+#[test]
+fn ou_adjoints_agree_and_match_fd_on_vbt_source() {
+    let (vf, obs, loss) = ou_setup();
+    let st = LowStorageStepper::ees25();
+    let tree = VirtualBrownianTree::new(23, 1, 0.0, 1.0, 12);
+    let steps = 32;
+    let y0 = [0.4];
+    let g_full =
+        grad_euclidean_source(&st, AdjointMethod::Full, &vf, &y0, &tree, steps, &obs, &loss);
+    for m in ALL_METHODS {
+        let g = grad_euclidean_source(&st, m, &vf, &y0, &tree, steps, &obs, &loss);
+        for (k, (a, b)) in g.d_theta.iter().zip(g_full.d_theta.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-8,
+                "{} theta {k}: {a} vs {b}",
+                m.name()
+            );
+        }
+    }
+    let run_loss = |theta: &[f64]| -> f64 {
+        let vf = OuField {
+            theta: theta.to_vec(),
+        };
+        let traj = integrate_source(&st, &vf, &y0, &tree, steps);
+        obs_loss(&traj, 1, &obs, &loss)
+    };
+    let eps = 1e-6;
+    for k in 0..3 {
+        let mut tp = vf.theta.clone();
+        tp[k] += eps;
+        let mut tm = vf.theta.clone();
+        tm[k] -= eps;
+        let fd = (run_loss(&tp) - run_loss(&tm)) / (2.0 * eps);
+        assert!(
+            (fd - g_full.d_theta[k]).abs() < 1e-6,
+            "theta {k}: FD {fd} vs adjoint {}",
+            g_full.d_theta[k]
+        );
+    }
+}
+
+fn sphere_setup() -> (Sphere, SphereNeuralField, Vec<f64>, Vec<usize>, MseToTargets) {
+    let n = 4;
+    let sp = Sphere::new(n);
+    let field = SphereNeuralField::new(n, 6, 0.2, &mut Pcg64::new(3));
+    let mut y0 = vec![0.0; n];
+    y0[0] = 1.0;
+    sp.exp_action(&[0.3, -0.2, 0.1, 0.4, -0.1, 0.2], &mut y0);
+    let obs = vec![6, 12];
+    let targets = vec![0.2; 2 * n];
+    (sp, field, y0, obs, MseToTargets { targets })
+}
+
+/// Rebuild the sphere field at perturbed parameters (same init seed, then
+/// overwrite) — the FD evaluation vehicle.
+fn sphere_field_at(params: &[f64]) -> SphereNeuralField {
+    let mut f = SphereNeuralField::new(4, 6, 0.2, &mut Pcg64::new(3));
+    f.set_params(params);
+    f
+}
+
+/// Sphere latent SDE on a grid path: three-way agreement + FD over a
+/// random subset of MLP parameters.
+#[test]
+fn sphere_lsde_adjoints_agree_and_match_fd_on_grid_path() {
+    let (sp, field, y0, obs, loss) = sphere_setup();
+    let st = CfEes::ees25();
+    let mut rng = Pcg64::new(31);
+    let path = BrownianPath::sample(&mut rng, 4, 12, 0.05);
+    let g_full = grad_manifold(
+        &st,
+        AdjointMethod::Full,
+        &sp,
+        &field,
+        0.0,
+        &y0,
+        &path,
+        &obs,
+        &loss,
+    );
+    for m in ALL_METHODS {
+        let g = grad_manifold(&st, m, &sp, &field, 0.0, &y0, &path, &obs, &loss);
+        assert!((g.loss - g_full.loss).abs() < 1e-9, "{} loss", m.name());
+        for (k, (a, b)) in g.d_theta.iter().zip(g_full.d_theta.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-5 * (1.0 + b.abs()),
+                "{} theta {k}: {a} vs {b}",
+                m.name()
+            );
+        }
+    }
+    let p0 = field.params();
+    let run_loss = |params: &[f64]| -> f64 {
+        let f = sphere_field_at(params);
+        let traj = integrate_manifold(&st, &sp, &f, 0.0, &y0, &path);
+        obs_loss(&traj, 4, &obs, &loss)
+    };
+    let eps = 1e-6;
+    let mut idx = Pcg64::new(5);
+    for _ in 0..8 {
+        let k = idx.below(p0.len());
+        let mut pp = p0.clone();
+        pp[k] += eps;
+        let mut pm = p0.clone();
+        pm[k] -= eps;
+        let fd = (run_loss(&pp) - run_loss(&pm)) / (2.0 * eps);
+        assert!(
+            (fd - g_full.d_theta[k]).abs() < 2e-6,
+            "theta {k}: FD {fd} vs adjoint {}",
+            g_full.d_theta[k]
+        );
+    }
+}
+
+/// Sphere latent SDE over a virtual Brownian tree through
+/// `grad_manifold_source`: agreement across methods + FD golden check via
+/// the source-driven forward.
+#[test]
+fn sphere_lsde_adjoints_agree_and_match_fd_on_vbt_source() {
+    let (sp, field, y0, obs, loss) = sphere_setup();
+    let st = CfEes::ees25();
+    let tree = VirtualBrownianTree::new(37, 4, 0.0, 0.6, 10);
+    let steps = 12;
+    let g_full = grad_manifold_source(
+        &st,
+        AdjointMethod::Full,
+        &sp,
+        &field,
+        &y0,
+        &tree,
+        steps,
+        &obs,
+        &loss,
+    );
+    for m in ALL_METHODS {
+        let g = grad_manifold_source(&st, m, &sp, &field, &y0, &tree, steps, &obs, &loss);
+        for (k, (a, b)) in g.d_theta.iter().zip(g_full.d_theta.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 2e-5 * (1.0 + b.abs()),
+                "{} theta {k}: {a} vs {b}",
+                m.name()
+            );
+        }
+    }
+    let p0 = field.params();
+    let run_loss = |params: &[f64]| -> f64 {
+        let f = sphere_field_at(params);
+        let traj = integrate_manifold_source(&st, &sp, &f, &y0, &tree, steps);
+        obs_loss(&traj, 4, &obs, &loss)
+    };
+    let eps = 1e-6;
+    let mut idx = Pcg64::new(7);
+    for _ in 0..6 {
+        let k = idx.below(p0.len());
+        let mut pp = p0.clone();
+        pp[k] += eps;
+        let mut pm = p0.clone();
+        pm[k] -= eps;
+        let fd = (run_loss(&pp) - run_loss(&pm)) / (2.0 * eps);
+        assert!(
+            (fd - g_full.d_theta[k]).abs() < 2e-6,
+            "theta {k}: FD {fd} vs adjoint {}",
+            g_full.d_theta[k]
+        );
+    }
+}

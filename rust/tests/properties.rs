@@ -258,6 +258,56 @@ fn prop_cfees_defect_order() {
     }
 }
 
+/// PROPERTY: `BrownianPath` round-trip invariants hold for random shapes —
+/// reverse∘reverse = id (bitwise), coarsening preserves the endpoint
+/// displacement and total time, cumulative endpoint = Σdw, and coarsening
+/// by a non-divisor is a proper `Err`, not a panic.
+#[test]
+fn prop_brownian_path_round_trips() {
+    for seed in SEEDS {
+        let mut rng = Pcg64::new(700 + seed);
+        let dim = 1 + rng.below(4);
+        let k = 2 + rng.below(5);
+        let blocks = 1 + rng.below(12);
+        let steps = k * blocks;
+        let h = rng.uniform_range(0.005, 0.2);
+        let bp = BrownianPath::sample(&mut rng, dim, steps, h);
+
+        // reverse ∘ reverse = id, bitwise (negation is exact in IEEE754).
+        let rr = bp.reversed().reversed();
+        for (a, b) in bp.dw.iter().zip(rr.dw.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "seed {seed}");
+        }
+
+        // Coarsening preserves endpoint displacement and covered time.
+        let c = bp.coarsen(k).expect("steps constructed divisible");
+        assert_eq!(c.steps(), blocks, "seed {seed}");
+        assert!((c.h * c.steps() as f64 - h * steps as f64).abs() < 1e-12);
+        for d in 0..dim {
+            let fine: f64 = (0..steps).map(|n| bp.increment(n)[d]).sum();
+            let coarse: f64 = (0..blocks).map(|n| c.increment(n)[d]).sum();
+            assert!((fine - coarse).abs() < 1e-11, "seed {seed} dim {d}");
+        }
+
+        // Cumulative endpoint = Σdw per component; W(t_0) = 0.
+        let w = bp.cumulative();
+        for d in 0..dim {
+            assert_eq!(w[d], 0.0, "seed {seed}");
+            let total: f64 = (0..steps).map(|n| bp.increment(n)[d]).sum();
+            assert!(
+                (w[steps * dim + d] - total).abs() < 1e-11,
+                "seed {seed} dim {d}"
+            );
+        }
+
+        // Non-divisor coarsening errors out instead of panicking.
+        if steps % (k + 1) != 0 {
+            assert!(bp.coarsen(k + 1).is_err(), "seed {seed}");
+        }
+        assert!(bp.coarsen(0).is_err(), "seed {seed}");
+    }
+}
+
 /// PROPERTY: memory ordering Reversible ≤ Recursive ≤ Full holds for every
 /// random configuration of (steps, dim, batch).
 #[test]

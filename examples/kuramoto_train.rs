@@ -5,15 +5,33 @@
 //! Run: `cargo run --release --example kuramoto_train [N] [epochs]`
 
 use ees::adjoint::AdjointMethod;
-use ees::coordinator::batch_grad_manifold;
 use ees::lie::TTorus;
 use ees::losses::EnergyScore;
 use ees::models::kuramoto::KuramotoParams;
 use ees::nn::neural_sde::TorusNeuralSde;
-use ees::nn::optim::{clip_global_norm, Optimizer};
 use ees::rng::{BrownianPath, Pcg64};
 use ees::solvers::{CfEes, ManifoldStepper};
-use ees::vf::DiffManifoldVectorField;
+use ees::train::{
+    Callback, CallbackAction, EpochCtx, ManifoldProblem, OptimSpec, TrainConfig, Trainer,
+};
+
+/// Progress printer: a minimal `Callback` (every `stride` epochs + last).
+struct PrintEvery {
+    stride: usize,
+    epochs: usize,
+}
+
+impl Callback for PrintEvery {
+    fn on_epoch_end(&mut self, ctx: &EpochCtx) -> CallbackAction {
+        if ctx.epoch % self.stride == 0 || ctx.epoch + 1 == self.epochs {
+            println!(
+                "epoch {:>3}: energy score {:.4}  (peak adjoint mem {} f64s, O(1) in steps)",
+                ctx.epoch, ctx.metrics.loss, ctx.metrics.peak_mem_f64s
+            );
+        }
+        CallbackAction::Continue
+    }
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -38,11 +56,10 @@ fn main() {
     };
     let sp = TTorus::new(n_osc);
     let st = CfEes::ees25();
-    let mut model = TorusNeuralSde::new(n_osc, 32, &mut Pcg64::new(5));
-    let mut opt = Optimizer::adamw(1e-3, 1e-4, model.num_params());
+    let model = TorusNeuralSde::new(n_osc, 32, &mut Pcg64::new(5));
     let stride = steps / n_obs;
     let obs: Vec<usize> = (1..=n_obs).map(|k| k * stride).collect();
-    for epoch in 0..epochs {
+    let sampler = move |rng: &mut Pcg64| {
         let y0s: Vec<Vec<f64>> = (0..batch)
             .map(|_| {
                 let mut y = vec![0.0; dim];
@@ -53,28 +70,29 @@ fn main() {
             })
             .collect();
         let paths: Vec<BrownianPath> = (0..batch)
-            .map(|_| BrownianPath::sample(&mut rng, n_osc, steps, h))
+            .map(|_| BrownianPath::sample(rng, n_osc, steps, h))
             .collect();
-        let (l, mut grad, mem) = batch_grad_manifold(
-            &st,
-            AdjointMethod::Reversible,
-            &sp,
-            &model,
-            &y0s,
-            &paths,
-            &obs,
-            &loss,
-        );
-        clip_global_norm(&mut grad, 1.0);
-        let mut p = model.params();
-        opt.step(&mut p, &grad);
-        model.set_params(&p);
-        if epoch % 3 == 0 || epoch + 1 == epochs {
-            println!(
-                "epoch {epoch:>3}: energy score {l:.4}  (peak adjoint mem {mem} f64s, O(1) in steps)"
-            );
-        }
-    }
+        (y0s, paths)
+    };
+    let mut problem = ManifoldProblem::new(
+        model,
+        &sp,
+        &st,
+        AdjointMethod::Reversible,
+        sampler,
+        obs,
+        &loss,
+    );
+    let trainer = Trainer::new(TrainConfig::new(epochs).group(
+        OptimSpec::AdamW {
+            lr: 1e-3,
+            weight_decay: 1e-4,
+        },
+        Some(1.0),
+    ));
+    let mut printer = PrintEvery { stride: 3, epochs };
+    trainer.run_with(&mut problem, &mut rng, &mut [&mut printer]);
+    let model = problem.model;
     // Sanity: the order parameter of generated rollouts stays in (0, 1).
     let mut y = vec![0.0; dim];
     let path = BrownianPath::sample(&mut rng, n_osc, steps, h);

@@ -5,14 +5,13 @@
 //! Run: `cargo run --release --example quickstart`
 
 use ees::adjoint::AdjointMethod;
-use ees::coordinator::train_euclidean;
 use ees::losses::MomentMatch;
 use ees::models::ou::OuParams;
 use ees::nn::neural_sde::NeuralSde;
-use ees::nn::optim::Optimizer;
 use ees::rng::{BrownianPath, Pcg64};
 use ees::solvers::{LowStorageStepper, Stepper};
-use ees::vf::{ClosureField, DiffVectorField};
+use ees::train::{EuclideanProblem, OptimSpec, TrainConfig, Trainer};
+use ees::vf::ClosureField;
 
 fn main() {
     // --- 1. Integrate an SDE with the low-storage EES(2,5) scheme. -------
@@ -39,7 +38,8 @@ fn main() {
         state[0].abs()
     );
 
-    // --- 3. Train a neural SDE on OU data with the reversible adjoint. ---
+    // --- 3. Train a neural SDE on OU data with the reversible adjoint, ---
+    //        through the unified training engine (ees::train::Trainer).
     let ou = OuParams::default();
     let steps = 20;
     let h = 0.1;
@@ -49,30 +49,26 @@ fn main() {
         target_mean: obs.iter().map(|&i| mean_all[i]).collect(),
         target_m2: obs.iter().map(|&i| m2_all[i]).collect(),
     };
-    let mut model = NeuralSde::lsde(1, 16, 2, true, &mut rng);
-    let mut opt = Optimizer::adam(1e-2, model.num_params());
+    let model = NeuralSde::lsde(1, 16, 2, true, &mut rng);
     let batch = 128;
-    let mut sampler = move |rng: &mut Pcg64| {
+    let sampler = move |rng: &mut Pcg64| {
         let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
         let paths: Vec<BrownianPath> = (0..batch)
             .map(|_| BrownianPath::sample(rng, 1, steps, h))
             .collect();
         (y0s, paths)
     };
-    let log = train_euclidean(
-        &mut model,
-        |m: &NeuralSde| m.params(),
-        |m: &mut NeuralSde, p: &[f64]| m.set_params(p),
+    let mut problem = EuclideanProblem::new(
+        model,
         &stepper,
         AdjointMethod::Reversible,
-        &mut sampler,
-        &obs,
+        sampler,
+        obs,
         &loss,
-        &mut opt,
-        60,
-        Some(1.0),
-        &mut rng,
     );
+    let trainer =
+        Trainer::new(TrainConfig::new(60).group(OptimSpec::Adam { lr: 1e-2 }, Some(1.0)));
+    let log = trainer.run(&mut problem, &mut rng);
     println!(
         "trained {} epochs with the Reversible adjoint: loss {:.4} -> {:.4} \
          (peak adjoint memory {} f64s, constant in the step count)",

@@ -1,12 +1,14 @@
-//! Training coordinator: the L3 orchestration layer.
+//! Batch-solve coordinator: the L3 orchestration layer under the training
+//! engine.
 //!
-//! Owns the training loop of every experiment — batch trajectory generation
-//! over per-sample Brownian drivers, batch-loss evaluation, per-sample
-//! backward sweeps through the chosen adjoint, gradient aggregation/clipping
-//! and optimiser steps — plus runtime/eval/memory metric logging. Python is
-//! never on this path; the compiled-artifact mode executes the AOT JAX/
-//! Pallas step function through [`crate::runtime`] instead of the native
-//! field.
+//! Owns batch trajectory generation over per-sample Brownian drivers,
+//! batch-loss evaluation, per-sample backward sweeps through the chosen
+//! adjoint, and the deterministic gradient reduction — the primitives that
+//! [`crate::train::Trainer`] (the training engine that owns every
+//! experiment's epoch loop, optimisers, schedules and callbacks) drives
+//! once per epoch. Python is never on this path; the compiled-artifact mode
+//! executes the AOT JAX/Pallas step function through [`crate::runtime`]
+//! instead of the native field.
 //!
 //! # Parallel batch engine
 //!
@@ -44,55 +46,19 @@ pub mod parallel;
 
 pub use parallel::parallel_map;
 
+// The per-epoch metric types moved into the training engine when the epoch
+// loop did (`crate::train`); these re-exports keep pre-move paths working.
+pub use crate::train::{EpochMetrics, TrainLog};
+
 use crate::adjoint::AdjointMethod;
 use crate::lie::HomogeneousSpace;
 use crate::losses::BatchLoss;
 use crate::memory::{MemMeter, MeteredTape, WorkspacePool};
-use crate::nn::optim::{clip_global_norm, Optimizer};
+use crate::nn::optim::Optimizer;
 use crate::rng::{BrownianPath, BrownianSource, Pcg64, VirtualBrownianTree};
 use crate::solvers::{AdaptiveController, AdaptiveResult, ManifoldStepper, Stepper};
+use crate::train::{OptimSpec, TrainConfig, TrainProblem, Trainer};
 use crate::vf::{DiffManifoldVectorField, DiffVectorField, VectorField};
-use std::time::Instant;
-
-/// One epoch's metrics.
-#[derive(Clone, Debug)]
-pub struct EpochMetrics {
-    /// Epoch index (0-based).
-    pub epoch: usize,
-    /// Batch loss at this epoch.
-    pub loss: f64,
-    /// Pre-clip global gradient norm.
-    pub grad_norm: f64,
-    /// Peak adjoint-machinery memory (f64 slots) of the epoch's solve.
-    pub peak_mem_f64s: usize,
-    /// Wall-clock time of the epoch.
-    pub wall_secs: f64,
-}
-
-/// Result of a training run.
-#[derive(Clone, Debug, Default)]
-pub struct TrainLog {
-    /// Per-epoch metrics in order.
-    pub history: Vec<EpochMetrics>,
-    /// Total wall-clock time of the run.
-    pub total_secs: f64,
-}
-
-impl TrainLog {
-    /// Loss of the final epoch (`NaN` when no epoch ran).
-    pub fn terminal_loss(&self) -> f64 {
-        self.history.last().map(|m| m.loss).unwrap_or(f64::NAN)
-    }
-
-    /// Maximum per-epoch peak adjoint memory over the run.
-    pub fn peak_mem(&self) -> usize {
-        self.history
-            .iter()
-            .map(|m| m.peak_mem_f64s)
-            .max()
-            .unwrap_or(0)
-    }
-}
 
 /// Per-sample output of the forward sweep (tape + observations + terminal
 /// solver state), kept alive until the sample's backward sweep consumes it.
@@ -295,6 +261,36 @@ pub fn batch_grad_euclidean_par(
     loss: &dyn BatchLoss,
     parallelism: usize,
 ) -> (f64, Vec<f64>, usize) {
+    batch_grad_euclidean_pool(
+        stepper,
+        method,
+        vf,
+        y0s,
+        paths,
+        obs,
+        loss,
+        parallelism,
+        &WorkspacePool::new(),
+    )
+}
+
+/// [`batch_grad_euclidean_par`] drawing per-worker solver scratch from a
+/// **caller-owned** [`WorkspacePool`]: a long-lived loop (the trainer) hands
+/// the same pool to every epoch so warm workspaces survive the epoch
+/// boundary and the hot path stays allocation-free across the whole run.
+/// Scratch reuse is bitwise-invisible (see
+/// `rust/tests/determinism.rs::workspace_reuse_is_bitwise_invisible`).
+pub fn batch_grad_euclidean_pool(
+    stepper: &dyn Stepper,
+    method: AdjointMethod,
+    vf: &dyn DiffVectorField,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    obs: &[usize],
+    loss: &dyn BatchLoss,
+    parallelism: usize,
+    ws_pool: &WorkspacePool,
+) -> (f64, Vec<f64>, usize) {
     let batch = y0s.len();
     let dim = vf.dim();
     let n_obs = obs.len();
@@ -307,9 +303,10 @@ pub fn batch_grad_euclidean_par(
     let base_mem = 2 * state_size + batch * n_obs * dim + vf.num_params();
 
     // ---- forward: all samples independent -------------------------------
-    // Per-worker solver scratch, shared between the forward and backward
-    // fan-outs so the warm buffers survive the loss barrier.
-    let ws_pool = WorkspacePool::new();
+    // Per-worker solver scratch from the caller's pool, shared between the
+    // forward and backward fan-outs so the warm buffers survive the loss
+    // barrier (and, for a pool owned by a training loop, the epoch
+    // boundary).
     let fwd: Vec<ForwardOut> = parallel_map(parallelism, batch, |b| {
         let mut ws = ws_pool.take();
         let mut meter = MemMeter::new();
@@ -461,6 +458,36 @@ pub fn batch_grad_manifold_par(
     loss: &dyn BatchLoss,
     parallelism: usize,
 ) -> (f64, Vec<f64>, usize) {
+    batch_grad_manifold_pool(
+        stepper,
+        method,
+        sp,
+        vf,
+        y0s,
+        paths,
+        obs,
+        loss,
+        parallelism,
+        &WorkspacePool::new(),
+    )
+}
+
+/// [`batch_grad_manifold_par`] drawing per-worker solver scratch from a
+/// **caller-owned** [`WorkspacePool`] — the manifold side of
+/// [`batch_grad_euclidean_pool`], with the same warm-across-epochs purpose
+/// and the same bitwise-invisibility guarantee.
+pub fn batch_grad_manifold_pool(
+    stepper: &dyn ManifoldStepper,
+    method: AdjointMethod,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn DiffManifoldVectorField,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    obs: &[usize],
+    loss: &dyn BatchLoss,
+    parallelism: usize,
+    ws_pool: &WorkspacePool,
+) -> (f64, Vec<f64>, usize) {
     let batch = y0s.len();
     let dim = sp.point_dim();
     let n_obs = obs.len();
@@ -469,7 +496,6 @@ pub fn batch_grad_manifold_par(
     let seg = (steps as f64).sqrt().ceil() as usize;
     let base_mem = 2 * dim + 2 * sp.algebra_dim() + batch * n_obs * dim + vf.num_params();
 
-    let ws_pool = WorkspacePool::new();
     let fwd: Vec<ForwardOut> = parallel_map(parallelism, batch, |b| {
         let mut ws = ws_pool.take();
         let mut meter = MemMeter::new();
@@ -607,9 +633,17 @@ pub fn batch_grad_manifold(
     )
 }
 
-/// Generic Euclidean training loop: params live in `get/set` closures so the
-/// coordinator stays model-agnostic. Each epoch's batch solve runs on the
-/// parallel engine at the configured default parallelism.
+/// Generic Euclidean training loop — **deprecated**: the epoch loop now
+/// lives in the training engine ([`crate::train::Trainer`] +
+/// [`crate::train::EuclideanProblem`]), which adds schedules, callbacks,
+/// checkpointing and gradient accumulation on top of the identical
+/// arithmetic. This wrapper drives the engine on the caller's optimiser
+/// state (so existing call sites behave bit-for-bit as before) and remains
+/// for one release.
+#[deprecated(
+    since = "0.2.0",
+    note = "use train::Trainer with train::EuclideanProblem (see docs/ARCHITECTURE.md §Training engine)"
+)]
 pub fn train_euclidean<M, FGet, FSet>(
     model: &mut M,
     get_params: FGet,
@@ -629,30 +663,73 @@ where
     FGet: Fn(&M) -> Vec<f64>,
     FSet: Fn(&mut M, &[f64]),
 {
-    let start = Instant::now();
-    let mut log = TrainLog::default();
-    for epoch in 0..epochs {
-        let e0 = Instant::now();
-        let (y0s, paths) = sample_batch(rng);
-        let (l, mut grad, peak) =
-            batch_grad_euclidean(stepper, method, model, &y0s, &paths, obs, loss);
-        let gn = if let Some(c) = clip {
-            clip_global_norm(&mut grad, c)
-        } else {
-            grad.iter().map(|g| g * g).sum::<f64>().sqrt()
-        };
-        let mut params = get_params(model);
-        opt.step(&mut params, &grad);
-        set_params(model, &params);
-        log.history.push(EpochMetrics {
-            epoch,
-            loss: l,
-            grad_norm: gn,
-            peak_mem_f64s: peak,
-            wall_secs: e0.elapsed().as_secs_f64(),
-        });
+    /// Closure-based shim: adapts the legacy (model, get, set, sampler)
+    /// calling convention onto [`TrainProblem`].
+    struct Shim<'a, M, FGet, FSet> {
+        model: &'a mut M,
+        get: FGet,
+        set: FSet,
+        stepper: &'a dyn Stepper,
+        method: AdjointMethod,
+        sampler: &'a mut dyn FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>),
+        obs: &'a [usize],
+        loss: &'a dyn BatchLoss,
+        pool: WorkspacePool,
     }
-    log.total_secs = start.elapsed().as_secs_f64();
+
+    impl<M, FGet, FSet> TrainProblem for Shim<'_, M, FGet, FSet>
+    where
+        M: DiffVectorField,
+        FGet: Fn(&M) -> Vec<f64>,
+        FSet: Fn(&mut M, &[f64]),
+    {
+        fn num_params(&self) -> usize {
+            self.model.num_params()
+        }
+        fn params(&self) -> Vec<f64> {
+            (self.get)(&*self.model)
+        }
+        fn set_params(&mut self, p: &[f64]) {
+            (self.set)(&mut *self.model, p)
+        }
+        fn grad(
+            &mut self,
+            _epoch: usize,
+            rng: &mut Pcg64,
+            parallelism: usize,
+        ) -> (f64, Vec<f64>, usize) {
+            let (y0s, paths) = (self.sampler)(rng);
+            batch_grad_euclidean_pool(
+                self.stepper,
+                self.method,
+                &*self.model,
+                &y0s,
+                &paths,
+                self.obs,
+                self.loss,
+                parallelism,
+                &self.pool,
+            )
+        }
+    }
+
+    let mut shim = Shim {
+        model,
+        get: get_params,
+        set: set_params,
+        stepper,
+        method,
+        sampler: sample_batch,
+        obs,
+        loss,
+        pool: WorkspacePool::new(),
+    };
+    let trainer = Trainer::new(TrainConfig::new(epochs).group(OptimSpec::of(opt), clip));
+    // Run on the caller's optimiser state, then hand the advanced state
+    // back (the legacy contract: `opt` is mutated in place).
+    let mut opts = vec![opt.clone()];
+    let log = trainer.run_resumed(&mut shim, rng, &mut [], &mut opts);
+    *opt = opts.remove(0);
     log
 }
 
@@ -664,9 +741,13 @@ mod tests {
     use crate::nn::neural_sde::NeuralSde;
     use crate::solvers::LowStorageStepper;
 
-    /// End-to-end smoke: a tiny neural SDE trained on OU moments with the
-    /// reversible adjoint reduces the loss.
+    /// End-to-end smoke through the deprecated legacy wrapper: a tiny
+    /// neural SDE trained on OU moments with the reversible adjoint reduces
+    /// the loss, and the wrapper is **bitwise-identical** to driving
+    /// [`crate::train::Trainer`] directly (the one-training-path contract
+    /// of the deprecation period).
     #[test]
+    #[allow(deprecated)]
     fn training_reduces_loss_on_ou() {
         let mut rng = Pcg64::new(20);
         let ou = OuParams::default();
@@ -712,6 +793,46 @@ mod tests {
             last < 0.7 * first,
             "loss must decrease: {first} -> {last}"
         );
+
+        // The same run driven through the training engine directly must be
+        // bitwise-identical — the wrapper is a shim, not a second path.
+        let mut rng2 = Pcg64::new(20);
+        let (mean_all2, m2_all2) = ou.moment_targets(0.0, steps, h, 4000, &mut rng2);
+        let loss2 = MomentMatch {
+            target_mean: obs.iter().map(|&i| mean_all2[i]).collect(),
+            target_m2: obs.iter().map(|&i| m2_all2[i]).collect(),
+        };
+        let model2 = NeuralSde::lsde(1, 8, 1, true, &mut rng2);
+        let sampler2 = move |rng: &mut Pcg64| {
+            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
+            let paths: Vec<BrownianPath> = (0..batch)
+                .map(|_| BrownianPath::sample(rng, 1, steps, h))
+                .collect();
+            (y0s, paths)
+        };
+        let mut problem = crate::train::EuclideanProblem::new(
+            model2,
+            &st,
+            AdjointMethod::Reversible,
+            sampler2,
+            obs.clone(),
+            &loss2,
+        );
+        let trainer = Trainer::new(
+            TrainConfig::new(40).group(OptimSpec::Adam { lr: 0.02 }, Some(1.0)),
+        );
+        let log2 = trainer.run(&mut problem, &mut rng2);
+        assert_eq!(log.history.len(), log2.history.len());
+        for (a, b) in log.history.iter().zip(log2.history.iter()) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "epoch {}", a.epoch);
+        }
+        for (a, b) in model
+            .params()
+            .iter()
+            .zip(crate::train::FlatParams::params(&problem.model).iter())
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     /// Batch gradients agree across adjoints (Table-12 property at batch level).

@@ -9,13 +9,12 @@
 use super::{euclidean_roster, steps_for_budget, Scale};
 use crate::adjoint::AdjointMethod;
 use crate::bench::{fmt, Table};
-use crate::coordinator::{batch_grad_euclidean, train_euclidean};
+use crate::coordinator::batch_grad_euclidean;
 use crate::losses::MomentMatch;
 use crate::models::ou::OuParams;
 use crate::nn::neural_sde::NeuralSde;
-use crate::nn::optim::Optimizer;
 use crate::rng::{BrownianPath, Pcg64};
-use crate::vf::DiffVectorField;
+use crate::train::{EuclideanProblem, OptimSpec, TrainConfig, Trainer};
 use std::time::Instant;
 
 pub struct OuRow {
@@ -71,30 +70,28 @@ pub fn run_rows(scale: Scale) -> Vec<OuRow> {
             target_mean: obs.iter().map(|&i| mean_all[i]).collect(),
             target_m2: obs.iter().map(|&i| m2_all[i]).collect(),
         };
-        let mut model = NeuralSde::lsde(1, scale.pick(16, 32), 2, true, &mut Pcg64::new(1234));
-        let mut opt = Optimizer::adam(1e-2, model.num_params());
-        let mut sampler = move |rng: &mut Pcg64| {
+        let model = NeuralSde::lsde(1, scale.pick(16, 32), 2, true, &mut Pcg64::new(1234));
+        let sampler = move |rng: &mut Pcg64| {
             let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
             let paths: Vec<BrownianPath> = (0..batch)
                 .map(|_| BrownianPath::sample(rng, 1, steps, h))
                 .collect();
             (y0s, paths)
         };
-        let t0 = Instant::now();
-        let log = train_euclidean(
-            &mut model,
-            |m: &NeuralSde| m.params(),
-            |m: &mut NeuralSde, p: &[f64]| m.set_params(p),
+        let mut problem = EuclideanProblem::new(
+            model,
             st.as_ref(),
             AdjointMethod::Reversible,
-            &mut sampler,
-            &obs,
+            sampler,
+            obs.clone(),
             &loss,
-            &mut opt,
-            epochs,
-            Some(1.0),
-            &mut rng,
         );
+        let trainer = Trainer::new(
+            TrainConfig::new(epochs).group(OptimSpec::Adam { lr: 1e-2 }, Some(1.0)),
+        );
+        let t0 = Instant::now();
+        let log = trainer.run(&mut problem, &mut rng);
+        let model = problem.model;
         // Terminal MSE: fresh evaluation batch.
         let (y0s, paths): (Vec<Vec<f64>>, Vec<BrownianPath>) = {
             let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();

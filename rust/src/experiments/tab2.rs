@@ -10,12 +10,11 @@
 use super::{euclidean_roster, steps_for_budget, Scale};
 use crate::adjoint::AdjointMethod;
 use crate::bench::{fmt, Table};
-use crate::coordinator::train_euclidean;
 use crate::losses::SigMmd;
 use crate::models::stochvol::{sample_batch, VolModel};
 use crate::nn::neural_sde::NeuralSde;
-use crate::nn::optim::Optimizer;
 use crate::rng::{BrownianPath, Pcg64};
+use crate::train::{EuclideanProblem, OptimSpec, TrainConfig, Trainer};
 use std::time::Instant;
 
 pub struct VolRow {
@@ -71,31 +70,28 @@ pub fn run_model(model: VolModel, scale: Scale) -> Vec<VolRow> {
         let h = t_end / steps as f64;
         let stride = (steps / n_obs).max(1);
         let obs: Vec<usize> = (1..=n_obs).map(|k| (k * stride).min(steps)).collect();
-        let mut model_nn = NeuralSde::lsde(1, 16, scale.pick(2, 3), false, &mut Pcg64::new(5));
-        let mut opt = Optimizer::sgd(1e-3);
-        let mut sampler = move |rng: &mut Pcg64| {
+        let model_nn = NeuralSde::lsde(1, 16, scale.pick(2, 3), false, &mut Pcg64::new(5));
+        let sampler = move |rng: &mut Pcg64| {
             let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![1.0]).collect();
             let paths: Vec<BrownianPath> = (0..batch)
                 .map(|_| BrownianPath::sample(rng, 1, steps, h))
                 .collect();
             (y0s, paths)
         };
-        let t0 = Instant::now();
-        let log = train_euclidean(
-            &mut model_nn,
-            |m: &NeuralSde| m.params(),
-            |m: &mut NeuralSde, p: &[f64]| m.set_params(p),
+        let mut problem = EuclideanProblem::new(
+            model_nn,
             st.as_ref(),
             AdjointMethod::Reversible,
-            &mut sampler,
-            &obs,
+            sampler,
+            obs.clone(),
             &loss,
-            &mut opt,
-            epochs,
-            None,
-            &mut rng,
         );
+        let trainer =
+            Trainer::new(TrainConfig::new(epochs).group(OptimSpec::Sgd { lr: 1e-3 }, None));
+        let t0 = Instant::now();
+        let log = trainer.run(&mut problem, &mut rng);
         let runtime = t0.elapsed().as_secs_f64();
+        let model_nn = problem.model;
         // KS statistic on terminal values: generated vs data. Driver paths
         // are drawn sequentially (so the evaluation noise is independent of
         // the worker count); the rollouts fan out over the parallel batch

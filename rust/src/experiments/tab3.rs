@@ -13,10 +13,9 @@ use crate::lie::TTorus;
 use crate::losses::EnergyScore;
 use crate::models::kuramoto::KuramotoParams;
 use crate::nn::neural_sde::TorusNeuralSde;
-use crate::nn::optim::{clip_global_norm, Optimizer};
 use crate::rng::{BrownianPath, Pcg64};
 use crate::solvers::{CfEes, CrouchGrossman, ManifoldStepper};
-use crate::vf::DiffManifoldVectorField;
+use crate::train::{ManifoldProblem, OptimSpec, TrainConfig, Trainer};
 use std::time::Instant;
 
 pub struct KuramotoRow {
@@ -63,12 +62,8 @@ pub fn run_rows(scale: Scale, n_osc: usize) -> Vec<KuramotoRow> {
         let h = t_end / steps as f64;
         let stride = (steps / n_obs).max(1);
         let obs: Vec<usize> = (1..=n_obs).map(|k| (k * stride).min(steps)).collect();
-        let mut model = TorusNeuralSde::new(n_osc, scale.pick(16, 128), &mut Pcg64::new(99));
-        let mut opt = Optimizer::adamw(1e-3, 1e-4, model.num_params());
-        let t0 = Instant::now();
-        let mut peak = 0usize;
-        let mut last_loss = f64::NAN;
-        for _ in 0..epochs {
+        let model = TorusNeuralSde::new(n_osc, scale.pick(16, 128), &mut Pcg64::new(99));
+        let sampler = move |rng: &mut Pcg64| {
             let y0s: Vec<Vec<f64>> = (0..batch)
                 .map(|_| {
                     let mut y = vec![0.0; dim];
@@ -82,25 +77,29 @@ pub fn run_rows(scale: Scale, n_osc: usize) -> Vec<KuramotoRow> {
                 })
                 .collect();
             let paths: Vec<BrownianPath> = (0..batch)
-                .map(|_| BrownianPath::sample(&mut rng, n_osc, steps, h))
+                .map(|_| BrownianPath::sample(rng, n_osc, steps, h))
                 .collect();
-            let (l, mut grad, mem) =
-                batch_grad_manifold(st.as_ref(), adj, &sp, &model, &y0s, &paths, &obs, &loss);
-            clip_global_norm(&mut grad, 1.0);
-            let mut p = model.params();
-            opt.step(&mut p, &grad);
-            model.set_params(&p);
-            peak = peak.max(mem);
-            last_loss = l;
-        }
+            (y0s, paths)
+        };
+        let mut problem =
+            ManifoldProblem::new(model, &sp, st.as_ref(), adj, sampler, obs.clone(), &loss);
+        let trainer = Trainer::new(TrainConfig::new(epochs).group(
+            OptimSpec::AdamW {
+                lr: 1e-3,
+                weight_decay: 1e-4,
+            },
+            Some(1.0),
+        ));
+        let t0 = Instant::now();
+        let log = trainer.run(&mut problem, &mut rng);
         rows.push(KuramotoRow {
             method: st.name(),
             adjoint: adj.name().into(),
             evals_per_step: evals,
             steps,
-            test_es: last_loss,
+            test_es: log.terminal_loss(),
             runtime_secs: t0.elapsed().as_secs_f64(),
-            peak_mem: peak,
+            peak_mem: log.peak_mem(),
         });
     }
     rows

@@ -13,9 +13,9 @@ use crate::bench::Table;
 use crate::lie::{HomogeneousSpace, Sphere};
 use crate::memory::{MemMeter, MeteredTape};
 use crate::models::sphere_lsde::{Classifier, SphereDataset, SphereNeuralField};
-use crate::nn::optim::{clip_global_norm, Optimizer};
 use crate::rng::{BrownianPath, Pcg64};
 use crate::solvers::{CfEes, CrouchGrossman, GeoEulerMaruyama, ManifoldStepper, Rkmk};
+use crate::train::{OptimSpec, TrainConfig, TrainProblem, Trainer};
 use crate::vf::DiffManifoldVectorField;
 use std::time::Instant;
 
@@ -55,6 +55,148 @@ fn encode(enc: &[f64], obs0: &[f64], obs_dim: usize, n_latent: usize, sp: &Spher
     z
 }
 
+/// The Table-4 training problem: the latent drift field and the linear
+/// classification head as two parameter groups (Adam 3e-3 + clip-1.0 on the
+/// field, Adam 1e-2 unclipped on the head — [`TrainConfig`] policy), with
+/// the per-sample encode → geometric solve → per-horizon cross-entropy →
+/// adjoint backward pipeline as the epoch gradient.
+struct SphereLatentProblem<'a> {
+    ds: &'a SphereDataset,
+    sp: &'a Sphere,
+    stepper: &'a dyn ManifoldStepper,
+    adj: AdjointMethod,
+    field: SphereNeuralField,
+    classifier: Classifier,
+    /// Affine context encoder (n_latent × (obs_dim+1)), untrained.
+    enc: Vec<f64>,
+    obs_dim: usize,
+    n_latent: usize,
+    batch: usize,
+    n_obs_data: usize,
+    steps: usize,
+    h: f64,
+    class_obs: Vec<usize>,
+}
+
+impl TrainProblem for SphereLatentProblem<'_> {
+    fn num_params(&self) -> usize {
+        self.field.num_params() + self.classifier.w.len()
+    }
+
+    fn param_groups(&self) -> Vec<usize> {
+        vec![self.field.num_params(), self.classifier.w.len()]
+    }
+
+    fn params(&self) -> Vec<f64> {
+        let mut p = self.field.params();
+        p.extend_from_slice(&self.classifier.w);
+        p
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        let nf = self.field.num_params();
+        self.field.set_params(&p[..nf]);
+        self.classifier.w.copy_from_slice(&p[nf..]);
+    }
+
+    fn grad(
+        &mut self,
+        _epoch: usize,
+        rng: &mut Pcg64,
+        _parallelism: usize,
+    ) -> (f64, Vec<f64>, usize) {
+        let (sp, st, adj) = (self.sp, self.stepper, self.adj);
+        let (n_latent, steps, h) = (self.n_latent, self.steps, self.h);
+        let mut d_field = vec![0.0; self.field.num_params()];
+        let mut d_cls = vec![0.0; self.classifier.w.len()];
+        let mut peak_mem = 0usize;
+        let mut ce_sum = 0.0;
+        let mut ce_terms = 0usize;
+        for _ in 0..self.batch {
+            let (obs, label) = self
+                .ds
+                .sample(self.n_obs_data, 1.0 / self.n_obs_data as f64, rng);
+            let z0 = encode(&self.enc, &obs[..self.obs_dim], self.obs_dim, n_latent, sp);
+            let path = BrownianPath::sample(rng, n_latent, steps, h);
+            // Forward with taping per adjoint.
+            let mut meter = MemMeter::new();
+            meter.alloc(2 * n_latent + sp.algebra_dim());
+            let seg = (steps as f64).sqrt().ceil() as usize;
+            let mut tape = MeteredTape::new();
+            let mut z = z0.clone();
+            let mut class_states: Vec<Vec<f64>> = Vec::new();
+            if adj != AdjointMethod::Reversible {
+                tape.push(&z, &mut meter);
+            }
+            for n in 0..steps {
+                st.step(sp, &self.field, n as f64 * h, h, path.increment(n), &mut z);
+                match adj {
+                    AdjointMethod::Full => tape.push(&z, &mut meter),
+                    AdjointMethod::Recursive => {
+                        if (n + 1) % seg == 0 {
+                            tape.push(&z, &mut meter);
+                        }
+                    }
+                    AdjointMethod::Reversible => {}
+                }
+                if self.class_obs.contains(&(n + 1)) {
+                    class_states.push(z.clone());
+                }
+            }
+            // Loss + cotangents at classification points.
+            let mut cots: Vec<Vec<f64>> = Vec::new();
+            for zs in &class_states {
+                let mut d_z = vec![0.0; n_latent];
+                ce_sum += self.classifier.ce_grad(zs, label, &mut d_z, &mut d_cls);
+                ce_terms += 1;
+                cots.push(d_z);
+            }
+            // Backward sweep.
+            let mut lambda = vec![0.0; n_latent];
+            let mut seg_buf = MeteredTape::new();
+            let mut ci = class_states.len();
+            for n in (0..steps).rev() {
+                if self.class_obs.contains(&(n + 1)) {
+                    ci -= 1;
+                    for d in 0..n_latent {
+                        lambda[d] += cots[ci][d];
+                    }
+                }
+                let t = n as f64 * h;
+                let dw = path.increment(n);
+                let prev: Vec<f64> = match adj {
+                    AdjointMethod::Full => tape.get(n).to_vec(),
+                    AdjointMethod::Reversible => {
+                        st.step_back(sp, &self.field, t, h, dw, &mut z);
+                        z.clone()
+                    }
+                    AdjointMethod::Recursive => {
+                        if seg_buf.is_empty() {
+                            let seg_start = (n / seg) * seg;
+                            let mut s = tape.get(n / seg).to_vec();
+                            seg_buf.push(&s, &mut meter);
+                            for m in seg_start..n {
+                                let tm = m as f64 * h;
+                                st.step(sp, &self.field, tm, h, path.increment(m), &mut s);
+                                seg_buf.push(&s, &mut meter);
+                            }
+                        }
+                        seg_buf.pop(&mut meter).unwrap()
+                    }
+                };
+                st.backprop_step(sp, &self.field, t, h, dw, &prev, &mut lambda, &mut d_field);
+            }
+            peak_mem = peak_mem.max(meter.peak_f64s());
+        }
+        // Mean cross-entropy over (batch × horizons) — reporting only; the
+        // gradient itself is the summed one the original loop produced.
+        let loss = ce_sum / ce_terms.max(1) as f64;
+        let mut grad = d_field;
+        grad.extend_from_slice(&d_cls);
+        (loss, grad, peak_mem)
+    }
+}
+
 /// One training/eval run for a given (stepper, adjoint). Returns
 /// (test accuracy, runtime, peak adjoint mem).
 fn run_one(
@@ -75,107 +217,47 @@ fn run_one(
     let steps = super::steps_for_budget(budget, evals);
     let h = 1.0 / steps as f64;
     let sp = Sphere::new(n_latent);
-    let mut field = SphereNeuralField::new(n_latent, scale.pick(16, 64), 0.05, &mut Pcg64::new(7));
-    let mut classifier = Classifier::new(n_classes, n_latent, &mut Pcg64::new(8));
+    let field = SphereNeuralField::new(n_latent, scale.pick(16, 64), 0.05, &mut Pcg64::new(7));
+    let classifier = Classifier::new(n_classes, n_latent, &mut Pcg64::new(8));
     let mut enc = vec![0.0; n_latent * (obs_dim + 1)];
     Pcg64::new(9).fill_normal_scaled(0.1, &mut enc);
-    let mut opt_f = Optimizer::adam(3e-3, field.num_params());
-    let mut opt_c = Optimizer::adam(1e-2, classifier.w.len());
     let t0 = Instant::now();
-    let mut peak_mem = 0usize;
     // Observation steps inside the latent solve: classify at each quarter.
     let class_obs: Vec<usize> = (1..=4).map(|k| k * steps / 4).collect();
-    for _ in 0..epochs {
-        let mut d_field = vec![0.0; field.num_params()];
-        let mut d_cls = vec![0.0; classifier.w.len()];
-        for _ in 0..batch {
-            let (obs, label) = ds.sample(n_obs_data, 1.0 / n_obs_data as f64, &mut rng);
-            let z0 = encode(&enc, &obs[..obs_dim], obs_dim, n_latent, &sp);
-            let path = BrownianPath::sample(&mut rng, n_latent, steps, h);
-            // Forward with taping per adjoint.
-            let mut meter = MemMeter::new();
-            meter.alloc(2 * n_latent + sp.algebra_dim());
-            let seg = (steps as f64).sqrt().ceil() as usize;
-            let mut tape = MeteredTape::new();
-            let mut z = z0.clone();
-            let mut class_states: Vec<Vec<f64>> = Vec::new();
-            if adj != AdjointMethod::Reversible {
-                tape.push(&z, &mut meter);
-            }
-            for n in 0..steps {
-                st.step(&sp, &field, n as f64 * h, h, path.increment(n), &mut z);
-                match adj {
-                    AdjointMethod::Full => tape.push(&z, &mut meter),
-                    AdjointMethod::Recursive => {
-                        if (n + 1) % seg == 0 {
-                            tape.push(&z, &mut meter);
-                        }
-                    }
-                    AdjointMethod::Reversible => {}
-                }
-                if class_obs.contains(&(n + 1)) {
-                    class_states.push(z.clone());
-                }
-            }
-            // Loss + cotangents at classification points.
-            let mut cots: Vec<Vec<f64>> = Vec::new();
-            for zs in &class_states {
-                let mut d_z = vec![0.0; n_latent];
-                classifier.ce_grad(zs, label, &mut d_z, &mut d_cls);
-                cots.push(d_z);
-            }
-            // Backward sweep.
-            let mut lambda = vec![0.0; n_latent];
-            let mut seg_buf = MeteredTape::new();
-            let mut ci = class_states.len();
-            for n in (0..steps).rev() {
-                if class_obs.contains(&(n + 1)) {
-                    ci -= 1;
-                    for d in 0..n_latent {
-                        lambda[d] += cots[ci][d];
-                    }
-                }
-                let t = n as f64 * h;
-                let dw = path.increment(n);
-                let prev: Vec<f64> = match adj {
-                    AdjointMethod::Full => tape.get(n).to_vec(),
-                    AdjointMethod::Reversible => {
-                        st.step_back(&sp, &field, t, h, dw, &mut z);
-                        z.clone()
-                    }
-                    AdjointMethod::Recursive => {
-                        if seg_buf.is_empty() {
-                            let seg_start = (n / seg) * seg;
-                            let mut s = tape.get(n / seg).to_vec();
-                            seg_buf.push(&s, &mut meter);
-                            for m in seg_start..n {
-                                st.step(&sp, &field, m as f64 * h, h, path.increment(m), &mut s);
-                                seg_buf.push(&s, &mut meter);
-                            }
-                        }
-                        seg_buf.pop(&mut meter).unwrap()
-                    }
-                };
-                st.backprop_step(&sp, &field, t, h, dw, &prev, &mut lambda, &mut d_field);
-            }
-            peak_mem = peak_mem.max(meter.peak_f64s());
-        }
-        clip_global_norm(&mut d_field, 1.0);
-        let mut pf = field.params();
-        opt_f.step(&mut pf, &d_field);
-        field.set_params(&pf);
-        opt_c.step(&mut classifier.w, &d_cls);
-    }
+    let mut problem = SphereLatentProblem {
+        ds: &ds,
+        sp: &sp,
+        stepper: st,
+        adj,
+        field,
+        classifier,
+        enc,
+        obs_dim,
+        n_latent,
+        batch,
+        n_obs_data,
+        steps,
+        h,
+        class_obs: class_obs.clone(),
+    };
+    let trainer = Trainer::new(
+        TrainConfig::new(epochs)
+            .group(OptimSpec::Adam { lr: 3e-3 }, Some(1.0))
+            .group(OptimSpec::Adam { lr: 1e-2 }, None),
+    );
+    let log = trainer.run(&mut problem, &mut rng);
+    let peak_mem = log.peak_mem();
+    let (field, classifier, enc) = (&problem.field, &problem.classifier, &problem.enc);
     // Test accuracy: per-timepoint classification at the 4 horizons.
     let mut correct = 0usize;
     let mut total = 0usize;
     let test_n = scale.pick(32, 256);
     for _ in 0..test_n {
         let (obs, label) = ds.sample(n_obs_data, 1.0 / n_obs_data as f64, &mut rng);
-        let mut z = encode(&enc, &obs[..obs_dim], obs_dim, n_latent, &sp);
+        let mut z = encode(enc, &obs[..obs_dim], obs_dim, n_latent, &sp);
         let path = BrownianPath::sample(&mut rng, n_latent, steps, h);
         for n in 0..steps {
-            st.step(&sp, &field, n as f64 * h, h, path.increment(n), &mut z);
+            st.step(&sp, field, n as f64 * h, h, path.increment(n), &mut z);
             if class_obs.contains(&(n + 1)) {
                 if classifier.predict(&z) == label {
                     correct += 1;

@@ -8,12 +8,14 @@
 use super::{euclidean_roster, steps_for_budget, Scale};
 use crate::adjoint::AdjointMethod;
 use crate::bench::{fmt, Table};
-use crate::coordinator::batch_grad_euclidean;
+use crate::coordinator::batch_grad_euclidean_pool;
 use crate::losses::MomentMatch;
+use crate::memory::WorkspacePool;
 use crate::models::gbm::StiffGbm;
 use crate::nn::neural_sde::NeuralSde;
-use crate::nn::optim::Optimizer;
 use crate::rng::{BrownianPath, Pcg64};
+use crate::solvers::Stepper;
+use crate::train::{FlatParams, OptimSpec, TrainConfig, TrainProblem, Trainer};
 use crate::vf::DiffVectorField;
 use std::time::Instant;
 
@@ -24,6 +26,85 @@ pub struct GbmRow {
     pub terminal_mse: Option<f64>,
     pub grad_mse_vs_full: f64,
     pub runtime_secs: f64,
+}
+
+/// The Table-7 training problem: a reversible-adjoint batch gradient per
+/// epoch, plus the Figure-11 side-channel — every 5th epoch the same batch
+/// is re-swept with the Full (discretise-then-optimise) adjoint and the
+/// squared deviation accumulated. Divergence handling is the trainer's
+/// `stop_on_non_finite` protocol (the side-channel is skipped on the
+/// diverging epoch, exactly as the pre-refactor loop broke before it).
+struct StiffGbmProblem<'a> {
+    model: NeuralSde,
+    stepper: &'a dyn Stepper,
+    obs: &'a [usize],
+    loss: &'a MomentMatch,
+    d: usize,
+    batch: usize,
+    steps: usize,
+    h: f64,
+    grad_mse: f64,
+    grad_evals: usize,
+    pool: WorkspacePool,
+}
+
+impl TrainProblem for StiffGbmProblem<'_> {
+    fn num_params(&self) -> usize {
+        self.model.num_params()
+    }
+
+    fn params(&self) -> Vec<f64> {
+        FlatParams::params(&self.model)
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        FlatParams::set_params(&mut self.model, p)
+    }
+
+    fn grad(
+        &mut self,
+        epoch: usize,
+        rng: &mut Pcg64,
+        parallelism: usize,
+    ) -> (f64, Vec<f64>, usize) {
+        let y0s: Vec<Vec<f64>> = (0..self.batch).map(|_| vec![1.0; self.d]).collect();
+        let paths: Vec<BrownianPath> = (0..self.batch)
+            .map(|_| BrownianPath::sample(rng, self.d, self.steps, self.h))
+            .collect();
+        let (l, grad, mem) = batch_grad_euclidean_pool(
+            self.stepper,
+            AdjointMethod::Reversible,
+            &self.model,
+            &y0s,
+            &paths,
+            self.obs,
+            self.loss,
+            parallelism,
+            &self.pool,
+        );
+        let finite = l.is_finite() && grad.iter().all(|g| g.is_finite());
+        if finite && epoch % 5 == 0 {
+            let (_, g_full, _) = batch_grad_euclidean_pool(
+                self.stepper,
+                AdjointMethod::Full,
+                &self.model,
+                &y0s,
+                &paths,
+                self.obs,
+                self.loss,
+                parallelism,
+                &self.pool,
+            );
+            let num: f64 = grad
+                .iter()
+                .zip(g_full.iter())
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            self.grad_mse += num / grad.len() as f64;
+            self.grad_evals += 1;
+        }
+        (l, grad, mem)
+    }
 }
 
 pub fn run_rows(scale: Scale) -> Vec<GbmRow> {
@@ -71,69 +152,42 @@ pub fn run_rows(scale: Scale) -> Vec<GbmRow> {
         let h = 1.0 / steps as f64;
         let stride = (steps / n_obs).max(1);
         let obs: Vec<usize> = (1..=n_obs).map(|k| (k * stride).min(steps)).collect();
-        let mut model = NeuralSde::lsde(d, scale.pick(16, 32), 2, false, &mut Pcg64::new(77));
-        let mut opt = Optimizer::adam(1e-2, model.num_params());
+        let mut problem = StiffGbmProblem {
+            model: NeuralSde::lsde(d, scale.pick(16, 32), 2, false, &mut Pcg64::new(77)),
+            stepper: st.as_ref(),
+            obs: &obs,
+            loss: &loss,
+            d,
+            batch,
+            steps,
+            h,
+            grad_mse: 0.0,
+            grad_evals: 0,
+            pool: WorkspacePool::new(),
+        };
+        let trainer = Trainer::new(
+            TrainConfig::new(epochs)
+                .group(OptimSpec::Adam { lr: 1e-2 }, Some(10.0))
+                .with_stop_on_non_finite(true),
+        );
         let t0 = Instant::now();
-        let mut diverged = false;
-        let mut last_loss = f64::NAN;
-        let mut grad_mse = 0.0;
-        let mut grad_evals = 0usize;
-        for epoch in 0..epochs {
-            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![1.0; d]).collect();
-            let paths: Vec<BrownianPath> = (0..batch)
-                .map(|_| BrownianPath::sample(&mut rng, d, steps, h))
-                .collect();
-            let (l, grad, _) = batch_grad_euclidean(
-                st.as_ref(),
-                AdjointMethod::Reversible,
-                &model,
-                &y0s,
-                &paths,
-                &obs,
-                &loss,
-            );
-            if !l.is_finite() || grad.iter().any(|g| !g.is_finite()) {
-                diverged = true;
-                break;
-            }
-            // Figure 11: compare reversible gradient against the Full
-            // (discretise-then-optimise) gradient every few epochs.
-            if epoch % 5 == 0 {
-                let (_, g_full, _) = batch_grad_euclidean(
-                    st.as_ref(),
-                    AdjointMethod::Full,
-                    &model,
-                    &y0s,
-                    &paths,
-                    &obs,
-                    &loss,
-                );
-                let num: f64 = grad
-                    .iter()
-                    .zip(g_full.iter())
-                    .map(|(a, b)| (a - b) * (a - b))
-                    .sum();
-                grad_mse += num / grad.len() as f64;
-                grad_evals += 1;
-            }
-            let mut g = grad;
-            crate::nn::optim::clip_global_norm(&mut g, 10.0);
-            let mut p = model.params();
-            opt.step(&mut p, &g);
-            model.set_params(&p);
-            last_loss = l;
-        }
+        let log = trainer.run(&mut problem, &mut rng);
+        let last_loss = if log.diverged {
+            f64::NAN
+        } else {
+            log.terminal_loss()
+        };
         rows.push(GbmRow {
             method: st.props().name,
             evals_per_step: evals,
             steps,
-            terminal_mse: if diverged || !last_loss.is_finite() {
+            terminal_mse: if log.diverged || !last_loss.is_finite() {
                 None
             } else {
                 Some(last_loss)
             },
-            grad_mse_vs_full: if grad_evals > 0 {
-                grad_mse / grad_evals as f64
+            grad_mse_vs_full: if problem.grad_evals > 0 {
+                problem.grad_mse / problem.grad_evals as f64
             } else {
                 f64::NAN
             },

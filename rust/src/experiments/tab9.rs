@@ -6,11 +6,13 @@
 use super::{euclidean_roster, steps_for_budget, Scale};
 use crate::adjoint::AdjointMethod;
 use crate::bench::{fmt, Table};
+use crate::coordinator::batch_grad_euclidean_pool;
 use crate::losses::BatchLoss;
-use crate::memory::MemMeter;
+use crate::memory::WorkspacePool;
 use crate::models::md::WaterSystem;
-use crate::nn::optim::Optimizer;
 use crate::rng::{BrownianPath, Pcg64};
+use crate::solvers::Stepper;
+use crate::train::{OptimSpec, TrainConfig, TrainProblem, Trainer};
 use crate::vf::VectorField;
 use std::time::Instant;
 
@@ -57,6 +59,61 @@ pub struct MdRow {
     pub peak_mem: usize,
 }
 
+/// The Table-9 training problem: the force-field parameters `theta` of a
+/// [`WaterSystem`] trained through long Langevin rollouts. Fresh initial
+/// conditions and drivers are drawn per epoch from the shared stream;
+/// divergence is the trainer's `stop_on_non_finite` protocol (the
+/// diverging epoch's memory figure still counts toward the peak, as in the
+/// pre-refactor loop).
+struct MdProblem<'a> {
+    sys: WaterSystem,
+    stepper: &'a dyn Stepper,
+    loss: &'a DipoleLoss,
+    obs: &'a [usize],
+    batch: usize,
+    steps: usize,
+    h: f64,
+    pool: WorkspacePool,
+}
+
+impl TrainProblem for MdProblem<'_> {
+    fn num_params(&self) -> usize {
+        self.sys.theta.len()
+    }
+
+    fn params(&self) -> Vec<f64> {
+        self.sys.theta.clone()
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        self.sys.theta.copy_from_slice(p);
+    }
+
+    fn grad(
+        &mut self,
+        _epoch: usize,
+        rng: &mut Pcg64,
+        parallelism: usize,
+    ) -> (f64, Vec<f64>, usize) {
+        let field = self.sys.as_field();
+        let y0s: Vec<Vec<f64>> = (0..self.batch).map(|_| self.sys.init_state(rng)).collect();
+        let paths: Vec<BrownianPath> = (0..self.batch)
+            .map(|_| BrownianPath::sample(rng, field.noise_dim(), self.steps, self.h))
+            .collect();
+        batch_grad_euclidean_pool(
+            self.stepper,
+            AdjointMethod::Reversible,
+            &field,
+            &y0s,
+            &paths,
+            self.obs,
+            self.loss,
+            parallelism,
+            &self.pool,
+        )
+    }
+}
+
 pub fn run_rows(scale: Scale) -> Vec<MdRow> {
     let n_mol = scale.pick(2, 8);
     let epochs = scale.pick(6, 40);
@@ -66,7 +123,7 @@ pub fn run_rows(scale: Scale) -> Vec<MdRow> {
     let mut rows = Vec::new();
     for st in euclidean_roster() {
         let mut rng = Pcg64::new(606);
-        let mut sys = WaterSystem::new(n_mol);
+        let sys = WaterSystem::new(n_mol);
         let loss = DipoleLoss {
             n_mol,
             charge: sys.charge.clone(),
@@ -77,44 +134,34 @@ pub fn run_rows(scale: Scale) -> Vec<MdRow> {
         let n_obs = 4;
         let stride = (steps / n_obs).max(1);
         let obs: Vec<usize> = (1..=n_obs).map(|k| (k * stride).min(steps)).collect();
-        let mut opt = Optimizer::adam(5e-4, 4);
+        let mut problem = MdProblem {
+            sys,
+            stepper: st.as_ref(),
+            loss: &loss,
+            obs: &obs,
+            batch,
+            steps,
+            h,
+            pool: WorkspacePool::new(),
+        };
+        let trainer = Trainer::new(
+            TrainConfig::new(epochs)
+                .group(OptimSpec::Adam { lr: 5e-4 }, Some(1.0))
+                .with_stop_on_non_finite(true),
+        );
         let t0 = Instant::now();
-        let mut diverged = false;
-        let mut last = f64::NAN;
-        let mut peak = 0usize;
-        for _ in 0..epochs {
-            let field = sys.as_field();
-            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| sys.init_state(&mut rng)).collect();
-            let paths: Vec<BrownianPath> = (0..batch)
-                .map(|_| BrownianPath::sample(&mut rng, field.noise_dim(), steps, h))
-                .collect();
-            let (l, grad, mem) = crate::coordinator::batch_grad_euclidean(
-                st.as_ref(),
-                AdjointMethod::Reversible,
-                &field,
-                &y0s,
-                &paths,
-                &obs,
-                &loss,
-            );
-            peak = peak.max(mem);
-            if !l.is_finite() || grad.iter().any(|g| !g.is_finite()) {
-                diverged = true;
-                break;
-            }
-            let mut g = grad;
-            crate::nn::optim::clip_global_norm(&mut g, 1.0);
-            opt.step(&mut sys.theta, &g);
-            last = l;
-        }
-        let _ = MemMeter::new();
+        let log = trainer.run(&mut problem, &mut rng);
         rows.push(MdRow {
             method: st.props().name,
             evals_per_step: evals,
             steps,
-            terminal_loss: if diverged { None } else { Some(last) },
+            terminal_loss: if log.diverged {
+                None
+            } else {
+                Some(log.terminal_loss())
+            },
             runtime_secs: t0.elapsed().as_secs_f64(),
-            peak_mem: peak,
+            peak_mem: log.peak_mem(),
         });
     }
     rows

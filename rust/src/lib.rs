@@ -17,7 +17,9 @@
 //! - **Evaluation**: [`stability`] (absolute & mean-square stability domains),
 //!   [`models`] (every data-generating system of the paper's evaluation),
 //!   [`losses`], [`experiments`] (one harness per paper table/figure),
-//!   [`coordinator`] (training orchestration) and [`runtime`] (PJRT execution of
+//!   [`coordinator`] (deterministic parallel batch solves), [`train`] (the
+//!   training engine: `Trainer`, schedules, callbacks, checkpointing, the
+//!   scenario registry behind `ees train`) and [`runtime`] (PJRT execution of
 //!   JAX/Pallas-AOT artifacts — Python never on the training path).
 
 pub mod adjoint;
@@ -37,6 +39,7 @@ pub mod sig;
 pub mod solvers;
 pub mod stability;
 pub mod tableau;
+pub mod train;
 pub mod vf;
 
 pub mod bench;

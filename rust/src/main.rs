@@ -22,10 +22,22 @@
 //! ees ees27                # Figure 9
 //! ees runtime-smoke        # PJRT artifact load/execute check
 //! ees all                  # everything (smoke scale)
+//! ees train --config F     # training engine: run a registered scenario
 //! ```
+//!
+//! `ees train` reads a `[train]` config section (scenario, epochs, batch,
+//! optimiser, schedule, seed — see `ees::train::TrainConfig::from_config`),
+//! runs it through the unified training engine and prints the per-epoch
+//! summary. `--ledger OUT.json` additionally writes the run's per-epoch
+//! `TrainLedger` JSON once the run finishes (library users wanting rows
+//! as they happen attach `TrainLedger` as a streaming `Callback` instead);
+//! `--max-final-loss X` / `--assert-improves` turn the run into a CI smoke
+//! gate (non-zero exit on failure).
 
+use ees::config::Config;
 use ees::experiments::{self, Scale};
 use ees::models::stochvol::VolModel;
+use ees::train::{scenarios, TrainLedger};
 
 struct Args {
     cmd: String,
@@ -34,6 +46,11 @@ struct Args {
     out: Option<String>,
     model: Option<String>,
     steps: Vec<usize>,
+    config: Option<String>,
+    scenario: Option<String>,
+    ledger: Option<String>,
+    max_final_loss: Option<f64>,
+    assert_improves: bool,
 }
 
 fn parse_args() -> Args {
@@ -44,6 +61,11 @@ fn parse_args() -> Args {
         out: None,
         model: None,
         steps: vec![],
+        config: None,
+        scenario: None,
+        ledger: None,
+        max_final_loss: None,
+        assert_improves: false,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -52,6 +74,23 @@ fn parse_args() -> Args {
             "--render" => args.render = true,
             "--out" => args.out = it.next(),
             "--model" => args.model = it.next(),
+            "--config" => args.config = it.next(),
+            "--scenario" => args.scenario = it.next(),
+            "--ledger" => args.ledger = it.next(),
+            "--max-final-loss" => {
+                let raw = it.next().unwrap_or_default();
+                match raw.parse() {
+                    Ok(v) => args.max_final_loss = Some(v),
+                    Err(_) => {
+                        // A malformed threshold must fail loudly: silently
+                        // dropping it would vacuously green-light the CI
+                        // smoke gate.
+                        eprintln!("--max-final-loss: not a number: '{raw}'");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            "--assert-improves" => args.assert_improves = true,
             "--steps" => {
                 if let Some(s) = it.next() {
                     args.steps = s
@@ -134,6 +173,7 @@ fn main() {
         "cf-convergence" => experiments::fig8::run(scale),
         "ees27" => experiments::fig9::run(scale),
         "runtime-smoke" => runtime_smoke(),
+        "train" => run_train(&args),
         "all" => {
             let mut all = String::new();
             all.push_str(&experiments::fig2::run(false));
@@ -167,7 +207,12 @@ fn main() {
             eprintln!("usage: ees <command> [--full] [--render] [--out FILE] [--model NAME] [--steps a,b,c]");
             eprintln!("commands: stability ms-stability ou stochvol kuramoto kuramoto-memory");
             eprintln!("          sphere sphere-memory gbm md adjoint-fidelity memory-t7");
-            eprintln!("          convergence cf-convergence ees27 runtime-smoke all");
+            eprintln!("          convergence cf-convergence ees27 runtime-smoke train all");
+            eprintln!(
+                "train:    ees train --config FILE [--scenario {}] [--ledger OUT.json]",
+                ees::train::scenarios::NAMES.join("|")
+            );
+            eprintln!("                    [--max-final-loss X] [--assert-improves]");
             std::process::exit(0);
         }
         other => {
@@ -183,6 +228,72 @@ fn main() {
         }
         eprintln!("report written to {path}");
     }
+}
+
+/// `ees train`: run a registered training scenario from a config file
+/// through the unified training engine (`ees::train`). Exits non-zero when
+/// the scenario is unknown, the config is malformed, or a smoke assertion
+/// (`--max-final-loss`, `--assert-improves`) fails.
+fn run_train(args: &Args) -> String {
+    let mut cfg = match &args.config {
+        Some(path) => match Config::from_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("ees train: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => Config::default(),
+    };
+    if let Some(name) = &args.scenario {
+        cfg.values.insert(
+            "train.scenario".into(),
+            ees::config::Value::Str(name.clone()),
+        );
+    }
+    let run = match scenarios::run_scenario(&cfg) {
+        Ok(run) => run,
+        Err(e) => {
+            eprintln!("ees train: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Some(path) = &args.ledger {
+        let json = TrainLedger::from_log(&run.scenario, &run.log).to_json();
+        if let Err(e) = std::fs::write(path, json) {
+            eprintln!("failed to write ledger {path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("train ledger written to {path}");
+    }
+    // Smoke-gate assertions (CI train-smoke): print the summary first so a
+    // failing run still shows its loss curve.
+    let terminal = run.log.terminal_loss();
+    let mut failures = Vec::new();
+    if run.log.diverged {
+        failures.push("run diverged (non-finite loss or gradient)".to_string());
+    }
+    if let Some(max) = args.max_final_loss {
+        let below = terminal < max;
+        if !below {
+            failures.push(format!("final loss {terminal} not below threshold {max}"));
+        }
+    }
+    if args.assert_improves {
+        let first = run.log.history.first().map(|m| m.loss).unwrap_or(f64::NAN);
+        let improved = terminal < first;
+        if !improved {
+            failures.push(format!("final loss {terminal} did not improve on epoch 0 ({first})"));
+        }
+    }
+    if !failures.is_empty() {
+        println!("{}", run.summary);
+        for f in &failures {
+            eprintln!("ees train: FAILED: {f}");
+        }
+        std::process::exit(1);
+    }
+    run.summary
 }
 
 /// PJRT smoke: load the AOT EES-step artifact and run one batch step.

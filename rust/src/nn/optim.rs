@@ -51,6 +51,21 @@ impl Optimizer {
         o
     }
 
+    /// Current base learning rate.
+    pub fn lr(&self) -> f64 {
+        match self {
+            Optimizer::Sgd { lr } | Optimizer::Adam { lr, .. } => *lr,
+        }
+    }
+
+    /// Install a new learning rate, leaving all moment state untouched —
+    /// the hook [`crate::train::LrSchedule`] drives every epoch.
+    pub fn set_lr(&mut self, new_lr: f64) {
+        match self {
+            Optimizer::Sgd { lr } | Optimizer::Adam { lr, .. } => *lr = new_lr,
+        }
+    }
+
     /// Apply one update: params ← params − direction(grads).
     pub fn step(&mut self, params: &mut [f64], grads: &[f64]) {
         match self {
@@ -151,5 +166,35 @@ mod tests {
         let mut g = vec![0.3, 0.4];
         clip_global_norm(&mut g, 1.0);
         assert_eq!(g, vec![0.3, 0.4]);
+    }
+
+    /// set_lr changes only the rate: moment state survives, and an Adam
+    /// step at the new rate scales exactly like the rate ratio on the
+    /// first step.
+    #[test]
+    fn set_lr_preserves_state() {
+        let mut a = Optimizer::adam(0.01, 1);
+        assert_eq!(a.lr(), 0.01);
+        let mut p1 = vec![1.0];
+        a.step(&mut p1, &[0.5]);
+        let state_after = a.clone();
+        a.set_lr(0.02);
+        assert_eq!(a.lr(), 0.02);
+        if let (
+            Optimizer::Adam { m, v, t, .. },
+            Optimizer::Adam { m: m0, v: v0, t: t0, .. },
+        ) = (&a, &state_after)
+        {
+            assert_eq!(m, m0);
+            assert_eq!(v, v0);
+            assert_eq!(t, t0);
+        } else {
+            panic!("expected Adam");
+        }
+        let mut s = Optimizer::sgd(0.5);
+        s.set_lr(0.25);
+        let mut p = vec![1.0];
+        s.step(&mut p, &[1.0]);
+        assert!((p[0] - 0.75).abs() < 1e-15);
     }
 }

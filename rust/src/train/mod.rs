@@ -1,0 +1,1195 @@
+//! The training engine: one `Trainer` owns the optimisation loop for every
+//! experiment in the repo — Euclidean and manifold models, any
+//! (solver, [`crate::adjoint::AdjointMethod`], noise, parallelism)
+//! combination.
+//!
+//! The paper's claims (gradient fidelity, O(1) adjoint memory, stability
+//! under stiffness) only matter *inside a training loop*, so the loop itself
+//! is a first-class subsystem rather than a per-experiment copy:
+//!
+//! - [`TrainConfig`] — epochs, gradient accumulation, per-group optimiser
+//!   construction ([`OptimSpec`]) and clipping policy, worker count, seed.
+//! - [`LrSchedule`] — constant / linear warmup / cosine / step decay,
+//!   layered onto [`crate::nn::optim::Optimizer`] via `set_lr`.
+//! - [`TrainProblem`] — the model-side contract: flat parameter access plus
+//!   one minibatch forward+backward. Canned implementations for the batch
+//!   engines live in [`problems`]; experiments with bespoke pipelines
+//!   (latent classification, divergence probes) implement it directly.
+//! - [`Callback`] hooks — [`EarlyStopping`], [`Checkpoint`] (in-memory or
+//!   serialized [`Snapshot`]s), and the streaming [`TrainLedger`] (the
+//!   training-side sibling of [`crate::bench::ledger`]).
+//!
+//! # Determinism contract
+//!
+//! The trainer inherits the batch engine's guarantee: per-epoch noise is
+//! drawn **sequentially from the epoch RNG on the calling thread**
+//! (split-stream or virtual-Brownian-tree schemes, see
+//! [`crate::coordinator::sample_paths_par`]), and gradients are reduced in
+//! fixed batch order — so loss curves and parameter trajectories are
+//! **bitwise-identical at every worker count**, including
+//! `EES_PARALLELISM=1` vs `4` (pinned by `rust/tests/trainer.rs`).
+//!
+//! # Hot-path rule
+//!
+//! A [`problems`] implementation holds one [`crate::memory::WorkspacePool`]
+//! for the life of the run and calls the coordinator's `*_pool` entry
+//! points, so solver scratch stays warm **across epochs**: after the
+//! warm-up epoch the loop performs a per-epoch-constant number of heap
+//! allocations (pinned by `rust/tests/alloc_regression.rs`).
+
+pub mod problems;
+pub mod scenarios;
+pub mod schedule;
+
+pub use problems::{EuclideanProblem, FlatParams, ManifoldProblem};
+pub use schedule::LrSchedule;
+
+use crate::config::Config;
+use crate::nn::optim::{clip_global_norm, Optimizer};
+use crate::rng::Pcg64;
+use std::time::Instant;
+
+/// One epoch's metrics.
+#[derive(Clone, Debug)]
+pub struct EpochMetrics {
+    /// Epoch index (0-based).
+    pub epoch: usize,
+    /// Batch loss at this epoch.
+    pub loss: f64,
+    /// Pre-clip global gradient norm.
+    pub grad_norm: f64,
+    /// Peak adjoint-machinery memory (f64 slots) of the epoch's solve.
+    pub peak_mem_f64s: usize,
+    /// Wall-clock time of the epoch.
+    pub wall_secs: f64,
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    /// Per-epoch metrics in order.
+    pub history: Vec<EpochMetrics>,
+    /// Total wall-clock time of the run.
+    pub total_secs: f64,
+    /// `true` when the run stopped because a loss or gradient went
+    /// non-finite under [`TrainConfig::stop_on_non_finite`]. The diverging
+    /// epoch's metrics are recorded; no parameter update was applied for it.
+    pub diverged: bool,
+    /// `true` when a [`Callback`] (e.g. [`EarlyStopping`]) ended the run
+    /// before [`TrainConfig::epochs`].
+    pub stopped_early: bool,
+}
+
+impl TrainLog {
+    /// Loss of the final epoch (`NaN` when no epoch ran).
+    pub fn terminal_loss(&self) -> f64 {
+        self.history.last().map(|m| m.loss).unwrap_or(f64::NAN)
+    }
+
+    /// Maximum per-epoch peak adjoint memory over the run.
+    pub fn peak_mem(&self) -> usize {
+        self.history
+            .iter()
+            .map(|m| m.peak_mem_f64s)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Optimiser construction recipe — the per-group half of the satellite rule
+/// "optimiser construction and clipping policy live in [`TrainConfig`], not
+/// in experiments".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptimSpec {
+    Sgd { lr: f64 },
+    Adam { lr: f64 },
+    AdamW { lr: f64, weight_decay: f64 },
+}
+
+impl OptimSpec {
+    /// Build a fresh optimiser (zero state) for `n_params` parameters.
+    pub fn build(&self, n_params: usize) -> Optimizer {
+        match *self {
+            OptimSpec::Sgd { lr } => Optimizer::sgd(lr),
+            OptimSpec::Adam { lr } => Optimizer::adam(lr, n_params),
+            OptimSpec::AdamW { lr, weight_decay } => Optimizer::adamw(lr, weight_decay, n_params),
+        }
+    }
+
+    /// The spec a live optimiser was built from (state is not captured —
+    /// pair with [`Trainer::run_resumed`] to keep it).
+    pub fn of(opt: &Optimizer) -> Self {
+        match opt {
+            Optimizer::Sgd { lr } => OptimSpec::Sgd { lr: *lr },
+            Optimizer::Adam {
+                lr, weight_decay, ..
+            } => {
+                if *weight_decay > 0.0 {
+                    OptimSpec::AdamW {
+                        lr: *lr,
+                        weight_decay: *weight_decay,
+                    }
+                } else {
+                    OptimSpec::Adam { lr: *lr }
+                }
+            }
+        }
+    }
+
+    /// Base learning rate of the spec.
+    pub fn lr(&self) -> f64 {
+        match *self {
+            OptimSpec::Sgd { lr } | OptimSpec::Adam { lr } | OptimSpec::AdamW { lr, .. } => lr,
+        }
+    }
+}
+
+/// One parameter group's training policy: how its optimiser is built and
+/// whether its gradient is global-norm-clipped before the step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GroupSpec {
+    pub optim: OptimSpec,
+    /// `Some(c)` clips the group's gradient to ℓ2 norm `c` (in place)
+    /// before the optimiser step; `None` leaves it untouched (the pre-clip
+    /// norm is still reported in [`EpochMetrics::grad_norm`]).
+    pub clip: Option<f64>,
+}
+
+/// Loop-level configuration. Build with [`TrainConfig::new`] + the `with_*`
+/// builders, or parse the `[train]` config section via
+/// [`TrainConfig::from_config`].
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Number of epochs (one optimiser step per epoch).
+    pub epochs: usize,
+    /// Batch size hint for scenario builders (the canned [`problems`]
+    /// samplers capture their own batch; this field is what
+    /// [`scenarios`] and config files feed them).
+    pub batch: usize,
+    /// Gradient accumulation: the problem's minibatch gradient is evaluated
+    /// this many times per epoch and averaged (loss averaged too) before
+    /// the single optimiser step. `1` (the default) adds no arithmetic.
+    pub accum: usize,
+    /// Worker count handed to [`TrainProblem::grad`]; defaults to
+    /// [`crate::config::default_parallelism`]. Results are
+    /// bitwise-identical for every value — this is a pure perf knob.
+    pub parallelism: usize,
+    /// Seed policy for scenario builders: data, model init and per-epoch
+    /// noise streams are all derived from this via [`Pcg64::split`].
+    pub seed: u64,
+    /// Global index of this run's first epoch — the resume knob. The
+    /// [`LrSchedule`] is evaluated at `epoch_offset + epoch` and
+    /// [`EpochMetrics::epoch`] continues the global numbering, so a run
+    /// restored at epoch `k` (see [`Trainer::run_resumed`]) with
+    /// `epoch_offset = k` lands on exactly the learning rates the
+    /// uninterrupted run would have used. `0` (the default) is a plain
+    /// fresh run.
+    pub epoch_offset: usize,
+    /// Stop (without stepping) when a loss/gradient goes non-finite —
+    /// the divergence protocol of the stiff-GBM and MD tables.
+    pub stop_on_non_finite: bool,
+    /// Learning-rate schedule applied to every group's base rate.
+    pub schedule: LrSchedule,
+    /// One spec per parameter group of the [`TrainProblem`] (most problems
+    /// have exactly one group; see [`TrainProblem::param_groups`]).
+    pub groups: Vec<GroupSpec>,
+}
+
+impl TrainConfig {
+    pub fn new(epochs: usize) -> Self {
+        Self {
+            epochs,
+            batch: 32,
+            accum: 1,
+            parallelism: crate::config::default_parallelism(),
+            seed: 0,
+            epoch_offset: 0,
+            stop_on_non_finite: false,
+            schedule: LrSchedule::Constant,
+            groups: Vec::new(),
+        }
+    }
+
+    /// Append a parameter group (call once per group, in group order).
+    pub fn group(mut self, optim: OptimSpec, clip: Option<f64>) -> Self {
+        self.groups.push(GroupSpec { optim, clip });
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn with_accum(mut self, accum: usize) -> Self {
+        self.accum = accum.max(1);
+        self
+    }
+
+    pub fn with_parallelism(mut self, parallelism: usize) -> Self {
+        self.parallelism = parallelism.max(1);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_epoch_offset(mut self, epoch_offset: usize) -> Self {
+        self.epoch_offset = epoch_offset;
+        self
+    }
+
+    pub fn with_schedule(mut self, schedule: LrSchedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn with_stop_on_non_finite(mut self, stop: bool) -> Self {
+        self.stop_on_non_finite = stop;
+        self
+    }
+
+    /// Parse the `[train]` section of a config file (single parameter
+    /// group). Recognised keys, all optional:
+    ///
+    /// ```toml
+    /// [train]
+    /// epochs = 40
+    /// batch = 64
+    /// accum = 1
+    /// seed = 20
+    /// epoch_offset = 0          # resume: global index of the first epoch
+    /// lr = 0.02
+    /// optimizer = "adam"        # sgd | adam | adamw
+    /// weight_decay = 0.0        # adamw only
+    /// clip = 1.0                # absent or <= 0 => no clipping
+    /// schedule = "constant"     # constant | warmup | cosine | step
+    /// warmup = 5                # warmup/cosine
+    /// decay_every = 10          # step
+    /// decay_gamma = 0.5         # step
+    /// stop_on_divergence = false
+    /// ```
+    ///
+    /// The worker count comes from `[exec] parallelism`
+    /// ([`Config::parallelism`]).
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let epochs = cfg.usize_or("train.epochs", 40);
+        let lr = cfg.f64_or("train.lr", 1e-2);
+        let wd = cfg.f64_or("train.weight_decay", 0.0);
+        let optim = match cfg.str_or("train.optimizer", "adam") {
+            "sgd" => OptimSpec::Sgd { lr },
+            "adam" => OptimSpec::Adam { lr },
+            "adamw" => OptimSpec::AdamW {
+                lr,
+                weight_decay: wd,
+            },
+            other => {
+                return Err(crate::format_err!(
+                    "unknown optimizer '{other}' (expected sgd | adam | adamw)"
+                ))
+            }
+        };
+        let clip = cfg
+            .get("train.clip")
+            .and_then(|v| v.as_f64())
+            .filter(|c| *c > 0.0);
+        // Schedules see the *global* epoch index, so a resumed run's
+        // horizon spans offset + epochs (a cosine resumed at offset 6 must
+        // decay over the same total as the uninterrupted run).
+        let epoch_offset = cfg.usize_or("train.epoch_offset", 0);
+        let schedule = LrSchedule::from_name(
+            cfg.str_or("train.schedule", "constant"),
+            cfg.usize_or("train.warmup", 0),
+            epoch_offset + epochs,
+            cfg.usize_or("train.decay_every", 10),
+            cfg.f64_or("train.decay_gamma", 0.5),
+        )?;
+        Ok(TrainConfig::new(epochs)
+            .with_batch(cfg.usize_or("train.batch", 64))
+            .with_accum(cfg.usize_or("train.accum", 1))
+            .with_parallelism(cfg.parallelism())
+            .with_seed(cfg.usize_or("train.seed", 0) as u64)
+            .with_epoch_offset(epoch_offset)
+            .with_schedule(schedule)
+            .with_stop_on_non_finite(cfg.bool_or("train.stop_on_divergence", false))
+            .group(optim, clip))
+    }
+}
+
+/// The model-side contract of the trainer: flat parameter access plus one
+/// minibatch forward+backward. The trainer owns optimisers, schedules,
+/// clipping and callbacks; the problem owns the model, the data pipeline
+/// and the solve.
+pub trait TrainProblem {
+    /// Total number of trainable parameters (sum of
+    /// [`Self::param_groups`]).
+    fn num_params(&self) -> usize;
+    /// Current parameters as one flat vector (groups concatenated in
+    /// group order).
+    fn params(&self) -> Vec<f64>;
+    /// Install a flat parameter vector (same layout as [`Self::params`]).
+    fn set_params(&mut self, p: &[f64]);
+    /// Lengths of the parameter groups inside the flat vector. Most
+    /// problems have one group; multi-headed models (e.g. the sphere
+    /// latent SDE's field + classifier) expose one group per optimiser.
+    fn param_groups(&self) -> Vec<usize> {
+        vec![self.num_params()]
+    }
+    /// One minibatch forward+backward at the current parameters: returns
+    /// (loss, d_params, peak adjoint memory in f64 slots). Noise must be
+    /// drawn **sequentially** from `rng` on the calling thread (hand
+    /// `parallelism` to a coordinator `*_par`/`*_pool` entry point for the
+    /// solve itself) so results are worker-count-invariant.
+    fn grad(&mut self, epoch: usize, rng: &mut Pcg64, parallelism: usize)
+        -> (f64, Vec<f64>, usize);
+}
+
+/// What a [`Callback`] sees at the end of each epoch (after the optimiser
+/// step).
+pub struct EpochCtx<'a> {
+    pub epoch: usize,
+    pub metrics: &'a EpochMetrics,
+    /// Parameters *after* this epoch's update, flat layout.
+    pub params: &'a [f64],
+}
+
+/// Callback verdict: keep going or end the run ([`TrainLog::stopped_early`]
+/// is set when any callback stops it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CallbackAction {
+    Continue,
+    Stop,
+}
+
+/// Per-epoch hook, run in order after the optimiser step. On a divergence
+/// stop the hooks still observe the diverging epoch (its parameters are
+/// the *pre-update* ones — no step was applied); their verdicts are moot
+/// there, since the run is ending anyway.
+pub trait Callback {
+    fn on_epoch_end(&mut self, ctx: &EpochCtx) -> CallbackAction;
+
+    /// Called once after the loop ends — normal completion, early stop or
+    /// divergence — with the finished log. Default: no-op.
+    fn on_run_end(&mut self, _log: &TrainLog) {}
+}
+
+/// Stop when the loss has not improved by at least `min_delta` for
+/// `patience` consecutive epochs.
+#[derive(Clone, Debug)]
+pub struct EarlyStopping {
+    pub patience: usize,
+    pub min_delta: f64,
+    best: f64,
+    since: usize,
+}
+
+impl EarlyStopping {
+    pub fn new(patience: usize, min_delta: f64) -> Self {
+        Self {
+            patience: patience.max(1),
+            min_delta,
+            best: f64::INFINITY,
+            since: 0,
+        }
+    }
+
+    /// Best loss seen so far (`inf` before the first epoch).
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+}
+
+impl Callback for EarlyStopping {
+    fn on_epoch_end(&mut self, ctx: &EpochCtx) -> CallbackAction {
+        if ctx.metrics.loss < self.best - self.min_delta {
+            self.best = ctx.metrics.loss;
+            self.since = 0;
+        } else {
+            self.since += 1;
+            if self.since >= self.patience {
+                return CallbackAction::Stop;
+            }
+        }
+        CallbackAction::Continue
+    }
+}
+
+/// A point-in-time parameter snapshot. The text form stores every `f64` as
+/// its 16-hex-digit bit pattern, so `to_text` → `from_text` is
+/// **bitwise-exact** (including negative zeros and subnormals) — restoring
+/// a snapshot and re-running an epoch reproduces the original run's next
+/// step to the bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub epoch: usize,
+    pub loss: f64,
+    pub params: Vec<f64>,
+}
+
+impl Snapshot {
+    /// Serialize (line-oriented: header, then one hex word per parameter).
+    pub fn to_text(&self) -> String {
+        let mut s = String::with_capacity(32 + 17 * self.params.len());
+        s.push_str(&format!(
+            "ees-snapshot-v1 epoch={} loss={:016x} n={}\n",
+            self.epoch,
+            self.loss.to_bits(),
+            self.params.len()
+        ));
+        for p in &self.params {
+            s.push_str(&format!("{:016x}\n", p.to_bits()));
+        }
+        s
+    }
+
+    /// Parse the [`Self::to_text`] form.
+    pub fn from_text(text: &str) -> crate::Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| crate::format_err!("empty snapshot"))?;
+        if header.split_whitespace().next() != Some("ees-snapshot-v1") {
+            return Err(crate::format_err!("not an ees-snapshot-v1 header: '{header}'"));
+        }
+        let mut epoch = 0usize;
+        let mut loss = f64::NAN;
+        let mut n = 0usize;
+        for field in header.split_whitespace().skip(1) {
+            let (k, v) = field
+                .split_once('=')
+                .ok_or_else(|| crate::format_err!("bad snapshot header field '{field}'"))?;
+            match k {
+                "epoch" => epoch = v.parse().map_err(|_| crate::format_err!("bad epoch '{v}'"))?,
+                "loss" => {
+                    let bits = u64::from_str_radix(v, 16)
+                        .map_err(|_| crate::format_err!("bad loss bits '{v}'"))?;
+                    loss = f64::from_bits(bits);
+                }
+                "n" => n = v.parse().map_err(|_| crate::format_err!("bad n '{v}'"))?,
+                other => return Err(crate::format_err!("unknown snapshot field '{other}'")),
+            }
+        }
+        let mut params = Vec::with_capacity(n);
+        for line in lines {
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            let bits = u64::from_str_radix(t, 16)
+                .map_err(|_| crate::format_err!("bad param bits '{t}'"))?;
+            params.push(f64::from_bits(bits));
+        }
+        if params.len() != n {
+            return Err(crate::format_err!(
+                "snapshot header says {n} params, found {}",
+                params.len()
+            ));
+        }
+        Ok(Self { epoch, loss, params })
+    }
+}
+
+/// Parameter checkpointing: keeps the latest and the best-loss [`Snapshot`]
+/// in memory, and (optionally) serializes the best one to `path` whenever
+/// it improves.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub best: Option<Snapshot>,
+    pub latest: Option<Snapshot>,
+    /// When set, the best snapshot's [`Snapshot::to_text`] form is written
+    /// here on every improvement (write errors are reported to stderr, not
+    /// fatal — checkpointing must never kill a long run).
+    pub path: Option<String>,
+}
+
+impl Checkpoint {
+    pub fn in_memory() -> Self {
+        Self::default()
+    }
+
+    pub fn to_file(path: impl Into<String>) -> Self {
+        Self {
+            path: Some(path.into()),
+            ..Self::default()
+        }
+    }
+}
+
+impl Callback for Checkpoint {
+    fn on_epoch_end(&mut self, ctx: &EpochCtx) -> CallbackAction {
+        let snap = Snapshot {
+            epoch: ctx.epoch,
+            loss: ctx.metrics.loss,
+            params: ctx.params.to_vec(),
+        };
+        // A non-finite loss never becomes the best snapshot (NaN would
+        // win the `<` comparison forever after); `latest` still records it.
+        let improved = snap.loss.is_finite()
+            && match &self.best {
+                Some(b) => !b.loss.is_finite() || snap.loss < b.loss,
+                None => true,
+            };
+        if improved {
+            if let Some(path) = &self.path {
+                if let Err(e) = std::fs::write(path, snap.to_text()) {
+                    eprintln!("checkpoint write to {path} failed: {e}");
+                }
+            }
+            self.best = Some(snap.clone());
+        }
+        self.latest = Some(snap);
+        CallbackAction::Continue
+    }
+}
+
+/// Streaming per-epoch metrics ledger — the training-run sibling of
+/// [`crate::bench::ledger`]: attach as a [`Callback`] (rows stream in as
+/// epochs finish) or build one from a finished [`TrainLog`], then emit
+/// `to_json` as a tracked artifact (the CI `train-smoke` job uploads it).
+#[derive(Clone, Debug)]
+pub struct TrainLedger {
+    /// Scenario / experiment name the run belongs to.
+    pub name: String,
+    pub rows: Vec<EpochMetrics>,
+    pub total_secs: f64,
+    pub diverged: bool,
+}
+
+impl TrainLedger {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            rows: Vec::new(),
+            total_secs: 0.0,
+            diverged: false,
+        }
+    }
+
+    pub fn from_log(name: impl Into<String>, log: &TrainLog) -> Self {
+        Self {
+            name: name.into(),
+            rows: log.history.clone(),
+            total_secs: log.total_secs,
+            diverged: log.diverged,
+        }
+    }
+
+    /// Pretty-printed JSON (hand-rolled: the offline build carries no
+    /// serde — see the dependency policy in `Cargo.toml`).
+    pub fn to_json(&self) -> String {
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".into()
+            }
+        }
+        let terminal = self.rows.last().map(|m| m.loss).unwrap_or(f64::NAN);
+        let peak = self.rows.iter().map(|m| m.peak_mem_f64s).max().unwrap_or(0);
+        let mut s = String::from("{\n");
+        s.push_str("  \"schema\": \"ees-train-ledger-v1\",\n");
+        s.push_str(&format!("  \"scenario\": \"{}\",\n", self.name));
+        s.push_str(&format!("  \"epochs\": {},\n", self.rows.len()));
+        s.push_str(&format!("  \"terminal_loss\": {},\n", num(terminal)));
+        s.push_str(&format!("  \"peak_mem_f64s\": {peak},\n"));
+        s.push_str(&format!("  \"total_secs\": {},\n", num(self.total_secs)));
+        s.push_str(&format!("  \"diverged\": {},\n", self.diverged));
+        s.push_str("  \"history\": [\n");
+        for (i, m) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"epoch\": {}, \"loss\": {}, \"grad_norm\": {}, \"peak_mem_f64s\": {}, \"wall_secs\": {}}}{}\n",
+                m.epoch,
+                num(m.loss),
+                num(m.grad_norm),
+                m.peak_mem_f64s,
+                num(m.wall_secs),
+                if i + 1 == self.rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+impl Callback for TrainLedger {
+    fn on_epoch_end(&mut self, ctx: &EpochCtx) -> CallbackAction {
+        self.rows.push(ctx.metrics.clone());
+        CallbackAction::Continue
+    }
+
+    fn on_run_end(&mut self, log: &TrainLog) {
+        self.diverged = log.diverged;
+        self.total_secs = log.total_secs;
+    }
+}
+
+/// The training engine. Construct with a [`TrainConfig`] and drive any
+/// [`TrainProblem`]:
+///
+/// ```
+/// use ees::rng::Pcg64;
+/// use ees::train::{OptimSpec, TrainConfig, Trainer, TrainProblem};
+///
+/// /// Minimise |p|² — the smallest possible TrainProblem.
+/// struct Quadratic {
+///     p: Vec<f64>,
+/// }
+/// impl TrainProblem for Quadratic {
+///     fn num_params(&self) -> usize {
+///         self.p.len()
+///     }
+///     fn params(&self) -> Vec<f64> {
+///         self.p.clone()
+///     }
+///     fn set_params(&mut self, p: &[f64]) {
+///         self.p.copy_from_slice(p);
+///     }
+///     fn grad(&mut self, _e: usize, _rng: &mut Pcg64, _par: usize) -> (f64, Vec<f64>, usize) {
+///         let loss = self.p.iter().map(|x| x * x).sum();
+///         (loss, self.p.iter().map(|x| 2.0 * x).collect(), 0)
+///     }
+/// }
+///
+/// let trainer = Trainer::new(
+///     TrainConfig::new(50).group(OptimSpec::Sgd { lr: 0.1 }, None),
+/// );
+/// let mut problem = Quadratic { p: vec![3.0, -2.0] };
+/// let log = trainer.run(&mut problem, &mut Pcg64::new(1));
+/// assert!(log.terminal_loss() < 1e-6);
+/// ```
+#[derive(Clone, Debug)]
+pub struct Trainer {
+    pub config: TrainConfig,
+}
+
+impl Trainer {
+    pub fn new(config: TrainConfig) -> Self {
+        assert!(
+            !config.groups.is_empty(),
+            "TrainConfig needs at least one parameter group (TrainConfig::group)"
+        );
+        Self { config }
+    }
+
+    /// Run the full loop with no callbacks.
+    pub fn run<P: TrainProblem + ?Sized>(&self, problem: &mut P, rng: &mut Pcg64) -> TrainLog {
+        self.run_with(problem, rng, &mut [])
+    }
+
+    /// Run the full loop, building fresh optimisers from the config's
+    /// [`GroupSpec`]s.
+    pub fn run_with<P: TrainProblem + ?Sized>(
+        &self,
+        problem: &mut P,
+        rng: &mut Pcg64,
+        callbacks: &mut [&mut dyn Callback],
+    ) -> TrainLog {
+        let sizes = problem.param_groups();
+        let mut opts: Vec<Optimizer> = self
+            .config
+            .groups
+            .iter()
+            .zip(sizes.iter())
+            .map(|(g, &n)| g.optim.build(n))
+            .collect();
+        self.run_resumed(problem, rng, callbacks, &mut opts)
+    }
+
+    /// Run the loop on **caller-owned optimiser state** (one optimiser per
+    /// group, in group order) — the resume path: restore a [`Snapshot`],
+    /// hand back the saved optimisers, set
+    /// [`TrainConfig::epoch_offset`] to the snapshot's next epoch, and the
+    /// trajectory continues as if never interrupted. [`GroupSpec::optim`]
+    /// is not rebuilt here, but it still supplies each group's **base**
+    /// learning rate for non-constant [`LrSchedule`]s (the live
+    /// optimiser's rate may hold a previous run's scaled value).
+    pub fn run_resumed<P: TrainProblem + ?Sized>(
+        &self,
+        problem: &mut P,
+        rng: &mut Pcg64,
+        callbacks: &mut [&mut dyn Callback],
+        opts: &mut [Optimizer],
+    ) -> TrainLog {
+        let cfg = &self.config;
+        let sizes = problem.param_groups();
+        assert_eq!(
+            sizes.iter().sum::<usize>(),
+            problem.num_params(),
+            "param_groups must partition the flat parameter vector"
+        );
+        assert_eq!(
+            sizes.len(),
+            cfg.groups.len(),
+            "TrainConfig has {} group spec(s) but the problem exposes {} group(s)",
+            cfg.groups.len(),
+            sizes.len()
+        );
+        assert_eq!(opts.len(), sizes.len(), "one optimiser per parameter group");
+        // Base rates come from the group specs, not the live optimisers: a
+        // resumed optimiser's lr still holds the previous run's scheduled
+        // (scaled) value.
+        let base_lrs: Vec<f64> = cfg.groups.iter().map(|g| g.optim.lr()).collect();
+
+        let start = Instant::now();
+        let mut log = TrainLog {
+            history: Vec::with_capacity(cfg.epochs),
+            ..TrainLog::default()
+        };
+        'epochs: for epoch in 0..cfg.epochs {
+            // Global epoch index: schedules, metrics and the problem all
+            // see the resumed numbering (offset 0 for fresh runs).
+            let epoch = cfg.epoch_offset + epoch;
+            let e0 = Instant::now();
+            // 1. Schedule: install this epoch's learning rates. Constant
+            //    schedules skip the write entirely (factor_opt = None).
+            if let Some(f) = cfg.schedule.factor_opt(epoch) {
+                for (opt, base) in opts.iter_mut().zip(base_lrs.iter()) {
+                    opt.set_lr(base * f);
+                }
+            }
+
+            // 2. Minibatch gradient (averaged over `accum` evaluations;
+            //    accum = 1 bypasses the averaging arithmetic entirely).
+            let (loss, mut grad, peak) = if cfg.accum <= 1 {
+                problem.grad(epoch, rng, cfg.parallelism)
+            } else {
+                let (mut l_sum, mut g_acc, mut peak) = problem.grad(epoch, rng, cfg.parallelism);
+                for _ in 1..cfg.accum {
+                    let (li, gi, pi) = problem.grad(epoch, rng, cfg.parallelism);
+                    l_sum += li;
+                    for (a, b) in g_acc.iter_mut().zip(gi.iter()) {
+                        *a += b;
+                    }
+                    peak = peak.max(pi);
+                }
+                let inv = 1.0 / cfg.accum as f64;
+                for g in g_acc.iter_mut() {
+                    *g *= inv;
+                }
+                (l_sum * inv, g_acc, peak)
+            };
+
+            // 3. Divergence protocol: record the epoch, skip the update,
+            //    stop. (Off by default — NaNs then flow into the step, the
+            //    legacy behaviour of the budget tables.)
+            if cfg.stop_on_non_finite
+                && (!loss.is_finite() || grad.iter().any(|g| !g.is_finite()))
+            {
+                let gn = grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+                log.history.push(EpochMetrics {
+                    epoch,
+                    loss,
+                    grad_norm: gn,
+                    peak_mem_f64s: peak,
+                    wall_secs: e0.elapsed().as_secs_f64(),
+                });
+                log.diverged = true;
+                // Callbacks still observe the diverging epoch (a streaming
+                // ledger must record it); params are the pre-update ones,
+                // and Stop verdicts are moot — the run is ending.
+                let params = problem.params();
+                let ctx = EpochCtx {
+                    epoch,
+                    metrics: log.history.last().expect("just pushed"),
+                    params: &params,
+                };
+                for cb in callbacks.iter_mut() {
+                    cb.on_epoch_end(&ctx);
+                }
+                break 'epochs;
+            }
+
+            // 4. Per-group clipping (reporting the pre-clip norm), then the
+            //    optimiser steps in group order.
+            let mut first_norm = 0.0;
+            let mut gn_sq = 0.0;
+            let mut off = 0;
+            for (gi, &len) in sizes.iter().enumerate() {
+                let g = &mut grad[off..off + len];
+                let n = match cfg.groups[gi].clip {
+                    Some(c) => clip_global_norm(g, c),
+                    None => g.iter().map(|x| x * x).sum::<f64>().sqrt(),
+                };
+                if gi == 0 {
+                    first_norm = n;
+                }
+                gn_sq += n * n;
+                off += len;
+            }
+            // Single group: report the exact norm (no sqrt-of-square
+            // round-trip), matching the pre-refactor loops bit for bit.
+            let grad_norm = if sizes.len() == 1 { first_norm } else { gn_sq.sqrt() };
+
+            let mut params = problem.params();
+            let mut off = 0;
+            for (opt, &len) in opts.iter_mut().zip(sizes.iter()) {
+                opt.step(&mut params[off..off + len], &grad[off..off + len]);
+                off += len;
+            }
+            problem.set_params(&params);
+
+            // 5. Metrics + callbacks (in registration order).
+            log.history.push(EpochMetrics {
+                epoch,
+                loss,
+                grad_norm,
+                peak_mem_f64s: peak,
+                wall_secs: e0.elapsed().as_secs_f64(),
+            });
+            let ctx = EpochCtx {
+                epoch,
+                metrics: log.history.last().expect("just pushed"),
+                params: &params,
+            };
+            for cb in callbacks.iter_mut() {
+                if cb.on_epoch_end(&ctx) == CallbackAction::Stop {
+                    log.stopped_early = true;
+                    break 'epochs;
+                }
+            }
+        }
+        log.total_secs = start.elapsed().as_secs_f64();
+        for cb in callbacks.iter_mut() {
+            cb.on_run_end(&log);
+        }
+        log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Quadratic {
+        p: Vec<f64>,
+        /// Optional second group (independent quadratic bowl).
+        split: Option<usize>,
+    }
+
+    impl TrainProblem for Quadratic {
+        fn num_params(&self) -> usize {
+            self.p.len()
+        }
+        fn params(&self) -> Vec<f64> {
+            self.p.clone()
+        }
+        fn set_params(&mut self, p: &[f64]) {
+            self.p.copy_from_slice(p);
+        }
+        fn param_groups(&self) -> Vec<usize> {
+            match self.split {
+                Some(k) => vec![k, self.p.len() - k],
+                None => vec![self.p.len()],
+            }
+        }
+        fn grad(&mut self, _e: usize, _rng: &mut Pcg64, _par: usize) -> (f64, Vec<f64>, usize) {
+            let loss = self.p.iter().map(|x| x * x).sum();
+            (loss, self.p.iter().map(|x| 2.0 * x).collect(), 7)
+        }
+    }
+
+    #[test]
+    fn trainer_minimises_quadratic_and_records_metrics() {
+        let trainer = Trainer::new(
+            TrainConfig::new(300).group(OptimSpec::Adam { lr: 0.1 }, Some(10.0)),
+        );
+        let mut problem = Quadratic {
+            p: vec![4.0, -3.0],
+            split: None,
+        };
+        let log = trainer.run(&mut problem, &mut Pcg64::new(1));
+        assert_eq!(log.history.len(), 300);
+        assert!(log.terminal_loss() < 1e-3, "{}", log.terminal_loss());
+        assert!(!log.diverged && !log.stopped_early);
+        assert_eq!(log.history[0].epoch, 0);
+        assert_eq!(log.history[0].peak_mem_f64s, 7);
+        // Pre-clip norm of [8, -6] is 10.
+        assert!((log.history[0].grad_norm - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_groups_with_distinct_policies() {
+        let trainer = Trainer::new(
+            TrainConfig::new(400)
+                .group(OptimSpec::Sgd { lr: 0.1 }, Some(1.0))
+                .group(OptimSpec::Adam { lr: 0.1 }, None),
+        );
+        let mut problem = Quadratic {
+            p: vec![2.0, -1.0, 5.0],
+            split: Some(2),
+        };
+        let log = trainer.run(&mut problem, &mut Pcg64::new(1));
+        assert!(log.terminal_loss() < 1e-2, "{}", log.terminal_loss());
+    }
+
+    #[test]
+    fn early_stopping_stops_on_plateau() {
+        /// Constant loss, zero gradient: nothing ever improves.
+        struct Flat;
+        impl TrainProblem for Flat {
+            fn num_params(&self) -> usize {
+                1
+            }
+            fn params(&self) -> Vec<f64> {
+                vec![0.0]
+            }
+            fn set_params(&mut self, _p: &[f64]) {}
+            fn grad(&mut self, _e: usize, _r: &mut Pcg64, _p: usize) -> (f64, Vec<f64>, usize) {
+                (1.0, vec![0.0], 0)
+            }
+        }
+        let trainer =
+            Trainer::new(TrainConfig::new(100).group(OptimSpec::Sgd { lr: 0.1 }, None));
+        let mut es = EarlyStopping::new(4, 0.0);
+        let log = trainer.run_with(&mut Flat, &mut Pcg64::new(1), &mut [&mut es]);
+        // Epoch 0 sets best = 1.0; epochs 1..=4 fail to improve => stop.
+        assert!(log.stopped_early);
+        assert_eq!(log.history.len(), 5);
+        assert_eq!(es.best(), 1.0);
+    }
+
+    #[test]
+    fn divergence_stops_without_stepping() {
+        struct Blowup {
+            p: Vec<f64>,
+        }
+        impl TrainProblem for Blowup {
+            fn num_params(&self) -> usize {
+                1
+            }
+            fn params(&self) -> Vec<f64> {
+                self.p.clone()
+            }
+            fn set_params(&mut self, p: &[f64]) {
+                self.p.copy_from_slice(p);
+            }
+            fn grad(&mut self, e: usize, _r: &mut Pcg64, _p: usize) -> (f64, Vec<f64>, usize) {
+                if e == 2 {
+                    (f64::NAN, vec![f64::NAN], 3)
+                } else {
+                    (1.0, vec![1.0], 3)
+                }
+            }
+        }
+        let trainer = Trainer::new(
+            TrainConfig::new(10)
+                .group(OptimSpec::Sgd { lr: 0.5 }, None)
+                .with_stop_on_non_finite(true),
+        );
+        let mut problem = Blowup { p: vec![0.0] };
+        let mut ledger = TrainLedger::new("blowup");
+        let log = trainer.run_with(&mut problem, &mut Pcg64::new(1), &mut [&mut ledger]);
+        assert!(log.diverged);
+        // The diverging epoch is recorded (its memory figure counts toward
+        // peak_mem) but its update is not applied.
+        assert_eq!(log.history.len(), 3);
+        assert!(log.terminal_loss().is_nan());
+        assert_eq!(problem.p[0], -1.0, "exactly two sgd steps applied");
+        // A streaming ledger observes the diverging epoch and the run
+        // outcome — it must agree with the log, row for row.
+        assert_eq!(ledger.rows.len(), 3);
+        assert!(ledger.rows[2].loss.is_nan());
+        assert!(ledger.diverged);
+        assert_eq!(ledger.total_secs, log.total_secs);
+        assert!(ledger.to_json().contains("\"diverged\": true"));
+    }
+
+    /// The resume knob: with `epoch_offset = k`, schedules are evaluated
+    /// at the global epoch index and the metrics continue the global
+    /// numbering — a split run reproduces the uninterrupted run's
+    /// learning-rate trajectory exactly.
+    #[test]
+    fn epoch_offset_resumes_schedule_and_numbering() {
+        struct Line {
+            p: Vec<f64>,
+            moves: Vec<f64>,
+        }
+        impl TrainProblem for Line {
+            fn num_params(&self) -> usize {
+                1
+            }
+            fn params(&self) -> Vec<f64> {
+                self.p.clone()
+            }
+            fn set_params(&mut self, p: &[f64]) {
+                self.moves.push((p[0] - self.p[0]).abs());
+                self.p.copy_from_slice(p);
+            }
+            fn grad(&mut self, _e: usize, _r: &mut Pcg64, _p: usize) -> (f64, Vec<f64>, usize) {
+                (self.p[0], vec![1.0], 0)
+            }
+        }
+        let schedule = LrSchedule::Cosine { warmup: 0, total: 10 };
+        let spec = OptimSpec::Sgd { lr: 0.5 };
+        // Uninterrupted 10 epochs.
+        let mut full = Line { p: vec![0.0], moves: Vec::new() };
+        Trainer::new(
+            TrainConfig::new(10)
+                .group(spec, None)
+                .with_schedule(schedule.clone()),
+        )
+        .run(&mut full, &mut Pcg64::new(1));
+        // Split: 6 epochs, then resume with offset 6 on the saved state.
+        let mut split = Line { p: vec![0.0], moves: Vec::new() };
+        let mut opts = vec![spec.build(1)];
+        let head = Trainer::new(
+            TrainConfig::new(6)
+                .group(spec, None)
+                .with_schedule(schedule.clone()),
+        )
+        .run_resumed(&mut split, &mut Pcg64::new(1), &mut [], &mut opts);
+        assert_eq!(head.history.last().unwrap().epoch, 5);
+        let tail = Trainer::new(
+            TrainConfig::new(4)
+                .group(spec, None)
+                .with_schedule(schedule)
+                .with_epoch_offset(6),
+        )
+        .run_resumed(&mut split, &mut Pcg64::new(1), &mut [], &mut opts);
+        assert_eq!(tail.history.first().unwrap().epoch, 6);
+        assert_eq!(tail.history.last().unwrap().epoch, 9);
+        assert_eq!(split.moves.len(), full.moves.len());
+        for (i, (a, b)) in full.moves.iter().zip(split.moves.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "move at epoch {i}");
+        }
+    }
+
+    #[test]
+    fn snapshot_text_roundtrip_is_bitwise() {
+        let snap = Snapshot {
+            epoch: 17,
+            loss: 0.1 + 0.2,
+            params: vec![0.0, -0.0, 1.5e-308, -3.25, f64::MIN_POSITIVE, 1e300],
+        };
+        let back = Snapshot::from_text(&snap.to_text()).unwrap();
+        assert_eq!(back.epoch, 17);
+        assert_eq!(back.loss.to_bits(), snap.loss.to_bits());
+        assert_eq!(back.params.len(), snap.params.len());
+        for (a, b) in snap.params.iter().zip(back.params.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(Snapshot::from_text("garbage").is_err());
+    }
+
+    #[test]
+    fn checkpoint_tracks_best_and_latest() {
+        struct Vshape;
+        impl TrainProblem for Vshape {
+            fn num_params(&self) -> usize {
+                1
+            }
+            fn params(&self) -> Vec<f64> {
+                vec![0.5]
+            }
+            fn set_params(&mut self, _p: &[f64]) {}
+            fn grad(&mut self, e: usize, _r: &mut Pcg64, _p: usize) -> (f64, Vec<f64>, usize) {
+                // NaN on epoch 0 (must never become "best"), then a dip at
+                // epoch 3 and a rise after.
+                if e == 0 {
+                    (f64::NAN, vec![0.0], 0)
+                } else {
+                    ((e as f64 - 3.0).abs(), vec![0.0], 0)
+                }
+            }
+        }
+        let trainer =
+            Trainer::new(TrainConfig::new(7).group(OptimSpec::Sgd { lr: 0.0 }, None));
+        let mut ck = Checkpoint::in_memory();
+        let log = trainer.run_with(&mut Vshape, &mut Pcg64::new(1), &mut [&mut ck]);
+        assert_eq!(log.history.len(), 7);
+        assert_eq!(ck.best.as_ref().unwrap().epoch, 3);
+        assert_eq!(ck.best.as_ref().unwrap().loss, 0.0);
+        assert_eq!(ck.latest.as_ref().unwrap().epoch, 6);
+    }
+
+    #[test]
+    fn ledger_json_shape() {
+        let mut ledger = TrainLedger::new("ou");
+        ledger.rows.push(EpochMetrics {
+            epoch: 0,
+            loss: 2.5,
+            grad_norm: 1.0,
+            peak_mem_f64s: 64,
+            wall_secs: 0.125,
+        });
+        ledger.rows.push(EpochMetrics {
+            epoch: 1,
+            loss: f64::NAN,
+            grad_norm: 0.5,
+            peak_mem_f64s: 32,
+            wall_secs: 0.25,
+        });
+        let j = ledger.to_json();
+        assert!(j.contains("\"schema\": \"ees-train-ledger-v1\""));
+        assert!(j.contains("\"scenario\": \"ou\""));
+        assert!(j.contains("\"peak_mem_f64s\": 64"));
+        assert!(j.contains("\"loss\": null"), "NaN must serialize as null");
+        assert!(j.contains("\"epochs\": 2"));
+    }
+
+    #[test]
+    fn from_config_parses_train_section() {
+        let cfg = Config::parse(
+            r#"
+[train]
+epochs = 12
+batch = 8
+lr = 0.005
+optimizer = "adamw"
+weight_decay = 0.01
+clip = 2.0
+schedule = "cosine"
+warmup = 3
+seed = 9
+stop_on_divergence = true
+
+[exec]
+parallelism = 2
+"#,
+        )
+        .unwrap();
+        let tc = TrainConfig::from_config(&cfg).unwrap();
+        assert_eq!(tc.epochs, 12);
+        assert_eq!(tc.batch, 8);
+        assert_eq!(tc.parallelism, 2);
+        assert_eq!(tc.seed, 9);
+        assert!(tc.stop_on_non_finite);
+        assert_eq!(tc.schedule, LrSchedule::Cosine { warmup: 3, total: 12 });
+        assert_eq!(tc.groups.len(), 1);
+        assert_eq!(
+            tc.groups[0].optim,
+            OptimSpec::AdamW { lr: 0.005, weight_decay: 0.01 }
+        );
+        assert_eq!(tc.groups[0].clip, Some(2.0));
+        // Unknown optimizer / schedule are hard errors.
+        let bad = Config::parse("[train]\noptimizer = \"lbfgs\"").unwrap();
+        assert!(TrainConfig::from_config(&bad).is_err());
+        let bad2 = Config::parse("[train]\nschedule = \"exponential\"").unwrap();
+        assert!(TrainConfig::from_config(&bad2).is_err());
+        // A resumed cosine run decays over the *global* horizon: total is
+        // offset + epochs, and the offset flows through.
+        let resumed = Config::parse(
+            "[train]\nepochs = 4\nepoch_offset = 6\nschedule = \"cosine\"",
+        )
+        .unwrap();
+        let rc = TrainConfig::from_config(&resumed).unwrap();
+        assert_eq!(rc.epoch_offset, 6);
+        assert_eq!(rc.schedule, LrSchedule::Cosine { warmup: 0, total: 10 });
+    }
+
+    #[test]
+    fn optim_spec_of_roundtrip() {
+        assert_eq!(
+            OptimSpec::of(&Optimizer::sgd(0.1)),
+            OptimSpec::Sgd { lr: 0.1 }
+        );
+        assert_eq!(
+            OptimSpec::of(&Optimizer::adam(0.01, 3)),
+            OptimSpec::Adam { lr: 0.01 }
+        );
+        assert_eq!(
+            OptimSpec::of(&Optimizer::adamw(0.01, 0.1, 3)),
+            OptimSpec::AdamW { lr: 0.01, weight_decay: 0.1 }
+        );
+    }
+}

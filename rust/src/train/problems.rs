@@ -1,0 +1,298 @@
+//! Canned [`TrainProblem`](super::TrainProblem) implementations over the
+//! coordinator's deterministic parallel batch engine — the path every
+//! batch-loss experiment (OU, stochastic volatility, Kuramoto, …) trains
+//! through. Experiments with bespoke pipelines (the sphere latent-SDE
+//! classifier, the stiff-GBM divergence probe, the MD proxy) implement
+//! [`TrainProblem`](super::TrainProblem) directly on their own state.
+//!
+//! Both problems hold one [`WorkspacePool`] for the lifetime of the run and
+//! call the coordinator's `*_pool` entry points, so per-step solver scratch
+//! stays warm across epochs (the zero-alloc hot-path contract of
+//! `docs/ARCHITECTURE.md` §Hot path & workspaces).
+
+use super::TrainProblem;
+use crate::adjoint::AdjointMethod;
+use crate::coordinator::{batch_grad_euclidean_pool, batch_grad_manifold_pool};
+use crate::lie::HomogeneousSpace;
+use crate::losses::BatchLoss;
+use crate::memory::WorkspacePool;
+use crate::nn::neural_sde::{NeuralSde, TorusNeuralSde};
+use crate::rng::{BrownianPath, Pcg64};
+use crate::solvers::{ManifoldStepper, Stepper};
+use crate::vf::{DiffManifoldVectorField, DiffVectorField};
+
+/// Flat parameter-vector access — the glue between a model type and the
+/// trainer's optimiser machinery.
+pub trait FlatParams {
+    fn params(&self) -> Vec<f64>;
+    fn set_params(&mut self, p: &[f64]);
+}
+
+impl FlatParams for NeuralSde {
+    fn params(&self) -> Vec<f64> {
+        NeuralSde::params(self)
+    }
+    fn set_params(&mut self, p: &[f64]) {
+        NeuralSde::set_params(self, p)
+    }
+}
+
+impl FlatParams for TorusNeuralSde {
+    fn params(&self) -> Vec<f64> {
+        TorusNeuralSde::params(self)
+    }
+    fn set_params(&mut self, p: &[f64]) {
+        TorusNeuralSde::set_params(self, p)
+    }
+}
+
+/// Per-epoch batch sampler: draws `(y0s, paths)` **sequentially** from the
+/// epoch RNG on the calling thread (the determinism contract — see
+/// [`crate::coordinator::sample_paths_par`] for the split-stream variant).
+pub type BatchSampler<'a> = dyn FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>) + 'a;
+
+/// Euclidean batch-loss training problem: one
+/// [`batch_grad_euclidean_pool`] solve per epoch.
+///
+/// The model is owned (retrieve it after training via `problem.model`);
+/// stepper and loss are borrowed from the experiment.
+pub struct EuclideanProblem<'a, M, S>
+where
+    M: DiffVectorField + FlatParams,
+    S: FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>),
+{
+    pub model: M,
+    stepper: &'a dyn Stepper,
+    method: AdjointMethod,
+    sampler: S,
+    obs: Vec<usize>,
+    loss: &'a dyn BatchLoss,
+    pool: WorkspacePool,
+}
+
+impl<'a, M, S> EuclideanProblem<'a, M, S>
+where
+    M: DiffVectorField + FlatParams,
+    S: FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>),
+{
+    pub fn new(
+        model: M,
+        stepper: &'a dyn Stepper,
+        method: AdjointMethod,
+        sampler: S,
+        obs: Vec<usize>,
+        loss: &'a dyn BatchLoss,
+    ) -> Self {
+        Self {
+            model,
+            stepper,
+            method,
+            sampler,
+            obs,
+            loss,
+            pool: WorkspacePool::new(),
+        }
+    }
+}
+
+impl<M, S> TrainProblem for EuclideanProblem<'_, M, S>
+where
+    M: DiffVectorField + FlatParams,
+    S: FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>),
+{
+    fn num_params(&self) -> usize {
+        self.model.num_params()
+    }
+
+    fn params(&self) -> Vec<f64> {
+        FlatParams::params(&self.model)
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        FlatParams::set_params(&mut self.model, p)
+    }
+
+    fn grad(
+        &mut self,
+        _epoch: usize,
+        rng: &mut Pcg64,
+        parallelism: usize,
+    ) -> (f64, Vec<f64>, usize) {
+        let (y0s, paths) = (self.sampler)(rng);
+        batch_grad_euclidean_pool(
+            self.stepper,
+            self.method,
+            &self.model,
+            &y0s,
+            &paths,
+            &self.obs,
+            self.loss,
+            parallelism,
+            &self.pool,
+        )
+    }
+}
+
+/// Manifold batch-loss training problem: one
+/// [`batch_grad_manifold_pool`] solve (Algorithm 2 per sample) per epoch.
+pub struct ManifoldProblem<'a, M, S>
+where
+    M: DiffManifoldVectorField + FlatParams,
+    S: FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>),
+{
+    pub model: M,
+    space: &'a dyn HomogeneousSpace,
+    stepper: &'a dyn ManifoldStepper,
+    method: AdjointMethod,
+    sampler: S,
+    obs: Vec<usize>,
+    loss: &'a dyn BatchLoss,
+    pool: WorkspacePool,
+}
+
+impl<'a, M, S> ManifoldProblem<'a, M, S>
+where
+    M: DiffManifoldVectorField + FlatParams,
+    S: FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>),
+{
+    pub fn new(
+        model: M,
+        space: &'a dyn HomogeneousSpace,
+        stepper: &'a dyn ManifoldStepper,
+        method: AdjointMethod,
+        sampler: S,
+        obs: Vec<usize>,
+        loss: &'a dyn BatchLoss,
+    ) -> Self {
+        Self {
+            model,
+            space,
+            stepper,
+            method,
+            sampler,
+            obs,
+            loss,
+            pool: WorkspacePool::new(),
+        }
+    }
+}
+
+impl<M, S> TrainProblem for ManifoldProblem<'_, M, S>
+where
+    M: DiffManifoldVectorField + FlatParams,
+    S: FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>),
+{
+    fn num_params(&self) -> usize {
+        self.model.num_params()
+    }
+
+    fn params(&self) -> Vec<f64> {
+        FlatParams::params(&self.model)
+    }
+
+    fn set_params(&mut self, p: &[f64]) {
+        FlatParams::set_params(&mut self.model, p)
+    }
+
+    fn grad(
+        &mut self,
+        _epoch: usize,
+        rng: &mut Pcg64,
+        parallelism: usize,
+    ) -> (f64, Vec<f64>, usize) {
+        let (y0s, paths) = (self.sampler)(rng);
+        batch_grad_manifold_pool(
+            self.stepper,
+            self.method,
+            self.space,
+            &self.model,
+            &y0s,
+            &paths,
+            &self.obs,
+            self.loss,
+            parallelism,
+            &self.pool,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::losses::MomentMatch;
+    use crate::solvers::LowStorageStepper;
+    use crate::train::{OptimSpec, TrainConfig, Trainer};
+
+    /// The canned Euclidean problem reproduces the coordinator's
+    /// hand-rolled epoch (sample → grad → clip → adam step) bit for bit.
+    #[test]
+    fn euclidean_problem_matches_manual_epoch() {
+        let steps = 10;
+        let h = 0.05;
+        let batch = 4;
+        let obs = vec![5, 10];
+        let mut data = vec![0.0; batch * 2 * 2];
+        Pcg64::new(3).fill_normal(&mut data);
+        let loss = MomentMatch::from_data(&data, batch, 2, 2);
+        let st = LowStorageStepper::ees25();
+        let sampler = move |rng: &mut Pcg64| {
+            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.1, -0.2]).collect();
+            let paths: Vec<BrownianPath> = (0..batch)
+                .map(|_| BrownianPath::sample(rng, 2, steps, h))
+                .collect();
+            (y0s, paths)
+        };
+
+        // Trainer path.
+        let mut rng_a = Pcg64::new(11);
+        let model_a = NeuralSde::lsde(2, 6, 1, false, &mut Pcg64::new(5));
+        let mut problem = EuclideanProblem::new(
+            model_a,
+            &st,
+            AdjointMethod::Reversible,
+            sampler,
+            obs.clone(),
+            &loss,
+        );
+        let trainer = Trainer::new(
+            TrainConfig::new(3).group(OptimSpec::Adam { lr: 1e-2 }, Some(1.0)),
+        );
+        let log = trainer.run(&mut problem, &mut rng_a);
+
+        // Manual path.
+        let mut rng_b = Pcg64::new(11);
+        let mut model_b = NeuralSde::lsde(2, 6, 1, false, &mut Pcg64::new(5));
+        let mut opt = crate::nn::optim::Optimizer::adam(1e-2, model_b.num_params());
+        let mut losses = Vec::new();
+        for _ in 0..3 {
+            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.1, -0.2]).collect();
+            let paths: Vec<BrownianPath> = (0..batch)
+                .map(|_| BrownianPath::sample(&mut rng_b, 2, steps, h))
+                .collect();
+            let (l, mut grad, _) = crate::coordinator::batch_grad_euclidean(
+                &st,
+                AdjointMethod::Reversible,
+                &model_b,
+                &y0s,
+                &paths,
+                &obs,
+                &loss,
+            );
+            crate::nn::optim::clip_global_norm(&mut grad, 1.0);
+            let mut p = NeuralSde::params(&model_b);
+            opt.step(&mut p, &grad);
+            model_b.set_params(&p);
+            losses.push(l);
+        }
+
+        for (a, b) in log.history.iter().zip(losses.iter()) {
+            assert_eq!(a.loss.to_bits(), b.to_bits());
+        }
+        for (a, b) in FlatParams::params(&problem.model)
+            .iter()
+            .zip(NeuralSde::params(&model_b).iter())
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! The scenario registry behind the `ees train` CLI subcommand: named,
+//! config-driven training scenarios, each wiring a data-generating model, a
+//! loss and a solver into the [`Trainer`](super::Trainer).
+//!
+//! Scenarios read their model knobs from the same `[train]` section that
+//! [`TrainConfig::from_config`](super::TrainConfig::from_config) parses for
+//! the loop knobs, so one file drives the whole run:
+//!
+//! ```toml
+//! [train]
+//! scenario = "ou"     # ou | gbm | kuramoto
+//! epochs = 40
+//! batch = 64
+//! lr = 0.02
+//! clip = 1.0
+//!
+//! [exec]
+//! parallelism = 4
+//! ```
+//!
+//! # Seed policy
+//!
+//! Everything derives from `[train] seed` through [`Pcg64::split`]: stream
+//! 0 generates the data/targets, stream 1 initialises the model, stream 2
+//! drives the per-epoch training noise (whose per-sample paths are split
+//! again inside [`crate::coordinator::sample_paths_par`]). Two runs with
+//! the same config file are bitwise-identical at any worker count.
+
+use super::{EuclideanProblem, ManifoldProblem, TrainConfig, Trainer, TrainLog};
+use crate::adjoint::AdjointMethod;
+use crate::bench::{fmt, Table};
+use crate::config::Config;
+use crate::coordinator::sample_paths_par;
+use crate::lie::TTorus;
+use crate::losses::{EnergyScore, MomentMatch};
+use crate::models::gbm::StiffGbm;
+use crate::models::kuramoto::KuramotoParams;
+use crate::models::ou::OuParams;
+use crate::nn::neural_sde::{NeuralSde, TorusNeuralSde};
+use crate::rng::{BrownianPath, Pcg64};
+use crate::solvers::{CfEes, LowStorageStepper};
+
+/// Names accepted by `[train] scenario` (and `ees train --scenario`).
+pub const NAMES: [&str; 3] = ["ou", "gbm", "kuramoto"];
+
+/// A finished scenario run: the full log plus a rendered summary.
+#[derive(Debug)]
+pub struct ScenarioRun {
+    pub scenario: String,
+    pub log: TrainLog,
+    pub summary: String,
+}
+
+/// Run the scenario named by `[train] scenario` (default `ou`) under the
+/// `[train]` loop configuration.
+pub fn run_scenario(cfg: &Config) -> crate::Result<ScenarioRun> {
+    let tc = TrainConfig::from_config(cfg)?;
+    let name = cfg.str_or("train.scenario", "ou").to_string();
+    let log = match name.as_str() {
+        "ou" => run_ou(cfg, &tc)?,
+        "gbm" => run_gbm(cfg, &tc)?,
+        "kuramoto" => run_kuramoto(cfg, &tc)?,
+        other => {
+            return Err(crate::format_err!(
+                "unknown scenario '{other}' (registered: {})",
+                NAMES.join(", ")
+            ))
+        }
+    };
+    let summary = summary_table(&name, &tc, &log);
+    Ok(ScenarioRun {
+        scenario: name,
+        log,
+        summary,
+    })
+}
+
+fn parse_adjoint(name: &str) -> crate::Result<AdjointMethod> {
+    Ok(match name {
+        "full" => AdjointMethod::Full,
+        "recursive" => AdjointMethod::Recursive,
+        "reversible" => AdjointMethod::Reversible,
+        other => {
+            return Err(crate::format_err!(
+                "unknown adjoint '{other}' (expected full | recursive | reversible)"
+            ))
+        }
+    })
+}
+
+/// Observation grid at the four quarter-horizons (the scenarios' default
+/// loss support).
+fn quarter_obs(steps: usize) -> Vec<usize> {
+    (1..=4).map(|k| (k * steps / 4).max(1)).collect()
+}
+
+/// High-volatility OU moment matching (the Table-1 workload) with the
+/// low-storage EES(2,5) solver.
+fn run_ou(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
+    let steps = cfg.usize_or("train.steps", 16).max(4);
+    let t_end = cfg.f64_or("train.horizon", 2.0);
+    let h = t_end / steps as f64;
+    let hidden = cfg.usize_or("train.hidden", 8);
+    let depth = cfg.usize_or("train.depth", 1);
+    let data_samples = cfg.usize_or("train.data_samples", 4000);
+    let adjoint = parse_adjoint(cfg.str_or("train.adjoint", "reversible"))?;
+    let obs = quarter_obs(steps);
+
+    let mut root = Pcg64::new(tc.seed);
+    let mut data_rng = root.split(0);
+    let mut model_rng = root.split(1);
+    let mut train_rng = root.split(2);
+
+    let (mean_all, m2_all) =
+        OuParams::default().moment_targets(0.0, steps, h, data_samples, &mut data_rng);
+    let loss = MomentMatch {
+        target_mean: obs.iter().map(|&i| mean_all[i]).collect(),
+        target_m2: obs.iter().map(|&i| m2_all[i]).collect(),
+    };
+    let model = NeuralSde::lsde(1, hidden, depth, true, &mut model_rng);
+    let st = LowStorageStepper::ees25();
+    let (batch, par) = (tc.batch, tc.parallelism);
+    let sampler = move |rng: &mut Pcg64| {
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
+        let paths = sample_paths_par(rng, batch, 1, steps, h, par);
+        (y0s, paths)
+    };
+    let mut problem = EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss);
+    Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
+}
+
+/// Stiff high-dimensional GBM moment matching (the Table-7 workload) with
+/// the low-storage EES(2,5) solver — the scenario where baseline schemes
+/// diverge, so pair it with `stop_on_divergence = true` to probe that.
+fn run_gbm(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
+    let d = cfg.usize_or("train.dim", 8);
+    let steps = cfg.usize_or("train.steps", 20).max(4);
+    let h = 1.0 / steps as f64;
+    let hidden = cfg.usize_or("train.hidden", 16);
+    let data_samples = cfg.usize_or("train.data_samples", 128);
+    let fine = cfg.usize_or("train.data_fine", 512);
+    let adjoint = parse_adjoint(cfg.str_or("train.adjoint", "reversible"))?;
+    let obs = quarter_obs(steps);
+    let n_obs = obs.len();
+
+    let mut root = Pcg64::new(tc.seed);
+    let mut data_rng = root.split(0);
+    let mut model_rng = root.split(1);
+    let mut train_rng = root.split(2);
+
+    let gbm = StiffGbm::new(d, 0.1, 20.0, &mut data_rng);
+    let y0 = vec![1.0; d];
+    let mut data = vec![0.0; data_samples * n_obs * d];
+    for b in 0..data_samples {
+        let path = BrownianPath::sample(&mut data_rng, 1, fine, 1.0 / fine as f64);
+        let traj = gbm.simulate(&y0, &path);
+        for k in 1..=n_obs {
+            let idx = k * fine / n_obs;
+            data[(b * n_obs + k - 1) * d..(b * n_obs + k) * d]
+                .copy_from_slice(&traj[idx * d..(idx + 1) * d]);
+        }
+    }
+    let loss = MomentMatch::from_data(&data, data_samples, n_obs, d);
+    let model = NeuralSde::lsde(d, hidden, 2, false, &mut model_rng);
+    let st = LowStorageStepper::ees25();
+    let (batch, par) = (tc.batch, tc.parallelism);
+    let sampler = move |rng: &mut Pcg64| {
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![1.0; d]).collect();
+        let paths = sample_paths_par(rng, batch, d, steps, h, par);
+        (y0s, paths)
+    };
+    let mut problem = EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss);
+    Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
+}
+
+/// Stochastic Kuramoto on T𝕋ᴺ with CF-EES(2,5) and the wrapped energy
+/// score (the Table-3 workload) — exercises the manifold engine.
+fn run_kuramoto(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
+    let n_osc = cfg.usize_or("train.n_osc", 4);
+    let steps = cfg.usize_or("train.steps", 10).max(4);
+    let t_end = cfg.f64_or("train.horizon", 2.0);
+    let h = t_end / steps as f64;
+    let hidden = cfg.usize_or("train.hidden", 16);
+    let data_samples = cfg.usize_or("train.data_samples", 16);
+    let fine = cfg.usize_or("train.data_fine", 256);
+    let adjoint = parse_adjoint(cfg.str_or("train.adjoint", "reversible"))?;
+    let obs = quarter_obs(steps);
+    let n_obs = obs.len();
+    let dim = 2 * n_osc;
+
+    let mut root = Pcg64::new(tc.seed);
+    let mut data_rng = root.split(0);
+    let mut model_rng = root.split(1);
+    let mut train_rng = root.split(2);
+
+    let params = KuramotoParams::paper(n_osc);
+    let data = params.sample_dataset(data_samples, t_end, fine, n_obs, &mut data_rng);
+    let loss = EnergyScore {
+        data,
+        data_count: data_samples,
+        wrap_dims: n_osc,
+    };
+    let sp = TTorus::new(n_osc);
+    let st = CfEes::ees25();
+    let model = TorusNeuralSde::new(n_osc, hidden, &mut model_rng);
+    let (batch, par) = (tc.batch, tc.parallelism);
+    let sampler = move |rng: &mut Pcg64| {
+        let y0s: Vec<Vec<f64>> = (0..batch)
+            .map(|_| {
+                let mut y = vec![0.0; dim];
+                for v in y.iter_mut().take(n_osc) {
+                    *v = rng.uniform_range(-std::f64::consts::PI, std::f64::consts::PI);
+                }
+                for v in y.iter_mut().skip(n_osc) {
+                    *v = 0.5 * rng.normal();
+                }
+                y
+            })
+            .collect();
+        let paths = sample_paths_par(rng, batch, n_osc, steps, h, par);
+        (y0s, paths)
+    };
+    let mut problem = ManifoldProblem::new(model, &sp, &st, adjoint, sampler, obs, &loss);
+    Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
+}
+
+/// Rendered run summary: configuration line + an epoch table (about ten
+/// evenly spaced rows) + terminal figures.
+fn summary_table(name: &str, tc: &TrainConfig, log: &TrainLog) -> String {
+    let mut t = Table::new(&["epoch", "loss", "grad norm", "peak mem (f64s)", "secs"]);
+    let stride = (log.history.len() / 10).max(1);
+    // Stride on history *position* (epochs carry the global resumed
+    // numbering) and always keep the terminal row.
+    for (i, m) in log.history.iter().enumerate() {
+        if i % stride != 0 && i + 1 != log.history.len() {
+            continue;
+        }
+        t.row(&[
+            m.epoch.to_string(),
+            fmt(m.loss),
+            fmt(m.grad_norm),
+            m.peak_mem_f64s.to_string(),
+            format!("{:.2}", m.wall_secs),
+        ]);
+    }
+    let status = if log.diverged {
+        " [DIVERGED]"
+    } else if log.stopped_early {
+        " [stopped early]"
+    } else {
+        ""
+    };
+    format!(
+        "== ees train: scenario '{name}' ({} epochs, batch {}, parallelism {}, seed {}){status} ==\n{}\nterminal loss {} | peak adjoint mem {} f64s | {:.1}s total\n",
+        log.history.len(),
+        tc.batch,
+        tc.parallelism,
+        tc.seed,
+        t.render(),
+        fmt(log.terminal_loss()),
+        log.peak_mem(),
+        log.total_secs,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ou_scenario_runs_from_config_text() {
+        let cfg = Config::parse(
+            r#"
+[train]
+scenario = "ou"
+epochs = 3
+batch = 8
+steps = 8
+data_samples = 200
+lr = 0.01
+clip = 1.0
+seed = 5
+
+[exec]
+parallelism = 2
+"#,
+        )
+        .unwrap();
+        let run = run_scenario(&cfg).unwrap();
+        assert_eq!(run.scenario, "ou");
+        assert_eq!(run.log.history.len(), 3);
+        assert!(run.log.terminal_loss().is_finite());
+        assert!(run.summary.contains("scenario 'ou'"));
+    }
+
+    #[test]
+    fn kuramoto_scenario_runs_small() {
+        let cfg = Config::parse(
+            "[train]\nscenario = \"kuramoto\"\nepochs = 2\nbatch = 2\nsteps = 4\nn_osc = 3\ndata_samples = 4\ndata_fine = 64\nhidden = 8\nlr = 0.001\noptimizer = \"adamw\"\nweight_decay = 0.0001\nclip = 1.0\n",
+        )
+        .unwrap();
+        let run = run_scenario(&cfg).unwrap();
+        assert_eq!(run.log.history.len(), 2);
+        assert!(run.log.terminal_loss().is_finite());
+    }
+
+    #[test]
+    fn scenario_results_are_worker_count_invariant() {
+        let text = |par: usize| {
+            format!(
+                "[train]\nscenario = \"ou\"\nepochs = 3\nbatch = 6\nsteps = 8\ndata_samples = 100\nseed = 7\n\n[exec]\nparallelism = {par}\n"
+            )
+        };
+        let a = run_scenario(&Config::parse(&text(1)).unwrap()).unwrap();
+        let b = run_scenario(&Config::parse(&text(4)).unwrap()).unwrap();
+        for (x, y) in a.log.history.iter().zip(b.log.history.iter()) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn unknown_scenario_is_an_error() {
+        let cfg = Config::parse("[train]\nscenario = \"heat-death\"").unwrap();
+        let err = run_scenario(&cfg).unwrap_err();
+        assert!(format!("{err}").contains("unknown scenario"));
+    }
+}

@@ -1,0 +1,209 @@
+//! Learning-rate schedules, layered onto [`crate::nn::optim::Optimizer`] by
+//! the [`super::Trainer`]: every epoch the trainer multiplies each parameter
+//! group's *base* learning rate by [`LrSchedule::factor`] and installs the
+//! product via [`crate::nn::optim::Optimizer::set_lr`].
+//!
+//! Schedules are pure functions of the **global** epoch index — no hidden
+//! state — so a resumed run (see [`super::Trainer::run_resumed`], with
+//! [`super::TrainConfig::epoch_offset`] set to the restored epoch) lands on
+//! exactly the learning rate the uninterrupted run would have used.
+//!
+//! # Monotonicity contract (verified by the property tests)
+//!
+//! - [`LrSchedule::Constant`]: factor ≡ 1.
+//! - [`LrSchedule::LinearWarmup`]: nondecreasing; reaches 1 at
+//!   `epoch = warmup − 1` and stays there.
+//! - [`LrSchedule::Cosine`]: nondecreasing on the warmup prefix, then
+//!   nonincreasing; factor 1 at the end of warmup, 0 from `total` onwards.
+//! - [`LrSchedule::Step`]: nonincreasing for `gamma ≤ 1` (piecewise
+//!   constant, one `gamma` multiplication every `every` epochs).
+
+/// Per-epoch learning-rate multiplier.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    /// Factor ≡ 1: the optimiser's base learning rate is never touched
+    /// (bitwise-identical to a schedule-free loop).
+    Constant,
+    /// Linear ramp `(epoch + 1) / warmup` for the first `warmup` epochs,
+    /// then 1. `warmup = 0` degenerates to [`LrSchedule::Constant`].
+    LinearWarmup { warmup: usize },
+    /// Optional linear warmup, then cosine decay to 0 at epoch `total`:
+    /// `0.5 · (1 + cos(π · (e − warmup) / (total − warmup)))`.
+    Cosine { warmup: usize, total: usize },
+    /// Multiply by `gamma` every `every` epochs: `gamma^(epoch / every)`.
+    Step { every: usize, gamma: f64 },
+}
+
+impl LrSchedule {
+    /// Multiplier applied to each group's base learning rate at `epoch`.
+    pub fn factor(&self, epoch: usize) -> f64 {
+        match *self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::LinearWarmup { warmup } => {
+                if warmup == 0 || epoch + 1 >= warmup {
+                    1.0
+                } else {
+                    (epoch + 1) as f64 / warmup as f64
+                }
+            }
+            LrSchedule::Cosine { warmup, total } => {
+                if epoch + 1 < warmup {
+                    return (epoch + 1) as f64 / warmup as f64;
+                }
+                let span = total.saturating_sub(warmup).max(1);
+                let t = (epoch - warmup.min(epoch)).min(span) as f64 / span as f64;
+                0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+            LrSchedule::Step { every, gamma } => gamma.powi((epoch / every.max(1)) as i32),
+        }
+    }
+
+    /// Like [`Self::factor`] but `None` for [`LrSchedule::Constant`]: the
+    /// trainer skips `set_lr` entirely, so a constant schedule leaves the
+    /// caller's optimiser state byte-for-byte untouched (this is what keeps
+    /// ported experiment loops bitwise-identical to their hand-rolled
+    /// originals).
+    pub fn factor_opt(&self, epoch: usize) -> Option<f64> {
+        match self {
+            LrSchedule::Constant => None,
+            _ => Some(self.factor(epoch)),
+        }
+    }
+
+    /// Parse the `[train] schedule` config key (with its companion keys
+    /// already resolved by the caller).
+    pub fn from_name(
+        name: &str,
+        warmup: usize,
+        total: usize,
+        every: usize,
+        gamma: f64,
+    ) -> crate::Result<Self> {
+        Ok(match name {
+            "constant" => LrSchedule::Constant,
+            "warmup" | "linear-warmup" => LrSchedule::LinearWarmup { warmup },
+            "cosine" => LrSchedule::Cosine { warmup, total },
+            "step" => LrSchedule::Step { every, gamma },
+            other => {
+                return Err(crate::format_err!(
+                    "unknown lr schedule '{other}' (expected constant | warmup | cosine | step)"
+                ))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one_and_opt_none() {
+        let s = LrSchedule::Constant;
+        for e in [0usize, 1, 7, 1000] {
+            assert_eq!(s.factor(e), 1.0);
+            assert_eq!(s.factor_opt(e), None);
+        }
+    }
+
+    /// Warmup boundary values: ramp hits exactly 1 at epoch warmup−1 and
+    /// stays there; warmup = 0 and warmup = 1 are both identically 1.
+    #[test]
+    fn warmup_boundaries() {
+        let s = LrSchedule::LinearWarmup { warmup: 5 };
+        assert_eq!(s.factor(0), 0.2);
+        assert_eq!(s.factor(3), 0.8);
+        assert_eq!(s.factor(4), 1.0);
+        assert_eq!(s.factor(5), 1.0);
+        assert_eq!(s.factor(500), 1.0);
+        assert_eq!(LrSchedule::LinearWarmup { warmup: 0 }.factor(0), 1.0);
+        assert_eq!(LrSchedule::LinearWarmup { warmup: 1 }.factor(0), 1.0);
+    }
+
+    /// Cosine boundary values: 1 at the end of warmup, 1/2 at the midpoint
+    /// of the decay span, 0 at `total` and beyond.
+    #[test]
+    fn cosine_boundaries() {
+        let s = LrSchedule::Cosine { warmup: 0, total: 10 };
+        assert!((s.factor(0) - 1.0).abs() < 1e-15);
+        assert!((s.factor(5) - 0.5).abs() < 1e-15);
+        assert!(s.factor(10).abs() < 1e-15);
+        assert!(s.factor(99).abs() < 1e-15);
+        let w = LrSchedule::Cosine { warmup: 4, total: 12 };
+        assert_eq!(w.factor(0), 0.25);
+        assert_eq!(w.factor(2), 0.75);
+        assert!((w.factor(3) - 1.0).abs() < 1e-15, "end of warmup");
+        assert!((w.factor(8) - 0.5).abs() < 1e-15, "midpoint of decay span");
+        assert!(w.factor(12).abs() < 1e-15);
+    }
+
+    /// Step boundary values: piecewise constant with one gamma per window.
+    #[test]
+    fn step_boundaries() {
+        let s = LrSchedule::Step { every: 10, gamma: 0.5 };
+        assert_eq!(s.factor(0), 1.0);
+        assert_eq!(s.factor(9), 1.0);
+        assert_eq!(s.factor(10), 0.5);
+        assert_eq!(s.factor(19), 0.5);
+        assert_eq!(s.factor(20), 0.25);
+        // every = 0 is normalised to 1 rather than dividing by zero.
+        assert_eq!(LrSchedule::Step { every: 0, gamma: 0.5 }.factor(3), 0.125);
+    }
+
+    /// Property test over randomised schedule parameters: the documented
+    /// monotonicity holds at every epoch pair, and factors stay in [0, 1].
+    #[test]
+    fn schedules_are_monotone_where_documented() {
+        let mut rng = crate::rng::Pcg64::new(12);
+        for _ in 0..200 {
+            let warmup = rng.below(20);
+            let total = warmup + 1 + rng.below(50);
+            let every = 1 + rng.below(15);
+            let gamma = 0.05 + 0.95 * rng.uniform();
+            let horizon = total + 20;
+
+            let w = LrSchedule::LinearWarmup { warmup };
+            let c = LrSchedule::Cosine { warmup, total };
+            let st = LrSchedule::Step { every, gamma };
+            for e in 0..horizon {
+                for s in [&w, &c, &st] {
+                    let f = s.factor(e);
+                    assert!((0.0..=1.0).contains(&f), "{s:?} factor({e}) = {f}");
+                }
+                if e + 1 < horizon {
+                    // Warmup: nondecreasing everywhere.
+                    assert!(w.factor(e + 1) >= w.factor(e), "{w:?} at {e}");
+                    // Step: nonincreasing for gamma <= 1.
+                    assert!(st.factor(e + 1) <= st.factor(e), "{st:?} at {e}");
+                    // Cosine: nondecreasing in warmup, nonincreasing after.
+                    if e + 1 < warmup {
+                        assert!(c.factor(e + 1) >= c.factor(e), "{c:?} warmup at {e}");
+                    } else if e >= warmup {
+                        assert!(c.factor(e + 1) <= c.factor(e), "{c:?} decay at {e}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(
+            LrSchedule::from_name("constant", 0, 10, 1, 0.5).unwrap(),
+            LrSchedule::Constant
+        );
+        assert_eq!(
+            LrSchedule::from_name("warmup", 3, 10, 1, 0.5).unwrap(),
+            LrSchedule::LinearWarmup { warmup: 3 }
+        );
+        assert_eq!(
+            LrSchedule::from_name("cosine", 2, 40, 1, 0.5).unwrap(),
+            LrSchedule::Cosine { warmup: 2, total: 40 }
+        );
+        assert_eq!(
+            LrSchedule::from_name("step", 0, 10, 8, 0.3).unwrap(),
+            LrSchedule::Step { every: 8, gamma: 0.3 }
+        );
+        assert!(LrSchedule::from_name("exponential", 0, 10, 1, 0.5).is_err());
+    }
+}

@@ -339,6 +339,129 @@ fn all_nine_solvers_zero_allocs_per_step_after_warmup() {
     // Virtual Brownian tree queries are allocation-free once the workspace
     // holds the descent registers.
     vbt_queries_zero_alloc();
+
+    // A warm training-engine loop allocates a per-epoch-constant amount.
+    trainer_epoch_allocs_constant();
+}
+
+/// The training engine's hot-path contract: with a problem that owns its
+/// [`ees::memory::WorkspacePool`] (the `batch_grad_*_pool` path), every
+/// epoch after warm-up performs exactly the same number of heap
+/// allocations — the loop itself adds nothing that grows with epoch count,
+/// and solver scratch stays warm across the epoch boundary. A regression
+/// (a per-epoch `clone()` in the trainer, a workspace that stops being
+/// reused) shows up as drifting per-epoch deltas.
+fn trainer_epoch_allocs_constant() {
+    use ees::adjoint::AdjointMethod;
+    use ees::coordinator::batch_grad_euclidean_pool;
+    use ees::losses::MomentMatch;
+    use ees::memory::WorkspacePool;
+    use ees::train::{
+        Callback, CallbackAction, EpochCtx, OptimSpec, TrainConfig, TrainProblem, Trainer,
+    };
+
+    struct Probe {
+        vf: Field8,
+        st: LowStorageStepper,
+        loss: MomentMatch,
+        obs: Vec<usize>,
+        pool: WorkspacePool,
+        batch: usize,
+        steps: usize,
+        h: f64,
+    }
+
+    impl TrainProblem for Probe {
+        fn num_params(&self) -> usize {
+            0
+        }
+        fn params(&self) -> Vec<f64> {
+            Vec::new()
+        }
+        fn set_params(&mut self, _p: &[f64]) {}
+        fn grad(
+            &mut self,
+            _epoch: usize,
+            rng: &mut Pcg64,
+            parallelism: usize,
+        ) -> (f64, Vec<f64>, usize) {
+            let y0s: Vec<Vec<f64>> = (0..self.batch).map(|_| vec![0.1; 8]).collect();
+            let paths: Vec<BrownianPath> = (0..self.batch)
+                .map(|_| BrownianPath::sample(rng, 8, self.steps, self.h))
+                .collect();
+            batch_grad_euclidean_pool(
+                &self.st,
+                AdjointMethod::Reversible,
+                &self.vf,
+                &y0s,
+                &paths,
+                &self.obs,
+                &self.loss,
+                parallelism,
+                &self.pool,
+            )
+        }
+    }
+
+    /// Records the allocator counter at every epoch boundary (storage
+    /// pre-reserved so the probe itself never allocates mid-run).
+    struct AllocProbe {
+        counts: Vec<u64>,
+    }
+
+    impl Callback for AllocProbe {
+        fn on_epoch_end(&mut self, _ctx: &EpochCtx) -> CallbackAction {
+            self.counts.push(alloc_count());
+            CallbackAction::Continue
+        }
+    }
+
+    let epochs = 8;
+    let steps = 16;
+    let mut problem = Probe {
+        vf: Field8,
+        st: LowStorageStepper::ees25(),
+        loss: MomentMatch {
+            target_mean: vec![0.0; 8],
+            target_m2: vec![1.0; 8],
+        },
+        obs: vec![steps],
+        pool: WorkspacePool::new(),
+        batch: 4,
+        steps,
+        h: 0.02,
+    };
+    // Parallelism 1: the engine runs inline (no worker-thread allocations),
+    // isolating the loop's own allocation behaviour.
+    let trainer = Trainer::new(
+        TrainConfig::new(epochs)
+            .group(OptimSpec::Sgd { lr: 0.0 }, None)
+            .with_parallelism(1),
+    );
+    let mut probe = AllocProbe {
+        counts: Vec::with_capacity(epochs + 1),
+    };
+    let mut rng = Pcg64::new(31);
+    let log = trainer.run_with(&mut problem, &mut rng, &mut [&mut probe]);
+    assert_eq!(log.history.len(), epochs);
+    assert_eq!(probe.counts.len(), epochs);
+    let deltas: Vec<u64> = probe
+        .counts
+        .windows(2)
+        .map(|w| w[1] - w[0])
+        .collect();
+    // Epochs 0-1 warm the workspace pool and size every recycled buffer;
+    // from then on each epoch must allocate exactly the same amount.
+    for (i, &d) in deltas.iter().enumerate().skip(2) {
+        assert_eq!(
+            d, deltas[1],
+            "trainer epoch {} allocated {} vs the warm per-epoch constant {} \
+             (a new per-epoch allocation crept onto the training hot path)",
+            i + 1,
+            d,
+            deltas[1]
+        );
+    }
 }
 
 /// Warm [`ees::rng::VirtualBrownianTree`] queries perform zero heap

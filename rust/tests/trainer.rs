@@ -1,0 +1,396 @@
+//! Conformance suite for the unified training engine (`ees::train`):
+//!
+//! 1. **Worker-count determinism** — full training runs (loss curve,
+//!    gradient norms, memory figures, final parameters) are
+//!    bitwise-identical at parallelism 1 vs 4 (and 8).
+//! 2. **Checkpoint/restore** — `params → Snapshot → to_text → from_text →
+//!    restore` reproduces the interrupted run's next step to the bit,
+//!    including the optimiser-state handoff through `run_resumed`.
+//! 3. **Early stopping** — a plateaued loss ends the run at exactly
+//!    `patience` non-improving epochs.
+//! 4. **Golden smoke loss-curves per adjoint** — Full / Recursive /
+//!    Reversible each train the OU workload inside a pinned tolerance
+//!    band: identical epoch-0 loss (the forward pass does not depend on
+//!    the adjoint), near-identical curves throughout (gradients agree to
+//!    solver tolerance), and a pinned terminal-improvement factor.
+
+use ees::adjoint::AdjointMethod;
+use ees::losses::MomentMatch;
+use ees::models::ou::OuParams;
+use ees::nn::neural_sde::NeuralSde;
+use ees::nn::optim::Optimizer;
+use ees::rng::{BrownianPath, Pcg64};
+use ees::solvers::LowStorageStepper;
+use ees::train::{
+    Checkpoint, EuclideanProblem, FlatParams, LrSchedule, OptimSpec, Snapshot, TrainConfig,
+    TrainLedger, TrainProblem, Trainer,
+};
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Fresh OU problem over the given stepper/loss (seed-7 model init, the
+/// plain sequential per-epoch sampler).
+fn ou_problem<'a>(
+    st: &'a LowStorageStepper,
+    loss: &'a MomentMatch,
+    obs: Vec<usize>,
+    steps: usize,
+    h: f64,
+    batch: usize,
+) -> EuclideanProblem<'a, NeuralSde, impl FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>)>
+{
+    let model = NeuralSde::lsde(1, 8, 1, true, &mut Pcg64::new(7));
+    let sampler = move |rng: &mut Pcg64| {
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
+        let paths: Vec<BrownianPath> = (0..batch)
+            .map(|_| BrownianPath::sample(rng, 1, steps, h))
+            .collect();
+        (y0s, paths)
+    };
+    EuclideanProblem::new(model, st, AdjointMethod::Reversible, sampler, obs, loss)
+}
+
+/// The shared OU smoke workload (the Table-1 protocol at tiny scale).
+/// Returns (loss targets, obs, steps, h, batch).
+fn ou_workload() -> (MomentMatch, Vec<usize>, usize, f64, usize) {
+    let steps = 16;
+    let h = 2.0 / steps as f64;
+    let obs: Vec<usize> = (4..=steps).step_by(4).collect();
+    let mut rng = Pcg64::new(20);
+    let (mean_all, m2_all) = OuParams::default().moment_targets(0.0, steps, h, 2000, &mut rng);
+    let loss = MomentMatch {
+        target_mean: obs.iter().map(|&i| mean_all[i]).collect(),
+        target_m2: obs.iter().map(|&i| m2_all[i]).collect(),
+    };
+    (loss, obs, steps, h, 32)
+}
+
+/// Run `epochs` of OU training at the given worker count and adjoint;
+/// returns the log and final parameters.
+fn train_ou(
+    parallelism: usize,
+    epochs: usize,
+    method: AdjointMethod,
+) -> (ees::train::TrainLog, Vec<f64>) {
+    let (loss, obs, steps, h, batch) = ou_workload();
+    let st = LowStorageStepper::ees25();
+    let model = NeuralSde::lsde(1, 8, 1, true, &mut Pcg64::new(7));
+    let sampler = move |rng: &mut Pcg64| {
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
+        // Split-stream sampling: deterministic in the worker count by
+        // construction (paths derive from per-sample streams, not from
+        // interleaved draws).
+        let paths = ees::coordinator::sample_paths_par(rng, batch, 1, steps, h, 1);
+        (y0s, paths)
+    };
+    let mut problem = EuclideanProblem::new(model, &st, method, sampler, obs, &loss);
+    let trainer = Trainer::new(
+        TrainConfig::new(epochs)
+            .group(OptimSpec::Adam { lr: 0.02 }, Some(1.0))
+            .with_parallelism(parallelism),
+    );
+    let mut rng = Pcg64::new(99);
+    let log = trainer.run(&mut problem, &mut rng);
+    let p = FlatParams::params(&problem.model);
+    (log, p)
+}
+
+/// The engine's central contract: the whole *training run* — not just one
+/// batch gradient — is bitwise-invariant in the worker count.
+#[test]
+fn loss_curves_bitwise_invariant_at_parallelism_1_vs_4() {
+    let (log1, p1) = train_ou(1, 6, AdjointMethod::Reversible);
+    for par in [4, 8] {
+        let (logp, pp) = train_ou(par, 6, AdjointMethod::Reversible);
+        assert_eq!(log1.history.len(), logp.history.len());
+        for (a, b) in log1.history.iter().zip(logp.history.iter()) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss at P={par}");
+            assert_eq!(
+                a.grad_norm.to_bits(),
+                b.grad_norm.to_bits(),
+                "grad norm at P={par}"
+            );
+            assert_eq!(a.peak_mem_f64s, b.peak_mem_f64s, "peak mem at P={par}");
+        }
+        assert_bits_eq(&p1, &pp, &format!("final params at P={par}"));
+    }
+}
+
+/// Checkpoint round-trip: restoring a serialized snapshot plus the saved
+/// optimiser state reproduces the uninterrupted run's next epoch exactly.
+#[test]
+fn checkpoint_restore_reproduces_next_step_bitwise() {
+    let (loss, obs, steps, h, batch) = ou_workload();
+    let st = LowStorageStepper::ees25();
+
+    // Reference: 3 epochs in one go, checkpointing along the way.
+    let spec = OptimSpec::Adam { lr: 0.02 };
+    let mut problem_a = ou_problem(&st, &loss, obs.clone(), steps, h, batch);
+    let mut opts_a = vec![spec.build(problem_a.num_params())];
+    let mut ck = Checkpoint::in_memory();
+    let trainer3 = Trainer::new(TrainConfig::new(3).group(spec, Some(1.0)));
+    let mut rng_a = Pcg64::new(99);
+    let log_a = trainer3.run_resumed(&mut problem_a, &mut rng_a, &mut [&mut ck], &mut opts_a);
+    let params_a = FlatParams::params(&problem_a.model);
+
+    // Interrupted run: 2 epochs, snapshot through the text form, then
+    // resume for 1 more epoch on a fresh problem + the saved optimiser.
+    let mut problem_b = ou_problem(&st, &loss, obs.clone(), steps, h, batch);
+    let mut opts_b = vec![spec.build(problem_b.num_params())];
+    let trainer2 = Trainer::new(TrainConfig::new(2).group(spec, Some(1.0)));
+    let mut rng_b = Pcg64::new(99);
+    let log_b = trainer2.run_resumed(&mut problem_b, &mut rng_b, &mut [], &mut opts_b);
+    for (a, b) in log_b.history.iter().zip(log_a.history.iter()) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "prefix epochs agree");
+    }
+    let snap = Snapshot {
+        epoch: 1,
+        loss: log_b.terminal_loss(),
+        params: FlatParams::params(&problem_b.model),
+    };
+    let restored = Snapshot::from_text(&snap.to_text()).expect("roundtrip");
+    assert_bits_eq(&snap.params, &restored.params, "snapshot text roundtrip");
+    // The reference run checkpointed through the same three epochs.
+    assert_eq!(ck.latest.as_ref().expect("checkpointed").epoch, 2);
+
+    let mut problem_c = ou_problem(&st, &loss, obs, steps, h, batch);
+    problem_c.set_params(&restored.params);
+    let trainer1 =
+        Trainer::new(TrainConfig::new(1).group(spec, Some(1.0)).with_epoch_offset(2));
+    // rng state must match where the interrupted run left off: rng_b has
+    // consumed exactly 2 epochs of sampling.
+    let log_c = trainer1.run_resumed(&mut problem_c, &mut rng_b, &mut [], &mut opts_b);
+    assert_eq!(log_c.history[0].epoch, 2, "global epoch numbering resumes");
+    assert_eq!(
+        log_c.history[0].loss.to_bits(),
+        log_a.history[2].loss.to_bits(),
+        "resumed epoch reproduces the uninterrupted epoch 2 loss"
+    );
+    assert_bits_eq(
+        &FlatParams::params(&problem_c.model),
+        &params_a,
+        "resumed final params",
+    );
+}
+
+/// Early stopping fires after exactly `patience` non-improving epochs on a
+/// real (tiny) training problem with a frozen learning rate of zero.
+#[test]
+fn early_stopping_triggers_on_plateau() {
+    let (loss, obs, steps, h, batch) = ou_workload();
+    let st = LowStorageStepper::ees25();
+    let model = NeuralSde::lsde(1, 8, 1, true, &mut Pcg64::new(7));
+    let sampler = move |_rng: &mut Pcg64| {
+        // Identical batch every epoch: with lr = 0 the loss is constant,
+        // so nothing ever improves.
+        let mut fixed = Pcg64::new(1234);
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
+        let paths: Vec<BrownianPath> = (0..batch)
+            .map(|_| BrownianPath::sample(&mut fixed, 1, steps, h))
+            .collect();
+        (y0s, paths)
+    };
+    let mut problem =
+        EuclideanProblem::new(model, &st, AdjointMethod::Reversible, sampler, obs, &loss);
+    let trainer =
+        Trainer::new(TrainConfig::new(50).group(OptimSpec::Sgd { lr: 0.0 }, None));
+    let mut es = ees::train::EarlyStopping::new(3, 0.0);
+    let log = trainer.run_with(&mut problem, &mut Pcg64::new(5), &mut [&mut es]);
+    assert!(log.stopped_early, "plateau must stop the run");
+    // Epoch 0 sets the best; epochs 1..=3 fail to improve => 4 epochs.
+    assert_eq!(log.history.len(), 4);
+    assert!(!log.diverged);
+}
+
+/// Golden smoke loss-curves, one per adjoint method (tolerance-pinned):
+/// identical epoch-0 loss bits, curves within solver tolerance of each
+/// other, and a pinned improvement factor by epoch 25.
+#[test]
+fn golden_smoke_loss_curve_per_adjoint() {
+    let epochs = 40;
+    let (log_full, _) = train_ou(2, epochs, AdjointMethod::Full);
+    let (log_rec, _) = train_ou(2, epochs, AdjointMethod::Recursive);
+    let (log_rev, _) = train_ou(2, epochs, AdjointMethod::Reversible);
+
+    // The forward pass (and hence the loss) of epoch 0 is adjoint-independent.
+    let l0 = log_full.history[0].loss;
+    assert_eq!(l0.to_bits(), log_rec.history[0].loss.to_bits());
+    assert_eq!(l0.to_bits(), log_rev.history[0].loss.to_bits());
+    assert!(l0.is_finite() && l0 > 0.0 && l0 < 200.0, "epoch-0 loss band: {l0}");
+
+    // Full and Recursive are the same discretise-then-optimise gradient up
+    // to segment-recomputation rounding: curves agree tightly. Reversible
+    // reconstructs states backwards, so allow a looser (still pinned) band.
+    for (a, b) in log_full.history.iter().zip(log_rec.history.iter()) {
+        assert!(
+            (a.loss - b.loss).abs() <= 1e-4 * (1.0 + a.loss.abs()),
+            "full vs recursive at epoch {}: {} vs {}",
+            a.epoch,
+            a.loss,
+            b.loss
+        );
+    }
+    for (a, b) in log_full.history.iter().zip(log_rev.history.iter()) {
+        assert!(
+            (a.loss - b.loss).abs() <= 5e-2 * (1.0 + a.loss.abs()),
+            "full vs reversible at epoch {}: {} vs {}",
+            a.epoch,
+            a.loss,
+            b.loss
+        );
+    }
+
+    // Pinned improvement band (5-epoch windows smooth the batch noise):
+    // every adjoint ends at least 20% below where it started — the golden
+    // shape of this workload (empirically ~2x lower at 40 epochs).
+    for (name, log) in [
+        ("full", &log_full),
+        ("recursive", &log_rec),
+        ("reversible", &log_rev),
+    ] {
+        let first: f64 = log.history[..5].iter().map(|m| m.loss).sum::<f64>() / 5.0;
+        let last: f64 = log.history[epochs - 5..].iter().map(|m| m.loss).sum::<f64>() / 5.0;
+        assert!(last.is_finite(), "{name} terminal loss finite");
+        assert!(
+            last < 0.8 * first,
+            "{name}: loss must drop ≥20%: {first} -> {last}"
+        );
+    }
+}
+
+/// Learning-rate schedules drive the optimiser: a cosine schedule ends
+/// with (near-)zero steps, so the last-epoch parameter movement must be
+/// far smaller than the first-epoch movement; a constant schedule leaves
+/// the optimiser's lr untouched.
+#[test]
+fn schedule_modulates_step_sizes() {
+    struct Line {
+        p: Vec<f64>,
+        moves: Vec<f64>,
+    }
+    impl TrainProblem for Line {
+        fn num_params(&self) -> usize {
+            1
+        }
+        fn params(&self) -> Vec<f64> {
+            self.p.clone()
+        }
+        fn set_params(&mut self, p: &[f64]) {
+            self.moves.push((p[0] - self.p[0]).abs());
+            self.p.copy_from_slice(p);
+        }
+        fn grad(&mut self, _e: usize, _r: &mut Pcg64, _p: usize) -> (f64, Vec<f64>, usize) {
+            (self.p[0], vec![1.0], 0)
+        }
+    }
+    let trainer = Trainer::new(
+        TrainConfig::new(10)
+            .group(OptimSpec::Sgd { lr: 0.5 }, None)
+            .with_schedule(LrSchedule::Cosine { warmup: 0, total: 10 }),
+    );
+    let mut problem = Line {
+        p: vec![100.0],
+        moves: Vec::new(),
+    };
+    trainer.run(&mut problem, &mut Pcg64::new(1));
+    assert_eq!(problem.moves.len(), 10);
+    assert!((problem.moves[0] - 0.5).abs() < 1e-12, "factor 1 at epoch 0");
+    assert!(
+        problem.moves[9] < 0.05 * problem.moves[0],
+        "cosine tail must shrink steps: {:?}",
+        problem.moves
+    );
+
+    // Constant schedule: the caller's optimiser lr is never rewritten.
+    let mut opt = Optimizer::sgd(0.5);
+    let trainer_const =
+        Trainer::new(TrainConfig::new(3).group(OptimSpec::Sgd { lr: 0.5 }, None));
+    let mut problem2 = Line {
+        p: vec![1.0],
+        moves: Vec::new(),
+    };
+    let mut opts = vec![opt.clone()];
+    trainer_const.run_resumed(&mut problem2, &mut Pcg64::new(1), &mut [], &mut opts);
+    opt = opts.remove(0);
+    assert_eq!(opt.lr(), 0.5);
+}
+
+/// The streaming ledger callback records exactly the run's history and
+/// serializes it as the `ees-train-ledger-v1` artifact.
+#[test]
+fn train_ledger_streams_and_serializes() {
+    let (loss, obs, steps, h, batch) = ou_workload();
+    let st = LowStorageStepper::ees25();
+    let model = NeuralSde::lsde(1, 8, 1, true, &mut Pcg64::new(7));
+    let sampler = move |rng: &mut Pcg64| {
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
+        let paths: Vec<BrownianPath> = (0..batch)
+            .map(|_| BrownianPath::sample(rng, 1, steps, h))
+            .collect();
+        (y0s, paths)
+    };
+    let mut problem =
+        EuclideanProblem::new(model, &st, AdjointMethod::Reversible, sampler, obs, &loss);
+    let trainer =
+        Trainer::new(TrainConfig::new(4).group(OptimSpec::Adam { lr: 0.02 }, Some(1.0)));
+    let mut ledger = TrainLedger::new("ou-smoke");
+    let log = trainer.run_with(&mut problem, &mut Pcg64::new(42), &mut [&mut ledger]);
+    assert_eq!(ledger.rows.len(), log.history.len());
+    for (a, b) in ledger.rows.iter().zip(log.history.iter()) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+    }
+    let json = ledger.to_json();
+    assert!(json.contains("\"schema\": \"ees-train-ledger-v1\""));
+    assert!(json.contains("\"scenario\": \"ou-smoke\""));
+    assert!(json.contains("\"epochs\": 4"));
+}
+
+/// Gradient accumulation: `accum = k` over a deterministic problem equals
+/// the mean of k single evaluations, and the optimiser steps once per
+/// epoch either way.
+#[test]
+fn gradient_accumulation_averages() {
+    struct Fixed {
+        p: Vec<f64>,
+        calls: usize,
+    }
+    impl TrainProblem for Fixed {
+        fn num_params(&self) -> usize {
+            1
+        }
+        fn params(&self) -> Vec<f64> {
+            self.p.clone()
+        }
+        fn set_params(&mut self, p: &[f64]) {
+            self.p.copy_from_slice(p);
+        }
+        fn grad(&mut self, _e: usize, rng: &mut Pcg64, _p: usize) -> (f64, Vec<f64>, usize) {
+            self.calls += 1;
+            // Deterministic per-call variation through the shared stream.
+            let g = 1.0 + rng.uniform();
+            (g, vec![g], 0)
+        }
+    }
+    let trainer = Trainer::new(
+        TrainConfig::new(1)
+            .group(OptimSpec::Sgd { lr: 1.0 }, None)
+            .with_accum(3),
+    );
+    let mut problem = Fixed {
+        p: vec![0.0],
+        calls: 0,
+    };
+    let log = trainer.run(&mut problem, &mut Pcg64::new(8));
+    assert_eq!(problem.calls, 3, "three evaluations per epoch");
+    // Reference: the same three draws averaged by hand.
+    let mut rng = Pcg64::new(8);
+    let draws: Vec<f64> = (0..3).map(|_| 1.0 + rng.uniform()).collect();
+    let mean = draws.iter().sum::<f64>() / 3.0;
+    assert!((log.history[0].loss - mean).abs() < 1e-15);
+    assert!((problem.p[0] + mean).abs() < 1e-15, "one sgd step at the mean");
+}

@@ -9,6 +9,12 @@
 //!   cargo bench --bench perf_ledger                   # quick mode, print only
 //!   cargo bench --bench perf_ledger -- --full         # more iterations
 //!   cargo bench --bench perf_ledger -- --update       # rewrite BENCH_hotpath.json
+//!   cargo bench --bench perf_ledger -- --check        # perf-regression gate:
+//!       compare each arm's within-run speedup against the committed
+//!       BENCH_hotpath.json (read before any --update rewrite) and exit
+//!       non-zero on a >25% speedup drop or a lane-acceptance
+//!       (batch_grad_lanes >= 1.5x) failure; speedups, not absolute ns/op,
+//!       so the gate is portable across CI runner hardware
 
 use ees::adjoint::{grad_euclidean, AdjointMethod, MseToTargets};
 use ees::bench::ledger::{
@@ -230,6 +236,7 @@ fn manifold_step_entry(
 fn main() {
     let full = std::env::args().any(|a| a == "--full");
     let update = std::env::args().any(|a| a == "--update");
+    let check = std::env::args().any(|a| a == "--check");
     let iters = if full { 60 } else { 15 };
     let warmup = if full { 10 } else { 3 };
     let mut ledger = Ledger::new(if full { "full" } else { "quick" });
@@ -567,12 +574,229 @@ fn main() {
         });
     }
 
+    // --- lane-blocked stepping: lane group vs per-sample loop ------------
+    // The lane arms use an MLP field (where per-sample evaluation is
+    // matvec-shaped): the "workspace" column is the lane-blocked group
+    // step, the "baseline" column steps the same samples one at a time, so
+    // `speedup` reads directly as the lane-blocking win.
+    {
+        use ees::linalg::lane_scatter;
+        use ees::nn::neural_sde::NeuralSde;
+        let lanes = 8usize;
+        let dim = 16usize;
+        let model = NeuralSde::lsde(dim, 32, 2, false, &mut Pcg64::new(3));
+        let lsteps = 64usize;
+        let lpath = BrownianPath::sample(&mut rng, dim, lsteps, h);
+        // Lane-major noise blocks, prepacked outside the timed region.
+        let dw_blocks: Vec<Vec<f64>> = (0..lsteps)
+            .map(|n| {
+                let mut blk = vec![0.0; dim * lanes];
+                for l in 0..lanes {
+                    lane_scatter(lpath.increment(n), l, lanes, &mut blk);
+                }
+                blk
+            })
+            .collect();
+        let ls = LowStorageStepper::ees25();
+        let rh = ReversibleHeun::new();
+        let lane_steppers: [(&str, &dyn Stepper); 2] = [
+            ("lane_step/lowstorage_ees25/d16_l8", &ls),
+            ("lane_step/reversible_heun/d16_l8", &rh),
+        ];
+        let y0 = vec![0.1; dim];
+        for (name, st) in lane_steppers {
+            let ss = st.state_size(dim);
+            let mut ws = StepWorkspace::new();
+            let run_lanes = |ws: &mut StepWorkspace| {
+                let mut state = ws.take(ss * lanes);
+                let init = st.init_state(&model, 0.0, &y0);
+                for l in 0..lanes {
+                    lane_scatter(&init, l, lanes, &mut state);
+                }
+                for (n, dw) in dw_blocks.iter().enumerate() {
+                    st.step_lanes_ws(&model, n as f64 * h, h, dw, &mut state, lanes, ws);
+                }
+                std::hint::black_box(&state);
+                ws.put(state);
+            };
+            let ops = lsteps * lanes;
+            let median = median_ns(warmup, iters, || run_lanes(&mut ws)) / ops as f64;
+            let allocs = {
+                run_lanes(&mut ws);
+                allocs_per_op(ops, || run_lanes(&mut ws))
+            };
+            let mut ws_b = StepWorkspace::new();
+            let run_scalar = |ws: &mut StepWorkspace| {
+                for _l in 0..lanes {
+                    let mut state = st.init_state(&model, 0.0, &y0);
+                    for n in 0..lsteps {
+                        st.step_ws(&model, n as f64 * h, h, lpath.increment(n), &mut state, ws);
+                    }
+                    std::hint::black_box(&state);
+                }
+            };
+            let base_median = median_ns(warmup, iters, || run_scalar(&mut ws_b)) / ops as f64;
+            let base_allocs = allocs_per_op(ops, || run_scalar(&mut ws_b));
+            ledger.push(LedgerEntry {
+                name: name.into(),
+                median_ns: median,
+                allocs_per_op: allocs,
+                baseline_median_ns: base_median,
+                baseline_allocs_per_op: base_allocs,
+            });
+        }
+
+        // Embedded scheme's fixed-grid lane arm vs per-sample embedded
+        // stepping — the lane-blocked error-estimating step the adaptive
+        // family's batch fixed-grid workloads use.
+        {
+            let sch = EmbeddedEes25::new();
+            let mut ws = StepWorkspace::new();
+            let mut err = vec![0.0; lanes];
+            let run_lanes = |ws: &mut StepWorkspace, err: &mut [f64]| {
+                let mut y = ws.take(dim * lanes);
+                for l in 0..lanes {
+                    lane_scatter(&y0, l, lanes, &mut y);
+                }
+                for (n, dwb) in dw_blocks.iter().enumerate() {
+                    sch.step_embedded_lanes_ws(&model, n as f64 * h, h, dwb, &mut y, err, lanes, ws);
+                }
+                std::hint::black_box(&y);
+                ws.put(y);
+            };
+            let ops = lsteps * lanes;
+            let median = median_ns(warmup, iters, || run_lanes(&mut ws, &mut err)) / ops as f64;
+            let allocs = {
+                run_lanes(&mut ws, &mut err);
+                allocs_per_op(ops, || run_lanes(&mut ws, &mut err))
+            };
+            let mut ws_b = StepWorkspace::new();
+            let run_scalar = |ws: &mut StepWorkspace| {
+                for _l in 0..lanes {
+                    let mut y = y0.clone();
+                    for n in 0..lsteps {
+                        std::hint::black_box(sch.step_embedded_ws(
+                            &model,
+                            n as f64 * h,
+                            h,
+                            lpath.increment(n),
+                            &mut y,
+                            ws,
+                        ));
+                    }
+                    std::hint::black_box(&y);
+                }
+            };
+            let base_median = median_ns(warmup, iters, || run_scalar(&mut ws_b)) / ops as f64;
+            let base_allocs = allocs_per_op(ops, || run_scalar(&mut ws_b));
+            ledger.push(LedgerEntry {
+                name: "lane_step/embedded_ees25/d16_l8".into(),
+                median_ns: median,
+                allocs_per_op: allocs,
+                baseline_median_ns: base_median,
+                baseline_allocs_per_op: base_allocs,
+            });
+        }
+
+        // Full batch gradient through the lane engine vs the per-sample
+        // engine: the acceptance arm of the lane-blocked hot path (the CI
+        // bench-smoke run gates on speedup >= 1.5 here).
+        {
+            use ees::coordinator::{batch_grad_euclidean_pool_lanes, sample_paths_par};
+            use ees::losses::MomentMatch;
+            use ees::memory::WorkspacePool;
+            let (batch, bsteps) = (16usize, 50usize);
+            let mut brng = Pcg64::new(13);
+            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.1; dim]).collect();
+            let paths = sample_paths_par(&mut brng, batch, dim, bsteps, 0.02, 1);
+            let obs = vec![bsteps];
+            let loss = MomentMatch {
+                target_mean: vec![0.0; dim],
+                target_m2: vec![1.0; dim],
+            };
+            let st = LowStorageStepper::ees25();
+            let pool = WorkspacePool::new();
+            let ops = batch * bsteps;
+            let run = |l: usize| {
+                let out = batch_grad_euclidean_pool_lanes(
+                    &st,
+                    AdjointMethod::Reversible,
+                    &model,
+                    &y0s,
+                    &paths,
+                    &obs,
+                    &loss,
+                    1,
+                    &pool,
+                    l,
+                );
+                std::hint::black_box(&out);
+            };
+            let median = median_ns(warmup, iters, || run(lanes)) / ops as f64;
+            let allocs = allocs_per_op(ops, || run(lanes));
+            let base_median = median_ns(warmup, iters, || run(1)) / ops as f64;
+            let base_allocs = allocs_per_op(ops, || run(1));
+            ledger.push(LedgerEntry {
+                name: "batch_grad_lanes/b16_s50_d16".into(),
+                median_ns: median,
+                allocs_per_op: allocs,
+                baseline_median_ns: base_median,
+                baseline_allocs_per_op: base_allocs,
+            });
+        }
+    }
+
     println!("{}", ledger.render_table());
     let json = ledger.to_json();
+
+    // Perf-regression gate (`--check`): compare this run's within-run
+    // speedups (workspace vs baseline arm, same machine, same process)
+    // against the COMMITTED BENCH_hotpath.json (read before any `--update`
+    // rewrite) — absolute medians would gate on CI hardware variance. The
+    // gate only arms against a measured baseline — an authoring-container
+    // estimate would gate on fiction — and the lane acceptance arm must
+    // hold its >= 1.5x win over per-sample stepping.
+    let mut failures: Vec<String> = Vec::new();
+    if check {
+        match std::fs::read_to_string("BENCH_hotpath.json")
+            .ok()
+            .as_deref()
+            .and_then(ees::bench::ledger::parse_baseline)
+        {
+            Some(base) if base.is_measured() => {
+                failures.extend(ledger.regressions_vs(&base, 0.25));
+            }
+            Some(base) => println!(
+                "check: committed baseline provenance is '{}' — regression gate \
+                 arms once a measured ledger is committed",
+                base.provenance
+            ),
+            None => println!("check: no parseable committed BENCH_hotpath.json — gate skipped"),
+        }
+        if let Some(e) = ledger
+            .entries
+            .iter()
+            .find(|e| e.name == "batch_grad_lanes/b16_s50_d16")
+        {
+            if e.speedup() < 1.5 {
+                failures.push(format!(
+                    "batch_grad_lanes/b16_s50_d16: lane speedup {:.2}x < required 1.5x",
+                    e.speedup()
+                ));
+            }
+        }
+    }
+
     if update {
         std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
         println!("wrote BENCH_hotpath.json");
     } else {
         println!("{json}");
+    }
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("PERF REGRESSION: {f}");
+        }
+        std::process::exit(1);
     }
 }

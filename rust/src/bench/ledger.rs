@@ -140,6 +140,103 @@ impl Ledger {
     }
 }
 
+/// A committed ledger's comparison surface: provenance plus each bench's
+/// baseline/workspace **speedup** — what the CI perf-regression gate
+/// compares a fresh run against. The gate deliberately compares speedups
+/// (each run's own baseline-arm ÷ workspace-arm median, measured on the
+/// same machine in the same process) rather than absolute ns/op medians:
+/// raw medians shift with the CI runner generation, core count and
+/// throttling, so an absolute gate would fire on hardware variance; the
+/// within-run ratio transfers across machines and still catches the real
+/// failure mode — hot-path code getting slower relative to its own
+/// baseline.
+#[derive(Clone, Debug)]
+pub struct Baseline {
+    /// The committed file's provenance string. The regression gate only
+    /// arms itself against `"measured"` baselines — comparing live timings
+    /// to an authoring-container estimate would gate on fiction.
+    pub provenance: String,
+    /// `(bench name, speedup)` of every committed entry.
+    pub speedups: Vec<(String, f64)>,
+}
+
+impl Baseline {
+    /// Whether the committed numbers are a live measurement (the gate's
+    /// arming condition).
+    pub fn is_measured(&self) -> bool {
+        self.provenance == "measured"
+    }
+}
+
+/// Parse a committed `BENCH_hotpath.json` into a [`Baseline`]. Hand-rolled
+/// line scanner over the ledger's own `to_json` shape (the offline build
+/// carries no serde); returns `None` when the text is not a
+/// `ees-bench-ledger-v1` document.
+pub fn parse_baseline(json: &str) -> Option<Baseline> {
+    if !json.contains("\"schema\": \"ees-bench-ledger-v1\"") {
+        return None;
+    }
+    fn str_field(line: &str, key: &str) -> Option<String> {
+        let rest = line.trim().strip_prefix(&format!("\"{key}\": \""))?;
+        Some(rest.trim_end_matches(',').trim_end_matches('"').to_string())
+    }
+    fn num_field(line: &str, key: &str) -> Option<f64> {
+        let rest = line.trim().strip_prefix(&format!("\"{key}\": "))?;
+        rest.trim_end_matches(',').parse().ok()
+    }
+    let mut provenance = String::new();
+    let mut speedups = Vec::new();
+    let mut current: Option<String> = None;
+    for line in json.lines() {
+        if let Some(p) = str_field(line, "provenance") {
+            provenance = p;
+        } else if let Some(n) = str_field(line, "name") {
+            current = Some(n);
+        } else if let Some(v) = num_field(line, "speedup") {
+            // `speedup` is the last field of each entry, so `current`
+            // still holds that entry's name.
+            if let Some(name) = current.take() {
+                speedups.push((name, v));
+            }
+        }
+    }
+    Some(Baseline {
+        provenance,
+        speedups,
+    })
+}
+
+impl Ledger {
+    /// Compare this (freshly measured) ledger against a committed
+    /// [`Baseline`]: returns one human-readable line per entry whose
+    /// within-run speedup dropped by more than `tolerance` (0.25 = the CI
+    /// gate's 25%) below the committed speedup — the machine-portable
+    /// regression signal (see [`Baseline`] for why speedups, not absolute
+    /// medians). Entries missing on either side are skipped — new arms
+    /// can land before the baseline is re-measured.
+    pub fn regressions_vs(&self, base: &Baseline, tolerance: f64) -> Vec<String> {
+        let mut out = Vec::new();
+        for e in &self.entries {
+            if let Some((_, b)) = base.speedups.iter().find(|(n, _)| *n == e.name) {
+                let s = e.speedup();
+                // Threshold matches the reported drop percentage: flag when
+                // the speedup fell more than `tolerance` below committed.
+                if *b > 0.0 && s < b * (1.0 - tolerance) {
+                    out.push(format!(
+                        "{}: speedup {:.2}x vs committed {:.2}x (-{:.0}% > {:.0}% gate)",
+                        e.name,
+                        s,
+                        b,
+                        (1.0 - s / b) * 100.0,
+                        tolerance * 100.0
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
 /// Median wall-clock nanoseconds of one call to `f`, over `iters` timed
 /// calls after `warmup` discarded ones.
 pub fn median_ns<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
@@ -315,6 +412,69 @@ mod tests {
         assert!(j.contains("\"name\": \"step/demo\""));
         assert!(j.contains("\"speedup\": 2.50"));
         assert!(l.render_table().contains("2.50x"));
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_regression_gate() {
+        let mut committed = Ledger::new("quick");
+        committed.provenance = "measured".into();
+        committed.push(LedgerEntry {
+            name: "step/demo".into(),
+            median_ns: 100.0, // speedup 2.50
+            allocs_per_op: 0.0,
+            baseline_median_ns: 250.0,
+            baseline_allocs_per_op: 7.0,
+        });
+        committed.push(LedgerEntry {
+            name: "lane_step/demo".into(),
+            median_ns: 40.0, // speedup 2.50
+            allocs_per_op: 0.0,
+            baseline_median_ns: 100.0,
+            baseline_allocs_per_op: 0.0,
+        });
+        let base = parse_baseline(&committed.to_json()).expect("parseable");
+        assert!(base.is_measured());
+        assert_eq!(base.speedups.len(), 2);
+        assert_eq!(base.speedups[0].0, "step/demo");
+        assert!((base.speedups[0].1 - 2.5).abs() < 1e-9);
+
+        // Fresh run on a (hypothetically) uniformly slower machine: both
+        // arms scale together, so speedups hold — the gate must NOT fire
+        // on hardware variance. One entry's hot path genuinely regressed
+        // (speedup 2.5 -> 1.67, a 33% drop); one entry is new (skipped).
+        let mut fresh = Ledger::new("quick");
+        fresh.push(LedgerEntry {
+            name: "step/demo".into(),
+            median_ns: 300.0, // 3x slower machine, speedup still 2.50
+            allocs_per_op: 0.0,
+            baseline_median_ns: 750.0,
+            baseline_allocs_per_op: 7.0,
+        });
+        fresh.push(LedgerEntry {
+            name: "lane_step/demo".into(),
+            median_ns: 60.0, // baseline unchanged => speedup 1.67
+            allocs_per_op: 0.0,
+            baseline_median_ns: 100.0,
+            baseline_allocs_per_op: 0.0,
+        });
+        fresh.push(LedgerEntry {
+            name: "brand/new".into(),
+            median_ns: 1.0,
+            allocs_per_op: 0.0,
+            baseline_median_ns: 1.0,
+            baseline_allocs_per_op: 0.0,
+        });
+        let regs = fresh.regressions_vs(&base, 0.25);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].starts_with("lane_step/demo"));
+
+        // Estimate provenance parses but does not arm the gate.
+        let est = parse_baseline(
+            "{\n  \"schema\": \"ees-bench-ledger-v1\",\n  \"provenance\": \"authoring-container estimate\",\n  \"benches\": []\n}",
+        )
+        .expect("parseable");
+        assert!(!est.is_measured());
+        assert!(parse_baseline("not a ledger").is_none());
     }
 
     #[test]

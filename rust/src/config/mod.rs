@@ -32,6 +32,33 @@ pub fn default_parallelism() -> usize {
     })
 }
 
+/// Default lane-group width for the lane-blocked batch engine
+/// ([`crate::coordinator`]): how many samples a worker steps together in
+/// structure-of-arrays layout, turning per-sample matvecs into blocked
+/// matmuls. Results are **bitwise-identical at every lane count** (pinned
+/// by `rust/tests/determinism.rs`) — this is a pure performance knob.
+///
+/// Resolution order, cached for the process lifetime:
+/// 1. the `EES_LANES` environment variable (clamped to
+///    `1..=`[`crate::linalg::MAX_LANES`]);
+/// 2. `8` — wide enough that an MLP layer's lane matmul amortises the
+///    weight-row traffic, small enough that lane blocks stay in L1.
+///
+/// Per-call overrides go through the coordinator's `*_lanes` entry points;
+/// [`Config::lanes`] reads the `[exec] lanes` key for config-driven
+/// harnesses.
+pub fn default_lanes() -> usize {
+    static CACHE: OnceLock<usize> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Ok(v) = std::env::var("EES_LANES") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.clamp(1, crate::linalg::MAX_LANES);
+            }
+        }
+        8
+    })
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
     Str(String),
@@ -131,6 +158,17 @@ impl Config {
     /// default.
     pub fn parallelism(&self) -> usize {
         self.usize_or("exec.parallelism", default_parallelism())
+    }
+
+    /// Lane-group width for the lane-blocked batch engine: the
+    /// `[exec] lanes` key when present (clamped to
+    /// `1..=`[`crate::linalg::MAX_LANES`]), otherwise the process default
+    /// ([`default_lanes`]). A value of 1 means per-sample stepping. Like
+    /// the worker count, this is a pure perf knob — results are
+    /// bitwise-identical at every value.
+    pub fn lanes(&self) -> usize {
+        self.usize_or("exec.lanes", default_lanes())
+            .clamp(1, crate::linalg::MAX_LANES)
     }
 }
 
@@ -237,5 +275,19 @@ obs = [4, 8, 12]
         let d = Config::parse("").unwrap();
         assert_eq!(d.parallelism(), default_parallelism());
         assert!(default_parallelism() >= 1);
+    }
+
+    #[test]
+    fn lanes_knob() {
+        let c = Config::parse("[exec]\nlanes = 4").unwrap();
+        assert_eq!(c.lanes(), 4);
+        // Clamped to the kernel cap and to >= 1.
+        let big = Config::parse("[exec]\nlanes = 99").unwrap();
+        assert_eq!(big.lanes(), crate::linalg::MAX_LANES);
+        let zero = Config::parse("[exec]\nlanes = 0").unwrap();
+        assert_eq!(zero.lanes(), 1);
+        let d = Config::parse("").unwrap();
+        assert_eq!(d.lanes(), default_lanes());
+        assert!((1..=crate::linalg::MAX_LANES).contains(&default_lanes()));
     }
 }

@@ -14,9 +14,9 @@
 //!
 //! Batch samples are embarrassingly parallel: each trajectory owns its
 //! driver, tape and cotangent. The forward sweep and the backward sweep each
-//! fan out over samples through [`parallel::parallel_map`]; the batch loss
-//! (which genuinely couples samples) is the only sequential barrier between
-//! them. Results are **bitwise-deterministic in the worker count**:
+//! fan out through [`parallel::parallel_map`]; the batch loss (which
+//! genuinely couples samples) is the only sequential barrier between them.
+//! Results are **bitwise-deterministic in the worker count**:
 //!
 //! - per-sample state never crosses threads mid-computation;
 //! - the parameter gradient is reduced per sample first, then summed in
@@ -30,6 +30,29 @@
 //! harness that parses an `[exec] parallelism` key
 //! ([`crate::config::Config::parallelism`]) must hand the value to a
 //! `*_par` entry point explicitly.
+//!
+//! # Lane-blocked hot path
+//!
+//! Workers claim **lane groups** rather than single samples: a group of
+//! `L` samples is stepped together in structure-of-arrays (lane-major)
+//! layout through the stepper's `*_lanes_ws` entry points, so every solver
+//! stage evaluates the vector field as one `(L × d)` blocked matmul
+//! ([`crate::linalg::matmul_lanes`]) instead of `L` separate matvecs —
+//! forward, reversible `step_back`, and the whole adjoint sweep. The lane
+//! width defaults to [`crate::config::default_lanes`] (the `EES_LANES` env
+//! var / `[exec] lanes` key, capped at [`crate::linalg::MAX_LANES`]) and
+//! can be set per call via the `*_lanes` entry points; grouping only
+//! engages when BOTH the stepper and the field carry lane-blocked
+//! implementations ([`Stepper::lane_blocked`] /
+//! [`VectorField::lane_blocked`]), everything else falls back to
+//! per-sample stepping.
+//!
+//! Lane grouping is **bitwise-invisible**: the lane kernels reduce along
+//! the contraction dimension in exactly the per-sample [`crate::linalg::dot`]
+//! order, per-sample tapes/meters/noise are preserved inside the group, and
+//! per-lane parameter cotangents are reduced in fixed batch order — so
+//! loss, gradient and memory figures are identical at every `(workers,
+//! lanes)` combination (pinned by `rust/tests/determinism.rs`).
 //!
 //! # Memory accounting
 //!
@@ -54,10 +77,8 @@ use crate::adjoint::AdjointMethod;
 use crate::lie::HomogeneousSpace;
 use crate::losses::BatchLoss;
 use crate::memory::{MemMeter, MeteredTape, WorkspacePool};
-use crate::nn::optim::Optimizer;
 use crate::rng::{BrownianPath, BrownianSource, Pcg64, VirtualBrownianTree};
 use crate::solvers::{AdaptiveController, AdaptiveResult, ManifoldStepper, Stepper};
-use crate::train::{OptimSpec, TrainConfig, TrainProblem, Trainer};
 use crate::vf::{DiffManifoldVectorField, DiffVectorField, VectorField};
 
 /// Per-sample output of the forward sweep (tape + observations + terminal
@@ -99,6 +120,32 @@ fn reduce_per_sample(
         backward_peak = backward_peak.max(*peak);
     }
     (d_theta, base_mem + tape_retained + backward_peak)
+}
+
+/// Resolve the lane-group width a batch call actually steps with: the
+/// request clamped to `1..=`[`crate::linalg::MAX_LANES`], forced to 1
+/// unless BOTH the stepper and the vector field carry lane-blocked
+/// implementations ([`Stepper::lane_blocked`] /
+/// [`VectorField::lane_blocked`]) — grouping per-lane fallbacks adds
+/// gather/scatter work with no blocking win.
+fn effective_lanes(stepper: &dyn Stepper, vf: &dyn VectorField, lanes: usize) -> usize {
+    if stepper.lane_blocked() && vf.lane_blocked() {
+        lanes.clamp(1, crate::linalg::MAX_LANES)
+    } else {
+        1
+    }
+}
+
+/// Pack step `n`'s per-sample driver increments for the lane group
+/// `[lo, lo + ll)` into a lane-major `noise_dim × ll` block.
+fn pack_noise(paths: &[BrownianPath], lo: usize, ll: usize, n: usize, dw: &mut [f64]) {
+    let nd = dw.len() / ll;
+    for l in 0..ll {
+        let inc = paths[lo + l].increment(n);
+        for (j, v) in inc.iter().enumerate().take(nd) {
+            dw[j * ll + l] = *v;
+        }
+    }
 }
 
 /// Sample `batch` independent Brownian drivers from per-sample
@@ -214,6 +261,13 @@ pub fn sample_paths(
 
 /// Integrate a batch of Euclidean SDEs in parallel, one trajectory per
 /// sample, each `(steps+1) * dim` flattened (see [`crate::solvers::integrate`]).
+///
+/// Workers claim **lane groups** (width [`crate::config::default_lanes`],
+/// override via [`batch_integrate_lanes_par`]) rather than single samples:
+/// a lane-blocked stepper advances the whole group per stage in
+/// structure-of-arrays layout, turning per-sample matvecs into blocked
+/// matmuls. Trajectories are bitwise-identical at every worker AND lane
+/// count (pinned by `rust/tests/determinism.rs`).
 pub fn batch_integrate_par(
     stepper: &dyn Stepper,
     vf: &dyn VectorField,
@@ -222,16 +276,91 @@ pub fn batch_integrate_par(
     paths: &[BrownianPath],
     parallelism: usize,
 ) -> Vec<Vec<f64>> {
-    // One StepWorkspace per concurrent worker, checked out of a shared
-    // pool: the per-step scratch stays warm across every sample a worker
-    // integrates.
+    batch_integrate_lanes_par(
+        stepper,
+        vf,
+        t0,
+        y0s,
+        paths,
+        parallelism,
+        crate::config::default_lanes(),
+    )
+}
+
+/// [`batch_integrate_par`] with an explicit lane-group width (1 =
+/// per-sample stepping; clamped to [`crate::linalg::MAX_LANES`]; forced to
+/// 1 unless both the stepper and the field are lane-blocked). A lane
+/// group steps one shared `(t, h)` grid, so grouping additionally
+/// requires every path on the same uniform grid — a batch with
+/// heterogeneous step counts or step sizes (legal here since PR 1) falls
+/// back to per-sample integration, each trajectory on its own grid.
+pub fn batch_integrate_lanes_par(
+    stepper: &dyn Stepper,
+    vf: &dyn VectorField,
+    t0: f64,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    parallelism: usize,
+    lanes: usize,
+) -> Vec<Vec<f64>> {
+    let batch = y0s.len();
+    let lanes = effective_lanes(stepper, vf, lanes);
+    let uniform_grid = paths
+        .windows(2)
+        .all(|w| w[0].steps() == w[1].steps() && w[0].h == w[1].h);
+    if lanes <= 1 || !uniform_grid {
+        // One StepWorkspace per concurrent worker, checked out of a shared
+        // pool: the per-step scratch stays warm across every sample a
+        // worker integrates.
+        let ws_pool = WorkspacePool::new();
+        return parallel_map(parallelism, batch, |b| {
+            let mut ws = ws_pool.take();
+            let traj = crate::solvers::integrate_ws(stepper, vf, t0, &y0s[b], &paths[b], &mut ws);
+            ws_pool.put(ws);
+            traj
+        });
+    }
+    let dim = vf.dim();
+    let state_size = stepper.state_size(dim);
+    // (batch + lanes - 1) / lanes, spelled out: the crate pins
+    // rust-version 1.70, before usize::div_ceil stabilised.
+    let groups = (batch + lanes - 1) / lanes;
     let ws_pool = WorkspacePool::new();
-    parallel_map(parallelism, y0s.len(), |b| {
+    let per_group: Vec<Vec<Vec<f64>>> = parallel_map(parallelism, groups, |g| {
+        let lo = g * lanes;
+        let ll = lanes.min(batch - lo);
+        let steps = paths[lo].steps();
+        let h = paths[lo].h;
         let mut ws = ws_pool.take();
-        let traj = crate::solvers::integrate_ws(stepper, vf, t0, &y0s[b], &paths[b], &mut ws);
+        let mut state = ws.take(state_size * ll);
+        for l in 0..ll {
+            let s = stepper.init_state(vf, t0, &y0s[lo + l]);
+            crate::linalg::lane_scatter(&s, l, ll, &mut state);
+        }
+        let mut dw = ws.take(vf.noise_dim() * ll);
+        let mut trajs: Vec<Vec<f64>> = (lo..lo + ll)
+            .map(|b| {
+                let mut t = vec![0.0; (steps + 1) * dim];
+                t[..dim].copy_from_slice(&y0s[b]);
+                t
+            })
+            .collect();
+        for n in 0..steps {
+            let t = t0 + n as f64 * h;
+            pack_noise(paths, lo, ll, n, &mut dw);
+            stepper.step_lanes_ws(vf, t, h, &dw, &mut state, ll, &mut ws);
+            for (l, traj) in trajs.iter_mut().enumerate() {
+                for d in 0..dim {
+                    traj[(n + 1) * dim + d] = state[d * ll + l];
+                }
+            }
+        }
+        ws.put(dw);
+        ws.put(state);
         ws_pool.put(ws);
-        traj
-    })
+        trajs
+    });
+    per_group.into_iter().flatten().collect()
 }
 
 /// [`batch_integrate_par`] at the configured default parallelism.
@@ -280,7 +409,302 @@ pub fn batch_grad_euclidean_par(
 /// boundary and the hot path stays allocation-free across the whole run.
 /// Scratch reuse is bitwise-invisible (see
 /// `rust/tests/determinism.rs::workspace_reuse_is_bitwise_invisible`).
+///
+/// Workers claim **lane groups** of [`crate::config::default_lanes`]
+/// samples (override via [`batch_grad_euclidean_pool_lanes`]) and step the
+/// whole group per stage in structure-of-arrays layout — the lane-blocked
+/// hot path. Results are bitwise-identical at every lane count.
+#[allow(clippy::too_many_arguments)]
 pub fn batch_grad_euclidean_pool(
+    stepper: &dyn Stepper,
+    method: AdjointMethod,
+    vf: &dyn DiffVectorField,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    obs: &[usize],
+    loss: &dyn BatchLoss,
+    parallelism: usize,
+    ws_pool: &WorkspacePool,
+) -> (f64, Vec<f64>, usize) {
+    batch_grad_euclidean_pool_lanes(
+        stepper,
+        method,
+        vf,
+        y0s,
+        paths,
+        obs,
+        loss,
+        parallelism,
+        ws_pool,
+        crate::config::default_lanes(),
+    )
+}
+
+/// [`batch_grad_euclidean_pool`] with an explicit lane-group width.
+///
+/// `lanes = 1` runs the per-sample engine; `lanes = L > 1` steps groups of
+/// `L` samples at once through the stepper's `*_lanes_ws` entry points
+/// (forward, reversible `step_back`, and the whole adjoint sweep), so every
+/// solver stage evaluates the vector field as an `(L × d)` blocked matmul
+/// instead of `L` separate matvecs. Per-sample noise streams, per-sample
+/// tapes/memory meters, and the fixed-batch-order gradient reduction are
+/// all preserved, so loss, gradient and memory figures are
+/// **bitwise-identical at every worker AND lane count** (pinned by
+/// `rust/tests/determinism.rs`). Stepper/field pairs without lane-blocked
+/// implementations fall back to `lanes = 1`.
+#[allow(clippy::too_many_arguments)]
+pub fn batch_grad_euclidean_pool_lanes(
+    stepper: &dyn Stepper,
+    method: AdjointMethod,
+    vf: &dyn DiffVectorField,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    obs: &[usize],
+    loss: &dyn BatchLoss,
+    parallelism: usize,
+    ws_pool: &WorkspacePool,
+    lanes: usize,
+) -> (f64, Vec<f64>, usize) {
+    let lanes = effective_lanes(stepper, vf, lanes);
+    if lanes <= 1 {
+        return batch_grad_euclidean_scalar(
+            stepper, method, vf, y0s, paths, obs, loss, parallelism, ws_pool,
+        );
+    }
+    let batch = y0s.len();
+    let dim = vf.dim();
+    let noise_dim = vf.noise_dim();
+    let np = vf.num_params();
+    let n_obs = obs.len();
+    let steps = paths[0].steps();
+    let h = paths[0].h;
+    let state_size = stepper.state_size(dim);
+    let seg = (steps as f64).sqrt().ceil() as usize;
+    let base_mem = 2 * state_size + batch * n_obs * dim + np;
+    let groups = (batch + lanes - 1) / lanes;
+
+    // ---- forward: lane groups independent -------------------------------
+    // Per-sample tapes, memory meters and observation rows survive inside
+    // the group, so the adjoint-memory model meters exactly what the
+    // per-sample engine meters.
+    let fwd_groups: Vec<Vec<ForwardOut>> = parallel_map(parallelism, groups, |g| {
+        let lo = g * lanes;
+        let ll = lanes.min(batch - lo);
+        let mut ws = ws_pool.take();
+        let mut meters: Vec<MemMeter> = (0..ll).map(|_| MemMeter::new()).collect();
+        let mut tapes: Vec<MeteredTape> = (0..ll).map(|_| MeteredTape::new()).collect();
+        let mut obs_states: Vec<Vec<f64>> = (0..ll).map(|_| vec![0.0; n_obs * dim]).collect();
+        let mut state = ws.take(state_size * ll);
+        for l in 0..ll {
+            let s = stepper.init_state(vf, 0.0, &y0s[lo + l]);
+            crate::linalg::lane_scatter(&s, l, ll, &mut state);
+            if method != AdjointMethod::Reversible {
+                tapes[l].push(&s, &mut meters[l]);
+            }
+        }
+        let mut dw = ws.take(noise_dim * ll);
+        let mut tmp = ws.take(state_size);
+        let mut oi = 0;
+        for n in 0..steps {
+            let t = n as f64 * h;
+            pack_noise(paths, lo, ll, n, &mut dw);
+            stepper.step_lanes_ws(vf, t, h, &dw, &mut state, ll, &mut ws);
+            let record = match method {
+                AdjointMethod::Full => true,
+                AdjointMethod::Recursive => (n + 1) % seg == 0,
+                AdjointMethod::Reversible => false,
+            };
+            if record {
+                for l in 0..ll {
+                    crate::linalg::lane_gather(&state, l, ll, &mut tmp);
+                    tapes[l].push(&tmp, &mut meters[l]);
+                }
+            }
+            while oi < n_obs && obs[oi] == n + 1 {
+                for (l, os) in obs_states.iter_mut().enumerate() {
+                    for d in 0..dim {
+                        os[oi * dim + d] = state[d * ll + l];
+                    }
+                }
+                oi += 1;
+            }
+        }
+        let mut out = Vec::with_capacity(ll);
+        for (l, ((tape, meter), obs_s)) in tapes
+            .into_iter()
+            .zip(meters)
+            .zip(obs_states)
+            .enumerate()
+        {
+            let mut final_state = vec![0.0; state_size];
+            crate::linalg::lane_gather(&state, l, ll, &mut final_state);
+            out.push(ForwardOut {
+                final_state,
+                tape,
+                obs_states: obs_s,
+                retained: meter.current(),
+            });
+        }
+        ws.put(tmp);
+        ws.put(dw);
+        ws.put(state);
+        ws_pool.put(ws);
+        out
+    });
+    let fwd: Vec<ForwardOut> = fwd_groups.into_iter().flatten().collect();
+
+    // ---- barrier: the batch loss couples samples ------------------------
+    let obs_all = gather_obs(&fwd, n_obs, dim);
+    let (loss_val, cots) = loss.eval_grad(&obs_all, batch, n_obs, dim);
+    let tape_retained: usize = fwd.iter().map(|f| f.retained).sum();
+
+    // ---- backward: lane-blocked sweep, per-lane gradients reduced in
+    // fixed batch order --------------------------------------------------
+    let fwd_ref = &fwd;
+    let cots_ref = &cots;
+    let per_group: Vec<Vec<(Vec<f64>, usize)>> = parallel_map(parallelism, groups, |g| {
+        let lo = g * lanes;
+        let ll = lanes.min(batch - lo);
+        let mut ws = ws_pool.take();
+        // Lane-contiguous parameter cotangents: lane l accumulates into
+        // [l*np, (l+1)*np) in exactly the per-sample order, so the final
+        // fixed-batch-order reduction is unchanged by lane grouping.
+        let mut d_theta_lanes = vec![0.0; ll * np];
+        let mut meters: Vec<MemMeter> = (0..ll).map(|_| MemMeter::new()).collect();
+        let mut seg_bufs: Vec<MeteredTape> = (0..ll).map(|_| MeteredTape::new()).collect();
+        let mut lambda = ws.take(state_size * ll);
+        let mut state = ws.take(state_size * ll);
+        for l in 0..ll {
+            crate::linalg::lane_scatter(&fwd_ref[lo + l].final_state, l, ll, &mut state);
+        }
+        let mut dw = ws.take(noise_dim * ll);
+        let mut dwm = ws.take(noise_dim * ll);
+        let mut prev = ws.take(state_size * ll);
+        let mut recon = ws.take(state_size * ll);
+        let mut tmp = ws.take(state_size);
+        let mut oi = n_obs;
+        for n in (0..steps).rev() {
+            while oi > 0 && obs[oi - 1] == n + 1 {
+                oi -= 1;
+                for l in 0..ll {
+                    for d in 0..dim {
+                        lambda[d * ll + l] += cots_ref[((lo + l) * n_obs + oi) * dim + d];
+                    }
+                }
+            }
+            let t = n as f64 * h;
+            pack_noise(paths, lo, ll, n, &mut dw);
+            match method {
+                AdjointMethod::Full => {
+                    for l in 0..ll {
+                        crate::linalg::lane_scatter(
+                            fwd_ref[lo + l].tape.get(n),
+                            l,
+                            ll,
+                            &mut prev,
+                        );
+                    }
+                    stepper.backprop_step_lanes_ws(
+                        vf,
+                        t,
+                        h,
+                        &dw,
+                        &prev,
+                        &mut lambda,
+                        &mut d_theta_lanes,
+                        ll,
+                        &mut ws,
+                    );
+                }
+                AdjointMethod::Reversible => {
+                    stepper.step_back_lanes_ws(vf, t, h, &dw, &mut state, ll, &mut ws);
+                    stepper.backprop_step_lanes_ws(
+                        vf,
+                        t,
+                        h,
+                        &dw,
+                        &state,
+                        &mut lambda,
+                        &mut d_theta_lanes,
+                        ll,
+                        &mut ws,
+                    );
+                }
+                AdjointMethod::Recursive => {
+                    if seg_bufs[0].is_empty() {
+                        // Rebuild the whole segment lane-blocked, filling
+                        // each lane's (metered) segment buffer with exactly
+                        // the states the per-sample sweep would tape.
+                        let seg_start = (n / seg) * seg;
+                        let ckpt_idx = n / seg;
+                        for (l, sb) in seg_bufs.iter_mut().enumerate() {
+                            let s = fwd_ref[lo + l].tape.get(ckpt_idx);
+                            crate::linalg::lane_scatter(s, l, ll, &mut recon);
+                            sb.push(s, &mut meters[l]);
+                        }
+                        for m in seg_start..n {
+                            pack_noise(paths, lo, ll, m, &mut dwm);
+                            stepper.step_lanes_ws(
+                                vf,
+                                m as f64 * h,
+                                h,
+                                &dwm,
+                                &mut recon,
+                                ll,
+                                &mut ws,
+                            );
+                            for (l, sb) in seg_bufs.iter_mut().enumerate() {
+                                crate::linalg::lane_gather(&recon, l, ll, &mut tmp);
+                                sb.push(&tmp, &mut meters[l]);
+                            }
+                        }
+                    }
+                    for (l, sb) in seg_bufs.iter_mut().enumerate() {
+                        let p = sb.pop(&mut meters[l]).expect("segment buffer underflow");
+                        crate::linalg::lane_scatter(&p, l, ll, &mut prev);
+                    }
+                    stepper.backprop_step_lanes_ws(
+                        vf,
+                        t,
+                        h,
+                        &dw,
+                        &prev,
+                        &mut lambda,
+                        &mut d_theta_lanes,
+                        ll,
+                        &mut ws,
+                    );
+                }
+            }
+        }
+        ws.put(tmp);
+        ws.put(recon);
+        ws.put(prev);
+        ws.put(dwm);
+        ws.put(dw);
+        ws.put(state);
+        ws.put(lambda);
+        ws_pool.put(ws);
+        (0..ll)
+            .map(|l| {
+                (
+                    d_theta_lanes[l * np..(l + 1) * np].to_vec(),
+                    meters[l].peak_f64s(),
+                )
+            })
+            .collect()
+    });
+    let per_sample: Vec<(Vec<f64>, usize)> = per_group.into_iter().flatten().collect();
+
+    let (d_theta, peak) = reduce_per_sample(&per_sample, np, base_mem, tape_retained);
+    (loss_val, d_theta, peak)
+}
+
+/// The per-sample (`lanes = 1`) engine — the pre-lane hot path, kept intact
+/// as both the fallback for non-lane-blocked steppers and the bitwise
+/// reference the lane path is pinned against.
+#[allow(clippy::too_many_arguments)]
+fn batch_grad_euclidean_scalar(
     stepper: &dyn Stepper,
     method: AdjointMethod,
     vf: &dyn DiffVectorField,
@@ -633,106 +1057,6 @@ pub fn batch_grad_manifold(
     )
 }
 
-/// Generic Euclidean training loop — **deprecated**: the epoch loop now
-/// lives in the training engine ([`crate::train::Trainer`] +
-/// [`crate::train::EuclideanProblem`]), which adds schedules, callbacks,
-/// checkpointing and gradient accumulation on top of the identical
-/// arithmetic. This wrapper drives the engine on the caller's optimiser
-/// state (so existing call sites behave bit-for-bit as before) and remains
-/// for one release.
-#[deprecated(
-    since = "0.2.0",
-    note = "use train::Trainer with train::EuclideanProblem (see docs/ARCHITECTURE.md §Training engine)"
-)]
-pub fn train_euclidean<M, FGet, FSet>(
-    model: &mut M,
-    get_params: FGet,
-    set_params: FSet,
-    stepper: &dyn Stepper,
-    method: AdjointMethod,
-    sample_batch: &mut dyn FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>),
-    obs: &[usize],
-    loss: &dyn BatchLoss,
-    opt: &mut Optimizer,
-    epochs: usize,
-    clip: Option<f64>,
-    rng: &mut Pcg64,
-) -> TrainLog
-where
-    M: DiffVectorField,
-    FGet: Fn(&M) -> Vec<f64>,
-    FSet: Fn(&mut M, &[f64]),
-{
-    /// Closure-based shim: adapts the legacy (model, get, set, sampler)
-    /// calling convention onto [`TrainProblem`].
-    struct Shim<'a, M, FGet, FSet> {
-        model: &'a mut M,
-        get: FGet,
-        set: FSet,
-        stepper: &'a dyn Stepper,
-        method: AdjointMethod,
-        sampler: &'a mut dyn FnMut(&mut Pcg64) -> (Vec<Vec<f64>>, Vec<BrownianPath>),
-        obs: &'a [usize],
-        loss: &'a dyn BatchLoss,
-        pool: WorkspacePool,
-    }
-
-    impl<M, FGet, FSet> TrainProblem for Shim<'_, M, FGet, FSet>
-    where
-        M: DiffVectorField,
-        FGet: Fn(&M) -> Vec<f64>,
-        FSet: Fn(&mut M, &[f64]),
-    {
-        fn num_params(&self) -> usize {
-            self.model.num_params()
-        }
-        fn params(&self) -> Vec<f64> {
-            (self.get)(&*self.model)
-        }
-        fn set_params(&mut self, p: &[f64]) {
-            (self.set)(&mut *self.model, p)
-        }
-        fn grad(
-            &mut self,
-            _epoch: usize,
-            rng: &mut Pcg64,
-            parallelism: usize,
-        ) -> (f64, Vec<f64>, usize) {
-            let (y0s, paths) = (self.sampler)(rng);
-            batch_grad_euclidean_pool(
-                self.stepper,
-                self.method,
-                &*self.model,
-                &y0s,
-                &paths,
-                self.obs,
-                self.loss,
-                parallelism,
-                &self.pool,
-            )
-        }
-    }
-
-    let mut shim = Shim {
-        model,
-        get: get_params,
-        set: set_params,
-        stepper,
-        method,
-        sampler: sample_batch,
-        obs,
-        loss,
-        pool: WorkspacePool::new(),
-    };
-    let trainer = Trainer::new(TrainConfig::new(epochs).group(OptimSpec::of(opt), clip));
-    // Run on the caller's optimiser state, then hand the advanced state
-    // back (the legacy contract: `opt` is mutated in place).
-    let mut opts = vec![opt.clone()];
-    let log = trainer.run_resumed(&mut shim, rng, &mut [], &mut opts);
-    *opt = opts.remove(0);
-    log
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -741,14 +1065,18 @@ mod tests {
     use crate::nn::neural_sde::NeuralSde;
     use crate::solvers::LowStorageStepper;
 
-    /// End-to-end smoke through the deprecated legacy wrapper: a tiny
-    /// neural SDE trained on OU moments with the reversible adjoint reduces
-    /// the loss, and the wrapper is **bitwise-identical** to driving
-    /// [`crate::train::Trainer`] directly (the one-training-path contract
-    /// of the deprecation period).
+    /// End-to-end OU training smoke, now driven through
+    /// [`crate::train::Trainer`] directly (migrated from the removed
+    /// `train_euclidean` shim, whose deprecation grace period has
+    /// elapsed): the reversible adjoint reduces the loss, and running the
+    /// engine on **caller-owned optimiser state** via `run_resumed` is
+    /// bitwise-identical to the fresh-optimiser `run` path — optimiser
+    /// handoff is a resume mechanism, not a second training path.
     #[test]
-    #[allow(deprecated)]
     fn training_reduces_loss_on_ou() {
+        use crate::nn::optim::Optimizer;
+        use crate::train::{EuclideanProblem, FlatParams, OptimSpec, TrainConfig, Trainer};
+
         let mut rng = Pcg64::new(20);
         let ou = OuParams::default();
         let steps = 16;
@@ -756,46 +1084,54 @@ mod tests {
         let obs: Vec<usize> = (4..=steps).step_by(4).collect();
         // Exact-moment targets at the observation times.
         let (mean_all, m2_all) = ou.moment_targets(0.0, steps, h, 4000, &mut rng);
-        let target_mean: Vec<f64> = obs.iter().map(|&i| mean_all[i]).collect();
-        let target_m2: Vec<f64> = obs.iter().map(|&i| m2_all[i]).collect();
         let loss = MomentMatch {
-            target_mean,
-            target_m2,
+            target_mean: obs.iter().map(|&i| mean_all[i]).collect(),
+            target_m2: obs.iter().map(|&i| m2_all[i]).collect(),
         };
-        let mut model = NeuralSde::lsde(1, 8, 1, true, &mut rng);
         let st = LowStorageStepper::ees25();
-        let mut opt = Optimizer::adam(0.02, model.num_params());
         let batch = 64;
-        let mut sampler = move |rng: &mut Pcg64| {
-            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
-            let paths: Vec<BrownianPath> = (0..batch)
-                .map(|_| BrownianPath::sample(rng, 1, steps, h))
-                .collect();
-            (y0s, paths)
+        let make_sampler = || {
+            move |rng: &mut Pcg64| {
+                let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
+                let paths: Vec<BrownianPath> = (0..batch)
+                    .map(|_| BrownianPath::sample(rng, 1, steps, h))
+                    .collect();
+                (y0s, paths)
+            }
         };
-        let log = train_euclidean(
-            &mut model,
-            |m: &NeuralSde| m.params(),
-            |m: &mut NeuralSde, p: &[f64]| m.set_params(p),
+
+        // Caller-owned optimiser state through run_resumed (the legacy
+        // wrapper's contract, driven on the engine directly).
+        let model = NeuralSde::lsde(1, 8, 1, true, &mut rng);
+        let mut opt = Optimizer::adam(0.02, model.num_params());
+        let mut problem = EuclideanProblem::new(
+            model,
             &st,
             AdjointMethod::Reversible,
-            &mut sampler,
-            &obs,
+            make_sampler(),
+            obs.clone(),
             &loss,
-            &mut opt,
-            40,
-            Some(1.0),
-            &mut rng,
         );
+        let trainer = Trainer::new(
+            TrainConfig::new(40).group(OptimSpec::of(&opt), Some(1.0)),
+        );
+        let mut opts = vec![opt.clone()];
+        let log = trainer.run_resumed(&mut problem, &mut rng, &mut [], &mut opts);
+        opt = opts.remove(0);
         let first: f64 = log.history[..5].iter().map(|m| m.loss).sum::<f64>() / 5.0;
         let last: f64 = log.history[35..].iter().map(|m| m.loss).sum::<f64>() / 5.0;
         assert!(
             last < 0.7 * first,
             "loss must decrease: {first} -> {last}"
         );
+        // The handed-back optimiser advanced through all 40 steps.
+        match &opt {
+            Optimizer::Adam { t, .. } => assert_eq!(*t, 40),
+            other => panic!("expected Adam state, got {other:?}"),
+        }
 
-        // The same run driven through the training engine directly must be
-        // bitwise-identical — the wrapper is a shim, not a second path.
+        // The identical run through the fresh-optimiser `run` entry point
+        // must be bitwise-identical.
         let mut rng2 = Pcg64::new(20);
         let (mean_all2, m2_all2) = ou.moment_targets(0.0, steps, h, 4000, &mut rng2);
         let loss2 = MomentMatch {
@@ -803,33 +1139,25 @@ mod tests {
             target_m2: obs.iter().map(|&i| m2_all2[i]).collect(),
         };
         let model2 = NeuralSde::lsde(1, 8, 1, true, &mut rng2);
-        let sampler2 = move |rng: &mut Pcg64| {
-            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
-            let paths: Vec<BrownianPath> = (0..batch)
-                .map(|_| BrownianPath::sample(rng, 1, steps, h))
-                .collect();
-            (y0s, paths)
-        };
-        let mut problem = crate::train::EuclideanProblem::new(
+        let mut problem2 = EuclideanProblem::new(
             model2,
             &st,
             AdjointMethod::Reversible,
-            sampler2,
+            make_sampler(),
             obs.clone(),
             &loss2,
         );
-        let trainer = Trainer::new(
+        let trainer2 = Trainer::new(
             TrainConfig::new(40).group(OptimSpec::Adam { lr: 0.02 }, Some(1.0)),
         );
-        let log2 = trainer.run(&mut problem, &mut rng2);
+        let log2 = trainer2.run(&mut problem2, &mut rng2);
         assert_eq!(log.history.len(), log2.history.len());
         for (a, b) in log.history.iter().zip(log2.history.iter()) {
             assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "epoch {}", a.epoch);
         }
-        for (a, b) in model
-            .params()
+        for (a, b) in FlatParams::params(&problem.model)
             .iter()
-            .zip(crate::train::FlatParams::params(&problem.model).iter())
+            .zip(FlatParams::params(&problem2.model).iter())
         {
             assert_eq!(a.to_bits(), b.to_bits());
         }

@@ -82,16 +82,122 @@ pub fn matvec(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
     }
 }
 
-/// y = Aᵀ·x for row-major A (m×n), x length m, y length n.
+/// Strided companion of [`dot`]: reduces `Σ_i a[offset + i*stride] * x[i]`
+/// with exactly the same accumulation order (four independent accumulators
+/// over 4-chunks, combined as `(s0+s1)+(s2+s3)`, then a sequential tail).
+/// This is what lets every GEMV/GEMM path in the crate — row-major
+/// ([`matvec`]), transposed ([`matvec_t`]) and lane-blocked
+/// ([`matmul_lanes`]) — share ONE float-op-order definition, so their
+/// outputs are bitwise-comparable wherever they reduce the same products.
+#[inline]
+pub fn dot_strided(a: &[f64], offset: usize, stride: usize, x: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += a[offset + i * stride] * x[i];
+        s1 += a[offset + (i + 1) * stride] * x[i + 1];
+        s2 += a[offset + (i + 2) * stride] * x[i + 2];
+        s3 += a[offset + (i + 3) * stride] * x[i + 3];
+    }
+    let mut acc = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        acc += a[offset + i * stride] * x[i];
+    }
+    acc
+}
+
+/// y = Aᵀ·x for row-major A (m×n), x length m, y length n. Each output is
+/// reduced with [`dot_strided`] — the same accumulation order as [`dot`] /
+/// [`matvec`], so transposed and untransposed GEMV agree bitwise on the
+/// same products (one float-op-order definition for every GEMV path).
 pub fn matvec_t(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
     debug_assert_eq!(a.len(), m * n);
-    y.fill(0.0);
+    debug_assert_eq!(x.len(), m);
+    for (j, yj) in y.iter_mut().enumerate().take(n) {
+        *yj = dot_strided(a, j, n, x);
+    }
+}
+
+/// Hard cap on the lane count of the lane-blocked kernels (the stage
+/// accumulators live in fixed-size stack arrays). The batch engine clamps
+/// its `EES_LANES` / `[exec] lanes` knob to this.
+pub const MAX_LANES: usize = 16;
+
+/// Lane-blocked GEMM for the structure-of-arrays batch hot path:
+/// `out[i*lanes + l] = Σ_k a[i*k_dim + k] · x[k*lanes + l]`, where `x` and
+/// `out` are lane-major blocks (component-major, `lanes` consecutive lane
+/// values per component). The reduction over `k` runs in **exactly the
+/// order of [`dot`]** (four accumulators per lane over 4-chunks, combined
+/// `(s0+s1)+(s2+s3)`, sequential tail), so column `l` of the output is
+/// bitwise-identical to `dot(a_row, x_lane_l)` on the gathered lane —
+/// the contract that makes lane-blocked stepping invisible to the
+/// per-sample determinism suite.
+pub fn matmul_lanes(a: &[f64], x: &[f64], out: &mut [f64], m: usize, k_dim: usize, lanes: usize) {
+    assert!(lanes >= 1 && lanes <= MAX_LANES, "lanes {lanes} out of range");
+    debug_assert_eq!(a.len(), m * k_dim);
+    debug_assert_eq!(x.len(), k_dim * lanes);
+    debug_assert_eq!(out.len(), m * lanes);
+    let chunks = k_dim / 4;
+    let mut s0 = [0.0f64; MAX_LANES];
+    let mut s1 = [0.0f64; MAX_LANES];
+    let mut s2 = [0.0f64; MAX_LANES];
+    let mut s3 = [0.0f64; MAX_LANES];
     for i in 0..m {
-        let xi = x[i];
-        let row = &a[i * n..(i + 1) * n];
-        for (yj, aij) in y.iter_mut().zip(row.iter()) {
-            *yj += aij * xi;
+        let row = &a[i * k_dim..(i + 1) * k_dim];
+        s0[..lanes].fill(0.0);
+        s1[..lanes].fill(0.0);
+        s2[..lanes].fill(0.0);
+        s3[..lanes].fill(0.0);
+        for c in 0..chunks {
+            let k = 4 * c;
+            let (a0, a1, a2, a3) = (row[k], row[k + 1], row[k + 2], row[k + 3]);
+            let x0 = &x[k * lanes..(k + 1) * lanes];
+            let x1 = &x[(k + 1) * lanes..(k + 2) * lanes];
+            let x2 = &x[(k + 2) * lanes..(k + 3) * lanes];
+            let x3 = &x[(k + 3) * lanes..(k + 4) * lanes];
+            for l in 0..lanes {
+                s0[l] += a0 * x0[l];
+                s1[l] += a1 * x1[l];
+                s2[l] += a2 * x2[l];
+                s3[l] += a3 * x3[l];
+            }
         }
+        let orow = &mut out[i * lanes..(i + 1) * lanes];
+        for l in 0..lanes {
+            orow[l] = (s0[l] + s1[l]) + (s2[l] + s3[l]);
+        }
+        for k in 4 * chunks..k_dim {
+            let ak = row[k];
+            let xk = &x[k * lanes..(k + 1) * lanes];
+            for (o, xv) in orow.iter_mut().zip(xk.iter()) {
+                *o += ak * xv;
+            }
+        }
+    }
+}
+
+/// Gather lane `lane` of a lane-major block (`dst.len()` components ×
+/// `lanes`) into a contiguous per-sample vector.
+#[inline]
+pub fn lane_gather(block: &[f64], lane: usize, lanes: usize, dst: &mut [f64]) {
+    debug_assert!(lane < lanes);
+    debug_assert_eq!(block.len(), dst.len() * lanes);
+    for (c, d) in dst.iter_mut().enumerate() {
+        *d = block[c * lanes + lane];
+    }
+}
+
+/// Scatter a contiguous per-sample vector into lane `lane` of a lane-major
+/// block (`src.len()` components × `lanes`) — the inverse of
+/// [`lane_gather`].
+#[inline]
+pub fn lane_scatter(src: &[f64], lane: usize, lanes: usize, block: &mut [f64]) {
+    debug_assert!(lane < lanes);
+    debug_assert_eq!(block.len(), src.len() * lanes);
+    for (c, s) in src.iter().enumerate() {
+        block[c * lanes + lane] = *s;
     }
 }
 
@@ -368,19 +474,97 @@ mod tests {
 
     #[test]
     fn matvec_transpose_consistency() {
+        // matvec_t now reduces through dot_strided — the same accumulation
+        // order as dot/matvec — so Aᵀx agrees with matvec on the explicit
+        // transpose BITWISE, not just to tolerance (one float-op-order
+        // definition for every GEMV path).
         let mut rng = Pcg64::new(1);
-        let (m, n) = (4, 3);
-        let mut a = vec![0.0; m * n];
-        rng.fill_normal(&mut a);
-        let x: Vec<f64> = (0..m).map(|i| i as f64 + 1.0).collect();
-        let mut y1 = vec![0.0; n];
-        matvec_t(&a, &x, &mut y1, m, n);
-        let at = transpose(&a, m, n);
-        let mut y2 = vec![0.0; n];
-        matvec(&at, &x, &mut y2, n, m);
-        for (u, v) in y1.iter().zip(y2.iter()) {
-            assert!((u - v).abs() < 1e-14);
+        for (m, n) in [(4usize, 3usize), (9, 7), (16, 5)] {
+            let mut a = vec![0.0; m * n];
+            rng.fill_normal(&mut a);
+            let x: Vec<f64> = (0..m).map(|i| (i as f64 + 1.0).sin()).collect();
+            let mut y1 = vec![0.0; n];
+            matvec_t(&a, &x, &mut y1, m, n);
+            let at = transpose(&a, m, n);
+            let mut y2 = vec![0.0; n];
+            matvec(&at, &x, &mut y2, n, m);
+            for (u, v) in y1.iter().zip(y2.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "({m},{n})");
+            }
         }
+    }
+
+    #[test]
+    fn dot_strided_matches_dot() {
+        let mut rng = Pcg64::new(23);
+        for n in [1usize, 3, 4, 7, 8, 11, 32] {
+            let mut a = vec![0.0; n];
+            let mut x = vec![0.0; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut x);
+            // Contiguous layout (stride 1, offset 0) must be exactly dot.
+            assert_eq!(
+                dot_strided(&a, 0, 1, &x).to_bits(),
+                dot(&a, &x).to_bits(),
+                "n={n}"
+            );
+            // A strided embedding of the same values gives the same bits.
+            let stride = 3;
+            let mut wide = vec![0.0; n * stride + 1];
+            for (i, v) in a.iter().enumerate() {
+                wide[1 + i * stride] = *v;
+            }
+            assert_eq!(
+                dot_strided(&wide, 1, stride, &x).to_bits(),
+                dot(&a, &x).to_bits(),
+                "strided n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_lanes_columns_match_per_lane_dot() {
+        // The lane contract: column l of matmul_lanes equals dot(row, x_l)
+        // on the gathered lane, bit for bit — for k both multiple-of-4 and
+        // with a scalar tail, across lane counts including ragged ones.
+        let mut rng = Pcg64::new(77);
+        for (m, k) in [(5usize, 8usize), (3, 11), (7, 4), (2, 1)] {
+            for lanes in [1usize, 2, 5, 8, MAX_LANES] {
+                let mut a = vec![0.0; m * k];
+                let mut x = vec![0.0; k * lanes];
+                rng.fill_normal(&mut a);
+                rng.fill_normal(&mut x);
+                let mut out = vec![0.0; m * lanes];
+                matmul_lanes(&a, &x, &mut out, m, k, lanes);
+                let mut xl = vec![0.0; k];
+                for l in 0..lanes {
+                    lane_gather(&x, l, lanes, &mut xl);
+                    for i in 0..m {
+                        let want = dot(&a[i * k..(i + 1) * k], &xl);
+                        assert_eq!(
+                            out[i * lanes + l].to_bits(),
+                            want.to_bits(),
+                            "m={m} k={k} lanes={lanes} (i={i}, l={l})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lane_gather_scatter_round_trip() {
+        let lanes = 3;
+        let comps = 4;
+        let mut block = vec![0.0; comps * lanes];
+        let src: Vec<f64> = (0..comps).map(|c| c as f64 + 0.5).collect();
+        lane_scatter(&src, 1, lanes, &mut block);
+        let mut dst = vec![0.0; comps];
+        lane_gather(&block, 1, lanes, &mut dst);
+        assert_eq!(src, dst);
+        // Other lanes untouched.
+        lane_gather(&block, 0, lanes, &mut dst);
+        assert!(dst.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -31,8 +31,9 @@
 //! summary. `--ledger OUT.json` additionally writes the run's per-epoch
 //! `TrainLedger` JSON once the run finishes (library users wanting rows
 //! as they happen attach `TrainLedger` as a streaming `Callback` instead);
-//! `--max-final-loss X` / `--assert-improves` turn the run into a CI smoke
-//! gate (non-zero exit on failure).
+//! `--max-final-loss X` / `--max-loss-ratio R` (terminal 5-epoch window
+//! vs first 5-epoch window) / `--assert-improves` turn the run into a CI
+//! smoke gate (non-zero exit on failure).
 
 use ees::config::Config;
 use ees::experiments::{self, Scale};
@@ -50,6 +51,7 @@ struct Args {
     scenario: Option<String>,
     ledger: Option<String>,
     max_final_loss: Option<f64>,
+    max_loss_ratio: Option<f64>,
     assert_improves: bool,
 }
 
@@ -65,6 +67,7 @@ fn parse_args() -> Args {
         scenario: None,
         ledger: None,
         max_final_loss: None,
+        max_loss_ratio: None,
         assert_improves: false,
     };
     let mut it = std::env::args().skip(1);
@@ -86,6 +89,16 @@ fn parse_args() -> Args {
                         // dropping it would vacuously green-light the CI
                         // smoke gate.
                         eprintln!("--max-final-loss: not a number: '{raw}'");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            "--max-loss-ratio" => {
+                let raw = it.next().unwrap_or_default();
+                match raw.parse() {
+                    Ok(v) => args.max_loss_ratio = Some(v),
+                    Err(_) => {
+                        eprintln!("--max-loss-ratio: not a number: '{raw}'");
                         std::process::exit(2);
                     }
                 }
@@ -212,7 +225,7 @@ fn main() {
                 "train:    ees train --config FILE [--scenario {}] [--ledger OUT.json]",
                 ees::train::scenarios::NAMES.join("|")
             );
-            eprintln!("                    [--max-final-loss X] [--assert-improves]");
+            eprintln!("                    [--max-final-loss X] [--max-loss-ratio R] [--assert-improves]");
             std::process::exit(0);
         }
         other => {
@@ -284,6 +297,27 @@ fn run_train(args: &Args) -> String {
         let improved = terminal < first;
         if !improved {
             failures.push(format!("final loss {terminal} did not improve on epoch 0 ({first})"));
+        }
+    }
+    if let Some(ratio) = args.max_loss_ratio {
+        // Relative improvement gate on 5-epoch window means (the same
+        // smoothing as the golden curves in rust/tests/trainer.rs, which
+        // this band is derived from): terminal window <= ratio x first
+        // window.
+        let hist = &run.log.history;
+        let w = hist.len().min(5);
+        if hist.is_empty() {
+            failures.push("no epochs ran — cannot evaluate --max-loss-ratio".to_string());
+        } else {
+            let first: f64 = hist[..w].iter().map(|m| m.loss).sum::<f64>() / w as f64;
+            let last: f64 = hist[hist.len() - w..].iter().map(|m| m.loss).sum::<f64>() / w as f64;
+            // NaN-safe: a non-finite window must fail the gate too.
+            let ok = last <= ratio * first;
+            if !ok {
+                failures.push(format!(
+                    "terminal loss window {last} above {ratio} x first window {first}"
+                ));
+            }
         }
     }
     if !failures.is_empty() {

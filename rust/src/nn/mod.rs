@@ -160,6 +160,13 @@ pub struct Workspace {
     post: Vec<f64>,
     /// Backward delta buffer (max layer width ×2).
     delta: Vec<f64>,
+    /// Lane-major pre-activations (z_l component-major × lanes) for the
+    /// lane-blocked forward ([`Mlp::forward_lanes`]).
+    pre_l: Vec<f64>,
+    /// Lane-major post-activations including the input block.
+    post_l: Vec<f64>,
+    /// Lane-major backward delta block (max layer width × lanes × 2).
+    delta_l: Vec<f64>,
 }
 
 impl Mlp {
@@ -229,6 +236,21 @@ impl Mlp {
         }
         if ws.delta.len() < 2 * maxw {
             ws.delta.resize(2 * maxw, 0.0);
+        }
+    }
+
+    fn ensure_ws_lanes(&self, ws: &mut Workspace, lanes: usize) {
+        let total_pre: usize = self.sizes[1..].iter().sum();
+        let total_post: usize = self.sizes.iter().sum();
+        let maxw = *self.sizes.iter().max().unwrap();
+        if ws.pre_l.len() < total_pre * lanes {
+            ws.pre_l.resize(total_pre * lanes, 0.0);
+        }
+        if ws.post_l.len() < total_post * lanes {
+            ws.post_l.resize(total_post * lanes, 0.0);
+        }
+        if ws.delta_l.len() < 2 * maxw * lanes {
+            ws.delta_l.resize(2 * maxw * lanes, 0.0);
         }
     }
 
@@ -367,6 +389,173 @@ impl Mlp {
         }
         let _ = x;
     }
+
+    /// Lane-blocked forward over a structure-of-arrays input block: `x` is
+    /// `in_dim × lanes` lane-major (lane values of one component
+    /// consecutive), `out` is `out_dim × lanes`. Each layer is one
+    /// [`crate::linalg::matmul_lanes`] — a blocked GEMM instead of `lanes`
+    /// separate GEMVs — whose per-lane reduction order is exactly the
+    /// [`dot`] kernel of the scalar [`Self::forward`], so lane `l` of the
+    /// output is **bitwise-identical** to `forward` on the gathered lane.
+    pub fn forward_lanes(&self, x: &[f64], out: &mut [f64], lanes: usize, ws: &mut Workspace) {
+        self.ensure_ws_lanes(ws, lanes);
+        debug_assert_eq!(x.len(), self.in_dim() * lanes);
+        debug_assert_eq!(out.len(), self.out_dim() * lanes);
+        let l_count = self.layer_count();
+        ws.post_l[..x.len()].copy_from_slice(x);
+        let mut p_off = 0;
+        let mut a_off = 0;
+        let mut z_off = 0;
+        for l in 0..l_count {
+            let (nin, nout) = (self.sizes[l], self.sizes[l + 1]);
+            let w = &self.params[p_off..p_off + nout * nin];
+            let b = &self.params[p_off + nout * nin..p_off + nout * nin + nout];
+            let act = if l + 1 == l_count {
+                self.final_act
+            } else {
+                self.act
+            };
+            crate::linalg::matmul_lanes(
+                w,
+                &ws.post_l[a_off * lanes..(a_off + nin) * lanes],
+                &mut ws.pre_l[z_off * lanes..(z_off + nout) * lanes],
+                nout,
+                nin,
+                lanes,
+            );
+            // Bias + activation, in the scalar path's order: acc = b[i] +
+            // dot(...), then act.apply(acc).
+            for i in 0..nout {
+                let bi = b[i];
+                let prow = &mut ws.pre_l[(z_off + i) * lanes..(z_off + i + 1) * lanes];
+                let arow =
+                    &mut ws.post_l[(a_off + nin + i) * lanes..(a_off + nin + i + 1) * lanes];
+                for (p, a) in prow.iter_mut().zip(arow.iter_mut()) {
+                    let acc = bi + *p;
+                    *p = acc;
+                    *a = act.apply(acc);
+                }
+            }
+            p_off += nout * nin + nout;
+            a_off += nin;
+            z_off += nout;
+        }
+        let last = &ws.post_l[a_off * lanes..(a_off + self.out_dim()) * lanes];
+        for (o, v) in out.iter_mut().zip(last.iter()) {
+            *o = v * self.out_scale;
+        }
+    }
+
+    /// Lane-blocked reverse mode: assumes [`Self::forward_lanes`] was just
+    /// called with the same `x`/`lanes`/`ws`. `cot` and `d_x` are
+    /// lane-major blocks (`out_dim × lanes` / `in_dim × lanes`, `d_x`
+    /// accumulated `+=`). Lane `l`'s parameter cotangent accumulates into
+    /// `d_params[l * stride + offset ..][..num_params]` — the
+    /// lane-contiguous layout the batch engine's per-sample gradient
+    /// reduction needs, with `offset`/`stride` letting a multi-net model
+    /// (drift + diffusion) interleave its nets per lane. Per lane, every
+    /// accumulation runs in exactly the scalar [`Self::vjp`] order
+    /// (including its skip of zero deltas), so the results are
+    /// bitwise-identical to the per-sample path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn vjp_lanes(
+        &self,
+        x: &[f64],
+        cot: &[f64],
+        d_x: &mut [f64],
+        d_params: &mut [f64],
+        offset: usize,
+        stride: usize,
+        lanes: usize,
+        ws: &mut Workspace,
+    ) {
+        let l_count = self.layer_count();
+        let np = self.params.len();
+        debug_assert!(offset + np <= stride && (lanes - 1) * stride + offset + np <= d_params.len());
+        let total_pre: usize = self.sizes[1..].iter().sum();
+        let total_post: usize = self.sizes.iter().sum();
+        let maxw = *self.sizes.iter().max().unwrap();
+        let (delta_buf, next_buf) = ws.delta_l.split_at_mut(maxw * lanes);
+        // Seed: delta = cot · out_scale · act'(z_last), lane-major.
+        let nout_last = self.out_dim();
+        let z_last = total_pre - nout_last;
+        for i in 0..nout_last {
+            let zrow = &ws.pre_l[(z_last + i) * lanes..(z_last + i + 1) * lanes];
+            let crow = &cot[i * lanes..(i + 1) * lanes];
+            let drow = &mut delta_buf[i * lanes..(i + 1) * lanes];
+            for l in 0..lanes {
+                drow[l] = crow[l] * self.out_scale * self.final_act.deriv(zrow[l]);
+            }
+        }
+        // Reverse walk with running offsets (no per-call offset Vecs: the
+        // lane backprop stays allocation-free).
+        let mut p_off = np;
+        let mut a_off = total_post - self.sizes[l_count];
+        let mut z_off = total_pre;
+        for l in (0..l_count).rev() {
+            let (nin, nout) = (self.sizes[l], self.sizes[l + 1]);
+            p_off -= nout * nin + nout;
+            a_off -= nin;
+            z_off -= nout;
+            let w = &self.params[p_off..p_off + nout * nin];
+            // Parameter grads, one contiguous per-lane slice at a time (the
+            // scalar path's (i, j) order within each lane).
+            for lane in 0..lanes {
+                let base = lane * stride + offset + p_off;
+                let (dw, db) = d_params[base..base + nout * nin + nout].split_at_mut(nout * nin);
+                for i in 0..nout {
+                    let di = delta_buf[i * lanes + lane];
+                    if di == 0.0 {
+                        continue;
+                    }
+                    let row = &mut dw[i * nin..(i + 1) * nin];
+                    for (j, g) in row.iter_mut().enumerate() {
+                        *g += di * ws.post_l[(a_off + j) * lanes + lane];
+                    }
+                }
+                for (i, g) in db.iter_mut().enumerate() {
+                    *g += delta_buf[i * lanes + lane];
+                }
+            }
+            // Input cotangent of this layer: Wᵀ delta, lane-blocked with the
+            // scalar path's per-i zero skip replicated per lane.
+            next_buf[..nin * lanes].fill(0.0);
+            for i in 0..nout {
+                let row = &w[i * nin..(i + 1) * nin];
+                let drow = &delta_buf[i * lanes..(i + 1) * lanes];
+                for (j, wij) in row.iter().enumerate() {
+                    let nrow = &mut next_buf[j * lanes..(j + 1) * lanes];
+                    for (n, d) in nrow.iter_mut().zip(drow.iter()) {
+                        if *d != 0.0 {
+                            *n += wij * d;
+                        }
+                    }
+                }
+            }
+            if l == 0 {
+                for (dxj, nj) in d_x.iter_mut().zip(next_buf[..nin * lanes].iter()) {
+                    *dxj += nj;
+                }
+            } else {
+                let act = if l - 1 + 1 == l_count {
+                    self.final_act
+                } else {
+                    self.act
+                };
+                let nprev = self.sizes[l];
+                let z_prev = z_off - nprev;
+                for j in 0..nprev {
+                    let zrow = &ws.pre_l[(z_prev + j) * lanes..(z_prev + j + 1) * lanes];
+                    let nrow = &next_buf[j * lanes..(j + 1) * lanes];
+                    let drow = &mut delta_buf[j * lanes..(j + 1) * lanes];
+                    for l2 in 0..lanes {
+                        drow[l2] = nrow[l2] * act.deriv(zrow[l2]);
+                    }
+                }
+            }
+        }
+        let _ = x;
+    }
 }
 
 #[cfg(test)]
@@ -458,6 +647,79 @@ mod tests {
                 "param {k}: fd {fd} vs {}",
                 d_p[k]
             );
+        }
+    }
+
+    /// The lane-blocked forward/backward must match the scalar path BITWISE
+    /// per lane — the contract every lane-stepping layer above builds on.
+    #[test]
+    fn lanes_match_scalar_path_bitwise() {
+        use crate::linalg::{lane_gather, lane_scatter};
+        let mut rng = Pcg64::new(21);
+        let mlp = Mlp::new(
+            vec![3, 7, 5, 2],
+            Activation::LipSwish,
+            Activation::Softplus,
+            &mut rng,
+        )
+        .with_out_scale(0.2);
+        let np = mlp.num_params();
+        for lanes in [1usize, 2, 5, 8] {
+            // Lane-major input/cotangent blocks from per-lane vectors.
+            let mut xs = Vec::new();
+            let mut cots = Vec::new();
+            for l in 0..lanes {
+                let mut x = vec![0.0; 3];
+                let mut c = vec![0.0; 2];
+                let mut r = Pcg64::new(100 + l as u64);
+                r.fill_normal(&mut x);
+                r.fill_normal(&mut c);
+                xs.push(x);
+                cots.push(c);
+            }
+            let mut x_block = vec![0.0; 3 * lanes];
+            let mut c_block = vec![0.0; 2 * lanes];
+            for l in 0..lanes {
+                lane_scatter(&xs[l], l, lanes, &mut x_block);
+                lane_scatter(&cots[l], l, lanes, &mut c_block);
+            }
+            let mut ws = Workspace::default();
+            let mut out_block = vec![0.0; 2 * lanes];
+            mlp.forward_lanes(&x_block, &mut out_block, lanes, &mut ws);
+            let mut dx_block = vec![0.0; 3 * lanes];
+            let mut dp_lanes = vec![0.0; lanes * np];
+            mlp.vjp_lanes(
+                &x_block,
+                &c_block,
+                &mut dx_block,
+                &mut dp_lanes,
+                0,
+                np,
+                lanes,
+                &mut ws,
+            );
+            for l in 0..lanes {
+                // Scalar reference on the gathered lane.
+                let mut sws = Workspace::default();
+                let mut out = vec![0.0; 2];
+                mlp.forward(&xs[l], &mut out, &mut sws);
+                let mut got = vec![0.0; 2];
+                lane_gather(&out_block, l, lanes, &mut got);
+                for (a, b) in got.iter().zip(out.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "fwd lane {l}/{lanes}");
+                }
+                let mut d_x = vec![0.0; 3];
+                let mut d_p = vec![0.0; np];
+                mlp.vjp(&xs[l], &cots[l], &mut d_x, &mut d_p, &mut sws);
+                let mut got_dx = vec![0.0; 3];
+                lane_gather(&dx_block, l, lanes, &mut got_dx);
+                for (a, b) in got_dx.iter().zip(d_x.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "d_x lane {l}/{lanes}");
+                }
+                for (a, b) in dp_lanes[l * np..(l + 1) * np].iter().zip(d_p.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "d_p lane {l}/{lanes}");
+                }
+            }
         }
     }
 

@@ -22,6 +22,11 @@ struct Scratch {
     a: Vec<f64>,
     b: Vec<f64>,
     c: Vec<f64>,
+    /// Lane-major (component × lanes) counterparts for the lane-blocked
+    /// evaluation path.
+    a_l: Vec<f64>,
+    b_l: Vec<f64>,
+    c_l: Vec<f64>,
 }
 
 impl Scratch {
@@ -30,6 +35,14 @@ impl Scratch {
             self.a.resize(n, 0.0);
             self.b.resize(n, 0.0);
             self.c.resize(n, 0.0);
+        }
+    }
+
+    fn ensure_lanes(&mut self, n: usize, lanes: usize) {
+        if self.a_l.len() < n * lanes {
+            self.a_l.resize(n * lanes, 0.0);
+            self.b_l.resize(n * lanes, 0.0);
+            self.c_l.resize(n * lanes, 0.0);
         }
     }
 }
@@ -112,6 +125,51 @@ impl VectorField for NeuralSde {
             }
         })
     }
+
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+
+    /// Lane-blocked evaluation: each MLP layer runs as one
+    /// [`crate::linalg::matmul_lanes`] over the whole lane group instead of
+    /// `lanes` separate matvecs — the big batch-throughput lever — while
+    /// every per-lane float op keeps the scalar path's order, so lane `l`
+    /// of the output is bitwise-identical to [`VectorField::combined`] on
+    /// the gathered lane.
+    fn combined_lanes(
+        &self,
+        t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        out: &mut [f64],
+        lanes: usize,
+        _ws: &mut crate::memory::StepWorkspace,
+    ) {
+        self.ws.with(|sc| {
+            sc.ensure_lanes(self.dim + 1, lanes);
+            self.drift.forward_lanes(y, out, lanes, &mut sc.ws);
+            for o in out.iter_mut() {
+                *o *= h;
+            }
+            let din_len = if self.time_only_diffusion {
+                sc.a_l[..lanes].fill(t);
+                1
+            } else {
+                sc.a_l[..self.dim * lanes].copy_from_slice(y);
+                self.dim
+            };
+            let (din, sigma, ws) = (
+                &sc.a_l[..din_len * lanes],
+                &mut sc.b_l[..self.dim * lanes],
+                &mut sc.ws,
+            );
+            self.diffusion.forward_lanes(din, sigma, lanes, ws);
+            for (o, (s, d)) in out.iter_mut().zip(sigma.iter().zip(dw.iter())) {
+                *o += s * d;
+            }
+        })
+    }
 }
 
 impl DiffVectorField for NeuralSde {
@@ -162,6 +220,80 @@ impl DiffVectorField for NeuralSde {
             } else {
                 let (din, cot_dw, ws) = (&sc.a[..self.dim], &sc.c[..self.dim], &mut sc.ws);
                 self.diffusion.vjp(din, cot_dw, d_y, &mut d_theta[nd..], ws);
+            }
+        })
+    }
+
+    /// Lane-blocked VJP: both nets backpropagate the whole lane group
+    /// through [`crate::nn::Mlp::vjp_lanes`] (blocked GEMM-shaped sweeps),
+    /// with lane `l`'s parameter cotangent landing in
+    /// `d_theta[l * num_params() ..]` — drift grads first, diffusion grads
+    /// at offset `nd`, exactly the per-sample flat layout per lane.
+    fn vjp_lanes(
+        &self,
+        t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        _ws: &mut crate::memory::StepWorkspace,
+    ) {
+        let np = self.num_params();
+        self.ws.with(|sc| {
+            sc.ensure_lanes(self.dim + 1, lanes);
+            let nd = self.drift.num_params();
+            // Drift part: cot·h through the drift net, lane-blocked.
+            for (c, cv) in sc.c_l[..self.dim * lanes].iter_mut().zip(cot.iter()) {
+                *c = cv * h;
+            }
+            {
+                let (cot_h, out, ws) = (
+                    &sc.c_l[..self.dim * lanes],
+                    &mut sc.b_l[..self.dim * lanes],
+                    &mut sc.ws,
+                );
+                self.drift.forward_lanes(y, out, lanes, ws);
+                self.drift.vjp_lanes(y, cot_h, d_y, d_theta, 0, np, lanes, ws);
+            }
+            // Diffusion part: cot_i · dw_i through the diffusion net.
+            let din_len = if self.time_only_diffusion {
+                sc.a_l[..lanes].fill(t);
+                1
+            } else {
+                sc.a_l[..self.dim * lanes].copy_from_slice(y);
+                self.dim
+            };
+            for (c, (cv, dv)) in sc.c_l[..self.dim * lanes]
+                .iter_mut()
+                .zip(cot.iter().zip(dw.iter()))
+            {
+                *c = cv * dv;
+            }
+            {
+                let (din, sigma, ws) = (
+                    &sc.a_l[..din_len * lanes],
+                    &mut sc.b_l[..self.dim * lanes],
+                    &mut sc.ws,
+                );
+                self.diffusion.forward_lanes(din, sigma, lanes, ws);
+            }
+            if self.time_only_diffusion {
+                let mut d_t = [0.0f64; crate::linalg::MAX_LANES];
+                let (din, cot_dw, ws) =
+                    (&sc.a_l[..lanes], &sc.c_l[..self.dim * lanes], &mut sc.ws);
+                self.diffusion
+                    .vjp_lanes(din, cot_dw, &mut d_t[..lanes], d_theta, nd, np, lanes, ws);
+            } else {
+                let (din, cot_dw, ws) = (
+                    &sc.a_l[..self.dim * lanes],
+                    &sc.c_l[..self.dim * lanes],
+                    &mut sc.ws,
+                );
+                self.diffusion
+                    .vjp_lanes(din, cot_dw, d_y, d_theta, nd, np, lanes, ws);
             }
         })
     }

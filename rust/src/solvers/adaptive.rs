@@ -107,6 +107,58 @@ impl EmbeddedEes25 {
         ws.put(delta);
         err
     }
+
+    /// Lane-blocked fixed-grid arm of the embedded scheme: advance a whole
+    /// lane group one step (`y` is a `dim × lanes` lane-major block, `dw`
+    /// `noise_dim × lanes`) and write each lane's embedded ∞-norm error
+    /// estimate into `err[..lanes]`. Every register is a lane block and the
+    /// per-element arithmetic follows [`Self::step_embedded_ws`] exactly,
+    /// so lane `l`'s state and error are bitwise-identical to the
+    /// per-sample step. (The accept/reject *loop* stays per-sample: lanes
+    /// share one `h`, and accept/reject histories are per-path.)
+    pub fn step_embedded_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        err: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let dim = vf.dim();
+        let blk = dim * lanes;
+        let mut delta = ws.take(blk);
+        let mut k = ws.take(blk);
+        let mut stage3 = ws.take(blk);
+        for l in 0..3 {
+            if l == 2 {
+                stage3.copy_from_slice(y);
+            }
+            let tl = t + self.c[l] * h;
+            vf.combined_lanes(tl, y, h, dw, &mut k, lanes, ws);
+            for (d, kd) in delta.iter_mut().zip(k.iter()) {
+                *d = self.a[l] * *d + kd;
+            }
+            for (yd, d) in y.iter_mut().zip(delta.iter()) {
+                *yd += self.b[l] * d;
+            }
+        }
+        let frac = 1.0 - self.c[2];
+        vf.combined_lanes(t + self.c[2] * h, &stage3, h, dw, &mut k, lanes, ws);
+        err[..lanes].fill(0.0);
+        for d in 0..dim {
+            for (l, e) in err.iter_mut().enumerate().take(lanes) {
+                let i = d * lanes + l;
+                let yhat = stage3[i] + frac * k[i];
+                *e = e.max((y[i] - yhat).abs());
+            }
+        }
+        ws.put(stage3);
+        ws.put(k);
+        ws.put(delta);
+    }
 }
 
 /// Classic I-controller with safety factor for accept/reject stepping.

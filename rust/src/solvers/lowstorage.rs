@@ -100,6 +100,41 @@ impl LowStorageStepper {
         ws.put(k);
         ws.put(delta);
     }
+
+    /// Lane-blocked [`Self::apply`]: the two Williamson registers become
+    /// lane blocks (`dim × lanes`), each stage costs one
+    /// [`crate::vf::VectorField::combined_lanes`], and the register updates
+    /// are elementwise in the scalar order — lane `l` is bitwise-identical
+    /// to the per-sample step.
+    fn apply_lanes(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let dim = vf.dim();
+        let s = self.coeffs.a.len();
+        let mut delta = ws.take(dim * lanes);
+        let mut k = ws.take(dim * lanes);
+        for l in 0..s {
+            let tl = t + self.tab.c[l] * h;
+            vf.combined_lanes(tl, y, h, dw, &mut k, lanes, ws);
+            let al = self.coeffs.a[l];
+            for (d, kd) in delta.iter_mut().zip(k.iter()) {
+                *d = al * *d + kd;
+            }
+            let bl = self.coeffs.b[l];
+            for (yd, d) in y.iter_mut().zip(delta.iter()) {
+                *yd += bl * d;
+            }
+        }
+        ws.put(k);
+        ws.put(delta);
+    }
 }
 
 impl Stepper for LowStorageStepper {
@@ -159,6 +194,55 @@ impl Stepper for LowStorageStepper {
         // state_prev). Gradient identity with the 2N forward map is
         // guaranteed by the unrolling identity (tested).
         super::rk::rk_backprop_step_ws(&self.tab, vf, t, h, dw, state_prev, lambda, d_theta, ws);
+    }
+
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+
+    fn step_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        self.apply_lanes(vf, t, h, dw, state, lanes, ws);
+    }
+
+    fn step_back_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let neg = ws.take_neg(dw);
+        self.apply_lanes(vf, t + h, -h, &neg, state, lanes, ws);
+        ws.put(neg);
+    }
+
+    fn backprop_step_lanes_ws(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        super::rk::rk_backprop_step_lanes_ws(
+            &self.tab, vf, t, h, dw, state_prev, lambda, d_theta, lanes, ws,
+        );
     }
 }
 

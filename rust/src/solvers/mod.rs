@@ -155,6 +155,123 @@ pub trait Stepper: Send + Sync {
         d_theta: &mut [f64],
         ws: &mut StepWorkspace,
     );
+
+    /// Whether this scheme overrides the `*_lanes_ws` entry points with a
+    /// genuinely lane-blocked implementation (every stage advances the
+    /// whole lane group, turning per-sample matvecs into blocked matmuls).
+    /// The batch engine only groups samples into lanes when this is true —
+    /// the default per-lane fallbacks below are bitwise-correct but add
+    /// gather/scatter work with no blocking win.
+    fn lane_blocked(&self) -> bool {
+        false
+    }
+
+    /// Lane-blocked [`Self::step_ws`]: advance `lanes` samples at once.
+    /// `state` is a lane-major block (`state_size × lanes`, lane values of
+    /// one state component consecutive); `dw` is `noise_dim × lanes`. Every
+    /// lane shares one `(t, h)` — the lane engine groups samples stepping
+    /// the same fixed grid — and lane `l`'s result is **bitwise-identical**
+    /// to [`Self::step_ws`] on the gathered lane (pinned by
+    /// `rust/tests/determinism.rs`).
+    fn step_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        lane_fallback(state, dw, lanes, ws, |s, d, ws| {
+            self.step_ws(vf, t, h, d, s, ws)
+        });
+    }
+
+    /// Lane-blocked [`Self::step_back_ws`] (same block conventions as
+    /// [`Self::step_lanes_ws`]).
+    fn step_back_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        lane_fallback(state, dw, lanes, ws, |s, d, ws| {
+            self.step_back_ws(vf, t, h, d, s, ws)
+        });
+    }
+
+    /// Lane-blocked [`Self::backprop_step_ws`]: `state_prev` and `lambda`
+    /// are lane-major blocks; `d_theta` is lane-contiguous (lane `l`
+    /// accumulates into `d_theta[l * vf.num_params() ..]`), preserving the
+    /// per-sample accumulation order within each lane so the batch
+    /// engine's fixed-order reduction stays bitwise lane-count-invariant.
+    #[allow(clippy::too_many_arguments)]
+    fn backprop_step_lanes_ws(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let np = vf.num_params();
+        let state_len = state_prev.len() / lanes;
+        let mut sl = ws.take(state_len);
+        let mut dwl = ws.take(dw.len() / lanes);
+        let mut ll = ws.take(lambda.len() / lanes);
+        for l in 0..lanes {
+            crate::linalg::lane_gather(state_prev, l, lanes, &mut sl);
+            crate::linalg::lane_gather(dw, l, lanes, &mut dwl);
+            crate::linalg::lane_gather(lambda, l, lanes, &mut ll);
+            self.backprop_step_ws(
+                vf,
+                t,
+                h,
+                &dwl,
+                &sl,
+                &mut ll,
+                &mut d_theta[l * np..(l + 1) * np],
+                ws,
+            );
+            crate::linalg::lane_scatter(&ll, l, lanes, lambda);
+        }
+        ws.put(ll);
+        ws.put(dwl);
+        ws.put(sl);
+    }
+}
+
+/// Shared per-lane fallback for the default `step_lanes_ws` /
+/// `step_back_lanes_ws`: gather each lane's state and noise into contiguous
+/// scratch, run the per-sample entry point, scatter back — bitwise-equal to
+/// ungrouped stepping by construction.
+fn lane_fallback(
+    state: &mut [f64],
+    dw: &[f64],
+    lanes: usize,
+    ws: &mut StepWorkspace,
+    mut f: impl FnMut(&mut [f64], &[f64], &mut StepWorkspace),
+) {
+    let state_len = state.len() / lanes;
+    let mut sl = ws.take(state_len);
+    let mut dwl = ws.take(dw.len() / lanes);
+    for l in 0..lanes {
+        crate::linalg::lane_gather(state, l, lanes, &mut sl);
+        crate::linalg::lane_gather(dw, l, lanes, &mut dwl);
+        f(&mut sl, &dwl, ws);
+        crate::linalg::lane_scatter(&sl, l, lanes, state);
+    }
+    ws.put(dwl);
+    ws.put(sl);
 }
 
 /// One-step method on a homogeneous space.

@@ -56,6 +56,38 @@ impl ReversibleHeun {
         ws.put(f_yh2);
         ws.put(f_yh);
     }
+
+    /// Lane-blocked [`Self::apply`]: the (y, ŷ) registers become lane-major
+    /// blocks and each of the two evaluations runs over the whole group
+    /// through [`crate::vf::VectorField::combined_lanes`]; the register
+    /// arithmetic is elementwise in the scalar order, so lane `l` is
+    /// bitwise-identical to the per-sample step.
+    fn apply_lanes(
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let blk = vf.dim() * lanes;
+        let (y, yh) = state.split_at_mut(blk);
+        let mut f_yh = ws.take(blk);
+        vf.combined_lanes(t, yh, h, dw, &mut f_yh, lanes, ws);
+        // ŷ' = 2y − ŷ + F(ŷ)
+        for i in 0..blk {
+            yh[i] = 2.0 * y[i] - yh[i] + f_yh[i];
+        }
+        let mut f_yh2 = ws.take(blk);
+        vf.combined_lanes(t + h, yh, h, dw, &mut f_yh2, lanes, ws);
+        // y' = y + ½(F(ŷ) + F(ŷ'))
+        for i in 0..blk {
+            y[i] += 0.5 * (f_yh[i] + f_yh2[i]);
+        }
+        ws.put(f_yh2);
+        ws.put(f_yh);
+    }
 }
 
 impl Stepper for ReversibleHeun {
@@ -153,6 +185,109 @@ impl Stepper for ReversibleHeun {
         vf.vjp(t, yh, h, dw, &cot, &mut d_yh, d_theta);
         for i in 0..dim {
             lambda[dim + i] = -u[i] + d_yh[i];
+        }
+        ws.put(d_yh);
+        ws.put(cot);
+        ws.put(u);
+        ws.put(lam_yh1);
+        ws.put(lam_y1);
+        ws.put(yh_next);
+        ws.put(f_yh);
+    }
+
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+
+    fn step_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        Self::apply_lanes(vf, t, h, dw, state, lanes, ws);
+    }
+
+    fn step_back_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let neg = ws.take_neg(dw);
+        Self::apply_lanes(vf, t + h, -h, &neg, state, lanes, ws);
+        ws.put(neg);
+    }
+
+    fn backprop_step_lanes_ws(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let blk = vf.dim() * lanes;
+        let (y, yh) = state_prev.split_at(blk);
+        // Recompute ŷ' (needed for the F(ŷ') VJP site), lane-blocked.
+        let mut f_yh = ws.take(blk);
+        vf.combined_lanes(t, yh, h, dw, &mut f_yh, lanes, ws);
+        let mut yh_next = ws.take(blk);
+        for i in 0..blk {
+            yh_next[i] = 2.0 * y[i] - yh[i] + f_yh[i];
+        }
+        let lam_y1 = ws.take_copy(&lambda[..blk]);
+        let lam_yh1 = ws.take_copy(&lambda[blk..]);
+        // u = λ_{ŷ'} + ½ J_F(ŷ')ᵀ λ_{y'}  (cotangent entering the ŷ' node).
+        let mut u = ws.take_copy(&lam_yh1);
+        {
+            let mut half_lam = ws.take(blk);
+            for (hl, &l) in half_lam.iter_mut().zip(lam_y1.iter()) {
+                *hl = 0.5 * l;
+            }
+            let mut d_yh_next = ws.take(blk);
+            vf.vjp_lanes(
+                t + h,
+                &yh_next,
+                h,
+                dw,
+                &half_lam,
+                &mut d_yh_next,
+                d_theta,
+                lanes,
+                ws,
+            );
+            for i in 0..blk {
+                u[i] += d_yh_next[i];
+            }
+            ws.put(d_yh_next);
+            ws.put(half_lam);
+        }
+        // λ_y = λ_{y'} + 2u.
+        for i in 0..blk {
+            lambda[i] = lam_y1[i] + 2.0 * u[i];
+        }
+        // λ_ŷ = −u + J_F(ŷ)ᵀ (u + ½ λ_{y'}).
+        let mut cot = ws.take(blk);
+        for i in 0..blk {
+            cot[i] = u[i] + 0.5 * lam_y1[i];
+        }
+        let mut d_yh = ws.take(blk);
+        vf.vjp_lanes(t, yh, h, dw, &cot, &mut d_yh, d_theta, lanes, ws);
+        for i in 0..blk {
+            lambda[blk + i] = -u[i] + d_yh[i];
         }
         ws.put(d_yh);
         ws.put(cot);

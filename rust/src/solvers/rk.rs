@@ -120,6 +120,69 @@ impl RkStepper {
         ws.put(z);
         ws.put(k);
     }
+
+    /// Lane-blocked [`Self::apply`]: one RK application over a whole lane
+    /// group. `y`/`dw` are lane-major blocks (`dim × lanes` /
+    /// `noise_dim × lanes`); the stage registers are lane blocks too, so
+    /// each stage costs one [`crate::vf::VectorField::combined_lanes`]
+    /// (a blocked matmul for MLP fields) instead of `lanes` matvecs. All
+    /// stage combinations are elementwise in the scalar path's order, so
+    /// lane `l` is bitwise-identical to [`Self::apply`] on the gathered
+    /// lane.
+    fn apply_lanes(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let s = self.tab.s;
+        let dim = vf.dim();
+        let mut k = ws.take(dim * lanes);
+        let mut z = ws.take(s * dim * lanes);
+        for i in 0..s {
+            k.copy_from_slice(y);
+            for j in 0..i {
+                let a = self.tab.a[i * s + j];
+                if a == 0.0 {
+                    continue;
+                }
+                for (kd, zd) in k
+                    .iter_mut()
+                    .zip(z[j * dim * lanes..(j + 1) * dim * lanes].iter())
+                {
+                    *kd += a * zd;
+                }
+            }
+            let ti = t + self.tab.c[i] * h;
+            vf.combined_lanes(
+                ti,
+                &k,
+                h,
+                dw,
+                &mut z[i * dim * lanes..(i + 1) * dim * lanes],
+                lanes,
+                ws,
+            );
+        }
+        for i in 0..s {
+            let b = self.tab.b[i];
+            if b == 0.0 {
+                continue;
+            }
+            for (yd, zd) in y
+                .iter_mut()
+                .zip(z[i * dim * lanes..(i + 1) * dim * lanes].iter())
+            {
+                *yd += b * zd;
+            }
+        }
+        ws.put(z);
+        ws.put(k);
+    }
 }
 
 /// Algorithm 1 for an explicit tableau, shared by [`RkStepper`] and the 2N
@@ -200,6 +263,102 @@ pub(crate) fn rk_backprop_step_ws(
     ws.put(k);
 }
 
+/// Lane-blocked Algorithm 1 — [`rk_backprop_step_ws`] over a whole lane
+/// group, shared by [`RkStepper`] and the 2N low-storage realisation.
+/// `state_prev`/`lambda` are lane-major blocks; `d_theta` is
+/// lane-contiguous (lane `l` at `[l * vf.num_params() ..]`). Stage
+/// recomputation runs lane-blocked (one `combined_lanes` per stage), the
+/// reverse sweep's per-element arithmetic follows the scalar path's order
+/// exactly, and the VJPs land per lane — so each lane's cotangents and
+/// parameter gradients are bitwise-identical to the per-sample sweep.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn rk_backprop_step_lanes_ws(
+    tab: &Tableau,
+    vf: &dyn DiffVectorField,
+    t: f64,
+    h: f64,
+    dw: &[f64],
+    state_prev: &[f64],
+    lambda: &mut [f64],
+    d_theta: &mut [f64],
+    lanes: usize,
+    ws: &mut StepWorkspace,
+) {
+    let s = tab.s;
+    let dim = vf.dim();
+    let blk = dim * lanes;
+    // Recompute stages from the step-start lane block.
+    let mut k = ws.take(s * blk);
+    let mut z = ws.take(s * blk);
+    for i in 0..s {
+        let (kk, _) = k.split_at_mut((i + 1) * blk);
+        let ki = &mut kk[i * blk..];
+        ki.copy_from_slice(state_prev);
+        for j in 0..i {
+            let a = tab.a[i * s + j];
+            if a == 0.0 {
+                continue;
+            }
+            for (kd, zd) in ki.iter_mut().zip(z[j * blk..(j + 1) * blk].iter()) {
+                *kd += a * zd;
+            }
+        }
+        let ti = t + tab.c[i] * h;
+        vf.combined_lanes(
+            ti,
+            &k[i * blk..(i + 1) * blk],
+            h,
+            dw,
+            &mut z[i * blk..(i + 1) * blk],
+            lanes,
+            ws,
+        );
+    }
+    // Reverse sweep, lane-blocked: the (b_i λ + Σ a_ji ∂L/∂k_j) combination
+    // is elementwise per (component, lane) in the scalar order.
+    let mut dk = ws.take(s * blk);
+    let mut dz = ws.take(blk);
+    for i in (0..s).rev() {
+        for d in 0..dim {
+            for l in 0..lanes {
+                let mut acc = tab.b[i] * lambda[d * lanes + l];
+                for j in i + 1..s {
+                    let a = tab.a[j * s + i];
+                    if a != 0.0 {
+                        acc += a * dk[j * blk + d * lanes + l];
+                    }
+                }
+                dz[d * lanes + l] = acc;
+            }
+        }
+        let ti = t + tab.c[i] * h;
+        vf.vjp_lanes(
+            ti,
+            &k[i * blk..(i + 1) * blk],
+            h,
+            dw,
+            &dz,
+            &mut dk[i * blk..(i + 1) * blk],
+            d_theta,
+            lanes,
+            ws,
+        );
+    }
+    for d in 0..dim {
+        for l in 0..lanes {
+            let mut acc = 0.0;
+            for i in 0..s {
+                acc += dk[i * blk + d * lanes + l];
+            }
+            lambda[d * lanes + l] += acc;
+        }
+    }
+    ws.put(dz);
+    ws.put(dk);
+    ws.put(z);
+    ws.put(k);
+}
+
 impl Stepper for RkStepper {
     fn props(&self) -> StepperProps {
         StepperProps {
@@ -253,6 +412,55 @@ impl Stepper for RkStepper {
         ws: &mut StepWorkspace,
     ) {
         rk_backprop_step_ws(&self.tab, vf, t, h, dw, state_prev, lambda, d_theta, ws);
+    }
+
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+
+    fn step_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        self.apply_lanes(vf, t, h, dw, state, lanes, ws);
+    }
+
+    fn step_back_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let neg = ws.take_neg(dw);
+        self.apply_lanes(vf, t + h, -h, &neg, state, lanes, ws);
+        ws.put(neg);
+    }
+
+    fn backprop_step_lanes_ws(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        rk_backprop_step_lanes_ws(
+            &self.tab, vf, t, h, dw, state_prev, lambda, d_theta, lanes, ws,
+        );
     }
 }
 

@@ -174,6 +174,14 @@ pub struct TrainConfig {
     /// [`crate::config::default_parallelism`]. Results are
     /// bitwise-identical for every value — this is a pure perf knob.
     pub parallelism: usize,
+    /// Lane-group width for the lane-blocked batch engine (how many
+    /// samples a worker steps together in SoA layout; see
+    /// [`crate::coordinator`] §Lane-blocked hot path). Defaults to
+    /// [`crate::config::default_lanes`]; like the worker count, results
+    /// are bitwise-identical at every value. Consumed by the canned
+    /// [`problems`] via [`EuclideanProblem::with_lanes`] — bespoke
+    /// [`TrainProblem`]s read it from the config they were built from.
+    pub lanes: usize,
     /// Seed policy for scenario builders: data, model init and per-epoch
     /// noise streams are all derived from this via [`Pcg64::split`].
     pub seed: u64,
@@ -202,6 +210,7 @@ impl TrainConfig {
             batch: 32,
             accum: 1,
             parallelism: crate::config::default_parallelism(),
+            lanes: crate::config::default_lanes(),
             seed: 0,
             epoch_offset: 0,
             stop_on_non_finite: false,
@@ -228,6 +237,11 @@ impl TrainConfig {
 
     pub fn with_parallelism(mut self, parallelism: usize) -> Self {
         self.parallelism = parallelism.max(1);
+        self
+    }
+
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes.clamp(1, crate::linalg::MAX_LANES);
         self
     }
 
@@ -273,7 +287,8 @@ impl TrainConfig {
     /// ```
     ///
     /// The worker count comes from `[exec] parallelism`
-    /// ([`Config::parallelism`]).
+    /// ([`Config::parallelism`]) and the lane-group width from
+    /// `[exec] lanes` ([`Config::lanes`]) — both pure perf knobs.
     pub fn from_config(cfg: &Config) -> crate::Result<Self> {
         let epochs = cfg.usize_or("train.epochs", 40);
         let lr = cfg.f64_or("train.lr", 1e-2);
@@ -310,6 +325,7 @@ impl TrainConfig {
             .with_batch(cfg.usize_or("train.batch", 64))
             .with_accum(cfg.usize_or("train.accum", 1))
             .with_parallelism(cfg.parallelism())
+            .with_lanes(cfg.lanes())
             .with_seed(cfg.usize_or("train.seed", 0) as u64)
             .with_epoch_offset(epoch_offset)
             .with_schedule(schedule)
@@ -1152,6 +1168,9 @@ parallelism = 2
         assert_eq!(tc.epochs, 12);
         assert_eq!(tc.batch, 8);
         assert_eq!(tc.parallelism, 2);
+        assert_eq!(tc.lanes, crate::config::default_lanes(), "no [exec] lanes key");
+        let laned = Config::parse("[train]\nepochs = 1\n[exec]\nlanes = 4").unwrap();
+        assert_eq!(TrainConfig::from_config(&laned).unwrap().lanes, 4);
         assert_eq!(tc.seed, 9);
         assert!(tc.stop_on_non_finite);
         assert_eq!(tc.schedule, LrSchedule::Cosine { warmup: 3, total: 12 });

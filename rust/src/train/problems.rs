@@ -12,7 +12,7 @@
 
 use super::TrainProblem;
 use crate::adjoint::AdjointMethod;
-use crate::coordinator::{batch_grad_euclidean_pool, batch_grad_manifold_pool};
+use crate::coordinator::{batch_grad_euclidean_pool_lanes, batch_grad_manifold_pool};
 use crate::lie::HomogeneousSpace;
 use crate::losses::BatchLoss;
 use crate::memory::WorkspacePool;
@@ -68,6 +68,7 @@ where
     obs: Vec<usize>,
     loss: &'a dyn BatchLoss,
     pool: WorkspacePool,
+    lanes: usize,
 }
 
 impl<'a, M, S> EuclideanProblem<'a, M, S>
@@ -91,7 +92,17 @@ where
             obs,
             loss,
             pool: WorkspacePool::new(),
+            lanes: crate::config::default_lanes(),
         }
+    }
+
+    /// Override the lane-group width of the lane-blocked batch engine
+    /// (default [`crate::config::default_lanes`]; the trainer's
+    /// [`super::TrainConfig::lanes`] is wired through here by the scenario
+    /// registry). Results are bitwise-identical at every value.
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        self.lanes = lanes.clamp(1, crate::linalg::MAX_LANES);
+        self
     }
 }
 
@@ -119,7 +130,7 @@ where
         parallelism: usize,
     ) -> (f64, Vec<f64>, usize) {
         let (y0s, paths) = (self.sampler)(rng);
-        batch_grad_euclidean_pool(
+        batch_grad_euclidean_pool_lanes(
             self.stepper,
             self.method,
             &self.model,
@@ -129,6 +140,7 @@ where
             self.loss,
             parallelism,
             &self.pool,
+            self.lanes,
         )
     }
 }

@@ -125,7 +125,8 @@ fn run_ou(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
         let paths = sample_paths_par(rng, batch, 1, steps, h, par);
         (y0s, paths)
     };
-    let mut problem = EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss);
+    let mut problem =
+        EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss).with_lanes(tc.lanes);
     Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
 }
 
@@ -169,7 +170,8 @@ fn run_gbm(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
         let paths = sample_paths_par(rng, batch, d, steps, h, par);
         (y0s, paths)
     };
-    let mut problem = EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss);
+    let mut problem =
+        EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss).with_lanes(tc.lanes);
     Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
 }
 
@@ -251,10 +253,11 @@ fn summary_table(name: &str, tc: &TrainConfig, log: &TrainLog) -> String {
         ""
     };
     format!(
-        "== ees train: scenario '{name}' ({} epochs, batch {}, parallelism {}, seed {}){status} ==\n{}\nterminal loss {} | peak adjoint mem {} f64s | {:.1}s total\n",
+        "== ees train: scenario '{name}' ({} epochs, batch {}, parallelism {}, lanes {}, seed {}){status} ==\n{}\nterminal loss {} | peak adjoint mem {} f64s | {:.1}s total\n",
         log.history.len(),
         tc.batch,
         tc.parallelism,
+        tc.lanes,
         tc.seed,
         t.render(),
         fmt(log.terminal_loss()),

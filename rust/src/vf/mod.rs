@@ -12,6 +12,9 @@
 //! analogue ξ: M → 𝔤 used by CF-EES and the other geometric integrators
 //! (Algorithm 2).
 
+use crate::linalg::{lane_gather, lane_scatter};
+use crate::memory::StepWorkspace;
+
 /// Euclidean (or flat-chart) SDE/RDE vector field.
 pub trait VectorField: Send + Sync {
     /// State dimension.
@@ -20,6 +23,51 @@ pub trait VectorField: Send + Sync {
     fn noise_dim(&self) -> usize;
     /// Combined increment: out = f(t, y)·h + g(t, y)·dw.
     fn combined(&self, t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]);
+
+    /// Whether this field overrides [`Self::combined_lanes`] (and, for
+    /// differentiable fields, `vjp_lanes`) with genuinely blocked kernels.
+    /// The batch engine only groups samples into lanes when both the
+    /// stepper and the field report true — for a field evaluated per lane
+    /// anyway, grouping adds gather/scatter traffic with no matmul win.
+    fn lane_blocked(&self) -> bool {
+        false
+    }
+
+    /// Lane-blocked [`Self::combined`]: `y` (`dim × lanes`), `dw`
+    /// (`noise_dim × lanes`) and `out` (`dim × lanes`) are lane-major
+    /// structure-of-arrays blocks sharing one `(t, h)` (the lane engine
+    /// steps a group on one fixed grid; each lane carries its own noise).
+    ///
+    /// The default gathers each lane and calls [`Self::combined`] —
+    /// bitwise-identical to per-sample stepping by construction, with
+    /// scratch from `ws` so a warm call never allocates. Models whose
+    /// evaluation is matvec-shaped (the MLP fields) override this with a
+    /// blocked kernel ([`crate::linalg::matmul_lanes`]) that keeps the
+    /// per-lane float-op order and turns the batch loop into GEMMs.
+    fn combined_lanes(
+        &self,
+        t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        out: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let mut yl = ws.take(self.dim());
+        let mut dwl = ws.take(self.noise_dim());
+        let mut ol = ws.take(self.dim());
+        for l in 0..lanes {
+            lane_gather(y, l, lanes, &mut yl);
+            lane_gather(dw, l, lanes, &mut dwl);
+            ol.fill(0.0);
+            self.combined(t, &yl, h, &dwl, &mut ol);
+            lane_scatter(&ol, l, lanes, out);
+        }
+        ws.put(ol);
+        ws.put(dwl);
+        ws.put(yl);
+    }
 }
 
 /// Differentiable vector field: supplies reverse-mode VJPs through
@@ -42,6 +90,54 @@ pub trait DiffVectorField: VectorField {
         d_y: &mut [f64],
         d_theta: &mut [f64],
     );
+
+    /// Lane-blocked [`Self::vjp`]: `y`/`dw`/`cot`/`d_y` are lane-major
+    /// blocks; `d_theta` is **lane-contiguous** — lane `l` accumulates into
+    /// `d_theta[l * num_params() ..][..num_params()]`, so the batch
+    /// engine's fixed-order per-sample gradient reduction (part of the
+    /// bitwise determinism contract) is unchanged by lane grouping.
+    ///
+    /// Default: per-lane gather → [`Self::vjp`] → scatter, bitwise-equal to
+    /// the per-sample path; MLP fields override with the blocked kernels.
+    #[allow(clippy::too_many_arguments)]
+    fn vjp_lanes(
+        &self,
+        t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let np = self.num_params();
+        let mut yl = ws.take(self.dim());
+        let mut dwl = ws.take(self.noise_dim());
+        let mut cl = ws.take(self.dim());
+        let mut dyl = ws.take(self.dim());
+        for l in 0..lanes {
+            lane_gather(y, l, lanes, &mut yl);
+            lane_gather(dw, l, lanes, &mut dwl);
+            lane_gather(cot, l, lanes, &mut cl);
+            lane_gather(d_y, l, lanes, &mut dyl);
+            self.vjp(
+                t,
+                &yl,
+                h,
+                &dwl,
+                &cl,
+                &mut dyl,
+                &mut d_theta[l * np..(l + 1) * np],
+            );
+            lane_scatter(&dyl, l, lanes, d_y);
+        }
+        ws.put(dyl);
+        ws.put(cl);
+        ws.put(dwl);
+        ws.put(yl);
+    }
 }
 
 /// Lie-algebra-valued field ξ: M → 𝔤 for homogeneous-space integrators.

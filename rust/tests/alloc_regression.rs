@@ -333,6 +333,12 @@ fn all_nine_solvers_zero_allocs_per_step_after_warmup() {
         true,
     );
 
+    // Lane-blocked stepping: 0 allocs/step once the workspace (and the
+    // model's scratch pool) is warm — forward, reverse and the whole
+    // lane-blocked adjoint sweep, for both an analytic field (per-lane
+    // fallback kernels) and an MLP field (blocked matmul kernels).
+    lane_stepping_zero_alloc();
+
     // And the linalg `_into` kernels with a warm workspace.
     linalg_into_kernels_zero_alloc();
 
@@ -461,6 +467,128 @@ fn trainer_epoch_allocs_constant() {
             d,
             deltas[1]
         );
+    }
+}
+
+/// The lane-blocked hot path's allocation contract: after a one-step
+/// warm-up, `step_lanes_ws` / `step_back_lanes_ws` /
+/// `backprop_step_lanes_ws` perform ZERO heap allocations per step. Pinned
+/// for the three lane-blocked Euclidean families on an analytic field, for
+/// the MLP-backed [`ees::nn::neural_sde::NeuralSde`] (whose lane kernels
+/// route through `matmul_lanes` and the pooled model scratch), and for the
+/// embedded scheme's fixed-grid lane arm.
+fn lane_stepping_zero_alloc() {
+    use ees::nn::neural_sde::NeuralSde;
+    let lanes = 8usize;
+    let mut rng = Pcg64::new(12);
+    let path = BrownianPath::sample(&mut rng, 8, 32, 0.01);
+    // Broadcast each step's increments across lanes (per-lane noise
+    // identity is irrelevant to allocation behaviour).
+    let pack = |n: usize, nd: usize, dw: &mut [f64]| {
+        let inc = path.increment(n);
+        for j in 0..nd {
+            for l in 0..lanes {
+                dw[j * lanes + l] = inc[j % 8];
+            }
+        }
+    };
+
+    // Analytic field through the lane-blocked RK / 2N / Reversible Heun.
+    let vf = Field8;
+    let rk = RkStepper::ees25();
+    let ls = LowStorageStepper::ees25();
+    let rh = ReversibleHeun::new();
+    let steppers: [(&str, &dyn Stepper); 3] = [
+        ("lanes/rk_ees25", &rk),
+        ("lanes/lowstorage_ees25", &ls),
+        ("lanes/reversible_heun", &rh),
+    ];
+    for (name, st) in steppers {
+        let mut ws = StepWorkspace::new();
+        let state_blk = st.state_size(8) * lanes;
+        let mut state = vec![0.1; state_blk];
+        let mut dw = vec![0.0; 8 * lanes];
+        let mut lambda = vec![0.0; state_blk];
+        let mut d_theta = vec![0.0; 1];
+        pack(0, 8, &mut dw);
+        st.step_lanes_ws(&vf, 0.0, 0.01, &dw, &mut state, lanes, &mut ws);
+        st.step_back_lanes_ws(&vf, 0.0, 0.01, &dw, &mut state, lanes, &mut ws);
+        lambda[0] = 1.0;
+        st.backprop_step_lanes_ws(
+            &vf, 0.0, 0.01, &dw, &state, &mut lambda, &mut d_theta, lanes, &mut ws,
+        );
+        let n = measure(|| {
+            for k in 1..32 {
+                pack(k, 8, &mut dw);
+                let t = k as f64 * 0.01;
+                st.step_lanes_ws(&vf, t, 0.01, &dw, &mut state, lanes, &mut ws);
+                st.step_back_lanes_ws(&vf, t, 0.01, &dw, &mut state, lanes, &mut ws);
+                st.backprop_step_lanes_ws(
+                    &vf, t, 0.01, &dw, &state, &mut lambda, &mut d_theta, lanes, &mut ws,
+                );
+            }
+        });
+        assert_eq!(n, 0, "{name}: {n} allocations in 31 warm lane steps");
+    }
+
+    // MLP field: the blocked matmul kernels and the pooled model scratch
+    // must stay allocation-free too (forward AND the lane VJP sweep).
+    {
+        let dim = 4usize;
+        let model = NeuralSde::lsde(dim, 8, 1, false, &mut Pcg64::new(5));
+        let np = DiffVectorField::num_params(&model);
+        let st = LowStorageStepper::ees25();
+        let mut ws = StepWorkspace::new();
+        let blk = dim * lanes;
+        let mut state = vec![0.1; blk];
+        let mut dw = vec![0.0; blk];
+        let mut lambda = vec![0.0; blk];
+        let mut d_theta = vec![0.0; lanes * np];
+        pack(0, dim, &mut dw);
+        st.step_lanes_ws(&model, 0.0, 0.01, &dw, &mut state, lanes, &mut ws);
+        lambda[0] = 1.0;
+        st.backprop_step_lanes_ws(
+            &model, 0.0, 0.01, &dw, &state, &mut lambda, &mut d_theta, lanes, &mut ws,
+        );
+        let n = measure(|| {
+            for k in 1..32 {
+                pack(k, dim, &mut dw);
+                let t = k as f64 * 0.01;
+                st.step_lanes_ws(&model, t, 0.01, &dw, &mut state, lanes, &mut ws);
+                st.backprop_step_lanes_ws(
+                    &model, t, 0.01, &dw, &state, &mut lambda, &mut d_theta, lanes, &mut ws,
+                );
+            }
+        });
+        assert_eq!(n, 0, "lanes/neural_sde: {n} allocations in 31 warm lane steps");
+    }
+
+    // Embedded scheme's fixed-grid lane arm.
+    {
+        let vf = Field8;
+        let sch = EmbeddedEes25::new();
+        let mut ws = StepWorkspace::new();
+        let mut y = vec![0.1; 8 * lanes];
+        let mut dw = vec![0.0; 8 * lanes];
+        let mut err = vec![0.0; lanes];
+        pack(0, 8, &mut dw);
+        sch.step_embedded_lanes_ws(&vf, 0.0, 0.01, &dw, &mut y, &mut err, lanes, &mut ws);
+        let n = measure(|| {
+            for k in 1..32 {
+                pack(k, 8, &mut dw);
+                sch.step_embedded_lanes_ws(
+                    &vf,
+                    k as f64 * 0.01,
+                    0.01,
+                    &dw,
+                    &mut y,
+                    &mut err,
+                    lanes,
+                    &mut ws,
+                );
+            }
+        });
+        assert_eq!(n, 0, "lanes/embedded_ees25: {n} allocations in 31 warm lane steps");
     }
 }
 

@@ -228,6 +228,133 @@ fn workspace_reuse_is_bitwise_invisible() {
     assert_bits_eq(&yf, &yr, "manifold fresh vs reused workspace");
 }
 
+/// The lane-blocked engine's contract: grouping samples into SoA lane
+/// blocks (steppers advancing L samples per stage through blocked matmuls)
+/// is **bitwise-invisible** — losses, gradients, memory figures and
+/// trajectories are identical at every (worker, lane) combination,
+/// including ragged tail groups, for all three adjoint methods.
+#[test]
+fn lane_count_bitwise_invariant() {
+    use ees::coordinator::{batch_grad_euclidean_pool_lanes, batch_integrate_lanes_par};
+    use ees::memory::WorkspacePool;
+    use ees::solvers::RkStepper;
+
+    let (dim, steps, h) = (3usize, 18usize, 0.04);
+    // batch = 11: lanes = 4 and lanes = 8 both leave a ragged tail group
+    // (11 = 4+4+3 = 8+3), and lanes = 16 collapses to one ragged group.
+    let batch = 11;
+    let mut rng = Pcg64::new(314);
+    let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.15; dim]).collect();
+    let paths = sample_paths_par(&mut rng, batch, dim, steps, h, 1);
+    let obs = vec![6, 12, 18];
+    let mut data = vec![0.0; batch * 3 * dim];
+    rng.fill_normal(&mut data);
+    let loss = MomentMatch::from_data(&data, batch, 3, dim);
+    let pool = WorkspacePool::new();
+
+    // State-dependent diffusion and the OU-style time-only diffusion (the
+    // broadcast-t lane input) both go through the lane kernels.
+    let model_state = NeuralSde::lsde(dim, 10, 2, false, &mut Pcg64::new(7));
+    let st = LowStorageStepper::ees25();
+    for method in [
+        AdjointMethod::Full,
+        AdjointMethod::Recursive,
+        AdjointMethod::Reversible,
+    ] {
+        let (l1, g1, m1) = batch_grad_euclidean_pool_lanes(
+            &st, method, &model_state, &y0s, &paths, &obs, &loss, 1, &pool, 1,
+        );
+        for (par, lanes) in [(1, 2), (3, 4), (2, 8), (4, 16)] {
+            let (lp, gp, mp) = batch_grad_euclidean_pool_lanes(
+                &st, method, &model_state, &y0s, &paths, &obs, &loss, par, &pool, lanes,
+            );
+            assert_eq!(
+                l1.to_bits(),
+                lp.to_bits(),
+                "{} loss at P={par} L={lanes}",
+                method.name()
+            );
+            assert_eq!(m1, mp, "{} memory at P={par} L={lanes}", method.name());
+            assert_bits_eq(&g1, &gp, &format!("{} grad at P={par} L={lanes}", method.name()));
+        }
+    }
+
+    // Time-only diffusion (1-d OU workload): the diffusion net's lane
+    // input is the broadcast step time.
+    {
+        let model = NeuralSde::lsde(1, 8, 1, true, &mut Pcg64::new(9));
+        let y0s1: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
+        let mut r = Pcg64::new(11);
+        let paths1 = sample_paths_par(&mut r, batch, 1, steps, h, 1);
+        let mut d1 = vec![0.0; batch * 3];
+        r.fill_normal(&mut d1);
+        let loss1 = MomentMatch::from_data(&d1, batch, 3, 1);
+        let (l1, g1, m1) = batch_grad_euclidean_pool_lanes(
+            &st,
+            AdjointMethod::Reversible,
+            &model,
+            &y0s1,
+            &paths1,
+            &obs,
+            &loss1,
+            1,
+            &pool,
+            1,
+        );
+        for lanes in [4, 8] {
+            let (lp, gp, mp) = batch_grad_euclidean_pool_lanes(
+                &st,
+                AdjointMethod::Reversible,
+                &model,
+                &y0s1,
+                &paths1,
+                &obs,
+                &loss1,
+                2,
+                &pool,
+                lanes,
+            );
+            assert_eq!(l1.to_bits(), lp.to_bits(), "time-only loss at L={lanes}");
+            assert_eq!(m1, mp, "time-only memory at L={lanes}");
+            assert_bits_eq(&g1, &gp, &format!("time-only grad at L={lanes}"));
+        }
+    }
+
+    // Forward-only batch integration: standard-form RK, the 2N realisation
+    // and the auxiliary-state Reversible Heun (state_size = 2·dim) all
+    // produce bitwise-equal trajectories at every lane count.
+    let rk = RkStepper::ees25();
+    let rh = ReversibleHeun::new();
+    let steppers: [&dyn ees::solvers::Stepper; 3] = [&rk, &st, &rh];
+    for stepper in steppers {
+        let base = batch_integrate_lanes_par(stepper, &model_state, 0.0, &y0s, &paths, 1, 1);
+        for (par, lanes) in [(2, 4), (1, 8), (3, 16)] {
+            let run =
+                batch_integrate_lanes_par(stepper, &model_state, 0.0, &y0s, &paths, par, lanes);
+            for (b, (a, t)) in base.iter().zip(run.iter()).enumerate() {
+                assert_bits_eq(a, t, &format!("trajectory {b} at P={par} L={lanes}"));
+            }
+        }
+    }
+
+    // Heterogeneous per-sample grids are legal for batch integration (each
+    // trajectory owns its driver); a lane request must fall back to
+    // per-sample stepping there — every sample on its own grid, no shared
+    // group truncation.
+    {
+        let mut r = Pcg64::new(99);
+        let hetero: Vec<BrownianPath> = (0..5)
+            .map(|b| BrownianPath::sample(&mut r, dim, 10 + 4 * b, 0.03))
+            .collect();
+        let y0h: Vec<Vec<f64>> = (0..5).map(|_| vec![0.1; dim]).collect();
+        let got = batch_integrate_lanes_par(&st, &model_state, 0.0, &y0h, &hetero, 2, 8);
+        for (b, t) in got.iter().enumerate() {
+            let want = ees::solvers::integrate(&st, &model_state, 0.0, &y0h[b], &hetero[b]);
+            assert_bits_eq(t, &want, &format!("hetero-grid trajectory {b}"));
+        }
+    }
+}
+
 #[test]
 fn split_streams_are_schedule_independent() {
     // sample_paths_par must give sample b the same path regardless of how

@@ -744,6 +744,127 @@ fn main() {
                 baseline_allocs_per_op: base_allocs,
             });
         }
+
+        // Manifold lane stepping: CF-EES on SO(3), lane-major 9×L state
+        // blocks through the per-lane Rodrigues exp against the same
+        // samples stepped one at a time.
+        {
+            use ees::lie::So3;
+            let sp = So3::new();
+            let so3f = ClosureManifoldField {
+                point_dim: 9,
+                algebra_dim: 3,
+                noise_dim: 2,
+                gen: |_t, y: &[f64], hh: f64, dw: &[f64], out: &mut [f64]| {
+                    out[0] = (0.2 * y[0] - 0.1 * y[4]) * hh + 0.3 * dw[0];
+                    out[1] = 0.1 * y[8] * hh - 0.2 * dw[1];
+                    out[2] = (0.05 * y[1] + 0.1 * y[3]) * hh + 0.1 * dw[0] - 0.05 * dw[1];
+                },
+            };
+            let cf = CfEes::ees25();
+            let y0 = ees::linalg::eye(3);
+            let lsteps = 64usize;
+            let mpath = BrownianPath::sample(&mut rng, 2, lsteps, h);
+            let dw_blocks: Vec<Vec<f64>> = (0..lsteps)
+                .map(|n| {
+                    let mut blk = vec![0.0; 2 * lanes];
+                    for l in 0..lanes {
+                        lane_scatter(mpath.increment(n), l, lanes, &mut blk);
+                    }
+                    blk
+                })
+                .collect();
+            let mut ws = StepWorkspace::new();
+            let run_lanes = |ws: &mut StepWorkspace| {
+                let mut y = ws.take(9 * lanes);
+                for l in 0..lanes {
+                    lane_scatter(&y0, l, lanes, &mut y);
+                }
+                for (n, dwb) in dw_blocks.iter().enumerate() {
+                    cf.step_lanes_ws(&sp, &so3f, n as f64 * h, h, dwb, &mut y, lanes, ws);
+                }
+                std::hint::black_box(&y);
+                ws.put(y);
+            };
+            let ops = lsteps * lanes;
+            let median = median_ns(warmup, iters, || run_lanes(&mut ws)) / ops as f64;
+            let allocs = {
+                run_lanes(&mut ws);
+                allocs_per_op(ops, || run_lanes(&mut ws))
+            };
+            let mut ws_b = StepWorkspace::new();
+            let run_scalar = |ws: &mut StepWorkspace| {
+                for _l in 0..lanes {
+                    let mut y = ws.take_copy(&y0);
+                    for n in 0..lsteps {
+                        cf.step_ws(&sp, &so3f, n as f64 * h, h, mpath.increment(n), &mut y, ws);
+                    }
+                    std::hint::black_box(&y);
+                    ws.put(y);
+                }
+            };
+            let base_median = median_ns(warmup, iters, || run_scalar(&mut ws_b)) / ops as f64;
+            let base_allocs = allocs_per_op(ops, || run_scalar(&mut ws_b));
+            ledger.push(LedgerEntry {
+                name: "lane_step/cfees_so3".into(),
+                median_ns: median,
+                allocs_per_op: allocs,
+                baseline_median_ns: base_median,
+                baseline_allocs_per_op: base_allocs,
+            });
+        }
+
+        // Full manifold batch gradient through the lane engine vs the
+        // per-sample engine — the manifold acceptance arm (CI gates on
+        // speedup >= 1.5 here too).
+        {
+            use ees::coordinator::{batch_grad_manifold_pool_lanes, sample_paths_par};
+            use ees::losses::MomentMatch;
+            use ees::memory::WorkspacePool;
+            use ees::nn::neural_sde::TorusNeuralSde;
+            let n_osc = 8usize;
+            let sp = TTorus::new(n_osc);
+            let tmodel = TorusNeuralSde::new(n_osc, 32, &mut Pcg64::new(17));
+            let (batch, bsteps) = (16usize, 50usize);
+            let mut brng = Pcg64::new(19);
+            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.2; 2 * n_osc]).collect();
+            let paths = sample_paths_par(&mut brng, batch, n_osc, bsteps, 0.02, 1);
+            let obs = vec![bsteps];
+            let loss = MomentMatch {
+                target_mean: vec![0.0; 2 * n_osc],
+                target_m2: vec![1.0; 2 * n_osc],
+            };
+            let cf = CfEes::ees25();
+            let pool = WorkspacePool::new();
+            let ops = batch * bsteps;
+            let run = |l: usize| {
+                let out = batch_grad_manifold_pool_lanes(
+                    &cf,
+                    AdjointMethod::Reversible,
+                    &sp,
+                    &tmodel,
+                    &y0s,
+                    &paths,
+                    &obs,
+                    &loss,
+                    1,
+                    &pool,
+                    l,
+                );
+                std::hint::black_box(&out);
+            };
+            let median = median_ns(warmup, iters, || run(lanes)) / ops as f64;
+            let allocs = allocs_per_op(ops, || run(lanes));
+            let base_median = median_ns(warmup, iters, || run(1)) / ops as f64;
+            let base_allocs = allocs_per_op(ops, || run(1));
+            ledger.push(LedgerEntry {
+                name: "batch_grad_lanes/manifold".into(),
+                median_ns: median,
+                allocs_per_op: allocs,
+                baseline_median_ns: base_median,
+                baseline_allocs_per_op: base_allocs,
+            });
+        }
     }
 
     println!("{}", ledger.render_table());
@@ -773,16 +894,14 @@ fn main() {
             ),
             None => println!("check: no parseable committed BENCH_hotpath.json — gate skipped"),
         }
-        if let Some(e) = ledger
-            .entries
-            .iter()
-            .find(|e| e.name == "batch_grad_lanes/b16_s50_d16")
-        {
-            if e.speedup() < 1.5 {
-                failures.push(format!(
-                    "batch_grad_lanes/b16_s50_d16: lane speedup {:.2}x < required 1.5x",
-                    e.speedup()
-                ));
+        for gated in ["batch_grad_lanes/b16_s50_d16", "batch_grad_lanes/manifold"] {
+            if let Some(e) = ledger.entries.iter().find(|e| e.name == gated) {
+                if e.speedup() < 1.5 {
+                    failures.push(format!(
+                        "{gated}: lane speedup {:.2}x < required 1.5x",
+                        e.speedup()
+                    ));
+                }
             }
         }
     }

@@ -136,6 +136,21 @@ fn effective_lanes(stepper: &dyn Stepper, vf: &dyn VectorField, lanes: usize) ->
     }
 }
 
+/// [`effective_lanes`] for the manifold engine: grouping engages only when
+/// BOTH the [`ManifoldStepper`] and the [`crate::vf::ManifoldVectorField`]
+/// carry lane-blocked implementations.
+fn effective_lanes_manifold(
+    stepper: &dyn ManifoldStepper,
+    vf: &dyn DiffManifoldVectorField,
+    lanes: usize,
+) -> usize {
+    if stepper.lane_blocked() && vf.lane_blocked() {
+        lanes.clamp(1, crate::linalg::MAX_LANES)
+    } else {
+        1
+    }
+}
+
 /// Pack step `n`'s per-sample driver increments for the lane group
 /// `[lo, lo + ll)` into a lane-major `noise_dim × ll` block.
 fn pack_noise(paths: &[BrownianPath], lo: usize, ll: usize, n: usize, dw: &mut [f64]) {
@@ -900,7 +915,306 @@ pub fn batch_grad_manifold_par(
 /// **caller-owned** [`WorkspacePool`] — the manifold side of
 /// [`batch_grad_euclidean_pool`], with the same warm-across-epochs purpose
 /// and the same bitwise-invisibility guarantee.
+///
+/// Workers claim **lane groups** of [`crate::config::default_lanes`]
+/// samples (override via [`batch_grad_manifold_pool_lanes`]) and step the
+/// whole group per stage in structure-of-arrays layout — generator panels,
+/// batched matrix exponentials and the lane-blocked adjoint sweep. Results
+/// are bitwise-identical at every lane count.
+#[allow(clippy::too_many_arguments)]
 pub fn batch_grad_manifold_pool(
+    stepper: &dyn ManifoldStepper,
+    method: AdjointMethod,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn DiffManifoldVectorField,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    obs: &[usize],
+    loss: &dyn BatchLoss,
+    parallelism: usize,
+    ws_pool: &WorkspacePool,
+) -> (f64, Vec<f64>, usize) {
+    batch_grad_manifold_pool_lanes(
+        stepper,
+        method,
+        sp,
+        vf,
+        y0s,
+        paths,
+        obs,
+        loss,
+        parallelism,
+        ws_pool,
+        crate::config::default_lanes(),
+    )
+}
+
+/// [`batch_grad_manifold_pool`] with an explicit lane-group width.
+///
+/// `lanes = 1` runs the per-sample engine; `lanes = L > 1` steps groups of
+/// `L` samples at once through the manifold stepper's `*_lanes_ws` entry
+/// points — forward, reversible `step_back`, and the whole adjoint sweep —
+/// so every solver stage evaluates the vector field as one lane-major
+/// generator panel and every group exponential runs through the batched
+/// [`crate::linalg::expm_lanes_into`] kernels. Per-sample noise streams,
+/// per-sample tapes/memory meters, and the fixed-batch-order gradient
+/// reduction are all preserved, so loss, gradient and memory figures are
+/// **bitwise-identical at every worker AND lane count** (pinned by
+/// `rust/tests/determinism.rs`). Stepper/field pairs without lane-blocked
+/// implementations fall back to `lanes = 1`.
+#[allow(clippy::too_many_arguments)]
+pub fn batch_grad_manifold_pool_lanes(
+    stepper: &dyn ManifoldStepper,
+    method: AdjointMethod,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn DiffManifoldVectorField,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    obs: &[usize],
+    loss: &dyn BatchLoss,
+    parallelism: usize,
+    ws_pool: &WorkspacePool,
+    lanes: usize,
+) -> (f64, Vec<f64>, usize) {
+    let lanes = effective_lanes_manifold(stepper, vf, lanes);
+    if lanes <= 1 {
+        return batch_grad_manifold_scalar(
+            stepper, method, sp, vf, y0s, paths, obs, loss, parallelism, ws_pool,
+        );
+    }
+    let batch = y0s.len();
+    let dim = sp.point_dim();
+    let noise_dim = vf.noise_dim();
+    let np = vf.num_params();
+    let n_obs = obs.len();
+    let steps = paths[0].steps();
+    let h = paths[0].h;
+    let seg = (steps as f64).sqrt().ceil() as usize;
+    let base_mem = 2 * dim + 2 * sp.algebra_dim() + batch * n_obs * dim + np;
+    let groups = (batch + lanes - 1) / lanes;
+
+    // ---- forward: lane groups independent -------------------------------
+    let fwd_groups: Vec<Vec<ForwardOut>> = parallel_map(parallelism, groups, |g| {
+        let lo = g * lanes;
+        let ll = lanes.min(batch - lo);
+        let mut ws = ws_pool.take();
+        let mut meters: Vec<MemMeter> = (0..ll).map(|_| MemMeter::new()).collect();
+        let mut tapes: Vec<MeteredTape> = (0..ll).map(|_| MeteredTape::new()).collect();
+        let mut obs_states: Vec<Vec<f64>> = (0..ll).map(|_| vec![0.0; n_obs * dim]).collect();
+        let mut y = ws.take(dim * ll);
+        for l in 0..ll {
+            crate::linalg::lane_scatter(&y0s[lo + l], l, ll, &mut y);
+            if method != AdjointMethod::Reversible {
+                tapes[l].push(&y0s[lo + l], &mut meters[l]);
+            }
+        }
+        let mut dw = ws.take(noise_dim * ll);
+        let mut tmp = ws.take(dim);
+        let mut oi = 0;
+        for n in 0..steps {
+            let t = n as f64 * h;
+            pack_noise(paths, lo, ll, n, &mut dw);
+            stepper.step_lanes_ws(sp, vf, t, h, &dw, &mut y, ll, &mut ws);
+            let record = match method {
+                AdjointMethod::Full => true,
+                AdjointMethod::Recursive => (n + 1) % seg == 0,
+                AdjointMethod::Reversible => false,
+            };
+            if record {
+                for l in 0..ll {
+                    crate::linalg::lane_gather(&y, l, ll, &mut tmp);
+                    tapes[l].push(&tmp, &mut meters[l]);
+                }
+            }
+            while oi < n_obs && obs[oi] == n + 1 {
+                for (l, os) in obs_states.iter_mut().enumerate() {
+                    for d in 0..dim {
+                        os[oi * dim + d] = y[d * ll + l];
+                    }
+                }
+                oi += 1;
+            }
+        }
+        let mut out = Vec::with_capacity(ll);
+        for (l, ((tape, meter), obs_s)) in tapes
+            .into_iter()
+            .zip(meters)
+            .zip(obs_states)
+            .enumerate()
+        {
+            let mut final_state = vec![0.0; dim];
+            crate::linalg::lane_gather(&y, l, ll, &mut final_state);
+            out.push(ForwardOut {
+                final_state,
+                tape,
+                obs_states: obs_s,
+                retained: meter.current(),
+            });
+        }
+        ws.put(tmp);
+        ws.put(dw);
+        ws.put(y);
+        ws_pool.put(ws);
+        out
+    });
+    let fwd: Vec<ForwardOut> = fwd_groups.into_iter().flatten().collect();
+
+    // ---- barrier: the batch loss couples samples ------------------------
+    let obs_all = gather_obs(&fwd, n_obs, dim);
+    let (loss_val, cots) = loss.eval_grad(&obs_all, batch, n_obs, dim);
+    let tape_retained: usize = fwd.iter().map(|f| f.retained).sum();
+
+    // ---- backward: lane-blocked sweep, per-lane gradients reduced in
+    // fixed batch order --------------------------------------------------
+    let fwd_ref = &fwd;
+    let cots_ref = &cots;
+    let per_group: Vec<Vec<(Vec<f64>, usize)>> = parallel_map(parallelism, groups, |g| {
+        let lo = g * lanes;
+        let ll = lanes.min(batch - lo);
+        let mut ws = ws_pool.take();
+        // Lane-contiguous parameter cotangents: lane l accumulates into
+        // [l*np, (l+1)*np) in exactly the per-sample order, so the final
+        // fixed-batch-order reduction is unchanged by lane grouping.
+        let mut d_theta_lanes = vec![0.0; ll * np];
+        let mut meters: Vec<MemMeter> = (0..ll).map(|_| MemMeter::new()).collect();
+        let mut seg_bufs: Vec<MeteredTape> = (0..ll).map(|_| MeteredTape::new()).collect();
+        let mut lambda = ws.take(dim * ll);
+        let mut y = ws.take(dim * ll);
+        for l in 0..ll {
+            crate::linalg::lane_scatter(&fwd_ref[lo + l].final_state, l, ll, &mut y);
+        }
+        let mut dw = ws.take(noise_dim * ll);
+        let mut dwm = ws.take(noise_dim * ll);
+        let mut prev = ws.take(dim * ll);
+        let mut recon = ws.take(dim * ll);
+        let mut tmp = ws.take(dim);
+        let mut oi = n_obs;
+        for n in (0..steps).rev() {
+            while oi > 0 && obs[oi - 1] == n + 1 {
+                oi -= 1;
+                for l in 0..ll {
+                    for d in 0..dim {
+                        lambda[d * ll + l] += cots_ref[((lo + l) * n_obs + oi) * dim + d];
+                    }
+                }
+            }
+            let t = n as f64 * h;
+            pack_noise(paths, lo, ll, n, &mut dw);
+            match method {
+                AdjointMethod::Full => {
+                    for l in 0..ll {
+                        crate::linalg::lane_scatter(
+                            fwd_ref[lo + l].tape.get(n),
+                            l,
+                            ll,
+                            &mut prev,
+                        );
+                    }
+                    stepper.backprop_step_lanes_ws(
+                        sp,
+                        vf,
+                        t,
+                        h,
+                        &dw,
+                        &prev,
+                        &mut lambda,
+                        &mut d_theta_lanes,
+                        ll,
+                        &mut ws,
+                    );
+                }
+                AdjointMethod::Reversible => {
+                    stepper.step_back_lanes_ws(sp, vf, t, h, &dw, &mut y, ll, &mut ws);
+                    stepper.backprop_step_lanes_ws(
+                        sp,
+                        vf,
+                        t,
+                        h,
+                        &dw,
+                        &y,
+                        &mut lambda,
+                        &mut d_theta_lanes,
+                        ll,
+                        &mut ws,
+                    );
+                }
+                AdjointMethod::Recursive => {
+                    if seg_bufs[0].is_empty() {
+                        // Rebuild the whole segment lane-blocked, filling
+                        // each lane's (metered) segment buffer with exactly
+                        // the states the per-sample sweep would tape.
+                        let seg_start = (n / seg) * seg;
+                        let ckpt_idx = n / seg;
+                        for (l, sb) in seg_bufs.iter_mut().enumerate() {
+                            let s = fwd_ref[lo + l].tape.get(ckpt_idx);
+                            crate::linalg::lane_scatter(s, l, ll, &mut recon);
+                            sb.push(s, &mut meters[l]);
+                        }
+                        for m in seg_start..n {
+                            pack_noise(paths, lo, ll, m, &mut dwm);
+                            stepper.step_lanes_ws(
+                                sp,
+                                vf,
+                                m as f64 * h,
+                                h,
+                                &dwm,
+                                &mut recon,
+                                ll,
+                                &mut ws,
+                            );
+                            for (l, sb) in seg_bufs.iter_mut().enumerate() {
+                                crate::linalg::lane_gather(&recon, l, ll, &mut tmp);
+                                sb.push(&tmp, &mut meters[l]);
+                            }
+                        }
+                    }
+                    for (l, sb) in seg_bufs.iter_mut().enumerate() {
+                        let p = sb.pop(&mut meters[l]).expect("segment buffer underflow");
+                        crate::linalg::lane_scatter(&p, l, ll, &mut prev);
+                    }
+                    stepper.backprop_step_lanes_ws(
+                        sp,
+                        vf,
+                        t,
+                        h,
+                        &dw,
+                        &prev,
+                        &mut lambda,
+                        &mut d_theta_lanes,
+                        ll,
+                        &mut ws,
+                    );
+                }
+            }
+        }
+        ws.put(tmp);
+        ws.put(recon);
+        ws.put(prev);
+        ws.put(dwm);
+        ws.put(dw);
+        ws.put(y);
+        ws.put(lambda);
+        ws_pool.put(ws);
+        (0..ll)
+            .map(|l| {
+                (
+                    d_theta_lanes[l * np..(l + 1) * np].to_vec(),
+                    meters[l].peak_f64s(),
+                )
+            })
+            .collect()
+    });
+    let per_sample: Vec<(Vec<f64>, usize)> = per_group.into_iter().flatten().collect();
+
+    let (d_theta, peak) = reduce_per_sample(&per_sample, np, base_mem, tape_retained);
+    (loss_val, d_theta, peak)
+}
+
+/// The per-sample (`lanes = 1`) manifold engine — the pre-lane hot path,
+/// kept intact as both the fallback for non-lane-blocked stepper/field
+/// pairs and the bitwise reference the lane path is pinned against.
+#[allow(clippy::too_many_arguments)]
+fn batch_grad_manifold_scalar(
     stepper: &dyn ManifoldStepper,
     method: AdjointMethod,
     sp: &dyn HomogeneousSpace,

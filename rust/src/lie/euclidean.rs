@@ -5,6 +5,7 @@
 //! tests of `solvers::cfees` exercise.
 
 use super::{ExpCounter, HomogeneousSpace};
+use crate::memory::StepWorkspace;
 
 #[derive(Clone, Debug)]
 pub struct Euclidean {
@@ -43,6 +44,29 @@ impl HomogeneousSpace for Euclidean {
         lam_out: &[f64],
         lam_y: &mut [f64],
         lam_v: &mut [f64],
+    ) {
+        lam_y.copy_from_slice(lam_out);
+        lam_v.copy_from_slice(lam_out);
+    }
+
+    /// Lane block: translation is elementwise, so the whole lane-major
+    /// block advances in one pass — per-lane op order identical to scalar.
+    fn exp_action_lanes(&self, v: &[f64], y: &mut [f64], lanes: usize, _ws: &mut StepWorkspace) {
+        self.exps.bump_many(lanes as u64);
+        for (yi, vi) in y.iter_mut().zip(v.iter()) {
+            *yi += vi;
+        }
+    }
+
+    fn action_pullback_lanes(
+        &self,
+        _v: &[f64],
+        _y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+        _lanes: usize,
+        _ws: &mut StepWorkspace,
     ) {
         lam_y.copy_from_slice(lam_out);
         lam_v.copy_from_slice(lam_out);

@@ -24,6 +24,8 @@ pub use son::SOn;
 pub use sphere::Sphere;
 pub use torus::{TTorus, Torus};
 
+use crate::linalg::{lane_gather, lane_scatter};
+use crate::memory::StepWorkspace;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Shared instrumentation: every space counts its group-exponential
@@ -34,6 +36,11 @@ pub struct ExpCounter(AtomicU64);
 impl ExpCounter {
     pub fn bump(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    /// Count `k` exponentials at once (the lane-blocked kernels act on a
+    /// whole lane group per call but must report per-sample costs).
+    pub fn bump_many(&self, k: u64) {
+        self.0.fetch_add(k, Ordering::Relaxed);
     }
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
@@ -85,6 +92,67 @@ pub trait HomogeneousSpace: Send + Sync {
     /// corrections; abelian groups return 0).
     fn bracket(&self, _a: &[f64], _b: &[f64], out: &mut [f64]) {
         out.fill(0.0);
+    }
+
+    /// Lane-blocked frozen flow: `v` is an `algebra_dim × lanes` and `y` a
+    /// `point_dim × lanes` lane-major block (component `c` of lane `l` at
+    /// `[c * lanes + l]`); advances every lane by its own algebra element.
+    /// The default gathers each lane and runs the scalar [`Self::exp_action`]
+    /// — bitwise-equal to per-sample stepping by construction — with the
+    /// gather scratch drawn from the caller's `ws` (unlike the scalar path
+    /// of the matrix spaces, which checks scratch out of an internal pool
+    /// per call). Overrides must keep every per-lane float op in the scalar
+    /// order; the lane width is a pure perf knob.
+    fn exp_action_lanes(&self, v: &[f64], y: &mut [f64], lanes: usize, ws: &mut StepWorkspace) {
+        let g = self.algebra_dim();
+        let n = self.point_dim();
+        debug_assert_eq!(v.len(), g * lanes);
+        debug_assert_eq!(y.len(), n * lanes);
+        let mut vl = ws.take(g);
+        let mut yl = ws.take(n);
+        for l in 0..lanes {
+            lane_gather(v, l, lanes, &mut vl);
+            lane_gather(y, l, lanes, &mut yl);
+            self.exp_action(&vl, &mut yl);
+            lane_scatter(&yl, l, lanes, y);
+        }
+        ws.put(yl);
+        ws.put(vl);
+    }
+
+    /// Lane-blocked [`Self::action_pullback`]: all five slices are
+    /// lane-major blocks (`lam_y`/`lam_out` of `point_dim × lanes`,
+    /// `v`/`lam_v` of `algebra_dim × lanes`); lane `l` of the outputs is
+    /// bitwise-equal to the scalar pullback on the gathered lane. Same
+    /// overwrite semantics as the scalar method.
+    fn action_pullback_lanes(
+        &self,
+        v: &[f64],
+        y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let g = self.algebra_dim();
+        let n = self.point_dim();
+        let mut buf = ws.take(2 * g + 3 * n);
+        {
+            let (vl, rest) = buf.split_at_mut(g);
+            let (lvl, rest) = rest.split_at_mut(g);
+            let (yl, rest) = rest.split_at_mut(n);
+            let (lol, lyl) = rest.split_at_mut(n);
+            for l in 0..lanes {
+                lane_gather(v, l, lanes, vl);
+                lane_gather(y, l, lanes, yl);
+                lane_gather(lam_out, l, lanes, lol);
+                self.action_pullback(vl, yl, lol, lyl, lvl);
+                lane_scatter(lyl, l, lanes, lam_y);
+                lane_scatter(lvl, l, lanes, lam_v);
+            }
+        }
+        ws.put(buf);
     }
 
     /// Number of group exponentials evaluated so far (instrumentation).
@@ -232,6 +300,90 @@ mod tests {
                     "dim {n} point k={k}: fd {fd} vs {}",
                     lam_y[k]
                 );
+            }
+        }
+    }
+
+    /// The lane contract for every space: lane-blocked exp_action and
+    /// action_pullback (default or override) are bitwise-equal to the
+    /// scalar methods on each gathered lane.
+    #[test]
+    fn lane_action_and_pullback_match_scalar_bitwise() {
+        let mut rng = Pcg64::new(7);
+        let mut ws = StepWorkspace::new();
+        let spaces: Vec<Box<dyn HomogeneousSpace>> = vec![
+            Box::new(Euclidean::new(5)),
+            Box::new(Torus::new(4)),
+            Box::new(TTorus::new(3)),
+            Box::new(So3::new()),
+            Box::new(SOn::new(4)),
+            Box::new(Sphere::new(5)),
+        ];
+        for sp in &spaces {
+            let n = sp.point_dim();
+            let g = sp.algebra_dim();
+            for lanes in [1usize, 2, 4, 8] {
+                // Per-lane scalar references.
+                let ys: Vec<Vec<f64>> = (0..lanes)
+                    .map(|_| random_point(sp.as_ref(), &mut rng))
+                    .collect();
+                let vs: Vec<Vec<f64>> = (0..lanes)
+                    .map(|_| {
+                        let mut v = vec![0.0; g];
+                        rng.fill_normal_scaled(0.3, &mut v);
+                        v
+                    })
+                    .collect();
+                let lams: Vec<Vec<f64>> = (0..lanes)
+                    .map(|_| {
+                        let mut lam = vec![0.0; n];
+                        rng.fill_normal(&mut lam);
+                        lam
+                    })
+                    .collect();
+                // Lane-major blocks.
+                let mut yb = vec![0.0; n * lanes];
+                let mut vb = vec![0.0; g * lanes];
+                let mut lb = vec![0.0; n * lanes];
+                for l in 0..lanes {
+                    lane_scatter(&ys[l], l, lanes, &mut yb);
+                    lane_scatter(&vs[l], l, lanes, &mut vb);
+                    lane_scatter(&lams[l], l, lanes, &mut lb);
+                }
+                // Action.
+                sp.exp_action_lanes(&vb, &mut yb, lanes, &mut ws);
+                let mut got = vec![0.0; n];
+                for l in 0..lanes {
+                    let mut want = ys[l].clone();
+                    sp.exp_action(&vs[l], &mut want);
+                    lane_gather(&yb, l, lanes, &mut got);
+                    for (u, v) in got.iter().zip(want.iter()) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "action n={n} lanes={lanes} l={l}");
+                    }
+                }
+                // Pullback (at the pre-action points).
+                let mut yb = vec![0.0; n * lanes];
+                for l in 0..lanes {
+                    lane_scatter(&ys[l], l, lanes, &mut yb);
+                }
+                let mut ly = vec![0.0; n * lanes];
+                let mut lv = vec![0.0; g * lanes];
+                sp.action_pullback_lanes(&vb, &yb, &lb, &mut ly, &mut lv, lanes, &mut ws);
+                let mut got_y = vec![0.0; n];
+                let mut got_v = vec![0.0; g];
+                for l in 0..lanes {
+                    let mut want_y = vec![0.0; n];
+                    let mut want_v = vec![0.0; g];
+                    sp.action_pullback(&vs[l], &ys[l], &lams[l], &mut want_y, &mut want_v);
+                    lane_gather(&ly, l, lanes, &mut got_y);
+                    lane_gather(&lv, l, lanes, &mut got_v);
+                    for (u, v) in got_y.iter().zip(want_y.iter()) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "lam_y n={n} lanes={lanes} l={l}");
+                    }
+                    for (u, v) in got_v.iter().zip(want_v.iter()) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "lam_v n={n} lanes={lanes} l={l}");
+                    }
+                }
             }
         }
     }

@@ -114,6 +114,69 @@ impl HomogeneousSpace for So3 {
         });
     }
 
+    /// Per-lane Rodrigues straight off the lane-major block — all scratch
+    /// is stack 3×3 arrays, no pool checkout, no gather buffers. Each
+    /// lane's op sequence is exactly the scalar [`Self::exp_action`].
+    fn exp_action_lanes(&self, v: &[f64], y: &mut [f64], lanes: usize, _ws: &mut StepWorkspace) {
+        self.exps.bump_many(lanes as u64);
+        for l in 0..lanes {
+            let w = [v[l], v[lanes + l], v[2 * lanes + l]];
+            let e = so3_exp(&w);
+            let mut r = [0.0f64; 9];
+            for (i, ri) in r.iter_mut().enumerate() {
+                *ri = y[i * lanes + l];
+            }
+            let out = mat3mul(&e, &r);
+            for (i, oi) in out.iter().enumerate() {
+                y[i * lanes + l] = *oi;
+            }
+        }
+    }
+
+    /// Per-lane pullback with stack 3×3 scratch; only the Fréchet-adjoint
+    /// panel comes from the caller's `ws` (one checkout for the whole lane
+    /// group, instead of the scalar path's per-call pool checkout).
+    fn action_pullback_lanes(
+        &self,
+        v: &[f64],
+        y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let mut lstar = ws.take(9);
+        for l in 0..lanes {
+            let w3 = [v[l], v[lanes + l], v[2 * lanes + l]];
+            let e = so3_exp(&w3);
+            let mut et = [0.0f64; 9];
+            transpose_into(&e, &mut et, 3, 3);
+            let mut lo = [0.0f64; 9];
+            for (i, x) in lo.iter_mut().enumerate() {
+                *x = lam_out[i * lanes + l];
+            }
+            let mut tmp = [0.0f64; 9];
+            matmul(&et, &lo, &mut tmp, 3, 3, 3);
+            for (i, x) in tmp.iter().enumerate() {
+                lam_y[i * lanes + l] = *x;
+            }
+            let mut yl = [0.0f64; 9];
+            for (i, x) in yl.iter_mut().enumerate() {
+                *x = y[i * lanes + l];
+            }
+            let mut yt = [0.0f64; 9];
+            transpose_into(&yl, &mut yt, 3, 3);
+            let mut w = [0.0f64; 9];
+            matmul(&lo, &yt, &mut w, 3, 3, 3);
+            expm_frechet_adjoint_into(&so3_hat(&w3), &w, &mut lstar, 3, ws);
+            lam_v[l] = lstar[7] - lstar[5];
+            lam_v[lanes + l] = lstar[2] - lstar[6];
+            lam_v[2 * lanes + l] = lstar[3] - lstar[1];
+        }
+        ws.put(lstar);
+    }
+
     /// 𝔰𝔬(3) bracket is the cross product under the hat identification.
     fn bracket(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
         out[0] = a[1] * b[2] - a[2] * b[1];

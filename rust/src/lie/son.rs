@@ -6,7 +6,8 @@
 
 use super::{ExpCounter, HomogeneousSpace};
 use crate::linalg::{
-    expm_frechet_adjoint_into, expm_into, matmul, orthogonality_defect, transpose_into,
+    expm_frechet_adjoint_into, expm_into, expm_lanes_into, lane_gather, lane_scatter, matmul,
+    orthogonality_defect, transpose_into,
 };
 use crate::memory::{StepWorkspace, WorkspacePool};
 
@@ -171,6 +172,89 @@ impl HomogeneousSpace for SOn {
             ws.put(e);
             ws.put(vh);
         });
+    }
+
+    /// Lane-blocked frozen flow: lane-major hat block → batched
+    /// [`expm_lanes_into`] panel → per-lane left multiplication, with all
+    /// scratch from the caller's `ws` (no per-call internal pool checkout).
+    fn exp_action_lanes(&self, v: &[f64], y: &mut [f64], lanes: usize, ws: &mut StepWorkspace) {
+        self.exps.bump_many(lanes as u64);
+        let n = self.n;
+        let nn = n * n;
+        let mut vh = ws.take(nn * lanes);
+        let mut k = 0;
+        for i in 0..n {
+            for j in i + 1..n {
+                for l in 0..lanes {
+                    let vk = v[k * lanes + l];
+                    vh[(i * n + j) * lanes + l] = vk;
+                    vh[(j * n + i) * lanes + l] = -vk;
+                }
+                k += 1;
+            }
+        }
+        let mut e = ws.take(nn * lanes);
+        expm_lanes_into(&vh, &mut e, n, lanes, ws);
+        let mut panel = ws.take(3 * nn);
+        {
+            let (el, rest) = panel.split_at_mut(nn);
+            let (yl, out) = rest.split_at_mut(nn);
+            for l in 0..lanes {
+                lane_gather(&e, l, lanes, el);
+                lane_gather(y, l, lanes, yl);
+                matmul(el, yl, out, n, n, n);
+                lane_scatter(out, l, lanes, y);
+            }
+        }
+        ws.put(panel);
+        ws.put(e);
+        ws.put(vh);
+    }
+
+    /// Per-lane pullback replicating the scalar body op for op, panels from
+    /// one contiguous `ws` checkout.
+    fn action_pullback_lanes(
+        &self,
+        v: &[f64],
+        y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let n = self.n;
+        let g = self.algebra_dim();
+        let nn = n * n;
+        let mut panel = ws.take(9 * nn + 2 * g);
+        {
+            let (vh, rest) = panel.split_at_mut(nn);
+            let (e, rest) = rest.split_at_mut(nn);
+            let (et, rest) = rest.split_at_mut(nn);
+            let (yt, rest) = rest.split_at_mut(nn);
+            let (w, rest) = rest.split_at_mut(nn);
+            let (lstar, rest) = rest.split_at_mut(nn);
+            let (yl, rest) = rest.split_at_mut(nn);
+            let (lol, rest) = rest.split_at_mut(nn);
+            let (lyl, rest) = rest.split_at_mut(nn);
+            let (vl, lvl) = rest.split_at_mut(g);
+            for l in 0..lanes {
+                lane_gather(v, l, lanes, vl);
+                lane_gather(y, l, lanes, yl);
+                lane_gather(lam_out, l, lanes, lol);
+                self.hat(vl, vh);
+                expm_into(vh, e, n, ws);
+                transpose_into(e, et, n, n);
+                matmul(et, lol, lyl, n, n, n);
+                transpose_into(yl, yt, n, n);
+                matmul(lol, yt, w, n, n, n);
+                expm_frechet_adjoint_into(vh, w, lstar, n, ws);
+                self.basis_contract(lstar, lvl);
+                lane_scatter(lyl, l, lanes, lam_y);
+                lane_scatter(lvl, l, lanes, lam_v);
+            }
+        }
+        ws.put(panel);
     }
 
     /// Matrix commutator in the E_{ij} basis.

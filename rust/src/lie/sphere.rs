@@ -8,7 +8,10 @@
 //! `models::sphere_lsde` fix the rank-2 representative V = a yᵀ − y aᵀ.
 
 use super::{ExpCounter, HomogeneousSpace};
-use crate::linalg::{expm_frechet_adjoint_into, expm_into, matvec, matvec_t, norm2};
+use crate::linalg::{
+    expm_frechet_adjoint_into, expm_into, expm_lanes_into, lane_gather, lane_scatter, matvec,
+    matvec_t, norm2,
+};
 use crate::memory::{StepWorkspace, WorkspacePool};
 
 #[derive(Debug)]
@@ -147,6 +150,96 @@ impl HomogeneousSpace for Sphere {
             ws.put(e);
             ws.put(vh);
         });
+    }
+
+    /// Lane-blocked frozen flow: builds the lane-major hat block, runs the
+    /// batched [`expm_lanes_into`] panel (per-lane bitwise-equal to the
+    /// scalar exponential), then rotates each lane's point. All scratch
+    /// comes from the caller's `ws` in one set of checkouts — no per-call
+    /// internal pool checkout, the scalar path's per-lane overhead.
+    fn exp_action_lanes(&self, v: &[f64], y: &mut [f64], lanes: usize, ws: &mut StepWorkspace) {
+        self.exps.bump_many(lanes as u64);
+        let n = self.n;
+        let mut vh = ws.take(n * n * lanes);
+        let mut k = 0;
+        for i in 0..n {
+            for j in i + 1..n {
+                for l in 0..lanes {
+                    let vk = v[k * lanes + l];
+                    vh[(i * n + j) * lanes + l] = vk;
+                    vh[(j * n + i) * lanes + l] = -vk;
+                }
+                k += 1;
+            }
+        }
+        let mut e = ws.take(n * n * lanes);
+        expm_lanes_into(&vh, &mut e, n, lanes, ws);
+        let mut panel = ws.take(n * n + 2 * n);
+        {
+            let (el, rest) = panel.split_at_mut(n * n);
+            let (yl, out) = rest.split_at_mut(n);
+            for l in 0..lanes {
+                lane_gather(&e, l, lanes, el);
+                lane_gather(y, l, lanes, yl);
+                matvec(el, yl, out, n, n);
+                lane_scatter(out, l, lanes, y);
+            }
+        }
+        ws.put(panel);
+        ws.put(e);
+        ws.put(vh);
+    }
+
+    /// Per-lane pullback replicating the scalar body op for op, with every
+    /// panel drawn from the caller's `ws` in one contiguous checkout.
+    fn action_pullback_lanes(
+        &self,
+        v: &[f64],
+        y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let n = self.n;
+        let g = self.algebra_dim();
+        let nn = n * n;
+        let mut panel = ws.take(4 * nn + 3 * n + 2 * g);
+        {
+            let (vh, rest) = panel.split_at_mut(nn);
+            let (e, rest) = rest.split_at_mut(nn);
+            let (w, rest) = rest.split_at_mut(nn);
+            let (lstar, rest) = rest.split_at_mut(nn);
+            let (yl, rest) = rest.split_at_mut(n);
+            let (lol, rest) = rest.split_at_mut(n);
+            let (lyl, rest) = rest.split_at_mut(n);
+            let (vl, lvl) = rest.split_at_mut(g);
+            for l in 0..lanes {
+                lane_gather(v, l, lanes, vl);
+                lane_gather(y, l, lanes, yl);
+                lane_gather(lam_out, l, lanes, lol);
+                self.hat(vl, vh);
+                expm_into(vh, e, n, ws);
+                matvec_t(e, lol, lyl, n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        w[i * n + j] = lol[i] * yl[j];
+                    }
+                }
+                expm_frechet_adjoint_into(vh, w, lstar, n, ws);
+                let mut k = 0;
+                for i in 0..n {
+                    for j in i + 1..n {
+                        lvl[k] = lstar[i * n + j] - lstar[j * n + i];
+                        k += 1;
+                    }
+                }
+                lane_scatter(lyl, l, lanes, lam_y);
+                lane_scatter(lvl, l, lanes, lam_v);
+            }
+        }
+        ws.put(panel);
     }
 
     /// 𝔰𝔬(n) matrix commutator in the E_{ij} basis.

@@ -10,6 +10,7 @@
 //! periodic encodings downstream.
 
 use super::{wrap_angle, ExpCounter, HomogeneousSpace};
+use crate::memory::StepWorkspace;
 
 /// 𝕋ⁿ with angle representation.
 #[derive(Clone, Debug)]
@@ -57,6 +58,29 @@ impl HomogeneousSpace for Torus {
         lam_v: &mut [f64],
     ) {
         // Wrapping is locally the identity chart.
+        lam_y.copy_from_slice(lam_out);
+        lam_v.copy_from_slice(lam_out);
+    }
+
+    /// Angle addition + wrap is elementwise: one pass over the lane-major
+    /// block, per-lane op order identical to scalar.
+    fn exp_action_lanes(&self, v: &[f64], y: &mut [f64], lanes: usize, _ws: &mut StepWorkspace) {
+        self.exps.bump_many(lanes as u64);
+        for (yi, vi) in y.iter_mut().zip(v.iter()) {
+            *yi = wrap_angle(*yi + vi);
+        }
+    }
+
+    fn action_pullback_lanes(
+        &self,
+        _v: &[f64],
+        _y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+        _lanes: usize,
+        _ws: &mut StepWorkspace,
+    ) {
         lam_y.copy_from_slice(lam_out);
         lam_v.copy_from_slice(lam_out);
     }
@@ -132,6 +156,34 @@ impl HomogeneousSpace for TTorus {
         lam_out: &[f64],
         lam_y: &mut [f64],
         lam_v: &mut [f64],
+    ) {
+        lam_y.copy_from_slice(lam_out);
+        lam_v.copy_from_slice(lam_out);
+    }
+
+    /// Lane-major split: angle components occupy the first `n·lanes` block
+    /// entries, velocities the last `n·lanes` — wrap the former, add the
+    /// latter, per-lane op order identical to scalar.
+    fn exp_action_lanes(&self, v: &[f64], y: &mut [f64], lanes: usize, _ws: &mut StepWorkspace) {
+        self.exps.bump_many(lanes as u64);
+        let split = self.n * lanes;
+        for i in 0..split {
+            y[i] = wrap_angle(y[i] + v[i]);
+        }
+        for i in split..2 * split {
+            y[i] += v[i];
+        }
+    }
+
+    fn action_pullback_lanes(
+        &self,
+        _v: &[f64],
+        _y: &[f64],
+        lam_out: &[f64],
+        lam_y: &mut [f64],
+        lam_v: &mut [f64],
+        _lanes: usize,
+        _ws: &mut StepWorkspace,
     ) {
         lam_y.copy_from_slice(lam_out);
         lam_v.copy_from_slice(lam_out);

@@ -258,6 +258,101 @@ fn is_skew3(a: &[f64]) -> bool {
         && a[5] == -a[7]
 }
 
+/// Per-lane [`is_skew3`] on a lane-major block of 3×3 matrices: entry
+/// (i, j) of lane `l` lives at `a[(i * 3 + j) * lanes + l]`.
+#[inline]
+fn is_skew3_lane(a: &[f64], l: usize, lanes: usize) -> bool {
+    let g = |i: usize| a[i * lanes + l];
+    g(0) == 0.0
+        && g(4) == 0.0
+        && g(8) == 0.0
+        && g(1) == -g(3)
+        && g(2) == -g(6)
+        && g(5) == -g(7)
+}
+
+/// Lane-blocked matrix exponential: `a` and `out` are lane-major blocks of
+/// `lanes` independent n×n matrices (entry (i, j) of lane `l` at
+/// `[(i*n + j) * lanes + l]`), and lane `l` of `out` is **bitwise-equal**
+/// to [`expm_into`] on the gathered lane. When every lane is exactly skew
+/// 3×3 — the dominant case on SO(3)/S² — all lanes take the Rodrigues
+/// closed form straight off the block with no gather. Otherwise each
+/// lane's scaling power depends on its own norm, so the Taylor recurrence
+/// cannot fuse across lanes without changing the float-op order: the
+/// general path gathers each lane into one contiguous panel pair checked
+/// out of `ws` and runs the scalar core per lane (warm calls still
+/// allocate nothing).
+pub fn expm_lanes_into(a: &[f64], out: &mut [f64], n: usize, lanes: usize, ws: &mut StepWorkspace) {
+    assert!(lanes >= 1 && lanes <= MAX_LANES, "lanes {lanes} out of range");
+    debug_assert_eq!(a.len(), n * n * lanes);
+    debug_assert_eq!(out.len(), n * n * lanes);
+    if lanes == 1 {
+        expm_into(a, out, n, ws);
+        return;
+    }
+    if n == 3 && (0..lanes).all(|l| is_skew3_lane(a, l, lanes)) {
+        for l in 0..lanes {
+            let w = [a[7 * lanes + l], a[2 * lanes + l], a[3 * lanes + l]];
+            let e = so3_exp(&w);
+            for (i, ei) in e.iter().enumerate() {
+                out[i * lanes + l] = *ei;
+            }
+        }
+        return;
+    }
+    let mut panel = ws.take(2 * n * n);
+    {
+        let (m, e) = panel.split_at_mut(n * n);
+        for l in 0..lanes {
+            lane_gather(a, l, lanes, m);
+            expm_into(m, e, n, ws);
+            lane_scatter(e, l, lanes, out);
+        }
+    }
+    ws.put(panel);
+}
+
+/// Lane-blocked Fréchet derivative of the matrix exponential: all four
+/// arguments are lane-major blocks of n×n matrices, and lane `l` of
+/// (`ea`, `l_out`) is bitwise-equal to [`expm_frechet_into`] on the
+/// gathered lane. The Van Loan 2n×2n panel never hits a fused fast path,
+/// so this is the gather-per-lane layout adapter over the scalar core —
+/// one contiguous `ws` checkout for all four per-lane panels.
+pub fn expm_frechet_lanes_into(
+    a: &[f64],
+    e: &[f64],
+    ea: &mut [f64],
+    l_out: &mut [f64],
+    n: usize,
+    lanes: usize,
+    ws: &mut StepWorkspace,
+) {
+    assert!(lanes >= 1 && lanes <= MAX_LANES, "lanes {lanes} out of range");
+    debug_assert_eq!(a.len(), n * n * lanes);
+    debug_assert_eq!(e.len(), n * n * lanes);
+    debug_assert_eq!(ea.len(), n * n * lanes);
+    debug_assert_eq!(l_out.len(), n * n * lanes);
+    if lanes == 1 {
+        expm_frechet_into(a, e, ea, l_out, n, ws);
+        return;
+    }
+    let nn = n * n;
+    let mut panel = ws.take(4 * nn);
+    {
+        let (ma, rest) = panel.split_at_mut(nn);
+        let (me, rest) = rest.split_at_mut(nn);
+        let (mea, ml) = rest.split_at_mut(nn);
+        for l in 0..lanes {
+            lane_gather(a, l, lanes, ma);
+            lane_gather(e, l, lanes, me);
+            expm_frechet_into(ma, me, mea, ml, n, ws);
+            lane_scatter(mea, l, lanes, ea);
+            lane_scatter(ml, l, lanes, l_out);
+        }
+    }
+    ws.put(panel);
+}
+
 /// Matrix exponential of an n×n matrix into a caller-owned buffer, by
 /// scaling-and-squaring on a degree-13 Taylor polynomial (accurate to
 /// ~1e-14 for the modest norms arising in one integrator step, ‖A‖ ≲ a
@@ -736,6 +831,111 @@ mod tests {
         let r = so3_exp(&w);
         for i in 0..9 {
             assert_eq!(e[i].to_bits(), r[i].to_bits(), "entry {i}");
+        }
+    }
+
+    #[test]
+    fn expm_lanes_matches_per_lane_expm() {
+        // Both the all-skew3 Rodrigues block path and the general
+        // gather-per-lane path must be bitwise-equal to scalar expm_into on
+        // each gathered lane.
+        let mut rng = Pcg64::new(41);
+        let mut ws = StepWorkspace::new();
+        for (n, skew) in [(3usize, true), (3, false), (4, false), (2, false)] {
+            for lanes in [1usize, 2, 5, 8] {
+                let mut a = vec![0.0; n * n * lanes];
+                for l in 0..lanes {
+                    let mut m = vec![0.0; n * n];
+                    if skew {
+                        let mut w = [0.0; 3];
+                        rng.fill_normal(&mut w);
+                        m.copy_from_slice(&so3_hat(&w));
+                    } else {
+                        rng.fill_normal(&mut m);
+                        for x in m.iter_mut() {
+                            *x *= 0.4;
+                        }
+                    }
+                    lane_scatter(&m, l, lanes, &mut a);
+                }
+                let mut out = vec![0.0; n * n * lanes];
+                expm_lanes_into(&a, &mut out, n, lanes, &mut ws);
+                let mut m = vec![0.0; n * n];
+                let mut e = vec![0.0; n * n];
+                let mut got = vec![0.0; n * n];
+                for l in 0..lanes {
+                    lane_gather(&a, l, lanes, &mut m);
+                    expm_into(&m, &mut e, n, &mut ws);
+                    lane_gather(&out, l, lanes, &mut got);
+                    for (u, v) in got.iter().zip(e.iter()) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "n={n} lanes={lanes} l={l}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expm_lanes_mixed_skewness_routes_per_lane() {
+        // One skew lane next to a non-skew lane: each must follow the route
+        // the scalar kernel would take for it alone.
+        let mut ws = StepWorkspace::new();
+        let lanes = 2;
+        let n = 3;
+        let skew = so3_hat(&[0.4, -0.7, 0.25]);
+        let tri = [0.3, 0.1, 0.0, 0.0, -0.2, 0.05, 0.0, 0.0, 0.1];
+        let mut a = vec![0.0; n * n * lanes];
+        lane_scatter(&skew, 0, lanes, &mut a);
+        lane_scatter(&tri, 1, lanes, &mut a);
+        let mut out = vec![0.0; n * n * lanes];
+        expm_lanes_into(&a, &mut out, n, lanes, &mut ws);
+        let mut e = vec![0.0; n * n];
+        let mut got = vec![0.0; n * n];
+        for (l, src) in [(0usize, &skew[..]), (1, &tri[..])] {
+            expm_into(src, &mut e, n, &mut ws);
+            lane_gather(&out, l, lanes, &mut got);
+            for (u, v) in got.iter().zip(e.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn expm_frechet_lanes_matches_per_lane() {
+        let mut rng = Pcg64::new(42);
+        let mut ws = StepWorkspace::new();
+        for n in [2usize, 3, 4] {
+            for lanes in [1usize, 3, 8] {
+                let nn = n * n;
+                let mut a = vec![0.0; nn * lanes];
+                let mut e = vec![0.0; nn * lanes];
+                rng.fill_normal(&mut a);
+                rng.fill_normal(&mut e);
+                for x in a.iter_mut() {
+                    *x *= 0.3;
+                }
+                let mut ea = vec![0.0; nn * lanes];
+                let mut lf = vec![0.0; nn * lanes];
+                expm_frechet_lanes_into(&a, &e, &mut ea, &mut lf, n, lanes, &mut ws);
+                let mut al = vec![0.0; nn];
+                let mut el = vec![0.0; nn];
+                let mut eal = vec![0.0; nn];
+                let mut ll = vec![0.0; nn];
+                let mut got = vec![0.0; nn];
+                for l in 0..lanes {
+                    lane_gather(&a, l, lanes, &mut al);
+                    lane_gather(&e, l, lanes, &mut el);
+                    expm_frechet_into(&al, &el, &mut eal, &mut ll, n, &mut ws);
+                    lane_gather(&ea, l, lanes, &mut got);
+                    for (u, v) in got.iter().zip(eal.iter()) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "ea n={n} lanes={lanes} l={l}");
+                    }
+                    lane_gather(&lf, l, lanes, &mut got);
+                    for (u, v) in got.iter().zip(ll.iter()) {
+                        assert_eq!(u.to_bits(), v.to_bits(), "L n={n} lanes={lanes} l={l}");
+                    }
+                }
+            }
         }
     }
 

@@ -86,6 +86,53 @@ impl SphereDataset {
     }
 }
 
+/// Hot-path buffers for [`SphereNeuralField`]: ambient panels for the
+/// forward/VJP algebra, scalar and lane-major flavours.
+#[derive(Default)]
+struct SphereScratch {
+    ws: Workspace,
+    m: Vec<f64>,
+    a: Vec<f64>,
+    u: Vec<f64>,
+    cy: Vec<f64>,
+    du: Vec<f64>,
+    cm: Vec<f64>,
+    ca: Vec<f64>,
+    m_l: Vec<f64>,
+    a_l: Vec<f64>,
+    u_l: Vec<f64>,
+    cy_l: Vec<f64>,
+    du_l: Vec<f64>,
+    cm_l: Vec<f64>,
+    ca_l: Vec<f64>,
+}
+
+impl SphereScratch {
+    fn ensure(&mut self, n: usize) {
+        if self.m.len() < n {
+            self.m.resize(n, 0.0);
+            self.a.resize(n, 0.0);
+            self.u.resize(n, 0.0);
+            self.cy.resize(n, 0.0);
+            self.du.resize(n, 0.0);
+            self.cm.resize(n, 0.0);
+            self.ca.resize(n, 0.0);
+        }
+    }
+
+    fn ensure_lanes(&mut self, n: usize, lanes: usize) {
+        if self.m_l.len() < n * lanes {
+            self.m_l.resize(n * lanes, 0.0);
+            self.a_l.resize(n * lanes, 0.0);
+            self.u_l.resize(n * lanes, 0.0);
+            self.cy_l.resize(n * lanes, 0.0);
+            self.du_l.resize(n * lanes, 0.0);
+            self.cm_l.resize(n * lanes, 0.0);
+            self.ca_l.resize(n * lanes, 0.0);
+        }
+    }
+}
+
 /// Neural drift field on the sphere: MLP(z) → ambient vector m(z), tangent
 /// a = (I − zzᵀ)m, generator V = a zᵀ − z aᵀ (rank-2), plus isotropic
 /// tangent diffusion driven by the first algebra coordinates.
@@ -94,7 +141,7 @@ pub struct SphereNeuralField {
     pub drift: Mlp,
     pub sigma: f64,
     sp: Sphere,
-    ws: Pool<Workspace>,
+    ws: Pool<SphereScratch>,
 }
 
 impl SphereNeuralField {
@@ -135,6 +182,23 @@ impl SphereNeuralField {
             }
         }
     }
+
+    /// [`Self::skew_times`] on lane `l` of lane-major blocks, accumulation
+    /// order identical to the scalar body.
+    fn skew_times_lane(&self, cot: &[f64], y: &[f64], out: &mut [f64], l: usize, lanes: usize) {
+        let n = self.n;
+        for i in 0..n {
+            out[i * lanes + l] = 0.0;
+        }
+        let mut k = 0;
+        for i in 0..n {
+            for j in i + 1..n {
+                out[i * lanes + l] += cot[k * lanes + l] * y[j * lanes + l];
+                out[j * lanes + l] -= cot[k * lanes + l] * y[i * lanes + l];
+                k += 1;
+            }
+        }
+    }
 }
 
 impl ManifoldVectorField for SphereNeuralField {
@@ -149,18 +213,68 @@ impl ManifoldVectorField for SphereNeuralField {
     }
     fn generator(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
         let n = self.n;
-        let mut m = vec![0.0; n];
-        self.ws.with(|ws| self.drift.forward(y, &mut m, ws));
-        // a = P_y(m·h + σ·dW) (tangent combined increment).
-        let mut a = vec![0.0; n];
-        for i in 0..n {
-            a[i] = m[i] * h + self.sigma * dw[i];
-        }
-        let dot: f64 = a.iter().zip(y.iter()).map(|(x, z)| x * z).sum();
-        for (ai, yi) in a.iter_mut().zip(y.iter()) {
-            *ai -= dot * yi;
-        }
-        self.sp.tangent_generator(&a, y, out);
+        self.ws.with(|sc| {
+            sc.ensure(n);
+            let SphereScratch { ws, m, a, .. } = sc;
+            self.drift.forward(y, &mut m[..n], ws);
+            // a = P_y(m·h + σ·dW) (tangent combined increment).
+            for i in 0..n {
+                a[i] = m[i] * h + self.sigma * dw[i];
+            }
+            let dot: f64 = a[..n].iter().zip(y.iter()).map(|(x, z)| x * z).sum();
+            for (ai, yi) in a[..n].iter_mut().zip(y.iter()) {
+                *ai -= dot * yi;
+            }
+            self.sp.tangent_generator(&a[..n], y, out);
+        })
+    }
+
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+
+    /// Lane-blocked generator: the MLP runs one blocked
+    /// [`crate::nn::Mlp::forward_lanes`] sweep over the lane group; the
+    /// tangent projection and rank-2 lift then run per lane in the scalar
+    /// op order (the projection's inner product is a per-lane sequential
+    /// reduction, exactly the scalar `sum`).
+    fn generator_lanes(
+        &self,
+        _t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        out: &mut [f64],
+        lanes: usize,
+        _ws: &mut crate::memory::StepWorkspace,
+    ) {
+        let n = self.n;
+        self.ws.with(|sc| {
+            sc.ensure_lanes(n, lanes);
+            let SphereScratch { ws, m_l, a_l, .. } = sc;
+            let nl = n * lanes;
+            self.drift.forward_lanes(y, &mut m_l[..nl], lanes, ws);
+            for i in 0..nl {
+                a_l[i] = m_l[i] * h + self.sigma * dw[i];
+            }
+            for l in 0..lanes {
+                let mut dot = 0.0;
+                for i in 0..n {
+                    dot += a_l[i * lanes + l] * y[i * lanes + l];
+                }
+                for i in 0..n {
+                    a_l[i * lanes + l] -= dot * y[i * lanes + l];
+                }
+                let mut k = 0;
+                for i in 0..n {
+                    for j in i + 1..n {
+                        out[k * lanes + l] = a_l[i * lanes + l] * y[j * lanes + l]
+                            - y[i * lanes + l] * a_l[j * lanes + l];
+                        k += 1;
+                    }
+                }
+            }
+        })
     }
 }
 
@@ -184,40 +298,99 @@ impl DiffManifoldVectorField for SphereNeuralField {
         //   dL = duᵀ P_y Cy − (yᵀu)(Cy)ᵀdy − (Ca)ᵀdy
         // (terms with yᵀCy vanish by skewness).
         let n = self.n;
-        // One workspace checked out for the forward/vjp pair: `Mlp::vjp`
-        // reads the activations the preceding `forward` left in it.
-        let mut ws = self.ws.take();
-        let mut m = vec![0.0; n];
-        self.drift.forward(y, &mut m, &mut ws);
-        let mut u = vec![0.0; n];
-        for i in 0..n {
-            u[i] = m[i] * h + self.sigma * dw[i];
-        }
-        let ydotu: f64 = y.iter().zip(u.iter()).map(|(a, b)| a * b).sum();
-        let mut a = u.clone();
-        for (ai, yi) in a.iter_mut().zip(y.iter()) {
-            *ai -= ydotu * yi;
-        }
-        let mut cy = vec![0.0; n];
-        self.skew_times(cot, y, &mut cy);
-        // d_u = P_y (Cy).
-        let ydotcy: f64 = y.iter().zip(cy.iter()).map(|(a, b)| a * b).sum();
-        let d_u: Vec<f64> = cy
-            .iter()
-            .zip(y.iter())
-            .map(|(c, yi)| c - ydotcy * yi)
-            .collect();
-        // Through the MLP: u = m·h ⇒ cot_m = d_u·h.
-        let cot_m: Vec<f64> = d_u.iter().map(|x| x * h).collect();
-        self.drift.vjp(y, &cot_m, d_y, d_theta, &mut ws);
-        self.ws.put(ws);
-        // Direct y terms. With yᵀCy = 0 the expansion collapses to
-        //   dL_direct = −(yᵀu)(Cy)ᵀdy − (Ca)ᵀdy.
-        let mut ca = vec![0.0; n];
-        self.skew_times(cot, &a, &mut ca);
-        for i in 0..n {
-            d_y[i] += -ca[i] - ydotu * cy[i];
-        }
+        self.ws.with(|sc| {
+            sc.ensure(n);
+            // One scratch checkout for the forward/vjp pair: `Mlp::vjp`
+            // reads the activations the preceding `forward` left in `ws`.
+            let SphereScratch {
+                ws, m, a, u, cy, du, cm, ca, ..
+            } = sc;
+            self.drift.forward(y, &mut m[..n], ws);
+            for i in 0..n {
+                u[i] = m[i] * h + self.sigma * dw[i];
+            }
+            let ydotu: f64 = y.iter().zip(u[..n].iter()).map(|(a, b)| a * b).sum();
+            a[..n].copy_from_slice(&u[..n]);
+            for (ai, yi) in a[..n].iter_mut().zip(y.iter()) {
+                *ai -= ydotu * yi;
+            }
+            self.skew_times(cot, y, &mut cy[..n]);
+            // d_u = P_y (Cy).
+            let ydotcy: f64 = y.iter().zip(cy[..n].iter()).map(|(a, b)| a * b).sum();
+            for i in 0..n {
+                du[i] = cy[i] - ydotcy * y[i];
+            }
+            // Through the MLP: u = m·h ⇒ cot_m = d_u·h.
+            for i in 0..n {
+                cm[i] = du[i] * h;
+            }
+            self.drift.vjp(y, &cm[..n], d_y, d_theta, ws);
+            // Direct y terms. With yᵀCy = 0 the expansion collapses to
+            //   dL_direct = −(yᵀu)(Cy)ᵀdy − (Ca)ᵀdy.
+            self.skew_times(cot, &a[..n], &mut ca[..n]);
+            for i in 0..n {
+                d_y[i] += -ca[i] - ydotu * cy[i];
+            }
+        })
+    }
+
+    /// Lane-blocked VJP: one blocked MLP forward + one blocked MLP VJP for
+    /// the whole lane group (lane `l`'s parameter cotangent accumulating
+    /// into `d_theta[l * num_params() ..]`), with the projection/skew
+    /// algebra replicated per lane in the scalar op order.
+    fn vjp_lanes(
+        &self,
+        _t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        _ws: &mut crate::memory::StepWorkspace,
+    ) {
+        let n = self.n;
+        let np = self.num_params();
+        self.ws.with(|sc| {
+            sc.ensure_lanes(n, lanes);
+            let SphereScratch {
+                ws, m_l, a_l, u_l, cy_l, du_l, cm_l, ca_l, ..
+            } = sc;
+            let nl = n * lanes;
+            self.drift.forward_lanes(y, &mut m_l[..nl], lanes, ws);
+            for i in 0..nl {
+                u_l[i] = m_l[i] * h + self.sigma * dw[i];
+            }
+            let mut ydotu = [0.0f64; crate::linalg::MAX_LANES];
+            for l in 0..lanes {
+                let mut s = 0.0;
+                for i in 0..n {
+                    s += y[i * lanes + l] * u_l[i * lanes + l];
+                }
+                ydotu[l] = s;
+                for i in 0..n {
+                    a_l[i * lanes + l] = u_l[i * lanes + l] - s * y[i * lanes + l];
+                }
+                self.skew_times_lane(cot, y, cy_l, l, lanes);
+                let mut ydotcy = 0.0;
+                for i in 0..n {
+                    ydotcy += y[i * lanes + l] * cy_l[i * lanes + l];
+                }
+                for i in 0..n {
+                    du_l[i * lanes + l] = cy_l[i * lanes + l] - ydotcy * y[i * lanes + l];
+                    cm_l[i * lanes + l] = du_l[i * lanes + l] * h;
+                }
+            }
+            self.drift
+                .vjp_lanes(y, &cm_l[..nl], d_y, d_theta, 0, np, lanes, ws);
+            for l in 0..lanes {
+                self.skew_times_lane(cot, a_l, ca_l, l, lanes);
+                for i in 0..n {
+                    d_y[i * lanes + l] += -ca_l[i * lanes + l] - ydotu[l] * cy_l[i * lanes + l];
+                }
+            }
+        })
     }
 }
 

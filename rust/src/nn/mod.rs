@@ -303,38 +303,30 @@ impl Mlp {
     ) {
         let l_count = self.layer_count();
         debug_assert_eq!(d_params.len(), self.params.len());
-        // Offsets of the *last* layer.
-        let mut p_offs = Vec::with_capacity(l_count);
-        let mut a_offs = Vec::with_capacity(l_count);
-        let mut z_offs = Vec::with_capacity(l_count);
-        {
-            let (mut p, mut a, mut z) = (0, 0, 0);
-            for l in 0..l_count {
-                p_offs.push(p);
-                a_offs.push(a);
-                z_offs.push(z);
-                p += self.sizes[l + 1] * self.sizes[l] + self.sizes[l + 1];
-                a += self.sizes[l];
-                z += self.sizes[l + 1];
-            }
-        }
+        let np = self.params.len();
+        let total_pre: usize = self.sizes[1..].iter().sum();
+        let total_post: usize = self.sizes.iter().sum();
         let maxw = *self.sizes.iter().max().unwrap();
         // delta holds dL/dz_l; next_delta holds dL/da_{l-1}.
         let (delta_buf, next_buf) = ws.delta.split_at_mut(maxw);
         let nout_last = self.out_dim();
+        let z_last = total_pre - nout_last;
         for i in 0..nout_last {
-            let z = ws.pre[z_offs[l_count - 1] + i];
-            let act = if l_count >= 1 {
-                self.final_act
-            } else {
-                self.act
-            };
-            delta_buf[i] = cot[i] * self.out_scale * act.deriv(z);
+            let z = ws.pre[z_last + i];
+            delta_buf[i] = cot[i] * self.out_scale * self.final_act.deriv(z);
         }
+        // Reverse walk with running offsets (same scheme as
+        // [`Self::vjp_lanes`]; no per-call offset Vecs, so the scalar
+        // backprop is allocation-free — pinned by
+        // `rust/tests/alloc_regression.rs`).
+        let mut p_off = np;
+        let mut a_off = total_post - self.sizes[l_count];
+        let mut z_off = total_pre;
         for l in (0..l_count).rev() {
             let (nin, nout) = (self.sizes[l], self.sizes[l + 1]);
-            let p_off = p_offs[l];
-            let a_off = a_offs[l];
+            p_off -= nout * nin + nout;
+            a_off -= nin;
+            z_off -= nout;
             let w = &self.params[p_off..p_off + nout * nin];
             // Parameter grads.
             {
@@ -381,8 +373,9 @@ impl Mlp {
                     self.act
                 };
                 let nprev = self.sizes[l];
+                let z_prev = z_off - nprev;
                 for j in 0..nprev {
-                    let z = ws.pre[z_offs[l - 1] + j];
+                    let z = ws.pre[z_prev + j];
                     delta_buf[j] = next_buf[j] * act.deriv(z);
                 }
             }
@@ -720,6 +713,104 @@ mod tests {
                     assert_eq!(a.to_bits(), b.to_bits(), "d_p lane {l}/{lanes}");
                 }
             }
+        }
+    }
+
+    /// [`Mlp::vjp`] walks the layers with running offsets (no per-call
+    /// offset tables). Pin it BITWISE against a straightforward
+    /// offset-table reference implementation of the same reverse sweep, so
+    /// the allocation-free rewrite can never drift numerically.
+    #[test]
+    fn vjp_running_offsets_match_offset_table_reference() {
+        let reference_vjp = |mlp: &Mlp, cot: &[f64], d_x: &mut [f64], d_params: &mut [f64], ws: &mut Workspace| {
+            let l_count = mlp.sizes.len() - 1;
+            let (mut p_offs, mut a_offs, mut z_offs) = (vec![0; l_count], vec![0; l_count], vec![0; l_count]);
+            let (mut p, mut a, mut z) = (0, 0, 0);
+            for l in 0..l_count {
+                p_offs[l] = p;
+                a_offs[l] = a;
+                z_offs[l] = z;
+                p += mlp.sizes[l + 1] * mlp.sizes[l] + mlp.sizes[l + 1];
+                a += mlp.sizes[l];
+                z += mlp.sizes[l + 1];
+            }
+            let maxw = *mlp.sizes.iter().max().unwrap();
+            let mut delta_buf = vec![0.0; maxw];
+            let mut next_buf = vec![0.0; maxw];
+            for i in 0..mlp.out_dim() {
+                let zv = ws.pre[z_offs[l_count - 1] + i];
+                delta_buf[i] = cot[i] * mlp.out_scale * mlp.final_act.deriv(zv);
+            }
+            for l in (0..l_count).rev() {
+                let (nin, nout) = (mlp.sizes[l], mlp.sizes[l + 1]);
+                let (p_off, a_off) = (p_offs[l], a_offs[l]);
+                let w = &mlp.params[p_off..p_off + nout * nin];
+                for i in 0..nout {
+                    let di = delta_buf[i];
+                    if di == 0.0 {
+                        continue;
+                    }
+                    for j in 0..nin {
+                        d_params[p_off + i * nin + j] += di * ws.post[a_off + j];
+                    }
+                }
+                for i in 0..nout {
+                    d_params[p_off + nout * nin + i] += delta_buf[i];
+                }
+                for nj in next_buf.iter_mut().take(nin) {
+                    *nj = 0.0;
+                }
+                for i in 0..nout {
+                    let di = delta_buf[i];
+                    if di == 0.0 {
+                        continue;
+                    }
+                    for (nj, wij) in next_buf.iter_mut().zip(w[i * nin..(i + 1) * nin].iter()) {
+                        *nj += wij * di;
+                    }
+                }
+                if l == 0 {
+                    for (dxj, nj) in d_x.iter_mut().zip(next_buf.iter()) {
+                        *dxj += nj;
+                    }
+                } else {
+                    let act = if l == l_count { mlp.final_act } else { mlp.act };
+                    for j in 0..mlp.sizes[l] {
+                        delta_buf[j] = next_buf[j] * act.deriv(ws.pre[z_offs[l - 1] + j]);
+                    }
+                }
+            }
+        };
+
+        let mut rng = Pcg64::new(33);
+        let mlp = Mlp::new(
+            vec![4, 9, 6, 3],
+            Activation::LipSwish,
+            Activation::Softplus,
+            &mut rng,
+        )
+        .with_out_scale(0.2);
+        let np = mlp.num_params();
+        let x = [0.4, -1.2, 0.05, 0.8];
+        let cot = [0.7, -0.3, 1.4];
+        let mut ws = Workspace::default();
+        let mut out = [0.0; 3];
+        mlp.forward(&x, &mut out, &mut ws);
+        let mut d_x = [0.1, -0.2, 0.3, 0.0]; // nonzero: vjp accumulates
+        let mut d_p = vec![0.0; np];
+        mlp.vjp(&x, &cot, &mut d_x, &mut d_p, &mut ws);
+
+        let mut rws = Workspace::default();
+        mlp.forward(&x, &mut out, &mut rws);
+        let mut rd_x = [0.1, -0.2, 0.3, 0.0];
+        let mut rd_p = vec![0.0; np];
+        reference_vjp(&mlp, &cot, &mut rd_x, &mut rd_p, &mut rws);
+
+        for (a, b) in d_x.iter().zip(rd_x.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "d_x drifted from reference");
+        }
+        for (k, (a, b)) in d_p.iter().zip(rd_p.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "d_params[{k}] drifted");
         }
     }
 

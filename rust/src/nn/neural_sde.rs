@@ -299,12 +299,47 @@ impl DiffVectorField for NeuralSde {
     }
 }
 
+/// Hot-path buffers for [`TorusNeuralSde`]: encoding, encoding cotangent,
+/// net cotangent and net output panels, in scalar and lane-major flavours.
+#[derive(Default)]
+struct TorusScratch {
+    ws: Workspace,
+    e: Vec<f64>,
+    d_e: Vec<f64>,
+    c: Vec<f64>,
+    o: Vec<f64>,
+    e_l: Vec<f64>,
+    d_e_l: Vec<f64>,
+    c_l: Vec<f64>,
+    o_l: Vec<f64>,
+}
+
+impl TorusScratch {
+    fn ensure(&mut self, n: usize) {
+        if self.e.len() < 3 * n {
+            self.e.resize(3 * n, 0.0);
+            self.d_e.resize(3 * n, 0.0);
+            self.c.resize(2 * n, 0.0);
+            self.o.resize(2 * n, 0.0);
+        }
+    }
+
+    fn ensure_lanes(&mut self, n: usize, lanes: usize) {
+        if self.e_l.len() < 3 * n * lanes {
+            self.e_l.resize(3 * n * lanes, 0.0);
+            self.d_e_l.resize(3 * n * lanes, 0.0);
+            self.c_l.resize(2 * n * lanes, 0.0);
+            self.o_l.resize(2 * n * lanes, 0.0);
+        }
+    }
+}
+
 /// Neural SDE on T𝕋ᴺ with periodic input encoding.
 pub struct TorusNeuralSde {
     pub n_osc: usize,
     pub drift: Mlp,     // input 3N → output 2N (algebra)
     pub diffusion: Mlp, // input 3N → output N (noise on ω only), softplus·0.1
-    ws: Pool<Workspace>,
+    ws: Pool<TorusScratch>,
 }
 
 impl TorusNeuralSde {
@@ -343,16 +378,14 @@ impl TorusNeuralSde {
         self.diffusion.params.copy_from_slice(&p[nd..]);
     }
 
-    /// Periodic encoding (sinθ, cosθ, ω).
-    fn encode(&self, y: &[f64]) -> Vec<f64> {
+    /// Periodic encoding (sinθ, cosθ, ω) into a caller buffer.
+    fn encode_into(&self, y: &[f64], e: &mut [f64]) {
         let n = self.n_osc;
-        let mut e = vec![0.0; 3 * n];
         for i in 0..n {
             e[i] = y[i].sin();
             e[n + i] = y[i].cos();
             e[2 * n + i] = y[n + i];
         }
-        e
     }
 
     /// VJP of the encoding: d_y += (∂e/∂y)ᵀ d_e.
@@ -377,17 +410,60 @@ impl ManifoldVectorField for TorusNeuralSde {
     }
     fn generator(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
         let n = self.n_osc;
-        self.ws.with(|ws| {
-            let e = self.encode(y);
-            self.drift.forward(&e, out, ws);
-            for o in out.iter_mut() {
-                *o *= h;
+        self.ws.with(|sc| {
+            sc.ensure(n);
+            self.encode_into(y, &mut sc.e);
+            let TorusScratch { ws, e, o, .. } = sc;
+            self.drift.forward(&e[..3 * n], out, ws);
+            for ov in out.iter_mut() {
+                *ov *= h;
             }
-            let mut sigma = vec![0.0; n];
-            self.diffusion.forward(&e, &mut sigma, ws);
+            let sigma = &mut o[..n];
+            self.diffusion.forward(&e[..3 * n], sigma, ws);
             // Additive noise on the ω block only (decoupled diffusion).
             for i in 0..n {
                 out[n + i] += sigma[i] * dw[i];
+            }
+        })
+    }
+
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+
+    /// Lane-blocked generator: the periodic encoding is elementwise over the
+    /// lane-major block, then both nets run blocked
+    /// [`crate::nn::Mlp::forward_lanes`] sweeps — per-lane op order is the
+    /// scalar [`ManifoldVectorField::generator`], so each lane is
+    /// bitwise-identical to the gathered per-sample call.
+    fn generator_lanes(
+        &self,
+        _t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        out: &mut [f64],
+        lanes: usize,
+        _ws: &mut crate::memory::StepWorkspace,
+    ) {
+        let n = self.n_osc;
+        self.ws.with(|sc| {
+            sc.ensure_lanes(n, lanes);
+            let TorusScratch { ws, e_l, o_l, .. } = sc;
+            let nl = n * lanes;
+            for i in 0..nl {
+                e_l[i] = y[i].sin();
+                e_l[nl + i] = y[i].cos();
+                e_l[2 * nl + i] = y[nl + i];
+            }
+            self.drift.forward_lanes(&e_l[..3 * nl], out, lanes, ws);
+            for ov in out.iter_mut() {
+                *ov *= h;
+            }
+            let sigma = &mut o_l[..nl];
+            self.diffusion.forward_lanes(&e_l[..3 * nl], sigma, lanes, ws);
+            for i in 0..nl {
+                out[nl + i] += sigma[i] * dw[i];
             }
         })
     }
@@ -408,22 +484,80 @@ impl DiffManifoldVectorField for TorusNeuralSde {
         d_theta: &mut [f64],
     ) {
         let n = self.n_osc;
-        self.ws.with(|ws| {
+        self.ws.with(|sc| {
+            sc.ensure(n);
             let nd = self.drift.num_params();
-            let e = self.encode(y);
-            let mut d_e = vec![0.0; 3 * n];
+            self.encode_into(y, &mut sc.e);
+            let TorusScratch { ws, e, d_e, c, o, .. } = sc;
+            let e = &e[..3 * n];
+            let d_e = &mut d_e[..3 * n];
+            d_e.fill(0.0);
             // Drift: cot·h.
-            let cot_h: Vec<f64> = cot.iter().map(|c| c * h).collect();
-            let mut out = vec![0.0; 2 * n];
-            self.drift.forward(&e, &mut out, ws);
-            self.drift.vjp(&e, &cot_h, &mut d_e, &mut d_theta[..nd], ws);
+            for i in 0..2 * n {
+                c[i] = cot[i] * h;
+            }
+            self.drift.forward(e, &mut o[..2 * n], ws);
+            self.drift.vjp(e, &c[..2 * n], d_e, &mut d_theta[..nd], ws);
             // Diffusion: cot on ω block times dw.
-            let cot_dw: Vec<f64> = (0..n).map(|i| cot[n + i] * dw[i]).collect();
-            let mut sigma = vec![0.0; n];
-            self.diffusion.forward(&e, &mut sigma, ws);
+            for i in 0..n {
+                c[i] = cot[n + i] * dw[i];
+            }
+            self.diffusion.forward(e, &mut o[..n], ws);
+            self.diffusion.vjp(e, &c[..n], d_e, &mut d_theta[nd..], ws);
+            self.encode_vjp(y, d_e, d_y);
+        })
+    }
+
+    /// Lane-blocked VJP: both nets backpropagate the whole lane group
+    /// through [`crate::nn::Mlp::vjp_lanes`] with lane `l`'s parameter
+    /// cotangent landing in `d_theta[l * num_params() ..]` (drift grads
+    /// first, diffusion at offset `nd` — the per-sample flat layout per
+    /// lane), and the encoding pullback runs elementwise over the block.
+    fn vjp_lanes(
+        &self,
+        _t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        _ws: &mut crate::memory::StepWorkspace,
+    ) {
+        let n = self.n_osc;
+        let np = self.num_params();
+        let nd = self.drift.num_params();
+        self.ws.with(|sc| {
+            sc.ensure_lanes(n, lanes);
+            let TorusScratch {
+                ws, e_l, d_e_l, c_l, o_l, ..
+            } = sc;
+            let nl = n * lanes;
+            for i in 0..nl {
+                e_l[i] = y[i].sin();
+                e_l[nl + i] = y[i].cos();
+                e_l[2 * nl + i] = y[nl + i];
+            }
+            let e_l = &e_l[..3 * nl];
+            let d_e_l = &mut d_e_l[..3 * nl];
+            d_e_l.fill(0.0);
+            for i in 0..2 * nl {
+                c_l[i] = cot[i] * h;
+            }
+            self.drift.forward_lanes(e_l, &mut o_l[..2 * nl], lanes, ws);
+            self.drift
+                .vjp_lanes(e_l, &c_l[..2 * nl], d_e_l, d_theta, 0, np, lanes, ws);
+            for i in 0..nl {
+                c_l[i] = cot[nl + i] * dw[i];
+            }
+            self.diffusion.forward_lanes(e_l, &mut o_l[..nl], lanes, ws);
             self.diffusion
-                .vjp(&e, &cot_dw, &mut d_e, &mut d_theta[nd..], ws);
-            self.encode_vjp(y, &d_e, d_y);
+                .vjp_lanes(e_l, &c_l[..nl], d_e_l, d_theta, nd, np, lanes, ws);
+            for i in 0..nl {
+                d_y[i] += d_e_l[i] * y[i].cos() - d_e_l[nl + i] * y[i].sin();
+                d_y[nl + i] += d_e_l[2 * nl + i];
+            }
         })
     }
 }

@@ -132,6 +132,45 @@ impl CfEes {
         ws.put(k);
         ws.put(delta);
     }
+
+    /// Lane-blocked [`Self::apply`]: the two registers become lane-major
+    /// `g × lanes` blocks, the recurrence δ ← A_l δ + K runs elementwise
+    /// over the block, and each stage advances the whole group through
+    /// [`ManifoldVectorField::generator_lanes`] /
+    /// [`HomogeneousSpace::exp_action_lanes`].
+    fn apply_lanes(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let g = sp.algebra_dim();
+        let s = self.stages();
+        let mut delta = ws.take(g * lanes);
+        let mut k = ws.take(g * lanes);
+        let mut v = ws.take(g * lanes);
+        for l in 0..s {
+            let tl = t + self.c[l] * h;
+            vf.generator_lanes(tl, y, h, dw, &mut k, lanes, ws);
+            let al = self.coeffs.a[l];
+            for (d, kd) in delta.iter_mut().zip(k.iter()) {
+                *d = al * *d + kd;
+            }
+            let bl = self.coeffs.b[l];
+            for (vd, d) in v.iter_mut().zip(delta.iter()) {
+                *vd = bl * d;
+            }
+            sp.exp_action_lanes(&v, y, lanes, ws);
+        }
+        ws.put(v);
+        ws.put(k);
+        ws.put(delta);
+    }
 }
 
 impl ManifoldStepper for CfEes {
@@ -237,6 +276,121 @@ impl ManifoldStepper for CfEes {
             let tl = t + self.c[l] * h;
             vf.vjp(tl, yl, h, dw, &lam_delta, &mut lam_y_in, d_theta);
             // λ_{δ_{l−1}} = A_l λ_{δ_l}.
+            let al = self.coeffs.a[l];
+            for d in lam_delta.iter_mut() {
+                *d *= al;
+            }
+            std::mem::swap(&mut lam_y, &mut lam_y_in);
+        }
+        lambda.copy_from_slice(&lam_y);
+        ws.put(lam_delta);
+        ws.put(lam_v);
+        ws.put(lam_y_in);
+        ws.put(lam_y);
+        ws.put(v);
+        ws.put(deltas);
+        ws.put(ys);
+    }
+
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+
+    fn step_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        self.apply_lanes(sp, vf, t, h, dw, y, lanes, ws);
+    }
+
+    fn step_back_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let neg = ws.take_neg(dw);
+        self.apply_lanes(sp, vf, t + h, -h, &neg, y, lanes, ws);
+        ws.put(neg);
+    }
+
+    /// Lane-blocked Algorithm 2: stage recompute and reverse sweep both run
+    /// on lane-major blocks; the per-lane float-op order matches the scalar
+    /// [`Self::backprop_step_ws`], so each lane's `lambda` and parameter
+    /// gradient (lane-contiguous in `d_theta`) are bitwise-identical to the
+    /// per-sample path.
+    fn backprop_step_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn DiffManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let g = sp.algebra_dim();
+        let n = sp.point_dim();
+        let s = self.stages();
+        let nl = n * lanes;
+        let gl = g * lanes;
+        // Recompute the internal stage blocks from the step-start block.
+        let mut ys = ws.take((s + 1) * nl); // Y_0..Y_s, lane-major per stage
+        let mut deltas = ws.take((s + 1) * gl); // δ_0..δ_s
+        let mut v = ws.take(gl);
+        ys[..nl].copy_from_slice(y_prev);
+        {
+            let mut k = ws.take(gl);
+            for l in 0..s {
+                let tl = t + self.c[l] * h;
+                let (prev, cur) = ys.split_at_mut((l + 1) * nl);
+                let yl = &prev[l * nl..(l + 1) * nl];
+                vf.generator_lanes(tl, yl, h, dw, &mut k, lanes, ws);
+                for d in 0..gl {
+                    deltas[(l + 1) * gl + d] = self.coeffs.a[l] * deltas[l * gl + d] + k[d];
+                }
+                for d in 0..gl {
+                    v[d] = self.coeffs.b[l] * deltas[(l + 1) * gl + d];
+                }
+                let ynext = &mut cur[..nl];
+                ynext.copy_from_slice(yl);
+                sp.exp_action_lanes(&v, ynext, lanes, ws);
+            }
+            ws.put(k);
+        }
+        // Reverse sweep over stages, whole lane group at a time.
+        let mut lam_y = ws.take_copy(lambda);
+        let mut lam_y_in = ws.take(nl);
+        let mut lam_v = ws.take(gl);
+        let mut lam_delta = ws.take(gl);
+        for l in (0..s).rev() {
+            let yl = &ys[l * nl..(l + 1) * nl];
+            for d in 0..gl {
+                v[d] = self.coeffs.b[l] * deltas[(l + 1) * gl + d];
+            }
+            lam_y_in.fill(0.0);
+            lam_v.fill(0.0);
+            sp.action_pullback_lanes(&v, yl, &lam_y, &mut lam_y_in, &mut lam_v, lanes, ws);
+            for d in 0..gl {
+                lam_delta[d] += self.coeffs.b[l] * lam_v[d];
+            }
+            let tl = t + self.c[l] * h;
+            vf.vjp_lanes(tl, yl, h, dw, &lam_delta, &mut lam_y_in, d_theta, lanes, ws);
             let al = self.coeffs.a[l];
             for d in lam_delta.iter_mut() {
                 *d *= al;

@@ -109,6 +109,59 @@ impl CrouchGrossman {
         &self.tab.a[i * self.tab.s..i * self.tab.s + i]
     }
 
+    /// Lane-blocked [`Self::apply_product`]: `ks` holds lane-major
+    /// `g × lanes` blocks per slope; each nonzero coefficient scales the
+    /// whole block elementwise and advances the group through one
+    /// [`HomogeneousSpace::exp_action_lanes`].
+    fn apply_product_lanes(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        coeffs: &[f64],
+        ks: &[f64],
+        g: usize,
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let gl = g * lanes;
+        let mut v = ws.take(gl);
+        for (j, &c) in coeffs.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            for d in 0..gl {
+                v[d] = c * ks[j * gl + d];
+            }
+            sp.exp_action_lanes(&v, y, lanes, ws);
+        }
+        ws.put(v);
+    }
+
+    /// Lane-blocked [`Self::stage_slopes`].
+    fn stage_slopes_lanes(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y0: &[f64],
+        ks: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let s = self.tab.s;
+        let gl = sp.algebra_dim() * lanes;
+        let mut yi = ws.take(y0.len());
+        for i in 0..s {
+            yi.copy_from_slice(y0);
+            self.apply_product_lanes(sp, self.a_row(i), ks, sp.algebra_dim(), &mut yi, lanes, ws);
+            let ti = t + self.tab.c[i] * h;
+            vf.generator_lanes(ti, &yi, h, dw, &mut ks[i * gl..(i + 1) * gl], lanes, ws);
+        }
+        ws.put(yi);
+    }
+
     /// Recompute all stage slopes K_j from the step-start state into `ks`.
     fn stage_slopes(
         &self,
@@ -325,6 +378,32 @@ impl ManifoldStepper for CrouchGrossman {
         ws.put(stage_states);
         ws.put(ks);
     }
+
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+
+    /// Lane-blocked forward step: every stage's exponential product and
+    /// generator evaluation advances the whole lane group. The adjoint
+    /// keeps the trait's per-lane fallback (the ordered-product chain
+    /// pullback is inherently per-slope; grouping wins little there).
+    fn step_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let g = sp.algebra_dim();
+        let mut ks = ws.take(self.tab.s * g * lanes);
+        self.stage_slopes_lanes(sp, vf, t, h, dw, y, &mut ks, lanes, ws);
+        self.apply_product_lanes(sp, &self.tab.b, &ks, g, y, lanes, ws);
+        ws.put(ks);
+    }
 }
 
 /// Geometric Euler–Maruyama: yₙ₊₁ = Λ(exp(ξ(yₙ; h, ΔW)), yₙ) — the
@@ -402,6 +481,56 @@ impl ManifoldStepper for GeoEulerMaruyama {
         let mut lam_v = ws.take(g);
         sp.action_pullback(&k, y_prev, lambda, &mut lam_y, &mut lam_v);
         vf.vjp(t, y_prev, h, dw, &lam_v, &mut lam_y, d_theta);
+        lambda.copy_from_slice(&lam_y);
+        ws.put(lam_v);
+        ws.put(lam_y);
+        ws.put(k);
+    }
+
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+
+    fn step_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let mut k = ws.take(sp.algebra_dim() * lanes);
+        vf.generator_lanes(t, y, h, dw, &mut k, lanes, ws);
+        sp.exp_action_lanes(&k, y, lanes, ws);
+        ws.put(k);
+    }
+
+    /// Lane-blocked adjoint: one blocked generator, one blocked pullback,
+    /// one blocked field VJP for the whole lane group.
+    fn backprop_step_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn DiffManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let gl = sp.algebra_dim() * lanes;
+        let nl = sp.point_dim() * lanes;
+        let mut k = ws.take(gl);
+        vf.generator_lanes(t, y_prev, h, dw, &mut k, lanes, ws);
+        let mut lam_y = ws.take(nl);
+        let mut lam_v = ws.take(gl);
+        sp.action_pullback_lanes(&k, y_prev, lambda, &mut lam_y, &mut lam_v, lanes, ws);
+        vf.vjp_lanes(t, y_prev, h, dw, &lam_v, &mut lam_y, d_theta, lanes, ws);
         lambda.copy_from_slice(&lam_y);
         ws.put(lam_v);
         ws.put(lam_y);

@@ -125,6 +125,76 @@ impl Mcf {
             }
         }
     }
+
+    /// Lane-blocked Ψ: the base increment evaluates through
+    /// [`VectorField::combined_lanes`] on lane-major blocks; the midpoint
+    /// average is elementwise, so per-lane op order matches [`Self::psi`].
+    #[allow(clippy::too_many_arguments)]
+    fn psi_lanes(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &[f64],
+        out: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        match self.base {
+            BaseMethod::Euler => vf.combined_lanes(t, y, h, dw, out, lanes, ws),
+            BaseMethod::Midpoint => {
+                let dl = vf.dim() * lanes;
+                let mut mid = ws.take(dl);
+                vf.combined_lanes(t, y, h, dw, &mut mid, lanes, ws);
+                for (m, &yi) in mid.iter_mut().zip(y.iter()) {
+                    *m = yi + 0.5 * *m;
+                }
+                vf.combined_lanes(t + 0.5 * h, &mid, h, dw, out, lanes, ws);
+                ws.put(mid);
+            }
+        }
+    }
+
+    /// Lane-blocked [`Self::psi_vjp`]; `d_theta` is lane-contiguous as in
+    /// [`DiffVectorField::vjp_lanes`].
+    #[allow(clippy::too_many_arguments)]
+    fn psi_vjp_lanes(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        match self.base {
+            BaseMethod::Euler => vf.vjp_lanes(t, y, h, dw, cot, d_y, d_theta, lanes, ws),
+            BaseMethod::Midpoint => {
+                let dl = vf.dim() * lanes;
+                let mut mid = ws.take(dl);
+                vf.combined_lanes(t, y, h, dw, &mut mid, lanes, ws);
+                for (m, &yi) in mid.iter_mut().zip(y.iter()) {
+                    *m = yi + 0.5 * *m;
+                }
+                let mut d_mid = ws.take(dl);
+                vf.vjp_lanes(t + 0.5 * h, &mid, h, dw, cot, &mut d_mid, d_theta, lanes, ws);
+                for (dy, dm) in d_y.iter_mut().zip(d_mid.iter()) {
+                    *dy += dm;
+                }
+                for dm in d_mid.iter_mut() {
+                    *dm *= 0.5;
+                }
+                vf.vjp_lanes(t, y, h, dw, &d_mid, d_y, d_theta, lanes, ws);
+                ws.put(d_mid);
+                ws.put(mid);
+            }
+        }
+    }
 }
 
 impl Stepper for Mcf {
@@ -247,6 +317,124 @@ impl Stepper for Mcf {
         }
         self.psi_vjp(vf, t, h, dw, z, &y1_tot, &mut lam_z, d_theta, ws);
         lambda[dim..].copy_from_slice(&lam_z);
+        ws.put(lam_z);
+        ws.put(y1_tot);
+        ws.put(lam_z1);
+        ws.put(lam_y1);
+        ws.put(y1);
+        ws.put(psi_z);
+        ws.put(neg);
+    }
+
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+
+    fn step_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let dl = vf.dim() * lanes;
+        let neg = ws.take_neg(dw);
+        let (y, z) = state.split_at_mut(dl);
+        let mut psi_z = ws.take(dl);
+        self.psi_lanes(vf, t, h, dw, z, &mut psi_z, lanes, ws);
+        for i in 0..dl {
+            y[i] = self.lambda * y[i] + (1.0 - self.lambda) * z[i] + psi_z[i];
+        }
+        let mut psi_y1 = ws.take(dl);
+        self.psi_lanes(vf, t + h, -h, &neg, y, &mut psi_y1, lanes, ws);
+        for i in 0..dl {
+            z[i] -= psi_y1[i];
+        }
+        ws.put(psi_y1);
+        ws.put(psi_z);
+        ws.put(neg);
+    }
+
+    fn step_back_lanes_ws(
+        &self,
+        vf: &dyn VectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let dl = vf.dim() * lanes;
+        let neg = ws.take_neg(dw);
+        let (y, z) = state.split_at_mut(dl);
+        let mut psi_y1 = ws.take(dl);
+        self.psi_lanes(vf, t + h, -h, &neg, y, &mut psi_y1, lanes, ws);
+        for i in 0..dl {
+            z[i] += psi_y1[i];
+        }
+        let mut psi_z = ws.take(dl);
+        self.psi_lanes(vf, t, h, dw, z, &mut psi_z, lanes, ws);
+        for i in 0..dl {
+            y[i] = (y[i] - (1.0 - self.lambda) * z[i] - psi_z[i]) / self.lambda;
+        }
+        ws.put(psi_z);
+        ws.put(psi_y1);
+        ws.put(neg);
+    }
+
+    fn backprop_step_lanes_ws(
+        &self,
+        vf: &dyn DiffVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        state_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let dl = vf.dim() * lanes;
+        let neg = ws.take_neg(dw);
+        let (y, z) = state_prev.split_at(dl);
+        let mut psi_z = ws.take(dl);
+        self.psi_lanes(vf, t, h, dw, z, &mut psi_z, lanes, ws);
+        let mut y1 = ws.take(dl);
+        for i in 0..dl {
+            y1[i] = self.lambda * y[i] + (1.0 - self.lambda) * z[i] + psi_z[i];
+        }
+        let lam_y1 = ws.take_copy(&lambda[..dl]);
+        let lam_z1 = ws.take_copy(&lambda[dl..]);
+        let mut y1_tot = ws.take_copy(&lam_y1);
+        {
+            let neg_lam = ws.take_neg(&lam_z1);
+            self.psi_vjp_lanes(
+                vf,
+                t + h,
+                -h,
+                &neg,
+                &y1,
+                &neg_lam,
+                &mut y1_tot,
+                d_theta,
+                lanes,
+                ws,
+            );
+            ws.put(neg_lam);
+        }
+        for i in 0..dl {
+            lambda[i] = self.lambda * y1_tot[i];
+        }
+        let mut lam_z = ws.take_copy(&lam_z1);
+        for i in 0..dl {
+            lam_z[i] += (1.0 - self.lambda) * y1_tot[i];
+        }
+        self.psi_vjp_lanes(vf, t, h, dw, z, &y1_tot, &mut lam_z, d_theta, lanes, ws);
+        lambda[dl..].copy_from_slice(&lam_z);
         ws.put(lam_z);
         ws.put(y1_tot);
         ws.put(lam_z1);

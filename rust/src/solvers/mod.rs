@@ -380,6 +380,99 @@ pub trait ManifoldStepper: Send + Sync {
         d_theta: &mut [f64],
         ws: &mut StepWorkspace,
     );
+
+    /// Whether this scheme overrides the `*_lanes_ws` entry points with a
+    /// genuinely lane-blocked implementation — the manifold twin of
+    /// [`Stepper::lane_blocked`]. The batch engine groups samples into
+    /// lanes only when both this and the field's
+    /// [`ManifoldVectorField::lane_blocked`] are true.
+    fn lane_blocked(&self) -> bool {
+        false
+    }
+
+    /// Lane-blocked [`Self::step_ws`]: advance `lanes` samples at once.
+    /// `y` is a lane-major block (`point_dim × lanes`), `dw` is
+    /// `noise_dim × lanes`; every lane shares one `(t, h)` and lane `l`'s
+    /// result is **bitwise-identical** to [`Self::step_ws`] on the gathered
+    /// lane (pinned by `rust/tests/determinism.rs`).
+    fn step_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        lane_fallback(y, dw, lanes, ws, |yl, dwl, ws| {
+            self.step_ws(sp, vf, t, h, dwl, yl, ws)
+        });
+    }
+
+    /// Lane-blocked [`Self::step_back_ws`] (same block conventions as
+    /// [`Self::step_lanes_ws`]).
+    fn step_back_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        lane_fallback(y, dw, lanes, ws, |yl, dwl, ws| {
+            self.step_back_ws(sp, vf, t, h, dwl, yl, ws)
+        });
+    }
+
+    /// Lane-blocked [`Self::backprop_step_ws`]: `y_prev` and `lambda` are
+    /// lane-major blocks; `d_theta` is lane-contiguous (lane `l`
+    /// accumulates into `d_theta[l * vf.num_params() ..]`), preserving the
+    /// per-sample accumulation order within each lane so the batch engine's
+    /// fixed-order gradient reduction stays bitwise lane-count-invariant.
+    #[allow(clippy::too_many_arguments)]
+    fn backprop_step_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn DiffManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let np = vf.num_params();
+        let mut yl = ws.take(y_prev.len() / lanes);
+        let mut dwl = ws.take(dw.len() / lanes);
+        let mut ll = ws.take(lambda.len() / lanes);
+        for l in 0..lanes {
+            crate::linalg::lane_gather(y_prev, l, lanes, &mut yl);
+            crate::linalg::lane_gather(dw, l, lanes, &mut dwl);
+            crate::linalg::lane_gather(lambda, l, lanes, &mut ll);
+            self.backprop_step_ws(
+                sp,
+                vf,
+                t,
+                h,
+                &dwl,
+                &yl,
+                &mut ll,
+                &mut d_theta[l * np..(l + 1) * np],
+                ws,
+            );
+            crate::linalg::lane_scatter(&ll, l, lanes, lambda);
+        }
+        ws.put(ll);
+        ws.put(dwl);
+        ws.put(yl);
+    }
 }
 
 /// Integrate a Euclidean SDE over a sampled driver, recording the primary

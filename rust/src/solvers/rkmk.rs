@@ -278,6 +278,185 @@ impl ManifoldStepper for Rkmk {
         ws.put(stage_states);
         ws.put(k);
     }
+
+    fn lane_blocked(&self) -> bool {
+        // Bracket corrections (dexp⁻¹ order ≥ 1) are per-sample; only the
+        // identity-truncation configuration (the one used for training)
+        // steps whole lane groups.
+        self.dexpinv_order == 0
+    }
+
+    /// Lane-blocked step for `dexpinv_order == 0` (dexp⁻¹ = identity, so
+    /// each stage slope is the blocked generator directly); higher
+    /// truncation orders take the per-lane fallback, which is
+    /// bitwise-equal by construction.
+    fn step_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn ManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        if self.dexpinv_order != 0 {
+            super::lane_fallback(y, dw, lanes, ws, |yl, dwl, ws| {
+                self.step_ws(sp, vf, t, h, dwl, yl, ws)
+            });
+            return;
+        }
+        let s = self.tab.s;
+        let gl = sp.algebra_dim() * lanes;
+        let mut k = ws.take(s * gl);
+        let mut u = ws.take(gl);
+        let mut yi = ws.take(y.len());
+        for i in 0..s {
+            u.fill(0.0);
+            for j in 0..i {
+                let a = self.tab.a[i * s + j];
+                if a == 0.0 {
+                    continue;
+                }
+                for d in 0..gl {
+                    u[d] += a * k[j * gl + d];
+                }
+            }
+            yi.copy_from_slice(y);
+            if i > 0 {
+                sp.exp_action_lanes(&u, &mut yi, lanes, ws);
+            }
+            let ti = t + self.tab.c[i] * h;
+            let (head, tail) = k.split_at_mut(i * gl);
+            let _ = head;
+            vf.generator_lanes(ti, &yi, h, dw, &mut tail[..gl], lanes, ws);
+        }
+        u.fill(0.0);
+        for i in 0..s {
+            let b = self.tab.b[i];
+            for d in 0..gl {
+                u[d] += b * k[i * gl + d];
+            }
+        }
+        sp.exp_action_lanes(&u, y, lanes, ws);
+        ws.put(yi);
+        ws.put(u);
+        ws.put(k);
+    }
+
+    /// Lane-blocked Algorithm 2 at `dexpinv_order == 0`: forward recompute
+    /// and reverse sweep run on lane-major blocks, per-lane float-op order
+    /// matching [`Self::backprop_step_ws`].
+    fn backprop_step_lanes_ws(
+        &self,
+        sp: &dyn HomogeneousSpace,
+        vf: &dyn DiffManifoldVectorField,
+        t: f64,
+        h: f64,
+        dw: &[f64],
+        y_prev: &[f64],
+        lambda: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        assert_eq!(
+            self.dexpinv_order, 0,
+            "RKMK backprop implemented for dexpinv_order = 0"
+        );
+        let s = self.tab.s;
+        let gl = sp.algebra_dim() * lanes;
+        let nl = sp.point_dim() * lanes;
+        let mut k = ws.take(s * gl);
+        let mut us = ws.take(s * gl);
+        let mut stage_states = ws.take(s * nl);
+        {
+            let mut u = ws.take(gl);
+            let mut yi = ws.take(nl);
+            for i in 0..s {
+                u.fill(0.0);
+                for j in 0..i {
+                    let a = self.tab.a[i * s + j];
+                    for d in 0..gl {
+                        u[d] += a * k[j * gl + d];
+                    }
+                }
+                yi.copy_from_slice(y_prev);
+                if i > 0 {
+                    sp.exp_action_lanes(&u, &mut yi, lanes, ws);
+                }
+                let ti = t + self.tab.c[i] * h;
+                let (head, tail) = k.split_at_mut(i * gl);
+                let _ = head;
+                vf.generator_lanes(ti, &yi, h, dw, &mut tail[..gl], lanes, ws);
+                us[i * gl..(i + 1) * gl].copy_from_slice(&u);
+                stage_states[i * nl..(i + 1) * nl].copy_from_slice(&yi);
+            }
+            ws.put(yi);
+            ws.put(u);
+        }
+        let mut u_fin = ws.take(gl);
+        for i in 0..s {
+            for d in 0..gl {
+                u_fin[d] += self.tab.b[i] * k[i * gl + d];
+            }
+        }
+        let mut lam_y0 = ws.take(nl);
+        let mut lam_u = ws.take(gl);
+        sp.action_pullback_lanes(&u_fin, y_prev, lambda, &mut lam_y0, &mut lam_u, lanes, ws);
+        let mut lam_k = ws.take(s * gl);
+        for i in 0..s {
+            for d in 0..gl {
+                lam_k[i * gl + d] += self.tab.b[i] * lam_u[d];
+            }
+        }
+        let mut lam_yi = ws.take(nl);
+        let mut lam_base = ws.take(nl);
+        let mut lam_ui = ws.take(gl);
+        let mut cot = ws.take(gl);
+        for i in (0..s).rev() {
+            let ti = t + self.tab.c[i] * h;
+            let yi = &stage_states[i * nl..(i + 1) * nl];
+            lam_yi.fill(0.0);
+            cot.copy_from_slice(&lam_k[i * gl..(i + 1) * gl]);
+            vf.vjp_lanes(ti, yi, h, dw, &cot, &mut lam_yi, d_theta, lanes, ws);
+            if i == 0 {
+                for d in 0..nl {
+                    lam_y0[d] += lam_yi[d];
+                }
+            } else {
+                let u = &us[i * gl..(i + 1) * gl];
+                lam_base.fill(0.0);
+                lam_ui.fill(0.0);
+                sp.action_pullback_lanes(u, y_prev, &lam_yi, &mut lam_base, &mut lam_ui, lanes, ws);
+                for d in 0..nl {
+                    lam_y0[d] += lam_base[d];
+                }
+                for j in 0..i {
+                    let a = self.tab.a[i * s + j];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    for d in 0..gl {
+                        lam_k[j * gl + d] += a * lam_ui[d];
+                    }
+                }
+            }
+        }
+        lambda.copy_from_slice(&lam_y0);
+        ws.put(cot);
+        ws.put(lam_ui);
+        ws.put(lam_base);
+        ws.put(lam_yi);
+        ws.put(lam_k);
+        ws.put(lam_u);
+        ws.put(lam_y0);
+        ws.put(u_fin);
+        ws.put(us);
+        ws.put(stage_states);
+        ws.put(k);
+    }
 }
 
 #[cfg(test)]

@@ -147,6 +147,47 @@ pub trait ManifoldVectorField: Send + Sync {
     fn noise_dim(&self) -> usize;
     /// K = ξ_drift(t, y)·h + ξ_diff(t, y)·dw ∈ 𝔤 (basis coefficients).
     fn generator(&self, t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]);
+
+    /// Whether this field overrides [`Self::generator_lanes`] (and, for
+    /// differentiable fields, `vjp_lanes`) with genuinely blocked kernels —
+    /// the manifold twin of [`VectorField::lane_blocked`]. The batch engine
+    /// only groups samples into lanes when both the manifold stepper and
+    /// the field report true.
+    fn lane_blocked(&self) -> bool {
+        false
+    }
+
+    /// Lane-blocked [`Self::generator`]: `y` (`point_dim × lanes`), `dw`
+    /// (`noise_dim × lanes`) and `out` (`algebra_dim × lanes`) are
+    /// lane-major structure-of-arrays blocks sharing one `(t, h)`. The
+    /// default gathers each lane and calls the scalar generator —
+    /// bitwise-equal by construction, scratch from `ws`; neural fields
+    /// override with [`crate::linalg::matmul_lanes`]-backed kernels that
+    /// keep the per-lane float-op order.
+    fn generator_lanes(
+        &self,
+        t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        out: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let mut yl = ws.take(self.point_dim());
+        let mut dwl = ws.take(self.noise_dim());
+        let mut ol = ws.take(self.algebra_dim());
+        for l in 0..lanes {
+            lane_gather(y, l, lanes, &mut yl);
+            lane_gather(dw, l, lanes, &mut dwl);
+            ol.fill(0.0);
+            self.generator(t, &yl, h, &dwl, &mut ol);
+            lane_scatter(&ol, l, lanes, out);
+        }
+        ws.put(ol);
+        ws.put(dwl);
+        ws.put(yl);
+    }
 }
 
 /// Differentiable manifold field for Algorithm 2.
@@ -166,6 +207,53 @@ pub trait DiffManifoldVectorField: ManifoldVectorField {
         d_y: &mut [f64],
         d_theta: &mut [f64],
     );
+
+    /// Lane-blocked [`Self::vjp`]: `y`/`dw` lane-major blocks of
+    /// `point_dim`/`noise_dim` components, `cot` an `algebra_dim × lanes`
+    /// block, `d_y` a `point_dim × lanes` block accumulated into, and
+    /// `d_theta` **lane-contiguous** (lane `l` accumulates into
+    /// `d_theta[l * num_params() ..][..num_params()]`) — the same layout
+    /// contract as [`DiffVectorField::vjp_lanes`], so the batch engine's
+    /// fixed-order gradient reduction is unchanged by lane grouping.
+    #[allow(clippy::too_many_arguments)]
+    fn vjp_lanes(
+        &self,
+        t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        cot: &[f64],
+        d_y: &mut [f64],
+        d_theta: &mut [f64],
+        lanes: usize,
+        ws: &mut StepWorkspace,
+    ) {
+        let np = self.num_params();
+        let mut yl = ws.take(self.point_dim());
+        let mut dwl = ws.take(self.noise_dim());
+        let mut cl = ws.take(self.algebra_dim());
+        let mut dyl = ws.take(self.point_dim());
+        for l in 0..lanes {
+            lane_gather(y, l, lanes, &mut yl);
+            lane_gather(dw, l, lanes, &mut dwl);
+            lane_gather(cot, l, lanes, &mut cl);
+            lane_gather(d_y, l, lanes, &mut dyl);
+            self.vjp(
+                t,
+                &yl,
+                h,
+                &dwl,
+                &cl,
+                &mut dyl,
+                &mut d_theta[l * np..(l + 1) * np],
+            );
+            lane_scatter(&dyl, l, lanes, d_y);
+        }
+        ws.put(dyl);
+        ws.put(cl);
+        ws.put(dwl);
+        ws.put(yl);
+    }
 }
 
 /// Analytic vector field from drift/diffusion closures (tests, simulators).

@@ -339,6 +339,15 @@ fn all_nine_solvers_zero_allocs_per_step_after_warmup() {
     // fallback kernels) and an MLP field (blocked matmul kernels).
     lane_stepping_zero_alloc();
 
+    // Manifold lane-blocked stepping: CF-EES / SRKMK / CG / geo-EM lane
+    // groups on Sphere / SO(3) / 𝕋ᴺ, including the batched expm/Fréchet
+    // panels and the manifold models' lane VJP sweeps.
+    manifold_lane_stepping_zero_alloc();
+
+    // Scalar MLP backprop: the running-offset reverse walk allocates
+    // nothing once the workspace is warm.
+    mlp_scalar_vjp_zero_alloc();
+
     // And the linalg `_into` kernels with a warm workspace.
     linalg_into_kernels_zero_alloc();
 
@@ -590,6 +599,214 @@ fn lane_stepping_zero_alloc() {
         });
         assert_eq!(n, 0, "lanes/embedded_ees25: {n} allocations in 31 warm lane steps");
     }
+}
+
+/// Warm-up + measured lane steps for a manifold stepper: the lane-blocked
+/// forward, reverse (where supported) and lane adjoint sweep must all be 0
+/// allocs per step once the step workspace AND the model's pooled scratch
+/// are warm.
+fn assert_manifold_lane_zero_alloc(
+    name: &str,
+    st: &dyn ManifoldStepper,
+    sp: &dyn HomogeneousSpace,
+    vf: &dyn DiffManifoldVectorField,
+    y0: &[f64],
+    check_back: bool,
+) {
+    let lanes = 8usize;
+    let dim = sp.point_dim();
+    let nd = vf.noise_dim();
+    let np = vf.num_params();
+    let mut rng = Pcg64::new(17);
+    let path = BrownianPath::sample(&mut rng, nd, 32, 0.01);
+    let mut ws = StepWorkspace::new();
+    // Lane-major state block with every lane at y0.
+    let mut y = vec![0.0; dim * lanes];
+    for l in 0..lanes {
+        for (i, v) in y0.iter().enumerate() {
+            y[i * lanes + l] = *v;
+        }
+    }
+    let mut dw = vec![0.0; nd * lanes];
+    let mut lambda = vec![0.0; dim * lanes];
+    let mut d_theta = vec![0.0; (lanes * np).max(1)];
+    let pack = |n: usize, dw: &mut [f64]| {
+        let inc = path.increment(n);
+        for j in 0..nd {
+            for l in 0..lanes {
+                dw[j * lanes + l] = inc[j];
+            }
+        }
+    };
+    // Two warm-up rounds: the second stabilises pooled model/space scratch
+    // after its first checkout per entry point.
+    for _ in 0..2 {
+        pack(0, &mut dw);
+        st.step_lanes_ws(sp, vf, 0.0, 0.01, &dw, &mut y, lanes, &mut ws);
+        if check_back {
+            st.step_back_lanes_ws(sp, vf, 0.0, 0.01, &dw, &mut y, lanes, &mut ws);
+        }
+        lambda[0] = 1.0;
+        st.backprop_step_lanes_ws(
+            sp,
+            vf,
+            0.0,
+            0.01,
+            &dw,
+            &y,
+            &mut lambda,
+            &mut d_theta,
+            lanes,
+            &mut ws,
+        );
+    }
+    let n = measure(|| {
+        for k in 1..32 {
+            pack(k, &mut dw);
+            let t = k as f64 * 0.01;
+            st.step_lanes_ws(sp, vf, t, 0.01, &dw, &mut y, lanes, &mut ws);
+            if check_back {
+                st.step_back_lanes_ws(sp, vf, t, 0.01, &dw, &mut y, lanes, &mut ws);
+            }
+            st.backprop_step_lanes_ws(
+                sp,
+                vf,
+                t,
+                0.01,
+                &dw,
+                &y,
+                &mut lambda,
+                &mut d_theta,
+                lanes,
+                &mut ws,
+            );
+        }
+    });
+    assert_eq!(n, 0, "{name}: {n} allocations in 31 warm lane steps");
+}
+
+/// The manifold lane hot path's allocation contract: lane-blocked CF-EES /
+/// SRKMK(order 0) / Crouch–Grossman / geometric EM stepping — including the
+/// batched `expm_lanes_into` / `expm_frechet_lanes_into` panels on Sphere
+/// and the SO(3) Rodrigues fast path, and the manifold models'
+/// pooled-scratch lane VJPs — performs zero heap allocations per warm step.
+fn manifold_lane_stepping_zero_alloc() {
+    use ees::models::sphere_lsde::SphereNeuralField;
+    use ees::nn::neural_sde::TorusNeuralSde;
+
+    let cf = CfEes::ees25();
+    // Sphere S³: batched expm/Fréchet panels + the sphere model's lane VJP.
+    {
+        let sp = Sphere::new(4);
+        let model = SphereNeuralField::new(4, 6, 0.2, &mut Pcg64::new(3));
+        let mut y0 = vec![0.0; 4];
+        y0[0] = 1.0;
+        assert_manifold_lane_zero_alloc("lanes/cfees25_sphere4", &cf, &sp, &model, &y0, true);
+    }
+    // T𝕋³: the torus model's lane-major encode + MLP lane kernels.
+    {
+        let sp = TTorus::new(3);
+        let model = TorusNeuralSde::new(3, 8, &mut Pcg64::new(5));
+        assert_manifold_lane_zero_alloc(
+            "lanes/cfees25_ttorus",
+            &cf,
+            &sp,
+            &model,
+            &[0.2; 6],
+            true,
+        );
+    }
+    // SO(3): the per-lane Rodrigues fast path.
+    assert_manifold_lane_zero_alloc(
+        "lanes/cfees25_so3",
+        &cf,
+        &So3::new(),
+        &GenField { point_dim: 9, algebra_dim: 3 },
+        &ees::linalg::eye(3),
+        true,
+    );
+    // SRKMK (order 0), Crouch–Grossman and geometric EM lane arms.
+    assert_manifold_lane_zero_alloc(
+        "lanes/srkmk3_ttorus",
+        &Rkmk::srkmk3(),
+        &TTorus::new(3),
+        &GenField { point_dim: 6, algebra_dim: 6 },
+        &[0.1; 6],
+        false,
+    );
+    assert_manifold_lane_zero_alloc(
+        "lanes/cg3_torus",
+        &CrouchGrossman::cg3(),
+        &Torus::new(4),
+        &GenField { point_dim: 4, algebra_dim: 4 },
+        &[0.2; 4],
+        false,
+    );
+    assert_manifold_lane_zero_alloc(
+        "lanes/geo_em_so3",
+        &GeoEulerMaruyama::new(),
+        &So3::new(),
+        &GenField { point_dim: 9, algebra_dim: 3 },
+        &ees::linalg::eye(3),
+        false,
+    );
+
+    // The batched expm panels directly: gather-per-lane cores draw every
+    // register from the caller's warm workspace.
+    {
+        use ees::linalg::{expm_frechet_lanes_into, expm_lanes_into};
+        let (n, lanes) = (4usize, 8usize);
+        let mut rng = Pcg64::new(29);
+        let mut a = vec![0.0; n * n * lanes];
+        let mut e = vec![0.0; n * n * lanes];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut e);
+        for x in a.iter_mut() {
+            *x *= 0.2;
+        }
+        let mut out = vec![0.0; n * n * lanes];
+        let (mut ea, mut l) = (vec![0.0; n * n * lanes], vec![0.0; n * n * lanes]);
+        let mut ws = StepWorkspace::new();
+        expm_lanes_into(&a, &mut out, n, lanes, &mut ws);
+        expm_frechet_lanes_into(&a, &e, &mut ea, &mut l, n, lanes, &mut ws);
+        let count = measure(|| {
+            for _ in 0..16 {
+                expm_lanes_into(&a, &mut out, n, lanes, &mut ws);
+                expm_frechet_lanes_into(&a, &e, &mut ea, &mut l, n, lanes, &mut ws);
+            }
+        });
+        assert_eq!(count, 0, "{count} allocations in warm batched expm panels");
+    }
+}
+
+/// The scalar [`ees::nn::Mlp`] backprop walks its layers with running
+/// offsets — no per-call offset tables — so a warm forward+vjp pair
+/// allocates nothing.
+fn mlp_scalar_vjp_zero_alloc() {
+    use ees::nn::{Activation, Mlp, Workspace};
+    let mut rng = Pcg64::new(23);
+    let mlp = Mlp::new(
+        vec![4, 8, 8, 3],
+        Activation::LipSwish,
+        Activation::Identity,
+        &mut rng,
+    );
+    let np = mlp.num_params();
+    let x = [0.3, -0.7, 1.1, 0.2];
+    let cot = [0.9, -0.4, 0.1];
+    let mut ws = Workspace::default();
+    let mut out = [0.0; 3];
+    let mut d_x = [0.0; 4];
+    let mut d_p = vec![0.0; np];
+    mlp.forward(&x, &mut out, &mut ws);
+    mlp.vjp(&x, &cot, &mut d_x, &mut d_p, &mut ws);
+    let n = measure(|| {
+        for _ in 0..32 {
+            mlp.forward(&x, &mut out, &mut ws);
+            mlp.vjp(&x, &cot, &mut d_x, &mut d_p, &mut ws);
+        }
+    });
+    assert_eq!(n, 0, "scalar Mlp forward+vjp: {n} allocations in 32 warm pairs");
 }
 
 /// Warm [`ees::rng::VirtualBrownianTree`] queries perform zero heap

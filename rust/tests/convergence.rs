@@ -162,6 +162,95 @@ fn manifold_families_strong_order() {
     }
 }
 
+/// Lane-vs-scalar strong-order consistency for CF-EES: stepping the REPS
+/// paths of each refinement level as lane-blocked groups of 8 must give
+/// terminal values **bitwise-equal** to per-sample integration — so the
+/// measured strong order of the lane-blocked hot path is the documented
+/// order by construction, and we assert it on the lane-built RMSE ladder
+/// anyway as an end-to-end net.
+#[test]
+fn cfees_lane_blocked_strong_order_consistency() {
+    use ees::memory::StepWorkspace;
+
+    let sp = Torus::new(1);
+    let vf = circle_field();
+    let st = CfEes::ees25();
+    let paths = fine_paths(43);
+
+    // Step a whole set of same-grid paths in lane groups of ≤ 8; returns
+    // per-path terminal angles.
+    let lane_terminals = |paths: &[BrownianPath]| -> Vec<f64> {
+        let steps = paths[0].steps();
+        let h = paths[0].h;
+        let mut out = vec![0.0; paths.len()];
+        let mut ws = StepWorkspace::new();
+        let mut lo = 0;
+        while lo < paths.len() {
+            let ll = 8usize.min(paths.len() - lo);
+            let mut y = vec![0.3; ll]; // point_dim = 1: block is just the lanes
+            let mut dw = vec![0.0; 2 * ll];
+            for n in 0..steps {
+                for l in 0..ll {
+                    let inc = paths[lo + l].increment(n);
+                    dw[l] = inc[0];
+                    dw[ll + l] = inc[1];
+                }
+                st.step_lanes_ws(&sp, &vf, n as f64 * h, h, &dw, &mut y, ll, &mut ws);
+            }
+            out[lo..lo + ll].copy_from_slice(&y);
+            lo += ll;
+        }
+        out
+    };
+    let scalar_terminal = |path: &BrownianPath| -> f64 {
+        let traj = integrate_manifold(&st, &sp, &vf, 0.0, &[0.3], path);
+        traj[path.steps()]
+    };
+
+    // Fine reference level + every coarsening: lane-blocked bitwise-equal
+    // to per-sample.
+    let fine_lane = lane_terminals(&paths);
+    for (p, &t) in paths.iter().zip(fine_lane.iter()) {
+        assert_eq!(
+            scalar_terminal(p).to_bits(),
+            t.to_bits(),
+            "lane-blocked fine terminal drifted from per-sample"
+        );
+    }
+    let mut rmse = Vec::with_capacity(COARSENINGS.len());
+    for &k in &COARSENINGS {
+        let coarse: Vec<BrownianPath> = paths
+            .iter()
+            .map(|p| p.coarsen(k).expect("FINE % k == 0"))
+            .collect();
+        let lane_t = lane_terminals(&coarse);
+        let mut mse = 0.0;
+        for (i, (p, &t)) in coarse.iter().zip(lane_t.iter()).enumerate() {
+            assert_eq!(
+                scalar_terminal(p).to_bits(),
+                t.to_bits(),
+                "lane-blocked terminal drifted from per-sample at k={k}"
+            );
+            let e = wrap_angle(t - fine_lane[i]);
+            mse += e * e / coarse.len() as f64;
+        }
+        rmse.push(mse.sqrt());
+    }
+    // Slope fit over the lane-built ladder (same formula as
+    // `measured_order`).
+    let lx: Vec<f64> = COARSENINGS
+        .iter()
+        .map(|&k| (k as f64 / FINE as f64).ln())
+        .collect();
+    let ly: Vec<f64> = rmse.iter().map(|e| e.max(1e-300).ln()).collect();
+    let n = lx.len() as f64;
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let num: f64 = lx.iter().zip(ly.iter()).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    assert_order("cfees/ees25 (lane-blocked)", num / den, &rmse);
+}
+
 /// The same sweep driven by virtual-Brownian-tree grids: materialising a
 /// dyadic grid from per-rep trees must reproduce the documented order too
 /// (the tree is a legitimate drop-in noise source for fixed-step solvers).

@@ -355,6 +355,179 @@ fn lane_count_bitwise_invariant() {
     }
 }
 
+/// The manifold lane engine's contract, mirroring
+/// [`lane_count_bitwise_invariant`]: stepping lane groups on Sphere /
+/// SO(n) / 𝕋ᴺ through the lane-blocked manifold steppers (batched
+/// generator panels, batched matrix exponentials, lane-blocked adjoint
+/// sweeps) is bitwise-invisible at every (worker, lane) combination,
+/// including ragged tail groups, for all three adjoint methods.
+#[test]
+fn manifold_lane_count_bitwise_invariant() {
+    use ees::coordinator::batch_grad_manifold_pool_lanes;
+    use ees::lie::{HomogeneousSpace, SOn, Sphere};
+    use ees::memory::WorkspacePool;
+    use ees::models::sphere_lsde::SphereNeuralField;
+    use ees::solvers::{CrouchGrossman, GeoEulerMaruyama, ManifoldStepper, Rkmk};
+    use ees::vf::{DiffManifoldVectorField, ManifoldVectorField};
+
+    /// Allocation-free analytic field with lane support ENABLED: the trait's
+    /// per-lane default kernels must be just as bitwise-invisible as the
+    /// hand-blocked model kernels.
+    struct AnalyticField {
+        point_dim: usize,
+        algebra_dim: usize,
+    }
+    impl ManifoldVectorField for AnalyticField {
+        fn point_dim(&self) -> usize {
+            self.point_dim
+        }
+        fn algebra_dim(&self) -> usize {
+            self.algebra_dim
+        }
+        fn noise_dim(&self) -> usize {
+            2
+        }
+        fn lane_blocked(&self) -> bool {
+            true
+        }
+        fn generator(&self, t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+            for (k, o) in out.iter_mut().enumerate() {
+                let yk = y[k % y.len()];
+                *o = (0.3 * yk + 0.05 * t.cos()) * h + 0.1 * yk * dw[0] - 0.02 * dw[1];
+            }
+        }
+    }
+    impl DiffManifoldVectorField for AnalyticField {
+        fn num_params(&self) -> usize {
+            0
+        }
+        fn vjp(
+            &self,
+            _t: f64,
+            _y: &[f64],
+            h: f64,
+            dw: &[f64],
+            cot: &[f64],
+            d_y: &mut [f64],
+            _d_theta: &mut [f64],
+        ) {
+            let n = d_y.len();
+            for (k, c) in cot.iter().enumerate() {
+                d_y[k % n] += c * (0.3 * h + 0.1 * dw[0]);
+            }
+        }
+    }
+
+    // batch = 11: lanes = 4 and 8 leave ragged tail groups; 16 collapses to
+    // one ragged group.
+    let (steps, h, batch) = (12usize, 0.04, 11usize);
+    let obs = vec![6, 12];
+    let pool = WorkspacePool::new();
+    let cf = CfEes::ees25();
+
+    let check = |name: &str,
+                 st: &dyn ManifoldStepper,
+                 sp: &dyn HomogeneousSpace,
+                 vf: &dyn DiffManifoldVectorField,
+                 y0: &[f64],
+                 methods: &[AdjointMethod]| {
+        let dim = sp.point_dim();
+        let mut rng = Pcg64::new(777);
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| y0.to_vec()).collect();
+        let paths = sample_paths_par(&mut rng, batch, vf.noise_dim(), steps, h, 1);
+        let mut data = vec![0.0; batch * obs.len() * dim];
+        rng.fill_normal(&mut data);
+        let loss = MomentMatch::from_data(&data, batch, obs.len(), dim);
+        for &method in methods {
+            let (l1, g1, m1) = batch_grad_manifold_pool_lanes(
+                st, method, sp, vf, &y0s, &paths, &obs, &loss, 1, &pool, 1,
+            );
+            for (par, lanes) in [(1, 2), (3, 4), (2, 8), (4, 16)] {
+                let (lp, gp, mp) = batch_grad_manifold_pool_lanes(
+                    st, method, sp, vf, &y0s, &paths, &obs, &loss, par, &pool, lanes,
+                );
+                assert_eq!(
+                    l1.to_bits(),
+                    lp.to_bits(),
+                    "{name} {} loss at P={par} L={lanes}",
+                    method.name()
+                );
+                assert_eq!(m1, mp, "{name} {} memory at P={par} L={lanes}", method.name());
+                assert_bits_eq(
+                    &g1,
+                    &gp,
+                    &format!("{name} {} grad at P={par} L={lanes}", method.name()),
+                );
+            }
+        }
+    };
+
+    let all = [
+        AdjointMethod::Full,
+        AdjointMethod::Recursive,
+        AdjointMethod::Reversible,
+    ];
+
+    // CF-EES across the three curved substrates, all three adjoints.
+    {
+        let sp = Sphere::new(4);
+        let model = SphereNeuralField::new(4, 6, 0.2, &mut Pcg64::new(3));
+        let mut y0 = vec![0.0; 4];
+        y0[0] = 1.0;
+        check("cfees/sphere", &cf, &sp, &model, &y0, &all);
+    }
+    {
+        let n_osc = 3;
+        let sp = TTorus::new(n_osc);
+        let model = TorusNeuralSde::new(n_osc, 8, &mut Pcg64::new(5));
+        check("cfees/ttorus", &cf, &sp, &model, &vec![0.3; 2 * n_osc], &all);
+    }
+    {
+        let sp = SOn::new(4);
+        let field = AnalyticField {
+            point_dim: 16,
+            algebra_dim: 6,
+        };
+        check("cfees/so4", &cf, &sp, &field, &ees::linalg::eye(4), &all);
+    }
+
+    // Geometric EM and order-0 SRKMK (both lane-blocked) and Crouch–Grossman
+    // (lane-blocked forward, per-lane adjoint fallback) on one substrate
+    // each — the non-reversible families pin Full + Recursive.
+    {
+        let sp = ees::lie::So3::new();
+        let field = AnalyticField {
+            point_dim: 9,
+            algebra_dim: 3,
+        };
+        let fr = [AdjointMethod::Full, AdjointMethod::Recursive];
+        check(
+            "geo_em/so3",
+            &GeoEulerMaruyama::new(),
+            &sp,
+            &field,
+            &ees::linalg::eye(3),
+            &fr,
+        );
+        check(
+            "srkmk3/so3",
+            &Rkmk::srkmk3(),
+            &sp,
+            &field,
+            &ees::linalg::eye(3),
+            &fr,
+        );
+        check(
+            "cg3/so3",
+            &CrouchGrossman::cg3(),
+            &sp,
+            &field,
+            &ees::linalg::eye(3),
+            &fr,
+        );
+    }
+}
+
 #[test]
 fn split_streams_are_schedule_independent() {
     // sample_paths_par must give sample b the same path regardless of how

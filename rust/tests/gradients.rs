@@ -257,6 +257,126 @@ fn sphere_lsde_adjoints_agree_and_match_fd_on_grid_path() {
     }
 }
 
+/// Lane-blocked manifold batch gradients, FD-golden-checked: the sphere
+/// latent SDE and the torus neural SDE driven through
+/// `batch_grad_manifold_pool_lanes` with a ragged lane group (batch 5,
+/// lanes 4) must match central differences through independent per-sample
+/// forward solves — for all three adjoints. This is the net over the whole
+/// lane stack: lane generator panels, batched exponentials, lane VJPs and
+/// the lane-contiguous gradient reduction.
+#[test]
+fn manifold_lane_batch_grads_match_fd_all_adjoints() {
+    use ees::coordinator::{batch_grad_manifold_pool_lanes, sample_paths_par};
+    use ees::lie::TTorus;
+    use ees::losses::{BatchLoss, MomentMatch};
+    use ees::memory::WorkspacePool;
+    use ees::nn::neural_sde::TorusNeuralSde;
+
+    let batch = 5usize; // lanes = 4 leaves a ragged tail group of 1
+    let pool = WorkspacePool::new();
+    let st = CfEes::ees25();
+
+    // ---- sphere-LSDE arm -------------------------------------------------
+    {
+        let (sp, field, y0, obs, _) = sphere_setup();
+        let mut rng = Pcg64::new(61);
+        let paths = sample_paths_par(&mut rng, batch, 4, 12, 0.05, 1);
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| y0.clone()).collect();
+        let mut data = vec![0.0; batch * obs.len() * 4];
+        rng.fill_normal(&mut data);
+        let loss = MomentMatch::from_data(&data, batch, obs.len(), 4);
+
+        let fd_loss = |params: &[f64]| -> f64 {
+            let f = sphere_field_at(params);
+            let mut obs_all = vec![0.0; batch * obs.len() * 4];
+            for (b, path) in paths.iter().enumerate() {
+                let traj = integrate_manifold(&st, &sp, &f, 0.0, &y0s[b], path);
+                for (i, &n) in obs.iter().enumerate() {
+                    obs_all[(b * obs.len() + i) * 4..(b * obs.len() + i + 1) * 4]
+                        .copy_from_slice(&traj[n * 4..(n + 1) * 4]);
+                }
+            }
+            loss.eval_grad(&obs_all, batch, obs.len(), 4).0
+        };
+
+        let p0 = field.params();
+        let eps = 1e-6;
+        for m in ALL_METHODS {
+            let (_, g, _) = batch_grad_manifold_pool_lanes(
+                &st, m, &sp, &field, &y0s, &paths, &obs, &loss, 1, &pool, 4,
+            );
+            let mut idx = Pcg64::new(5);
+            for _ in 0..6 {
+                let k = idx.below(p0.len());
+                let mut pp = p0.clone();
+                pp[k] += eps;
+                let mut pm = p0.clone();
+                pm[k] -= eps;
+                let fd = (fd_loss(&pp) - fd_loss(&pm)) / (2.0 * eps);
+                assert!(
+                    (fd - g[k]).abs() < 2e-5 * (1.0 + g[k].abs()),
+                    "sphere {} theta {k}: FD {fd} vs lane adjoint {}",
+                    m.name(),
+                    g[k]
+                );
+            }
+        }
+    }
+
+    // ---- torus neural-SDE arm (the Kuramoto substrate with trainable
+    // drift/diffusion nets) ----------------------------------------------
+    {
+        let n_osc = 3;
+        let sp = TTorus::new(n_osc);
+        let dim = 2 * n_osc;
+        let field = TorusNeuralSde::new(n_osc, 8, &mut Pcg64::new(13));
+        let mut rng = Pcg64::new(67);
+        let paths = sample_paths_par(&mut rng, batch, n_osc, 10, 0.04, 1);
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.25; dim]).collect();
+        let obs = vec![5, 10];
+        let mut data = vec![0.0; batch * obs.len() * dim];
+        rng.fill_normal(&mut data);
+        let loss = MomentMatch::from_data(&data, batch, obs.len(), dim);
+
+        let fd_loss = |params: &[f64]| -> f64 {
+            let mut f = TorusNeuralSde::new(n_osc, 8, &mut Pcg64::new(13));
+            f.set_params(params);
+            let mut obs_all = vec![0.0; batch * obs.len() * dim];
+            for (b, path) in paths.iter().enumerate() {
+                let traj = integrate_manifold(&st, &sp, &f, 0.0, &y0s[b], path);
+                for (i, &n) in obs.iter().enumerate() {
+                    obs_all[(b * obs.len() + i) * dim..(b * obs.len() + i + 1) * dim]
+                        .copy_from_slice(&traj[n * dim..(n + 1) * dim]);
+                }
+            }
+            loss.eval_grad(&obs_all, batch, obs.len(), dim).0
+        };
+
+        let p0 = field.params();
+        let eps = 1e-6;
+        for m in ALL_METHODS {
+            let (_, g, _) = batch_grad_manifold_pool_lanes(
+                &st, m, &sp, &field, &y0s, &paths, &obs, &loss, 1, &pool, 4,
+            );
+            let mut idx = Pcg64::new(9);
+            for _ in 0..6 {
+                let k = idx.below(p0.len());
+                let mut pp = p0.clone();
+                pp[k] += eps;
+                let mut pm = p0.clone();
+                pm[k] -= eps;
+                let fd = (fd_loss(&pp) - fd_loss(&pm)) / (2.0 * eps);
+                assert!(
+                    (fd - g[k]).abs() < 2e-5 * (1.0 + g[k].abs()),
+                    "torus {} theta {k}: FD {fd} vs lane adjoint {}",
+                    m.name(),
+                    g[k]
+                );
+            }
+        }
+    }
+}
+
 /// Sphere latent SDE over a virtual Brownian tree through
 /// `grad_manifold_source`: agreement across methods + FD golden check via
 /// the source-driven forward.

@@ -15,6 +15,14 @@
 //!       non-zero on a >25% speedup drop or a lane-acceptance
 //!       (batch_grad_lanes >= 1.5x) failure; speedups, not absolute ns/op,
 //!       so the gate is portable across CI runner hardware
+//!
+//! Built with `--features simd`, the ledger grows `simd_dot/*`,
+//! `simd_matmul_lanes/*` and `batch_grad_lanes_simd/*` arms whose baseline
+//! column is the same kernel with the SIMD knob off, so `speedup` reads
+//! directly as the SIMD win over the scalar reference kernels; in `--full
+//! --check` runs those arms gate at >= 1.3x (quick mode is too noisy to
+//! gate on). `regressions_vs` skips arms absent on either side, so a
+//! default-build `--check` against a simd-build ledger still works.
 
 use ees::adjoint::{grad_euclidean, AdjointMethod, MseToTargets};
 use ees::bench::ledger::{
@@ -240,6 +248,11 @@ fn main() {
     let iters = if full { 60 } else { 15 };
     let warmup = if full { 10 } else { 3 };
     let mut ledger = Ledger::new(if full { "full" } else { "quick" });
+
+    // Pin the SIMD knob off for every scalar arm regardless of `EES_SIMD`
+    // in the environment; the simd_* arms toggle it explicitly around each
+    // measurement. (No-op in a default build.)
+    ees::linalg::set_simd(false);
 
     let mut rng = Pcg64::new(7);
     let steps = 64;
@@ -867,6 +880,150 @@ fn main() {
         }
     }
 
+    // --- feature-gated SIMD kernel arms ----------------------------------
+    // The "workspace" column runs with the SIMD knob ON, the baseline
+    // column with it OFF, so `speedup` reads directly as the SIMD win over
+    // the scalar reference kernels on identical inputs.
+    #[cfg(feature = "simd")]
+    {
+        use ees::linalg::{dot, matmul_lanes, set_simd};
+
+        // Plain dot at the hot vector-field width (d = 16) and at d = 64.
+        for n in [16usize, 64] {
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            let mut r = Pcg64::new(200 + n as u64);
+            r.fill_normal(&mut a);
+            r.fill_normal(&mut b);
+            let reps = 4096usize;
+            set_simd(true);
+            let median = median_ns(warmup, iters, || {
+                for _ in 0..reps {
+                    std::hint::black_box(dot(std::hint::black_box(&a), std::hint::black_box(&b)));
+                }
+            }) / reps as f64;
+            let allocs = allocs_per_op(reps, || {
+                for _ in 0..reps {
+                    std::hint::black_box(dot(&a, &b));
+                }
+            });
+            set_simd(false);
+            let base_median = median_ns(warmup, iters, || {
+                for _ in 0..reps {
+                    std::hint::black_box(dot(std::hint::black_box(&a), std::hint::black_box(&b)));
+                }
+            }) / reps as f64;
+            let base_allocs = allocs_per_op(reps, || {
+                for _ in 0..reps {
+                    std::hint::black_box(dot(&a, &b));
+                }
+            });
+            ledger.push(LedgerEntry {
+                name: format!("simd_dot/d{n}"),
+                median_ns: median,
+                allocs_per_op: allocs,
+                baseline_median_ns: base_median,
+                baseline_allocs_per_op: base_allocs,
+            });
+        }
+
+        // The lane-major GEMM the group step runs on: 16x16 against an
+        // 8-lane SoA block (the acceptance shape, d = 16, L = 8).
+        {
+            let (m, k, lanes) = (16usize, 16usize, 8usize);
+            let mut a = vec![0.0; m * k];
+            let mut x = vec![0.0; k * lanes];
+            let mut out = vec![0.0; m * lanes];
+            let mut r = Pcg64::new(77);
+            r.fill_normal(&mut a);
+            r.fill_normal(&mut x);
+            let reps = 512usize;
+            set_simd(true);
+            let median = median_ns(warmup, iters, || {
+                for _ in 0..reps {
+                    matmul_lanes(&a, &x, &mut out, m, k, lanes);
+                    std::hint::black_box(&out);
+                }
+            }) / reps as f64;
+            let allocs = allocs_per_op(reps, || {
+                for _ in 0..reps {
+                    matmul_lanes(&a, &x, &mut out, m, k, lanes);
+                }
+            });
+            set_simd(false);
+            let base_median = median_ns(warmup, iters, || {
+                for _ in 0..reps {
+                    matmul_lanes(&a, &x, &mut out, m, k, lanes);
+                    std::hint::black_box(&out);
+                }
+            }) / reps as f64;
+            let base_allocs = allocs_per_op(reps, || {
+                for _ in 0..reps {
+                    matmul_lanes(&a, &x, &mut out, m, k, lanes);
+                }
+            });
+            ledger.push(LedgerEntry {
+                name: "simd_matmul_lanes/d16_l8".into(),
+                median_ns: median,
+                allocs_per_op: allocs,
+                baseline_median_ns: base_median,
+                baseline_allocs_per_op: base_allocs,
+            });
+        }
+
+        // End-to-end: the full lane-blocked batch gradient with the SIMD
+        // kernels dispatched vs the same lane engine on scalar kernels —
+        // what EES_SIMD=1 actually buys a training epoch.
+        {
+            use ees::coordinator::{batch_grad_euclidean_pool_lanes, sample_paths_par};
+            use ees::losses::MomentMatch;
+            use ees::memory::WorkspacePool;
+            use ees::nn::neural_sde::NeuralSde;
+            let (dim, lanes) = (16usize, 8usize);
+            let model = NeuralSde::lsde(dim, 32, 2, false, &mut Pcg64::new(3));
+            let (batch, bsteps) = (16usize, 50usize);
+            let mut brng = Pcg64::new(13);
+            let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.1; dim]).collect();
+            let paths = sample_paths_par(&mut brng, batch, dim, bsteps, 0.02, 1);
+            let obs = vec![bsteps];
+            let loss = MomentMatch {
+                target_mean: vec![0.0; dim],
+                target_m2: vec![1.0; dim],
+            };
+            let st = LowStorageStepper::ees25();
+            let pool = WorkspacePool::new();
+            let ops = batch * bsteps;
+            let run = || {
+                let out = batch_grad_euclidean_pool_lanes(
+                    &st,
+                    AdjointMethod::Reversible,
+                    &model,
+                    &y0s,
+                    &paths,
+                    &obs,
+                    &loss,
+                    1,
+                    &pool,
+                    lanes,
+                );
+                std::hint::black_box(&out);
+            };
+            set_simd(true);
+            let median = median_ns(warmup, iters, run) / ops as f64;
+            let allocs = allocs_per_op(ops, run);
+            set_simd(false);
+            let base_median = median_ns(warmup, iters, run) / ops as f64;
+            let base_allocs = allocs_per_op(ops, run);
+            ledger.push(LedgerEntry {
+                name: "batch_grad_lanes_simd/b16_s50_d16".into(),
+                median_ns: median,
+                allocs_per_op: allocs,
+                baseline_median_ns: base_median,
+                baseline_allocs_per_op: base_allocs,
+            });
+        }
+    }
+
     println!("{}", ledger.render_table());
     let json = ledger.to_json();
 
@@ -901,6 +1058,24 @@ fn main() {
                         "{gated}: lane speedup {:.2}x < required 1.5x",
                         e.speedup()
                     ));
+                }
+            }
+        }
+        // SIMD acceptance arms: >= 1.3x over the scalar kernels, gated only
+        // in full mode (quick mode's 15 iterations are too noisy to fail a
+        // build on).
+        #[cfg(feature = "simd")]
+        {
+            if full {
+                for gated in ["simd_matmul_lanes/d16_l8", "batch_grad_lanes_simd/b16_s50_d16"] {
+                    if let Some(e) = ledger.entries.iter().find(|e| e.name == gated) {
+                        if e.speedup() < 1.3 {
+                            failures.push(format!(
+                                "{gated}: simd speedup {:.2}x < required 1.3x",
+                                e.speedup()
+                            ));
+                        }
+                    }
                 }
             }
         }

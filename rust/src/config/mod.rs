@@ -59,6 +59,36 @@ pub fn default_lanes() -> usize {
     })
 }
 
+/// Default for the SIMD kernel switch ([`crate::linalg::simd_enabled`]):
+/// whether the hot linalg/NN kernels dispatch to their explicit-width
+/// SIMD variants (feature `simd`) instead of the scalar reference kernels.
+///
+/// Resolution order, cached for the process lifetime:
+/// 1. the `EES_SIMD` environment variable (`1`/`true`/`on`/`yes` → on,
+///    `0`/`false`/`off`/`no` → off);
+/// 2. `false` — the scalar kernels stay the default because they define
+///    the crate's bitwise determinism contract (one float-op order shared
+///    by every GEMV/GEMM path); the SIMD variants reassociate the
+///    reductions and are therefore only tolerance-equal (see
+///    `docs/ARCHITECTURE.md` §SIMD kernels & the determinism contract).
+///
+/// Without the `simd` cargo feature this knob is inert:
+/// [`crate::linalg::simd_enabled`] is compile-time `false`. Process-wide
+/// overrides go through [`crate::linalg::set_simd`]; [`Config::simd`]
+/// reads the `[exec] simd` key for config-driven harnesses.
+pub fn default_simd() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        if let Ok(v) = std::env::var("EES_SIMD") {
+            return matches!(
+                v.trim().to_ascii_lowercase().as_str(),
+                "1" | "true" | "on" | "yes"
+            );
+        }
+        false
+    })
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
     Str(String),
@@ -169,6 +199,17 @@ impl Config {
     pub fn lanes(&self) -> usize {
         self.usize_or("exec.lanes", default_lanes())
             .clamp(1, crate::linalg::MAX_LANES)
+    }
+
+    /// SIMD kernel switch: the `[exec] simd` key when present, otherwise
+    /// the process default ([`default_simd`], i.e. the `EES_SIMD` env
+    /// var). Unlike the worker/lane knobs this is **not** bitwise-neutral:
+    /// the SIMD kernels reassociate reductions, so turning it on trades
+    /// the bitwise determinism contract for speed (the SIMD arm is still
+    /// run-to-run deterministic at a fixed width). Inert unless the crate
+    /// is built with `--features simd`.
+    pub fn simd(&self) -> bool {
+        self.bool_or("exec.simd", default_simd())
     }
 }
 
@@ -289,5 +330,15 @@ obs = [4, 8, 12]
         let d = Config::parse("").unwrap();
         assert_eq!(d.lanes(), default_lanes());
         assert!((1..=crate::linalg::MAX_LANES).contains(&default_lanes()));
+    }
+
+    #[test]
+    fn simd_knob() {
+        let on = Config::parse("[exec]\nsimd = true").unwrap();
+        assert!(on.simd());
+        let off = Config::parse("[exec]\nsimd = false").unwrap();
+        assert!(!off.simd());
+        let d = Config::parse("").unwrap();
+        assert_eq!(d.simd(), default_simd());
     }
 }

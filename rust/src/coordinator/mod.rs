@@ -54,6 +54,16 @@
 //! loss, gradient and memory figures are identical at every `(workers,
 //! lanes)` combination (pinned by `rust/tests/determinism.rs`).
 //!
+//! When the crate is built with `--features simd`, the lane kernels the
+//! group step runs on ([`crate::linalg::matmul_lanes`] and the
+//! [`crate::nn::Mlp`] lane epilogues) additionally consult the process-wide
+//! SIMD toggle ([`crate::linalg::simd_enabled`]: the `EES_SIMD` env var /
+//! `[exec] simd` key, or [`crate::train::EuclideanProblem::with_simd`]).
+//! No batch entry point takes a SIMD parameter — the knob is resolved
+//! inside the kernels so every caller (pool, lanes, manifold) inherits it
+//! uniformly; see `docs/ARCHITECTURE.md` §SIMD kernels & the determinism
+//! contract for why the portable arm stays bitwise-equal.
+//!
 //! # Memory accounting
 //!
 //! The adjoint-memory model meters the same quantities as a sequential

@@ -9,15 +9,90 @@
 //! [`StepWorkspace`] so a warm call performs zero heap allocations. The
 //! original allocating signatures ([`expm`], [`expm_frechet`],
 //! [`transpose`], …) survive as thin wrappers for cold call sites.
+//!
+//! Under the `simd` cargo feature each hot kernel ([`dot`],
+//! [`dot_strided`], [`matvec`], [`matvec_t`], [`matmul`],
+//! [`matmul_lanes`]) is a thin runtime dispatcher: when [`simd_enabled`]
+//! (the `EES_SIMD` / `[exec] simd` knob) it routes to the explicit-width
+//! kernels in the `simd` submodule, otherwise to the `*_scalar` reference
+//! kernels, whose float-op order defines the crate's bitwise determinism
+//! contract. Without the feature the dispatchers compile straight to the
+//! scalar kernels (zero overhead, knob inert). See
+//! `docs/ARCHITECTURE.md` §SIMD kernels & the determinism contract.
 
 use crate::memory::StepWorkspace;
+
+#[cfg(feature = "simd")]
+pub mod simd;
+
+#[cfg(feature = "simd")]
+static SIMD_MODE: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+
+/// Whether the hot kernels currently dispatch to their SIMD variants.
+/// Resolution: a process-wide [`set_simd`] override when one was made,
+/// otherwise [`crate::config::default_simd`] (the `EES_SIMD` env var).
+/// A relaxed atomic load — cheap enough for per-call checks, and worker
+/// threads of the batch engine observe the same process-wide state.
+#[cfg(feature = "simd")]
+#[inline]
+pub fn simd_enabled() -> bool {
+    match SIMD_MODE.load(std::sync::atomic::Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => crate::config::default_simd(),
+    }
+}
+
+/// Without the `simd` feature the SIMD arm does not exist: compile-time
+/// `false`, so the dispatchers fold away entirely.
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn simd_enabled() -> bool {
+    false
+}
+
+/// Process-wide override of the SIMD dispatch knob (e.g. from
+/// `ees::train::EuclideanProblem::with_simd` or a test/bench toggling
+/// arms). Overrides the `EES_SIMD` default until the next call. Note the
+/// portable SIMD kernels are bitwise-identical to the scalar ones (they
+/// pack, never reassociate — see the `simd` module docs), so on builds
+/// without the AVX2+FMA specialisation this toggle is numerically
+/// invisible.
+#[cfg(feature = "simd")]
+pub fn set_simd(on: bool) {
+    SIMD_MODE.store(
+        if on { 2 } else { 1 },
+        std::sync::atomic::Ordering::Relaxed,
+    );
+}
+
+/// Without the `simd` feature the knob is inert (accepted for source
+/// compatibility so callers need no `cfg`).
+#[cfg(not(feature = "simd"))]
+pub fn set_simd(_on: bool) {}
+
+/// Dot product — the float-op-order definition every GEMV/GEMM path in
+/// the crate shares. Dispatches to the SIMD kernel when [`simd_enabled`],
+/// else to the scalar reference [`dot_scalar`].
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    #[cfg(feature = "simd")]
+    {
+        if simd_enabled() {
+            return simd::dot(a, b);
+        }
+    }
+    dot_scalar(a, b)
+}
 
 /// 4-way unrolled dot product — independent accumulators so LLVM can
 /// vectorise the reduction (a single serial accumulator pins the f64
 /// addition order and blocks SIMD). Shared by [`matvec`] and the MLP
-/// forward in [`crate::nn`].
+/// forward in [`crate::nn`]. This is the scalar reference kernel whose
+/// accumulation order ((s0+s1)+(s2+s3) over 4-chunks, sequential tail)
+/// defines the bitwise determinism contract.
 #[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
     let n = a.len().min(b.len());
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
@@ -35,10 +110,23 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     acc
 }
 
+/// C = A·B for row-major (m×k)·(k×n). Dispatches to the SIMD kernel when
+/// [`simd_enabled`], else to the scalar reference [`matmul_scalar`].
+pub fn matmul(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    #[cfg(feature = "simd")]
+    {
+        if simd_enabled() {
+            return simd::matmul(a, b, c, m, k, n);
+        }
+    }
+    matmul_scalar(a, b, c, m, k, n);
+}
+
 /// C = A·B for row-major (m×k)·(k×n), register-blocked over 4 rows of B so
 /// each pass streams four B-rows against one resident C-row (4× less C
-/// traffic than the rank-1 update loop, and an unrolled FMA body).
-pub fn matmul(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+/// traffic than the rank-1 update loop, and an unrolled FMA body). Scalar
+/// reference kernel.
+pub fn matmul_scalar(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -71,26 +159,53 @@ pub fn matmul(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize)
     }
 }
 
-/// y = A·x for row-major (m×n)·(n), each row reduced with the unrolled
-/// [`dot`] kernel.
+/// y = A·x for row-major (m×n)·(n). Dispatches to the SIMD kernel when
+/// [`simd_enabled`], else to the scalar reference [`matvec_scalar`].
 pub fn matvec(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
+    #[cfg(feature = "simd")]
+    {
+        if simd_enabled() {
+            return simd::matvec(a, x, y, m, n);
+        }
+    }
+    matvec_scalar(a, x, y, m, n);
+}
+
+/// y = A·x for row-major (m×n)·(n), each row reduced with the unrolled
+/// [`dot_scalar`] kernel. Scalar reference kernel.
+pub fn matvec_scalar(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(x.len(), n);
     debug_assert_eq!(y.len(), m);
     for (yi, row) in y.iter_mut().zip(a.chunks_exact(n)).take(m) {
-        *yi = dot(row, x);
+        *yi = dot_scalar(row, x);
     }
 }
 
 /// Strided companion of [`dot`]: reduces `Σ_i a[offset + i*stride] * x[i]`
-/// with exactly the same accumulation order (four independent accumulators
-/// over 4-chunks, combined as `(s0+s1)+(s2+s3)`, then a sequential tail).
-/// This is what lets every GEMV/GEMM path in the crate — row-major
-/// ([`matvec`]), transposed ([`matvec_t`]) and lane-blocked
-/// ([`matmul_lanes`]) — share ONE float-op-order definition, so their
-/// outputs are bitwise-comparable wherever they reduce the same products.
+/// in [`dot`]'s accumulation order. Dispatches to the SIMD kernel when
+/// [`simd_enabled`], else to the scalar reference [`dot_strided_scalar`].
 #[inline]
 pub fn dot_strided(a: &[f64], offset: usize, stride: usize, x: &[f64]) -> f64 {
+    #[cfg(feature = "simd")]
+    {
+        if simd_enabled() {
+            return simd::dot_strided(a, offset, stride, x);
+        }
+    }
+    dot_strided_scalar(a, offset, stride, x)
+}
+
+/// Strided scalar reference kernel: reduces `Σ_i a[offset + i*stride] *
+/// x[i]` with exactly [`dot_scalar`]'s accumulation order (four
+/// independent accumulators over 4-chunks, combined as `(s0+s1)+(s2+s3)`,
+/// then a sequential tail). This is what lets every GEMV/GEMM path in the
+/// crate — row-major ([`matvec`]), transposed ([`matvec_t`]) and
+/// lane-blocked ([`matmul_lanes`]) — share ONE float-op-order definition,
+/// so their outputs are bitwise-comparable wherever they reduce the same
+/// products.
+#[inline]
+pub fn dot_strided_scalar(a: &[f64], offset: usize, stride: usize, x: &[f64]) -> f64 {
     let n = x.len();
     let chunks = n / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
@@ -108,15 +223,28 @@ pub fn dot_strided(a: &[f64], offset: usize, stride: usize, x: &[f64]) -> f64 {
     acc
 }
 
-/// y = Aᵀ·x for row-major A (m×n), x length m, y length n. Each output is
-/// reduced with [`dot_strided`] — the same accumulation order as [`dot`] /
+/// y = Aᵀ·x for row-major A (m×n), x length m, y length n. Dispatches to
+/// the SIMD kernel when [`simd_enabled`], else to the scalar reference
+/// [`matvec_t_scalar`].
+pub fn matvec_t(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
+    #[cfg(feature = "simd")]
+    {
+        if simd_enabled() {
+            return simd::matvec_t(a, x, y, m, n);
+        }
+    }
+    matvec_t_scalar(a, x, y, m, n);
+}
+
+/// y = Aᵀ·x scalar reference kernel: each output is reduced with
+/// [`dot_strided_scalar`] — the same accumulation order as [`dot`] /
 /// [`matvec`], so transposed and untransposed GEMV agree bitwise on the
 /// same products (one float-op-order definition for every GEMV path).
-pub fn matvec_t(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
+pub fn matvec_t_scalar(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(x.len(), m);
     for (j, yj) in y.iter_mut().enumerate().take(n) {
-        *yj = dot_strided(a, j, n, x);
+        *yj = dot_strided_scalar(a, j, n, x);
     }
 }
 
@@ -128,13 +256,32 @@ pub const MAX_LANES: usize = 16;
 /// Lane-blocked GEMM for the structure-of-arrays batch hot path:
 /// `out[i*lanes + l] = Σ_k a[i*k_dim + k] · x[k*lanes + l]`, where `x` and
 /// `out` are lane-major blocks (component-major, `lanes` consecutive lane
-/// values per component). The reduction over `k` runs in **exactly the
-/// order of [`dot`]** (four accumulators per lane over 4-chunks, combined
-/// `(s0+s1)+(s2+s3)`, sequential tail), so column `l` of the output is
-/// bitwise-identical to `dot(a_row, x_lane_l)` on the gathered lane —
-/// the contract that makes lane-blocked stepping invisible to the
-/// per-sample determinism suite.
+/// values per component). Dispatches to the SIMD kernel when
+/// [`simd_enabled`], else to the scalar reference [`matmul_lanes_scalar`].
 pub fn matmul_lanes(a: &[f64], x: &[f64], out: &mut [f64], m: usize, k_dim: usize, lanes: usize) {
+    #[cfg(feature = "simd")]
+    {
+        if simd_enabled() {
+            return simd::matmul_lanes(a, x, out, m, k_dim, lanes);
+        }
+    }
+    matmul_lanes_scalar(a, x, out, m, k_dim, lanes);
+}
+
+/// Scalar reference kernel of [`matmul_lanes`]. The reduction over `k`
+/// runs in **exactly the order of [`dot`]** (four accumulators per lane
+/// over 4-chunks, combined `(s0+s1)+(s2+s3)`, sequential tail), so column
+/// `l` of the output is bitwise-identical to `dot(a_row, x_lane_l)` on
+/// the gathered lane — the contract that makes lane-blocked stepping
+/// invisible to the per-sample determinism suite.
+pub fn matmul_lanes_scalar(
+    a: &[f64],
+    x: &[f64],
+    out: &mut [f64],
+    m: usize,
+    k_dim: usize,
+    lanes: usize,
+) {
     assert!(lanes >= 1 && lanes <= MAX_LANES, "lanes {lanes} out of range");
     debug_assert_eq!(a.len(), m * k_dim);
     debug_assert_eq!(x.len(), k_dim * lanes);
@@ -179,25 +326,48 @@ pub fn matmul_lanes(a: &[f64], x: &[f64], out: &mut [f64], m: usize, k_dim: usiz
 }
 
 /// Gather lane `lane` of a lane-major block (`dst.len()` components ×
-/// `lanes`) into a contiguous per-sample vector.
+/// `lanes`) into a contiguous per-sample vector. Width-unrolled (4
+/// components per iteration, strided loads hoisted to one base index) —
+/// pure copies, so bitwise-trivially equal to the plain loop, which
+/// survives as the tail.
 #[inline]
 pub fn lane_gather(block: &[f64], lane: usize, lanes: usize, dst: &mut [f64]) {
     debug_assert!(lane < lanes);
     debug_assert_eq!(block.len(), dst.len() * lanes);
-    for (c, d) in dst.iter_mut().enumerate() {
-        *d = block[c * lanes + lane];
+    let n = dst.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = 4 * c;
+        let base = i * lanes + lane;
+        dst[i] = block[base];
+        dst[i + 1] = block[base + lanes];
+        dst[i + 2] = block[base + 2 * lanes];
+        dst[i + 3] = block[base + 3 * lanes];
+    }
+    for i in 4 * chunks..n {
+        dst[i] = block[i * lanes + lane];
     }
 }
 
 /// Scatter a contiguous per-sample vector into lane `lane` of a lane-major
 /// block (`src.len()` components × `lanes`) — the inverse of
-/// [`lane_gather`].
+/// [`lane_gather`], with the same width-unrolled body.
 #[inline]
 pub fn lane_scatter(src: &[f64], lane: usize, lanes: usize, block: &mut [f64]) {
     debug_assert!(lane < lanes);
     debug_assert_eq!(block.len(), src.len() * lanes);
-    for (c, s) in src.iter().enumerate() {
-        block[c * lanes + lane] = *s;
+    let n = src.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = 4 * c;
+        let base = i * lanes + lane;
+        block[base] = src[i];
+        block[base + lanes] = src[i + 1];
+        block[base + 2 * lanes] = src[i + 2];
+        block[base + 3 * lanes] = src[i + 3];
+    }
+    for i in 4 * chunks..n {
+        block[i * lanes + lane] = src[i];
     }
 }
 
@@ -235,14 +405,33 @@ pub fn eye(n: usize) -> Vec<f64> {
     a
 }
 
-/// Max-abs norm.
+/// Max-abs norm, 4-way unrolled (it sits on the [`expm_into`] hot path —
+/// one call per exponential for the scaling power). `max` is associative
+/// and commutative on the non-NaN inputs this crate produces, so the
+/// unrolled combine is bitwise-equal to the serial fold (pinned in the
+/// tests below).
 pub fn norm_inf(a: &[f64]) -> f64 {
-    a.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    let chunks = a.len() / 4;
+    let (mut m0, mut m1, mut m2, mut m3) = (0.0f64, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        m0 = m0.max(a[i].abs());
+        m1 = m1.max(a[i + 1].abs());
+        m2 = m2.max(a[i + 2].abs());
+        m3 = m3.max(a[i + 3].abs());
+    }
+    let mut m = (m0.max(m1)).max(m2.max(m3));
+    for x in &a[4 * chunks..] {
+        m = m.max(x.abs());
+    }
+    m
 }
 
-/// Frobenius / ℓ2 norm.
+/// Frobenius / ℓ2 norm, reduced through the shared [`dot`] kernel — one
+/// float-op-order definition with every GEMV/GEMM path (and the same
+/// SIMD dispatch), instead of a private serial sum.
 pub fn norm2(a: &[f64]) -> f64 {
-    a.iter().map(|x| x * x).sum::<f64>().sqrt()
+    dot(a, a).sqrt()
 }
 
 /// True iff the 3×3 row-major matrix is exactly skew-symmetric — the shape
@@ -945,6 +1134,131 @@ mod tests {
         for n in [2, 5, 16] {
             let q = random_orthogonal(&mut rng, n);
             assert!(orthogonality_defect(&q, n) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn norm_kernels_match_reference_loops() {
+        let mut rng = Pcg64::new(91);
+        for n in [1usize, 2, 3, 4, 7, 8, 13, 31, 64] {
+            let mut a = vec![0.0; n];
+            rng.fill_normal(&mut a);
+            // norm2 is now defined on the shared dot kernel — pin that
+            // identity bitwise, and stay within FP tolerance of the old
+            // serial sum (the rewrite reassociates, so only tolerance
+            // there).
+            assert_eq!(norm2(&a).to_bits(), dot(&a, &a).sqrt().to_bits(), "n={n}");
+            let serial: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(
+                (norm2(&a) - serial).abs() <= 1e-12 * (1.0 + serial),
+                "n={n}: {} vs serial {serial}",
+                norm2(&a)
+            );
+            // norm_inf's unrolled combine is bitwise the serial fold (max
+            // is associative and commutative on non-NaN input).
+            let folded = a.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+            assert_eq!(norm_inf(&a).to_bits(), folded.to_bits(), "n={n}");
+        }
+        assert_eq!(norm2(&[]), 0.0);
+        assert_eq!(norm_inf(&[]), 0.0);
+    }
+
+    #[test]
+    fn lane_gather_scatter_unrolled_match_reference_loops() {
+        // The width-unrolled bodies are pure copies: pin them bitwise
+        // against the plain strided loops they replaced, across component
+        // counts with and without a 4-tail and ragged lane widths.
+        let mut rng = Pcg64::new(92);
+        for comps in [1usize, 2, 4, 5, 8, 9, 16] {
+            for lanes in [1usize, 2, 3, 5, 8, MAX_LANES] {
+                let mut block = vec![0.0; comps * lanes];
+                rng.fill_normal(&mut block);
+                for lane in 0..lanes {
+                    let mut dst = vec![0.0; comps];
+                    lane_gather(&block, lane, lanes, &mut dst);
+                    for (c, d) in dst.iter().enumerate() {
+                        assert_eq!(
+                            d.to_bits(),
+                            block[c * lanes + lane].to_bits(),
+                            "gather comps={comps} lanes={lanes} lane={lane} c={c}"
+                        );
+                    }
+                }
+                let mut got = vec![0.0; comps * lanes];
+                let mut want = vec![0.0; comps * lanes];
+                for lane in 0..lanes {
+                    let mut src = vec![0.0; comps];
+                    rng.fill_normal(&mut src);
+                    lane_scatter(&src, lane, lanes, &mut got);
+                    for (c, s) in src.iter().enumerate() {
+                        want[c * lanes + lane] = *s;
+                    }
+                }
+                for (u, v) in got.iter().zip(want.iter()) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "scatter comps={comps} lanes={lanes}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_dispatch_off_is_bitwise_scalar() {
+        // With the knob off, the public kernels must be the scalar
+        // reference kernels bit for bit — the "EES_SIMD=0 is untouched"
+        // half of the determinism pin (the engine-level half lives in
+        // rust/tests/determinism.rs). Without the `simd` feature the
+        // toggle is inert and this pins the dispatchers fold to scalar.
+        set_simd(false);
+        #[cfg(not(feature = "simd"))]
+        {
+            set_simd(true); // inert without the feature
+            assert!(!simd_enabled());
+        }
+        #[cfg(feature = "simd")]
+        assert!(!simd_enabled());
+        set_simd(false);
+        let mut rng = Pcg64::new(93);
+        for n in [1usize, 4, 7, 16, 33] {
+            let mut a = vec![0.0; n * n];
+            let mut x = vec![0.0; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut x);
+            assert_eq!(
+                dot(&a[..n], &x).to_bits(),
+                dot_scalar(&a[..n], &x).to_bits(),
+                "dot n={n}"
+            );
+            assert_eq!(
+                dot_strided(&a, 0, n, &x).to_bits(),
+                dot_strided_scalar(&a, 0, n, &x).to_bits(),
+                "dot_strided n={n}"
+            );
+            let mut y1 = vec![0.0; n];
+            let mut y2 = vec![0.0; n];
+            matvec(&a, &x, &mut y1, n, n);
+            matvec_scalar(&a, &x, &mut y2, n, n);
+            matvec_t(&a, &x, &mut y1, n, n);
+            matvec_t_scalar(&a, &x, &mut y2, n, n);
+            for (u, v) in y1.iter().zip(y2.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "matvec_t n={n}");
+            }
+            let mut c1 = vec![0.0; n * n];
+            let mut c2 = vec![0.0; n * n];
+            matmul(&a, &a, &mut c1, n, n, n);
+            matmul_scalar(&a, &a, &mut c2, n, n, n);
+            for (u, v) in c1.iter().zip(c2.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "matmul n={n}");
+            }
+            let lanes = 8;
+            let mut xl = vec![0.0; n * lanes];
+            rng.fill_normal(&mut xl);
+            let mut o1 = vec![0.0; n * lanes];
+            let mut o2 = vec![0.0; n * lanes];
+            matmul_lanes(&a, &xl, &mut o1, n, n, lanes);
+            matmul_lanes_scalar(&a, &xl, &mut o2, n, n, lanes);
+            for (u, v) in o1.iter().zip(o2.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "matmul_lanes n={n}");
+            }
         }
     }
 }

@@ -1,0 +1,635 @@
+//! Explicit-width SIMD kernels for the lane-major hot path (feature
+//! `simd`).
+//!
+//! Two layers, per the offline dependency policy (no `packed_simd`, no
+//! nightly `std::simd`):
+//!
+//! 1. **Portable lane structs** ([`F64x4`], [`F64x8`]): plain `[f64; W]`
+//!    wrappers whose elementwise ops unroll to straight-line code LLVM
+//!    reliably lowers to vector instructions. The portable kernels do NOT
+//!    reassociate any reduction — [`dot`] packs the scalar kernel's four
+//!    independent accumulators into one [`F64x4`] (same products, same
+//!    `(s0+s1)+(s2+s3)` combine, same sequential tail), and the lane-major
+//!    kernels ([`matmul_lanes`], [`axpy`], [`add_scalar`]) vectorise the
+//!    *lane* dimension, whose lanes are independent by construction. The
+//!    portable arm is therefore **bitwise-identical** to the scalar
+//!    reference kernels — what the explicit structs buy is guaranteed
+//!    packing and the removal of per-element bounds checks, not a
+//!    different answer.
+//! 2. **`std::arch` specialisation** ([`avx2`]): an AVX2+FMA dot kernel
+//!    that only compiles when `target_feature = "avx2"` and `"fma"` are
+//!    statically enabled (e.g. `RUSTFLAGS="-C target-cpu=native"`). Fused
+//!    multiply-add contracts the portable arm's mul-then-add, so this arm
+//!    is only *tolerance*-equal to scalar — the reason the public
+//!    conformance contract for `EES_SIMD=1` is the ULP bound pinned by the
+//!    tests below, not bitwise equality, and the reason the scalar order
+//!    stays the default (see `docs/ARCHITECTURE.md` §SIMD kernels & the
+//!    determinism contract). No NEON specialisation is shipped: aarch64
+//!    enables `neon` by default, which would put intrinsics on the default
+//!    build path of every ARM host instead of behind an opt-in.
+//!
+//! Dispatch happens in the parent module: the public `linalg` kernels
+//! check [`super::simd_enabled`] (the `EES_SIMD` / `[exec] simd` knob) and
+//! route here, so callers never name these functions directly. All scratch
+//! is stack-resident — the SIMD arm inherits the zero-allocation contract
+//! (`rust/tests/alloc_regression.rs` pins it with the knob forced on).
+
+use super::MAX_LANES;
+
+/// Four f64 lanes over `[f64; 4]`. Elementwise ops only — no horizontal
+/// reassociation except [`Self::hsum`], which hard-codes the scalar `dot`
+/// combine `(s0+s1)+(s2+s3)`.
+#[derive(Clone, Copy, Debug)]
+pub struct F64x4(pub [f64; 4]);
+
+impl F64x4 {
+    /// Vector width.
+    pub const LANES: usize = 4;
+
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f64) -> Self {
+        Self([v; 4])
+    }
+
+    /// Load 4 consecutive values from the front of `s`.
+    #[inline(always)]
+    pub fn load(s: &[f64]) -> Self {
+        Self([s[0], s[1], s[2], s[3]])
+    }
+
+    /// Store into the front of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f64]) {
+        d[..4].copy_from_slice(&self.0);
+    }
+
+    /// Elementwise sum.
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        let (a, b) = (self.0, o.0);
+        Self([a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]])
+    }
+
+    /// Elementwise product.
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        let (a, b) = (self.0, o.0);
+        Self([a[0] * b[0], a[1] * b[1], a[2] * b[2], a[3] * b[3]])
+    }
+
+    /// `self + a·b` elementwise, spelled mul-then-add (never `f64::mul_add`
+    /// — a fused contraction would change the float ops vs the scalar
+    /// kernels, and lowers to a libm call on targets without hardware FMA).
+    #[inline(always)]
+    pub fn mul_add_acc(self, a: Self, b: Self) -> Self {
+        self.add(a.mul(b))
+    }
+
+    /// Horizontal sum in the scalar [`super::dot_scalar`] combine order:
+    /// `(s0 + s1) + (s2 + s3)`.
+    #[inline(always)]
+    pub fn hsum(self) -> f64 {
+        (self.0[0] + self.0[1]) + (self.0[2] + self.0[3])
+    }
+}
+
+/// Eight f64 lanes over `[f64; 8]` — the natural width for the default
+/// lane-group size (`EES_LANES=8`) and one AVX-512 register. Elementwise
+/// ops only; the lane-major kernels never reduce across these lanes.
+#[derive(Clone, Copy, Debug)]
+pub struct F64x8(pub [f64; 8]);
+
+impl F64x8 {
+    /// Vector width.
+    pub const LANES: usize = 8;
+
+    /// All lanes set to `v`.
+    #[inline(always)]
+    pub fn splat(v: f64) -> Self {
+        Self([v; 8])
+    }
+
+    /// Load 8 consecutive values from the front of `s`.
+    #[inline(always)]
+    pub fn load(s: &[f64]) -> Self {
+        Self([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]])
+    }
+
+    /// Store into the front of `d`.
+    #[inline(always)]
+    pub fn store(self, d: &mut [f64]) {
+        d[..8].copy_from_slice(&self.0);
+    }
+
+    /// Elementwise sum.
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        let (a, b) = (self.0, o.0);
+        let mut r = [0.0f64; 8];
+        let mut i = 0;
+        while i < 8 {
+            r[i] = a[i] + b[i];
+            i += 1;
+        }
+        Self(r)
+    }
+
+    /// Elementwise product.
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        let (a, b) = (self.0, o.0);
+        let mut r = [0.0f64; 8];
+        let mut i = 0;
+        while i < 8 {
+            r[i] = a[i] * b[i];
+            i += 1;
+        }
+        Self(r)
+    }
+
+    /// `self + a·b` elementwise (mul-then-add, see [`F64x4::mul_add_acc`]).
+    #[inline(always)]
+    pub fn mul_add_acc(self, a: Self, b: Self) -> Self {
+        self.add(a.mul(b))
+    }
+}
+
+/// SIMD dot product. Portable arm: the scalar kernel's four accumulators
+/// packed into one [`F64x4`] — bitwise-identical to
+/// [`super::dot_scalar`]. On an AVX2+FMA build this dispatches to
+/// [`avx2::dot`] instead (tolerance-equal only).
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2", target_feature = "fma"))]
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    // SAFETY: this arm only compiles when avx2+fma are statically enabled.
+    unsafe { avx2::dot(a, b) }
+}
+
+/// SIMD dot product. Portable arm: the scalar kernel's four accumulators
+/// packed into one [`F64x4`] — bitwise-identical to
+/// [`super::dot_scalar`]. (An AVX2+FMA build replaces this with
+/// `avx2::dot`, which is tolerance-equal only.)
+#[cfg(not(all(target_arch = "x86_64", target_feature = "avx2", target_feature = "fma")))]
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_portable(a, b)
+}
+
+/// The portable vector dot (always available; [`dot`] is this unless the
+/// AVX2+FMA specialisation is compiled in).
+#[inline]
+pub fn dot_portable(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len().min(b.len());
+    let chunks = n / 4;
+    let mut acc = F64x4::splat(0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        acc = acc.mul_add_acc(F64x4::load(&a[i..i + 4]), F64x4::load(&b[i..i + 4]));
+    }
+    let mut s = acc.hsum();
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// SIMD strided dot: gathers each 4-chunk of the strided operand into an
+/// [`F64x4`] and reduces in exactly the scalar order — bitwise-identical
+/// to [`super::dot_strided_scalar`].
+#[inline]
+pub fn dot_strided(a: &[f64], offset: usize, stride: usize, x: &[f64]) -> f64 {
+    let n = x.len();
+    let chunks = n / 4;
+    let mut acc = F64x4::splat(0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        let g = F64x4([
+            a[offset + i * stride],
+            a[offset + (i + 1) * stride],
+            a[offset + (i + 2) * stride],
+            a[offset + (i + 3) * stride],
+        ]);
+        acc = acc.mul_add_acc(g, F64x4::load(&x[i..i + 4]));
+    }
+    let mut s = acc.hsum();
+    for i in 4 * chunks..n {
+        s += a[offset + i * stride] * x[i];
+    }
+    s
+}
+
+/// SIMD y = A·x (row-major m×n): each row reduced with [`dot`].
+pub fn matvec(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(y.len(), m);
+    for (yi, row) in y.iter_mut().zip(a.chunks_exact(n)).take(m) {
+        *yi = dot(row, x);
+    }
+}
+
+/// SIMD y = Aᵀ·x: each output reduced with [`dot_strided`] (gathered
+/// 4-chunks, scalar accumulation order).
+pub fn matvec_t(a: &[f64], x: &[f64], y: &mut [f64], m: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), m);
+    for (j, yj) in y.iter_mut().enumerate().take(n) {
+        *yj = dot_strided(a, j, n, x);
+    }
+}
+
+/// SIMD C = A·B: the scalar kernel's 4-row register blocking with the
+/// C-row update vectorised over `j` in [`F64x8`]/[`F64x4`] blocks. Per
+/// output element the float ops match [`super::matmul_scalar`] exactly
+/// (same `(a0·b0 + a1·b1) + (a2·b2 + a3·b3)` combine, same zero-skip on
+/// the k-tail), so the portable arm is bitwise-identical.
+pub fn matmul(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.fill(0.0);
+        let mut p = 0;
+        while p + 4 <= k {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            let b0 = &b[p * n..(p + 1) * n];
+            let b1 = &b[(p + 1) * n..(p + 2) * n];
+            let b2 = &b[(p + 2) * n..(p + 3) * n];
+            let b3 = &b[(p + 3) * n..(p + 4) * n];
+            let (va0, va1) = (F64x8::splat(a0), F64x8::splat(a1));
+            let (va2, va3) = (F64x8::splat(a2), F64x8::splat(a3));
+            let mut j = 0;
+            while j + 8 <= n {
+                let t01 = va0
+                    .mul(F64x8::load(&b0[j..j + 8]))
+                    .add(va1.mul(F64x8::load(&b1[j..j + 8])));
+                let t23 = va2
+                    .mul(F64x8::load(&b2[j..j + 8]))
+                    .add(va3.mul(F64x8::load(&b3[j..j + 8])));
+                F64x8::load(&crow[j..j + 8])
+                    .add(t01.add(t23))
+                    .store(&mut crow[j..j + 8]);
+                j += 8;
+            }
+            while j < n {
+                crow[j] += (a0 * b0[j] + a1 * b1[j]) + (a2 * b2[j] + a3 * b3[j]);
+                j += 1;
+            }
+            p += 4;
+        }
+        while p < k {
+            let ap = arow[p];
+            if ap != 0.0 {
+                axpy(crow, ap, &b[p * n..(p + 1) * n]);
+            }
+            p += 1;
+        }
+    }
+}
+
+/// SIMD lane-blocked GEMM (see [`super::matmul_lanes`] for the layout).
+/// The lane dimension is vectorised — lanes are independent, so the
+/// per-lane reduction order over `k` is untouched and the result is
+/// bitwise-identical to [`super::matmul_lanes_scalar`]. Widths 4/8/16 run
+/// fully vectorised; other widths fall back to the scalar kernel (same
+/// bits either way).
+pub fn matmul_lanes(a: &[f64], x: &[f64], out: &mut [f64], m: usize, k_dim: usize, lanes: usize) {
+    assert!(lanes >= 1 && lanes <= MAX_LANES, "lanes {lanes} out of range");
+    debug_assert_eq!(a.len(), m * k_dim);
+    debug_assert_eq!(x.len(), k_dim * lanes);
+    debug_assert_eq!(out.len(), m * lanes);
+    match lanes {
+        4 => matmul_lanes_blocks::<1>(a, x, out, m, k_dim),
+        8 => matmul_lanes_blocks::<2>(a, x, out, m, k_dim),
+        16 => matmul_lanes_blocks::<4>(a, x, out, m, k_dim),
+        _ => super::matmul_lanes_scalar(a, x, out, m, k_dim, lanes),
+    }
+}
+
+/// [`matmul_lanes`] body for `lanes = 4·B`: the scalar kernel's four
+/// k-accumulators, each held as `B` [`F64x4`] registers over the lane
+/// dimension.
+fn matmul_lanes_blocks<const B: usize>(
+    a: &[f64],
+    x: &[f64],
+    out: &mut [f64],
+    m: usize,
+    k_dim: usize,
+) {
+    let lanes = 4 * B;
+    let chunks = k_dim / 4;
+    for i in 0..m {
+        let row = &a[i * k_dim..(i + 1) * k_dim];
+        let mut s0 = [F64x4::splat(0.0); B];
+        let mut s1 = [F64x4::splat(0.0); B];
+        let mut s2 = [F64x4::splat(0.0); B];
+        let mut s3 = [F64x4::splat(0.0); B];
+        for c in 0..chunks {
+            let k = 4 * c;
+            let a0 = F64x4::splat(row[k]);
+            let a1 = F64x4::splat(row[k + 1]);
+            let a2 = F64x4::splat(row[k + 2]);
+            let a3 = F64x4::splat(row[k + 3]);
+            let x0 = &x[k * lanes..(k + 1) * lanes];
+            let x1 = &x[(k + 1) * lanes..(k + 2) * lanes];
+            let x2 = &x[(k + 2) * lanes..(k + 3) * lanes];
+            let x3 = &x[(k + 3) * lanes..(k + 4) * lanes];
+            for blk in 0..B {
+                let o = 4 * blk;
+                s0[blk] = s0[blk].mul_add_acc(a0, F64x4::load(&x0[o..o + 4]));
+                s1[blk] = s1[blk].mul_add_acc(a1, F64x4::load(&x1[o..o + 4]));
+                s2[blk] = s2[blk].mul_add_acc(a2, F64x4::load(&x2[o..o + 4]));
+                s3[blk] = s3[blk].mul_add_acc(a3, F64x4::load(&x3[o..o + 4]));
+            }
+        }
+        let orow = &mut out[i * lanes..(i + 1) * lanes];
+        for blk in 0..B {
+            let o = 4 * blk;
+            s0[blk]
+                .add(s1[blk])
+                .add(s2[blk].add(s3[blk]))
+                .store(&mut orow[o..o + 4]);
+        }
+        for k in 4 * chunks..k_dim {
+            let ak = F64x4::splat(row[k]);
+            let xk = &x[k * lanes..(k + 1) * lanes];
+            for blk in 0..B {
+                let o = 4 * blk;
+                F64x4::load(&orow[o..o + 4])
+                    .mul_add_acc(ak, F64x4::load(&xk[o..o + 4]))
+                    .store(&mut orow[o..o + 4]);
+            }
+        }
+    }
+}
+
+/// y[i] += v, vectorised — the lane-major bias-add of the MLP forward
+/// epilogue ([`crate::nn::Mlp::forward_lanes`]). Elementwise, so bitwise
+/// equal to the scalar loop.
+#[inline]
+pub fn add_scalar(y: &mut [f64], v: f64) {
+    let n = y.len();
+    let vv = F64x4::splat(v);
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = 4 * c;
+        F64x4::load(&y[i..i + 4]).add(vv).store(&mut y[i..i + 4]);
+    }
+    for yi in y[4 * chunks..].iter_mut() {
+        *yi += v;
+    }
+}
+
+/// y += a·x elementwise, vectorised — the lane-major Wᵀδ accumulation of
+/// the MLP backward epilogue ([`crate::nn::Mlp::vjp_lanes`]) and the
+/// k-tail of [`matmul`]. Elementwise (no reduction), so bitwise equal to
+/// the scalar loop.
+#[inline]
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    let n = y.len().min(x.len());
+    let va = F64x4::splat(a);
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = 4 * c;
+        F64x4::load(&y[i..i + 4])
+            .mul_add_acc(va, F64x4::load(&x[i..i + 4]))
+            .store(&mut y[i..i + 4]);
+    }
+    for i in 4 * chunks..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// AVX2+FMA specialisation — only compiled when both target features are
+/// statically enabled (`RUSTFLAGS="-C target-cpu=native"` or
+/// `-C target-feature=+avx2,+fma`), so a default build carries no
+/// `std::arch` code at all. `_mm256_fmadd_pd` contracts the portable
+/// arm's mul-then-add into a fused op: faster and *more* accurate per
+/// element, but no longer bitwise-equal to the scalar kernels — with this
+/// arm active, `EES_SIMD=1` only promises the ULP conformance bound.
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2", target_feature = "fma"))]
+pub mod avx2 {
+    #[cfg(target_arch = "x86_64")]
+    use core::arch::x86_64::*;
+
+    /// Fused-multiply-add dot over 256-bit lanes; horizontal combine in
+    /// the scalar `(s0+s1)+(s2+s3)` order, sequential tail.
+    ///
+    /// # Safety
+    /// Only compiled when `avx2`/`fma` are statically enabled, so the
+    /// intrinsics are always supported at runtime.
+    #[inline]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len().min(b.len());
+        let chunks = n / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let i = 4 * c;
+            let va = _mm256_loadu_pd(a.as_ptr().add(i));
+            let vb = _mm256_loadu_pd(b.as_ptr().add(i));
+            acc = _mm256_fmadd_pd(va, vb, acc);
+        }
+        let mut buf = [0.0f64; 4];
+        _mm256_storeu_pd(buf.as_mut_ptr(), acc);
+        let mut s = (buf[0] + buf[1]) + (buf[2] + buf[3]);
+        for i in 4 * chunks..n {
+            s += a[i] * b[i];
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// |got − want| within `ulps` units of a conservative error scale for
+    /// an n-term reduction: Σ|terms| · n · ε. The bound holds for every
+    /// compiled specialisation (portable is exact; FMA contraction shifts
+    /// each partial by ≤ ½ulp).
+    fn assert_reduction_close(got: f64, want: f64, abs_terms: f64, n: usize, what: &str) {
+        let scale = abs_terms.max(1e-300) * (n.max(2) as f64);
+        let tol = 4.0 * f64::EPSILON * scale;
+        assert!(
+            (got - want).abs() <= tol,
+            "{what}: got {got}, want {want}, tol {tol}"
+        );
+    }
+
+    #[test]
+    fn dot_conformance_dims_1_to_64() {
+        let mut rng = Pcg64::new(1001);
+        for n in 1usize..=64 {
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            let want = super::super::dot_scalar(&a, &b);
+            let abs: f64 = a.iter().zip(b.iter()).map(|(x, y)| (x * y).abs()).sum();
+            // ULP-tolerance contract: holds for every specialisation.
+            assert_reduction_close(dot(&a, &b), want, abs, n, &format!("dot n={n}"));
+            // The portable arm is exactly the scalar kernel, bit for bit.
+            assert_eq!(dot_portable(&a, &b).to_bits(), want.to_bits(), "n={n}");
+            // Strided variant, contiguous embedding.
+            assert_eq!(
+                dot_strided(&a, 0, 1, &b).to_bits(),
+                super::super::dot_strided_scalar(&a, 0, 1, &b).to_bits(),
+                "strided n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_strided_gather_matches_scalar_bitwise() {
+        let mut rng = Pcg64::new(1002);
+        for n in [1usize, 3, 4, 7, 8, 13, 32, 64] {
+            let stride = 5;
+            let mut wide = vec![0.0; n * stride + 2];
+            let mut x = vec![0.0; n];
+            rng.fill_normal(&mut wide);
+            rng.fill_normal(&mut x);
+            assert_eq!(
+                dot_strided(&wide, 2, stride, &x).to_bits(),
+                super::super::dot_strided_scalar(&wide, 2, stride, &x).to_bits(),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_and_transpose_match_scalar() {
+        let mut rng = Pcg64::new(1003);
+        for (m, n) in [(1usize, 1usize), (4, 4), (7, 3), (16, 16), (5, 64)] {
+            let mut a = vec![0.0; m * n];
+            rng.fill_normal(&mut a);
+            let mut x = vec![0.0; n];
+            rng.fill_normal(&mut x);
+            let mut y_simd = vec![0.0; m];
+            let mut y_ref = vec![0.0; m];
+            matvec(&a, &x, &mut y_simd, m, n);
+            super::super::matvec_scalar(&a, &x, &mut y_ref, m, n);
+            for (i, (u, v)) in y_simd.iter().zip(y_ref.iter()).enumerate() {
+                let abs: f64 = (0..n).map(|j| (a[i * n + j] * x[j]).abs()).sum();
+                assert_reduction_close(*u, *v, abs, n, &format!("matvec ({m},{n})[{i}]"));
+            }
+            let mut xt = vec![0.0; m];
+            rng.fill_normal(&mut xt);
+            let mut yt_simd = vec![0.0; n];
+            let mut yt_ref = vec![0.0; n];
+            matvec_t(&a, &xt, &mut yt_simd, m, n);
+            super::super::matvec_t_scalar(&a, &xt, &mut yt_ref, m, n);
+            for (u, v) in yt_simd.iter().zip(yt_ref.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "matvec_t ({m},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_matches_scalar_bitwise() {
+        // The portable matmul keeps the scalar float ops exactly — j is
+        // vectorised, the k-order is untouched. Shapes cover the 8-wide j
+        // body, the j tail, the 4-blocked k body and the zero-skipping k
+        // tail.
+        let mut rng = Pcg64::new(1004);
+        for (m, k, n) in [
+            (1usize, 1usize, 1usize),
+            (2, 4, 8),
+            (3, 5, 7),
+            (4, 11, 16),
+            (5, 8, 9),
+            (7, 6, 3),
+        ] {
+            let mut a = vec![0.0; m * k];
+            let mut b = vec![0.0; k * n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            // Sprinkle exact zeros so the k-tail skip path is exercised.
+            if k % 4 != 0 {
+                a[(m - 1) * k + (k - 1)] = 0.0;
+            }
+            let mut c_simd = vec![0.0; m * n];
+            let mut c_ref = vec![0.0; m * n];
+            matmul(&a, &b, &mut c_simd, m, k, n);
+            super::super::matmul_scalar(&a, &b, &mut c_ref, m, k, n);
+            for (u, v) in c_simd.iter().zip(c_ref.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_lanes_matches_scalar_bitwise_all_widths() {
+        // Every lane width 1–16, k with and without a tail: the vectorised
+        // widths (4/8/16) and the scalar fallback must both be bitwise the
+        // scalar kernel.
+        let mut rng = Pcg64::new(1005);
+        for lanes in 1usize..=MAX_LANES {
+            for (m, k) in [(3usize, 8usize), (5, 11), (2, 1), (4, 4)] {
+                let mut a = vec![0.0; m * k];
+                let mut x = vec![0.0; k * lanes];
+                rng.fill_normal(&mut a);
+                rng.fill_normal(&mut x);
+                let mut out_simd = vec![0.0; m * lanes];
+                let mut out_ref = vec![0.0; m * lanes];
+                matmul_lanes(&a, &x, &mut out_simd, m, k, lanes);
+                super::super::matmul_lanes_scalar(&a, &x, &mut out_ref, m, k, lanes);
+                for (u, v) in out_simd.iter().zip(out_ref.iter()) {
+                    assert_eq!(u.to_bits(), v.to_bits(), "lanes={lanes} m={m} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn epilogue_helpers_match_scalar_loops_bitwise() {
+        let mut rng = Pcg64::new(1006);
+        for n in [1usize, 3, 4, 5, 8, 13, 16] {
+            let mut y = vec![0.0; n];
+            rng.fill_normal(&mut y);
+            let mut y_ref = y.clone();
+            add_scalar(&mut y, 0.37);
+            for v in y_ref.iter_mut() {
+                *v += 0.37;
+            }
+            assert_eq!(y, y_ref, "add_scalar n={n}");
+
+            let mut x = vec![0.0; n];
+            rng.fill_normal(&mut x);
+            let mut y2_ref = y.clone();
+            axpy(&mut y, -1.25, &x);
+            for (v, xi) in y2_ref.iter_mut().zip(x.iter()) {
+                *v += -1.25 * xi;
+            }
+            for (u, v) in y.iter().zip(y2_ref.iter()) {
+                assert_eq!(u.to_bits(), v.to_bits(), "axpy n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_arm_is_run_to_run_deterministic() {
+        // At a fixed width the SIMD kernels are pure functions of their
+        // inputs — repeated calls must agree bit for bit (this also holds
+        // for the FMA specialisation when compiled in).
+        let mut rng = Pcg64::new(1007);
+        let (m, k, lanes) = (6usize, 16usize, 8usize);
+        let mut a = vec![0.0; m * k];
+        let mut x = vec![0.0; k * lanes];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut x);
+        let d1 = dot(&a[..k], &a[k..2 * k]);
+        let d2 = dot(&a[..k], &a[k..2 * k]);
+        assert_eq!(d1.to_bits(), d2.to_bits());
+        let mut o1 = vec![0.0; m * lanes];
+        let mut o2 = vec![0.0; m * lanes];
+        matmul_lanes(&a, &x, &mut o1, m, k, lanes);
+        matmul_lanes(&a, &x, &mut o2, m, k, lanes);
+        for (u, v) in o1.iter().zip(o2.iter()) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+}

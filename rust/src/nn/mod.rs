@@ -417,12 +417,25 @@ impl Mlp {
                 lanes,
             );
             // Bias + activation, in the scalar path's order: acc = b[i] +
-            // dot(...), then act.apply(acc).
+            // dot(...), then act.apply(acc). The SIMD arm vectorises the
+            // bias broadcast (addition is commutative bit for bit, so this
+            // stays bitwise-equal) and keeps the transcendental
+            // activations scalar — they dominate this epilogue either way.
             for i in 0..nout {
                 let bi = b[i];
                 let prow = &mut ws.pre_l[(z_off + i) * lanes..(z_off + i + 1) * lanes];
                 let arow =
                     &mut ws.post_l[(a_off + nin + i) * lanes..(a_off + nin + i + 1) * lanes];
+                #[cfg(feature = "simd")]
+                {
+                    if crate::linalg::simd_enabled() {
+                        crate::linalg::simd::add_scalar(prow, bi);
+                        for (p, a) in prow.iter().zip(arow.iter_mut()) {
+                            *a = act.apply(*p);
+                        }
+                        continue;
+                    }
+                }
                 for (p, a) in prow.iter_mut().zip(arow.iter_mut()) {
                     let acc = bi + *p;
                     *p = acc;
@@ -511,11 +524,25 @@ impl Mlp {
                 }
             }
             // Input cotangent of this layer: Wᵀ delta, lane-blocked with the
-            // scalar path's per-i zero skip replicated per lane.
+            // scalar path's per-i zero skip replicated per lane. The SIMD
+            // arm drops the skip and adds `wij * 0.0` unconditionally —
+            // bitwise-transparent because the accumulators start at +0.0
+            // and can never reach -0.0 under round-to-nearest, so adding
+            // ±0.0 preserves every bit.
             next_buf[..nin * lanes].fill(0.0);
             for i in 0..nout {
                 let row = &w[i * nin..(i + 1) * nin];
                 let drow = &delta_buf[i * lanes..(i + 1) * lanes];
+                #[cfg(feature = "simd")]
+                {
+                    if crate::linalg::simd_enabled() {
+                        for (j, wij) in row.iter().enumerate() {
+                            let nrow = &mut next_buf[j * lanes..(j + 1) * lanes];
+                            crate::linalg::simd::axpy(nrow, *wij, drow);
+                        }
+                        continue;
+                    }
+                }
                 for (j, wij) in row.iter().enumerate() {
                     let nrow = &mut next_buf[j * lanes..(j + 1) * lanes];
                     for (n, d) in nrow.iter_mut().zip(drow.iter()) {
@@ -711,6 +738,60 @@ mod tests {
                 }
                 for (a, b) in dp_lanes[l * np..(l + 1) * np].iter().zip(d_p.iter()) {
                     assert_eq!(a.to_bits(), b.to_bits(), "d_p lane {l}/{lanes}");
+                }
+            }
+        }
+    }
+
+    /// The portable SIMD epilogues (bias broadcast in `forward_lanes`,
+    /// Wᵀδ accumulation in `vjp_lanes`) are bitwise-equal to the scalar
+    /// loops by construction — pin that across every activation pair and
+    /// ragged lane widths by toggling the knob on identical inputs.
+    #[cfg(feature = "simd")]
+    #[test]
+    fn simd_epilogues_match_scalar_bitwise_all_activations() {
+        let acts = [
+            Activation::Tanh,
+            Activation::LipSwish,
+            Activation::Silu,
+            Activation::Softplus,
+        ];
+        for (ai, act) in acts.iter().enumerate() {
+            let mut rng = Pcg64::new(300 + ai as u64);
+            let mlp = Mlp::new(vec![4, 9, 3], *act, Activation::Softplus, &mut rng)
+                .with_out_scale(0.7);
+            let np = mlp.num_params();
+            for lanes in [1usize, 3, 4, 7, 8, 16] {
+                let mut x = vec![0.0; 4 * lanes];
+                let mut cot = vec![0.0; 3 * lanes];
+                rng.fill_normal(&mut x);
+                rng.fill_normal(&mut cot);
+                // Sprinkle exact zeros into the cotangent so the scalar
+                // zero-delta skip actually fires somewhere.
+                for c in cot.iter_mut().step_by(3) {
+                    *c = 0.0;
+                }
+                let run = |simd_on: bool| {
+                    crate::linalg::set_simd(simd_on);
+                    let mut ws = Workspace::default();
+                    let mut out = vec![0.0; 3 * lanes];
+                    mlp.forward_lanes(&x, &mut out, lanes, &mut ws);
+                    let mut dx = vec![0.0; 4 * lanes];
+                    let mut dp = vec![0.0; lanes * np];
+                    mlp.vjp_lanes(&x, &cot, &mut dx, &mut dp, 0, np, lanes, &mut ws);
+                    crate::linalg::set_simd(false);
+                    (out, dx, dp)
+                };
+                let (out_s, dx_s, dp_s) = run(false);
+                let (out_v, dx_v, dp_v) = run(true);
+                for (a, b) in out_s.iter().zip(out_v.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{act:?} lanes={lanes} fwd");
+                }
+                for (a, b) in dx_s.iter().zip(dx_v.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{act:?} lanes={lanes} dx");
+                }
+                for (a, b) in dp_s.iter().zip(dp_v.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{act:?} lanes={lanes} dp");
                 }
             }
         }

@@ -125,8 +125,9 @@ fn run_ou(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
         let paths = sample_paths_par(rng, batch, 1, steps, h, par);
         (y0s, paths)
     };
-    let mut problem =
-        EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss).with_lanes(tc.lanes);
+    let mut problem = EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss)
+        .with_lanes(tc.lanes)
+        .with_simd(cfg.simd());
     Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
 }
 
@@ -170,8 +171,9 @@ fn run_gbm(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
         let paths = sample_paths_par(rng, batch, d, steps, h, par);
         (y0s, paths)
     };
-    let mut problem =
-        EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss).with_lanes(tc.lanes);
+    let mut problem = EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss)
+        .with_lanes(tc.lanes)
+        .with_simd(cfg.simd());
     Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
 }
 

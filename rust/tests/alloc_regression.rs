@@ -339,6 +339,10 @@ fn all_nine_solvers_zero_allocs_per_step_after_warmup() {
     // fallback kernels) and an MLP field (blocked matmul kernels).
     lane_stepping_zero_alloc();
 
+    // Same bound with the SIMD kernels dispatched (stack lane structs +
+    // the shared StepWorkspace arena — no fresh Vecs on the SIMD arm).
+    simd_lane_stepping_zero_alloc();
+
     // Manifold lane-blocked stepping: CF-EES / SRKMK / CG / geo-EM lane
     // groups on Sphere / SO(3) / 𝕋ᴺ, including the batched expm/Fréchet
     // panels and the manifold models' lane VJP sweeps.
@@ -599,6 +603,57 @@ fn lane_stepping_zero_alloc() {
         });
         assert_eq!(n, 0, "lanes/embedded_ees25: {n} allocations in 31 warm lane steps");
     }
+}
+
+/// The SIMD arm's allocation contract (`EES_SIMD=1` with `--features
+/// simd`): the SIMD kernels keep their scratch in stack lane structs
+/// (`F64x4`/`F64x8`) and borrow everything heap-sized from the same
+/// [`ees::memory::StepWorkspace`] arena as the scalar path, so a warm lane
+/// step + backprop stays at ZERO allocations per step with the knob on.
+/// Without `--features simd` the toggle is a no-op and this re-measures the
+/// scalar path, which must hold the same bound.
+fn simd_lane_stepping_zero_alloc() {
+    use ees::nn::neural_sde::NeuralSde;
+    ees::linalg::set_simd(true);
+    let lanes = 8usize;
+    let dim = 4usize;
+    let mut rng = Pcg64::new(13);
+    let path = BrownianPath::sample(&mut rng, dim, 32, 0.01);
+    let pack = |n: usize, dw: &mut [f64]| {
+        let inc = path.increment(n);
+        for j in 0..dim {
+            for l in 0..lanes {
+                dw[j * lanes + l] = inc[j];
+            }
+        }
+    };
+    let model = NeuralSde::lsde(dim, 8, 1, false, &mut Pcg64::new(5));
+    let np = DiffVectorField::num_params(&model);
+    let st = LowStorageStepper::ees25();
+    let mut ws = StepWorkspace::new();
+    let blk = dim * lanes;
+    let mut state = vec![0.1; blk];
+    let mut dw = vec![0.0; blk];
+    let mut lambda = vec![0.0; blk];
+    let mut d_theta = vec![0.0; lanes * np];
+    pack(0, &mut dw);
+    st.step_lanes_ws(&model, 0.0, 0.01, &dw, &mut state, lanes, &mut ws);
+    lambda[0] = 1.0;
+    st.backprop_step_lanes_ws(
+        &model, 0.0, 0.01, &dw, &state, &mut lambda, &mut d_theta, lanes, &mut ws,
+    );
+    let n = measure(|| {
+        for k in 1..32 {
+            pack(k, &mut dw);
+            let t = k as f64 * 0.01;
+            st.step_lanes_ws(&model, t, 0.01, &dw, &mut state, lanes, &mut ws);
+            st.backprop_step_lanes_ws(
+                &model, t, 0.01, &dw, &state, &mut lambda, &mut d_theta, lanes, &mut ws,
+            );
+        }
+    });
+    ees::linalg::set_simd(false);
+    assert_eq!(n, 0, "simd_lanes/neural_sde: {n} allocations in 31 warm lane steps");
 }
 
 /// Warm-up + measured lane steps for a manifold stepper: the lane-blocked

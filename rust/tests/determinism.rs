@@ -528,6 +528,85 @@ fn manifold_lane_count_bitwise_invariant() {
     }
 }
 
+/// The SIMD knob's determinism contract (docs/ARCHITECTURE.md §SIMD
+/// kernels & the determinism contract):
+///
+/// 1. `EES_SIMD=0` is the untouched scalar path — with the knob off, the
+///    lane batch engine reproduces itself run to run, and the public
+///    kernels are the `*_scalar` reference kernels bit for bit (the
+///    kernel-level half of that pin lives in `linalg::tests`).
+/// 2. The SIMD arm is run-to-run deterministic at fixed lane width.
+/// 3. The *portable* SIMD arm (the only one CI ever compiles — the
+///    AVX2+FMA specialisation needs `-C target-feature=+avx2,+fma`) packs
+///    the scalar accumulators exactly, so knob-on equals knob-off bitwise.
+///    That identity is what makes the process-wide toggle safe to flip
+///    between concurrently running tests.
+#[cfg(feature = "simd")]
+#[test]
+fn simd_knob_determinism_pins() {
+    use ees::coordinator::batch_grad_euclidean_pool_lanes;
+    use ees::linalg::set_simd;
+    use ees::memory::WorkspacePool;
+
+    let (dim, steps, h, batch, lanes) = (3usize, 16usize, 0.04, 11usize, 8usize);
+    let model = NeuralSde::lsde(dim, 10, 2, false, &mut Pcg64::new(7));
+    let st = LowStorageStepper::ees25();
+    let mut rng = Pcg64::new(2718);
+    let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.15; dim]).collect();
+    let paths = sample_paths_par(&mut rng, batch, dim, steps, h, 1);
+    let obs = vec![8, 16];
+    let mut data = vec![0.0; batch * 2 * dim];
+    rng.fill_normal(&mut data);
+    let loss = MomentMatch::from_data(&data, batch, 2, dim);
+    let pool = WorkspacePool::new();
+
+    let run = |simd_on: bool| {
+        set_simd(simd_on);
+        let out = batch_grad_euclidean_pool_lanes(
+            &st,
+            AdjointMethod::Reversible,
+            &model,
+            &y0s,
+            &paths,
+            &obs,
+            &loss,
+            2,
+            &pool,
+            lanes,
+        );
+        set_simd(false);
+        out
+    };
+
+    // (1) Scalar arm reproduces itself run to run.
+    let (ls_a, gs_a, ms_a) = run(false);
+    let (ls_b, gs_b, ms_b) = run(false);
+    assert_eq!(ls_a.to_bits(), ls_b.to_bits(), "scalar loss run-to-run");
+    assert_eq!(ms_a, ms_b, "scalar memory run-to-run");
+    assert_bits_eq(&gs_a, &gs_b, "scalar grad run-to-run");
+
+    // (2) SIMD arm reproduces itself run to run at fixed width.
+    let (lv_a, gv_a, mv_a) = run(true);
+    let (lv_b, gv_b, mv_b) = run(true);
+    assert_eq!(lv_a.to_bits(), lv_b.to_bits(), "simd loss run-to-run");
+    assert_eq!(mv_a, mv_b, "simd memory run-to-run");
+    assert_bits_eq(&gv_a, &gv_b, "simd grad run-to-run");
+
+    // (3) Portable SIMD == scalar bitwise. Skipped only when the AVX2+FMA
+    // specialisation is compiled in (fused mul-add reassociates the
+    // products), which never happens in a default/CI build.
+    #[cfg(not(all(
+        target_arch = "x86_64",
+        target_feature = "avx2",
+        target_feature = "fma"
+    )))]
+    {
+        assert_eq!(ls_a.to_bits(), lv_a.to_bits(), "knob-on vs knob-off loss");
+        assert_eq!(ms_a, mv_a, "knob-on vs knob-off memory");
+        assert_bits_eq(&gs_a, &gv_a, "knob-on vs knob-off grad");
+    }
+}
+
 #[test]
 fn split_streams_are_schedule_independent() {
     // sample_paths_par must give sample b the same path regardless of how

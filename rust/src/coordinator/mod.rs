@@ -58,7 +58,8 @@
 //! group step runs on ([`crate::linalg::matmul_lanes`] and the
 //! [`crate::nn::Mlp`] lane epilogues) additionally consult the process-wide
 //! SIMD toggle ([`crate::linalg::simd_enabled`]: the `EES_SIMD` env var /
-//! `[exec] simd` key, or [`crate::train::EuclideanProblem::with_simd`]).
+//! `[exec] simd` key, applied process-wide via [`crate::linalg::set_simd`]
+//! once at scenario setup).
 //! No batch entry point takes a SIMD parameter — the knob is resolved
 //! inside the kernels so every caller (pool, lanes, manifold) inherits it
 //! uniformly; see `docs/ARCHITECTURE.md` §SIMD kernels & the determinism

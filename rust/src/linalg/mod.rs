@@ -51,25 +51,71 @@ pub fn simd_enabled() -> bool {
     false
 }
 
-/// Process-wide override of the SIMD dispatch knob (e.g. from
-/// `ees::train::EuclideanProblem::with_simd` or a test/bench toggling
-/// arms). Overrides the `EES_SIMD` default until the next call. Note the
-/// portable SIMD kernels are bitwise-identical to the scalar ones (they
-/// pack, never reassociate — see the `simd` module docs), so on builds
-/// without the AVX2+FMA specialisation this toggle is numerically
-/// invisible.
+/// Opaque snapshot of the SIMD dispatch knob — what [`set_simd`] returns
+/// and [`restore_simd`] accepts, so a caller can put the knob back to
+/// whatever it was (including the "no override yet, follow `EES_SIMD`"
+/// default, which a plain `set_simd(bool)` round-trip cannot express).
+#[derive(Clone, Copy, Debug)]
+pub struct SimdMode(#[cfg(feature = "simd")] u8);
+
+/// Process-wide override of the SIMD dispatch knob (the scenario registry
+/// applies `[exec] simd` through this once at setup; tests/benches should
+/// prefer the restoring [`simd_override`] guard). Overrides the `EES_SIMD`
+/// default until the next call and returns the previous [`SimdMode`] for
+/// [`restore_simd`]. Note the portable SIMD kernels are bitwise-identical
+/// to the scalar ones (they pack, never reassociate — see the `simd`
+/// module docs), so on builds without the AVX2+FMA specialisation this
+/// toggle is numerically invisible.
 #[cfg(feature = "simd")]
-pub fn set_simd(on: bool) {
-    SIMD_MODE.store(
+pub fn set_simd(on: bool) -> SimdMode {
+    SimdMode(SIMD_MODE.swap(
         if on { 2 } else { 1 },
         std::sync::atomic::Ordering::Relaxed,
-    );
+    ))
 }
 
 /// Without the `simd` feature the knob is inert (accepted for source
 /// compatibility so callers need no `cfg`).
 #[cfg(not(feature = "simd"))]
-pub fn set_simd(_on: bool) {}
+pub fn set_simd(_on: bool) -> SimdMode {
+    SimdMode()
+}
+
+/// Restore the knob to a [`SimdMode`] previously returned by [`set_simd`]
+/// — including the un-overridden default that re-reads `EES_SIMD`.
+#[cfg(feature = "simd")]
+pub fn restore_simd(prev: SimdMode) {
+    SIMD_MODE.store(prev.0, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Inert without the `simd` feature.
+#[cfg(not(feature = "simd"))]
+pub fn restore_simd(_prev: SimdMode) {}
+
+/// RAII form of [`set_simd`]: flips the knob and restores the previous
+/// [`SimdMode`] on drop (panic included). This is the toggle tests MUST
+/// use — a bare `set_simd(false)` at the end of a test latches a scalar
+/// override for the rest of the process, silently defeating an
+/// `EES_SIMD=1` suite run for every test that follows.
+#[must_use = "dropping the guard immediately restores the previous mode"]
+pub struct SimdGuard {
+    prev: SimdMode,
+}
+
+/// Flip the SIMD dispatch knob for the lifetime of the returned
+/// [`SimdGuard`]; the previous mode (override or `EES_SIMD` default)
+/// comes back when the guard drops.
+pub fn simd_override(on: bool) -> SimdGuard {
+    SimdGuard {
+        prev: set_simd(on),
+    }
+}
+
+impl Drop for SimdGuard {
+    fn drop(&mut self) {
+        restore_simd(self.prev);
+    }
+}
 
 /// Dot product — the float-op-order definition every GEMV/GEMM path in
 /// the crate shares. Dispatches to the SIMD kernel when [`simd_enabled`],
@@ -427,10 +473,26 @@ pub fn norm_inf(a: &[f64]) -> f64 {
     m
 }
 
-/// Frobenius / ℓ2 norm, reduced through the shared [`dot`] kernel — one
-/// float-op-order definition with every GEMV/GEMM path (and the same
-/// SIMD dispatch), instead of a private serial sum.
+/// Frobenius / ℓ2 norm — the serial reference reduction, deliberately
+/// independent of the SIMD dispatch knob. Reassociating this onto the
+/// 4-accumulator [`dot`] kernel would bitwise-change everything
+/// downstream (notably the `Sphere` retraction normalisation on the
+/// stepping path) — on the default path versus the pre-SIMD releases,
+/// and between knob states on the portable SIMD arm, breaking the
+/// "portable `EES_SIMD=1` is bitwise-identical to scalar" contract. Hot
+/// call sites that already live under the SIMD tolerance contract can
+/// use [`norm2_dot`] instead.
+#[inline]
 pub fn norm2(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// ℓ2 norm reduced through the shared [`dot`] kernel — one
+/// float-op-order definition with every GEMV/GEMM path, including the
+/// SIMD dispatch. Reassociates relative to [`norm2`]: only for call
+/// sites that don't sit under a serial-`norm2` bitwise pin.
+#[inline]
+pub fn norm2_dot(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
@@ -1143,17 +1205,28 @@ mod tests {
         for n in [1usize, 2, 3, 4, 7, 8, 13, 31, 64] {
             let mut a = vec![0.0; n];
             rng.fill_normal(&mut a);
-            // norm2 is now defined on the shared dot kernel — pin that
-            // identity bitwise, and stay within FP tolerance of the old
-            // serial sum (the rewrite reassociates, so only tolerance
-            // there).
-            assert_eq!(norm2(&a).to_bits(), dot(&a, &a).sqrt().to_bits(), "n={n}");
+            // norm2 is the untouched serial sum, independent of the SIMD
+            // dispatch knob — pin it bitwise against the reference loop
+            // under BOTH knob states (so an EES_SIMD=1 suite run proves
+            // the knob cannot reach it).
             let serial: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
-            assert!(
-                (norm2(&a) - serial).abs() <= 1e-12 * (1.0 + serial),
-                "n={n}: {} vs serial {serial}",
-                norm2(&a)
-            );
+            for knob in [false, true] {
+                let _mode = simd_override(knob);
+                assert_eq!(norm2(&a).to_bits(), serial.to_bits(), "n={n} knob={knob}");
+                // norm2_dot rides the shared dot kernel (and its SIMD
+                // dispatch): bitwise the kernel identity, tolerance vs
+                // the serial sum (it reassociates).
+                assert_eq!(
+                    norm2_dot(&a).to_bits(),
+                    dot(&a, &a).sqrt().to_bits(),
+                    "n={n} knob={knob}"
+                );
+                assert!(
+                    (norm2_dot(&a) - serial).abs() <= 1e-12 * (1.0 + serial),
+                    "n={n} knob={knob}: {} vs serial {serial}",
+                    norm2_dot(&a)
+                );
+            }
             // norm_inf's unrolled combine is bitwise the serial fold (max
             // is associative and commutative on non-NaN input).
             let folded = a.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
@@ -1208,15 +1281,16 @@ mod tests {
         // half of the determinism pin (the engine-level half lives in
         // rust/tests/determinism.rs). Without the `simd` feature the
         // toggle is inert and this pins the dispatchers fold to scalar.
-        set_simd(false);
+        // The guard restores whatever mode the suite was launched with
+        // (e.g. the EES_SIMD=1 CI leg) when this test ends.
+        let _off = simd_override(false);
         #[cfg(not(feature = "simd"))]
         {
-            set_simd(true); // inert without the feature
+            let _on = simd_override(true); // inert without the feature
             assert!(!simd_enabled());
         }
         #[cfg(feature = "simd")]
         assert!(!simd_enabled());
-        set_simd(false);
         let mut rng = Pcg64::new(93);
         for n in [1usize, 4, 7, 16, 33] {
             let mut a = vec![0.0; n * n];

@@ -772,14 +772,16 @@ mod tests {
                     *c = 0.0;
                 }
                 let run = |simd_on: bool| {
-                    crate::linalg::set_simd(simd_on);
+                    // Guard (not a bare set_simd) so the suite's launch
+                    // mode — e.g. the EES_SIMD=1 CI leg — survives this
+                    // test instead of being latched to a scalar override.
+                    let _mode = crate::linalg::simd_override(simd_on);
                     let mut ws = Workspace::default();
                     let mut out = vec![0.0; 3 * lanes];
                     mlp.forward_lanes(&x, &mut out, lanes, &mut ws);
                     let mut dx = vec![0.0; 4 * lanes];
                     let mut dp = vec![0.0; lanes * np];
                     mlp.vjp_lanes(&x, &cot, &mut dx, &mut dp, 0, np, lanes, &mut ws);
-                    crate::linalg::set_simd(false);
                     (out, dx, dp)
                 };
                 let (out_s, dx_s, dp_s) = run(false);

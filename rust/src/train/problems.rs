@@ -104,17 +104,6 @@ where
         self.lanes = lanes.clamp(1, crate::linalg::MAX_LANES);
         self
     }
-
-    /// Set the process-wide SIMD kernel toggle (the `EES_SIMD` / `[exec]
-    /// simd` knob; see [`crate::linalg::set_simd`]) from this problem's
-    /// configuration. The toggle is global rather than per-problem — the
-    /// lane kernels it steers are free functions — so this builder is a
-    /// convenience for the scenario registry, and a no-op when the crate
-    /// is built without `--features simd`.
-    pub fn with_simd(self, simd: bool) -> Self {
-        crate::linalg::set_simd(simd);
-        self
-    }
 }
 
 impl<M, S> TrainProblem for EuclideanProblem<'_, M, S>

@@ -55,6 +55,12 @@ pub struct ScenarioRun {
 /// `[train]` loop configuration.
 pub fn run_scenario(cfg: &Config) -> crate::Result<ScenarioRun> {
     let tc = TrainConfig::from_config(cfg)?;
+    // The SIMD kernel dispatch knob is process-global (the kernels it
+    // steers are free functions), so it is applied exactly once here at
+    // scenario setup — deliberately NOT hidden inside a per-problem
+    // builder, where the last-constructed problem would silently flip
+    // dispatch for every other problem in the process.
+    crate::linalg::set_simd(cfg.simd());
     let name = cfg.str_or("train.scenario", "ou").to_string();
     let log = match name.as_str() {
         "ou" => run_ou(cfg, &tc)?,
@@ -126,8 +132,7 @@ fn run_ou(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
         (y0s, paths)
     };
     let mut problem = EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss)
-        .with_lanes(tc.lanes)
-        .with_simd(cfg.simd());
+        .with_lanes(tc.lanes);
     Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
 }
 
@@ -172,8 +177,7 @@ fn run_gbm(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
         (y0s, paths)
     };
     let mut problem = EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss)
-        .with_lanes(tc.lanes)
-        .with_simd(cfg.simd());
+        .with_lanes(tc.lanes);
     Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
 }
 

@@ -614,7 +614,9 @@ fn lane_stepping_zero_alloc() {
 /// scalar path, which must hold the same bound.
 fn simd_lane_stepping_zero_alloc() {
     use ees::nn::neural_sde::NeuralSde;
-    ees::linalg::set_simd(true);
+    // Guard, not a bare set_simd: the previous mode (the suite's launch
+    // default) comes back when this test ends.
+    let _mode = ees::linalg::simd_override(true);
     let lanes = 8usize;
     let dim = 4usize;
     let mut rng = Pcg64::new(13);
@@ -652,7 +654,6 @@ fn simd_lane_stepping_zero_alloc() {
             );
         }
     });
-    ees::linalg::set_simd(false);
     assert_eq!(n, 0, "simd_lanes/neural_sde: {n} allocations in 31 warm lane steps");
 }
 

@@ -545,7 +545,7 @@ fn manifold_lane_count_bitwise_invariant() {
 #[test]
 fn simd_knob_determinism_pins() {
     use ees::coordinator::batch_grad_euclidean_pool_lanes;
-    use ees::linalg::set_simd;
+    use ees::linalg::simd_override;
     use ees::memory::WorkspacePool;
 
     let (dim, steps, h, batch, lanes) = (3usize, 16usize, 0.04, 11usize, 8usize);
@@ -561,8 +561,11 @@ fn simd_knob_determinism_pins() {
     let pool = WorkspacePool::new();
 
     let run = |simd_on: bool| {
-        set_simd(simd_on);
-        let out = batch_grad_euclidean_pool_lanes(
+        // RAII guard: restores the suite's launch mode (e.g. the
+        // EES_SIMD=1 CI leg) instead of latching a scalar override for
+        // every test that runs after this one.
+        let _mode = simd_override(simd_on);
+        batch_grad_euclidean_pool_lanes(
             &st,
             AdjointMethod::Reversible,
             &model,
@@ -573,9 +576,7 @@ fn simd_knob_determinism_pins() {
             2,
             &pool,
             lanes,
-        );
-        set_simd(false);
-        out
+        )
     };
 
     // (1) Scalar arm reproduces itself run to run.

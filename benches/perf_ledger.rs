@@ -880,6 +880,87 @@ fn main() {
         }
     }
 
+    // --- risk-engine arms -------------------------------------------------
+    // The fractional-kernel convolution the rough-Bergomi sweep spends its
+    // time in: FFT (workspace column) vs the pinned O(n^2) direct reference
+    // (baseline column) at the million-path fine-grid length, so `speedup`
+    // reads as the FFT win the risk engine banks per path.
+    {
+        use ees::rng::fbm::{riemann_liouville_direct, riemann_liouville_fft};
+        let n = 512usize;
+        let dt = 1.0 / n as f64;
+        let mut dw = vec![0.0; n];
+        let mut r = Pcg64::new(61);
+        r.fill_normal_scaled(dt.sqrt(), &mut dw);
+        let median = median_ns(warmup, iters, || {
+            std::hint::black_box(riemann_liouville_fft(0.07, dt, std::hint::black_box(&dw)));
+        });
+        let allocs = allocs_per_op(1, || {
+            std::hint::black_box(riemann_liouville_fft(0.07, dt, &dw));
+        });
+        let base_median = median_ns(warmup.min(3), iters.min(20), || {
+            std::hint::black_box(riemann_liouville_direct(0.07, dt, std::hint::black_box(&dw)));
+        });
+        let base_allocs = allocs_per_op(1, || {
+            std::hint::black_box(riemann_liouville_direct(0.07, dt, &dw));
+        });
+        ledger.push(LedgerEntry {
+            name: "risk/rl_fft_n512".into(),
+            median_ns: median,
+            allocs_per_op: allocs,
+            baseline_median_ns: base_median,
+            baseline_allocs_per_op: base_allocs,
+        });
+    }
+
+    // A GBM-portfolio risk chunk end to end: the lane-blocked EES arm
+    // (workspace column) vs the scalar diagonal-noise Milstein baseline arm
+    // (baseline column) over the same 64-path chunk — the cost ratio a
+    // sweep pays for the higher-order scheme family. Informational, not
+    // gated.
+    {
+        use ees::config::Config;
+        use ees::risk::{RiskConfig, RiskSweep};
+        let mk = |stepper: &str| {
+            RiskConfig::from_config(
+                &Config::parse(&format!(
+                    "[risk]\nscenario = \"gbm_portfolio\"\nstepper = \"{stepper}\"\n\
+                     dim = 8\npaths = 64\nsteps = 32\nchunk = 64\nseed = 23\n\
+                     [exec]\nparallelism = 1\nlanes = 8\n"
+                ))
+                .unwrap(),
+            )
+            .unwrap()
+        };
+        let (ees_cfg, mil_cfg) = (mk("ees"), mk("milstein"));
+        let ops = 64usize;
+        let median = median_ns(warmup, iters, || {
+            let mut s = RiskSweep::new(ees_cfg.clone());
+            s.run();
+            std::hint::black_box(s.done());
+        }) / ops as f64;
+        let allocs = allocs_per_op(ops, || {
+            let mut s = RiskSweep::new(ees_cfg.clone());
+            s.run();
+        });
+        let base_median = median_ns(warmup, iters, || {
+            let mut s = RiskSweep::new(mil_cfg.clone());
+            s.run();
+            std::hint::black_box(s.done());
+        }) / ops as f64;
+        let base_allocs = allocs_per_op(ops, || {
+            let mut s = RiskSweep::new(mil_cfg.clone());
+            s.run();
+        });
+        ledger.push(LedgerEntry {
+            name: "risk/gbm_chunk_ees_vs_milstein/b64_s32_d8".into(),
+            median_ns: median,
+            allocs_per_op: allocs,
+            baseline_median_ns: base_median,
+            baseline_allocs_per_op: base_allocs,
+        });
+    }
+
     // --- feature-gated SIMD kernel arms ----------------------------------
     // The "workspace" column runs with the SIMD knob ON, the baseline
     // column with it OFF, so `speedup` reads directly as the SIMD win over

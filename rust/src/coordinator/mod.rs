@@ -389,6 +389,78 @@ pub fn batch_integrate_lanes_par(
     per_group.into_iter().flatten().collect()
 }
 
+/// [`batch_integrate_lanes_par`] keeping only the terminal states — the
+/// streaming entry point the risk engine sweeps millions of paths through.
+///
+/// No trajectory is materialised: memory is O(state × lanes) per worker
+/// regardless of the step count, and each returned `Vec` is the final
+/// `dim`-vector of its sample. Step order, lane packing and workspace use
+/// mirror [`batch_integrate_lanes_par`] float-op for float-op, so terminals
+/// are bitwise-identical to the last trajectory row of the full integration
+/// at every `(parallelism, lanes)` combination (pinned by
+/// `rust/tests/determinism.rs`).
+pub fn batch_terminal_lanes_par(
+    stepper: &dyn Stepper,
+    vf: &dyn VectorField,
+    t0: f64,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    parallelism: usize,
+    lanes: usize,
+) -> Vec<Vec<f64>> {
+    let batch = y0s.len();
+    let lanes = effective_lanes(stepper, vf, lanes);
+    let uniform_grid = paths
+        .windows(2)
+        .all(|w| w[0].steps() == w[1].steps() && w[0].h == w[1].h);
+    let dim = vf.dim();
+    if lanes <= 1 || !uniform_grid {
+        let ws_pool = WorkspacePool::new();
+        return parallel_map(parallelism, batch, |b| {
+            let mut ws = ws_pool.take();
+            let mut state = stepper.init_state(vf, t0, &y0s[b]);
+            for n in 0..paths[b].steps() {
+                let t = t0 + n as f64 * paths[b].h;
+                stepper.step_ws(vf, t, paths[b].h, paths[b].increment(n), &mut state, &mut ws);
+            }
+            ws_pool.put(ws);
+            state.truncate(dim);
+            state
+        });
+    }
+    let state_size = stepper.state_size(dim);
+    // (batch + lanes - 1) / lanes, spelled out: the crate pins
+    // rust-version 1.70, before usize::div_ceil stabilised.
+    let groups = (batch + lanes - 1) / lanes;
+    let ws_pool = WorkspacePool::new();
+    let per_group: Vec<Vec<Vec<f64>>> = parallel_map(parallelism, groups, |g| {
+        let lo = g * lanes;
+        let ll = lanes.min(batch - lo);
+        let steps = paths[lo].steps();
+        let h = paths[lo].h;
+        let mut ws = ws_pool.take();
+        let mut state = ws.take(state_size * ll);
+        for l in 0..ll {
+            let s = stepper.init_state(vf, t0, &y0s[lo + l]);
+            crate::linalg::lane_scatter(&s, l, ll, &mut state);
+        }
+        let mut dw = ws.take(vf.noise_dim() * ll);
+        for n in 0..steps {
+            let t = t0 + n as f64 * h;
+            pack_noise(paths, lo, ll, n, &mut dw);
+            stepper.step_lanes_ws(vf, t, h, &dw, &mut state, ll, &mut ws);
+        }
+        let terminals: Vec<Vec<f64>> = (0..ll)
+            .map(|l| (0..dim).map(|d| state[d * ll + l]).collect())
+            .collect();
+        ws.put(dw);
+        ws.put(state);
+        ws_pool.put(ws);
+        terminals
+    });
+    per_group.into_iter().flatten().collect()
+}
+
 /// [`batch_integrate_par`] at the configured default parallelism.
 pub fn batch_integrate(
     stepper: &dyn Stepper,

@@ -19,7 +19,9 @@
 //!   [`losses`], [`experiments`] (one harness per paper table/figure),
 //!   [`coordinator`] (deterministic parallel batch solves), [`train`] (the
 //!   training engine: `Trainer`, schedules, callbacks, checkpointing, the
-//!   scenario registry behind `ees train`) and [`runtime`] (PJRT execution of
+//!   scenario registry behind `ees train`), [`stats`] (streaming Welford /
+//!   P² quantile / CVaR estimators), [`risk`] (the million-path streaming
+//!   risk engine behind `ees risk`) and [`runtime`] (PJRT execution of
 //!   JAX/Pallas-AOT artifacts — Python never on the training path).
 
 pub mod adjoint;
@@ -34,10 +36,12 @@ pub mod memory;
 pub mod models;
 pub mod nn;
 pub mod rng;
+pub mod risk;
 pub mod runtime;
 pub mod sig;
 pub mod solvers;
 pub mod stability;
+pub mod stats;
 pub mod tableau;
 pub mod train;
 pub mod vf;

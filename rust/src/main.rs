@@ -23,6 +23,7 @@
 //! ees runtime-smoke        # PJRT artifact load/execute check
 //! ees all                  # everything (smoke scale)
 //! ees train --config F     # training engine: run a registered scenario
+//! ees risk --config F      # streaming Monte Carlo risk sweep
 //! ```
 //!
 //! `ees train` reads a `[train]` config section (scenario, epochs, batch,
@@ -53,6 +54,11 @@ struct Args {
     max_final_loss: Option<f64>,
     max_loss_ratio: Option<f64>,
     assert_improves: bool,
+    paths: Option<usize>,
+    checkpoint: Option<String>,
+    resume: Option<String>,
+    stop_after: Option<usize>,
+    assert_finite: bool,
 }
 
 fn parse_args() -> Args {
@@ -69,6 +75,11 @@ fn parse_args() -> Args {
         max_final_loss: None,
         max_loss_ratio: None,
         assert_improves: false,
+        paths: None,
+        checkpoint: None,
+        resume: None,
+        stop_after: None,
+        assert_finite: false,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -104,6 +115,29 @@ fn parse_args() -> Args {
                 }
             }
             "--assert-improves" => args.assert_improves = true,
+            "--assert-finite" => args.assert_finite = true,
+            "--checkpoint" => args.checkpoint = it.next(),
+            "--resume" => args.resume = it.next(),
+            "--paths" => {
+                let raw = it.next().unwrap_or_default();
+                match raw.parse() {
+                    Ok(v) => args.paths = Some(v),
+                    Err(_) => {
+                        eprintln!("--paths: not a count: '{raw}'");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            "--stop-after" => {
+                let raw = it.next().unwrap_or_default();
+                match raw.parse() {
+                    Ok(v) => args.stop_after = Some(v),
+                    Err(_) => {
+                        eprintln!("--stop-after: not a count: '{raw}'");
+                        std::process::exit(2);
+                    }
+                }
+            }
             "--steps" => {
                 if let Some(s) = it.next() {
                     args.steps = s
@@ -187,6 +221,7 @@ fn main() {
         "ees27" => experiments::fig9::run(scale),
         "runtime-smoke" => runtime_smoke(),
         "train" => run_train(&args),
+        "risk" => run_risk(&args),
         "all" => {
             let mut all = String::new();
             all.push_str(&experiments::fig2::run(false));
@@ -220,12 +255,18 @@ fn main() {
             eprintln!("usage: ees <command> [--full] [--render] [--out FILE] [--model NAME] [--steps a,b,c]");
             eprintln!("commands: stability ms-stability ou stochvol kuramoto kuramoto-memory");
             eprintln!("          sphere sphere-memory gbm md adjoint-fidelity memory-t7");
-            eprintln!("          convergence cf-convergence ees27 runtime-smoke train all");
+            eprintln!("          convergence cf-convergence ees27 runtime-smoke train risk all");
             eprintln!(
                 "train:    ees train --config FILE [--scenario {}] [--ledger OUT.json]",
                 ees::train::scenarios::NAMES.join("|")
             );
             eprintln!("                    [--max-final-loss X] [--max-loss-ratio R] [--assert-improves]");
+            eprintln!(
+                "risk:     ees risk --config FILE [--scenario {}] [--paths N]",
+                ees::risk::NAMES.join("|")
+            );
+            eprintln!("                   [--stop-after N] [--checkpoint F] [--resume F]");
+            eprintln!("                   [--ledger OUT.json] [--assert-finite]");
             std::process::exit(0);
         }
         other => {
@@ -328,6 +369,99 @@ fn run_train(args: &Args) -> String {
         std::process::exit(1);
     }
     run.summary
+}
+
+/// `ees risk`: run (or resume) a streaming Monte Carlo risk sweep from a
+/// `[risk]` config section (`ees::risk`). `--stop-after N` halts the sweep
+/// after N paths (for mid-sweep checkpointing), `--checkpoint F` writes the
+/// bit-exact snapshot text, `--resume F` continues from one, `--ledger
+/// OUT.json` writes the deterministic estimate JSON and `--assert-finite`
+/// turns the run into a CI gate. Exits 2 on configuration errors, 1 on
+/// gate/IO failures.
+fn run_risk(args: &Args) -> String {
+    use ees::risk::{RiskConfig, RiskSweep};
+    use ees::train::Snapshot;
+    let mut cfg = match &args.config {
+        Some(path) => match Config::from_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("ees risk: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => Config::default(),
+    };
+    if let Some(name) = &args.scenario {
+        cfg.values.insert(
+            "risk.scenario".into(),
+            ees::config::Value::Str(name.clone()),
+        );
+    }
+    if let Some(paths) = args.paths {
+        cfg.values.insert(
+            "risk.paths".into(),
+            ees::config::Value::Int(paths as i64),
+        );
+    }
+    let rc = match RiskConfig::from_config(&cfg) {
+        Ok(rc) => rc,
+        Err(e) => {
+            eprintln!("ees risk: {e}");
+            std::process::exit(2);
+        }
+    };
+    let mut sweep = match &args.resume {
+        Some(path) => {
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("ees risk: cannot read checkpoint {path}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let snap = match Snapshot::from_text(&text) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("ees risk: bad checkpoint {path}: {e}");
+                    std::process::exit(2);
+                }
+            };
+            match RiskSweep::resume(rc, &snap) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("ees risk: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        None => RiskSweep::new(rc),
+    };
+    sweep.run_to(args.stop_after.unwrap_or(usize::MAX));
+    if let Some(path) = &args.checkpoint {
+        if let Err(e) = std::fs::write(path, sweep.snapshot().to_text()) {
+            eprintln!("failed to write checkpoint {path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!(
+            "risk checkpoint written to {path} ({} / {} paths done)",
+            sweep.done(),
+            sweep.cfg().paths
+        );
+    }
+    let report = sweep.report();
+    if let Some(path) = &args.ledger {
+        if let Err(e) = std::fs::write(path, report.to_json()) {
+            eprintln!("failed to write ledger {path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("risk ledger written to {path}");
+    }
+    if args.assert_finite && !report.is_finite() {
+        println!("{}", report.render());
+        eprintln!("ees risk: FAILED: non-finite estimate in the report");
+        std::process::exit(1);
+    }
+    report.render()
 }
 
 /// PJRT smoke: load the AOT EES-step artifact and run one batch step.

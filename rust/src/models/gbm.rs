@@ -78,6 +78,181 @@ impl VectorField for StiffGbmField<'_> {
     }
 }
 
+/// A correlated geometric-Brownian portfolio (the risk engine's second
+/// scenario): `d` assets with
+///
+///   dS_i = μ_i S_i dt + σ_i S_i dB_i,   B = L·W,
+///
+/// where `W` is a standard d-dimensional Brownian motion and `L` the
+/// Cholesky factor of an equicorrelation matrix. The diffusion stays
+/// *diagonal in state* (`g_i` depends on `S_i` only), so the diagonal-noise
+/// [`crate::solvers::Milstein`] correction ½σ_i²S_i(ΔB_i² − h) is exact
+/// order 1.0 even with correlated drivers (the iterated-integral
+/// coefficient is symmetric — see `rust/src/solvers/milstein.rs`).
+#[derive(Clone, Debug)]
+pub struct GbmPortfolio {
+    pub d: usize,
+    pub mu: Vec<f64>,
+    pub sigma: Vec<f64>,
+    /// Row-major lower-triangular Cholesky factor of the driver
+    /// correlation matrix (unit diagonal rows: Σ_j L_ij² = 1).
+    pub chol: Vec<f64>,
+}
+
+impl GbmPortfolio {
+    /// Equicorrelated portfolio: common drift, volatilities linearly
+    /// spaced over `[sigma_lo, sigma_hi]`, pairwise driver correlation
+    /// `rho` (must keep `(1−ρ)I + ρ11ᵀ` positive definite:
+    /// `−1/(d−1) < ρ < 1`).
+    pub fn equicorrelated(
+        d: usize,
+        mu: f64,
+        sigma_lo: f64,
+        sigma_hi: f64,
+        rho: f64,
+    ) -> crate::Result<Self> {
+        if d == 0 {
+            return Err(crate::format_err!("GbmPortfolio needs at least one asset"));
+        }
+        let sigma: Vec<f64> = (0..d)
+            .map(|i| {
+                if d == 1 {
+                    sigma_lo
+                } else {
+                    sigma_lo + (sigma_hi - sigma_lo) * i as f64 / (d - 1) as f64
+                }
+            })
+            .collect();
+        // In-place lower Cholesky of the equicorrelation matrix.
+        let mut l = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..=i {
+                let mut acc = if i == j { 1.0 } else { rho };
+                for k in 0..j {
+                    acc -= l[i * d + k] * l[j * d + k];
+                }
+                if i == j {
+                    if acc <= 0.0 {
+                        return Err(crate::format_err!(
+                            "equicorrelation rho = {rho} is not positive definite at d = {d}"
+                        ));
+                    }
+                    l[i * d + j] = acc.sqrt();
+                } else {
+                    l[i * d + j] = acc / l[j * d + j];
+                }
+            }
+        }
+        Ok(Self {
+            d,
+            mu: vec![mu; d],
+            sigma,
+            chol: l,
+        })
+    }
+
+    /// The risk engine's default book: drift 5%, vols 10–40%, ρ = 0.3.
+    pub fn paper(d: usize) -> Self {
+        Self::equicorrelated(d, 0.05, 0.1, 0.4, 0.3).expect("default portfolio is PD")
+    }
+
+    /// Correlate raw increments: `out = L·dw` (row-by-row, no scratch).
+    pub fn correlate(&self, dw: &[f64], out: &mut [f64]) {
+        let d = self.d;
+        for i in 0..d {
+            let mut acc = 0.0;
+            for j in 0..=i {
+                acc += self.chol[i * d + j] * dw[j];
+            }
+            out[i] = acc;
+        }
+    }
+
+    /// Equal-weight portfolio value (mean of asset prices).
+    pub fn value(y: &[f64]) -> f64 {
+        y.iter().sum::<f64>() / y.len() as f64
+    }
+
+    pub fn as_field(&self) -> GbmPortfolioField<'_> {
+        GbmPortfolioField { m: self }
+    }
+}
+
+/// Diagonal-SDE view for the Milstein baseline arm: callers correlate the
+/// increments (`GbmPortfolio::correlate`) before each step.
+impl crate::solvers::DiagonalSde for GbmPortfolio {
+    fn dim(&self) -> usize {
+        self.d
+    }
+    fn drift(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+        for i in 0..self.d {
+            out[i] = self.mu[i] * y[i];
+        }
+    }
+    fn diffusion(&self, _t: f64, y: &[f64], out: &mut [f64]) {
+        for i in 0..self.d {
+            out[i] = self.sigma[i] * y[i];
+        }
+    }
+    fn diffusion_dyi(&self, _t: f64, _y: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(&self.sigma);
+    }
+}
+
+/// [`VectorField`] view for the EES arms: consumes *raw* (independent)
+/// increments and applies the correlation inside the combined evaluation,
+/// so the same [`crate::rng::BrownianPath`] drives both stepper arms.
+pub struct GbmPortfolioField<'a> {
+    m: &'a GbmPortfolio,
+}
+
+impl VectorField for GbmPortfolioField<'_> {
+    fn dim(&self) -> usize {
+        self.m.d
+    }
+    fn noise_dim(&self) -> usize {
+        self.m.d
+    }
+    fn combined(&self, _t: f64, y: &[f64], h: f64, dw: &[f64], out: &mut [f64]) {
+        let d = self.m.d;
+        for i in 0..d {
+            let mut acc = 0.0;
+            for j in 0..=i {
+                acc += self.m.chol[i * d + j] * dw[j];
+            }
+            out[i] = self.m.mu[i] * y[i] * h + self.m.sigma[i] * y[i] * acc;
+        }
+    }
+    fn lane_blocked(&self) -> bool {
+        true
+    }
+    /// Blocked evaluation over a lane-major group: identical per-lane
+    /// float-op order to [`Self::combined`] (the j-ascending correlation
+    /// sum), so lane grouping stays bitwise-invisible.
+    fn combined_lanes(
+        &self,
+        _t: f64,
+        y: &[f64],
+        h: f64,
+        dw: &[f64],
+        out: &mut [f64],
+        lanes: usize,
+        _ws: &mut crate::memory::StepWorkspace,
+    ) {
+        let d = self.m.d;
+        for i in 0..d {
+            for l in 0..lanes {
+                let mut acc = 0.0;
+                for j in 0..=i {
+                    acc += self.m.chol[i * d + j] * dw[j * lanes + l];
+                }
+                let yi = y[i * lanes + l];
+                out[i * lanes + l] = self.m.mu[i] * yi * h + self.m.sigma[i] * yi * acc;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +326,59 @@ mod tests {
             "Reversible Heun should diverge, ‖y‖ = {rh_norm}"
         );
         assert!(ees_norm < 10.0, "EES should stay bounded, ‖y‖ = {ees_norm}");
+    }
+
+    #[test]
+    fn portfolio_cholesky_reconstructs_equicorrelation() {
+        let d = 6;
+        let rho = 0.3;
+        let p = GbmPortfolio::equicorrelated(d, 0.05, 0.1, 0.4, rho).unwrap();
+        for i in 0..d {
+            for j in 0..d {
+                let mut acc = 0.0;
+                for k in 0..d {
+                    acc += p.chol[i * d + k] * p.chol[j * d + k];
+                }
+                let want = if i == j { 1.0 } else { rho };
+                assert!((acc - want).abs() < 1e-12, "({i},{j}): {acc} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn portfolio_rejects_indefinite_correlation() {
+        assert!(GbmPortfolio::equicorrelated(4, 0.0, 0.1, 0.2, -0.5).is_err());
+        assert!(GbmPortfolio::equicorrelated(0, 0.0, 0.1, 0.2, 0.3).is_err());
+    }
+
+    #[test]
+    fn portfolio_lanes_match_scalar_bitwise() {
+        use crate::linalg::{lane_gather, lane_scatter};
+        let p = GbmPortfolio::paper(5);
+        let f = p.as_field();
+        let (d, lanes) = (5, 4);
+        let mut rng = Pcg64::new(12);
+        let mut y = vec![0.0; d * lanes];
+        let mut dw = vec![0.0; d * lanes];
+        rng.fill_normal(&mut y);
+        for v in y.iter_mut() {
+            *v = 1.0 + 0.2 * v.abs();
+        }
+        rng.fill_normal_scaled(0.05, &mut dw);
+        let h = 0.01;
+        let mut blocked = vec![0.0; d * lanes];
+        let mut ws = crate::memory::StepWorkspace::new();
+        f.combined_lanes(0.0, &y, h, &dw, &mut blocked, lanes, &mut ws);
+        let (mut yl, mut dwl, mut ol) = (vec![0.0; d], vec![0.0; d], vec![0.0; d]);
+        let mut scattered = vec![0.0; d * lanes];
+        for l in 0..lanes {
+            lane_gather(&y, l, lanes, &mut yl);
+            lane_gather(&dw, l, lanes, &mut dwl);
+            f.combined(0.0, &yl, h, &dwl, &mut ol);
+            lane_scatter(&ol, l, lanes, &mut scattered);
+        }
+        for (a, b) in blocked.iter().zip(scattered.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

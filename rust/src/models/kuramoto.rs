@@ -88,6 +88,12 @@ impl KuramotoParams {
     /// Sample a dataset of `count` trajectories at `n_obs` observation times
     /// (sub-sampled from a fine grid), random initial conditions.
     /// Returns `(count, n_obs, 2N)` flattened.
+    ///
+    /// Observation indices are `idx_k = k·n_fine/n_obs`, which lands the
+    /// terminal observation on the last grid point even when `n_obs` does
+    /// not divide `n_fine`. (The old fixed stride `k·(n_fine/n_obs)`
+    /// truncated the ratio and silently dropped the grid tail; when the
+    /// division is exact the indices — and the output — are unchanged.)
     pub fn sample_dataset(
         &self,
         count: usize,
@@ -96,17 +102,33 @@ impl KuramotoParams {
         n_obs: usize,
         rng: &mut Pcg64,
     ) -> Vec<f64> {
+        let obs: Vec<usize> = (1..=n_obs).map(|k| k * n_fine / n_obs).collect();
+        self.sample_dataset_at(count, t_end, n_fine, &obs, rng)
+    }
+
+    /// [`Self::sample_dataset`] at explicit fine-grid observation indices —
+    /// the entry point the scenario registry uses so data generation and
+    /// the trainer's loss share one physical-time observation grid (see
+    /// `train::scenarios::obs_grid`). RNG consumption per trajectory is
+    /// identical to [`Self::sample_dataset`]: initial conditions first,
+    /// then the simulation driver.
+    pub fn sample_dataset_at(
+        &self,
+        count: usize,
+        t_end: f64,
+        n_fine: usize,
+        obs: &[usize],
+        rng: &mut Pcg64,
+    ) -> Vec<f64> {
         let h = t_end / n_fine as f64;
-        let stride = n_fine / n_obs;
         let dim = 2 * self.n;
-        let mut out = Vec::with_capacity(count * n_obs * dim);
+        let mut out = Vec::with_capacity(count * obs.len() * dim);
         for _ in 0..count {
             let theta0: Vec<f64> =
                 (0..self.n).map(|_| rng.uniform_range(-std::f64::consts::PI, std::f64::consts::PI)).collect();
             let omega0: Vec<f64> = (0..self.n).map(|_| 0.5 * rng.normal()).collect();
             let traj = self.simulate(&theta0, &omega0, n_fine, h, rng);
-            for k in 1..=n_obs {
-                let idx = k * stride;
+            for &idx in obs {
                 out.extend_from_slice(&traj[idx * dim..(idx + 1) * dim]);
             }
         }
@@ -210,6 +232,43 @@ mod tests {
         }
         let r = acc / reps as f64;
         assert!(r > 0.3 && r < 0.98, "mean order parameter {r}");
+    }
+
+    /// The stride-truncation bugfix: with n_obs ∤ n_fine the terminal
+    /// observation must still be the terminal grid point — the dataset's
+    /// last frame equals the trajectory's last frame for the same stream.
+    #[test]
+    fn dataset_terminal_observation_reaches_t_end() {
+        let p = KuramotoParams::paper(3);
+        let (n_fine, n_obs, t_end) = (10usize, 3usize, 1.0);
+        let dim = 6;
+        let data = p.sample_dataset(1, t_end, n_fine, n_obs, &mut Pcg64::new(77));
+        assert_eq!(data.len(), n_obs * dim);
+        // Replay the same stream by hand to get the full trajectory.
+        let mut rng = Pcg64::new(77);
+        let theta0: Vec<f64> = (0..3)
+            .map(|_| rng.uniform_range(-std::f64::consts::PI, std::f64::consts::PI))
+            .collect();
+        let omega0: Vec<f64> = (0..3).map(|_| 0.5 * rng.normal()).collect();
+        let traj = p.simulate(&theta0, &omega0, n_fine, t_end / n_fine as f64, &mut rng);
+        let last = &traj[n_fine * dim..];
+        for (a, b) in data[(n_obs - 1) * dim..].iter().zip(last.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    /// When n_obs divides n_fine the rounding form reduces to the old
+    /// stride — explicit-grid sampling at the stride indices is identical.
+    #[test]
+    fn dataset_divisible_grid_unchanged_by_rounding() {
+        let p = KuramotoParams::paper(2);
+        let a = p.sample_dataset(2, 1.0, 12, 4, &mut Pcg64::new(9));
+        let obs: Vec<usize> = (1..=4).map(|k| k * 3).collect();
+        let b = p.sample_dataset_at(2, 1.0, 12, &obs, &mut Pcg64::new(9));
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -231,8 +231,17 @@ pub fn simulate_price_path(
     // Log-price evolution with leverage for LSV.
     let mut logs = (p.s0).ln();
     let mut out = Vec::with_capacity(n_obs + 1);
-    let stride = n_fine / n_obs;
     out.push(p.s0);
+    // Observation grid i_k = k·n_fine/n_obs: the terminal observation
+    // lands on the last fine-grid point even when n_obs ∤ n_fine (the old
+    // fixed stride truncated the ratio and dropped the grid tail); when
+    // the division is exact these are the old stride indices, so the
+    // recorded path is unchanged bitwise.
+    let mut next_obs = 1usize;
+    while next_obs <= n_obs && next_obs * n_fine / n_obs == 0 {
+        out.push(p.s0);
+        next_obs += 1;
+    }
     for i in 0..n_fine {
         let vol = v[i].max(0.0).sqrt();
         let lev = if model == VolModel::LocalStochVol {
@@ -244,8 +253,9 @@ pub fn simulate_price_path(
         let sig = vol * lev;
         let dws = p.rho * dwv[i] + rho_c * dz[i];
         logs += -0.5 * sig * sig * dt + sig * dws;
-        if (i + 1) % stride == 0 && out.len() <= n_obs {
+        while next_obs <= n_obs && i + 1 == next_obs * n_fine / n_obs {
             out.push(logs.exp());
+            next_obs += 1;
         }
     }
     out
@@ -329,6 +339,27 @@ mod tests {
             (var_log - 0.04).abs() < 0.015,
             "Heston var(log S) = {var_log}"
         );
+    }
+
+    /// The stride-truncation bugfix: the recorded terminal observation is
+    /// the terminal fine-grid point whatever n_obs is. The driver draws
+    /// depend only on n_fine, so the same seed at different n_obs must
+    /// yield bitwise-identical terminals.
+    #[test]
+    fn terminal_observation_reaches_t_end_for_awkward_n_obs() {
+        for model in [VolModel::BlackScholes, VolModel::RoughBergomi] {
+            let full = simulate_price_path(model, 1.0, 10, 10, &mut Pcg64::new(23));
+            for n_obs in [1usize, 3, 7] {
+                let path = simulate_price_path(model, 1.0, 10, n_obs, &mut Pcg64::new(23));
+                assert_eq!(path.len(), n_obs + 1, "{}: n_obs={n_obs}", model.name());
+                assert_eq!(
+                    path.last().unwrap().to_bits(),
+                    full.last().unwrap().to_bits(),
+                    "{}: terminal must sit at t_end for n_obs={n_obs}",
+                    model.name()
+                );
+            }
+        }
     }
 
     #[test]

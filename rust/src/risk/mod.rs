@@ -1,0 +1,713 @@
+//! The million-path streaming risk engine behind `ees risk` (ROADMAP open
+//! item 4): sweep 10⁵–10⁷ Monte Carlo paths of a scenario through the
+//! solver stack and fold every payoff into the O(1)-memory streaming
+//! estimators of [`crate::stats`] — mean/variance (Welford), quantiles
+//! (P²) and tail CVaR — so resident memory is O(chunk × workers),
+//! independent of the total path count.
+//!
+//! # Scenarios
+//!
+//! - `rbergomi` — fBm-driven rough Bergomi terminal log-price, through the
+//!   fractional kernel machinery of [`crate::rng::fbm`] (whose
+//!   `riemann_liouville` hot loop is FFT-accelerated for exactly this
+//!   sweep) and [`crate::models::stochvol`].
+//! - `gbm_portfolio` — a correlated geometric-Brownian book
+//!   ([`GbmPortfolio`]); payoff is the equal-weight terminal portfolio
+//!   value. Two stepper arms: the lane-blocked EES(2,5) engine
+//!   ([`crate::coordinator::batch_terminal_lanes_par`]) and the
+//!   diagonal-noise [`Milstein`] baseline, driven by the *same* per-path
+//!   noise so their estimates are directly comparable.
+//! - `kuramoto` — the paper's stochastic Kuramoto network, integrated in
+//!   streaming form (no trajectory, O(N) state) with CF-EES(2,5) on T𝕋ᴺ;
+//!   payoff is the terminal order parameter. The mean-field coupling is
+//!   evaluated through the order-parameter trick, so a step is O(N) — the
+//!   cost profile of a sparse-coupled network — and N ≈ 10⁴ oscillators
+//!   are practical.
+//!
+//! # Determinism & checkpointing
+//!
+//! Path `i`'s noise comes from the **pure stream function**
+//! [`path_stream`]`(seed, i)` — a fresh root generator split at the global
+//! path index — so a path's driver depends only on `(seed, i)`, never on
+//! which worker, lane, or chunk computed it. Payoffs are produced by
+//! index-ordered [`parallel_map`] fan-outs and folded into the estimators
+//! on the calling thread in global index order. Estimates are therefore
+//! **bitwise-identical across worker counts, lane widths and chunk sizes**,
+//! and a sweep checkpointed mid-stream (PR 4 [`Snapshot`] text form, bit
+//! exact) resumes to the same final state as an uninterrupted run.
+
+use crate::bench::Table;
+use crate::config::Config;
+use crate::coordinator::{batch_terminal_lanes_par, parallel_map};
+use crate::lie::TTorus;
+use crate::memory::WorkspacePool;
+use crate::models::gbm::GbmPortfolio;
+use crate::models::kuramoto::KuramotoParams;
+use crate::models::stochvol::{simulate_price_path, VolModel};
+use crate::rng::{BrownianPath, Pcg64};
+use crate::solvers::{CfEes, LowStorageStepper, ManifoldStepper, Milstein};
+use crate::stats::{Cvar, P2Quantile, Welford};
+use crate::train::Snapshot;
+
+/// Scenario names accepted by `[risk] scenario` (and `ees risk --scenario`).
+pub const NAMES: [&str; 3] = ["rbergomi", "gbm_portfolio", "kuramoto"];
+
+/// Quantile levels every sweep tracks (besides the CVaR tail).
+pub const QUANTILES: [f64; 3] = [0.05, 0.5, 0.95];
+
+/// The registered risk scenarios.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RiskScenario {
+    /// Rough Bergomi terminal log-price (fBm-driven, Table 11 parameters).
+    RoughBergomi,
+    /// Correlated GBM portfolio terminal value ([`GbmPortfolio::paper`]).
+    GbmPortfolio,
+    /// Stochastic Kuramoto terminal order parameter on T𝕋ᴺ.
+    Kuramoto,
+}
+
+impl RiskScenario {
+    pub fn parse(name: &str) -> crate::Result<Self> {
+        Ok(match name {
+            "rbergomi" => RiskScenario::RoughBergomi,
+            "gbm_portfolio" => RiskScenario::GbmPortfolio,
+            "kuramoto" => RiskScenario::Kuramoto,
+            other => {
+                return Err(crate::format_err!(
+                    "unknown risk scenario '{other}' (registered: {})",
+                    NAMES.join(", ")
+                ))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RiskScenario::RoughBergomi => "rbergomi",
+            RiskScenario::GbmPortfolio => "gbm_portfolio",
+            RiskScenario::Kuramoto => "kuramoto",
+        }
+    }
+
+    fn id(&self) -> f64 {
+        match self {
+            RiskScenario::RoughBergomi => 0.0,
+            RiskScenario::GbmPortfolio => 1.0,
+            RiskScenario::Kuramoto => 2.0,
+        }
+    }
+}
+
+/// Which integrator arm drives the sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RiskStepper {
+    /// The EES family (lane-blocked 2N-EES(2,5) for Euclidean scenarios,
+    /// CF-EES(2,5) for the manifold one) — the default.
+    Ees,
+    /// Diagonal-noise Milstein, the strong-order-1.0 accuracy baseline.
+    /// Valid only for scenarios with componentwise diffusion
+    /// (`gbm_portfolio`).
+    Milstein,
+}
+
+impl RiskStepper {
+    pub fn parse(name: &str) -> crate::Result<Self> {
+        Ok(match name {
+            "ees" => RiskStepper::Ees,
+            "milstein" => RiskStepper::Milstein,
+            other => {
+                return Err(crate::format_err!(
+                    "unknown risk stepper '{other}' (expected ees | milstein)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RiskStepper::Ees => "ees",
+            RiskStepper::Milstein => "milstein",
+        }
+    }
+
+    fn id(&self) -> f64 {
+        match self {
+            RiskStepper::Ees => 0.0,
+            RiskStepper::Milstein => 1.0,
+        }
+    }
+}
+
+/// The pure per-path noise stream: a fresh root generator seeded with
+/// `seed`, split at the global path `index`. Because the root is rebuilt
+/// for every call, the returned stream is a function of `(seed, index)`
+/// alone — the property every invariance guarantee (workers, lanes, chunk
+/// size, checkpoint/resume position) rests on.
+pub fn path_stream(seed: u64, index: u64) -> Pcg64 {
+    Pcg64::new(seed).split(index)
+}
+
+/// A parsed `[risk]` configuration.
+///
+/// `parallelism`, `lanes` and `chunk` are pure execution knobs: estimates
+/// are bitwise-identical at every value (they are therefore excluded from
+/// the checkpoint fingerprint). Everything else changes the sampled
+/// distribution and is fingerprinted.
+#[derive(Clone, Debug)]
+pub struct RiskConfig {
+    pub scenario: RiskScenario,
+    pub stepper: RiskStepper,
+    /// Total Monte Carlo paths in the sweep.
+    pub paths: usize,
+    /// Solver steps per path (the rough-Bergomi fine grid).
+    pub steps: usize,
+    /// Physical horizon T.
+    pub horizon: f64,
+    /// Scenario dimension: portfolio assets / Kuramoto oscillators
+    /// (ignored by `rbergomi`, which is scalar).
+    pub dim: usize,
+    pub seed: u64,
+    /// CVaR tail level in (0, 1).
+    pub alpha: f64,
+    /// Paths processed per fan-out — the resident-memory knob.
+    pub chunk: usize,
+    pub parallelism: usize,
+    pub lanes: usize,
+}
+
+impl RiskConfig {
+    /// Read the `[risk]` section (plus the shared `[exec]` knobs).
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let scenario = RiskScenario::parse(cfg.str_or("risk.scenario", "rbergomi"))?;
+        let stepper = RiskStepper::parse(cfg.str_or("risk.stepper", "ees"))?;
+        if stepper == RiskStepper::Milstein && scenario != RiskScenario::GbmPortfolio {
+            return Err(crate::format_err!(
+                "the milstein arm needs componentwise diffusion — only the \
+                 gbm_portfolio scenario qualifies (got '{}')",
+                scenario.name()
+            ));
+        }
+        let paths = cfg.usize_or("risk.paths", 10_000);
+        if paths == 0 {
+            return Err(crate::format_err!("[risk] paths must be >= 1"));
+        }
+        let steps = cfg.usize_or("risk.steps", 64).max(1);
+        let horizon = cfg.f64_or("risk.horizon", 1.0);
+        let horizon_ok = horizon.is_finite() && horizon > 0.0;
+        if !horizon_ok {
+            return Err(crate::format_err!("[risk] horizon must be > 0"));
+        }
+        let default_dim = match scenario {
+            RiskScenario::RoughBergomi => 1,
+            RiskScenario::GbmPortfolio => 8,
+            RiskScenario::Kuramoto => 100,
+        };
+        let dim = cfg.usize_or("risk.dim", default_dim).max(1);
+        let alpha = cfg.f64_or("risk.alpha", 0.95);
+        let alpha_ok = alpha > 0.0 && alpha < 1.0;
+        if !alpha_ok {
+            return Err(crate::format_err!("[risk] alpha must lie in (0, 1)"));
+        }
+        Ok(Self {
+            scenario,
+            stepper,
+            paths,
+            steps,
+            horizon,
+            dim,
+            seed: cfg.usize_or("risk.seed", 42) as u64,
+            alpha,
+            chunk: cfg.usize_or("risk.chunk", 4096).max(1),
+            parallelism: cfg.parallelism().max(1),
+            lanes: cfg.lanes(),
+        })
+    }
+
+    /// The distribution-defining knobs as `f64` words, stored at the head
+    /// of every checkpoint so a resume against a different configuration
+    /// fails loudly instead of silently mixing estimators. The seed is
+    /// stored via its bit pattern (`f64::from_bits`) — comparisons are
+    /// bitwise, so a NaN pattern is harmless.
+    fn fingerprint(&self) -> Vec<f64> {
+        vec![
+            self.scenario.id(),
+            self.stepper.id(),
+            self.paths as f64,
+            self.steps as f64,
+            self.horizon,
+            self.dim as f64,
+            f64::from_bits(self.seed),
+            self.alpha,
+        ]
+    }
+
+    /// `f64` words in [`Self::fingerprint`].
+    const FP_LEN: usize = 8;
+}
+
+/// The estimator bundle one sweep folds payoffs into: Welford moments,
+/// a P² quantile per [`QUANTILES`] level, tail CVaR of the **loss**
+/// (−payoff, so the tail is the bad outcomes), and running extremes.
+#[derive(Clone, Debug)]
+pub struct RiskEstimators {
+    pub payoff: Welford,
+    pub quantiles: Vec<P2Quantile>,
+    pub cvar_loss: Cvar,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl RiskEstimators {
+    pub fn new(alpha: f64) -> Self {
+        Self {
+            payoff: Welford::new(),
+            quantiles: QUANTILES.iter().map(|&p| P2Quantile::new(p)).collect(),
+            cvar_loss: Cvar::new(alpha),
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.payoff.push(x);
+        for q in &mut self.quantiles {
+            q.push(x);
+        }
+        self.cvar_loss.push(-x);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// `f64` words in [`Self::state`].
+    pub const STATE_LEN: usize =
+        Welford::STATE_LEN + QUANTILES.len() * P2Quantile::STATE_LEN + Cvar::STATE_LEN + 2;
+
+    /// Exact bundle state (checkpoint payload).
+    pub fn state(&self) -> Vec<f64> {
+        let mut s = Vec::with_capacity(Self::STATE_LEN);
+        s.extend_from_slice(&self.payoff.state());
+        for q in &self.quantiles {
+            s.extend(q.state());
+        }
+        s.extend(self.cvar_loss.state());
+        s.push(self.min);
+        s.push(self.max);
+        s
+    }
+
+    pub fn from_state(s: &[f64]) -> crate::Result<Self> {
+        if s.len() != Self::STATE_LEN {
+            return Err(crate::format_err!(
+                "RiskEstimators state needs {} words, got {}",
+                Self::STATE_LEN,
+                s.len()
+            ));
+        }
+        let mut at = 0;
+        let payoff = Welford::from_state(&s[at..at + Welford::STATE_LEN])?;
+        at += Welford::STATE_LEN;
+        let mut quantiles = Vec::with_capacity(QUANTILES.len());
+        for _ in 0..QUANTILES.len() {
+            quantiles.push(P2Quantile::from_state(&s[at..at + P2Quantile::STATE_LEN])?);
+            at += P2Quantile::STATE_LEN;
+        }
+        let cvar_loss = Cvar::from_state(&s[at..at + Cvar::STATE_LEN])?;
+        at += Cvar::STATE_LEN;
+        Ok(Self {
+            payoff,
+            quantiles,
+            cvar_loss,
+            min: s[at],
+            max: s[at + 1],
+        })
+    }
+}
+
+/// One streaming sweep: configuration + estimator bundle + progress.
+#[derive(Clone, Debug)]
+pub struct RiskSweep {
+    cfg: RiskConfig,
+    est: RiskEstimators,
+    /// Paths folded so far — the next path to run is exactly `done`.
+    done: usize,
+}
+
+impl RiskSweep {
+    pub fn new(cfg: RiskConfig) -> Self {
+        let est = RiskEstimators::new(cfg.alpha);
+        Self { cfg, est, done: 0 }
+    }
+
+    pub fn cfg(&self) -> &RiskConfig {
+        &self.cfg
+    }
+
+    pub fn estimators(&self) -> &RiskEstimators {
+        &self.est
+    }
+
+    pub fn done(&self) -> usize {
+        self.done
+    }
+
+    /// Serialize the sweep mid-stream: progress in `epoch`, the running
+    /// mean in `loss` (informational), configuration fingerprint +
+    /// estimator words in `params`. Uses the PR 4 [`Snapshot`] hex-text
+    /// form, so the round-trip is bitwise-exact.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut params = self.cfg.fingerprint();
+        params.extend(self.est.state());
+        Snapshot {
+            epoch: self.done,
+            loss: self.est.payoff.mean(),
+            params,
+        }
+    }
+
+    /// Rebuild a sweep from a checkpoint, validating that `cfg` describes
+    /// the same distribution (bitwise fingerprint match) — execution knobs
+    /// (workers/lanes/chunk) are free to differ.
+    pub fn resume(cfg: RiskConfig, snap: &Snapshot) -> crate::Result<Self> {
+        let fp = cfg.fingerprint();
+        if snap.params.len() != RiskConfig::FP_LEN + RiskEstimators::STATE_LEN {
+            return Err(crate::format_err!(
+                "risk checkpoint has {} words, expected {}",
+                snap.params.len(),
+                RiskConfig::FP_LEN + RiskEstimators::STATE_LEN
+            ));
+        }
+        for (i, (a, b)) in fp.iter().zip(snap.params.iter()).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(crate::format_err!(
+                    "risk checkpoint was taken under a different configuration \
+                     (fingerprint word {i}: {a:e} vs {b:e})"
+                ));
+            }
+        }
+        if snap.epoch > cfg.paths {
+            return Err(crate::format_err!(
+                "risk checkpoint has {} paths done, but the sweep only has {}",
+                snap.epoch,
+                cfg.paths
+            ));
+        }
+        let est = RiskEstimators::from_state(&snap.params[RiskConfig::FP_LEN..])?;
+        Ok(Self {
+            cfg,
+            est,
+            done: snap.epoch,
+        })
+    }
+
+    /// Advance by one chunk (clipped to `limit` and to the sweep's total),
+    /// folding the chunk's payoffs in global path-index order. Returns the
+    /// number of paths processed (0 when already at the limit).
+    fn step_chunk_to(&mut self, limit: usize) -> usize {
+        let limit = limit.min(self.cfg.paths);
+        if self.done >= limit {
+            return 0;
+        }
+        let n = self.cfg.chunk.min(limit - self.done);
+        let payoffs = chunk_payoffs(&self.cfg, self.done, n);
+        for x in payoffs {
+            self.est.push(x);
+        }
+        self.done += n;
+        n
+    }
+
+    /// Run until `limit` paths are done (clipped to the sweep total) — the
+    /// `--stop-after` entry point. Chunk boundaries never affect the
+    /// estimates, so stopping here and [`Self::resume`]-ing later lands on
+    /// exactly the uninterrupted run's state.
+    pub fn run_to(&mut self, limit: usize) {
+        while self.step_chunk_to(limit) > 0 {}
+    }
+
+    /// Run the whole sweep.
+    pub fn run(&mut self) {
+        self.run_to(self.cfg.paths);
+    }
+
+    pub fn report(&self) -> RiskReport {
+        RiskReport {
+            scenario: self.cfg.scenario.name(),
+            stepper: self.cfg.stepper.name(),
+            paths_done: self.done,
+            paths_total: self.cfg.paths,
+            alpha: self.cfg.alpha,
+            mean: self.est.payoff.mean(),
+            variance: self.est.payoff.variance(),
+            quantiles: QUANTILES
+                .iter()
+                .zip(self.est.quantiles.iter())
+                .map(|(&p, q)| (p, q.estimate()))
+                .collect(),
+            var_loss: self.est.cvar_loss.var(),
+            cvar_loss: self.est.cvar_loss.estimate(),
+            min: self.est.min,
+            max: self.est.max,
+        }
+    }
+}
+
+/// Compute payoffs for global path indices `start..start + n`, in index
+/// order. Pure in `(cfg-distribution, start, n)`: the same indices yield
+/// bitwise-identical payoffs at every worker/lane/chunk setting.
+fn chunk_payoffs(cfg: &RiskConfig, start: usize, n: usize) -> Vec<f64> {
+    let (seed, par) = (cfg.seed, cfg.parallelism);
+    match cfg.scenario {
+        RiskScenario::RoughBergomi => {
+            let (t_end, fine) = (cfg.horizon, cfg.steps);
+            parallel_map(par, n, |i| {
+                let mut rng = path_stream(seed, (start + i) as u64);
+                // n_obs = 1: [S_0, S_T] only — O(steps) transient per path.
+                let p = simulate_price_path(VolModel::RoughBergomi, t_end, fine, 1, &mut rng);
+                p[1].ln()
+            })
+        }
+        RiskScenario::GbmPortfolio => {
+            let model = GbmPortfolio::paper(cfg.dim);
+            let h = cfg.horizon / cfg.steps as f64;
+            match cfg.stepper {
+                RiskStepper::Ees => {
+                    // Raw (independent) increments: the field applies the
+                    // correlation inside its combined evaluation.
+                    let paths: Vec<BrownianPath> = parallel_map(par, n, |i| {
+                        let mut rng = path_stream(seed, (start + i) as u64);
+                        BrownianPath::sample(&mut rng, cfg.dim, cfg.steps, h)
+                    });
+                    let y0s: Vec<Vec<f64>> = (0..n).map(|_| vec![1.0; cfg.dim]).collect();
+                    let st = LowStorageStepper::ees25();
+                    let field = model.as_field();
+                    let terms =
+                        batch_terminal_lanes_par(&st, &field, 0.0, &y0s, &paths, par, cfg.lanes);
+                    terms.iter().map(|y| GbmPortfolio::value(y)).collect()
+                }
+                RiskStepper::Milstein => {
+                    // Same per-index noise stream as the EES arm (identical
+                    // BrownianPath::sample consumption), correlated at the
+                    // step via L·dw — the two arms estimate the same book.
+                    let mi = Milstein::new();
+                    let pool = WorkspacePool::new();
+                    let correlate = |src: &[f64], dst: &mut [f64]| model.correlate(src, dst);
+                    parallel_map(par, n, |i| {
+                        let mut rng = path_stream(seed, (start + i) as u64);
+                        let path = BrownianPath::sample(&mut rng, cfg.dim, cfg.steps, h);
+                        let mut y = vec![1.0; cfg.dim];
+                        let mut ws = pool.take();
+                        mi.terminal_ws(&model, 0.0, &mut y, &path, &correlate, &mut ws);
+                        pool.put(ws);
+                        GbmPortfolio::value(&y)
+                    })
+                }
+            }
+        }
+        RiskScenario::Kuramoto => {
+            let params = KuramotoParams::paper(cfg.dim);
+            let sp = TTorus::new(cfg.dim);
+            let vf = params.as_field();
+            let st = CfEes::ees25();
+            let h = cfg.horizon / cfg.steps as f64;
+            let scale = h.sqrt();
+            let pool = WorkspacePool::new();
+            parallel_map(par, n, |i| {
+                let mut rng = path_stream(seed, (start + i) as u64);
+                let dim = cfg.dim;
+                let mut y = vec![0.0; 2 * dim];
+                for v in y.iter_mut().take(dim) {
+                    *v = rng.uniform_range(-std::f64::consts::PI, std::f64::consts::PI);
+                }
+                for v in y.iter_mut().skip(dim) {
+                    *v = 0.5 * rng.normal();
+                }
+                // Streaming integration: per-step increments drawn on the
+                // fly, no trajectory and no stored driver — O(N) state per
+                // worker however many steps the horizon takes.
+                let mut dw = vec![0.0; dim];
+                let mut ws = pool.take();
+                for s in 0..cfg.steps {
+                    rng.fill_normal_scaled(scale, &mut dw);
+                    st.step_ws(&sp, &vf, s as f64 * h, h, &dw, &mut y, &mut ws);
+                }
+                pool.put(ws);
+                KuramotoParams::order_parameter(&y[..dim])
+            })
+        }
+    }
+}
+
+/// A finished (or partial) sweep's estimates, renderable as a table or as
+/// deterministic JSON.
+#[derive(Clone, Debug)]
+pub struct RiskReport {
+    pub scenario: &'static str,
+    pub stepper: &'static str,
+    pub paths_done: usize,
+    pub paths_total: usize,
+    pub alpha: f64,
+    pub mean: f64,
+    pub variance: f64,
+    /// `(level, estimate)` per [`QUANTILES`] entry.
+    pub quantiles: Vec<(f64, f64)>,
+    /// VaR_α of the loss (−payoff).
+    pub var_loss: f64,
+    /// CVaR_α of the loss.
+    pub cvar_loss: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Deterministic JSON float: `{:e}` prints the shortest round-trip form of
+/// the exact bit pattern; non-finite values map to `null` so the output
+/// stays valid JSON.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:e}")
+    } else {
+        "null".into()
+    }
+}
+
+impl RiskReport {
+    /// Every headline estimate is finite (the `--assert-finite` gate).
+    /// Variance needs two paths; everything else one.
+    pub fn is_finite(&self) -> bool {
+        self.mean.is_finite()
+            && self.variance.is_finite()
+            && self.quantiles.iter().all(|(_, v)| v.is_finite())
+            && self.var_loss.is_finite()
+            && self.cvar_loss.is_finite()
+            && self.min.is_finite()
+            && self.max.is_finite()
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["estimate", "value"]);
+        let f = |x: f64| format!("{x:.6e}");
+        t.row(&["mean payoff".into(), f(self.mean)]);
+        t.row(&["variance".into(), f(self.variance)]);
+        for (p, v) in &self.quantiles {
+            t.row(&[format!("q{:02.0}", p * 100.0), f(*v)]);
+        }
+        t.row(&[format!("VaR[{}] (loss)", self.alpha), f(self.var_loss)]);
+        t.row(&[format!("CVaR[{}] (loss)", self.alpha), f(self.cvar_loss)]);
+        t.row(&["min".into(), f(self.min)]);
+        t.row(&["max".into(), f(self.max)]);
+        format!(
+            "== ees risk: scenario '{}' ({} stepper, {}/{} paths) ==\n{}",
+            self.scenario,
+            self.stepper,
+            self.paths_done,
+            self.paths_total,
+            t.render()
+        )
+    }
+
+    /// Deterministic JSON (stable key order, bit-faithful `{:e}` floats, no
+    /// wall-clock or environment fields) — two runs that are bitwise-equal
+    /// produce byte-identical files, which is what the CI resume gate
+    /// `diff`s.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"scenario\": \"{}\",\n", self.scenario));
+        s.push_str(&format!("  \"stepper\": \"{}\",\n", self.stepper));
+        s.push_str(&format!("  \"paths_done\": {},\n", self.paths_done));
+        s.push_str(&format!("  \"paths_total\": {},\n", self.paths_total));
+        s.push_str(&format!("  \"alpha\": {},\n", jnum(self.alpha)));
+        s.push_str(&format!("  \"mean\": {},\n", jnum(self.mean)));
+        s.push_str(&format!("  \"variance\": {},\n", jnum(self.variance)));
+        for ((_, v), key) in self.quantiles.iter().zip(["q05", "q50", "q95"]) {
+            s.push_str(&format!("  \"{key}\": {},\n", jnum(*v)));
+        }
+        s.push_str(&format!("  \"var_loss\": {},\n", jnum(self.var_loss)));
+        s.push_str(&format!("  \"cvar_loss\": {},\n", jnum(self.cvar_loss)));
+        s.push_str(&format!("  \"min\": {},\n", jnum(self.min)));
+        s.push_str(&format!("  \"max\": {}\n", jnum(self.max)));
+        s.push('}');
+        s.push('\n');
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_text(extra: &str) -> RiskConfig {
+        let text = format!("[risk]\npaths = 64\nsteps = 8\nchunk = 16\nseed = 7\n{extra}\n[exec]\nparallelism = 2\n");
+        RiskConfig::from_config(&Config::parse(&text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn config_defaults_and_overrides() {
+        let c = cfg_text("");
+        assert_eq!(c.scenario, RiskScenario::RoughBergomi);
+        assert_eq!(c.stepper, RiskStepper::Ees);
+        assert_eq!((c.paths, c.steps, c.chunk, c.seed), (64, 8, 16, 7));
+        assert_eq!(c.parallelism, 2);
+        let c = cfg_text("scenario = \"gbm_portfolio\"\nstepper = \"milstein\"\ndim = 4");
+        assert_eq!(c.scenario, RiskScenario::GbmPortfolio);
+        assert_eq!(c.stepper, RiskStepper::Milstein);
+        assert_eq!(c.dim, 4);
+    }
+
+    #[test]
+    fn milstein_needs_componentwise_diffusion() {
+        let text = "[risk]\nscenario = \"kuramoto\"\nstepper = \"milstein\"\n";
+        let err = RiskConfig::from_config(&Config::parse(text).unwrap()).unwrap_err();
+        assert!(format!("{err}").contains("componentwise"));
+    }
+
+    #[test]
+    fn bad_knobs_are_rejected() {
+        for bad in [
+            "[risk]\nscenario = \"heat-death\"\n",
+            "[risk]\npaths = 0\n",
+            "[risk]\nalpha = 1.5\n",
+            "[risk]\nhorizon = -1.0\n",
+        ] {
+            assert!(RiskConfig::from_config(&Config::parse(bad).unwrap()).is_err());
+        }
+    }
+
+    #[test]
+    fn chunk_size_is_bitwise_invisible() {
+        let a = {
+            let mut s = RiskSweep::new(cfg_text(""));
+            s.run();
+            s
+        };
+        let b = {
+            let mut s = RiskSweep::new(cfg_text("chunk = 5"));
+            s.run();
+            s
+        };
+        assert_eq!(a.done(), 64);
+        let bits = |s: &RiskSweep| {
+            s.estimators()
+                .state()
+                .into_iter()
+                .map(f64::to_bits)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(bits(&a), bits(&b));
+        assert!(a.report().is_finite());
+    }
+
+    #[test]
+    fn resume_rejects_foreign_checkpoints() {
+        let mut s = RiskSweep::new(cfg_text(""));
+        s.run_to(16);
+        let snap = s.snapshot();
+        assert_eq!(snap.epoch, 16);
+        // Different seed → different distribution → refused.
+        let other = cfg_text("seed = 8");
+        let err = RiskSweep::resume(other, &snap).unwrap_err();
+        assert!(format!("{err}").contains("different configuration"));
+        // Same distribution at different exec knobs → accepted.
+        let same = cfg_text("chunk = 3");
+        assert!(RiskSweep::resume(same, &snap).is_ok());
+    }
+}

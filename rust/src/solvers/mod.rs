@@ -27,6 +27,7 @@ pub mod cg;
 pub mod cost;
 pub mod lowstorage;
 pub mod mcf;
+pub mod milstein;
 pub mod reversible_heun;
 pub mod rk;
 pub mod rkmk;
@@ -39,6 +40,7 @@ pub use cfees::CfEes;
 pub use cg::{CrouchGrossman, GeoEulerMaruyama};
 pub use lowstorage::LowStorageStepper;
 pub use mcf::{BaseMethod, Mcf};
+pub use milstein::{DiagonalSde, Milstein};
 pub use reversible_heun::ReversibleHeun;
 pub use rk::RkStepper;
 pub use rkmk::Rkmk;

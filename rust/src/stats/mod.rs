@@ -1,0 +1,464 @@
+//! Streaming (single-pass, O(1)-memory) statistical estimators for the
+//! million-path risk engine: Welford online mean/variance, P² (Jain &
+//! Chlamtac 1985) quantiles, and CVaR via the Rockafellar–Uryasev identity
+//! over a running P² VaR estimate.
+//!
+//! # Contracts
+//!
+//! - **Memory**: every estimator holds a fixed handful of `f64` words —
+//!   state never grows with the number of observations, which is what lets
+//!   the risk engine sweep 10⁶⁺ paths at O(lanes × workers) resident
+//!   memory (see `rust/src/risk/`).
+//! - **Determinism**: an estimator is a pure fold over its input sequence;
+//!   feeding the same values in the same order yields bitwise-identical
+//!   state regardless of how the *producers* of those values were
+//!   scheduled. The risk engine therefore updates estimators on the
+//!   calling thread in global path-index order.
+//! - **Checkpointability**: [`state`](Welford::state) /
+//!   [`from_state`](Welford::from_state) round-trip the exact `f64` words
+//!   (counts are exact up to 2⁵³), so a sweep resumed from a PR 4
+//!   [`Snapshot`](crate::train::Snapshot) continues bitwise-identically to
+//!   an uninterrupted run.
+
+/// Welford's online mean/variance accumulator.
+///
+/// Numerically stable single-pass algorithm: the incremental update keeps
+/// the centered second moment `m2 = Σ (x_i − mean)²` directly, avoiding
+/// the catastrophic cancellation of the naive `Σx² − (Σx)²/n` form.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        let d2 = x - self.mean;
+        self.m2 += d * d2;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean (NaN before the first observation).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Unbiased sample variance (NaN before the second observation).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    /// Exact estimator state as `f64` words (count is exact up to 2⁵³).
+    pub fn state(&self) -> [f64; 3] {
+        [self.n as f64, self.mean, self.m2]
+    }
+
+    pub fn from_state(s: &[f64]) -> crate::Result<Self> {
+        if s.len() != 3 {
+            return Err(crate::format_err!(
+                "Welford state needs 3 words, got {}",
+                s.len()
+            ));
+        }
+        Ok(Self {
+            n: s[0] as u64,
+            mean: s[1],
+            m2: s[2],
+        })
+    }
+
+    /// Number of `f64` words in [`Self::state`].
+    pub const STATE_LEN: usize = 3;
+}
+
+/// P² (piecewise-parabolic) streaming quantile estimator (Jain & Chlamtac,
+/// CACM 1985): five markers tracking the minimum, the p/2, p and (1+p)/2
+/// quantiles and the maximum, adjusted toward their desired positions by
+/// parabolic (fallback: linear) interpolation after every observation.
+///
+/// Exact for the first five observations; thereafter an O(1)-memory
+/// approximation whose error vanishes as the sample grows (pinned against
+/// a full-sort oracle at N = 10³ in `rust/tests/risk.rs`).
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    p: f64,
+    n: u64,
+    /// First five observations, kept verbatim until marker init.
+    init: [f64; 5],
+    /// Marker heights.
+    q: [f64; 5],
+    /// Marker positions (1-based ranks; held at exact integers).
+    pos: [f64; 5],
+    /// Desired marker positions.
+    des: [f64; 5],
+}
+
+impl P2Quantile {
+    /// Estimator for the `p`-quantile, `0 < p < 1`.
+    pub fn new(p: f64) -> Self {
+        Self {
+            p,
+            n: 0,
+            init: [0.0; 5],
+            q: [0.0; 5],
+            pos: [0.0; 5],
+            des: [0.0; 5],
+        }
+    }
+
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.n < 5 {
+            self.init[self.n as usize] = x;
+            self.n += 1;
+            if self.n == 5 {
+                let mut s = self.init;
+                s.sort_by(f64::total_cmp);
+                self.q = s;
+                self.pos = [1.0, 2.0, 3.0, 4.0, 5.0];
+                let p = self.p;
+                self.des = [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0];
+            }
+            return;
+        }
+        self.n += 1;
+        // Locate the cell k with q[k] <= x < q[k+1], extending the extremes.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut i = 0;
+            while x >= self.q[i + 1] {
+                i += 1;
+            }
+            i
+        };
+        for i in (k + 1)..5 {
+            self.pos[i] += 1.0;
+        }
+        let p = self.p;
+        let dn = [0.0, 0.5 * p, p, 0.5 * (1.0 + p), 1.0];
+        for (d, inc) in self.des.iter_mut().zip(dn.iter()) {
+            *d += inc;
+        }
+        for i in 1..4 {
+            let d = self.des[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let d = d.signum();
+                let qp = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, d)
+                };
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (q, n) = (&self.q, &self.pos);
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current quantile estimate. Exact (sorted linear interpolation) while
+    /// fewer than five observations have arrived; NaN before the first.
+    pub fn estimate(&self) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        if self.n < 5 {
+            let m = self.n as usize;
+            let mut s = [0.0; 5];
+            s[..m].copy_from_slice(&self.init[..m]);
+            s[..m].sort_by(f64::total_cmp);
+            let rank = self.p * (m - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let w = rank - lo as f64;
+            return s[lo] + w * (s[hi] - s[lo]);
+        }
+        self.q[2]
+    }
+
+    /// Number of `f64` words in [`Self::state`].
+    pub const STATE_LEN: usize = 22;
+
+    /// Exact estimator state as `f64` words.
+    pub fn state(&self) -> Vec<f64> {
+        let mut s = Vec::with_capacity(Self::STATE_LEN);
+        s.push(self.p);
+        s.push(self.n as f64);
+        s.extend_from_slice(&self.init);
+        s.extend_from_slice(&self.q);
+        s.extend_from_slice(&self.pos);
+        s.extend_from_slice(&self.des);
+        s
+    }
+
+    pub fn from_state(s: &[f64]) -> crate::Result<Self> {
+        if s.len() != Self::STATE_LEN {
+            return Err(crate::format_err!(
+                "P2Quantile state needs {} words, got {}",
+                Self::STATE_LEN,
+                s.len()
+            ));
+        }
+        let grab = |o: usize| {
+            let mut a = [0.0; 5];
+            a.copy_from_slice(&s[o..o + 5]);
+            a
+        };
+        Ok(Self {
+            p: s[0],
+            n: s[1] as u64,
+            init: grab(2),
+            q: grab(7),
+            pos: grab(12),
+            des: grab(17),
+        })
+    }
+}
+
+/// Streaming upper-tail CVaR estimator: `CVaR_α = E[X | X ≥ VaR_α]`,
+/// computed through the Rockafellar–Uryasev identity
+/// `CVaR_α = VaR_α + E[(X − VaR_α)⁺]/(1 − α)` with the running P² estimate
+/// of `VaR_α` standing in for the true quantile. The running-VaR
+/// substitution keeps memory O(1); its early-sample bias washes out as the
+/// stream grows (oracle-pinned at N = 10³ in `rust/tests/risk.rs`).
+#[derive(Clone, Debug)]
+pub struct Cvar {
+    alpha: f64,
+    var: P2Quantile,
+    excess: Welford,
+}
+
+impl Cvar {
+    /// Tail level `alpha` in (0, 1), e.g. 0.95 for the worst 5%.
+    pub fn new(alpha: f64) -> Self {
+        Self {
+            alpha,
+            var: P2Quantile::new(alpha),
+            excess: Welford::new(),
+        }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn count(&self) -> u64 {
+        self.excess.count()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        // Update the VaR marker first so the excess is measured against the
+        // freshest running estimate (any fixed order is deterministic; this
+        // one minimises the early-sample bias).
+        self.var.push(x);
+        let v = self.var.estimate();
+        self.excess.push((x - v).max(0.0));
+    }
+
+    /// Running VaR_α (the P² quantile estimate).
+    pub fn var(&self) -> f64 {
+        self.var.estimate()
+    }
+
+    /// Running CVaR_α estimate (NaN before the first observation).
+    pub fn estimate(&self) -> f64 {
+        self.var.estimate() + self.excess.mean() / (1.0 - self.alpha)
+    }
+
+    /// Number of `f64` words in [`Self::state`].
+    pub const STATE_LEN: usize = 1 + P2Quantile::STATE_LEN + Welford::STATE_LEN;
+
+    pub fn state(&self) -> Vec<f64> {
+        let mut s = Vec::with_capacity(Self::STATE_LEN);
+        s.push(self.alpha);
+        s.extend(self.var.state());
+        s.extend_from_slice(&self.excess.state());
+        s
+    }
+
+    pub fn from_state(s: &[f64]) -> crate::Result<Self> {
+        if s.len() != Self::STATE_LEN {
+            return Err(crate::format_err!(
+                "Cvar state needs {} words, got {}",
+                Self::STATE_LEN,
+                s.len()
+            ));
+        }
+        Ok(Self {
+            alpha: s[0],
+            var: P2Quantile::from_state(&s[1..1 + P2Quantile::STATE_LEN])?,
+            excess: Welford::from_state(&s[1 + P2Quantile::STATE_LEN..])?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn exact_quantile(sorted: &[f64], p: f64) -> f64 {
+        let rank = p * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let w = rank - lo as f64;
+        sorted[lo] + w * (sorted[hi] - sorted[lo])
+    }
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let mut rng = Pcg64::new(11);
+        let xs: Vec<f64> = (0..2000).map(|_| 3.0 + 2.0 * rng.normal()).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12, "{} vs {mean}", w.mean());
+        assert!(
+            (w.variance() - var).abs() < 1e-10,
+            "{} vs {var}",
+            w.variance()
+        );
+        assert_eq!(w.count(), 2000);
+    }
+
+    #[test]
+    fn p2_tracks_sorted_quantiles() {
+        let mut rng = Pcg64::new(21);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.uniform()).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        for p in [0.1, 0.5, 0.9, 0.95] {
+            let mut est = P2Quantile::new(p);
+            for &x in &xs {
+                est.push(x);
+            }
+            let exact = exact_quantile(&sorted, p);
+            assert!(
+                (est.estimate() - exact).abs() < 0.05,
+                "p={p}: {} vs exact {exact}",
+                est.estimate()
+            );
+        }
+    }
+
+    #[test]
+    fn p2_exact_below_five_observations() {
+        let mut est = P2Quantile::new(0.5);
+        assert!(est.estimate().is_nan());
+        est.push(3.0);
+        assert_eq!(est.estimate(), 3.0);
+        est.push(1.0);
+        est.push(2.0);
+        // Median of {1, 2, 3} by sorted interpolation.
+        assert_eq!(est.estimate(), 2.0);
+    }
+
+    #[test]
+    fn cvar_tracks_tail_mean() {
+        let mut rng = Pcg64::new(31);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+        let alpha = 0.95;
+        let mut est = Cvar::new(alpha);
+        for &x in &xs {
+            est.push(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        let var = exact_quantile(&sorted, alpha);
+        let tail: Vec<f64> = sorted.iter().copied().filter(|&x| x >= var).collect();
+        let exact = tail.iter().sum::<f64>() / tail.len() as f64;
+        assert!(
+            (est.estimate() - exact).abs() < 0.25,
+            "cvar {} vs oracle {exact}",
+            est.estimate()
+        );
+    }
+
+    /// The checkpoint contract: serialize mid-stream, restore, continue —
+    /// final state must be bitwise-identical to the uninterrupted run.
+    #[test]
+    fn state_roundtrip_resumes_bitwise() {
+        let mut rng = Pcg64::new(41);
+        let xs: Vec<f64> = (0..400).map(|_| rng.normal()).collect();
+        let mut w1 = Welford::new();
+        let mut q1 = P2Quantile::new(0.9);
+        let mut c1 = Cvar::new(0.95);
+        for &x in &xs {
+            w1.push(x);
+            q1.push(x);
+            c1.push(x);
+        }
+        let (mut w2, mut q2, mut c2) = (Welford::new(), P2Quantile::new(0.9), Cvar::new(0.95));
+        for &x in &xs[..137] {
+            w2.push(x);
+            q2.push(x);
+            c2.push(x);
+        }
+        let mut w2 = Welford::from_state(&w2.state()).unwrap();
+        let mut q2 = P2Quantile::from_state(&q2.state()).unwrap();
+        let mut c2 = Cvar::from_state(&c2.state()).unwrap();
+        for &x in &xs[137..] {
+            w2.push(x);
+            q2.push(x);
+            c2.push(x);
+        }
+        assert_eq!(w1.state().map(f64::to_bits), w2.state().map(f64::to_bits));
+        let bits = |v: Vec<f64>| v.into_iter().map(f64::to_bits).collect::<Vec<_>>();
+        assert_eq!(bits(q1.state()), bits(q2.state()));
+        assert_eq!(bits(c1.state()), bits(c2.state()));
+    }
+
+    #[test]
+    fn bad_state_lengths_error() {
+        assert!(Welford::from_state(&[1.0]).is_err());
+        assert!(P2Quantile::from_state(&[0.5; 3]).is_err());
+        assert!(Cvar::from_state(&[0.9; 4]).is_err());
+    }
+}

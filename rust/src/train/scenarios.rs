@@ -100,6 +100,54 @@ fn quarter_obs(steps: usize) -> Vec<usize> {
     (1..=4).map(|k| (k * steps / 4).max(1)).collect()
 }
 
+/// One shared physical-time observation grid for a scenario: the model is
+/// observed at solver-grid indices `model` (step size `t_end / steps`) and
+/// the data generator at fine-grid indices `fine` (step size
+/// `t_end / fine_steps`), with `model[k] / steps == fine[k] / fine_steps`
+/// exactly as rationals. Both sides therefore compute the *same f64*
+/// observation time `(idx as f64 / n as f64) * t_end`, to the last ulp.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObsGrid {
+    /// Solver-grid observation indices (quarter horizons, floored).
+    pub model: Vec<usize>,
+    /// Data fine-grid observation indices aligned with `model`.
+    pub fine: Vec<usize>,
+    /// The data generator's fine step count (its step is `t_end / fine_steps`).
+    pub fine_steps: usize,
+}
+
+/// Derive the shared observation grid from the solver step count and the
+/// *requested* data fine-grid resolution.
+///
+/// Historically the model observed at `floor(k·steps/4)/steps · T` while the
+/// data was sampled at `k·T/4`, which disagree whenever `steps % 4 != 0` —
+/// the loss then compared distributions at different physical times. Here
+/// the model grid is authoritative: if every model time lands exactly on
+/// the requested fine grid (`m·data_fine % steps == 0` for all m), that
+/// grid is kept verbatim — bitwise-identical data to the old code for every
+/// aligned configuration, `steps % 4 == 0` included. Otherwise the fine
+/// resolution is snapped up to the nearest multiple of `steps` so that
+/// every model time is representable.
+pub fn obs_grid(steps: usize, data_fine: usize) -> ObsGrid {
+    let model = quarter_obs(steps);
+    if data_fine >= steps && model.iter().all(|&m| m * data_fine % steps == 0) {
+        let fine = model.iter().map(|&m| m * data_fine / steps).collect();
+        return ObsGrid {
+            model,
+            fine,
+            fine_steps: data_fine,
+        };
+    }
+    // usize::div_ceil needs Rust 1.73; spelled out for the 1.70 MSRV.
+    let per = (data_fine + steps - 1) / steps;
+    let fine = model.iter().map(|&m| m * per).collect();
+    ObsGrid {
+        model,
+        fine,
+        fine_steps: per * steps,
+    }
+}
+
 /// High-volatility OU moment matching (the Table-1 workload) with the
 /// low-storage EES(2,5) solver.
 fn run_ou(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
@@ -147,7 +195,8 @@ fn run_gbm(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
     let data_samples = cfg.usize_or("train.data_samples", 128);
     let fine = cfg.usize_or("train.data_fine", 512);
     let adjoint = parse_adjoint(cfg.str_or("train.adjoint", "reversible"))?;
-    let obs = quarter_obs(steps);
+    let grid = obs_grid(steps, fine);
+    let obs = grid.model.clone();
     let n_obs = obs.len();
 
     let mut root = Pcg64::new(tc.seed);
@@ -159,11 +208,15 @@ fn run_gbm(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
     let y0 = vec![1.0; d];
     let mut data = vec![0.0; data_samples * n_obs * d];
     for b in 0..data_samples {
-        let path = BrownianPath::sample(&mut data_rng, 1, fine, 1.0 / fine as f64);
+        let path = BrownianPath::sample(
+            &mut data_rng,
+            1,
+            grid.fine_steps,
+            1.0 / grid.fine_steps as f64,
+        );
         let traj = gbm.simulate(&y0, &path);
-        for k in 1..=n_obs {
-            let idx = k * fine / n_obs;
-            data[(b * n_obs + k - 1) * d..(b * n_obs + k) * d]
+        for (k, &idx) in grid.fine.iter().enumerate() {
+            data[(b * n_obs + k) * d..(b * n_obs + k + 1) * d]
                 .copy_from_slice(&traj[idx * d..(idx + 1) * d]);
         }
     }
@@ -192,8 +245,8 @@ fn run_kuramoto(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
     let data_samples = cfg.usize_or("train.data_samples", 16);
     let fine = cfg.usize_or("train.data_fine", 256);
     let adjoint = parse_adjoint(cfg.str_or("train.adjoint", "reversible"))?;
-    let obs = quarter_obs(steps);
-    let n_obs = obs.len();
+    let grid = obs_grid(steps, fine);
+    let obs = grid.model.clone();
     let dim = 2 * n_osc;
 
     let mut root = Pcg64::new(tc.seed);
@@ -202,7 +255,8 @@ fn run_kuramoto(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
     let mut train_rng = root.split(2);
 
     let params = KuramotoParams::paper(n_osc);
-    let data = params.sample_dataset(data_samples, t_end, fine, n_obs, &mut data_rng);
+    let data =
+        params.sample_dataset_at(data_samples, t_end, grid.fine_steps, &grid.fine, &mut data_rng);
     let loss = EnergyScore {
         data,
         data_count: data_samples,
@@ -324,6 +378,57 @@ parallelism = 2
         let b = run_scenario(&Config::parse(&text(4)).unwrap()).unwrap();
         for (x, y) in a.log.history.iter().zip(b.log.history.iter()) {
             assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn obs_grid_keeps_aligned_configurations_verbatim() {
+        // The GBM scenario defaults: every quarter time lands on the
+        // requested 512-point grid, so the historical indices survive.
+        let g = obs_grid(20, 512);
+        assert_eq!(g.model, vec![5, 10, 15, 20]);
+        assert_eq!(g.fine, vec![128, 256, 384, 512]);
+        assert_eq!(g.fine_steps, 512);
+        // steps % 4 == 0 with a divisible fine grid: also untouched.
+        let g = obs_grid(4, 64);
+        assert_eq!(g.fine, vec![16, 32, 48, 64]);
+        assert_eq!(g.fine_steps, 64);
+        // Awkward-but-aligned knobs (the regression pair from the grid
+        // misalignment bug report).
+        let g = obs_grid(10, 250);
+        assert_eq!(g.model, vec![2, 5, 7, 10]);
+        assert_eq!(g.fine, vec![50, 125, 175, 250]);
+        assert_eq!(g.fine_steps, 250);
+    }
+
+    #[test]
+    fn obs_grid_snaps_misaligned_fine_resolution() {
+        // The Kuramoto scenario defaults: 2/10 of 256 is not an integer,
+        // so the fine grid snaps up to the nearest multiple of steps.
+        let g = obs_grid(10, 256);
+        assert_eq!(g.model, vec![2, 5, 7, 10]);
+        assert_eq!(g.fine_steps, 260);
+        assert_eq!(g.fine, vec![52, 130, 182, 260]);
+        // A fine grid coarser than the solver grid snaps too.
+        let g = obs_grid(8, 5);
+        assert_eq!(g.fine_steps, 8);
+        assert_eq!(g.fine, g.model);
+    }
+
+    #[test]
+    fn obs_grid_times_agree_to_the_last_ulp() {
+        for (steps, fine) in [(10, 250), (10, 256), (20, 512), (6, 100), (7, 333)] {
+            let g = obs_grid(steps, fine);
+            for (&m, &f) in g.model.iter().zip(g.fine.iter()) {
+                // Exact rational identity m/steps == f/fine_steps…
+                assert_eq!(m * g.fine_steps, f * steps, "steps={steps} fine={fine}");
+                // …so the f64 observation times are bitwise equal.
+                for t_end in [1.0f64, 2.0, 0.7] {
+                    let tm = m as f64 / steps as f64 * t_end;
+                    let tf = f as f64 / g.fine_steps as f64 * t_end;
+                    assert_eq!(tm.to_bits(), tf.to_bits());
+                }
+            }
         }
     }
 

@@ -361,6 +361,41 @@ fn all_nine_solvers_zero_allocs_per_step_after_warmup() {
 
     // A warm training-engine loop allocates a per-epoch-constant amount.
     trainer_epoch_allocs_constant();
+
+    // A warm streaming risk sweep's marginal allocations are constant in
+    // the number of paths already folded — the O(chunk) memory contract.
+    risk_sweep_allocs_constant_per_chunk();
+}
+
+/// The streaming risk engine's memory contract: the estimator bundle is
+/// fixed-size and each chunk's transient allocations depend only on the
+/// chunk, never on how many paths came before. Folding paths 256..384 must
+/// allocate exactly as much as folding 384..512 — any growth (an estimator
+/// that buffers samples, a sweep that accumulates per-path state) fails
+/// here long before a million-path run could discover it by OOM.
+fn risk_sweep_allocs_constant_per_chunk() {
+    use ees::config::Config;
+    use ees::risk::{RiskConfig, RiskSweep};
+    // parallelism = 1 keeps the fan-out inline, so the counter sees a
+    // deterministic allocation stream.
+    let cfg = RiskConfig::from_config(
+        &Config::parse(
+            "[risk]\npaths = 512\nsteps = 8\nchunk = 64\nseed = 19\n\
+             [exec]\nparallelism = 1\n",
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let mut sweep = RiskSweep::new(cfg);
+    sweep.run_to(256); // warm-up: estimator init + first chunks
+    let first = measure(|| sweep.run_to(384));
+    let second = measure(|| sweep.run_to(512));
+    assert_eq!(sweep.done(), 512);
+    assert_eq!(
+        second, first,
+        "risk sweep marginal allocations grew with cumulative paths: \
+         {first} for paths 256..384 vs {second} for 384..512"
+    );
 }
 
 /// The training engine's hot-path contract: with a problem that owns its

@@ -629,3 +629,57 @@ fn split_streams_are_schedule_independent() {
         }
     }
 }
+
+/// The risk engine's terminal extractor (`batch_terminal_lanes_par`) must
+/// be the last trajectory row of `batch_integrate_lanes_par`, bitwise, at
+/// every (worker, lane) combination — including ragged tail groups and the
+/// heterogeneous-grid scalar fallback. The streaming risk sweeps lean on
+/// this: their estimates are pinned to the batch engine's numbers without
+/// ever materialising a trajectory.
+#[test]
+fn batch_terminal_matches_last_trajectory_row_bitwise() {
+    use ees::coordinator::{batch_integrate_lanes_par, batch_terminal_lanes_par};
+
+    let (dim, steps, h) = (3usize, 14usize, 0.05);
+    let batch = 11; // ragged at lanes = 4, 8, 16
+    let mut rng = Pcg64::new(2718);
+    let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.2; dim]).collect();
+    let paths = sample_paths_par(&mut rng, batch, dim, steps, h, 1);
+    let model = NeuralSde::lsde(dim, 10, 2, false, &mut Pcg64::new(7));
+    let st = LowStorageStepper::ees25();
+
+    let ref_traj = batch_integrate_lanes_par(&st, &model, 0.0, &y0s, &paths, 1, 1);
+    let last_rows: Vec<&[f64]> = ref_traj
+        .iter()
+        .map(|t| &t[steps * dim..(steps + 1) * dim])
+        .collect();
+    for (par, lanes) in [(1, 1), (2, 4), (1, 8), (3, 16)] {
+        let terms = batch_terminal_lanes_par(&st, &model, 0.0, &y0s, &paths, par, lanes);
+        assert_eq!(terms.len(), batch);
+        for (b, term) in terms.iter().enumerate() {
+            assert_bits_eq(
+                term,
+                last_rows[b],
+                &format!("terminal {b} at P={par} L={lanes}"),
+            );
+        }
+    }
+
+    // Heterogeneous grids: the lane request must fall back to per-sample
+    // scalar stepping, still landing on the integrate() terminal bitwise.
+    let mut r = Pcg64::new(99);
+    let hetero: Vec<BrownianPath> = (0..5)
+        .map(|b| BrownianPath::sample(&mut r, dim, 10 + 4 * b, 0.03))
+        .collect();
+    let y0h: Vec<Vec<f64>> = (0..5).map(|_| vec![0.1; dim]).collect();
+    let terms = batch_terminal_lanes_par(&st, &model, 0.0, &y0h, &hetero, 2, 8);
+    for (b, term) in terms.iter().enumerate() {
+        let want = ees::solvers::integrate(&st, &model, 0.0, &y0h[b], &hetero[b]);
+        let n = hetero[b].steps();
+        assert_bits_eq(
+            term,
+            &want[n * dim..(n + 1) * dim],
+            &format!("hetero terminal {b}"),
+        );
+    }
+}

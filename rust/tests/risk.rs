@@ -1,0 +1,185 @@
+//! Conformance suite for the streaming risk engine (`ees::risk`) and its
+//! estimator substrate (`ees::stats`):
+//!
+//! - P² quantile and CVaR oracle checks against exact sorted statistics at
+//!   N = 10³ (the streaming estimators' accuracy contract);
+//! - bitwise invariance of a sweep's estimator state under worker count,
+//!   lane width, and checkpoint/resume position (through the text form);
+//! - Milstein-vs-EES agreement on the GBM portfolio book, where both arms
+//!   consume the *same* per-path noise;
+//! - a finite-estimates smoke across every registered scenario.
+
+use ees::config::Config;
+use ees::risk::{RiskConfig, RiskSweep};
+use ees::rng::Pcg64;
+use ees::stats::{Cvar, P2Quantile};
+use ees::train::Snapshot;
+
+fn risk_cfg(body: &str) -> RiskConfig {
+    RiskConfig::from_config(&Config::parse(body).unwrap()).unwrap()
+}
+
+fn state_bits(s: &RiskSweep) -> Vec<u64> {
+    s.estimators().state().into_iter().map(f64::to_bits).collect()
+}
+
+/// Exact sample quantile with the same linear-interpolation convention P²
+/// targets (marker positions 1 + p(n-1) on the sorted sample).
+fn exact_quantile(sorted: &[f64], p: f64) -> f64 {
+    let pos = p * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let w = pos - lo as f64;
+    sorted[lo] * (1.0 - w) + sorted[hi] * w
+}
+
+#[test]
+fn p2_quantiles_track_exact_sorted_quantiles_at_n_1000() {
+    let mut rng = Pcg64::new(99);
+    let xs: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+    let mut sorted = xs.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for p in [0.05, 0.5, 0.95] {
+        let mut q = P2Quantile::new(p);
+        for &x in &xs {
+            q.push(x);
+        }
+        let exact = exact_quantile(&sorted, p);
+        let err = (q.estimate() - exact).abs();
+        assert!(
+            err < 0.1,
+            "P2({p}) = {} vs exact {exact}: error {err}",
+            q.estimate()
+        );
+    }
+}
+
+#[test]
+fn cvar_tracks_exact_tail_mean_at_n_1000() {
+    let mut rng = Pcg64::new(7);
+    let xs: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+    let mut cv = Cvar::new(0.95);
+    for &x in &xs {
+        cv.push(x);
+    }
+    // Exact sample CVaR_0.95: the mean of the worst 5% (largest 50 values).
+    let mut sorted = xs;
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let tail = &sorted[950..];
+    let exact = tail.iter().sum::<f64>() / tail.len() as f64;
+    let err = (cv.estimate() - exact).abs();
+    assert!(
+        err < 0.25,
+        "CVaR = {} vs exact tail mean {exact}: error {err}",
+        cv.estimate()
+    );
+    // The estimate must sit at or above its own VaR (tail mean >= threshold).
+    assert!(cv.estimate() >= cv.var() - 1e-12);
+}
+
+#[test]
+fn worker_count_is_bitwise_invisible() {
+    let run = |par: usize| {
+        let cfg = risk_cfg(&format!(
+            "[risk]\npaths = 200\nsteps = 8\nchunk = 64\nseed = 11\n\
+             [exec]\nparallelism = {par}\n"
+        ));
+        let mut s = RiskSweep::new(cfg);
+        s.run();
+        s
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.done(), 200);
+    assert_eq!(state_bits(&a), state_bits(&b));
+}
+
+#[test]
+fn lane_width_is_bitwise_invisible_for_the_gbm_book() {
+    let run = |lanes: usize| {
+        let cfg = risk_cfg(&format!(
+            "[risk]\nscenario = \"gbm_portfolio\"\ndim = 4\npaths = 96\n\
+             steps = 8\nchunk = 32\nseed = 5\n\
+             [exec]\nparallelism = 2\nlanes = {lanes}\n"
+        ));
+        let mut s = RiskSweep::new(cfg);
+        s.run();
+        s
+    };
+    let a = run(1);
+    let b = run(8);
+    assert_eq!(state_bits(&a), state_bits(&b));
+}
+
+#[test]
+fn checkpoint_resume_through_text_is_bitwise_exact() {
+    let cfg = risk_cfg(
+        "[risk]\npaths = 120\nsteps = 8\nchunk = 32\nseed = 3\n\
+         [exec]\nparallelism = 2\n",
+    );
+    let mut full = RiskSweep::new(cfg.clone());
+    full.run();
+
+    // Stop mid-chunk (--stop-after 50 clips the 32-wide chunks to 32 + 18),
+    // round-trip the snapshot through its text form, resume under different
+    // exec knobs, and finish.
+    let mut first = RiskSweep::new(cfg.clone());
+    first.run_to(50);
+    assert_eq!(first.done(), 50);
+    let snap = Snapshot::from_text(&first.snapshot().to_text()).unwrap();
+    let mut resumed_cfg = cfg;
+    resumed_cfg.chunk = 7;
+    resumed_cfg.parallelism = 3;
+    let mut second = RiskSweep::resume(resumed_cfg, &snap).unwrap();
+    assert_eq!(second.done(), 50);
+    second.run();
+    assert_eq!(second.done(), 120);
+    assert_eq!(state_bits(&full), state_bits(&second));
+}
+
+#[test]
+fn milstein_and_ees_agree_on_the_same_noise() {
+    let run = |stepper: &str| {
+        let cfg = risk_cfg(&format!(
+            "[risk]\nscenario = \"gbm_portfolio\"\nstepper = \"{stepper}\"\n\
+             dim = 4\npaths = 512\nsteps = 16\nchunk = 128\nseed = 17\n\
+             [exec]\nparallelism = 4\nlanes = 8\n"
+        ));
+        let mut s = RiskSweep::new(cfg);
+        s.run();
+        s.report()
+    };
+    let ees = run("ees");
+    let mil = run("milstein");
+    assert!(ees.is_finite() && mil.is_finite());
+    // Identical per-path drivers: the arms differ only by discretization
+    // error, far below the Monte Carlo noise floor.
+    let dmean = (ees.mean - mil.mean).abs();
+    assert!(dmean < 0.02, "EES mean {} vs Milstein {}", ees.mean, mil.mean);
+    // Both sit near the exact E[S_T] = e^{mu T} of the equal-weight book.
+    let exact = (0.05f64).exp();
+    assert!((ees.mean - exact).abs() < 0.1, "mean {} vs {exact}", ees.mean);
+}
+
+#[test]
+fn every_scenario_produces_finite_estimates() {
+    for (scenario, extra) in [
+        ("rbergomi", ""),
+        ("gbm_portfolio", "dim = 3\n"),
+        ("kuramoto", "dim = 16\n"),
+    ] {
+        let cfg = risk_cfg(&format!(
+            "[risk]\nscenario = \"{scenario}\"\npaths = 64\nsteps = 8\n\
+             chunk = 16\nseed = 2\n{extra}[exec]\nparallelism = 2\n"
+        ));
+        let mut s = RiskSweep::new(cfg);
+        s.run();
+        let r = s.report();
+        assert!(r.is_finite(), "{scenario}: non-finite report");
+        assert_eq!(r.paths_done, 64);
+        // Kuramoto's payoff is an order parameter: it must land in [0, 1].
+        if scenario == "kuramoto" {
+            assert!(r.min >= 0.0 && r.max <= 1.0, "r in [{}, {}]", r.min, r.max);
+        }
+    }
+}

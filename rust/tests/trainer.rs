@@ -394,3 +394,84 @@ fn gradient_accumulation_averages() {
     assert!((log.history[0].loss - mean).abs() < 1e-15);
     assert!((problem.p[0] + mean).abs() < 1e-15, "one sgd step at the mean");
 }
+
+/// PR 8 headline regression: the scenario observation grids. Historically
+/// the model observed at `floor(k*steps/4)/steps * T` while the data
+/// generator sampled at `k*T/4` — different physical times whenever
+/// `steps % 4 != 0`, so the loss compared mismatched distributions. The
+/// shared `obs_grid` must (a) keep every previously-aligned configuration
+/// bitwise-verbatim, and (b) put model and data on the *same f64 time* to
+/// the last ulp at awkward knobs like steps = 10, data_fine = 250.
+#[test]
+fn scenario_observation_grids_share_physical_times_to_the_last_ulp() {
+    use ees::train::scenarios::obs_grid;
+
+    // Previously-aligned defaults stay verbatim (bitwise data compat).
+    let g = obs_grid(20, 512);
+    assert_eq!(
+        (g.model.clone(), g.fine.clone(), g.fine_steps),
+        (vec![5, 10, 15, 20], vec![128, 256, 384, 512], 512)
+    );
+    let g = obs_grid(4, 64);
+    assert_eq!(
+        (g.model.clone(), g.fine.clone(), g.fine_steps),
+        (vec![1, 2, 3, 4], vec![16, 32, 48, 64], 64)
+    );
+
+    // The awkward knobs: steps = 10 floors the quarter grid to
+    // [2, 5, 7, 10]. data_fine = 250 stays aligned (250 is a multiple of
+    // 10: fine = [50, 125, 175, 250]); 256 is not, so it snaps up to
+    // fine_steps = 260. Either way the rational identity below must hold.
+    let g = obs_grid(10, 250);
+    assert_eq!(
+        (g.model.clone(), g.fine.clone(), g.fine_steps),
+        (vec![2, 5, 7, 10], vec![50, 125, 175, 250], 250)
+    );
+    let g = obs_grid(10, 256);
+    assert_eq!(
+        (g.model.clone(), g.fine.clone(), g.fine_steps),
+        (vec![2, 5, 7, 10], vec![52, 130, 182, 260], 260)
+    );
+    for (steps, data_fine) in [(10usize, 250usize), (10, 256), (6, 100), (7, 333), (8, 5)] {
+        let g = obs_grid(steps, data_fine);
+        assert_eq!(g.model.len(), g.fine.len());
+        assert_eq!(*g.fine.last().unwrap(), g.fine_steps, "T itself observed");
+        for (&m, &f) in g.model.iter().zip(g.fine.iter()) {
+            // Exact rational identity m/steps == f/fine_steps ...
+            assert_eq!(m * g.fine_steps, f * steps, "({steps},{data_fine})");
+            // ... hence bitwise-equal f64 observation times on both grids
+            // (IEEE division is correctly rounded, so equal rationals
+            // divide to equal doubles), for any horizon.
+            for t_end in [1.0f64, 2.0, 0.7] {
+                let t_model = m as f64 / steps as f64 * t_end;
+                let t_data = f as f64 / g.fine_steps as f64 * t_end;
+                assert_eq!(
+                    t_model.to_bits(),
+                    t_data.to_bits(),
+                    "({steps},{data_fine}) m={m} f={f} T={t_end}"
+                );
+            }
+        }
+    }
+}
+
+/// The misaligned configurations must also *train*: a smoke run of the two
+/// data-grid scenarios at steps = 10, data_fine = 250 (quarter indices
+/// floor to [2, 5, 7, 10] — the old code read fine-grid rows at the wrong
+/// physical times here).
+#[test]
+fn scenarios_run_at_awkward_grid_knobs() {
+    for scenario in ["gbm", "kuramoto"] {
+        let text = format!(
+            "[train]\nscenario = \"{scenario}\"\nepochs = 2\nbatch = 8\n\
+             steps = 10\ndata_fine = 250\ndata_samples = 8\nhidden = 4\n\
+             dim = 2\nn_osc = 2\nseed = 9\n[exec]\nparallelism = 2\n"
+        );
+        let cfg = ees::config::Config::parse(&text).unwrap();
+        let run = ees::train::scenarios::run_scenario(&cfg).unwrap();
+        assert!(
+            run.log.terminal_loss().is_finite(),
+            "{scenario}: non-finite loss at awkward grid knobs"
+        );
+    }
+}

@@ -23,6 +23,14 @@
 //! --check` runs those arms gate at >= 1.3x (quick mode is too noisy to
 //! gate on). `regressions_vs` skips arms absent on either side, so a
 //! default-build `--check` against a simd-build ledger still works.
+//!
+//! The `serve/simulate_coalesce/*` arms drive an in-process `ees serve`
+//! engine with closed-loop clients: the workspace column coalesces
+//! concurrent requests into lane groups, the baseline column dispatches
+//! each request solo, so `speedup` reads as the dynamic-batching win. In
+//! `--full --check` runs the 8-client arm gates at >= 2.0x; the 1-client
+//! arm stays informational (a lone client pays the batch window as a
+//! latency tax, so its column reads below 1x by design).
 
 use ees::adjoint::{grad_euclidean, AdjointMethod, MseToTargets};
 use ees::bench::ledger::{
@@ -961,6 +969,85 @@ fn main() {
         });
     }
 
+    // --- serving-layer coalescing arms -----------------------------------
+    // The tentpole number: closed-loop clients against an in-process `ees
+    // serve` engine, identical traffic on two servers sharing one registry
+    // — coalescing ON (workspace column: concurrent 1-path requests packed
+    // into 8-wide lane groups) vs coalescing OFF (baseline column: solo
+    // per-request dispatch). At 8 clients `speedup` reads directly as the
+    // dynamic-batching win; the 1-client arm is the honest flip side — a
+    // lone client pays the batch-formation window as a latency tax, so its
+    // speedup column reads below 1x by design.
+    {
+        use ees::config::Config;
+        use ees::serve::{Registry, Request, ServeConfig, Server, Workload};
+        use std::sync::Arc;
+
+        // Wide-model GBM scenario: per-step matvecs big enough that lane
+        // blocking (not queueing noise) dominates the per-request cost.
+        let cfg = Config::parse(
+            "[serve]\nseed = 31\n\
+             [serve.ou]\nsteps = 16\ndata_samples = 64\n\
+             [serve.gbm]\ndim = 16\nsteps = 64\nhidden = 32\ndata_samples = 16\ndata_fine = 64\n\
+             [exec]\nlanes = 8\n",
+        )
+        .unwrap();
+        let registry = Arc::new(Registry::from_config(&cfg).unwrap());
+        let mk = |coalesce: bool| ServeConfig {
+            workers: 2,
+            dispatch_parallelism: 1,
+            lanes: 8,
+            queue_depth: 4096,
+            window_us: 200,
+            max_batch: 32,
+            max_paths: 64,
+            coalesce,
+        };
+        let on = Server::start_shared(Arc::clone(&registry), mk(true));
+        let off = Server::start_shared(Arc::clone(&registry), mk(false));
+        // One closed-loop burst: `clients` threads, `per` requests each,
+        // one in flight per client.
+        let drive = |server: &Server, clients: usize, per: usize| {
+            std::thread::scope(|scope| {
+                for c in 0..clients {
+                    let server = &*server;
+                    scope.spawn(move || {
+                        for k in 0..per {
+                            let id = (c * per + k) as u64;
+                            let resp = server.call(Request {
+                                id,
+                                scenario: "gbm".to_string(),
+                                workload: Workload::Simulate,
+                                paths: 1,
+                                seed: 1000 + id,
+                            });
+                            assert!(!resp.is_rejected());
+                        }
+                    });
+                }
+            });
+        };
+        let per = if full { 8usize } else { 4 };
+        for (arm, clients) in [("c8_p1", 8usize), ("c1_p1", 1)] {
+            let ops = clients * per;
+            drive(&on, clients, per); // warm both servers' worker pools
+            drive(&off, clients, per);
+            let median =
+                median_ns(warmup.min(3), iters.min(20), || drive(&on, clients, per)) / ops as f64;
+            let allocs = allocs_per_op(ops, || drive(&on, clients, per));
+            let base_median =
+                median_ns(warmup.min(3), iters.min(20), || drive(&off, clients, per)) / ops as f64;
+            let base_allocs = allocs_per_op(ops, || drive(&off, clients, per));
+            ledger.push(LedgerEntry {
+                name: format!("serve/simulate_coalesce/{arm}"),
+                median_ns: median,
+                allocs_per_op: allocs,
+                baseline_median_ns: base_median,
+                baseline_allocs_per_op: base_allocs,
+            });
+        }
+    }
+
     // --- feature-gated SIMD kernel arms ----------------------------------
     // The "workspace" column runs with the SIMD knob ON, the baseline
     // column with it OFF, so `speedup` reads directly as the SIMD win over
@@ -1137,6 +1224,21 @@ fn main() {
                 if e.speedup() < 1.5 {
                     failures.push(format!(
                         "{gated}: lane speedup {:.2}x < required 1.5x",
+                        e.speedup()
+                    ));
+                }
+            }
+        }
+        // Serving coalescing acceptance arm: >= 2x over solo per-request
+        // dispatch at 8 concurrent clients. Full mode only — quick mode's
+        // short bursts leave the batch-formation window under-fed, which
+        // understates the coalescing win and would fail on noise.
+        if full {
+            let gated = "serve/simulate_coalesce/c8_p1";
+            if let Some(e) = ledger.entries.iter().find(|e| e.name == gated) {
+                if e.speedup() < 2.0 {
+                    failures.push(format!(
+                        "{gated}: coalescing speedup {:.2}x < required 2.0x",
                         e.speedup()
                     ));
                 }

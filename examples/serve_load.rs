@@ -1,0 +1,299 @@
+//! Closed-loop load generator for `ees serve`.
+//!
+//! Each of `--clients` threads submits `--requests` requests back-to-back
+//! (one in flight per client — the closed-loop discipline that feeds the
+//! server's coalescing queue) and records per-request latency. Two output
+//! files keep determinism and timing separate:
+//!
+//! - `--ledger FILE`: every response as canonical JSON, **sorted by
+//!   request id** — a pure function of the request set, so two runs at any
+//!   server shape `diff` clean (the serve-smoke CI gate).
+//! - `--timing FILE`: requests/sec and p50/p99 latency — honest wall-clock
+//!   numbers, never diffed.
+//!
+//! Modes:
+//!
+//! - TCP (default, `--addr HOST:PORT`): each client opens its own
+//!   connection to a running `ees serve`.
+//! - In-process (`--in-process`): builds the registry + server in this
+//!   process from `--config` and drives [`ees::serve::Server::call`]
+//!   directly — no sockets, used by the bench arms.
+//!
+//! Run: `cargo run --release --example serve_load -- --addr 127.0.0.1:8787
+//! --clients 8 --requests 32 --workload mix`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ees::config::Config;
+use ees::serve::{parse_request, Registry, Request, ServeConfig, Server, Workload};
+
+struct Opts {
+    addr: Option<String>,
+    config: Option<String>,
+    in_process: bool,
+    clients: usize,
+    requests: usize,
+    scenario: Option<String>,
+    workload: String,
+    paths: usize,
+    seed: u64,
+    ledger: Option<String>,
+    timing: Option<String>,
+}
+
+fn parse_opts() -> Opts {
+    let mut o = Opts {
+        addr: None,
+        config: None,
+        in_process: false,
+        clients: 4,
+        requests: 16,
+        scenario: None,
+        workload: "mix".to_string(),
+        paths: 1,
+        seed: 1000,
+        ledger: None,
+        timing: None,
+    };
+    let mut it = std::env::args().skip(1);
+    let parse_count = |raw: Option<String>, flag: &str| -> usize {
+        match raw.as_deref().map(str::parse) {
+            Some(Ok(v)) => v,
+            _ => {
+                eprintln!("{flag}: expected a count");
+                std::process::exit(2);
+            }
+        }
+    };
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--addr" => o.addr = it.next(),
+            "--config" => o.config = it.next(),
+            "--in-process" => o.in_process = true,
+            "--clients" => o.clients = parse_count(it.next(), "--clients"),
+            "--requests" => o.requests = parse_count(it.next(), "--requests"),
+            "--scenario" => o.scenario = it.next(),
+            "--workload" => o.workload = it.next().unwrap_or_default(),
+            "--paths" => o.paths = parse_count(it.next(), "--paths"),
+            "--seed" => o.seed = parse_count(it.next(), "--seed") as u64,
+            "--ledger" => o.ledger = it.next(),
+            "--timing" => o.timing = it.next(),
+            other => {
+                eprintln!("unknown argument: {other}");
+                eprintln!(
+                    "usage: serve_load [--addr HOST:PORT | --in-process] [--config FILE]"
+                );
+                eprintln!(
+                    "                  [--clients N] [--requests M] [--scenario S]"
+                );
+                eprintln!(
+                    "                  [--workload simulate|price|gradient|mix] [--paths P]"
+                );
+                eprintln!("                  [--seed BASE] [--ledger FILE] [--timing FILE]");
+                std::process::exit(2);
+            }
+        }
+    }
+    if o.clients == 0 || o.requests == 0 {
+        eprintln!("--clients and --requests must be >= 1");
+        std::process::exit(2);
+    }
+    o
+}
+
+/// The request each (client, slot) pair issues — a pure function of the
+/// generator's flags, so every run over the same flags asks the server for
+/// the same work and (by the serving determinism contract) gets the same
+/// bytes back.
+fn request_for(o: &Opts, client: usize, slot: usize) -> Request {
+    let id = (client * o.requests + slot) as u64;
+    let scenario = match &o.scenario {
+        Some(s) => s.clone(),
+        None => {
+            if id % 2 == 0 {
+                "ou".to_string()
+            } else {
+                "gbm".to_string()
+            }
+        }
+    };
+    let workload = match o.workload.as_str() {
+        "mix" => match id % 3 {
+            0 => Workload::Simulate,
+            1 => Workload::Price,
+            _ => Workload::Gradient,
+        },
+        name => Workload::parse(name).unwrap_or_else(|| {
+            eprintln!("unknown workload '{name}'");
+            std::process::exit(2);
+        }),
+    };
+    Request {
+        id,
+        scenario,
+        workload,
+        paths: o.paths,
+        seed: o.seed + id,
+    }
+}
+
+fn connect_retry(addr: &str) -> TcpStream {
+    for _ in 0..100 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    eprintln!("cannot connect to {addr} after 10s");
+    std::process::exit(1);
+}
+
+/// One closed-loop TCP client: its own connection, one request in flight.
+fn run_tcp_client(addr: &str, o: &Opts, client: usize) -> Vec<(u64, String, Duration)> {
+    let stream = connect_retry(addr);
+    let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+    let mut out = Vec::with_capacity(o.requests);
+    for slot in 0..o.requests {
+        let req = request_for(o, client, slot);
+        let line = format!(
+            "{{\"id\":{},\"scenario\":\"{}\",\"workload\":\"{}\",\"paths\":{},\"seed\":{}}}",
+            req.id,
+            req.scenario,
+            req.workload.name(),
+            req.paths,
+            req.seed
+        );
+        // Sanity: the line must round-trip our own parser.
+        parse_request(&line).expect("generator emits valid requests");
+        let t0 = Instant::now();
+        writeln!(writer, "{line}").expect("write request");
+        let mut resp = String::new();
+        reader.read_line(&mut resp).expect("read response");
+        out.push((req.id, resp.trim_end().to_string(), t0.elapsed()));
+    }
+    out
+}
+
+/// One closed-loop in-process client against a shared [`Server`].
+fn run_local_client(server: &Server, o: &Opts, client: usize) -> Vec<(u64, String, Duration)> {
+    let mut out = Vec::with_capacity(o.requests);
+    for slot in 0..o.requests {
+        let req = request_for(o, client, slot);
+        let id = req.id;
+        let t0 = Instant::now();
+        let resp = server.call(req);
+        out.push((id, resp.to_json_line(), t0.elapsed()));
+    }
+    out
+}
+
+fn main() {
+    let o = parse_opts();
+    let server: Option<Arc<Server>> = if o.in_process {
+        let cfg = match &o.config {
+            Some(path) => Config::from_file(path).unwrap_or_else(|e| {
+                eprintln!("serve_load: {e}");
+                std::process::exit(2);
+            }),
+            None => Config::default(),
+        };
+        let registry = Registry::from_config(&cfg).unwrap_or_else(|e| {
+            eprintln!("serve_load: {e}");
+            std::process::exit(2);
+        });
+        Some(Arc::new(Server::start(registry, ServeConfig::from_config(&cfg))))
+    } else {
+        None
+    };
+    let addr = o.addr.clone().unwrap_or_else(|| "127.0.0.1:8787".into());
+
+    let wall = Instant::now();
+    let mut results: Vec<(u64, String, Duration)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..o.clients)
+            .map(|c| {
+                let o = &o;
+                let addr = addr.as_str();
+                let server = server.as_deref();
+                scope.spawn(move || match server {
+                    Some(s) => run_local_client(s, o, c),
+                    None => run_tcp_client(addr, o, c),
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    let wall = wall.elapsed();
+
+    let total = results.len();
+    let rejected = results
+        .iter()
+        .filter(|(_, line, _)| line.contains("\"status\":\"rejected\""))
+        .count();
+    let mut lat_us: Vec<u64> = results.iter().map(|(_, _, d)| d.as_micros() as u64).collect();
+    lat_us.sort_unstable();
+    let pct = |p: f64| -> u64 {
+        let idx = ((lat_us.len() as f64 - 1.0) * p).round() as usize;
+        lat_us[idx]
+    };
+    let rps = total as f64 / wall.as_secs_f64();
+    eprintln!(
+        "serve_load: {total} responses ({rejected} rejected) from {} clients in {:.3}s \
+         — {rps:.1} req/s, p50 {}us, p99 {}us",
+        o.clients,
+        wall.as_secs_f64(),
+        pct(0.5),
+        pct(0.99),
+    );
+
+    // Deterministic response ledger: sorted by id, ids unique by
+    // construction, no timing — byte-identical across runs and server
+    // shapes.
+    if let Some(path) = &o.ledger {
+        results.sort_by_key(|(id, _, _)| *id);
+        let mut doc = String::from("{\"schema\":\"ees-serve-ledger-v1\",\"responses\":[\n");
+        for (i, (_, line, _)) in results.iter().enumerate() {
+            doc.push_str(line);
+            if i + 1 < results.len() {
+                doc.push(',');
+            }
+            doc.push('\n');
+        }
+        doc.push_str("]}\n");
+        if let Err(e) = std::fs::write(path, doc) {
+            eprintln!("failed to write ledger {path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("response ledger written to {path}");
+    }
+
+    // Timing ledger: wall-clock truth, separate file, never diffed.
+    if let Some(path) = &o.timing {
+        let doc = format!(
+            "{{\"clients\":{},\"requests_per_client\":{},\"total\":{total},\"rejected\":{rejected},\
+             \"wall_secs\":{:.6},\"requests_per_sec\":{rps:.3},\"p50_us\":{},\"p99_us\":{}}}\n",
+            o.clients,
+            o.requests,
+            wall.as_secs_f64(),
+            pct(0.5),
+            pct(0.99),
+        );
+        if let Err(e) = std::fs::write(path, doc) {
+            eprintln!("failed to write timing {path}: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("timing written to {path}");
+    }
+
+    if rejected > 0 {
+        eprintln!("serve_load: FAILED: {rejected} rejected responses");
+        std::process::exit(1);
+    }
+    println!("serve_load OK");
+}

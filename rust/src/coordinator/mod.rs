@@ -408,6 +408,34 @@ pub fn batch_terminal_lanes_par(
     parallelism: usize,
     lanes: usize,
 ) -> Vec<Vec<f64>> {
+    batch_terminal_lanes_pool(
+        stepper,
+        vf,
+        t0,
+        y0s,
+        paths,
+        parallelism,
+        lanes,
+        &WorkspacePool::new(),
+    )
+}
+
+/// [`batch_terminal_lanes_par`] drawing scratch from a **caller-owned**
+/// [`WorkspacePool`]: a long-lived loop (the serving workers in
+/// `crate::serve`) hands in a warm pool so steady-state dispatch allocates
+/// nothing. The pool is only a scratch source — outputs are bitwise
+/// those of [`batch_terminal_lanes_par`].
+#[allow(clippy::too_many_arguments)]
+pub fn batch_terminal_lanes_pool(
+    stepper: &dyn Stepper,
+    vf: &dyn VectorField,
+    t0: f64,
+    y0s: &[Vec<f64>],
+    paths: &[BrownianPath],
+    parallelism: usize,
+    lanes: usize,
+    ws_pool: &WorkspacePool,
+) -> Vec<Vec<f64>> {
     let batch = y0s.len();
     let lanes = effective_lanes(stepper, vf, lanes);
     let uniform_grid = paths
@@ -415,7 +443,6 @@ pub fn batch_terminal_lanes_par(
         .all(|w| w[0].steps() == w[1].steps() && w[0].h == w[1].h);
     let dim = vf.dim();
     if lanes <= 1 || !uniform_grid {
-        let ws_pool = WorkspacePool::new();
         return parallel_map(parallelism, batch, |b| {
             let mut ws = ws_pool.take();
             let mut state = stepper.init_state(vf, t0, &y0s[b]);
@@ -432,7 +459,6 @@ pub fn batch_terminal_lanes_par(
     // (batch + lanes - 1) / lanes, spelled out: the crate pins
     // rust-version 1.70, before usize::div_ceil stabilised.
     let groups = (batch + lanes - 1) / lanes;
-    let ws_pool = WorkspacePool::new();
     let per_group: Vec<Vec<Vec<f64>>> = parallel_map(parallelism, groups, |g| {
         let lo = g * lanes;
         let ll = lanes.min(batch - lo);

@@ -38,6 +38,7 @@ pub mod nn;
 pub mod rng;
 pub mod risk;
 pub mod runtime;
+pub mod serve;
 pub mod sig;
 pub mod solvers;
 pub mod stability;

@@ -24,6 +24,7 @@
 //! ees all                  # everything (smoke scale)
 //! ees train --config F     # training engine: run a registered scenario
 //! ees risk --config F      # streaming Monte Carlo risk sweep
+//! ees serve [--addr A]     # streaming simulation service (JSON over TCP)
 //! ```
 //!
 //! `ees train` reads a `[train]` config section (scenario, epochs, batch,
@@ -59,6 +60,7 @@ struct Args {
     resume: Option<String>,
     stop_after: Option<usize>,
     assert_finite: bool,
+    addr: Option<String>,
 }
 
 fn parse_args() -> Args {
@@ -80,6 +82,7 @@ fn parse_args() -> Args {
         resume: None,
         stop_after: None,
         assert_finite: false,
+        addr: None,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -115,6 +118,7 @@ fn parse_args() -> Args {
                 }
             }
             "--assert-improves" => args.assert_improves = true,
+            "--addr" => args.addr = it.next(),
             "--assert-finite" => args.assert_finite = true,
             "--checkpoint" => args.checkpoint = it.next(),
             "--resume" => args.resume = it.next(),
@@ -222,6 +226,7 @@ fn main() {
         "runtime-smoke" => runtime_smoke(),
         "train" => run_train(&args),
         "risk" => run_risk(&args),
+        "serve" => run_serve(&args),
         "all" => {
             let mut all = String::new();
             all.push_str(&experiments::fig2::run(false));
@@ -255,7 +260,7 @@ fn main() {
             eprintln!("usage: ees <command> [--full] [--render] [--out FILE] [--model NAME] [--steps a,b,c]");
             eprintln!("commands: stability ms-stability ou stochvol kuramoto kuramoto-memory");
             eprintln!("          sphere sphere-memory gbm md adjoint-fidelity memory-t7");
-            eprintln!("          convergence cf-convergence ees27 runtime-smoke train risk all");
+            eprintln!("          convergence cf-convergence ees27 runtime-smoke train risk serve all");
             eprintln!(
                 "train:    ees train --config FILE [--scenario {}] [--ledger OUT.json]",
                 ees::train::scenarios::NAMES.join("|")
@@ -267,6 +272,9 @@ fn main() {
             );
             eprintln!("                   [--stop-after N] [--checkpoint F] [--resume F]");
             eprintln!("                   [--ledger OUT.json] [--assert-finite]");
+            eprintln!("serve:    ees serve [--config FILE] [--addr HOST:PORT]   (default 127.0.0.1:8787)");
+            eprintln!("                    newline-delimited JSON requests, e.g.");
+            eprintln!("                    {{\"id\":1,\"scenario\":\"ou\",\"workload\":\"price\",\"paths\":32,\"seed\":7}}");
             std::process::exit(0);
         }
         other => {
@@ -462,6 +470,51 @@ fn run_risk(args: &Args) -> String {
         std::process::exit(1);
     }
     report.render()
+}
+
+/// `ees serve`: run the streaming simulation service (`ees::serve`) —
+/// build the scenario registry from the `[serve.*]` config sections, start
+/// the coalescing worker pool, and accept newline-delimited JSON requests
+/// on `--addr` (default `127.0.0.1:8787`) until killed. Exits 2 on
+/// configuration errors, 1 if the listener dies.
+fn run_serve(args: &Args) -> String {
+    use ees::serve::{serve_tcp, Registry, ServeConfig, Server};
+    use std::sync::Arc;
+    let cfg = match &args.config {
+        Some(path) => match Config::from_file(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("ees serve: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => Config::default(),
+    };
+    let sc = ServeConfig::from_config(&cfg);
+    let registry = match Registry::from_config(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("ees serve: {e}");
+            std::process::exit(2);
+        }
+    };
+    let addr = args.addr.clone().unwrap_or_else(|| "127.0.0.1:8787".into());
+    eprintln!(
+        "ees serve: {} scenarios ({}), {} workers, lanes {}, coalesce {}, queue depth {}, window {}us, listening on {addr}",
+        registry.names().len(),
+        registry.names().join(", "),
+        sc.workers,
+        sc.lanes,
+        sc.coalesce,
+        sc.queue_depth,
+        sc.window_us,
+    );
+    let server = Arc::new(Server::start(registry, sc));
+    if let Err(e) = serve_tcp(server, &addr) {
+        eprintln!("ees serve: {e}");
+        std::process::exit(1);
+    }
+    String::new()
 }
 
 /// PJRT smoke: load the AOT EES-step artifact and run one batch step.

@@ -223,6 +223,19 @@ impl RiskConfig {
         })
     }
 
+    /// Snapshot format version, stored as fingerprint word 0.
+    ///
+    /// The estimator `STATE_LEN`s are silently part of the checkpoint
+    /// layout (the words after the fingerprint are raw estimator state),
+    /// so any change to estimator layout, word order, or fingerprint
+    /// contents MUST bump this: a resume across versions then refuses
+    /// loudly with a version message instead of misinterpreting words.
+    /// History: v1 = the (implicit, unversioned) PR 8 format with an
+    /// 8-word fingerprint; v2 prepends this version word (9-word
+    /// fingerprint — v1 snapshots are already refused by the length
+    /// check).
+    pub const SNAPSHOT_VERSION: f64 = 2.0;
+
     /// The distribution-defining knobs as `f64` words, stored at the head
     /// of every checkpoint so a resume against a different configuration
     /// fails loudly instead of silently mixing estimators. The seed is
@@ -230,6 +243,7 @@ impl RiskConfig {
     /// bitwise, so a NaN pattern is harmless.
     fn fingerprint(&self) -> Vec<f64> {
         vec![
+            Self::SNAPSHOT_VERSION,
             self.scenario.id(),
             self.stepper.id(),
             self.paths as f64,
@@ -241,8 +255,8 @@ impl RiskConfig {
         ]
     }
 
-    /// `f64` words in [`Self::fingerprint`].
-    const FP_LEN: usize = 8;
+    /// `f64` words in [`Self::fingerprint`] (version word included).
+    const FP_LEN: usize = 9;
 }
 
 /// The estimator bundle one sweep folds payoffs into: Welford moments,
@@ -376,7 +390,16 @@ impl RiskSweep {
                 RiskConfig::FP_LEN + RiskEstimators::STATE_LEN
             ));
         }
-        for (i, (a, b)) in fp.iter().zip(snap.params.iter()).enumerate() {
+        // Version word first, with a version-specific message — a format
+        // mismatch is a different failure than a knob mismatch.
+        if snap.params[0].to_bits() != RiskConfig::SNAPSHOT_VERSION.to_bits() {
+            return Err(crate::format_err!(
+                "risk checkpoint has snapshot format version {:e}, this build reads version {:e}",
+                snap.params[0],
+                RiskConfig::SNAPSHOT_VERSION
+            ));
+        }
+        for (i, (a, b)) in fp.iter().zip(snap.params.iter()).enumerate().skip(1) {
             if a.to_bits() != b.to_bits() {
                 return Err(crate::format_err!(
                     "risk checkpoint was taken under a different configuration \
@@ -709,5 +732,21 @@ mod tests {
         // Same distribution at different exec knobs → accepted.
         let same = cfg_text("chunk = 3");
         assert!(RiskSweep::resume(same, &snap).is_ok());
+    }
+
+    #[test]
+    fn resume_rejects_bumped_snapshot_version() {
+        let mut s = RiskSweep::new(cfg_text(""));
+        s.run_to(16);
+        let mut snap = s.snapshot();
+        // Word 0 is the format version; a snapshot from a future (or past)
+        // layout must be refused with a version message, not a generic
+        // knob mismatch — the words after the fingerprint would otherwise
+        // be misinterpreted as estimator state.
+        snap.params[0] = RiskConfig::SNAPSHOT_VERSION + 1.0;
+        let err = RiskSweep::resume(cfg_text(""), &snap).unwrap_err();
+        assert!(format!("{err}").contains("version"));
+        // Untampered snapshot of the current version resumes fine.
+        assert!(RiskSweep::resume(cfg_text(""), &s.snapshot()).is_ok());
     }
 }

@@ -1,0 +1,375 @@
+//! The coalescing queue and its worker threads — the serving layer's perf
+//! core. See the [module docs](super) for the determinism and
+//! backpressure contracts.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    batch_grad_euclidean_pool_lanes, batch_terminal_lanes_pool, sample_paths_par,
+};
+use crate::memory::WorkspacePool;
+use crate::rng::Pcg64;
+
+use super::{Registry, Request, Response, ServeConfig, Workload};
+
+/// A queued request plus the channel its response goes back on.
+struct Job {
+    req: Request,
+    tx: mpsc::Sender<Response>,
+}
+
+/// Queue state under the mutex.
+struct QueueState {
+    jobs: VecDeque<Job>,
+    /// Cleared at shutdown: workers drain what is queued, then exit; new
+    /// submits are rejected.
+    open: bool,
+}
+
+/// The mutex+condvar pair workers park on.
+struct Shared {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// A running serving instance: `workers` dispatch threads over one shared
+/// coalescing queue. Submit with [`Server::submit`] (async, returns the
+/// response channel) or [`Server::call`] (blocking convenience).
+///
+/// Dropping the server shuts it down: the queue closes, queued work is
+/// drained, and the worker threads are joined.
+pub struct Server {
+    shared: Arc<Shared>,
+    cfg: ServeConfig,
+    registry: Arc<Registry>,
+    workers: Vec<JoinHandle<()>>,
+    stopped: AtomicBool,
+}
+
+impl Server {
+    /// Spawn the worker pool over a registry the server owns.
+    pub fn start(registry: Registry, cfg: ServeConfig) -> Server {
+        Server::start_shared(Arc::new(registry), cfg)
+    }
+
+    /// [`Server::start`] over a shared registry — tests run several server
+    /// configurations against the same built models without paying the
+    /// registry build (data generation) per server.
+    pub fn start_shared(registry: Arc<Registry>, cfg: ServeConfig) -> Server {
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                open: true,
+            }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..cfg.workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                let registry = Arc::clone(&registry);
+                let cfg = cfg.clone();
+                std::thread::spawn(move || worker_loop(&shared, &registry, &cfg))
+            })
+            .collect();
+        Server {
+            shared,
+            cfg,
+            registry,
+            workers,
+            stopped: AtomicBool::new(false),
+        }
+    }
+
+    /// The registry this server dispatches against.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Enqueue a request; the response arrives on the returned channel.
+    ///
+    /// Validation failures and backpressure sheds resolve immediately
+    /// with a [`Response::Rejected`] on the same channel — a submit never
+    /// blocks and a receiver never hangs on a live server.
+    pub fn submit(&self, req: Request) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        if let Some(reason) = self.validate(&req) {
+            let _ = tx.send(Response::Rejected { id: req.id, reason });
+            return rx;
+        }
+        let mut q = self.shared.q.lock().unwrap();
+        if !q.open {
+            let _ = tx.send(Response::Rejected {
+                id: req.id,
+                reason: "server is shutting down".to_string(),
+            });
+            return rx;
+        }
+        if q.jobs.len() >= self.cfg.queue_depth {
+            let _ = tx.send(Response::Rejected {
+                id: req.id,
+                reason: format!("queue full ({} queued): request shed", q.jobs.len()),
+            });
+            return rx;
+        }
+        q.jobs.push_back(Job { req, tx });
+        drop(q);
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    /// Submit and block for the response.
+    pub fn call(&self, req: Request) -> Response {
+        let id = req.id;
+        let rx = self.submit(req);
+        rx.recv().unwrap_or_else(|_| Response::Rejected {
+            id,
+            reason: "server shut down before responding".to_string(),
+        })
+    }
+
+    fn validate(&self, req: &Request) -> Option<String> {
+        if self.registry.get(&req.scenario).is_none() {
+            return Some(format!(
+                "unknown scenario '{}' (registered: {})",
+                req.scenario,
+                self.registry.names().join(", ")
+            ));
+        }
+        if req.paths == 0 {
+            return Some("paths must be >= 1".to_string());
+        }
+        if req.paths > self.cfg.max_paths {
+            return Some(format!(
+                "paths {} exceeds max_paths {}",
+                req.paths, self.cfg.max_paths
+            ));
+        }
+        None
+    }
+
+    /// Close the queue, drain queued work, join the workers.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.shared.q.lock().unwrap().open = false;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn worker_loop(shared: &Shared, registry: &Registry, cfg: &ServeConfig) {
+    // Per-worker warm pool: after the first few dispatches every scratch
+    // buffer is a reuse, so steady-state serving allocates only response
+    // buffers (pinned by rust/tests/alloc_regression.rs).
+    let ws_pool = WorkspacePool::new();
+    while let Some(batch) = form_batch(shared, cfg) {
+        execute(registry, cfg, &ws_pool, batch);
+    }
+}
+
+/// Pull the next dispatch off the queue.
+///
+/// Coalescing policy: the oldest queued job anchors the batch; compatible
+/// jobs (same scenario AND workload) are drained oldest-first until the
+/// batch holds one full lane group (`total paths >= lanes` — further
+/// groups parallelise better across workers than within one dispatch),
+/// `max_batch` requests, or the `window_us` deadline passes. Gradient
+/// jobs are never coalesced (their batch loss couples samples), and with
+/// `coalesce` off everything dispatches solo.
+///
+/// Returns `None` when the queue is closed and fully drained.
+fn form_batch(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Job>> {
+    let mut q = shared.q.lock().unwrap();
+    let first = loop {
+        if let Some(job) = q.jobs.pop_front() {
+            break job;
+        }
+        if !q.open {
+            return None;
+        }
+        q = shared.cv.wait(q).unwrap();
+    };
+    if !cfg.coalesce || first.req.workload == Workload::Gradient {
+        return Some(vec![first]);
+    }
+    let mut total = first.req.paths;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + Duration::from_micros(cfg.window_us);
+    loop {
+        let mut i = 0;
+        while i < q.jobs.len() && batch.len() < cfg.max_batch && total < cfg.lanes {
+            let compatible = q.jobs[i].req.scenario == batch[0].req.scenario
+                && q.jobs[i].req.workload == batch[0].req.workload;
+            if compatible {
+                let job = q.jobs.remove(i).expect("index checked against len");
+                total += job.req.paths;
+                batch.push(job);
+            } else {
+                i += 1;
+            }
+        }
+        if batch.len() >= cfg.max_batch || total >= cfg.lanes || !q.open {
+            break;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let (guard, _) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+        q = guard;
+    }
+    Some(batch)
+}
+
+fn execute(registry: &Registry, cfg: &ServeConfig, ws_pool: &WorkspacePool, batch: Vec<Job>) {
+    if batch[0].req.workload == Workload::Gradient {
+        for job in batch {
+            let resp = execute_gradient(registry, cfg, ws_pool, &job.req);
+            let _ = job.tx.send(resp);
+        }
+    } else {
+        execute_terminal(registry, cfg, ws_pool, batch);
+    }
+}
+
+/// Per-request noise: the request seed is the root of a sequential
+/// [`Pcg64::split`] tree, one stream per path index — the same scheme the
+/// trainer's samplers use, and a pure function of the request alone.
+fn request_paths(
+    sc: &crate::train::scenarios::EuclideanScenario,
+    req: &Request,
+) -> Vec<crate::rng::BrownianPath> {
+    let mut root = Pcg64::new(req.seed);
+    sample_paths_par(&mut root, req.paths, sc.dim, sc.steps, sc.h, 1)
+}
+
+/// Dispatch a coalesced simulate/price batch: concatenate every request's
+/// paths into one lane-packed integration, then split the terminal spans
+/// back out per request **in submission order**. Lane-count invariance
+/// makes the concatenation bitwise-invisible to each request.
+fn execute_terminal(
+    registry: &Registry,
+    cfg: &ServeConfig,
+    ws_pool: &WorkspacePool,
+    batch: Vec<Job>,
+) {
+    let entry = registry
+        .get(&batch[0].req.scenario)
+        .expect("scenario validated at submit");
+    let sc = &entry.sc;
+    let total: usize = batch.iter().map(|j| j.req.paths).sum();
+    let mut y0s = Vec::with_capacity(total);
+    let mut paths = Vec::with_capacity(total);
+    for job in &batch {
+        paths.append(&mut request_paths(sc, &job.req));
+        for _ in 0..job.req.paths {
+            y0s.push(sc.y0.clone());
+        }
+    }
+    let terminals = batch_terminal_lanes_pool(
+        &entry.stepper,
+        &sc.model,
+        0.0,
+        &y0s,
+        &paths,
+        cfg.dispatch_parallelism,
+        cfg.lanes,
+        ws_pool,
+    );
+    let mut off = 0;
+    for job in batch {
+        let span = &terminals[off..off + job.req.paths];
+        off += job.req.paths;
+        let resp = match job.req.workload {
+            Workload::Simulate => Response::Simulate {
+                id: job.req.id,
+                scenario: job.req.scenario.clone(),
+                paths: job.req.paths,
+                dim: sc.dim,
+                terminals: span.iter().flat_map(|t| t.iter().copied()).collect(),
+            },
+            Workload::Price => {
+                // Streaming Welford over the mean-of-components payoff,
+                // in path-index order — the order is part of the response
+                // bits, so it must not depend on dispatch shape.
+                let mut mean = 0.0;
+                let mut m2 = 0.0;
+                for (k, t) in span.iter().enumerate() {
+                    let payoff = t.iter().sum::<f64>() / t.len() as f64;
+                    let delta = payoff - mean;
+                    mean += delta / (k + 1) as f64;
+                    m2 += delta * (payoff - mean);
+                }
+                let variance = if span.len() > 1 {
+                    m2 / (span.len() - 1) as f64
+                } else {
+                    0.0
+                };
+                Response::Price {
+                    id: job.req.id,
+                    scenario: job.req.scenario.clone(),
+                    paths: job.req.paths,
+                    mean,
+                    variance,
+                }
+            }
+            Workload::Gradient => unreachable!("gradient jobs dispatch via execute_gradient"),
+        };
+        let _ = job.tx.send(resp);
+    }
+}
+
+/// Dispatch one gradient request as its own engine batch (the batch loss
+/// couples samples, so cross-request coalescing would leak neighbour bits
+/// — see the module docs).
+fn execute_gradient(
+    registry: &Registry,
+    cfg: &ServeConfig,
+    ws_pool: &WorkspacePool,
+    req: &Request,
+) -> Response {
+    let entry = registry
+        .get(&req.scenario)
+        .expect("scenario validated at submit");
+    let sc = &entry.sc;
+    let paths = request_paths(sc, req);
+    let y0s: Vec<Vec<f64>> = (0..req.paths).map(|_| sc.y0.clone()).collect();
+    let (loss, d_theta, peak_mem) = batch_grad_euclidean_pool_lanes(
+        &entry.stepper,
+        sc.adjoint,
+        &sc.model,
+        &y0s,
+        &paths,
+        &sc.obs,
+        &sc.loss,
+        cfg.dispatch_parallelism,
+        ws_pool,
+        cfg.lanes,
+    );
+    Response::Gradient {
+        id: req.id,
+        scenario: req.scenario.clone(),
+        paths: req.paths,
+        loss,
+        grad_l2: crate::linalg::norm2(&d_theta),
+        params: d_theta.len(),
+        peak_mem,
+    }
+}

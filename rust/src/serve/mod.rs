@@ -1,0 +1,384 @@
+//! `ees serve`: a long-running, std-only streaming simulation service over
+//! the lane-blocked batch engine.
+//!
+//! The CLI subcommands run one batch and exit; production scale means a
+//! process that stays up and turns *concurrent independent clients* into
+//! the batch shapes the engine is fast at. The serving layer is three
+//! small pieces:
+//!
+//! - a **registry** ([`Registry`]) of pre-built scenarios (reusing
+//!   [`crate::train::scenarios::build_ou`] / `build_gbm`, the exact models
+//!   the trainer wires) keyed by name;
+//! - a **coalescing queue** ([`Server`], in [`engine`]): worker threads
+//!   pull requests off one shared queue and pack same-(scenario, workload)
+//!   requests into lane groups of `[exec] lanes` width before dispatching
+//!   through [`crate::coordinator::batch_terminal_lanes_pool`] /
+//!   [`crate::coordinator::batch_grad_euclidean_pool_lanes`] with a
+//!   per-worker warm [`WorkspacePool`](crate::memory::WorkspacePool) —
+//!   steady-state dispatch allocates only the response buffers;
+//! - a **newline-delimited JSON front-end** ([`tcp`], protocol in
+//!   [`proto`]) over [`std::net::TcpListener`] — the zero-dependency
+//!   offline policy (see `Cargo.toml`) forbids an async runtime, and one
+//!   synchronous request per connection keeps clients closed-loop.
+//!
+//! # Determinism contract
+//!
+//! A response's bits are a **pure function of the request** — never of
+//! which neighbours happened to be co-batched, the worker count, the lane
+//! width, or the batch-formation window. This falls out of the engine's
+//! lane-count invariance (lane-L stepping is bitwise per-sample identical
+//! to lane-1; `rust/tests/determinism.rs`): each sample's terminal state
+//! depends only on its own `(y0, path)`, and each request's paths derive
+//! from its own seed via the sequential [`Pcg64::split`] scheme
+//! ([`crate::coordinator::sample_paths_par`]). Gradient requests are the
+//! one workload where samples *couple* (a
+//! [`MomentMatch`](crate::losses::MomentMatch) batch loss mixes
+//! the batch), so they are never co-batched across requests — each is
+//! dispatched as its own batch. `rust/tests/serve.rs` pins all of this.
+//!
+//! # Backpressure
+//!
+//! The queue is bounded (`serve.queue_depth`): a submit against a full
+//! queue is **shed** with an explicit [`Response::Rejected`] instead of
+//! growing memory without bound. Per-request size is bounded too
+//! (`serve.max_paths`). Clients see rejection as data, not as a hang.
+//!
+//! # Knobs
+//!
+//! | key (`[serve]`)        | env                     | default | meaning |
+//! |------------------------|-------------------------|---------|---------|
+//! | `workers`              | `EES_SERVE_WORKERS`     | `EES_PARALLELISM` | dispatch worker threads |
+//! | `queue_depth`          | `EES_SERVE_QUEUE_DEPTH` | 256     | max queued requests before shedding |
+//! | `window_us`            | `EES_SERVE_WINDOW_US`   | 200     | batch-formation deadline (µs) |
+//! | `max_paths`            | `EES_SERVE_MAX_PATHS`   | 4096    | per-request path cap |
+//! | `max_batch`            | —                       | 32      | max co-batched requests per dispatch |
+//! | `coalesce`             | `EES_SERVE_COALESCE`    | true    | pack compatible requests into lane groups |
+//! | `dispatch_parallelism` | —                       | 1       | engine workers *inside* one dispatch |
+//! | `seed`                 | —                       | 42      | registry build seed (data + model init) |
+//!
+//! Config keys beat env vars beat defaults. Scenario model knobs live
+//! under `[serve.ou]` / `[serve.gbm]` with the same names and defaults as
+//! the `[train]` section.
+//!
+//! The process-global SIMD dispatch knob is applied exactly **once**, at
+//! [`Registry::from_config`], through the same
+//! [`apply_exec_knobs`](crate::train::scenarios::apply_exec_knobs) entry
+//! point the trainer uses — never per-request (`rust/tests/serve.rs` pins
+//! that in-flight traffic cannot flip it).
+
+use std::collections::BTreeMap;
+
+use crate::config::Config;
+use crate::rng::Pcg64;
+use crate::solvers::LowStorageStepper;
+use crate::train::scenarios::{apply_exec_knobs, build_gbm, build_ou, EuclideanScenario};
+
+mod engine;
+mod proto;
+mod tcp;
+
+pub use engine::Server;
+pub use proto::{parse_request, render_response};
+pub use tcp::{serve_listener, serve_tcp};
+
+/// Scenario names the serving registry builds (a subset of
+/// [`crate::train::scenarios::NAMES`]: the Euclidean workloads the
+/// lane-blocked terminal/gradient entry points serve).
+pub const NAMES: [&str; 2] = ["ou", "gbm"];
+
+/// What a request asks the engine to do with its paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Workload {
+    /// Terminal states of every path, returned flattened.
+    Simulate,
+    /// Streaming mean/variance of the mean-of-components payoff over the
+    /// terminal states (Welford, path-index order).
+    Price,
+    /// Loss + gradient-norm of the scenario's moment-matching loss over
+    /// the request's batch. Never co-batched (the loss couples samples).
+    Gradient,
+}
+
+impl Workload {
+    /// Wire name, as carried in the JSON `workload` field.
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Simulate => "simulate",
+            Workload::Price => "price",
+            Workload::Gradient => "gradient",
+        }
+    }
+
+    /// Inverse of [`Workload::name`].
+    pub fn parse(s: &str) -> Option<Workload> {
+        match s {
+            "simulate" => Some(Workload::Simulate),
+            "price" => Some(Workload::Price),
+            "gradient" => Some(Workload::Gradient),
+            _ => None,
+        }
+    }
+}
+
+/// One unit of work, as submitted by a client.
+///
+/// `seed` fully determines the request's Brownian paths (sequentially
+/// split per path index), so resubmitting the same request — to any
+/// server, at any concurrency — returns the same bits.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// Client-chosen correlation id, echoed back in the response.
+    pub id: u64,
+    /// Registry key ([`NAMES`]).
+    pub scenario: String,
+    pub workload: Workload,
+    /// Number of Monte-Carlo paths this request integrates.
+    pub paths: usize,
+    /// Root seed for this request's noise.
+    pub seed: u64,
+}
+
+/// The result of serving one [`Request`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Simulate {
+        id: u64,
+        scenario: String,
+        paths: usize,
+        dim: usize,
+        /// Row-major `paths × dim` terminal states.
+        terminals: Vec<f64>,
+    },
+    Price {
+        id: u64,
+        scenario: String,
+        paths: usize,
+        /// Mean of the per-path payoff (mean of terminal components).
+        mean: f64,
+        /// Unbiased sample variance of the payoff (0 for a single path).
+        variance: f64,
+    },
+    Gradient {
+        id: u64,
+        scenario: String,
+        paths: usize,
+        loss: f64,
+        /// ‖dL/dθ‖₂ of the flattened parameter gradient.
+        grad_l2: f64,
+        /// Parameter count (gradient length).
+        params: usize,
+        /// Peak adjoint memory (f64 words) reported by the engine.
+        peak_mem: usize,
+    },
+    /// Backpressure or validation refusal — explicit data, not a hang.
+    Rejected { id: u64, reason: String },
+}
+
+impl Response {
+    /// The echoed request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Simulate { id, .. }
+            | Response::Price { id, .. }
+            | Response::Gradient { id, .. }
+            | Response::Rejected { id, .. } => *id,
+        }
+    }
+
+    pub fn is_rejected(&self) -> bool {
+        matches!(self, Response::Rejected { .. })
+    }
+
+    /// The response as one newline-free JSON line (see [`proto`]): the
+    /// byte string the determinism suite and the serve-smoke CI `diff`
+    /// gate compare.
+    pub fn to_json_line(&self) -> String {
+        proto::render_response(self)
+    }
+}
+
+/// Serving knobs — see the module docs for the full table.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub workers: usize,
+    /// Engine parallelism *inside* one dispatch. Default 1: with many
+    /// serving workers the cross-request parallelism already saturates
+    /// cores, and nested fan-out only adds scheduling noise.
+    pub dispatch_parallelism: usize,
+    /// Lane-group width requests are packed to (`[exec] lanes`).
+    pub lanes: usize,
+    pub queue_depth: usize,
+    /// Batch-formation deadline in microseconds: a worker holding an
+    /// under-full lane group waits at most this long for co-batchable
+    /// arrivals before flushing.
+    pub window_us: u64,
+    pub max_batch: usize,
+    pub max_paths: usize,
+    pub coalesce: bool,
+}
+
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.trim().parse().ok())
+}
+
+fn env_bool(key: &str) -> Option<bool> {
+    std::env::var(key).ok().map(|v| {
+        let v = v.trim();
+        !(v == "0" || v.eq_ignore_ascii_case("false") || v.eq_ignore_ascii_case("off"))
+    })
+}
+
+impl ServeConfig {
+    /// Read `[serve]` knobs: config key beats `EES_SERVE_*` env beats
+    /// default.
+    pub fn from_config(cfg: &Config) -> Self {
+        let workers = cfg
+            .get("serve.workers")
+            .and_then(|v| v.as_usize())
+            .or_else(|| env_usize("EES_SERVE_WORKERS"))
+            .unwrap_or_else(crate::config::default_parallelism)
+            .max(1);
+        let queue_depth = cfg
+            .get("serve.queue_depth")
+            .and_then(|v| v.as_usize())
+            .or_else(|| env_usize("EES_SERVE_QUEUE_DEPTH"))
+            .unwrap_or(256)
+            .max(1);
+        let window_us = cfg
+            .get("serve.window_us")
+            .and_then(|v| v.as_usize())
+            .or_else(|| env_usize("EES_SERVE_WINDOW_US"))
+            .unwrap_or(200) as u64;
+        let max_paths = cfg
+            .get("serve.max_paths")
+            .and_then(|v| v.as_usize())
+            .or_else(|| env_usize("EES_SERVE_MAX_PATHS"))
+            .unwrap_or(4096)
+            .max(1);
+        let coalesce = cfg
+            .get("serve.coalesce")
+            .and_then(|v| v.as_bool())
+            .or_else(|| env_bool("EES_SERVE_COALESCE"))
+            .unwrap_or(true);
+        ServeConfig {
+            workers,
+            dispatch_parallelism: cfg.usize_or("serve.dispatch_parallelism", 1).max(1),
+            lanes: cfg.lanes(),
+            queue_depth,
+            window_us,
+            max_batch: cfg.usize_or("serve.max_batch", 32).max(1),
+            max_paths,
+            coalesce,
+        }
+    }
+}
+
+/// One registered scenario: the trainer-built model bundle plus the
+/// solver every serving dispatch steps it with.
+pub struct ScenarioEntry {
+    pub name: String,
+    pub sc: EuclideanScenario,
+    pub stepper: LowStorageStepper,
+}
+
+/// The model+scenario registry: every servable scenario, fully built
+/// (data targets generated, model initialised) before the first request
+/// is accepted. Keyed by [`NAMES`].
+pub struct Registry {
+    entries: BTreeMap<String, ScenarioEntry>,
+}
+
+impl Registry {
+    /// Build every scenario in [`NAMES`] from `[serve.*]` knobs and apply
+    /// the process-global execution knobs — the single
+    /// [`apply_exec_knobs`] call of the server's lifetime, before any
+    /// request can be in flight.
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        apply_exec_knobs(cfg);
+        let seed = cfg.usize_or("serve.seed", 42) as u64;
+        let mut entries = BTreeMap::new();
+        for name in NAMES {
+            let section = format!("serve.{name}");
+            // The second half of the builder pair is the per-epoch
+            // training stream; serving noise derives from per-request
+            // seeds instead, so it is dropped.
+            let (sc, _train_rng): (EuclideanScenario, Pcg64) = match name {
+                "ou" => build_ou(cfg, &section, seed)?,
+                _ => build_gbm(cfg, &section, seed)?,
+            };
+            entries.insert(
+                name.to_string(),
+                ScenarioEntry {
+                    name: name.to_string(),
+                    sc,
+                    stepper: LowStorageStepper::ees25(),
+                },
+            );
+        }
+        Ok(Registry { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ScenarioEntry> {
+        self.entries.get(name)
+    }
+
+    /// Registered names, sorted (for error messages).
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_defaults_and_keys() {
+        let cfg = Config::parse("").unwrap();
+        let sc = ServeConfig::from_config(&cfg);
+        assert!(sc.workers >= 1);
+        assert_eq!(sc.queue_depth, 256);
+        assert_eq!(sc.window_us, 200);
+        assert_eq!(sc.max_batch, 32);
+        assert_eq!(sc.max_paths, 4096);
+        assert!(sc.coalesce);
+        assert_eq!(sc.dispatch_parallelism, 1);
+
+        let cfg = Config::parse(
+            "[serve]\nworkers = 3\nqueue_depth = 7\nwindow_us = 50\nmax_batch = 4\nmax_paths = 9\ncoalesce = false\ndispatch_parallelism = 2\n",
+        )
+        .unwrap();
+        let sc = ServeConfig::from_config(&cfg);
+        assert_eq!(sc.workers, 3);
+        assert_eq!(sc.queue_depth, 7);
+        assert_eq!(sc.window_us, 50);
+        assert_eq!(sc.max_batch, 4);
+        assert_eq!(sc.max_paths, 9);
+        assert!(!sc.coalesce);
+        assert_eq!(sc.dispatch_parallelism, 2);
+    }
+
+    #[test]
+    fn registry_builds_all_names() {
+        let cfg = Config::parse(
+            "[serve]\nseed = 5\n[serve.ou]\nsteps = 8\ndata_samples = 32\n[serve.gbm]\ndim = 2\nsteps = 8\nhidden = 4\ndata_samples = 4\ndata_fine = 32\n",
+        )
+        .unwrap();
+        let reg = Registry::from_config(&cfg).unwrap();
+        assert_eq!(reg.names(), vec!["gbm", "ou"]);
+        let ou = reg.get("ou").unwrap();
+        assert_eq!(ou.sc.dim, 1);
+        assert_eq!(ou.sc.steps, 8);
+        let gbm = reg.get("gbm").unwrap();
+        assert_eq!(gbm.sc.dim, 2);
+        assert!(reg.get("kuramoto").is_none());
+    }
+
+    #[test]
+    fn workload_roundtrip() {
+        for w in [Workload::Simulate, Workload::Price, Workload::Gradient] {
+            assert_eq!(Workload::parse(w.name()), Some(w));
+        }
+        assert_eq!(Workload::parse("solve"), None);
+    }
+}

@@ -1,0 +1,300 @@
+//! The newline-delimited JSON wire protocol: one flat request object per
+//! line in, one response object per line out.
+//!
+//! Requests are hand-parsed (the offline policy vendors no JSON crate)
+//! against a closed schema — unknown fields are an error, so a typo'd
+//! knob fails loudly instead of silently defaulting:
+//!
+//! ```json
+//! {"id": 7, "scenario": "ou", "workload": "price", "paths": 32, "seed": 99}
+//! ```
+//!
+//! Only `scenario` is required; `id`/`seed` default to 0, `paths` to 1,
+//! `workload` to `simulate`.
+//!
+//! Responses render with a **fixed key order** and the crate's canonical
+//! float text (`{:e}` — Rust's shortest round-trip-exact form; non-finite
+//! renders as `null`, the risk-ledger idiom), so equal response values
+//! produce equal bytes: the serve determinism suite and the serve-smoke
+//! CI gate compare these lines with plain string/`diff` equality.
+
+use super::{Request, Response, Workload};
+
+/// Parse one request line. Returns a human-readable reason on any
+/// malformed input; the TCP front-end folds that into a
+/// [`Response::Rejected`].
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let mut s = Scan {
+        b: line.as_bytes(),
+        i: 0,
+    };
+    let mut req = Request {
+        id: 0,
+        scenario: String::new(),
+        workload: Workload::Simulate,
+        paths: 1,
+        seed: 0,
+    };
+    let mut have_scenario = false;
+    s.ws();
+    s.expect(b'{')?;
+    s.ws();
+    if !s.eat(b'}') {
+        loop {
+            s.ws();
+            let key = s.string()?;
+            s.ws();
+            s.expect(b':')?;
+            s.ws();
+            match key.as_str() {
+                "id" => req.id = s.u64()?,
+                "seed" => req.seed = s.u64()?,
+                "paths" => req.paths = s.u64()? as usize,
+                "scenario" => {
+                    req.scenario = s.string()?;
+                    have_scenario = true;
+                }
+                "workload" => {
+                    let w = s.string()?;
+                    req.workload =
+                        Workload::parse(&w).ok_or_else(|| format!("unknown workload '{w}'"))?;
+                }
+                other => return Err(format!("unknown field '{other}'")),
+            }
+            s.ws();
+            if s.eat(b',') {
+                continue;
+            }
+            s.expect(b'}')?;
+            break;
+        }
+    }
+    s.ws();
+    if s.i != s.b.len() {
+        return Err(format!("trailing bytes after request object at byte {}", s.i));
+    }
+    if !have_scenario {
+        return Err("missing required field 'scenario'".to_string());
+    }
+    Ok(req)
+}
+
+/// Render one response line (no trailing newline). Key order is fixed per
+/// variant — these bytes are the determinism contract's unit of
+/// comparison.
+pub fn render_response(r: &Response) -> String {
+    match r {
+        Response::Simulate {
+            id,
+            scenario,
+            paths,
+            dim,
+            terminals,
+        } => {
+            let vals: Vec<String> = terminals.iter().map(|&v| jnum(v)).collect();
+            format!(
+                "{{\"id\":{id},\"status\":\"ok\",\"workload\":\"simulate\",\"scenario\":\"{}\",\"paths\":{paths},\"dim\":{dim},\"terminals\":[{}]}}",
+                escape(scenario),
+                vals.join(",")
+            )
+        }
+        Response::Price {
+            id,
+            scenario,
+            paths,
+            mean,
+            variance,
+        } => format!(
+            "{{\"id\":{id},\"status\":\"ok\",\"workload\":\"price\",\"scenario\":\"{}\",\"paths\":{paths},\"mean\":{},\"variance\":{}}}",
+            escape(scenario),
+            jnum(*mean),
+            jnum(*variance)
+        ),
+        Response::Gradient {
+            id,
+            scenario,
+            paths,
+            loss,
+            grad_l2,
+            params,
+            peak_mem,
+        } => format!(
+            "{{\"id\":{id},\"status\":\"ok\",\"workload\":\"gradient\",\"scenario\":\"{}\",\"paths\":{paths},\"loss\":{},\"grad_l2\":{},\"params\":{params},\"peak_mem\":{peak_mem}}}",
+            escape(scenario),
+            jnum(*loss),
+            jnum(*grad_l2)
+        ),
+        Response::Rejected { id, reason } => format!(
+            "{{\"id\":{id},\"status\":\"rejected\",\"reason\":\"{}\"}}",
+            escape(reason)
+        ),
+    }
+}
+
+/// Canonical float text: `{:e}` (shortest round-trip-exact); non-finite
+/// values render as `null` — the risk-ledger idiom.
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:e}")
+    } else {
+        "null".into()
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A byte cursor over one request line.
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Scan<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> bool {
+        if self.i < self.b.len() && self.b[self.i] == c {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.eat(c) {
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out: Vec<u8> = Vec::new();
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            self.i += 1;
+            match c {
+                b'"' => {
+                    return String::from_utf8(out).map_err(|_| "invalid UTF-8 in string".into())
+                }
+                b'\\' => {
+                    if self.i >= self.b.len() {
+                        break;
+                    }
+                    let e = self.b[self.i];
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        _ => return Err(format!("unsupported escape '\\{}'", e as char)),
+                    }
+                }
+                _ => out.push(c),
+            }
+        }
+        Err("unterminated string".to_string())
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        let start = self.i;
+        while self.i < self.b.len() && self.b[self.i].is_ascii_digit() {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(format!("expected unsigned integer at byte {start}"));
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .expect("digits are valid UTF-8")
+            .parse()
+            .map_err(|e| format!("bad integer: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_request() {
+        let r = parse_request(
+            r#"{"id": 7, "scenario": "ou", "workload": "price", "paths": 32, "seed": 99}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 7);
+        assert_eq!(r.scenario, "ou");
+        assert_eq!(r.workload, Workload::Price);
+        assert_eq!(r.paths, 32);
+        assert_eq!(r.seed, 99);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let r = parse_request(r#"{"scenario":"gbm"}"#).unwrap();
+        assert_eq!(r.id, 0);
+        assert_eq!(r.seed, 0);
+        assert_eq!(r.paths, 1);
+        assert_eq!(r.workload, Workload::Simulate);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_request("").is_err());
+        assert!(parse_request("{}").is_err()); // scenario required
+        assert!(parse_request(r#"{"scenario":"ou","turbo":1}"#).is_err()); // closed schema
+        assert!(parse_request(r#"{"scenario":"ou","workload":"warp"}"#).is_err());
+        assert!(parse_request(r#"{"scenario":"ou"} extra"#).is_err());
+        assert!(parse_request(r#"{"scenario":"ou","paths":-3}"#).is_err());
+        assert!(parse_request(r#"{"scenario":"ou""#).is_err());
+    }
+
+    #[test]
+    fn response_lines_are_canonical() {
+        let line = render_response(&Response::Price {
+            id: 3,
+            scenario: "ou".into(),
+            paths: 2,
+            mean: 0.5,
+            variance: 0.25,
+        });
+        assert_eq!(
+            line,
+            "{\"id\":3,\"status\":\"ok\",\"workload\":\"price\",\"scenario\":\"ou\",\"paths\":2,\"mean\":5e-1,\"variance\":2.5e-1}"
+        );
+        let nan = render_response(&Response::Price {
+            id: 0,
+            scenario: "ou".into(),
+            paths: 1,
+            mean: f64::NAN,
+            variance: 0.0,
+        });
+        assert!(nan.contains("\"mean\":null"));
+        let rej = render_response(&Response::Rejected {
+            id: 9,
+            reason: "bad \"quote\"".into(),
+        });
+        assert_eq!(
+            rej,
+            "{\"id\":9,\"status\":\"rejected\",\"reason\":\"bad \\\"quote\\\"\"}"
+        );
+    }
+}

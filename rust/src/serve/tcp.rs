@@ -1,0 +1,60 @@
+//! The TCP front-end: newline-delimited JSON over [`std::net::TcpListener`].
+//!
+//! One thread per connection, one synchronous request in flight per
+//! connection — clients are closed-loop (a client wanting concurrency
+//! opens several connections, which is exactly what feeds the coalescing
+//! queue). A malformed line answers with a `status:"rejected"` response
+//! and the connection stays usable; EOF or an I/O error ends the
+//! connection thread.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use super::{parse_request, Response, Server};
+
+/// Bind `addr` and serve forever (the accept loop only returns on a
+/// listener error).
+pub fn serve_tcp(server: Arc<Server>, addr: &str) -> crate::Result<()> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| crate::format_err!("cannot bind {addr}: {e}"))?;
+    serve_listener(server, listener)
+}
+
+/// Accept loop over an already-bound listener (tests bind `127.0.0.1:0`
+/// themselves to get a free port).
+pub fn serve_listener(server: Arc<Server>, listener: TcpListener) -> crate::Result<()> {
+    for conn in listener.incoming() {
+        let stream = conn.map_err(|e| crate::format_err!("accept failed: {e}"))?;
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || handle_conn(&server, stream));
+    }
+    Ok(())
+}
+
+fn handle_conn(server: &Server, stream: TcpStream) {
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => return,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match parse_request(&line) {
+            Ok(req) => server.call(req),
+            Err(reason) => Response::Rejected {
+                id: 0,
+                reason: format!("bad request: {reason}"),
+            },
+        };
+        if writeln!(writer, "{}", resp.to_json_line()).is_err() {
+            return;
+        }
+    }
+}

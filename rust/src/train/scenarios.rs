@@ -55,12 +55,7 @@ pub struct ScenarioRun {
 /// `[train]` loop configuration.
 pub fn run_scenario(cfg: &Config) -> crate::Result<ScenarioRun> {
     let tc = TrainConfig::from_config(cfg)?;
-    // The SIMD kernel dispatch knob is process-global (the kernels it
-    // steers are free functions), so it is applied exactly once here at
-    // scenario setup — deliberately NOT hidden inside a per-problem
-    // builder, where the last-constructed problem would silently flip
-    // dispatch for every other problem in the process.
-    crate::linalg::set_simd(cfg.simd());
+    apply_exec_knobs(cfg);
     let name = cfg.str_or("train.scenario", "ou").to_string();
     let log = match name.as_str() {
         "ou" => run_ou(cfg, &tc)?,
@@ -79,6 +74,21 @@ pub fn run_scenario(cfg: &Config) -> crate::Result<ScenarioRun> {
         log,
         summary,
     })
+}
+
+/// Apply the process-global execution knobs for an engine front-end.
+///
+/// The SIMD kernel dispatch knob is process-global (the kernels it steers
+/// are free functions), so every long-running entry point — the scenario
+/// trainer here, the serving registry (`crate::serve`) at startup —
+/// funnels through this one call, exactly once per run. It is
+/// deliberately NOT hidden inside a per-problem builder or a per-request
+/// dispatch path, where the last caller would silently flip dispatch for
+/// every other problem or in-flight request in the process
+/// (`rust/tests/serve.rs` pins that serving never touches the knob after
+/// startup).
+pub fn apply_exec_knobs(cfg: &Config) {
+    crate::linalg::set_simd(cfg.simd());
 }
 
 fn parse_adjoint(name: &str) -> crate::Result<AdjointMethod> {
@@ -148,22 +158,54 @@ pub fn obs_grid(steps: usize, data_fine: usize) -> ObsGrid {
     }
 }
 
-/// High-volatility OU moment matching (the Table-1 workload) with the
-/// low-storage EES(2,5) solver.
-fn run_ou(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
-    let steps = cfg.usize_or("train.steps", 16).max(4);
-    let t_end = cfg.f64_or("train.horizon", 2.0);
+/// A fully wired Euclidean scenario: model, loss, observation grid and
+/// integration grid — everything in `run_ou`/`run_gbm` except the training
+/// loop. Shared between the trainer and the serving registry
+/// (`crate::serve`), which dispatches the same bundle through the
+/// coordinator directly instead of wrapping it in a `Trainer`.
+pub struct EuclideanScenario {
+    pub model: NeuralSde,
+    /// Solver-grid observation indices the loss reads.
+    pub obs: Vec<usize>,
+    pub loss: MomentMatch,
+    /// Solver steps over the horizon (step size [`Self::h`]).
+    pub steps: usize,
+    pub h: f64,
+    /// State dimension (== driver dimension for these models).
+    pub dim: usize,
+    /// Shared initial state of every sample.
+    pub y0: Vec<f64>,
+    pub adjoint: AdjointMethod,
+}
+
+/// Build the OU scenario bundle (the Table-1 workload), reading model
+/// knobs from `{section}.*` — `"train"` for the trainer, `"serve.ou"` for
+/// the serving registry — with identical defaults either way.
+///
+/// Seed policy (unchanged from the historical `run_ou`): stream 0
+/// generates the data targets, stream 1 initialises the model, and the
+/// returned generator is stream 2, the per-epoch training noise — the
+/// trainer hands it to the loop, the serving registry drops it (request
+/// noise derives from per-request seeds instead).
+pub fn build_ou(
+    cfg: &Config,
+    section: &str,
+    seed: u64,
+) -> crate::Result<(EuclideanScenario, Pcg64)> {
+    let key = |k: &str| format!("{section}.{k}");
+    let steps = cfg.usize_or(&key("steps"), 16).max(4);
+    let t_end = cfg.f64_or(&key("horizon"), 2.0);
     let h = t_end / steps as f64;
-    let hidden = cfg.usize_or("train.hidden", 8);
-    let depth = cfg.usize_or("train.depth", 1);
-    let data_samples = cfg.usize_or("train.data_samples", 4000);
-    let adjoint = parse_adjoint(cfg.str_or("train.adjoint", "reversible"))?;
+    let hidden = cfg.usize_or(&key("hidden"), 8);
+    let depth = cfg.usize_or(&key("depth"), 1);
+    let data_samples = cfg.usize_or(&key("data_samples"), 4000);
+    let adjoint = parse_adjoint(cfg.str_or(&key("adjoint"), "reversible"))?;
     let obs = quarter_obs(steps);
 
-    let mut root = Pcg64::new(tc.seed);
+    let mut root = Pcg64::new(seed);
     let mut data_rng = root.split(0);
     let mut model_rng = root.split(1);
-    let mut train_rng = root.split(2);
+    let train_rng = root.split(2);
 
     let (mean_all, m2_all) =
         OuParams::default().moment_targets(0.0, steps, h, data_samples, &mut data_rng);
@@ -172,37 +214,45 @@ fn run_ou(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
         target_m2: obs.iter().map(|&i| m2_all[i]).collect(),
     };
     let model = NeuralSde::lsde(1, hidden, depth, true, &mut model_rng);
-    let st = LowStorageStepper::ees25();
-    let (batch, par) = (tc.batch, tc.parallelism);
-    let sampler = move |rng: &mut Pcg64| {
-        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![0.0]).collect();
-        let paths = sample_paths_par(rng, batch, 1, steps, h, par);
-        (y0s, paths)
-    };
-    let mut problem = EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss)
-        .with_lanes(tc.lanes);
-    Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
+    Ok((
+        EuclideanScenario {
+            model,
+            obs,
+            loss,
+            steps,
+            h,
+            dim: 1,
+            y0: vec![0.0],
+            adjoint,
+        },
+        train_rng,
+    ))
 }
 
-/// Stiff high-dimensional GBM moment matching (the Table-7 workload) with
-/// the low-storage EES(2,5) solver — the scenario where baseline schemes
-/// diverge, so pair it with `stop_on_divergence = true` to probe that.
-fn run_gbm(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
-    let d = cfg.usize_or("train.dim", 8);
-    let steps = cfg.usize_or("train.steps", 20).max(4);
+/// Build the stiff high-dimensional GBM scenario bundle (the Table-7
+/// workload) from `{section}.*` knobs — see [`build_ou`] for the section
+/// and seed conventions.
+pub fn build_gbm(
+    cfg: &Config,
+    section: &str,
+    seed: u64,
+) -> crate::Result<(EuclideanScenario, Pcg64)> {
+    let key = |k: &str| format!("{section}.{k}");
+    let d = cfg.usize_or(&key("dim"), 8);
+    let steps = cfg.usize_or(&key("steps"), 20).max(4);
     let h = 1.0 / steps as f64;
-    let hidden = cfg.usize_or("train.hidden", 16);
-    let data_samples = cfg.usize_or("train.data_samples", 128);
-    let fine = cfg.usize_or("train.data_fine", 512);
-    let adjoint = parse_adjoint(cfg.str_or("train.adjoint", "reversible"))?;
+    let hidden = cfg.usize_or(&key("hidden"), 16);
+    let data_samples = cfg.usize_or(&key("data_samples"), 128);
+    let fine = cfg.usize_or(&key("data_fine"), 512);
+    let adjoint = parse_adjoint(cfg.str_or(&key("adjoint"), "reversible"))?;
     let grid = obs_grid(steps, fine);
     let obs = grid.model.clone();
     let n_obs = obs.len();
 
-    let mut root = Pcg64::new(tc.seed);
+    let mut root = Pcg64::new(seed);
     let mut data_rng = root.split(0);
     let mut model_rng = root.split(1);
-    let mut train_rng = root.split(2);
+    let train_rng = root.split(2);
 
     let gbm = StiffGbm::new(d, 0.1, 20.0, &mut data_rng);
     let y0 = vec![1.0; d];
@@ -222,16 +272,65 @@ fn run_gbm(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
     }
     let loss = MomentMatch::from_data(&data, data_samples, n_obs, d);
     let model = NeuralSde::lsde(d, hidden, 2, false, &mut model_rng);
+    Ok((
+        EuclideanScenario {
+            model,
+            obs,
+            loss,
+            steps,
+            h,
+            dim: d,
+            y0,
+            adjoint,
+        },
+        train_rng,
+    ))
+}
+
+/// High-volatility OU moment matching (the Table-1 workload) with the
+/// low-storage EES(2,5) solver.
+fn run_ou(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
+    let (sc, mut train_rng) = build_ou(cfg, "train", tc.seed)?;
+    run_euclidean(sc, tc, &mut train_rng)
+}
+
+/// Stiff high-dimensional GBM moment matching (the Table-7 workload) with
+/// the low-storage EES(2,5) solver — the scenario where baseline schemes
+/// diverge, so pair it with `stop_on_divergence = true` to probe that.
+fn run_gbm(cfg: &Config, tc: &TrainConfig) -> crate::Result<TrainLog> {
+    let (sc, mut train_rng) = build_gbm(cfg, "train", tc.seed)?;
+    run_euclidean(sc, tc, &mut train_rng)
+}
+
+/// Wrap a built Euclidean scenario bundle in the training loop — the
+/// tail `run_ou`/`run_gbm` shared verbatim (bitwise-preserving: sampler
+/// RNG call order, batch order and lane width are exactly the historical
+/// inlined code's).
+fn run_euclidean(
+    sc: EuclideanScenario,
+    tc: &TrainConfig,
+    train_rng: &mut Pcg64,
+) -> crate::Result<TrainLog> {
+    let EuclideanScenario {
+        model,
+        obs,
+        loss,
+        steps,
+        h,
+        dim,
+        y0,
+        adjoint,
+    } = sc;
     let st = LowStorageStepper::ees25();
     let (batch, par) = (tc.batch, tc.parallelism);
     let sampler = move |rng: &mut Pcg64| {
-        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| vec![1.0; d]).collect();
-        let paths = sample_paths_par(rng, batch, d, steps, h, par);
+        let y0s: Vec<Vec<f64>> = (0..batch).map(|_| y0.clone()).collect();
+        let paths = sample_paths_par(rng, batch, dim, steps, h, par);
         (y0s, paths)
     };
-    let mut problem = EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss)
-        .with_lanes(tc.lanes);
-    Ok(Trainer::new(tc.clone()).run(&mut problem, &mut train_rng))
+    let mut problem =
+        EuclideanProblem::new(model, &st, adjoint, sampler, obs, &loss).with_lanes(tc.lanes);
+    Ok(Trainer::new(tc.clone()).run(&mut problem, train_rng))
 }
 
 /// Stochastic Kuramoto on T𝕋ᴺ with CF-EES(2,5) and the wrapped energy

@@ -365,6 +365,72 @@ fn all_nine_solvers_zero_allocs_per_step_after_warmup() {
     // A warm streaming risk sweep's marginal allocations are constant in
     // the number of paths already folded — the O(chunk) memory contract.
     risk_sweep_allocs_constant_per_chunk();
+
+    // A warm serving worker's marginal allocations are constant per
+    // request window — the per-worker WorkspacePool keeps engine scratch
+    // off the steady-state dispatch path.
+    serve_steady_state_allocs_constant();
+}
+
+/// The serving layer's steady-state allocation contract: once the worker's
+/// [`ees::memory::WorkspacePool`] and the queue structures are warm, an
+/// identical window of requests allocates exactly the same amount every
+/// time — no per-request engine scratch, no growth with requests served.
+/// (The absolute count is not zero: each request legitimately allocates
+/// its response channel, its Brownian paths and its response buffers; the
+/// contract is that NOTHING accumulates.) One worker and coalescing off
+/// keep the allocation stream deterministic for the global counter.
+fn serve_steady_state_allocs_constant() {
+    use ees::config::Config;
+    use ees::serve::{Registry, Request, ServeConfig, Server, Workload};
+
+    let cfg = Config::parse(
+        "[serve]\nseed = 9\n[serve.ou]\nsteps = 8\ndata_samples = 16\n",
+    )
+    .unwrap();
+    let registry = Registry::from_config(&cfg).unwrap();
+    let server = Server::start(
+        registry,
+        ServeConfig {
+            workers: 1,
+            dispatch_parallelism: 1,
+            lanes: 4,
+            queue_depth: 64,
+            window_us: 0,
+            max_batch: 8,
+            max_paths: 64,
+            coalesce: false,
+        },
+    );
+    // One identical request window, replayed verbatim: same seeds → same
+    // responses → same allocation stream.
+    let window = |server: &Server| {
+        for (k, wl) in [Workload::Simulate, Workload::Price, Workload::Gradient]
+            .iter()
+            .enumerate()
+        {
+            let r = server.call(Request {
+                id: k as u64,
+                scenario: "ou".to_string(),
+                workload: *wl,
+                paths: 3,
+                seed: 77 + k as u64,
+            });
+            assert!(!r.is_rejected());
+        }
+    };
+    // Warm-up: two windows populate the worker's workspace pool and size
+    // every recycled buffer.
+    window(&server);
+    window(&server);
+    let first = measure(|| window(&server));
+    let second = measure(|| window(&server));
+    assert_eq!(
+        second, first,
+        "serving marginal allocations drifted between identical warm \
+         windows: {first} vs {second} (per-request scratch is leaking \
+         past the workspace pool)"
+    );
 }
 
 /// The streaming risk engine's memory contract: the estimator bundle is

@@ -1,0 +1,354 @@
+//! Conformance suite for the serving layer (`ees::serve`).
+//!
+//! The load-bearing contract: a response's bytes are a **pure function of
+//! the request** — identical whether served solo or co-batched with
+//! arbitrary neighbours, at any arrival order, worker count, lane width,
+//! and batch-window deadline. Everything else (backpressure, validation,
+//! the TCP front-end, the SIMD-knob discipline) rides along.
+
+use std::sync::Arc;
+
+use ees::config::Config;
+use ees::serve::{Registry, Request, Response, ServeConfig, Server, Workload};
+
+/// Small scenario knobs so registry builds stay fast; seed is fixed so
+/// every server in this suite dispatches against identical models.
+const CFG_TEXT: &str = "\
+[serve]
+seed = 9
+[serve.ou]
+steps = 8
+data_samples = 64
+[serve.gbm]
+dim = 3
+steps = 8
+hidden = 8
+data_samples = 8
+data_fine = 64
+";
+
+fn registry() -> Arc<Registry> {
+    let cfg = Config::parse(CFG_TEXT).unwrap();
+    Arc::new(Registry::from_config(&cfg).unwrap())
+}
+
+fn sc(workers: usize, lanes: usize, window_us: u64, coalesce: bool) -> ServeConfig {
+    ServeConfig {
+        workers,
+        dispatch_parallelism: 1,
+        lanes,
+        queue_depth: 1024,
+        window_us,
+        max_batch: 32,
+        max_paths: 4096,
+        coalesce,
+    }
+}
+
+fn req(id: u64, scenario: &str, workload: Workload, paths: usize, seed: u64) -> Request {
+    Request {
+        id,
+        scenario: scenario.to_string(),
+        workload,
+        paths,
+        seed,
+    }
+}
+
+/// A mixed workload batch: both scenarios, all three workloads, varied
+/// path counts and seeds.
+fn mixed_requests() -> Vec<Request> {
+    vec![
+        req(0, "ou", Workload::Simulate, 3, 100),
+        req(1, "ou", Workload::Price, 5, 101),
+        req(2, "gbm", Workload::Simulate, 2, 102),
+        req(3, "ou", Workload::Simulate, 1, 103),
+        req(4, "gbm", Workload::Price, 4, 104),
+        req(5, "ou", Workload::Gradient, 2, 105),
+        req(6, "gbm", Workload::Simulate, 5, 106),
+        req(7, "ou", Workload::Price, 2, 107),
+        req(8, "gbm", Workload::Gradient, 3, 108),
+        req(9, "ou", Workload::Simulate, 4, 109),
+    ]
+}
+
+/// Serve `reqs` in the given submission order, collecting responses by
+/// request id as canonical JSON lines.
+fn serve_all(server: &Server, reqs: &[Request]) -> Vec<String> {
+    let rxs: Vec<_> = reqs.iter().map(|r| (r.id, server.submit(r.clone()))).collect();
+    let mut lines: Vec<(u64, String)> = rxs
+        .into_iter()
+        .map(|(id, rx)| (id, rx.recv().unwrap().to_json_line()))
+        .collect();
+    lines.sort_by_key(|(id, _)| *id);
+    lines.into_iter().map(|(_, l)| l).collect()
+}
+
+/// The determinism pin: responses are bitwise-identical across every
+/// server shape (worker count × lane width × window deadline × coalescing
+/// on/off) and every arrival order.
+#[test]
+fn responses_invariant_under_server_shape_and_arrival_order() {
+    let registry = registry();
+    let reqs = mixed_requests();
+
+    // Reference: solo dispatch — one worker, lane width 1, no coalescing.
+    let reference = {
+        let server = Server::start_shared(Arc::clone(&registry), sc(1, 1, 0, false));
+        serve_all(&server, &reqs)
+    };
+    for line in &reference {
+        assert!(line.contains("\"status\":\"ok\""), "reference failed: {line}");
+    }
+
+    let shapes = [
+        (1usize, 8usize, 2000u64, true),
+        (4, 8, 2000, true),
+        (2, 2, 0, true),
+        (4, 1, 500, true),
+        (3, 8, 2000, false),
+    ];
+    let orders: Vec<Vec<usize>> = vec![
+        (0..reqs.len()).collect(),
+        (0..reqs.len()).rev().collect(),
+        {
+            // Fixed pseudo-shuffle, deterministic across runs.
+            let mut idx: Vec<usize> = (0..reqs.len()).collect();
+            idx.sort_by_key(|&i| (i * 7919) % 13);
+            idx
+        },
+    ];
+    for (workers, lanes, window, coalesce) in shapes {
+        let server =
+            Server::start_shared(Arc::clone(&registry), sc(workers, lanes, window, coalesce));
+        for order in &orders {
+            let shuffled: Vec<Request> = order.iter().map(|&i| reqs[i].clone()).collect();
+            let got = serve_all(&server, &shuffled);
+            assert_eq!(
+                got, reference,
+                "response bytes changed at workers={workers} lanes={lanes} \
+                 window={window}us coalesce={coalesce} order={order:?}"
+            );
+        }
+    }
+}
+
+/// Co-batching with arbitrary neighbours is bitwise-invisible: a target
+/// request interleaved among 30 others on a wide coalescing server
+/// returns the same bytes as on an idle solo server.
+#[test]
+fn co_batched_response_matches_solo() {
+    let registry = registry();
+    let targets = [
+        req(1000, "ou", Workload::Simulate, 3, 555),
+        req(1001, "gbm", Workload::Price, 4, 556),
+        req(1002, "ou", Workload::Gradient, 2, 557),
+    ];
+    let solo: Vec<String> = {
+        let server = Server::start_shared(Arc::clone(&registry), sc(1, 1, 0, false));
+        targets
+            .iter()
+            .map(|r| server.call(r.clone()).to_json_line())
+            .collect()
+    };
+    let server = Server::start_shared(Arc::clone(&registry), sc(4, 8, 2000, true));
+    // Noise traffic: same scenarios/workloads as the targets so they CAN
+    // be co-batched, different seeds/sizes so neighbour leakage would show.
+    let mut all = Vec::new();
+    for k in 0..30u64 {
+        let scen = if k % 2 == 0 { "ou" } else { "gbm" };
+        let wl = if k % 3 == 0 {
+            Workload::Price
+        } else {
+            Workload::Simulate
+        };
+        all.push(req(k, scen, wl, 1 + (k as usize % 5), 7000 + k));
+        if k % 10 == 3 {
+            all.push(targets[(k as usize / 10) % 3].clone());
+        }
+    }
+    for t in &targets {
+        if !all.iter().any(|r| r.id == t.id) {
+            all.push(t.clone());
+        }
+    }
+    let rxs: Vec<_> = all.iter().map(|r| (r.id, server.submit(r.clone()))).collect();
+    let mut got: Vec<(u64, String)> = rxs
+        .into_iter()
+        .map(|(id, rx)| (id, rx.recv().unwrap().to_json_line()))
+        .collect();
+    got.sort_by_key(|(id, _)| *id);
+    got.dedup();
+    for (i, t) in targets.iter().enumerate() {
+        let line = &got.iter().find(|(id, _)| *id == t.id).unwrap().1;
+        assert_eq!(line, &solo[i], "co-batched bytes differ for target {}", t.id);
+    }
+}
+
+/// Ground truth: a simulate response reproduces a direct engine call with
+/// the same per-request seed scheme — the server adds no bits of its own.
+#[test]
+fn simulate_matches_direct_engine_dispatch() {
+    use ees::coordinator::{batch_terminal_lanes_par, sample_paths_par};
+    use ees::rng::Pcg64;
+    use ees::solvers::LowStorageStepper;
+    use ees::train::scenarios::build_ou;
+
+    let cfg = Config::parse(CFG_TEXT).unwrap();
+    let registry = Arc::new(Registry::from_config(&cfg).unwrap());
+    let server = Server::start_shared(Arc::clone(&registry), sc(2, 8, 1000, true));
+    let r = req(42, "ou", Workload::Simulate, 4, 31337);
+    let resp = server.call(r);
+    let got = match resp {
+        Response::Simulate { terminals, dim, .. } => {
+            assert_eq!(dim, 1);
+            terminals
+        }
+        other => panic!("expected simulate response, got {other:?}"),
+    };
+
+    // Rebuild the same scenario (same section, same seed) and dispatch by
+    // hand: Pcg64::new(request seed) → sequential split per path.
+    let (sc_ou, _) = build_ou(&cfg, "serve.ou", 9).unwrap();
+    let mut root = Pcg64::new(31337);
+    let paths = sample_paths_par(&mut root, 4, sc_ou.dim, sc_ou.steps, sc_ou.h, 1);
+    let y0s: Vec<Vec<f64>> = (0..4).map(|_| sc_ou.y0.clone()).collect();
+    let st = LowStorageStepper::ees25();
+    let direct = batch_terminal_lanes_par(&st, &sc_ou.model, 0.0, &y0s, &paths, 1, 1);
+    let want: Vec<f64> = direct.into_iter().flatten().collect();
+    assert_eq!(got.len(), want.len());
+    for (a, b) in got.iter().zip(want.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "server bits differ from direct engine");
+    }
+}
+
+/// Validation refusals are explicit, immediate data.
+#[test]
+fn invalid_requests_are_rejected() {
+    let server = Server::start_shared(registry(), sc(1, 4, 100, true));
+    let r = server.call(req(1, "kuramoto", Workload::Simulate, 1, 0));
+    match &r {
+        Response::Rejected { reason, .. } => {
+            assert!(reason.contains("unknown scenario"), "{reason}");
+            assert!(reason.contains("gbm") && reason.contains("ou"), "{reason}");
+        }
+        other => panic!("expected rejection, got {other:?}"),
+    }
+    let r = server.call(req(2, "ou", Workload::Simulate, 0, 0));
+    assert!(r.is_rejected());
+    let r = server.call(req(3, "ou", Workload::Simulate, 5000, 0));
+    match &r {
+        Response::Rejected { reason, .. } => assert!(reason.contains("max_paths"), "{reason}"),
+        other => panic!("expected rejection, got {other:?}"),
+    }
+}
+
+/// Backpressure: submits beyond the queue depth shed immediately with an
+/// explicit rejection instead of queueing unboundedly. Workers = 0 keeps
+/// everything queued so the depth is controlled exactly.
+#[test]
+fn full_queue_sheds_with_explicit_rejection() {
+    let server = Server::start_shared(registry(), sc(0, 4, 100, true));
+    let rx1 = server.submit(req(1, "ou", Workload::Simulate, 1, 1));
+    let rx2 = server.submit(req(2, "ou", Workload::Simulate, 1, 2));
+    let shed = {
+        let mut cfg = sc(0, 4, 100, true);
+        cfg.queue_depth = 2;
+        let server = Server::start_shared(registry(), cfg);
+        let _a = server.submit(req(1, "ou", Workload::Simulate, 1, 1));
+        let _b = server.submit(req(2, "ou", Workload::Simulate, 1, 2));
+        let rx = server.submit(req(3, "ou", Workload::Simulate, 1, 3));
+        rx.recv().unwrap()
+    };
+    match &shed {
+        Response::Rejected { id, reason } => {
+            assert_eq!(*id, 3);
+            assert!(reason.contains("shed"), "{reason}");
+        }
+        other => panic!("expected shed, got {other:?}"),
+    }
+    // The zero-worker server's queued jobs die with the queue at drop:
+    // their channels disconnect, so receivers error out instead of
+    // hanging forever.
+    drop(server);
+    assert!(rx1.recv().is_err());
+    assert!(rx2.recv().is_err());
+}
+
+/// The TCP front-end round-trips the same bytes the in-process path
+/// produces, and a malformed line rejects without poisoning the
+/// connection.
+#[test]
+fn tcp_roundtrip_matches_in_process() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    let registry = registry();
+    let server = Arc::new(Server::start_shared(Arc::clone(&registry), sc(2, 8, 500, true)));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            let _ = ees::serve::serve_listener(server, listener);
+        });
+    }
+
+    let want = server
+        .call(req(7, "ou", Workload::Price, 3, 99))
+        .to_json_line();
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+
+    // Malformed line: rejected, connection stays usable.
+    writeln!(writer, "{{\"scenario\":\"ou\",\"bogus\":1}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"status\":\"rejected\""), "{line}");
+    assert!(line.contains("bad request"), "{line}");
+
+    // Good line: bitwise the in-process bytes.
+    line.clear();
+    writeln!(
+        writer,
+        "{{\"id\":7,\"scenario\":\"ou\",\"workload\":\"price\",\"paths\":3,\"seed\":99}}"
+    )
+    .unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), want);
+}
+
+/// Satellite 6: the process-global SIMD kernel knob is applied once at
+/// registry build and never by request dispatch — concurrent traffic
+/// cannot flip it mid-flight.
+#[test]
+fn concurrent_requests_cannot_flip_simd_knob() {
+    let registry = registry(); // applies the knob (once) via apply_exec_knobs
+    let before = ees::linalg::simd_enabled();
+    let server = Server::start_shared(registry, sc(4, 8, 200, true));
+    std::thread::scope(|scope| {
+        for c in 0..4u64 {
+            let server = &server;
+            scope.spawn(move || {
+                for k in 0..8u64 {
+                    let scen = if k % 2 == 0 { "ou" } else { "gbm" };
+                    let wl = match k % 3 {
+                        0 => Workload::Simulate,
+                        1 => Workload::Price,
+                        _ => Workload::Gradient,
+                    };
+                    let r = server.call(req(c * 100 + k, scen, wl, 2, 40 + k));
+                    assert!(!r.is_rejected());
+                    assert_eq!(
+                        ees::linalg::simd_enabled(),
+                        before,
+                        "request dispatch flipped the process-global SIMD knob"
+                    );
+                }
+            });
+        }
+    });
+    assert_eq!(ees::linalg::simd_enabled(), before);
+}

@@ -1002,6 +1002,9 @@ fn main() {
             max_batch: 32,
             max_paths: 64,
             coalesce,
+            read_timeout_ms: 0,
+            max_line_bytes: 64 * 1024,
+            fault: ees::fault::FaultPlan::inert(),
         };
         let on = Server::start_shared(Arc::clone(&registry), mk(true));
         let off = Server::start_shared(Arc::clone(&registry), mk(false));
@@ -1046,6 +1049,60 @@ fn main() {
                 baseline_allocs_per_op: base_allocs,
             });
         }
+    }
+
+    // --- fault-layer inertness arm ----------------------------------------
+    // Informational: the cost of the always-compiled injection points on an
+    // inert plan. Workspace column runs a d=16 dot-product loop with a
+    // panic/io/delay point triple per op; baseline runs the bare loop. An
+    // inert point is one `Option` check, so `speedup` should read ~1.0 and
+    // both columns allocate nothing — drift here means the fault layer grew
+    // a hot-path cost it promised not to have (see `ees::fault`).
+    {
+        use ees::fault::FaultPlan;
+        use ees::linalg::dot;
+
+        let n = 16usize;
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        let mut r = Pcg64::new(4242);
+        r.fill_normal(&mut a);
+        r.fill_normal(&mut b);
+        let plan = FaultPlan::inert();
+        let reps = 4096usize;
+        let median = median_ns(warmup, iters, || {
+            for _ in 0..reps {
+                plan.panic_point("serve.dispatch");
+                let _ = plan.io_point("serve.tcp_read");
+                plan.delay_point("risk.chunk");
+                std::hint::black_box(dot(std::hint::black_box(&a), std::hint::black_box(&b)));
+            }
+        }) / reps as f64;
+        let allocs = allocs_per_op(reps, || {
+            for _ in 0..reps {
+                plan.panic_point("serve.dispatch");
+                let _ = plan.io_point("serve.tcp_read");
+                plan.delay_point("risk.chunk");
+                std::hint::black_box(dot(&a, &b));
+            }
+        });
+        let base_median = median_ns(warmup, iters, || {
+            for _ in 0..reps {
+                std::hint::black_box(dot(std::hint::black_box(&a), std::hint::black_box(&b)));
+            }
+        }) / reps as f64;
+        let base_allocs = allocs_per_op(reps, || {
+            for _ in 0..reps {
+                std::hint::black_box(dot(&a, &b));
+            }
+        });
+        ledger.push(LedgerEntry {
+            name: "fault/inert_points_dot/d16".into(),
+            median_ns: median,
+            allocs_per_op: allocs,
+            baseline_median_ns: base_median,
+            baseline_allocs_per_op: base_allocs,
+        });
     }
 
     // --- feature-gated SIMD kernel arms ----------------------------------

@@ -11,6 +11,14 @@
 //! - `--timing FILE`: requests/sec and p50/p99 latency — honest wall-clock
 //!   numbers, never diffed.
 //!
+//! `--retry-faults` resubmits a request whose response is
+//! `status:"failed"` (a supervised worker panic) or a backpressure shed,
+//! with a short pause, up to 100 times. Because response bytes are a pure
+//! function of the request, the retry reproduces exactly the bytes the
+//! fault ate — so a run against a fault-injected server emits a ledger
+//! byte-identical to the fault-free run (the chaos-smoke CI gate). Retry
+//! counts land in the timing file, never the ledger.
+//!
 //! Modes:
 //!
 //! - TCP (default, `--addr HOST:PORT`): each client opens its own
@@ -28,7 +36,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use ees::config::Config;
-use ees::serve::{parse_request, Registry, Request, ServeConfig, Server, Workload};
+use ees::serve::{parse_request, ParsedRequest, Registry, Request, ServeConfig, Server, Workload};
+
+/// Retry budget per request under `--retry-faults`. At any realistic
+/// injection rate the per-request survival of 100 independent draws is
+/// effectively certain; a server failing 100 times in a row is broken,
+/// not chaotic.
+const MAX_RETRIES: u64 = 100;
 
 struct Opts {
     addr: Option<String>,
@@ -42,6 +56,7 @@ struct Opts {
     seed: u64,
     ledger: Option<String>,
     timing: Option<String>,
+    retry_faults: bool,
 }
 
 fn parse_opts() -> Opts {
@@ -57,6 +72,7 @@ fn parse_opts() -> Opts {
         seed: 1000,
         ledger: None,
         timing: None,
+        retry_faults: false,
     };
     let mut it = std::env::args().skip(1);
     let parse_count = |raw: Option<String>, flag: &str| -> usize {
@@ -81,6 +97,7 @@ fn parse_opts() -> Opts {
             "--seed" => o.seed = parse_count(it.next(), "--seed") as u64,
             "--ledger" => o.ledger = it.next(),
             "--timing" => o.timing = it.next(),
+            "--retry-faults" => o.retry_faults = true,
             other => {
                 eprintln!("unknown argument: {other}");
                 eprintln!(
@@ -93,6 +110,7 @@ fn parse_opts() -> Opts {
                     "                  [--workload simulate|price|gradient|mix] [--paths P]"
                 );
                 eprintln!("                  [--seed BASE] [--ledger FILE] [--timing FILE]");
+                eprintln!("                  [--retry-faults]");
                 std::process::exit(2);
             }
         }
@@ -140,6 +158,14 @@ fn request_for(o: &Opts, client: usize, slot: usize) -> Request {
     }
 }
 
+/// Whether a response line is a transient outcome worth retrying: a
+/// supervised worker panic (`status:"failed"`) or a backpressure shed.
+/// Validation rejects are permanent — retrying them would loop forever.
+fn should_retry(line: &str) -> bool {
+    line.contains("\"status\":\"failed\"")
+        || (line.contains("\"status\":\"rejected\"") && line.contains("request shed"))
+}
+
 fn connect_retry(addr: &str) -> TcpStream {
     for _ in 0..100 {
         if let Ok(s) = TcpStream::connect(addr) {
@@ -152,11 +178,13 @@ fn connect_retry(addr: &str) -> TcpStream {
 }
 
 /// One closed-loop TCP client: its own connection, one request in flight.
-fn run_tcp_client(addr: &str, o: &Opts, client: usize) -> Vec<(u64, String, Duration)> {
+/// Returns its responses plus how many fault retries it spent.
+fn run_tcp_client(addr: &str, o: &Opts, client: usize) -> (Vec<(u64, String, Duration)>, u64) {
     let stream = connect_retry(addr);
     let mut reader = BufReader::new(stream.try_clone().expect("clone stream"));
     let mut writer = stream;
     let mut out = Vec::with_capacity(o.requests);
+    let mut retries = 0u64;
     for slot in 0..o.requests {
         let req = request_for(o, client, slot);
         let line = format!(
@@ -167,28 +195,53 @@ fn run_tcp_client(addr: &str, o: &Opts, client: usize) -> Vec<(u64, String, Dura
             req.paths,
             req.seed
         );
-        // Sanity: the line must round-trip our own parser.
-        parse_request(&line).expect("generator emits valid requests");
-        let t0 = Instant::now();
-        writeln!(writer, "{line}").expect("write request");
-        let mut resp = String::new();
-        reader.read_line(&mut resp).expect("read response");
-        out.push((req.id, resp.trim_end().to_string(), t0.elapsed()));
+        // Sanity: the line must round-trip our own parser as work.
+        match parse_request(&line) {
+            Ok(ParsedRequest::Work(_)) => {}
+            other => panic!("generator emits valid work requests, got {other:?}"),
+        }
+        let mut attempts = 0u64;
+        let (resp, elapsed) = loop {
+            let t0 = Instant::now();
+            writeln!(writer, "{line}").expect("write request");
+            let mut resp = String::new();
+            reader.read_line(&mut resp).expect("read response");
+            let resp = resp.trim_end().to_string();
+            if o.retry_faults && should_retry(&resp) && attempts < MAX_RETRIES {
+                attempts += 1;
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            break (resp, t0.elapsed());
+        };
+        retries += attempts;
+        out.push((req.id, resp, elapsed));
     }
-    out
+    (out, retries)
 }
 
 /// One closed-loop in-process client against a shared [`Server`].
-fn run_local_client(server: &Server, o: &Opts, client: usize) -> Vec<(u64, String, Duration)> {
+fn run_local_client(server: &Server, o: &Opts, client: usize) -> (Vec<(u64, String, Duration)>, u64) {
     let mut out = Vec::with_capacity(o.requests);
+    let mut retries = 0u64;
     for slot in 0..o.requests {
         let req = request_for(o, client, slot);
         let id = req.id;
-        let t0 = Instant::now();
-        let resp = server.call(req);
-        out.push((id, resp.to_json_line(), t0.elapsed()));
+        let mut attempts = 0u64;
+        let (resp, elapsed) = loop {
+            let t0 = Instant::now();
+            let resp = server.call(req.clone()).to_json_line();
+            if o.retry_faults && should_retry(&resp) && attempts < MAX_RETRIES {
+                attempts += 1;
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            break (resp, t0.elapsed());
+        };
+        retries += attempts;
+        out.push((id, resp, elapsed));
     }
-    out
+    (out, retries)
 }
 
 fn main() {
@@ -205,14 +258,18 @@ fn main() {
             eprintln!("serve_load: {e}");
             std::process::exit(2);
         });
-        Some(Arc::new(Server::start(registry, ServeConfig::from_config(&cfg))))
+        let sc = ServeConfig::from_config(&cfg).unwrap_or_else(|e| {
+            eprintln!("serve_load: {e}");
+            std::process::exit(2);
+        });
+        Some(Arc::new(Server::start(registry, sc)))
     } else {
         None
     };
     let addr = o.addr.clone().unwrap_or_else(|| "127.0.0.1:8787".into());
 
     let wall = Instant::now();
-    let mut results: Vec<(u64, String, Duration)> = std::thread::scope(|scope| {
+    let (mut results, retries): (Vec<(u64, String, Duration)>, u64) = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..o.clients)
             .map(|c| {
                 let o = &o;
@@ -224,10 +281,14 @@ fn main() {
                 })
             })
             .collect();
-        handles
-            .into_iter()
-            .flat_map(|h| h.join().expect("client thread"))
-            .collect()
+        let mut all = Vec::new();
+        let mut retries = 0u64;
+        for h in handles {
+            let (rows, r) = h.join().expect("client thread");
+            all.extend(rows);
+            retries += r;
+        }
+        (all, retries)
     });
     let wall = wall.elapsed();
 
@@ -235,6 +296,10 @@ fn main() {
     let rejected = results
         .iter()
         .filter(|(_, line, _)| line.contains("\"status\":\"rejected\""))
+        .count();
+    let failed = results
+        .iter()
+        .filter(|(_, line, _)| line.contains("\"status\":\"failed\""))
         .count();
     let mut lat_us: Vec<u64> = results.iter().map(|(_, _, d)| d.as_micros() as u64).collect();
     lat_us.sort_unstable();
@@ -244,8 +309,8 @@ fn main() {
     };
     let rps = total as f64 / wall.as_secs_f64();
     eprintln!(
-        "serve_load: {total} responses ({rejected} rejected) from {} clients in {:.3}s \
-         — {rps:.1} req/s, p50 {}us, p99 {}us",
+        "serve_load: {total} responses ({rejected} rejected, {failed} failed, {retries} fault retries) \
+         from {} clients in {:.3}s — {rps:.1} req/s, p50 {}us, p99 {}us",
         o.clients,
         wall.as_secs_f64(),
         pct(0.5),
@@ -253,8 +318,8 @@ fn main() {
     );
 
     // Deterministic response ledger: sorted by id, ids unique by
-    // construction, no timing — byte-identical across runs and server
-    // shapes.
+    // construction, no timing and no retry counts — byte-identical across
+    // runs, server shapes, and (with --retry-faults) injected faults.
     if let Some(path) = &o.ledger {
         results.sort_by_key(|(id, _, _)| *id);
         let mut doc = String::from("{\"schema\":\"ees-serve-ledger-v1\",\"responses\":[\n");
@@ -277,6 +342,7 @@ fn main() {
     if let Some(path) = &o.timing {
         let doc = format!(
             "{{\"clients\":{},\"requests_per_client\":{},\"total\":{total},\"rejected\":{rejected},\
+             \"failed\":{failed},\"retries\":{retries},\
              \"wall_secs\":{:.6},\"requests_per_sec\":{rps:.3},\"p50_us\":{},\"p99_us\":{}}}\n",
             o.clients,
             o.requests,
@@ -291,8 +357,8 @@ fn main() {
         eprintln!("timing written to {path}");
     }
 
-    if rejected > 0 {
-        eprintln!("serve_load: FAILED: {rejected} rejected responses");
+    if rejected + failed > 0 {
+        eprintln!("serve_load: FAILED: {rejected} rejected + {failed} failed responses");
         std::process::exit(1);
     }
     println!("serve_load OK");

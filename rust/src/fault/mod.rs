@@ -1,0 +1,612 @@
+//! Deterministic fault injection and the crash-safe write helpers built on
+//! it — the chaos layer behind the supervised serve/risk/train recovery
+//! paths (docs/ARCHITECTURE.md §Fault model & supervised recovery).
+//!
+//! # Why injection is deterministic
+//!
+//! The repo's recovery contract is *bitwise invisibility*: a run that
+//! panics, retries, respawns a worker or resumes from a checkpoint must
+//! reproduce the fault-free bytes exactly. Proving that in CI needs faults
+//! that are themselves reproducible, so a [`FaultPlan`] is a **pure
+//! schedule**: whether invocation `k` of a site faults is a function of
+//! `(seed, site name, k, fault kind)` alone — an FNV-1a hash of the site
+//! name mixed with the seed and invocation counter through the same
+//! splitmix64 finaliser the crate's [`Pcg64`](crate::rng::Pcg64) seeds
+//! with. Two runs with the same `EES_FAULT_SEED` inject at identical
+//! sites; the schedule is exposed ([`FaultPlan::schedule`]) so tests can
+//! pin it without tripping the faults.
+//!
+//! # Sites and kinds
+//!
+//! Injection points are named after the code they live in ([`SITES`]).
+//! Each site supports three kinds, each with an independent invocation
+//! counter:
+//!
+//! - **panic** — `panic!` with a recognizable [`PANIC_PREFIX`] message;
+//!   exercises `catch_unwind` supervision and mutex poison recovery.
+//! - **io** — a synthesized [`std::io::Error`]; exercises the bounded
+//!   retry/backoff in [`atomic_write`] and connection teardown.
+//! - **delay** — a bounded sleep (≤ [`MAX_DELAY_US`]); exercises deadlines
+//!   without unbounded stalls.
+//!
+//! Rates (`site.kind = 0.08`) draw per invocation; deterministic one-shots
+//! (`site.kind_at = 6`) fire at exactly that invocation index. Rate 0 with
+//! no `_at` never fires, and a plan with no configured sites is **inert**:
+//! every injection point is a single `Option` check
+//! ([`FaultPlan::inert`]), so the layer is always compiled and provably
+//! free when unused.
+//!
+//! # Configuration
+//!
+//! `[fault]` config keys beat `EES_FAULT_*` env vars (the repo-wide
+//! precedence):
+//!
+//! ```toml
+//! [fault]
+//! seed = 7
+//! serve.dispatch.panic = 0.08   # per-dispatch panic rate
+//! risk.chunk.panic_at = 6       # panic at exactly chunk invocation 6
+//! checkpoint.write.io = 0.5     # transient write errors (retried)
+//! serve.tcp_read.delay_us = 5000
+//! ```
+//!
+//! Env form: `EES_FAULT_SEED=7
+//! EES_FAULT_SITES="serve.dispatch.panic=0.08,risk.chunk.panic_at=6"`.
+//! Unknown sites or knobs fail loudly — a typo'd chaos run must not
+//! silently test nothing.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use crate::config::Config;
+
+/// Every valid injection site. Adding an injection point to the codebase
+/// means adding its name here — configuring an unlisted site is an error,
+/// so plans cannot silently rot when code moves.
+pub const SITES: [&str; 5] = [
+    "serve.queue",
+    "serve.dispatch",
+    "serve.tcp_read",
+    "risk.chunk",
+    "checkpoint.write",
+];
+
+/// Injected panics carry this prefix (followed by `site#invocation`), so
+/// supervision code and test assertions can recognize them.
+pub const PANIC_PREFIX: &str = "ees-fault: injected panic at ";
+
+/// Ceiling on injected latency (µs): delays model slow I/O, not hangs.
+pub const MAX_DELAY_US: u64 = 200_000;
+
+/// Write attempts [`atomic_write`] makes before reporting the last error.
+pub const WRITE_ATTEMPTS: u32 = 3;
+
+/// The site every checkpoint/ledger write shares — one knob faults all
+/// durable output paths.
+pub const WRITE_SITE: &str = "checkpoint.write";
+
+/// The three injectable failure kinds (each with its own per-site counter).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Panic,
+    Io,
+    Delay,
+}
+
+/// Per-site knobs: a rate in [0, 1] and/or a one-shot invocation index per
+/// kind, plus an optional site-local delay override.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+struct SiteSpec {
+    panic_rate: f64,
+    panic_at: Option<u64>,
+    io_rate: f64,
+    io_at: Option<u64>,
+    delay_rate: f64,
+    delay_at: Option<u64>,
+    /// 0 = use the plan-wide `delay_us` default.
+    delay_us: u64,
+}
+
+/// A site's knobs plus its live invocation counters. Counters are shared
+/// across clones of the plan (the `Arc` in [`FaultPlan`]), so every worker
+/// thread of a server advances one global per-site schedule.
+#[derive(Debug, Default)]
+struct SiteState {
+    spec: SiteSpec,
+    panic_calls: AtomicU64,
+    io_calls: AtomicU64,
+    delay_calls: AtomicU64,
+}
+
+#[derive(Debug)]
+struct Inner {
+    seed: u64,
+    /// Plan-wide default injected delay (µs) for sites without their own.
+    delay_us: u64,
+    sites: BTreeMap<String, SiteState>,
+}
+
+/// A seeded, deterministic fault-injection schedule.
+///
+/// Cloning is cheap (an `Arc`) and clones share invocation counters — a
+/// [`ServeConfig`](crate::serve::ServeConfig) cloned per worker still
+/// drives one plan-wide schedule. The default plan is inert.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    inner: Option<Arc<Inner>>,
+}
+
+/// The pure fire decision for invocation `k` of `site`: a one-shot index
+/// match, or a uniform draw under `rate` from the (seed, site, k, kind)
+/// hash. No state — this is what makes the schedule reproducible.
+fn fires(seed: u64, site: &str, k: u64, kind: FaultKind, rate: f64, at: Option<u64>) -> bool {
+    if at == Some(k) {
+        return true;
+    }
+    rate > 0.0 && unit(seed, site, k, kind) < rate
+}
+
+/// Uniform in [0, 1) from (seed, site, invocation, kind): FNV-1a over the
+/// site name, mixed with the counter and kind tag, finalised by the same
+/// splitmix64 the crate's generators seed through.
+fn unit(seed: u64, site: &str, k: u64, kind: FaultKind) -> f64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in site.as_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    let mut x = seed
+        ^ h.rotate_left(17)
+        ^ k.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ ((kind as u64 + 1) << 56);
+    let z = crate::rng::splitmix64(&mut x);
+    (z >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0)
+}
+
+impl FaultPlan {
+    /// The no-fault plan: every injection point reduces to one `Option`
+    /// check. This is the default everywhere a `[fault]` section is absent.
+    pub fn inert() -> Self {
+        FaultPlan { inner: None }
+    }
+
+    /// Whether any site is configured. An armed plan with all rates at 0
+    /// still fires nothing — the determinism suite pins that an armed
+    /// rate-0 plan is bitwise-invisible next to an inert one.
+    pub fn is_armed(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Build from `EES_FAULT_*` env vars alone (the [`global`] plan).
+    pub fn from_env() -> crate::Result<Self> {
+        let mut b = Builder::default();
+        b.apply_env()?;
+        Ok(b.build())
+    }
+
+    /// Build from a parsed config's `[fault]` section layered over the
+    /// `EES_FAULT_*` env vars (config beats env, the repo-wide precedence).
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
+        let mut b = Builder::default();
+        b.apply_env()?;
+        b.apply_config(cfg)?;
+        Ok(b.build())
+    }
+
+    fn site(&self, site: &str) -> Option<(&Inner, &SiteState)> {
+        let inner = self.inner.as_deref()?;
+        inner.sites.get(site).map(|st| (inner, st))
+    }
+
+    /// Panic injection point: panics with [`PANIC_PREFIX`]`site#k` when the
+    /// schedule fires at this site's next panic invocation. No-op on an
+    /// inert plan or an unconfigured site.
+    pub fn panic_point(&self, site: &str) {
+        let Some((inner, st)) = self.site(site) else {
+            return;
+        };
+        let k = st.panic_calls.fetch_add(1, Ordering::Relaxed);
+        if fires(inner.seed, site, k, FaultKind::Panic, st.spec.panic_rate, st.spec.panic_at) {
+            panic!("{PANIC_PREFIX}{site}#{k}");
+        }
+    }
+
+    /// I/O-error injection point: returns a synthesized error when the
+    /// schedule fires. Callers treat it exactly like a real transient I/O
+    /// failure (retry, drop the connection, …).
+    pub fn io_point(&self, site: &str) -> io::Result<()> {
+        let Some((inner, st)) = self.site(site) else {
+            return Ok(());
+        };
+        let k = st.io_calls.fetch_add(1, Ordering::Relaxed);
+        if fires(inner.seed, site, k, FaultKind::Io, st.spec.io_rate, st.spec.io_at) {
+            return Err(io::Error::new(
+                io::ErrorKind::Other,
+                format!("ees-fault: injected I/O error at {site}#{k}"),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Bounded-latency injection point: sleeps the site's `delay_us`
+    /// (clamped to [`MAX_DELAY_US`]) when the schedule fires.
+    pub fn delay_point(&self, site: &str) {
+        let Some((inner, st)) = self.site(site) else {
+            return;
+        };
+        let k = st.delay_calls.fetch_add(1, Ordering::Relaxed);
+        if fires(inner.seed, site, k, FaultKind::Delay, st.spec.delay_rate, st.spec.delay_at) {
+            let us = if st.spec.delay_us > 0 { st.spec.delay_us } else { inner.delay_us };
+            std::thread::sleep(Duration::from_micros(us.min(MAX_DELAY_US)));
+        }
+    }
+
+    /// The pure schedule: which invocation indices in `0..upto` fire for
+    /// `(site, kind)`. Reads no counters and injects nothing — the
+    /// determinism tests compare two plans' schedules with this.
+    pub fn schedule(&self, site: &str, kind: FaultKind, upto: u64) -> Vec<u64> {
+        let Some((inner, st)) = self.site(site) else {
+            return Vec::new();
+        };
+        let (rate, at) = match kind {
+            FaultKind::Panic => (st.spec.panic_rate, st.spec.panic_at),
+            FaultKind::Io => (st.spec.io_rate, st.spec.io_at),
+            FaultKind::Delay => (st.spec.delay_rate, st.spec.delay_at),
+        };
+        (0..upto).filter(|&k| fires(inner.seed, site, k, kind, rate, at)).collect()
+    }
+}
+
+/// The process-global env-only plan, for write paths with no config in
+/// scope (`--out` reports, train checkpoints). Malformed `EES_FAULT_*` is
+/// reported once and disables injection instead of killing the run —
+/// chaos knobs must never break a production process that ignores them.
+pub fn global() -> &'static FaultPlan {
+    static PLAN: OnceLock<FaultPlan> = OnceLock::new();
+    PLAN.get_or_init(|| match FaultPlan::from_env() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("ees fault: {e} — EES_FAULT_* ignored, injection disabled");
+            FaultPlan::inert()
+        }
+    })
+}
+
+/// Render a `catch_unwind` payload as text (panic messages are `&str` or
+/// `String` in practice) — used to fold worker panics into explicit
+/// `status:"failed"` responses.
+pub fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Crash-safe file write through the [`global`] env plan: see
+/// [`atomic_write_with`].
+pub fn atomic_write(path: &str, contents: &str) -> io::Result<()> {
+    atomic_write_with(global(), path, contents)
+}
+
+/// Crash-safe file write: the bytes land in a `.tmp` sibling first and
+/// reach `path` only through `fs::rename`, so a crash at any instant
+/// leaves either the old complete file or the new complete file — never a
+/// torn one. Transient failures (including injected [`WRITE_SITE`] faults)
+/// are retried up to [`WRITE_ATTEMPTS`] times with a short deterministic
+/// backoff; on persistent failure the target file is untouched and the
+/// last error is returned.
+pub fn atomic_write_with(plan: &FaultPlan, path: &str, contents: &str) -> io::Result<()> {
+    let tmp = format!("{path}.tmp");
+    let mut last_err: Option<io::Error> = None;
+    for attempt in 0..WRITE_ATTEMPTS {
+        let res = (|| {
+            plan.io_point(WRITE_SITE)?;
+            std::fs::write(&tmp, contents)?;
+            std::fs::rename(&tmp, path)
+        })();
+        match res {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                last_err = Some(e);
+                // Deterministic bounded backoff: 2ms, 4ms — enough to ride
+                // out transient filesystem hiccups, never a stall.
+                if attempt + 1 < WRITE_ATTEMPTS {
+                    std::thread::sleep(Duration::from_millis(2u64 << attempt));
+                }
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&tmp);
+    Err(last_err.expect("WRITE_ATTEMPTS >= 1"))
+}
+
+/// Accumulates knobs from env and config before freezing into a plan.
+#[derive(Default)]
+struct Builder {
+    seed: Option<u64>,
+    delay_us: Option<u64>,
+    specs: BTreeMap<String, SiteSpec>,
+}
+
+impl Builder {
+    fn apply_env(&mut self) -> crate::Result<()> {
+        if let Ok(v) = std::env::var("EES_FAULT_SEED") {
+            self.seed = Some(v.trim().parse().map_err(|_| {
+                crate::format_err!("EES_FAULT_SEED: not an unsigned integer: '{}'", v.trim())
+            })?);
+        }
+        if let Ok(v) = std::env::var("EES_FAULT_DELAY_US") {
+            self.delay_us = Some(v.trim().parse().map_err(|_| {
+                crate::format_err!("EES_FAULT_DELAY_US: not an unsigned integer: '{}'", v.trim())
+            })?);
+        }
+        if let Ok(v) = std::env::var("EES_FAULT_SITES") {
+            self.apply_sites_str(&v, "EES_FAULT_SITES")?;
+        }
+        Ok(())
+    }
+
+    /// Parse the compact env form: `site.knob=value,site.knob=value,…`.
+    fn apply_sites_str(&mut self, text: &str, src: &str) -> crate::Result<()> {
+        for part in text.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                crate::format_err!("{src}: expected site.knob=value, got '{part}'")
+            })?;
+            let num: f64 = val.trim().parse().map_err(|_| {
+                crate::format_err!("{src}: not a number: '{}'", val.trim())
+            })?;
+            self.apply_knob(key.trim(), num, src)?;
+        }
+        Ok(())
+    }
+
+    fn apply_config(&mut self, cfg: &Config) -> crate::Result<()> {
+        for (key, value) in &cfg.values {
+            let Some(rest) = key.strip_prefix("fault.") else {
+                continue;
+            };
+            let num = value.as_f64().ok_or_else(|| {
+                crate::format_err!("[fault] {rest}: expected a number")
+            })?;
+            match rest {
+                "seed" => self.seed = Some(int_knob(num, "seed", "[fault]")?),
+                "delay_us" => self.delay_us = Some(int_knob(num, "delay_us", "[fault]")?),
+                _ => self.apply_knob(rest, num, "[fault]")?,
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_knob(&mut self, key: &str, val: f64, src: &str) -> crate::Result<()> {
+        let (site, knob) = key.rsplit_once('.').ok_or_else(|| {
+            crate::format_err!("{src}: fault knob '{key}' should be <site>.<knob>")
+        })?;
+        if !SITES.contains(&site) {
+            return Err(crate::format_err!(
+                "{src}: unknown fault site '{site}' (sites: {})",
+                SITES.join(", ")
+            ));
+        }
+        let spec = self.specs.entry(site.to_string()).or_default();
+        match knob {
+            "panic" => spec.panic_rate = rate_knob(val, key, src)?,
+            "io" => spec.io_rate = rate_knob(val, key, src)?,
+            "delay" => spec.delay_rate = rate_knob(val, key, src)?,
+            "panic_at" => spec.panic_at = Some(int_knob(val, key, src)?),
+            "io_at" => spec.io_at = Some(int_knob(val, key, src)?),
+            "delay_at" => spec.delay_at = Some(int_knob(val, key, src)?),
+            "delay_us" => spec.delay_us = int_knob(val, key, src)?,
+            other => {
+                return Err(crate::format_err!(
+                    "{src}: unknown fault knob '{other}' on site '{site}' \
+                     (panic|io|delay|panic_at|io_at|delay_at|delay_us)"
+                ))
+            }
+        }
+        Ok(())
+    }
+
+    fn build(self) -> FaultPlan {
+        if self.specs.is_empty() {
+            return FaultPlan::inert();
+        }
+        let sites = self
+            .specs
+            .into_iter()
+            .map(|(name, spec)| (name, SiteState { spec, ..SiteState::default() }))
+            .collect();
+        FaultPlan {
+            inner: Some(Arc::new(Inner {
+                seed: self.seed.unwrap_or(42),
+                delay_us: self.delay_us.unwrap_or(1_000),
+                sites,
+            })),
+        }
+    }
+}
+
+fn rate_knob(val: f64, key: &str, src: &str) -> crate::Result<f64> {
+    if val.is_finite() && (0.0..=1.0).contains(&val) {
+        Ok(val)
+    } else {
+        Err(crate::format_err!("{src}: {key} must be a rate in [0, 1], got {val}"))
+    }
+}
+
+fn int_knob(val: f64, key: &str, src: &str) -> crate::Result<u64> {
+    if val.is_finite() && val >= 0.0 && val.fract() == 0.0 && val <= u64::MAX as f64 {
+        Ok(val as u64)
+    } else {
+        Err(crate::format_err!("{src}: {key} must be a non-negative integer, got {val}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(fault_body: &str) -> FaultPlan {
+        let text = format!("[fault]\n{fault_body}");
+        FaultPlan::from_config(&Config::parse(&text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn empty_section_is_inert() {
+        let p = plan("seed = 3\n");
+        assert!(!p.is_armed());
+        let p = FaultPlan::from_config(&Config::parse("").unwrap()).unwrap();
+        assert!(!p.is_armed());
+        // Inert points are free no-ops.
+        p.panic_point("serve.dispatch");
+        assert!(p.io_point("checkpoint.write").is_ok());
+        p.delay_point("risk.chunk");
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_the_seed() {
+        let a = plan("seed = 9\nserve.dispatch.panic = 0.1\n");
+        let b = plan("seed = 9\nserve.dispatch.panic = 0.1\n");
+        let c = plan("seed = 10\nserve.dispatch.panic = 0.1\n");
+        let sa = a.schedule("serve.dispatch", FaultKind::Panic, 2000);
+        assert_eq!(sa, b.schedule("serve.dispatch", FaultKind::Panic, 2000));
+        assert_ne!(sa, c.schedule("serve.dispatch", FaultKind::Panic, 2000));
+        // ~10% of 2000 draws fire, within a loose band.
+        assert!(sa.len() > 120 && sa.len() < 280, "{} fired", sa.len());
+        // Kinds draw independent streams at the same site.
+        let si = plan("seed = 9\nserve.dispatch.io = 0.1\n");
+        assert_ne!(sa, si.schedule("serve.dispatch", FaultKind::Io, 2000));
+    }
+
+    #[test]
+    fn rate_bounds_and_one_shots() {
+        let p = plan("serve.queue.panic = 0.0\n");
+        assert!(p.is_armed());
+        assert!(p.schedule("serve.queue", FaultKind::Panic, 5000).is_empty());
+        let p = plan("serve.queue.panic = 1.0\n");
+        assert_eq!(
+            p.schedule("serve.queue", FaultKind::Panic, 100),
+            (0..100).collect::<Vec<_>>()
+        );
+        let p = plan("risk.chunk.panic_at = 5\n");
+        assert_eq!(p.schedule("risk.chunk", FaultKind::Panic, 100), vec![5]);
+    }
+
+    #[test]
+    fn points_fire_as_scheduled() {
+        let p = plan("serve.dispatch.panic_at = 1\n");
+        p.panic_point("serve.dispatch"); // k = 0: clean
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.panic_point("serve.dispatch") // k = 1: fires
+        }))
+        .unwrap_err();
+        let msg = panic_reason(&*err);
+        assert!(msg.starts_with(PANIC_PREFIX), "{msg}");
+        assert!(msg.contains("serve.dispatch#1"), "{msg}");
+
+        let p = plan("checkpoint.write.io_at = 0\n");
+        let e = p.io_point("checkpoint.write").unwrap_err();
+        assert!(e.to_string().contains("injected I/O error"), "{e}");
+        assert!(p.io_point("checkpoint.write").is_ok()); // k = 1: clean
+
+        // Counters are shared across clones: the clone continues the
+        // original's schedule instead of restarting it.
+        let p = plan("serve.dispatch.panic_at = 1\n");
+        p.panic_point("serve.dispatch"); // k = 0 on the original
+        let clone = p.clone();
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            clone.panic_point("serve.dispatch") // k = 1 through the clone
+        }))
+        .is_err());
+    }
+
+    #[test]
+    fn config_beats_env_shape_errors_fail_loudly() {
+        for bad in [
+            "serve.dispatch.panic = 1.5\n",        // rate out of range
+            "serve.dispatch.panic = -0.1\n",       // negative rate
+            "warp.core.panic = 0.5\n",             // unknown site
+            "serve.dispatch.turbo = 0.5\n",        // unknown knob
+            "serve.dispatch.panic_at = 1.5\n",     // fractional index
+        ] {
+            let text = format!("[fault]\n{bad}");
+            assert!(
+                FaultPlan::from_config(&Config::parse(&text).unwrap()).is_err(),
+                "accepted: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn env_sites_string_parses() {
+        let mut b = Builder::default();
+        b.apply_sites_str(
+            "serve.dispatch.panic=0.08, risk.chunk.panic_at=6",
+            "EES_FAULT_SITES",
+        )
+        .unwrap();
+        b.seed = Some(7);
+        let p = b.build();
+        assert!(p.is_armed());
+        assert_eq!(p.schedule("risk.chunk", FaultKind::Panic, 100), vec![6]);
+        assert!(!p.schedule("serve.dispatch", FaultKind::Panic, 1000).is_empty());
+
+        let mut b = Builder::default();
+        assert!(b.apply_sites_str("serve.dispatch.panic", "EES_FAULT_SITES").is_err());
+        assert!(b.apply_sites_str("serve.dispatch.panic=x", "EES_FAULT_SITES").is_err());
+    }
+
+    #[test]
+    fn atomic_write_lands_bytes_and_cleans_tmp() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ees_fault_aw_{}.txt", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let plan = FaultPlan::inert();
+        atomic_write_with(&plan, &path, "hello\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "hello\n");
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn atomic_write_retries_transient_injected_failures() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ees_fault_retry_{}.txt", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        // First attempt faults, the retry succeeds.
+        let p = plan("checkpoint.write.io_at = 0\n");
+        atomic_write_with(&p, &path, "v2\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "v2\n");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn atomic_write_persistent_failure_keeps_the_old_file() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("ees_fault_keep_{}.txt", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        std::fs::write(&path, "old\n").unwrap();
+        let p = plan("checkpoint.write.io = 1.0\n");
+        let err = atomic_write_with(&p, &path, "new\n").unwrap_err();
+        assert!(err.to_string().contains("injected"), "{err}");
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "old\n");
+        assert!(!std::path::Path::new(&format!("{path}.tmp")).exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn delay_point_is_bounded() {
+        let p = plan("serve.tcp_read.delay_at = 0\nserve.tcp_read.delay_us = 1\n");
+        let t0 = std::time::Instant::now();
+        p.delay_point("serve.tcp_read");
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+}

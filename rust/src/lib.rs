@@ -29,6 +29,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod experiments;
+pub mod fault;
 pub mod lie;
 pub mod linalg;
 pub mod losses;

@@ -57,6 +57,7 @@ struct Args {
     assert_improves: bool,
     paths: Option<usize>,
     checkpoint: Option<String>,
+    checkpoint_every: Option<usize>,
     resume: Option<String>,
     stop_after: Option<usize>,
     assert_finite: bool,
@@ -79,6 +80,7 @@ fn parse_args() -> Args {
         assert_improves: false,
         paths: None,
         checkpoint: None,
+        checkpoint_every: None,
         resume: None,
         stop_after: None,
         assert_finite: false,
@@ -121,6 +123,16 @@ fn parse_args() -> Args {
             "--addr" => args.addr = it.next(),
             "--assert-finite" => args.assert_finite = true,
             "--checkpoint" => args.checkpoint = it.next(),
+            "--checkpoint-every" => {
+                let raw = it.next().unwrap_or_default();
+                match raw.parse() {
+                    Ok(v) => args.checkpoint_every = Some(v),
+                    Err(_) => {
+                        eprintln!("--checkpoint-every: not a count: '{raw}'");
+                        std::process::exit(2);
+                    }
+                }
+            }
             "--resume" => args.resume = it.next(),
             "--paths" => {
                 let raw = it.next().unwrap_or_default();
@@ -270,8 +282,8 @@ fn main() {
                 "risk:     ees risk --config FILE [--scenario {}] [--paths N]",
                 ees::risk::NAMES.join("|")
             );
-            eprintln!("                   [--stop-after N] [--checkpoint F] [--resume F]");
-            eprintln!("                   [--ledger OUT.json] [--assert-finite]");
+            eprintln!("                   [--stop-after N] [--checkpoint F] [--checkpoint-every K]");
+            eprintln!("                   [--resume F] [--ledger OUT.json] [--assert-finite]");
             eprintln!("serve:    ees serve [--config FILE] [--addr HOST:PORT]   (default 127.0.0.1:8787)");
             eprintln!("                    newline-delimited JSON requests, e.g.");
             eprintln!("                    {{\"id\":1,\"scenario\":\"ou\",\"workload\":\"price\",\"paths\":32,\"seed\":7}}");
@@ -284,7 +296,7 @@ fn main() {
     };
     println!("{report}");
     if let Some(path) = args.out {
-        if let Err(e) = std::fs::write(&path, &report) {
+        if let Err(e) = ees::fault::atomic_write(&path, &report) {
             eprintln!("failed to write {path}: {e}");
             std::process::exit(1);
         }
@@ -322,7 +334,7 @@ fn run_train(args: &Args) -> String {
     };
     if let Some(path) = &args.ledger {
         let json = TrainLedger::from_log(&run.scenario, &run.log).to_json();
-        if let Err(e) = std::fs::write(path, json) {
+        if let Err(e) = ees::fault::atomic_write(path, &json) {
             eprintln!("failed to write ledger {path}: {e}");
             std::process::exit(1);
         }
@@ -382,10 +394,13 @@ fn run_train(args: &Args) -> String {
 /// `ees risk`: run (or resume) a streaming Monte Carlo risk sweep from a
 /// `[risk]` config section (`ees::risk`). `--stop-after N` halts the sweep
 /// after N paths (for mid-sweep checkpointing), `--checkpoint F` writes the
-/// bit-exact snapshot text, `--resume F` continues from one, `--ledger
-/// OUT.json` writes the deterministic estimate JSON and `--assert-finite`
-/// turns the run into a CI gate. Exits 2 on configuration errors, 1 on
-/// gate/IO failures.
+/// bit-exact snapshot text, `--checkpoint-every K` additionally
+/// checkpoints to F after every K paths *during* the run (atomic
+/// temp+rename writes, so a kill at any instant leaves a complete
+/// resumable file), `--resume F` continues from one, `--ledger OUT.json`
+/// writes the deterministic estimate JSON and `--assert-finite` turns the
+/// run into a CI gate. Exits 2 on configuration errors, 1 on gate/IO
+/// failures.
 fn run_risk(args: &Args) -> String {
     use ees::risk::{RiskConfig, RiskSweep};
     use ees::train::Snapshot;
@@ -444,9 +459,23 @@ fn run_risk(args: &Args) -> String {
         }
         None => RiskSweep::new(rc),
     };
-    sweep.run_to(args.stop_after.unwrap_or(usize::MAX));
+    let limit = args.stop_after.unwrap_or(usize::MAX);
+    let every = args.checkpoint_every.unwrap_or(sweep.cfg().checkpoint_every);
+    let plan = sweep.cfg().fault.clone();
+    if every > 0 {
+        let Some(path) = args.checkpoint.clone() else {
+            eprintln!("ees risk: --checkpoint-every needs --checkpoint FILE to write to");
+            std::process::exit(2);
+        };
+        if let Err(e) = sweep.run_checkpointed(limit, every, &path) {
+            eprintln!("ees risk: {e}");
+            std::process::exit(1);
+        }
+    } else {
+        sweep.run_to(limit);
+    }
     if let Some(path) = &args.checkpoint {
-        if let Err(e) = std::fs::write(path, sweep.snapshot().to_text()) {
+        if let Err(e) = ees::fault::atomic_write_with(&plan, path, &sweep.snapshot().to_text()) {
             eprintln!("failed to write checkpoint {path}: {e}");
             std::process::exit(1);
         }
@@ -458,7 +487,7 @@ fn run_risk(args: &Args) -> String {
     }
     let report = sweep.report();
     if let Some(path) = &args.ledger {
-        if let Err(e) = std::fs::write(path, report.to_json()) {
+        if let Err(e) = ees::fault::atomic_write_with(&plan, path, &report.to_json()) {
             eprintln!("failed to write ledger {path}: {e}");
             std::process::exit(1);
         }
@@ -490,7 +519,13 @@ fn run_serve(args: &Args) -> String {
         },
         None => Config::default(),
     };
-    let sc = ServeConfig::from_config(&cfg);
+    let sc = match ServeConfig::from_config(&cfg) {
+        Ok(sc) => sc,
+        Err(e) => {
+            eprintln!("ees serve: {e}");
+            std::process::exit(2);
+        }
+    };
     let registry = match Registry::from_config(&cfg) {
         Ok(r) => r,
         Err(e) => {

@@ -37,13 +37,25 @@ impl<T: Default> Pool<T> {
     }
 
     /// Check a buffer out (creating a fresh one if all are in use).
+    ///
+    /// Poison-recovering: a thread that panicked between `take` and `put`
+    /// only loses its checked-out buffer — the parked `Vec<T>` is never
+    /// mid-mutation outside the lock, so adopting it is safe, and a
+    /// supervised worker respawn must not find its scratch pool wedged.
     pub fn take(&self) -> T {
-        self.items.lock().unwrap().pop().unwrap_or_default()
+        self.items
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .pop()
+            .unwrap_or_default()
     }
 
     /// Return a buffer to the pool for reuse.
     pub fn put(&self, item: T) {
-        self.items.lock().unwrap().push(item);
+        self.items
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .push(item);
     }
 
     /// Run `f` with a checked-out buffer, returning it afterwards.

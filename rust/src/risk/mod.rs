@@ -39,6 +39,7 @@
 use crate::bench::Table;
 use crate::config::Config;
 use crate::coordinator::{batch_terminal_lanes_par, parallel_map};
+use crate::fault::FaultPlan;
 use crate::lie::TTorus;
 use crate::memory::WorkspacePool;
 use crate::models::gbm::GbmPortfolio;
@@ -149,10 +150,11 @@ pub fn path_stream(seed: u64, index: u64) -> Pcg64 {
 
 /// A parsed `[risk]` configuration.
 ///
-/// `parallelism`, `lanes` and `chunk` are pure execution knobs: estimates
-/// are bitwise-identical at every value (they are therefore excluded from
-/// the checkpoint fingerprint). Everything else changes the sampled
-/// distribution and is fingerprinted.
+/// `parallelism`, `lanes`, `chunk`, `checkpoint_every` and `fault` are
+/// pure execution knobs: estimates are bitwise-identical at every value
+/// (they are therefore excluded from the checkpoint fingerprint — a
+/// checkpoint taken under fault injection resumes cleanly without it).
+/// Everything else changes the sampled distribution and is fingerprinted.
 #[derive(Clone, Debug)]
 pub struct RiskConfig {
     pub scenario: RiskScenario,
@@ -173,6 +175,12 @@ pub struct RiskConfig {
     pub chunk: usize,
     pub parallelism: usize,
     pub lanes: usize,
+    /// Auto-checkpoint cadence in paths for [`RiskSweep::run_checkpointed`]
+    /// (`--checkpoint-every`); 0 disables auto-checkpointing.
+    pub checkpoint_every: usize,
+    /// Deterministic fault-injection schedule (`[fault]` config /
+    /// `EES_FAULT_*` env) — inert unless explicitly armed.
+    pub fault: FaultPlan,
 }
 
 impl RiskConfig {
@@ -220,6 +228,8 @@ impl RiskConfig {
             chunk: cfg.usize_or("risk.chunk", 4096).max(1),
             parallelism: cfg.parallelism().max(1),
             lanes: cfg.lanes(),
+            checkpoint_every: cfg.usize_or("risk.checkpoint_every", 0),
+            fault: FaultPlan::from_config(cfg)?,
         })
     }
 
@@ -431,6 +441,12 @@ impl RiskSweep {
             return 0;
         }
         let n = self.cfg.chunk.min(limit - self.done);
+        // Injection fires BEFORE any payoff is computed or folded: a
+        // chunk that panics leaves `done` and the estimators exactly at
+        // the previous chunk boundary, so the last checkpoint is always
+        // consistent and a resume replays the killed chunk in full.
+        self.cfg.fault.delay_point("risk.chunk");
+        self.cfg.fault.panic_point("risk.chunk");
         let payoffs = chunk_payoffs(&self.cfg, self.done, n);
         for x in payoffs {
             self.est.push(x);
@@ -450,6 +466,28 @@ impl RiskSweep {
     /// Run the whole sweep.
     pub fn run(&mut self) {
         self.run_to(self.cfg.paths);
+    }
+
+    /// [`Self::run_to`] with auto-checkpointing: after every `every`
+    /// paths of progress (rounded up to chunk boundaries by `run_to`) the
+    /// sweep state is written to `path` through the crash-safe
+    /// [`atomic_write_with`](crate::fault::atomic_write_with), so a kill
+    /// at any instant leaves a complete, resumable checkpoint at most
+    /// `every` paths behind. Estimates are unaffected by the cadence —
+    /// checkpointing only reads state — which is what makes a
+    /// crash→resume run byte-identical to an uninterrupted one (the
+    /// chaos-smoke CI gate).
+    pub fn run_checkpointed(&mut self, limit: usize, every: usize, path: &str) -> crate::Result<()> {
+        let limit = limit.min(self.cfg.paths);
+        let every = every.max(1);
+        let plan = self.cfg.fault.clone();
+        while self.done < limit {
+            let next = limit.min(self.done.saturating_add(every));
+            self.run_to(next);
+            crate::fault::atomic_write_with(&plan, path, &self.snapshot().to_text())
+                .map_err(|e| crate::format_err!("cannot write risk checkpoint {path}: {e}"))?;
+        }
+        Ok(())
     }
 
     pub fn report(&self) -> RiskReport {
@@ -670,6 +708,10 @@ mod tests {
         assert_eq!(c.stepper, RiskStepper::Ees);
         assert_eq!((c.paths, c.steps, c.chunk, c.seed), (64, 8, 16, 7));
         assert_eq!(c.parallelism, 2);
+        assert_eq!(c.checkpoint_every, 0);
+        assert!(!c.fault.is_armed());
+        let c = cfg_text("checkpoint_every = 500");
+        assert_eq!(c.checkpoint_every, 500);
         let c = cfg_text("scenario = \"gbm_portfolio\"\nstepper = \"milstein\"\ndim = 4");
         assert_eq!(c.scenario, RiskScenario::GbmPortfolio);
         assert_eq!(c.stepper, RiskStepper::Milstein);

@@ -1,10 +1,26 @@
 //! The coalescing queue and its worker threads — the serving layer's perf
-//! core. See the [module docs](super) for the determinism and
-//! backpressure contracts.
+//! core, plus the supervision that keeps it alive under panics. See the
+//! [module docs](super) for the determinism, backpressure, and fault
+//! contracts.
+//!
+//! Supervision has two rings. Inner: every dispatch runs under
+//! `catch_unwind`, so a panicking request (a model bug, or an injected
+//! `serve.dispatch` fault) becomes an explicit [`Response::Failed`] to
+//! every job in the batch — the worker survives and the queue keeps
+//! moving. Outer: the worker body itself runs under `catch_unwind`, so a
+//! panic outside dispatch (e.g. an injected `serve.queue` fault while
+//! holding the queue lock) respawns the worker in place and bumps the
+//! restart counter surfaced by [`Server::health`]. Either way the queue
+//! mutex is never abandoned to poisoning: every guard is acquired through
+//! [`lock_queue`], which recovers a poisoned lock via `into_inner` — safe
+//! because panic sites are placed so the queue state is never torn
+//! (injection fires before a job is popped, and dispatch never holds the
+//! lock).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -14,7 +30,7 @@ use crate::coordinator::{
 use crate::memory::WorkspacePool;
 use crate::rng::Pcg64;
 
-use super::{Registry, Request, Response, ServeConfig, Workload};
+use super::{HealthReport, Registry, Request, Response, ServeConfig, Workload};
 
 /// A queued request plus the channel its response goes back on.
 struct Job {
@@ -30,10 +46,25 @@ struct QueueState {
     open: bool,
 }
 
-/// The mutex+condvar pair workers park on.
+/// The mutex+condvar pair workers park on, plus the lifetime counters
+/// behind the `health` op (all monotone, all `Relaxed` — they order
+/// nothing, they only count).
 struct Shared {
     q: Mutex<QueueState>,
     cv: Condvar,
+    served: AtomicU64,
+    failed: AtomicU64,
+    sheds: AtomicU64,
+    restarts: AtomicU64,
+}
+
+/// Acquire the queue lock, recovering from poisoning. A poisoned queue
+/// mutex means a worker panicked while holding it; the panic sites
+/// (injected and organic) never leave `QueueState` torn, so the state is
+/// safe to adopt — and refusing would wedge every subsequent request,
+/// which is the exact failure this layer exists to prevent.
+fn lock_queue(shared: &Shared) -> MutexGuard<'_, QueueState> {
+    shared.q.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
 /// A running serving instance: `workers` dispatch threads over one shared
@@ -66,6 +97,10 @@ impl Server {
                 open: true,
             }),
             cv: Condvar::new(),
+            served: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            sheds: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
         });
         let workers = (0..cfg.workers)
             .map(|_| {
@@ -89,6 +124,11 @@ impl Server {
         &self.registry
     }
 
+    /// The configuration this server was started with.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
     /// Enqueue a request; the response arrives on the returned channel.
     ///
     /// Validation failures and backpressure sheds resolve immediately
@@ -100,7 +140,7 @@ impl Server {
             let _ = tx.send(Response::Rejected { id: req.id, reason });
             return rx;
         }
-        let mut q = self.shared.q.lock().unwrap();
+        let mut q = lock_queue(&self.shared);
         if !q.open {
             let _ = tx.send(Response::Rejected {
                 id: req.id,
@@ -109,6 +149,7 @@ impl Server {
             return rx;
         }
         if q.jobs.len() >= self.cfg.queue_depth {
+            self.shared.sheds.fetch_add(1, Ordering::Relaxed);
             let _ = tx.send(Response::Rejected {
                 id: req.id,
                 reason: format!("queue full ({} queued): request shed", q.jobs.len()),
@@ -129,6 +170,23 @@ impl Server {
             id,
             reason: "server shut down before responding".to_string(),
         })
+    }
+
+    /// A point-in-time health snapshot: queue depth plus the lifetime
+    /// served/failed/shed/restart counters. Deliberately uptime-free —
+    /// every field is deterministic under a deterministic load, so tests
+    /// can assert exact values.
+    pub fn health(&self) -> HealthReport {
+        let q = lock_queue(&self.shared);
+        HealthReport {
+            workers: self.cfg.workers,
+            open: q.open,
+            queue_depth: q.jobs.len(),
+            served: self.shared.served.load(Ordering::Relaxed),
+            failed: self.shared.failed.load(Ordering::Relaxed),
+            sheds: self.shared.sheds.load(Ordering::Relaxed),
+            restarts: self.shared.restarts.load(Ordering::Relaxed),
+        }
     }
 
     fn validate(&self, req: &Request) -> Option<String> {
@@ -160,7 +218,7 @@ impl Server {
         if self.stopped.swap(true, Ordering::SeqCst) {
             return;
         }
-        self.shared.q.lock().unwrap().open = false;
+        lock_queue(&self.shared).open = false;
         self.shared.cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -174,13 +232,71 @@ impl Drop for Server {
     }
 }
 
+/// The outer supervision ring: run the worker body, and if it panics
+/// (anything that escapes the per-dispatch catch — e.g. an injected
+/// `serve.queue` fault taken while holding the queue lock), respawn it in
+/// place. The job that triggered the panic is still queued (queue-site
+/// injection fires before the pop), so nothing is lost across a restart.
 fn worker_loop(shared: &Shared, registry: &Registry, cfg: &ServeConfig) {
     // Per-worker warm pool: after the first few dispatches every scratch
     // buffer is a reuse, so steady-state serving allocates only response
-    // buffers (pinned by rust/tests/alloc_regression.rs).
+    // buffers (pinned by rust/tests/alloc_regression.rs). The pool
+    // survives a respawn — its buffers are plain scratch, never torn.
     let ws_pool = WorkspacePool::new();
+    loop {
+        match catch_unwind(AssertUnwindSafe(|| run_worker(shared, registry, cfg, &ws_pool))) {
+            Ok(()) => return, // queue closed and drained: clean exit
+            Err(_) => {
+                shared.restarts.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+fn run_worker(shared: &Shared, registry: &Registry, cfg: &ServeConfig, ws_pool: &WorkspacePool) {
     while let Some(batch) = form_batch(shared, cfg) {
-        execute(registry, cfg, &ws_pool, batch);
+        dispatch(shared, registry, cfg, ws_pool, batch);
+    }
+}
+
+/// The inner supervision ring: execute the batch under `catch_unwind`, so
+/// a panic answers every coalesced job with an explicit
+/// [`Response::Failed`] instead of killing the worker. Because response
+/// bytes are a pure function of the request, a client that retries a
+/// failed request gets the exact bytes the fault ate — recovery is
+/// bitwise-invisible (pinned by the chaos-smoke CI job).
+fn dispatch(
+    shared: &Shared,
+    registry: &Registry,
+    cfg: &ServeConfig,
+    ws_pool: &WorkspacePool,
+    batch: Vec<Job>,
+) {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        cfg.fault.delay_point("serve.dispatch");
+        cfg.fault.panic_point("serve.dispatch");
+        execute(registry, cfg, ws_pool, &batch)
+    }));
+    match result {
+        Ok(responses) => {
+            shared.served.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            for (job, resp) in batch.into_iter().zip(responses) {
+                let _ = job.tx.send(resp);
+            }
+        }
+        Err(payload) => {
+            shared.failed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            let reason = format!(
+                "worker panicked during dispatch: {}",
+                crate::fault::panic_reason(&*payload)
+            );
+            for job in batch {
+                let _ = job.tx.send(Response::Failed {
+                    id: job.req.id,
+                    reason: reason.clone(),
+                });
+            }
+        }
     }
 }
 
@@ -196,7 +312,12 @@ fn worker_loop(shared: &Shared, registry: &Registry, cfg: &ServeConfig) {
 ///
 /// Returns `None` when the queue is closed and fully drained.
 fn form_batch(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Job>> {
-    let mut q = shared.q.lock().unwrap();
+    let mut q = lock_queue(shared);
+    // The queue-site injection point fires while the lock is held but
+    // BEFORE any job is popped: the panic poisons the mutex (exercising
+    // `lock_queue`'s recovery) yet the queue state stays whole, so the
+    // respawned worker serves the very job that was waiting.
+    cfg.fault.panic_point("serve.queue");
     let first = loop {
         if let Some(job) = q.jobs.pop_front() {
             break job;
@@ -204,7 +325,7 @@ fn form_batch(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Job>> {
         if !q.open {
             return None;
         }
-        q = shared.cv.wait(q).unwrap();
+        q = shared.cv.wait(q).unwrap_or_else(|poisoned| poisoned.into_inner());
     };
     if !cfg.coalesce || first.req.workload == Workload::Gradient {
         return Some(vec![first]);
@@ -232,20 +353,32 @@ fn form_batch(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Job>> {
         if now >= deadline {
             break;
         }
-        let (guard, _) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+        let (guard, _) = shared
+            .cv
+            .wait_timeout(q, deadline - now)
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
         q = guard;
     }
     Some(batch)
 }
 
-fn execute(registry: &Registry, cfg: &ServeConfig, ws_pool: &WorkspacePool, batch: Vec<Job>) {
+/// Produce the response for every job in the batch, in batch order. Pure
+/// with respect to the queue: no locks held, no channels touched — the
+/// caller ([`dispatch`]) owns delivery, so a panic here can be folded
+/// into per-job `Failed` responses.
+fn execute(
+    registry: &Registry,
+    cfg: &ServeConfig,
+    ws_pool: &WorkspacePool,
+    batch: &[Job],
+) -> Vec<Response> {
     if batch[0].req.workload == Workload::Gradient {
-        for job in batch {
-            let resp = execute_gradient(registry, cfg, ws_pool, &job.req);
-            let _ = job.tx.send(resp);
-        }
+        batch
+            .iter()
+            .map(|job| execute_gradient(registry, cfg, ws_pool, &job.req))
+            .collect()
     } else {
-        execute_terminal(registry, cfg, ws_pool, batch);
+        execute_terminal(registry, cfg, ws_pool, batch)
     }
 }
 
@@ -268,8 +401,8 @@ fn execute_terminal(
     registry: &Registry,
     cfg: &ServeConfig,
     ws_pool: &WorkspacePool,
-    batch: Vec<Job>,
-) {
+    batch: &[Job],
+) -> Vec<Response> {
     let entry = registry
         .get(&batch[0].req.scenario)
         .expect("scenario validated at submit");
@@ -277,7 +410,7 @@ fn execute_terminal(
     let total: usize = batch.iter().map(|j| j.req.paths).sum();
     let mut y0s = Vec::with_capacity(total);
     let mut paths = Vec::with_capacity(total);
-    for job in &batch {
+    for job in batch {
         paths.append(&mut request_paths(sc, &job.req));
         for _ in 0..job.req.paths {
             y0s.push(sc.y0.clone());
@@ -293,6 +426,7 @@ fn execute_terminal(
         cfg.lanes,
         ws_pool,
     );
+    let mut responses = Vec::with_capacity(batch.len());
     let mut off = 0;
     for job in batch {
         let span = &terminals[off..off + job.req.paths];
@@ -332,8 +466,9 @@ fn execute_terminal(
             }
             Workload::Gradient => unreachable!("gradient jobs dispatch via execute_gradient"),
         };
-        let _ = job.tx.send(resp);
+        responses.push(resp);
     }
+    responses
 }
 
 /// Dispatch one gradient request as its own engine batch (the batch loss

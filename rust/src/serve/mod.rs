@@ -43,6 +43,25 @@
 //! growing memory without bound. Per-request size is bounded too
 //! (`serve.max_paths`). Clients see rejection as data, not as a hang.
 //!
+//! # Fault model
+//!
+//! The server survives panicking requests: dispatch runs under
+//! `catch_unwind`, a panic answers every job in the batch with an
+//! explicit [`Response::Failed`], and a worker that dies outside dispatch
+//! is respawned in place (see [`engine`] and
+//! docs/ARCHITECTURE.md §Fault model & supervised recovery). Lifetime
+//! counters — served, failed, sheds, worker restarts — plus the live
+//! queue depth are served by the `{"op":"health"}` request as a
+//! [`HealthReport`]; every field is deterministic under a deterministic
+//! load (no uptime, no timestamps), so tests assert exact values.
+//! Connections are bounded too: a per-connection read/write deadline
+//! (`serve.read_timeout_ms`) and a request-line byte cap
+//! (`serve.max_line_bytes`) keep a silent or unbounded client from
+//! pinning a connection thread. Deterministic fault *injection* for all
+//! of this lives in [`crate::fault`], wired through the `fault` field of
+//! [`ServeConfig`] (`[fault]` config / `EES_FAULT_*` env) — inert unless
+//! explicitly armed.
+//!
 //! # Knobs
 //!
 //! | key (`[serve]`)        | env                     | default | meaning |
@@ -55,6 +74,8 @@
 //! | `coalesce`             | `EES_SERVE_COALESCE`    | true    | pack compatible requests into lane groups |
 //! | `dispatch_parallelism` | —                       | 1       | engine workers *inside* one dispatch |
 //! | `seed`                 | —                       | 42      | registry build seed (data + model init) |
+//! | `read_timeout_ms`      | `EES_SERVE_READ_TIMEOUT_MS` | 10000 | per-connection read/write deadline (0 = none) |
+//! | `max_line_bytes`       | `EES_SERVE_MAX_LINE_BYTES`  | 65536 | request-line byte cap (oversized lines rejected) |
 //!
 //! Config keys beat env vars beat defaults. Scenario model knobs live
 //! under `[serve.ou]` / `[serve.gbm]` with the same names and defaults as
@@ -69,6 +90,7 @@
 use std::collections::BTreeMap;
 
 use crate::config::Config;
+use crate::fault::FaultPlan;
 use crate::rng::Pcg64;
 use crate::solvers::LowStorageStepper;
 use crate::train::scenarios::{apply_exec_knobs, build_gbm, build_ou, EuclideanScenario};
@@ -78,7 +100,7 @@ mod proto;
 mod tcp;
 
 pub use engine::Server;
-pub use proto::{parse_request, render_response};
+pub use proto::{parse_request, render_response, ParsedRequest};
 pub use tcp::{serve_listener, serve_tcp};
 
 /// Scenario names the serving registry builds (a subset of
@@ -172,6 +194,11 @@ pub enum Response {
     },
     /// Backpressure or validation refusal — explicit data, not a hang.
     Rejected { id: u64, reason: String },
+    /// The worker panicked while executing this request (supervised
+    /// recovery turned the panic into data). Because response bytes are a
+    /// pure function of the request, resubmitting reproduces the exact
+    /// bytes the fault ate.
+    Failed { id: u64, reason: String },
 }
 
 impl Response {
@@ -181,7 +208,8 @@ impl Response {
             Response::Simulate { id, .. }
             | Response::Price { id, .. }
             | Response::Gradient { id, .. }
-            | Response::Rejected { id, .. } => *id,
+            | Response::Rejected { id, .. }
+            | Response::Failed { id, .. } => *id,
         }
     }
 
@@ -189,11 +217,48 @@ impl Response {
         matches!(self, Response::Rejected { .. })
     }
 
+    pub fn is_failed(&self) -> bool {
+        matches!(self, Response::Failed { .. })
+    }
+
     /// The response as one newline-free JSON line (see [`proto`]): the
     /// byte string the determinism suite and the serve-smoke CI `diff`
     /// gate compare.
     pub fn to_json_line(&self) -> String {
         proto::render_response(self)
+    }
+}
+
+/// A point-in-time supervision snapshot, served by the `{"op":"health"}`
+/// request (see [`Server::health`]). Deliberately uptime-free: every
+/// field is deterministic under a deterministic load, so the regression
+/// suite asserts exact values instead of `> 0` hand-waving.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HealthReport {
+    /// Configured worker-thread count (not live threads: a respawn is
+    /// in-place, so the count never changes).
+    pub workers: usize,
+    /// Whether the queue still accepts submits (false once shutdown
+    /// begins).
+    pub open: bool,
+    /// Requests queued right now.
+    pub queue_depth: usize,
+    /// Requests answered with a success response, lifetime.
+    pub served: u64,
+    /// Requests answered with [`Response::Failed`] (worker panic folded
+    /// into data), lifetime.
+    pub failed: u64,
+    /// Requests shed by queue backpressure, lifetime.
+    pub sheds: u64,
+    /// Worker threads respawned after a panic escaped dispatch, lifetime.
+    pub restarts: u64,
+}
+
+impl HealthReport {
+    /// The report as one newline-free JSON line, echoing the health
+    /// request's id (fixed key order, same canon as responses).
+    pub fn to_json_line(&self, id: u64) -> String {
+        proto::render_health(id, self)
     }
 }
 
@@ -215,6 +280,18 @@ pub struct ServeConfig {
     pub max_batch: usize,
     pub max_paths: usize,
     pub coalesce: bool,
+    /// Per-connection read **and** write deadline in milliseconds; 0
+    /// disables the deadline. A client that goes silent mid-line is
+    /// disconnected instead of pinning a connection thread.
+    pub read_timeout_ms: u64,
+    /// Request-line byte cap: a line that exceeds it is rejected and the
+    /// connection closed, so an unbounded line cannot grow memory.
+    pub max_line_bytes: usize,
+    /// Deterministic fault-injection schedule (`[fault]` config /
+    /// `EES_FAULT_*` env). Inert by default; clones share invocation
+    /// counters, so per-worker config clones advance one plan-wide
+    /// schedule.
+    pub fault: FaultPlan,
 }
 
 fn env_usize(key: &str) -> Option<usize> {
@@ -230,8 +307,9 @@ fn env_bool(key: &str) -> Option<bool> {
 
 impl ServeConfig {
     /// Read `[serve]` knobs: config key beats `EES_SERVE_*` env beats
-    /// default.
-    pub fn from_config(cfg: &Config) -> Self {
+    /// default. Fails only on a malformed `[fault]` section — a typo'd
+    /// chaos knob must not silently serve without injection.
+    pub fn from_config(cfg: &Config) -> crate::Result<Self> {
         let workers = cfg
             .get("serve.workers")
             .and_then(|v| v.as_usize())
@@ -260,7 +338,18 @@ impl ServeConfig {
             .and_then(|v| v.as_bool())
             .or_else(|| env_bool("EES_SERVE_COALESCE"))
             .unwrap_or(true);
-        ServeConfig {
+        let read_timeout_ms = cfg
+            .get("serve.read_timeout_ms")
+            .and_then(|v| v.as_usize())
+            .or_else(|| env_usize("EES_SERVE_READ_TIMEOUT_MS"))
+            .unwrap_or(10_000) as u64;
+        let max_line_bytes = cfg
+            .get("serve.max_line_bytes")
+            .and_then(|v| v.as_usize())
+            .or_else(|| env_usize("EES_SERVE_MAX_LINE_BYTES"))
+            .unwrap_or(64 * 1024)
+            .max(64);
+        Ok(ServeConfig {
             workers,
             dispatch_parallelism: cfg.usize_or("serve.dispatch_parallelism", 1).max(1),
             lanes: cfg.lanes(),
@@ -269,7 +358,10 @@ impl ServeConfig {
             max_batch: cfg.usize_or("serve.max_batch", 32).max(1),
             max_paths,
             coalesce,
-        }
+            read_timeout_ms,
+            max_line_bytes,
+            fault: FaultPlan::from_config(cfg)?,
+        })
     }
 }
 
@@ -335,7 +427,7 @@ mod tests {
     #[test]
     fn serve_config_defaults_and_keys() {
         let cfg = Config::parse("").unwrap();
-        let sc = ServeConfig::from_config(&cfg);
+        let sc = ServeConfig::from_config(&cfg).unwrap();
         assert!(sc.workers >= 1);
         assert_eq!(sc.queue_depth, 256);
         assert_eq!(sc.window_us, 200);
@@ -343,12 +435,15 @@ mod tests {
         assert_eq!(sc.max_paths, 4096);
         assert!(sc.coalesce);
         assert_eq!(sc.dispatch_parallelism, 1);
+        assert_eq!(sc.read_timeout_ms, 10_000);
+        assert_eq!(sc.max_line_bytes, 64 * 1024);
+        assert!(!sc.fault.is_armed());
 
         let cfg = Config::parse(
-            "[serve]\nworkers = 3\nqueue_depth = 7\nwindow_us = 50\nmax_batch = 4\nmax_paths = 9\ncoalesce = false\ndispatch_parallelism = 2\n",
+            "[serve]\nworkers = 3\nqueue_depth = 7\nwindow_us = 50\nmax_batch = 4\nmax_paths = 9\ncoalesce = false\ndispatch_parallelism = 2\nread_timeout_ms = 500\nmax_line_bytes = 128\n[fault]\nserve.dispatch.panic = 0.0\n",
         )
         .unwrap();
-        let sc = ServeConfig::from_config(&cfg);
+        let sc = ServeConfig::from_config(&cfg).unwrap();
         assert_eq!(sc.workers, 3);
         assert_eq!(sc.queue_depth, 7);
         assert_eq!(sc.window_us, 50);
@@ -356,6 +451,13 @@ mod tests {
         assert_eq!(sc.max_paths, 9);
         assert!(!sc.coalesce);
         assert_eq!(sc.dispatch_parallelism, 2);
+        assert_eq!(sc.read_timeout_ms, 500);
+        assert_eq!(sc.max_line_bytes, 128);
+        assert!(sc.fault.is_armed());
+
+        // A typo'd fault site fails loudly instead of serving chaos-free.
+        let cfg = Config::parse("[fault]\nserve.dispatcher.panic = 0.5\n").unwrap();
+        assert!(ServeConfig::from_config(&cfg).is_err());
     }
 
     #[test]

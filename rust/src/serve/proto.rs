@@ -12,18 +12,32 @@
 //! Only `scenario` is required; `id`/`seed` default to 0, `paths` to 1,
 //! `workload` to `simulate`.
 //!
+//! One non-work request exists: `{"op": "health", "id": 9}` asks for the
+//! server's supervision counters ([`HealthReport`](super::HealthReport))
+//! instead of enqueuing work. It takes no work fields — mixing `op` with
+//! `scenario`/`paths`/… is an error, keeping the schema closed.
+//!
 //! Responses render with a **fixed key order** and the crate's canonical
 //! float text (`{:e}` — Rust's shortest round-trip-exact form; non-finite
 //! renders as `null`, the risk-ledger idiom), so equal response values
 //! produce equal bytes: the serve determinism suite and the serve-smoke
 //! CI gate compare these lines with plain string/`diff` equality.
 
-use super::{Request, Response, Workload};
+use super::{HealthReport, Request, Response, Workload};
+
+/// A successfully parsed request line: either a unit of work for the
+/// queue, or the `{"op":"health"}` introspection request the front-end
+/// answers directly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParsedRequest {
+    Work(Request),
+    Health { id: u64 },
+}
 
 /// Parse one request line. Returns a human-readable reason on any
 /// malformed input; the TCP front-end folds that into a
 /// [`Response::Rejected`].
-pub fn parse_request(line: &str) -> Result<Request, String> {
+pub fn parse_request(line: &str) -> Result<ParsedRequest, String> {
     let mut s = Scan {
         b: line.as_bytes(),
         i: 0,
@@ -36,6 +50,8 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         seed: 0,
     };
     let mut have_scenario = false;
+    let mut have_work_fields = false;
+    let mut op: Option<String> = None;
     s.ws();
     s.expect(b'{')?;
     s.ws();
@@ -48,8 +64,15 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             s.ws();
             match key.as_str() {
                 "id" => req.id = s.u64()?,
-                "seed" => req.seed = s.u64()?,
-                "paths" => req.paths = s.u64()? as usize,
+                "op" => op = Some(s.string()?),
+                "seed" => {
+                    req.seed = s.u64()?;
+                    have_work_fields = true;
+                }
+                "paths" => {
+                    req.paths = s.u64()? as usize;
+                    have_work_fields = true;
+                }
                 "scenario" => {
                     req.scenario = s.string()?;
                     have_scenario = true;
@@ -58,6 +81,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                     let w = s.string()?;
                     req.workload =
                         Workload::parse(&w).ok_or_else(|| format!("unknown workload '{w}'"))?;
+                    have_work_fields = true;
                 }
                 other => return Err(format!("unknown field '{other}'")),
             }
@@ -73,10 +97,21 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
     if s.i != s.b.len() {
         return Err(format!("trailing bytes after request object at byte {}", s.i));
     }
-    if !have_scenario {
-        return Err("missing required field 'scenario'".to_string());
+    match op.as_deref() {
+        Some("health") => {
+            if have_scenario || have_work_fields {
+                return Err("'op':'health' takes no work fields (only 'id')".to_string());
+            }
+            Ok(ParsedRequest::Health { id: req.id })
+        }
+        Some(other) => Err(format!("unknown op '{other}'")),
+        None => {
+            if !have_scenario {
+                return Err("missing required field 'scenario'".to_string());
+            }
+            Ok(ParsedRequest::Work(req))
+        }
     }
-    Ok(req)
 }
 
 /// Render one response line (no trailing newline). Key order is fixed per
@@ -128,7 +163,21 @@ pub fn render_response(r: &Response) -> String {
             "{{\"id\":{id},\"status\":\"rejected\",\"reason\":\"{}\"}}",
             escape(reason)
         ),
+        Response::Failed { id, reason } => format!(
+            "{{\"id\":{id},\"status\":\"failed\",\"reason\":\"{}\"}}",
+            escape(reason)
+        ),
     }
+}
+
+/// Render a health report line, echoing the request's id. Every field is
+/// deterministic under a deterministic load (no uptime, no timestamps) —
+/// the same canon as work responses.
+pub fn render_health(id: u64, h: &HealthReport) -> String {
+    format!(
+        "{{\"id\":{id},\"status\":\"ok\",\"op\":\"health\",\"workers\":{},\"open\":{},\"queue_depth\":{},\"served\":{},\"failed\":{},\"sheds\":{},\"restarts\":{}}}",
+        h.workers, h.open, h.queue_depth, h.served, h.failed, h.sheds, h.restarts
+    )
 }
 
 /// Canonical float text: `{:e}` (shortest round-trip-exact); non-finite
@@ -234,12 +283,16 @@ impl Scan<'_> {
 mod tests {
     use super::*;
 
+    fn work(line: &str) -> Request {
+        match parse_request(line).unwrap() {
+            ParsedRequest::Work(r) => r,
+            other => panic!("expected a work request, got {other:?}"),
+        }
+    }
+
     #[test]
     fn parses_full_request() {
-        let r = parse_request(
-            r#"{"id": 7, "scenario": "ou", "workload": "price", "paths": 32, "seed": 99}"#,
-        )
-        .unwrap();
+        let r = work(r#"{"id": 7, "scenario": "ou", "workload": "price", "paths": 32, "seed": 99}"#);
         assert_eq!(r.id, 7);
         assert_eq!(r.scenario, "ou");
         assert_eq!(r.workload, Workload::Price);
@@ -249,7 +302,7 @@ mod tests {
 
     #[test]
     fn defaults_apply() {
-        let r = parse_request(r#"{"scenario":"gbm"}"#).unwrap();
+        let r = work(r#"{"scenario":"gbm"}"#);
         assert_eq!(r.id, 0);
         assert_eq!(r.seed, 0);
         assert_eq!(r.paths, 1);
@@ -265,6 +318,46 @@ mod tests {
         assert!(parse_request(r#"{"scenario":"ou"} extra"#).is_err());
         assert!(parse_request(r#"{"scenario":"ou","paths":-3}"#).is_err());
         assert!(parse_request(r#"{"scenario":"ou""#).is_err());
+    }
+
+    #[test]
+    fn health_op_parses_and_stays_closed() {
+        assert_eq!(
+            parse_request(r#"{"op": "health", "id": 9}"#),
+            Ok(ParsedRequest::Health { id: 9 })
+        );
+        assert_eq!(
+            parse_request(r#"{"op":"health"}"#),
+            Ok(ParsedRequest::Health { id: 0 })
+        );
+        // op never mixes with work fields, and unknown ops fail loudly.
+        assert!(parse_request(r#"{"op":"health","scenario":"ou"}"#).is_err());
+        assert!(parse_request(r#"{"op":"health","paths":4}"#).is_err());
+        assert!(parse_request(r#"{"op":"metrics"}"#).is_err());
+    }
+
+    #[test]
+    fn health_and_failed_lines_are_canonical() {
+        let h = super::super::HealthReport {
+            workers: 2,
+            open: true,
+            queue_depth: 0,
+            served: 5,
+            failed: 1,
+            sheds: 0,
+            restarts: 3,
+        };
+        assert_eq!(
+            render_health(9, &h),
+            "{\"id\":9,\"status\":\"ok\",\"op\":\"health\",\"workers\":2,\"open\":true,\"queue_depth\":0,\"served\":5,\"failed\":1,\"sheds\":0,\"restarts\":3}"
+        );
+        assert_eq!(
+            render_response(&Response::Failed {
+                id: 4,
+                reason: "worker panicked".into()
+            }),
+            "{\"id\":4,\"status\":\"failed\",\"reason\":\"worker panicked\"}"
+        );
     }
 
     #[test]

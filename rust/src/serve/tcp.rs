@@ -6,12 +6,23 @@
 //! queue). A malformed line answers with a `status:"rejected"` response
 //! and the connection stays usable; EOF or an I/O error ends the
 //! connection thread.
+//!
+//! Connections are bounded in both time and space. `read_timeout_ms`
+//! sets a read **and** write deadline on the socket, so a client that
+//! goes silent mid-line (or stops draining responses) is disconnected
+//! instead of pinning this thread — crucially, timing out while *reading*
+//! consumes no worker: nothing is enqueued until a full line arrives.
+//! `max_line_bytes` caps the request line; an oversized line is answered
+//! with a reject naming the cap and the connection is closed. The
+//! `serve.tcp_read` fault site injects connection-level I/O errors and
+//! latency here (inert unless armed — see [`crate::fault`]).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
+use std::time::Duration;
 
-use super::{parse_request, Response, Server};
+use super::{parse_request, ParsedRequest, Response, Server};
 
 /// Bind `addr` and serve forever (the accept loop only returns on a
 /// listener error).
@@ -32,29 +43,138 @@ pub fn serve_listener(server: Arc<Server>, listener: TcpListener) -> crate::Resu
     Ok(())
 }
 
+/// One bounded line-read outcome.
+enum LineRead {
+    Line(String),
+    /// The line exceeded the byte cap (the remainder is still unread).
+    TooLong,
+    Eof,
+}
+
 fn handle_conn(server: &Server, stream: TcpStream) {
-    let reader = match stream.try_clone() {
+    let cfg = server.config();
+    if cfg.read_timeout_ms > 0 {
+        let deadline = Some(Duration::from_millis(cfg.read_timeout_ms));
+        if stream.set_read_timeout(deadline).is_err() || stream.set_write_timeout(deadline).is_err()
+        {
+            return;
+        }
+    }
+    let mut reader = match stream.try_clone() {
         Ok(s) => BufReader::new(s),
         Err(_) => return,
     };
     let mut writer = stream;
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    loop {
+        // Injected connection faults: an error here tears the connection
+        // down exactly like a real socket failure would.
+        if cfg.fault.io_point("serve.tcp_read").is_err() {
+            return;
+        }
+        cfg.fault.delay_point("serve.tcp_read");
+        let line = match read_line_bounded(&mut reader, cfg.max_line_bytes) {
+            Ok(LineRead::Line(l)) => l,
+            Ok(LineRead::Eof) => return,
+            Ok(LineRead::TooLong) => {
+                // Drain what's left of the line (bounded) so closing with
+                // unread receive data doesn't RST the reject away, answer,
+                // and close — an unbounded client gets no second line.
+                drain_line(&mut reader, cfg.max_line_bytes);
+                let resp = Response::Rejected {
+                    id: 0,
+                    reason: format!(
+                        "request line exceeds max_line_bytes {}",
+                        cfg.max_line_bytes
+                    ),
+                };
+                let _ = writeln!(writer, "{}", resp.to_json_line());
+                return;
+            }
+            // Deadline expiry or a socket error: drop the connection. No
+            // worker was consumed — nothing enqueues before a full line.
             Err(_) => return,
         };
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match parse_request(&line) {
-            Ok(req) => server.call(req),
+        let reply = match parse_request(&line) {
+            Ok(ParsedRequest::Work(req)) => server.call(req).to_json_line(),
+            // Health is answered by the front-end directly — it must
+            // work even when every worker is wedged in a long dispatch.
+            Ok(ParsedRequest::Health { id }) => server.health().to_json_line(id),
             Err(reason) => Response::Rejected {
                 id: 0,
                 reason: format!("bad request: {reason}"),
-            },
+            }
+            .to_json_line(),
         };
-        if writeln!(writer, "{}", resp.to_json_line()).is_err() {
+        if writeln!(writer, "{reply}").is_err() {
             return;
         }
+    }
+}
+
+/// Read one `\n`-terminated line, buffering at most `cap` bytes — the
+/// bounded replacement for `BufReader::lines`, which would grow its
+/// buffer with an unbounded line. EOF with a non-empty partial line
+/// yields the partial line (same tolerance as `lines()`).
+fn read_line_bounded(reader: &mut BufReader<TcpStream>, cap: usize) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (consumed, terminated) = {
+            let available = reader.fill_buf()?;
+            if available.is_empty() {
+                return Ok(if buf.is_empty() {
+                    LineRead::Eof
+                } else {
+                    LineRead::Line(String::from_utf8_lossy(&buf).into_owned())
+                });
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    buf.extend_from_slice(&available[..pos]);
+                    (pos + 1, true)
+                }
+                None => {
+                    buf.extend_from_slice(available);
+                    (available.len(), false)
+                }
+            }
+        };
+        reader.consume(consumed);
+        if buf.len() > cap {
+            return Ok(LineRead::TooLong);
+        }
+        if terminated {
+            return Ok(LineRead::Line(String::from_utf8_lossy(&buf).into_owned()));
+        }
+    }
+}
+
+/// Best-effort bounded discard of the rest of an oversized line: scan up
+/// to 64 caps' worth of further bytes for the newline, under the
+/// connection deadline, buffering nothing. Only serves deliverability of
+/// the oversize reject; giving up early just degrades to a plain close.
+fn drain_line(reader: &mut BufReader<TcpStream>, cap: usize) {
+    let mut budget = cap.saturating_mul(64);
+    while budget > 0 {
+        let (consumed, terminated) = {
+            let available = match reader.fill_buf() {
+                Ok(a) => a,
+                Err(_) => return,
+            };
+            if available.is_empty() {
+                return;
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => (pos + 1, true),
+                None => (available.len(), false),
+            }
+        };
+        reader.consume(consumed);
+        if terminated {
+            return;
+        }
+        budget = budget.saturating_sub(consumed);
     }
 }

@@ -547,7 +547,11 @@ impl Callback for Checkpoint {
             };
         if improved {
             if let Some(path) = &self.path {
-                if let Err(e) = std::fs::write(path, snap.to_text()) {
+                // Atomic temp+rename write: a crash mid-write leaves the
+                // previous best checkpoint intact, never a torn file. A
+                // persistent failure is reported but non-fatal —
+                // checkpointing must never kill a long run.
+                if let Err(e) = crate::fault::atomic_write(path, &snap.to_text()) {
                     eprintln!("checkpoint write to {path} failed: {e}");
                 }
             }

@@ -400,6 +400,9 @@ fn serve_steady_state_allocs_constant() {
             max_batch: 8,
             max_paths: 64,
             coalesce: false,
+            read_timeout_ms: 0,
+            max_line_bytes: 64 * 1024,
+            fault: ees::fault::FaultPlan::inert(),
         },
     );
     // One identical request window, replayed verbatim: same seeds → same

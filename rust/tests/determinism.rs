@@ -683,3 +683,95 @@ fn batch_terminal_matches_last_trajectory_row_bitwise() {
         );
     }
 }
+
+/// The fault layer's inertness pin: a fault plan that is *armed* but has
+/// every rate at 0.0 is bitwise-indistinguishable from the inert plan —
+/// in both the serving path and the risk estimator. This is what makes it
+/// safe to compile the injection points in unconditionally (see
+/// `ees::fault`): rate 0 means not one bit of output moves.
+#[test]
+fn rate_zero_fault_plan_is_bitwise_inert() {
+    use std::sync::Arc;
+
+    use ees::config::Config;
+    use ees::fault::FaultPlan;
+    use ees::risk::RiskSweep;
+    use ees::serve::{Registry, Request, ServeConfig, Server, Workload};
+
+    // An armed plan: every site named, every knob explicit, every rate 0.
+    let armed = {
+        let cfg = Config::parse(
+            "[fault]\n\
+             seed = 123\n\
+             serve.queue.panic = 0.0\n\
+             serve.dispatch.panic = 0.0\n\
+             serve.dispatch.io = 0.0\n\
+             serve.dispatch.delay = 0.0\n\
+             serve.tcp_read.io = 0.0\n\
+             risk.chunk.panic = 0.0\n\
+             checkpoint.write.io = 0.0\n",
+        )
+        .unwrap();
+        FaultPlan::from_config(&cfg).unwrap()
+    };
+    assert!(armed.is_armed());
+    assert!(!FaultPlan::inert().is_armed());
+
+    // Serve: identical request set, inert vs armed-at-zero server.
+    let serve_cfg_text = "\
+        [serve]\n\
+        seed = 9\n\
+        [serve.ou]\n\
+        steps = 8\n\
+        data_samples = 64\n";
+    let registry = Arc::new(Registry::from_config(&Config::parse(serve_cfg_text).unwrap()).unwrap());
+    let mk_sc = |fault: FaultPlan| ServeConfig {
+        workers: 2,
+        dispatch_parallelism: 1,
+        lanes: 4,
+        queue_depth: 1024,
+        window_us: 200,
+        max_batch: 32,
+        max_paths: 4096,
+        coalesce: true,
+        read_timeout_ms: 0,
+        max_line_bytes: 64 * 1024,
+        fault,
+    };
+    let reqs: Vec<Request> = (0..6)
+        .map(|k| Request {
+            id: k,
+            scenario: "ou".to_string(),
+            workload: if k % 2 == 0 { Workload::Simulate } else { Workload::Price },
+            paths: 1 + (k as usize % 3),
+            seed: 300 + k,
+        })
+        .collect();
+    let lines = |fault: FaultPlan| -> Vec<String> {
+        let server = Server::start_shared(Arc::clone(&registry), mk_sc(fault));
+        reqs.iter().map(|r| server.call(r.clone()).to_json_line()).collect()
+    };
+    let inert_lines = lines(FaultPlan::inert());
+    let armed_lines = lines(armed.clone());
+    assert_eq!(armed_lines, inert_lines, "rate-0 fault plan changed serve bytes");
+
+    // Risk: same sweep, inert vs armed-at-zero, snapshots byte-identical.
+    let risk_text = "\
+        [risk]\n\
+        paths = 96\n\
+        steps = 16\n\
+        seed = 77\n\
+        chunk = 32\n";
+    let snapshot = |fault_lines: &str| -> String {
+        let cfg = Config::parse(&format!("{risk_text}{fault_lines}")).unwrap();
+        let rc = ees::risk::RiskConfig::from_config(&cfg).unwrap();
+        let mut sweep = RiskSweep::new(rc);
+        sweep.run_to(96);
+        sweep.snapshot().to_text()
+    };
+    let clean = snapshot("");
+    let zeroed = snapshot(
+        "[fault]\nseed = 123\nrisk.chunk.panic = 0.0\nrisk.chunk.delay = 0.0\n",
+    );
+    assert_eq!(zeroed, clean, "rate-0 fault plan changed risk snapshot bytes");
+}

@@ -1,0 +1,161 @@
+//! Integration suite for the deterministic fault layer (`ees::fault`),
+//! exercised through the same public surface the serve/risk/train call
+//! sites use. The in-module unit tests pin the knob parser and the
+//! point-call mechanics; this file pins the *cross-component contracts*:
+//!
+//! - a plan's fault schedule is a pure function of `(seed, site, kind)` —
+//!   identical across separately built plans, processes, and runs;
+//! - distinct seeds move the schedule, distinct sites/kinds decorrelate;
+//! - `atomic_write` leaves either the old bytes or the new bytes, never a
+//!   torn file, under injected `checkpoint.write` failures;
+//! - an injected panic's payload round-trips through
+//!   [`ees::fault::panic_reason`] carrying the site and call index.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use ees::config::Config;
+use ees::fault::{
+    atomic_write_with, panic_reason, FaultKind, FaultPlan, PANIC_PREFIX, SITES, WRITE_ATTEMPTS,
+};
+
+fn plan(body: &str) -> FaultPlan {
+    FaultPlan::from_config(&Config::parse(&format!("[fault]\n{body}\n")).unwrap()).unwrap()
+}
+
+fn tmp_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("ees_fault_it_{tag}_{}.txt", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// Two plans built independently from the same knobs agree on every
+/// injection decision — the property that lets a CI job predict exactly
+/// which call of which site will fault before the process even starts.
+#[test]
+fn schedule_is_reproducible_across_independently_built_plans() {
+    let knobs = "seed = 1234\nserve.dispatch.panic = 0.05\nrisk.chunk.io = 0.05\n";
+    let a = plan(knobs);
+    let b = plan(knobs);
+    for site in ["serve.dispatch", "risk.chunk"] {
+        for kind in [FaultKind::Panic, FaultKind::Io, FaultKind::Delay] {
+            assert_eq!(
+                a.schedule(site, kind, 512),
+                b.schedule(site, kind, 512),
+                "{site}/{kind:?} schedules diverged between identical plans"
+            );
+        }
+    }
+    // The schedule is consulted, not recorded: reading it leaves the
+    // plan's live counters untouched, so a post-schedule point call still
+    // sees call index 0.
+    let sched = a.schedule("serve.dispatch", FaultKind::Panic, 512);
+    assert!(!sched.is_empty(), "a 5% rate over 512 calls should fire somewhere");
+    let hits: usize = (0..512)
+        .map(|_| catch_unwind(AssertUnwindSafe(|| a.panic_point("serve.dispatch"))).is_err() as usize)
+        .sum();
+    assert_eq!(hits, sched.len(), "live panics disagree with the published schedule");
+}
+
+/// Seeds move the schedule; sites and kinds are decorrelated under one
+/// seed. (Equality of two 512-draw schedules at 5% by chance is ~never;
+/// any overlap here means shared hash inputs, which is the bug.)
+#[test]
+fn seeds_sites_and_kinds_decorrelate() {
+    let every = "serve.queue.panic = 0.05\nserve.dispatch.panic = 0.05\n\
+                 serve.dispatch.io = 0.05\nserve.tcp_read.panic = 0.05\n\
+                 risk.chunk.panic = 0.05\ncheckpoint.write.panic = 0.05\n";
+    let s1 = plan(&format!("seed = 1\n{every}"));
+    let s2 = plan(&format!("seed = 2\n{every}"));
+    assert_ne!(
+        s1.schedule("serve.dispatch", FaultKind::Panic, 512),
+        s2.schedule("serve.dispatch", FaultKind::Panic, 512),
+        "changing the plan seed did not move the schedule"
+    );
+    let sites: Vec<Vec<u64>> = SITES
+        .iter()
+        .map(|s| s1.schedule(s, FaultKind::Panic, 512))
+        .collect();
+    for i in 0..sites.len() {
+        for j in (i + 1)..sites.len() {
+            assert_ne!(
+                sites[i], sites[j],
+                "sites {} and {} share a fault schedule",
+                SITES[i], SITES[j]
+            );
+        }
+    }
+    assert_ne!(
+        s1.schedule("serve.dispatch", FaultKind::Panic, 512),
+        s1.schedule("serve.dispatch", FaultKind::Io, 512),
+        "panic and io kinds share a schedule at the same site"
+    );
+}
+
+/// The atomicity contract under injected write failures: after any
+/// outcome — success, retried success, or exhausted retries — the target
+/// holds either the previous bytes or the new bytes, entire.
+#[test]
+fn atomic_write_is_all_or_nothing_under_injected_failures() {
+    let path = tmp_path("all_or_nothing");
+    let inert = FaultPlan::inert();
+    atomic_write_with(&inert, &path, "generation-0\n").unwrap();
+
+    // Transient: first attempt's write faults, the retry lands.
+    let transient = plan("checkpoint.write.io_at = 0");
+    atomic_write_with(&transient, &path, "generation-1\n").unwrap();
+    assert_eq!(std::fs::read_to_string(&path).unwrap(), "generation-1\n");
+
+    // Persistent: every attempt faults; the old generation survives whole.
+    let persistent = plan("checkpoint.write.io = 1.0");
+    let err = atomic_write_with(&persistent, &path, "generation-2\n");
+    assert!(err.is_err(), "a rate-1.0 write site cannot succeed");
+    assert_eq!(
+        std::fs::read_to_string(&path).unwrap(),
+        "generation-1\n",
+        "a failed atomic write disturbed the previous generation"
+    );
+    assert!(
+        !std::path::Path::new(&format!("{path}.tmp")).exists(),
+        "failed write left its temp sibling behind"
+    );
+    // Exactly WRITE_ATTEMPTS injection draws were consumed per call —
+    // the retry budget is fixed, not open-ended.
+    let draws = persistent.schedule("checkpoint.write", FaultKind::Io, WRITE_ATTEMPTS as u64);
+    assert_eq!(draws.len(), WRITE_ATTEMPTS as usize);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// An injected panic's payload names its site and call index, and
+/// `panic_reason` recovers it from the `catch_unwind` payload — this is
+/// the string supervised workers embed in `Response::Failed`.
+#[test]
+fn injected_panic_payload_round_trips_through_panic_reason() {
+    let p = plan("serve.dispatch.panic_at = 1");
+    // Call 0: clean. Call 1: fires.
+    p.panic_point("serve.dispatch");
+    let payload = catch_unwind(AssertUnwindSafe(|| p.panic_point("serve.dispatch")))
+        .expect_err("panic_at = 1 must fire on the second call");
+    let reason = panic_reason(&*payload);
+    assert_eq!(reason, format!("{PANIC_PREFIX}serve.dispatch#1"));
+    // And a plain panic still yields its message, not a placeholder.
+    let payload =
+        catch_unwind(|| panic!("ordinary failure")).expect_err("panic! must unwind");
+    assert_eq!(panic_reason(&*payload), "ordinary failure");
+}
+
+/// Unknown sites and malformed knobs fail loudly at plan build — never
+/// silently ignored (a chaos run that silently tests nothing is worse
+/// than no chaos run).
+#[test]
+fn bad_knobs_fail_at_build_time() {
+    let bad = |body: &str| {
+        FaultPlan::from_config(&Config::parse(&format!("[fault]\n{body}\n")).unwrap())
+    };
+    assert!(bad("serve.dispatcher.panic = 0.5").is_err(), "typo'd site accepted");
+    assert!(bad("serve.dispatch.explode = 0.5").is_err(), "unknown knob accepted");
+    assert!(bad("serve.dispatch.panic = 1.5").is_err(), "rate > 1 accepted");
+    assert!(bad("serve.dispatch.panic = -0.1").is_err(), "negative rate accepted");
+}

@@ -161,6 +161,55 @@ fn milstein_and_ees_agree_on_the_same_noise() {
     assert!((ees.mean - exact).abs() < 0.1, "mean {} vs {exact}", ees.mean);
 }
 
+/// The crash-recovery pin behind the chaos-smoke CI gate: a sweep killed
+/// mid-run by an injected chunk panic leaves a complete checkpoint (no
+/// torn file, no stray temp sibling); resuming it fault-free finishes to
+/// a report **byte-identical** to a run that never crashed.
+#[test]
+fn injected_crash_then_resume_reproduces_the_clean_report_bytes() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let body = "[risk]\npaths = 120\nsteps = 8\nchunk = 16\nseed = 3\n\
+                [exec]\nparallelism = 2\n";
+    let ck = std::env::temp_dir().join(format!("ees_risk_crash_ck_{}.txt", std::process::id()));
+    let ck_path = ck.to_str().unwrap().to_string();
+
+    // Reference: the uninterrupted, fault-free run.
+    let mut clean = RiskSweep::new(risk_cfg(body));
+    clean.run();
+    let want = clean.report().to_json();
+
+    // Faulty run: the 3rd chunk (panic_at = 2, one injection call per
+    // 16-path chunk) panics, after checkpoints landed at 16 and 32 paths.
+    let faulty_cfg = risk_cfg(&format!("{body}[fault]\nrisk.chunk.panic_at = 2\n"));
+    let mut sweep = RiskSweep::new(faulty_cfg);
+    let died = catch_unwind(AssertUnwindSafe(|| {
+        sweep.run_checkpointed(usize::MAX, 16, &ck_path)
+    }));
+    assert!(died.is_err(), "the injected chunk panic should have fired");
+
+    // The checkpoint is whole: written atomically at the last completed
+    // cadence (32 paths), with no temp sibling left behind.
+    let text = std::fs::read_to_string(&ck_path).unwrap();
+    let snap = Snapshot::from_text(&text).unwrap();
+    assert_eq!(snap.epoch, 32, "checkpoint should sit at the pre-crash cadence");
+    let tmp_sibling = format!("{ck_path}.tmp");
+    assert!(
+        !std::path::Path::new(&tmp_sibling).exists(),
+        "atomic_write left a temp file behind"
+    );
+
+    // Resume fault-free and finish: bitwise the clean report.
+    let mut resumed = RiskSweep::resume(risk_cfg(body), &snap).unwrap();
+    assert_eq!(resumed.done(), 32);
+    resumed.run();
+    assert_eq!(resumed.done(), 120);
+    assert_eq!(resumed.report().to_json(), want);
+    assert_eq!(state_bits(&clean), state_bits(&resumed));
+
+    let _ = std::fs::remove_file(&ck_path);
+}
+
 #[test]
 fn every_scenario_produces_finite_estimates() {
     for (scenario, extra) in [

@@ -9,6 +9,7 @@
 use std::sync::Arc;
 
 use ees::config::Config;
+use ees::fault::FaultPlan;
 use ees::serve::{Registry, Request, Response, ServeConfig, Server, Workload};
 
 /// Small scenario knobs so registry builds stay fast; seed is fixed so
@@ -42,7 +43,16 @@ fn sc(workers: usize, lanes: usize, window_us: u64, coalesce: bool) -> ServeConf
         max_batch: 32,
         max_paths: 4096,
         coalesce,
+        read_timeout_ms: 0,
+        max_line_bytes: 64 * 1024,
+        fault: FaultPlan::inert(),
     }
+}
+
+/// Build an armed fault plan from `[fault]` knob lines.
+fn fault_plan(body: &str) -> FaultPlan {
+    let cfg = Config::parse(&format!("[fault]\n{body}\n")).unwrap();
+    FaultPlan::from_config(&cfg).unwrap()
 }
 
 fn req(id: u64, scenario: &str, workload: Workload, paths: usize, seed: u64) -> Request {
@@ -351,4 +361,232 @@ fn concurrent_requests_cannot_flip_simd_knob() {
         }
     });
     assert_eq!(ees::linalg::simd_enabled(), before);
+}
+
+/// Supervision, inner ring: an injected panic mid-dispatch answers the
+/// job with an explicit `Failed` (id echoed, reason naming the panic) —
+/// never a hang, never a poisoned server — and because response bytes are
+/// a pure function of the request, a retry reproduces exactly the bytes
+/// the fault ate.
+#[test]
+fn worker_panic_mid_dispatch_fails_explicitly_and_retry_reproduces() {
+    let registry = registry();
+    let r = req(77, "ou", Workload::Price, 3, 4242);
+
+    // Fault-free reference bytes.
+    let want = {
+        let clean = Server::start_shared(Arc::clone(&registry), sc(2, 4, 500, true));
+        clean.call(r.clone()).to_json_line()
+    };
+
+    // panic_at = 0: exactly the first dispatch across the server panics.
+    let mut cfg = sc(2, 4, 500, true);
+    cfg.fault = fault_plan("serve.dispatch.panic_at = 0");
+    let server = Server::start_shared(Arc::clone(&registry), cfg);
+
+    let first = server.call(r.clone());
+    match &first {
+        Response::Failed { id, reason } => {
+            assert_eq!(*id, 77);
+            assert!(reason.contains("panic"), "{reason}");
+            assert!(reason.contains("serve.dispatch"), "{reason}");
+        }
+        other => panic!("expected failed response, got {other:?}"),
+    }
+    assert!(first.is_failed());
+
+    // The retry (fault counter has advanced past the one-shot) returns
+    // the reference bytes — recovery is bitwise-invisible.
+    let second = server.call(r.clone());
+    assert_eq!(second.to_json_line(), want);
+
+    let h = server.health();
+    assert_eq!(h.failed, 1, "{h:?}");
+    assert_eq!(h.restarts, 0, "dispatch panics are caught by the inner ring: {h:?}");
+    assert_eq!(h.served, 1, "{h:?}");
+}
+
+/// Supervision, outer ring: a panic taken while holding the queue lock
+/// (the `serve.queue` site) kills the worker body; the supervisor recovers
+/// the poisoned mutex, respawns the worker, and bumps the restart counter.
+/// The queue state survives intact, so queued work is still served.
+#[test]
+fn queue_site_panic_respawns_worker_and_recovers_poisoned_lock() {
+    let registry = registry();
+    // One worker so the restart accounting is exact. panic_at = 0 fires on
+    // the worker's very first queue visit (at startup, before any job).
+    let mut cfg = sc(1, 4, 100, true);
+    cfg.fault = fault_plan("serve.queue.panic_at = 0");
+    let server = Server::start_shared(Arc::clone(&registry), cfg);
+
+    let r = req(5, "ou", Workload::Simulate, 2, 808);
+    let want = {
+        let clean = Server::start_shared(Arc::clone(&registry), sc(1, 4, 100, true));
+        clean.call(r.clone()).to_json_line()
+    };
+    // Served by the respawned worker through the recovered (once-poisoned)
+    // queue mutex — and bitwise the clean server's bytes.
+    let got = server.call(r).to_json_line();
+    assert_eq!(got, want);
+
+    // The successful pop proves the panic already fired (site counters are
+    // global and the one-shot fires on call 0), so the count is settled.
+    let h = server.health();
+    assert_eq!(h.restarts, 1, "{h:?}");
+    assert_eq!(h.served, 1, "{h:?}");
+    assert_eq!(h.failed, 0, "{h:?}");
+}
+
+/// A client that goes silent mid-line is disconnected by the read
+/// deadline without consuming a worker, and the server keeps serving
+/// fresh connections.
+#[test]
+fn slow_client_is_disconnected_by_read_deadline() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::{Duration, Instant};
+
+    let registry = registry();
+    let mut cfg = sc(1, 4, 100, true);
+    cfg.read_timeout_ms = 80;
+    let server = Arc::new(Server::start_shared(Arc::clone(&registry), cfg));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            let _ = ees::serve::serve_listener(server, listener);
+        });
+    }
+
+    // Half a request line, then silence: the server's 80ms read deadline
+    // must close the connection well within the 5s budget.
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(200)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    write!(writer, "{{\"id\":7,\"scenario\":").unwrap();
+    writer.flush().unwrap();
+    let mut reader = stream;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut closed = false;
+    let mut byte = [0u8; 1];
+    while Instant::now() < deadline {
+        match reader.read(&mut byte) {
+            Ok(0) => {
+                closed = true; // clean EOF from the server's close
+                break;
+            }
+            Ok(_) => panic!("server answered a half-written request line"),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // our own poll timeout — server still deciding
+            }
+            Err(_) => {
+                closed = true; // RST from the server's close: also fine
+                break;
+            }
+        }
+    }
+    assert!(closed, "server kept a silent half-line connection open past 5s");
+
+    // No worker was consumed: a fresh connection serves immediately.
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut rd = BufReader::new(stream.try_clone().unwrap());
+    let mut wr = stream;
+    writeln!(
+        wr,
+        "{{\"id\":1,\"scenario\":\"ou\",\"workload\":\"price\",\"paths\":2,\"seed\":5}}"
+    )
+    .unwrap();
+    let mut line = String::new();
+    rd.read_line(&mut line).unwrap();
+    assert!(line.contains("\"status\":\"ok\""), "{line}");
+}
+
+/// A request line over `max_line_bytes` is answered with a reject naming
+/// the cap, then the connection closes — bounded memory per connection.
+#[test]
+fn oversized_request_line_is_rejected_and_connection_closed() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    let registry = registry();
+    let mut cfg = sc(1, 4, 100, true);
+    cfg.max_line_bytes = 128;
+    let server = Arc::new(Server::start_shared(Arc::clone(&registry), cfg));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            let _ = ees::serve::serve_listener(server, listener);
+        });
+    }
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let fat = format!("{{\"id\":1,\"scenario\":\"{}\"}}", "x".repeat(1024));
+    writeln!(writer, "{fat}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"status\":\"rejected\""), "{line}");
+    assert!(line.contains("max_line_bytes 128"), "{line}");
+    // The connection is closed after the reject.
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "expected EOF, got {line:?}");
+}
+
+/// The `{"op":"health"}` request: deterministic counters, answered by the
+/// TCP front-end itself, byte-identical to the in-process snapshot.
+#[test]
+fn health_op_reports_deterministic_counters() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    let registry = registry();
+    let server = Arc::new(Server::start_shared(Arc::clone(&registry), sc(2, 4, 500, true)));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || {
+            let _ = ees::serve::serve_listener(server, listener);
+        });
+    }
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    // One served request settles the counters at known values.
+    writeln!(
+        writer,
+        "{{\"id\":3,\"scenario\":\"ou\",\"workload\":\"simulate\",\"paths\":1,\"seed\":11}}"
+    )
+    .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"status\":\"ok\""), "{line}");
+
+    let h = server.health();
+    assert_eq!(h.workers, 2);
+    assert!(h.open);
+    assert_eq!(h.queue_depth, 0);
+    assert_eq!(h.served, 1);
+    assert_eq!(h.failed, 0);
+    assert_eq!(h.sheds, 0);
+    assert_eq!(h.restarts, 0);
+
+    // The wire answer is exactly the snapshot render — no timing fields.
+    line.clear();
+    writeln!(writer, "{{\"op\":\"health\",\"id\":9}}").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), server.health().to_json_line(9));
+    assert!(line.contains("\"op\":\"health\""), "{line}");
+    assert!(line.contains("\"restarts\":0"), "{line}");
 }
